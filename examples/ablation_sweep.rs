@@ -1,0 +1,25 @@
+//! Design-component ablations (paper Tables 3–5): disable each EcoLoRA
+//! component in turn and sweep compression levels.
+//!
+//!     cargo run --release --example ablation_sweep -- \
+//!         [--preset small] [--scaled] [--table 3|4|5]
+
+use ecolora::config::{experiments, profile::Profile};
+use ecolora::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let preset = args.get_or("preset", "small");
+    let profile = if args.has("scaled") {
+        Profile::scaled(preset)
+    } else {
+        Profile::full(preset)
+    };
+    match args.get_or("table", "3") {
+        "3" => experiments::table3(&profile, args.get_f64("target-frac", 0.9))?.print(),
+        "4" => experiments::table4(&profile, args.get_f64("target-frac", 0.9))?.print(),
+        "5" => experiments::table5(&profile)?.print(),
+        other => anyhow::bail!("unknown --table {other} (3, 4 or 5)"),
+    }
+    Ok(())
+}

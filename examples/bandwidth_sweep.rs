@@ -1,0 +1,20 @@
+//! Figure 3 scenario sweep: run FedIT ± EcoLoRA, then replay the measured
+//! communication through the discrete-event network simulator under the
+//! paper's four UL/DL settings (plus a custom one via flags).
+//!
+//!     cargo run --release --example bandwidth_sweep -- [--preset small] [--scaled]
+
+use ecolora::config::{experiments, profile::Profile};
+use ecolora::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let preset = args.get_or("preset", "small");
+    let profile = if args.has("scaled") {
+        Profile::scaled(preset)
+    } else {
+        Profile::full(preset)
+    };
+    experiments::fig3(&profile)?.print();
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Value-alignment example (paper Table 2): federated DPO over synthetic
+//! preference pairs on the `small_va` preset (r=8, α=16), with and without
+//! EcoLoRA, reporting reward margin, MC accuracy, and communication.
+//!
+//!     cargo run --release --example dpo_alignment -- [--scaled]
+
+use ecolora::config::{experiments, profile::Profile};
+use ecolora::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env().map_err(anyhow::Error::msg)?;
+    let profile = if args.has("scaled") {
+        Profile::scaled("small_va")
+    } else {
+        Profile::full("small_va")
+    };
+    experiments::table2(&profile)?.print();
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: the smallest end-to-end EcoLoRA run.
+//!
+//! Loads the `tiny` preset's AOT artifacts, runs a few federated rounds of
+//! FedIT with and without EcoLoRA, and prints the communication savings.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use ecolora::fed::{EcoConfig, FedConfig, FedRunner};
+
+fn main() -> anyhow::Result<()> {
+    let base = || {
+        let mut cfg = FedConfig::test_profile("tiny");
+        cfg.rounds = 6;
+        cfg.lr = 2.0;
+        cfg.verbose = true;
+        cfg
+    };
+
+    println!("== baseline: FedIT (dense) ==");
+    let dense = FedRunner::new(base())?.run()?;
+
+    println!("\n== FedIT w/ EcoLoRA (round-robin + adaptive top-k + Golomb) ==");
+    let mut cfg = base();
+    cfg.eco = Some(EcoConfig::default());
+    let eco = FedRunner::new(cfg)?.run()?;
+
+    println!("\n{:<28} {:>14} {:>14}", "", "FedIT", "w/ EcoLoRA");
+    println!(
+        "{:<28} {:>14.3} {:>14.3}",
+        "final MC accuracy", dense.final_acc, eco.final_acc
+    );
+    println!(
+        "{:<28} {:>14.3} {:>14.3}",
+        "upload params (M)",
+        dense.log.total_up().params_m(),
+        eco.log.total_up().params_m()
+    );
+    println!(
+        "{:<28} {:>14.1} {:>14.1}",
+        "upload wire (KB)",
+        dense.log.total_up().bytes as f64 / 1e3,
+        eco.log.total_up().bytes as f64 / 1e3
+    );
+    let saving = 100.0
+        * (1.0 - eco.log.total_up().params as f64 / dense.log.total_up().params as f64);
+    println!("\nEcoLoRA upload reduction: {saving:.1}%");
+    Ok(())
+}

@@ -1,0 +1,160 @@
+"""AOT pipeline: lower every step function to HLO *text* + JSON manifest.
+
+Run once by `make artifacts`; python never appears on the request path.
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Everything is lowered with return_tuple=True; the rust runtime unwraps.
+
+Per preset we emit:
+    <preset>_train.hlo.txt     (lora, base, tokens, lr, grad_mask) -> (lora', loss)
+    <preset>_eval.hlo.txt      (lora, base, tokens)                -> (row_losses,)
+    <preset>_pretrain.hlo.txt  (base, tokens, lr)                  -> (base', loss)
+    <preset>_merge.hlo.txt     (base, lora, scale)                 -> (base',)
+    <preset>_dpo.hlo.txt       (lora, base, chosen, rejected, lr, beta, mask)
+                               -> (lora', loss, margin)   [VA presets + tiny]
+    <preset>.manifest.json     layout + arg metadata for the rust runtime
+"""
+import argparse
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+try:
+    from . import model as M
+except ImportError:  # pragma: no cover
+    import model as M
+
+INIT_STD = 0.02  # init scale for "normal" tensors (recorded in manifest)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg(name, shape, dtype):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def lower_preset(cfg: M.ModelConfig, out_dir: str, with_dpo: bool) -> dict:
+    P = M.total_size(M.lora_param_specs(cfg))
+    N = M.total_size(M.base_param_specs(cfg))
+    B, S, Be = cfg.batch, cfg.seq_len, cfg.eval_batch
+    f32, i32 = "f32", "i32"
+
+    lora_s = _spec((P,))
+    base_s = _spec((N,))
+    tok_s = _spec((B, S + 1), jnp.int32)
+    etok_s = _spec((Be, S + 1), jnp.int32)
+    scal_s = _spec(())
+    mask_s = _spec((P,))
+
+    arts = {}
+
+    def emit(tag, fn, specs, args, outputs):
+        path = f"{cfg.name}_{tag}.hlo.txt"
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        arts[tag] = {"file": path, "args": args, "outputs": outputs}
+        print(f"  {path}: {len(text)} chars")
+
+    emit("train", partial(M.train_step, cfg=cfg),
+         (lora_s, base_s, tok_s, scal_s, mask_s),
+         [_arg("lora_flat", (P,), f32), _arg("base_flat", (N,), f32),
+          _arg("tokens", (B, S + 1), i32), _arg("lr", (), f32),
+          _arg("grad_mask", (P,), f32)],
+         [_arg("new_lora_flat", (P,), f32), _arg("loss", (), f32)])
+
+    emit("eval", partial(M.eval_step, cfg=cfg),
+         (lora_s, base_s, etok_s),
+         [_arg("lora_flat", (P,), f32), _arg("base_flat", (N,), f32),
+          _arg("tokens", (Be, S + 1), i32)],
+         [_arg("row_losses", (Be,), f32)])
+
+    emit("pretrain", partial(M.pretrain_step, cfg=cfg),
+         (base_s, tok_s, scal_s),
+         [_arg("base_flat", (N,), f32), _arg("tokens", (B, S + 1), i32),
+          _arg("lr", (), f32)],
+         [_arg("new_base_flat", (N,), f32), _arg("loss", (), f32)])
+
+    emit("merge", partial(M.merge_lora, cfg=cfg),
+         (base_s, lora_s, scal_s),
+         [_arg("base_flat", (N,), f32), _arg("lora_flat", (P,), f32),
+          _arg("scale", (), f32)],
+         [_arg("new_base_flat", (N,), f32)])
+
+    if with_dpo:
+        emit("dpo", partial(M.dpo_step, cfg=cfg),
+             (lora_s, base_s, tok_s, tok_s, scal_s, scal_s, mask_s),
+             [_arg("lora_flat", (P,), f32), _arg("base_flat", (N,), f32),
+              _arg("chosen", (B, S + 1), i32), _arg("rejected", (B, S + 1), i32),
+              _arg("lr", (), f32), _arg("beta", (), f32),
+              _arg("grad_mask", (P,), f32)],
+             [_arg("new_lora_flat", (P,), f32), _arg("loss", (), f32),
+              _arg("margin", (), f32)])
+
+    def tensors(specs, lora=False):
+        out = []
+        for s in specs:
+            t = {"name": s.name, "shape": list(s.shape), "offset": s.offset,
+                 "size": s.size, "init": s.init}
+            if lora:
+                t["kind"] = s.kind
+                t["layer"] = s.layer
+            out.append(t)
+        return out
+
+    return {
+        "preset": cfg.name,
+        "init_std": INIT_STD,
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq_len": cfg.seq_len, "rank": cfg.rank,
+            "lora_alpha": cfg.lora_alpha, "lora_scale": cfg.lora_scale,
+            "batch": cfg.batch, "eval_batch": cfg.eval_batch,
+            "lora_targets": list(cfg.lora_targets),
+        },
+        "base": {"total": N, "tensors": tensors(M.base_param_specs(cfg))},
+        "lora": {"total": P, "tensors": tensors(M.lora_param_specs(cfg), lora=True)},
+        "artifacts": arts,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small,small_va,medium")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in args.presets.split(","):
+        name = name.strip()
+        cfg = M.PRESETS[name]
+        with_dpo = name.endswith("_va") or name == "tiny"
+        print(f"lowering preset {name} "
+              f"(|lora|={M.total_size(M.lora_param_specs(cfg))}, "
+              f"|base|={M.total_size(M.base_param_specs(cfg))})")
+        manifest = lower_preset(cfg, args.out_dir, with_dpo)
+        mpath = os.path.join(args.out_dir, f"{name}.manifest.json")
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+        print(f"  {name}.manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,147 @@
+"""Layer-1 Pallas kernel: fused LoRA linear projection.
+
+This is the compute hot-spot of federated LoRA fine-tuning: every attention
+q/v projection evaluates
+
+    y = x @ Wt + ((x @ At) @ Bt) * scale            (Wt = W^T etc.)
+
+The paper runs this as two separate GEMMs on CUDA tensor-cores. On TPU we
+re-express it for the MXU + VMEM hierarchy instead of porting the CUDA
+shape (see DESIGN.md §Hardware-Adaptation):
+
+  * The grid tiles M (rows / tokens) and N (output features). Each grid
+    step keeps one (bm, K) activation tile, one (K, bn) base-weight tile,
+    the whole (K, r) LoRA-A panel and one (r, bn) LoRA-B tile resident in
+    VMEM — for the preset shapes this working set is well under the ~16 MB
+    VMEM budget (reported analytically in EXPERIMENTS.md §Perf).
+  * The low-rank bypass is FUSED into the same tile program, so the
+    intermediate u = x @ At ([bm, r], tiny) never round-trips through HBM —
+    this is the TPU analogue of the paper's motivation for keeping LoRA
+    cheap: the bypass adds 2·r·(K+N)/(K·N) ≪ 1 relative FLOPs and zero
+    extra HBM traffic beyond the A/B panels.
+  * Accumulation is f32 (MXU-native) independent of the input dtype.
+
+interpret=True ALWAYS: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+on the rust CPU client. Structure (BlockSpec schedule) is what we optimize,
+not interpreter wallclock.
+
+Backward: the base weight is frozen in federated LoRA fine-tuning, so the
+custom VJP returns a zero cotangent for Wt (DCE'd by XLA) and exact
+cotangents for x / At / Bt computed as plain XLA GEMMs (MXU-mapped on TPU).
+"""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(dim, target):
+    """Largest divisor of `dim` that is <= target (prefer MXU-friendly 128)."""
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _lora_linear_kernel(x_ref, wt_ref, at_ref, bt_ref, o_ref, *, scale):
+    # One (bm, bn) output tile: full-K base GEMM plus fused low-rank bypass.
+    x = x_ref[...].astype(jnp.float32)
+    acc = x @ wt_ref[...].astype(jnp.float32)
+    u = x @ at_ref[...].astype(jnp.float32)          # [bm, r] stays in VMEM
+    acc += (u @ bt_ref[...].astype(jnp.float32)) * scale
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def lora_linear(x, wt, at, bt, scale):
+    """Fused y = x @ wt + ((x @ at) @ bt) * scale via a Pallas kernel.
+
+    x: [M, K], wt: [K, N], at: [K, r], bt: [r, N]; returns [M, N].
+    """
+    return _lora_linear_fwd_impl(x, wt, at, bt, scale)
+
+
+def _lora_linear_fwd_impl(x, wt, at, bt, scale):
+    m, k = x.shape
+    k2, n = wt.shape
+    assert k == k2, (x.shape, wt.shape)
+    r = at.shape[1]
+    assert at.shape == (k, r) and bt.shape == (r, n), (at.shape, bt.shape)
+
+    bm = _pick_block(m, 128)
+    bn = _pick_block(n, 128)
+    grid = (m // bm, n // bn)
+
+    return pl.pallas_call(
+        partial(_lora_linear_kernel, scale=float(scale)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),   # activations
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),   # base weight tile
+            pl.BlockSpec((k, r), lambda i, j: (0, 0)),    # LoRA A panel
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),   # LoRA B tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, wt, at, bt)
+
+
+def _lora_linear_vjp_fwd(x, wt, at, bt, scale):
+    y = _lora_linear_fwd_impl(x, wt, at, bt, scale)
+    return y, (x, wt, at, bt)
+
+
+def _lora_linear_vjp_bwd(scale, res, dy):
+    x, wt, at, bt = res
+    f32 = jnp.float32
+    dyf = dy.astype(f32)
+    xf = x.astype(f32)
+    # dx = dy @ wt^T + ((dy @ bt^T) @ at^T) * scale
+    v = dyf @ bt.astype(f32).T                      # [M, r]
+    dx = dyf @ wt.astype(f32).T + (v @ at.astype(f32).T) * scale
+    # dat = x^T @ (dy @ bt^T) * scale ; dbt = (x @ at)^T @ dy * scale
+    dat = (xf.T @ v) * scale
+    u = xf @ at.astype(f32)                         # [M, r]
+    dbt = (u.T @ dyf) * scale
+    # Base weight frozen in federated LoRA fine-tuning: zero cotangent
+    # (constant, DCE'd by XLA since the base is never differentiated).
+    dwt = jnp.zeros_like(wt)
+    return (dx.astype(x.dtype), dwt, dat.astype(at.dtype), dbt.astype(bt.dtype))
+
+
+lora_linear.defvjp(_lora_linear_vjp_fwd, _lora_linear_vjp_bwd)
+
+
+def vmem_footprint_bytes(m, k, n, r, bm=None, bn=None, dtype_bytes=4):
+    """Analytic VMEM working-set estimate for one grid step (§Perf)."""
+    bm = bm or _pick_block(m, 128)
+    bn = bn or _pick_block(n, 128)
+    tiles = bm * k + k * bn + k * r + r * bn + bm * bn  # x, wt, at, bt, out
+    scratch = bm * r                                     # u accumulator
+    return (tiles + scratch) * dtype_bytes
+
+
+def mxu_utilization_estimate(m, k, n, r, bm=None, bn=None):
+    """Analytic MXU-utilization estimate: useful MACs / systolic-array slots.
+
+    The 128x128 MXU processes pad-to-128 tiles; utilization is the product
+    of fill ratios in each GEMM dimension, FLOP-weighted over the base GEMM
+    and the two low-rank GEMMs.
+    """
+    bm = bm or _pick_block(m, 128)
+    bn = bn or _pick_block(n, 128)
+
+    def fill(d):
+        pad = ((d + 127) // 128) * 128
+        return d / pad
+
+    base_flops = 2 * m * k * n
+    lora_flops = 2 * m * k * r + 2 * m * r * n
+    base_util = fill(bm) * fill(k) * fill(bn)
+    # r << 128: the low-rank GEMMs under-fill the lane dim by construction.
+    lora_util = fill(bm) * min(fill(k), fill(r)) * min(fill(r), fill(bn))
+    total = base_flops + lora_flops
+    return (base_flops * base_util + lora_flops * lora_util) / total

@@ -1,0 +1,26 @@
+# Pure-jnp correctness oracles for the Pallas kernels (the CORE correctness
+# signal: python/tests/test_kernels.py asserts kernel == ref under hypothesis
+# sweeps of shapes/dtypes).
+import jax.numpy as jnp
+
+
+def lora_linear_ref(x, wt, at, bt, scale):
+    """Reference fused LoRA linear.
+
+    y = x @ wt + ((x @ at) @ bt) * scale
+
+    Shapes: x [M, K], wt [K, N] (transposed base weight), at [K, r]
+    (transposed LoRA A), bt [r, N] (transposed LoRA B). Accumulation in f32
+    regardless of input dtype, matching the kernel.
+    """
+    acc_t = jnp.float32
+    base = jnp.matmul(x.astype(acc_t), wt.astype(acc_t))
+    u = jnp.matmul(x.astype(acc_t), at.astype(acc_t))
+    delta = jnp.matmul(u, bt.astype(acc_t))
+    return (base + delta * jnp.float32(scale)).astype(x.dtype)
+
+
+def matmul_ref(x, y):
+    """Reference plain matmul with f32 accumulation."""
+    out = jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+    return out.astype(x.dtype)

@@ -1,0 +1,345 @@
+"""Layer-2 JAX model: decoder-only transformer with LoRA adapters.
+
+This file is the *compile-time* definition of every computation the rust
+coordinator executes through PJRT. It is never imported at runtime; aot.py
+lowers the jitted step functions to HLO text once (`make artifacts`).
+
+Design points (see DESIGN.md):
+
+  * All parameters travel as TWO flat f32 vectors — `base_flat` (frozen
+    pre-trained weights) and `lora_flat` (the federated payload). The flat
+    layout mirrors the paper's view of the LoRA parameter set P as a flat
+    list partitioned into round-robin segments, and gives the rust side a
+    single device buffer per parameter family.
+  * LoRA (r, alpha) is applied to the attention q and v projections
+    (Hu et al. 2022 / the paper's Appendix A), computed by the fused
+    Pallas kernel `kernels.lora_linear` (Layer 1).
+  * Local client optimization is plain SGD (stateless across rounds, as in
+    FedAvg-style local training); the learning rate and a per-parameter
+    gradient mask (1.0 = trainable) are runtime arguments so a single
+    artifact serves FedIT (mask = ones), FFA-LoRA (mask = B-only) and lr
+    sweeps without recompilation.
+  * Token id 0 is PAD and masked out of every loss.
+"""
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+try:  # package-relative when imported as compile.model, flat when vendored
+    from .kernels.lora_linear import lora_linear
+except ImportError:  # pragma: no cover
+    from kernels.lora_linear import lora_linear
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int          # context length S; token batches are [B, S+1]
+    rank: int
+    lora_alpha: float
+    batch: int            # training batch size (rows of tokens)
+    eval_batch: int       # rows per eval_step call (candidates)
+    lora_targets: Tuple[str, ...] = ("q", "v")
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def lora_scale(self) -> float:
+        return self.lora_alpha / self.rank
+
+
+# Presets: stand-ins for the paper's Llama2-7B / 13B / Vicuna-7B sized for a
+# 2-core CPU PJRT testbed. QA presets use r=16, alpha=32; the VA preset uses
+# r=8, alpha=16 (paper Appendix A). Communication metrics are exact
+# functions of this LoRA layout, so compression ratios are scale-faithful.
+PRESETS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=128, d_model=32, n_layers=1, n_heads=2,
+                        d_ff=64, seq_len=24, rank=4, lora_alpha=8.0,
+                        batch=4, eval_batch=8),
+    "small": ModelConfig("small", vocab=256, d_model=96, n_layers=3,
+                         n_heads=6, d_ff=256, seq_len=48, rank=16,
+                         lora_alpha=32.0, batch=8, eval_batch=16),
+    "small_va": ModelConfig("small_va", vocab=256, d_model=96, n_layers=3,
+                            n_heads=6, d_ff=256, seq_len=48, rank=8,
+                            lora_alpha=16.0, batch=8, eval_batch=16),
+    "medium": ModelConfig("medium", vocab=512, d_model=192, n_layers=6,
+                          n_heads=6, d_ff=512, seq_len=48, rank=16,
+                          lora_alpha=32.0, batch=8, eval_batch=16),
+    "large": ModelConfig("large", vocab=2048, d_model=512, n_layers=8,
+                         n_heads=8, d_ff=1536, seq_len=96, rank=16,
+                         lora_alpha=32.0, batch=4, eval_batch=8),
+    "xl": ModelConfig("xl", vocab=4096, d_model=768, n_layers=12,
+                      n_heads=12, d_ff=2048, seq_len=128, rank=16,
+                      lora_alpha=32.0, batch=2, eval_batch=4),
+}
+
+
+# --------------------------------------------------------------------------
+# Parameter layout: ordered tensor specs + flat-vector (un)flattening
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+    init: str       # "normal" | "ones" | "zeros"
+    kind: str = ""  # LoRA only: "A" | "B"
+    layer: int = -1
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+def base_param_specs(cfg: ModelConfig) -> List[TensorSpec]:
+    specs: List[TensorSpec] = []
+    off = 0
+
+    def add(name, shape, init):
+        nonlocal off
+        specs.append(TensorSpec(name, tuple(shape), off, init))
+        off += specs[-1].size
+
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    add("tok_emb", (v, d), "normal")
+    for l in range(cfg.n_layers):
+        add(f"l{l}.attn_norm", (d,), "ones")
+        add(f"l{l}.wq_t", (d, d), "normal")
+        add(f"l{l}.wk_t", (d, d), "normal")
+        add(f"l{l}.wv_t", (d, d), "normal")
+        add(f"l{l}.wo_t", (d, d), "normal")
+        add(f"l{l}.mlp_norm", (d,), "ones")
+        add(f"l{l}.w_gate_t", (d, ff), "normal")
+        add(f"l{l}.w_up_t", (d, ff), "normal")
+        add(f"l{l}.w_down_t", (ff, d), "normal")
+    add("final_norm", (d,), "ones")
+    add("lm_head_t", (d, v), "normal")
+    return specs
+
+
+def lora_param_specs(cfg: ModelConfig) -> List[TensorSpec]:
+    """LoRA tensors in flat order. A stored transposed [d, r], B as [r, d].
+
+    The order (layer-major, target-minor, A before B) defines the flat
+    vector the paper's round-robin segments partition.
+    """
+    specs: List[TensorSpec] = []
+    off = 0
+    d, r = cfg.d_model, cfg.rank
+    for l in range(cfg.n_layers):
+        for tgt in cfg.lora_targets:
+            specs.append(TensorSpec(f"l{l}.{tgt}.at", (d, r), off, "normal",
+                                    kind="A", layer=l))
+            off += d * r
+            specs.append(TensorSpec(f"l{l}.{tgt}.bt", (r, d), off, "zeros",
+                                    kind="B", layer=l))
+            off += r * d
+    return specs
+
+
+def total_size(specs: List[TensorSpec]) -> int:
+    return specs[-1].offset + specs[-1].size if specs else 0
+
+
+def unflatten(flat, specs: List[TensorSpec]) -> Dict[str, jnp.ndarray]:
+    out = {}
+    for s in specs:
+        out[s.name] = jax.lax.dynamic_slice(flat, (s.offset,), (s.size,)).reshape(s.shape)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Forward model
+# --------------------------------------------------------------------------
+
+
+def _rms_norm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _rope(x, head_dim):
+    """Rotary position embedding over [B, S, H, hd]."""
+    seq = x.shape[1]
+    half = head_dim // 2
+    freqs = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    t = jnp.arange(seq, dtype=jnp.float32)
+    ang = jnp.outer(t, freqs)                       # [S, half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[None, :, None, :]
+    cos = cos[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _lora_proj(x2d, wt, p, l, tgt, cfg, use_kernel):
+    """Projection with optional LoRA bypass; x2d is [B*S, d]."""
+    if p is None:
+        return x2d @ wt
+    at = p[f"l{l}.{tgt}.at"]
+    bt = p[f"l{l}.{tgt}.bt"]
+    if use_kernel:
+        return lora_linear(x2d, wt, at, bt, cfg.lora_scale)
+    return x2d @ wt + ((x2d @ at) @ bt) * cfg.lora_scale
+
+
+def forward(base_flat, lora_flat, tokens_in, cfg: ModelConfig,
+            use_kernel: bool = True):
+    """Logits [B, S, vocab] for input tokens [B, S].
+
+    lora_flat may be None (plain base model: pretraining / DPO reference).
+    """
+    b = unflatten(base_flat, base_param_specs(cfg))
+    p = unflatten(lora_flat, lora_param_specs(cfg)) if lora_flat is not None else None
+
+    B, S = tokens_in.shape
+    d, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = b["tok_emb"][tokens_in]                     # [B, S, d]
+
+    causal = jnp.tril(jnp.ones((S, S), dtype=bool))
+    for l in range(cfg.n_layers):
+        h = _rms_norm(x, b[f"l{l}.attn_norm"])
+        h2 = h.reshape(B * S, d)
+        q = _lora_proj(h2, b[f"l{l}.wq_t"], p, l, "q", cfg, use_kernel)
+        k = h2 @ b[f"l{l}.wk_t"]
+        v = _lora_proj(h2, b[f"l{l}.wv_t"], p, l, "v", cfg, use_kernel)
+        q = _rope(q.reshape(B, S, H, hd), hd)
+        k = _rope(k.reshape(B, S, H, hd), hd)
+        v = v.reshape(B, S, H, hd)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(causal[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B * S, d)
+        x = x + (o @ b[f"l{l}.wo_t"]).reshape(B, S, d)
+
+        h = _rms_norm(x, b[f"l{l}.mlp_norm"]).reshape(B * S, d)
+        gate = jax.nn.silu(h @ b[f"l{l}.w_gate_t"])
+        up = h @ b[f"l{l}.w_up_t"]
+        x = x + ((gate * up) @ b[f"l{l}.w_down_t"]).reshape(B, S, d)
+
+    x = _rms_norm(x, b["final_norm"])
+    return x @ b["lm_head_t"]                       # [B, S, vocab]
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def _token_losses(logits, targets):
+    """Per-position CE loss and PAD mask. targets: [B, S] (0 = PAD)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = (targets != 0).astype(jnp.float32)
+    return nll, mask
+
+
+def lm_loss(base_flat, lora_flat, tokens, cfg, use_kernel=True):
+    """Mean next-token CE over non-PAD targets. tokens: [B, S+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(base_flat, lora_flat, inp, cfg, use_kernel)
+    nll, mask = _token_losses(logits, tgt)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _seq_logprob(base_flat, lora_flat, tokens, cfg, use_kernel=True):
+    """Per-row summed target log-prob [B] (PAD-masked). tokens: [B, S+1]."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(base_flat, lora_flat, inp, cfg, use_kernel)
+    nll, mask = _token_losses(logits, tgt)
+    return -jnp.sum(nll * mask, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Step functions (the AOT entry points)
+# --------------------------------------------------------------------------
+
+
+def train_step(lora_flat, base_flat, tokens, lr, grad_mask, cfg):
+    """One local SGD step on the LoRA vector.
+
+    grad_mask: [|P|] f32; FedIT passes ones, FFA-LoRA passes 1.0 on B
+    entries only (freezing A). Returns (new_lora_flat, loss).
+    """
+    loss, g = jax.value_and_grad(
+        lambda p: lm_loss(base_flat, p, tokens, cfg))(lora_flat)
+    return lora_flat - lr * g * grad_mask, loss
+
+
+def eval_step(lora_flat, base_flat, tokens, cfg):
+    """Per-row (mean-per-token) loss [B] — MC candidates are scored by the
+    rust eval harness as argmin over candidate rows."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(base_flat, lora_flat, inp, cfg)
+    nll, mask = _token_losses(logits, tgt)
+    return jnp.sum(nll * mask, axis=-1) / jnp.maximum(jnp.sum(mask, axis=-1), 1.0)
+
+
+def pretrain_step(base_flat, tokens, lr, cfg):
+    """Full-parameter SGD step on the PLAIN base model (no LoRA, pure-jnp
+    path so base gradients flow). Used once to create the 'pre-trained'
+    checkpoint the federated experiments start from."""
+    loss, g = jax.value_and_grad(
+        lambda b: lm_loss(b, None, tokens, cfg, use_kernel=False))(base_flat)
+    return base_flat - lr * g, loss
+
+
+def dpo_step(lora_flat, base_flat, chosen, rejected, lr, beta, grad_mask, cfg):
+    """One federated-DPO step (Rafailov et al.; paper §4.2 VA task).
+
+    Reference policy = frozen base model (LoRA detached), computed in-graph.
+    Returns (new_lora_flat, loss, mean reward margin).
+    """
+    ref_c = _seq_logprob(base_flat, None, chosen, cfg, use_kernel=False)
+    ref_r = _seq_logprob(base_flat, None, rejected, cfg, use_kernel=False)
+
+    def loss_fn(p):
+        pol_c = _seq_logprob(base_flat, p, chosen, cfg)
+        pol_r = _seq_logprob(base_flat, p, rejected, cfg)
+        margin = (pol_c - ref_c) - (pol_r - ref_r)
+        loss = -jnp.mean(jax.nn.log_sigmoid(beta * margin))
+        return loss, jnp.mean(margin)
+
+    (loss, margin), g = jax.value_and_grad(loss_fn, has_aux=True)(lora_flat)
+    return lora_flat - lr * g * grad_mask, loss, margin
+
+
+def merge_lora(base_flat, lora_flat, scale, cfg):
+    """base' = base + scale * (alpha/r) * (At @ Bt) for every LoRA target.
+
+    Used by the FLoRA baseline: the server merges each client's stacked
+    module into the base with weight `scale`, then clients re-init LoRA.
+    """
+    lp = unflatten(lora_flat, lora_param_specs(cfg))
+    new_base = base_flat
+    for s in base_param_specs(cfg):
+        for tgt in cfg.lora_targets:
+            want = {"q": "wq_t", "v": "wv_t", "k": "wk_t", "o": "wo_t"}[tgt]
+            if not s.name.endswith(want) or "." not in s.name:
+                continue
+            l = int(s.name.split(".")[0][1:])
+            delta = (lp[f"l{l}.{tgt}.at"] @ lp[f"l{l}.{tgt}.bt"]) * (cfg.lora_scale * scale)
+            cur = jax.lax.dynamic_slice(new_base, (s.offset,), (s.size,))
+            new_base = jax.lax.dynamic_update_slice(
+                new_base, cur + delta.reshape(-1), (s.offset,))
+    return new_base

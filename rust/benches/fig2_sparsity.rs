@@ -1,0 +1,14 @@
+//! Regenerates paper Figure 2 (scaled): Gini coefficients of LoRA matrices
+//! A and B over training (B grows sparser than A).
+//! `cargo bench --bench fig2_sparsity`. Full: `ecolora repro --fig 2`.
+use ecolora::config::{experiments, profile::Profile};
+
+fn main() {
+    if !std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let profile = Profile::scaled("tiny");
+    let (table, _log) = experiments::fig2(&profile).expect("fig2");
+    table.print();
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Figure 3 (scaled): compute vs communication time under
+//! the four UL/DL bandwidth scenarios via the discrete-event netsim.
+//! `cargo bench --bench fig3_network`. Full: `ecolora repro --fig 3`.
+use ecolora::config::{experiments, profile::Profile};
+
+fn main() {
+    if !std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let profile = Profile::scaled("tiny");
+    experiments::fig3(&profile).expect("fig3").print();
+}

@@ -1,0 +1,111 @@
+//! Hot-path micro-benchmarks (the §Perf L3 targets): top-k selection,
+//! Golomb encode/decode, wire format, aggregation, residual update, and
+//! one compiled train-step execution. `cargo bench --bench hotpath`.
+
+use std::sync::Arc;
+
+use ecolora::bench::Bencher;
+use ecolora::compress::{golomb, topk, wire, AdaptiveSparsifier, Compressor, Encoding, KindIndex, SparsMode};
+use ecolora::fed::server::SegmentAggregator;
+use ecolora::model::LoraKind;
+use ecolora::util::linalg;
+use ecolora::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let n = 262_144; // `large` preset LoRA size
+    let mut rng = Rng::new(0);
+    let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+
+    // ---- top-k selection (quickselect) ------------------------------------
+    for keep_frac in [0.05, 0.5] {
+        let keep = (n as f64 * keep_frac) as usize;
+        b.bench_throughput(&format!("topk/select k={keep_frac}"), n, || {
+            std::hint::black_box(topk::topk_indices(&values, keep));
+        });
+    }
+
+    // ---- golomb codec ------------------------------------------------------
+    let k = 0.1;
+    let idx: Vec<u32> = {
+        let mut r = Rng::new(1);
+        (0..n as u32).filter(|_| r.next_f64() < k).collect()
+    };
+    let p = golomb::rice_param_for_density(k);
+    b.bench_throughput("golomb/encode k=0.1", idx.len(), || {
+        std::hint::black_box(golomb::encode_indices(&idx, p));
+    });
+    let stream = golomb::encode_indices(&idx, p).into_bytes();
+    b.bench_throughput("golomb/decode k=0.1", idx.len(), || {
+        std::hint::black_box(golomb::decode_indices(&stream, idx.len(), p)).unwrap();
+    });
+
+    // ---- full wire messages -------------------------------------------------
+    let kinds: Vec<LoraKind> = (0..n)
+        .map(|i| if (i / 1024) % 2 == 0 { LoraKind::A } else { LoraKind::B })
+        .collect();
+    let kidx = Arc::new(KindIndex::new(&kinds));
+    let kinds = Arc::new(kinds);
+    let mut comp = Compressor::new(
+        SparsMode::Adaptive(AdaptiveSparsifier::default()),
+        Encoding::Golomb,
+        kinds.clone(),
+        kidx.clone(),
+    );
+    b.bench_throughput("compress/adaptive+residual+f16", n, || {
+        std::hint::black_box(comp.compress(&values, 3.0, 2.0));
+    });
+    let out = comp.compress(&values, 3.0, 2.0);
+    let range = 0..n;
+    b.bench_throughput("wire/encode full-range", out.sv.len(), || {
+        std::hint::black_box(wire::encode(&out.sv, &range, &kidx, out.k, Encoding::Golomb)).unwrap();
+    });
+    let msg = wire::encode(&out.sv, &range, &kidx, out.k, Encoding::Golomb).unwrap();
+    b.bench_throughput("wire/decode full-range", out.sv.len(), || {
+        std::hint::black_box(wire::decode(&msg, &range, &kidx)).unwrap();
+    });
+
+    // ---- aggregation ---------------------------------------------------------
+    b.bench_throughput("aggregate/10 dense clients", 10 * n, || {
+        let mut agg = SegmentAggregator::new(n, 1);
+        for _ in 0..10 {
+            agg.add_dense(0, &values, 40.0);
+        }
+        std::hint::black_box(agg.finish());
+    });
+
+    // ---- axpy (aggregation inner loop) ---------------------------------------
+    let mut acc = vec![0.0f32; n];
+    b.bench_throughput("linalg/axpy", n, || {
+        linalg::axpy(0.5, &values, &mut acc);
+        std::hint::black_box(&acc);
+    });
+
+    // ---- compiled train step (L2+L1 through PJRT), if artifacts exist --------
+    if std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        let mut srng = Rng::new(7);
+        let sess =
+            ecolora::fed::session::Session::new(std::path::Path::new("artifacts"), "tiny", &mut srng)
+                .expect("session");
+        let lora = sess.schema.init_lora(&mut srng);
+        let mask = sess.upload_mask(&sess.schema.mask_all()).unwrap();
+        let bsz = sess.schema.config.batch;
+        let seq = sess.schema.config.seq_len + 1;
+        let tokens: Vec<i32> = (0..bsz * seq)
+            .map(|_| 1 + srng.below(sess.schema.config.vocab - 1) as i32)
+            .collect();
+        let quick = Bencher::quick();
+        quick.bench("pjrt/train_step tiny", || {
+            std::hint::black_box(sess.train_step(&lora, &tokens, 0.5, &mask)).unwrap();
+        });
+        let be = sess.schema.config.eval_batch;
+        let etokens: Vec<i32> = (0..be * seq)
+            .map(|_| 1 + srng.below(sess.schema.config.vocab - 1) as i32)
+            .collect();
+        quick.bench("pjrt/eval_rows tiny", || {
+            std::hint::black_box(sess.eval_rows(&lora, &etokens)).unwrap();
+        });
+    } else {
+        eprintln!("artifacts missing: skipping pjrt benches (run `make artifacts`)");
+    }
+}

@@ -1,0 +1,13 @@
+//! Regenerates paper Table 1 (scaled profile): accuracy + upload/total
+//! communication parameters for FedIT / FLoRA / FFA-LoRA ± EcoLoRA.
+//! `cargo bench --bench table1`. Full-scale: `ecolora repro --table 1`.
+use ecolora::config::{experiments, profile::Profile};
+
+fn main() {
+    if !std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let profile = Profile::scaled("tiny");
+    experiments::table1(&profile).expect("table1").print();
+}

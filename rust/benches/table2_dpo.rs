@@ -1,0 +1,13 @@
+//! Regenerates paper Table 2 (scaled): federated DPO ± EcoLoRA.
+//! `cargo bench --bench table2_dpo`. Full-scale: `ecolora repro --table 2`.
+use ecolora::config::{experiments, profile::Profile};
+
+fn main() {
+    if !std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    // tiny has a dpo artifact; full runs use small_va (r=8, alpha=16)
+    let profile = Profile::scaled("tiny");
+    experiments::table2(&profile).expect("table2").print();
+}

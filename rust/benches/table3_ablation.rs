@@ -1,0 +1,13 @@
+//! Regenerates paper Table 3 (scaled): per-component ablation with time-to-
+//! target-accuracy under the 1/5 Mbps scenario.
+//! `cargo bench --bench table3_ablation`. Full: `ecolora repro --table 3`.
+use ecolora::config::{experiments, profile::Profile};
+
+fn main() {
+    if !std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let profile = Profile::scaled("tiny");
+    experiments::table3(&profile, 0.85).expect("table3").print();
+}

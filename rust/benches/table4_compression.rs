@@ -1,0 +1,13 @@
+//! Regenerates paper Table 4 (scaled): N_s / k_min^A / k_min^B sweep with
+//! comm params to target accuracy.
+//! `cargo bench --bench table4_compression`. Full: `ecolora repro --table 4`.
+use ecolora::config::{experiments, profile::Profile};
+
+fn main() {
+    if !std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let profile = Profile::scaled("tiny");
+    experiments::table4(&profile, 0.85).expect("table4").print();
+}

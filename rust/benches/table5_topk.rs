@@ -1,0 +1,13 @@
+//! Regenerates paper Table 5 (scaled): fixed top-k vs adaptive
+//! sparsification across thresholds.
+//! `cargo bench --bench table5_topk`. Full: `ecolora repro --table 5`.
+use ecolora::config::{experiments, profile::Profile};
+
+fn main() {
+    if !std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let profile = Profile::scaled("tiny");
+    experiments::table5(&profile).expect("table5").print();
+}

@@ -1,0 +1,12 @@
+//! Regenerates paper Table 6 (scaled): task-domain non-IID, all methods
+//! ± EcoLoRA. `cargo bench --bench table6_noniid`. Full: `repro --table 6`.
+use ecolora::config::{experiments, profile::Profile};
+
+fn main() {
+    if !std::path::Path::new("artifacts/tiny.manifest.json").exists() {
+        eprintln!("run `make artifacts` first");
+        return;
+    }
+    let profile = Profile::scaled("tiny");
+    experiments::table6(&profile).expect("table6").print();
+}

@@ -1,0 +1,130 @@
+//! The three federated LoRA fine-tuning methods EcoLoRA is applied to
+//! (paper §4.1 Baselines). EcoLoRA itself is a wrapper — `FedConfig.eco`
+//! switches the communication layer; the `Method` here fixes what is
+//! trained and how the server aggregates.
+
+use crate::model::Schema;
+
+/// Base federated fine-tuning method.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    /// FedIT (Zhang et al. 2024): FedAvg over full LoRA modules.
+    FedIt,
+    /// FLoRA (Wang et al. 2024): stacking aggregation — client modules are
+    /// merged into the base each round and clients restart from a fresh
+    /// LoRA init; the server re-distributes the stacked modules, so the
+    /// downlink carries N_t × module parameters.
+    FLoRa,
+    /// FFA-LoRA (Sun et al. 2024): A frozen at a shared random init, only
+    /// B is trained and communicated (half the parameters).
+    FfaLora,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::FedIt => "FedIT",
+            Method::FLoRa => "FLoRA",
+            Method::FfaLora => "FFA-LoRA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "fedit" => Some(Method::FedIt),
+            "flora" => Some(Method::FLoRa),
+            "ffa" | "ffa-lora" | "ffalora" => Some(Method::FfaLora),
+            _ => None,
+        }
+    }
+
+    /// Parameters one client UPLOADS per round WITHOUT EcoLoRA.
+    pub fn dense_upload_params(self, schema: &Schema) -> usize {
+        match self {
+            Method::FedIt | Method::FLoRa => schema.lora_total,
+            // A never changes after the shared init — only B travels.
+            Method::FfaLora => schema.lora_total / 2,
+        }
+    }
+
+    /// Parameters one client DOWNLOADS per round WITHOUT EcoLoRA.
+    /// (`n_t` = sampled clients, for FLoRA's stacked re-distribution.)
+    pub fn dense_download_params(self, schema: &Schema, n_t: usize) -> usize {
+        match self {
+            Method::FedIt => schema.lora_total,
+            Method::FLoRa => n_t * schema.lora_total,
+            Method::FfaLora => schema.lora_total / 2,
+        }
+    }
+
+    /// Does the client restart from a fresh LoRA each round?
+    pub fn restarts_lora(self) -> bool {
+        matches!(self, Method::FLoRa)
+    }
+
+    /// Gradient mask: which LoRA entries train.
+    pub fn grad_mask(self, schema: &Schema) -> Vec<f32> {
+        match self {
+            Method::FfaLora => schema.mask_b_only(),
+            _ => schema.mask_all(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{LoraKind, ModelConfig, Schema, TensorSpec};
+
+    fn schema() -> Schema {
+        Schema {
+            preset: "t".into(),
+            init_std: 0.02,
+            config: ModelConfig {
+                vocab: 16, d_model: 4, n_layers: 1, n_heads: 1, d_ff: 8,
+                seq_len: 8, rank: 2, lora_alpha: 4.0, lora_scale: 2.0,
+                batch: 2, eval_batch: 4,
+            },
+            base_total: 4,
+            lora_total: 16,
+            base_tensors: vec![TensorSpec {
+                name: "w".into(), shape: vec![4], offset: 0, size: 4,
+                init: "normal".into(), kind: None, layer: -1,
+            }],
+            lora_tensors: vec![
+                TensorSpec { name: "a".into(), shape: vec![4, 2], offset: 0, size: 8,
+                             init: "normal".into(), kind: Some(LoraKind::A), layer: 0 },
+                TensorSpec { name: "b".into(), shape: vec![2, 4], offset: 8, size: 8,
+                             init: "zeros".into(), kind: Some(LoraKind::B), layer: 0 },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn comm_accounting_per_method() {
+        let s = schema();
+        assert_eq!(Method::FedIt.dense_upload_params(&s), 16);
+        assert_eq!(Method::FfaLora.dense_upload_params(&s), 8);
+        assert_eq!(Method::FLoRa.dense_download_params(&s, 10), 160);
+        assert_eq!(Method::FedIt.dense_download_params(&s, 10), 16);
+        assert_eq!(Method::FfaLora.dense_download_params(&s, 10), 8);
+    }
+
+    #[test]
+    fn masks_match_method() {
+        let s = schema();
+        assert_eq!(Method::FedIt.grad_mask(&s).iter().sum::<f32>(), 16.0);
+        assert_eq!(Method::FfaLora.grad_mask(&s).iter().sum::<f32>(), 8.0);
+        assert!(Method::FLoRa.restarts_lora());
+        assert!(!Method::FedIt.restarts_lora());
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Method::parse("FedIT"), Some(Method::FedIt));
+        assert_eq!(Method::parse("ffa-lora"), Some(Method::FfaLora));
+        assert_eq!(Method::parse("flora"), Some(Method::FLoRa));
+        assert_eq!(Method::parse("zzz"), None);
+    }
+}

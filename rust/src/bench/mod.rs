@@ -1,0 +1,233 @@
+//! Criterion-like benchmark harness substrate (criterion is unavailable
+//! offline). Used by every target in `rust/benches/` (`harness = false`).
+//!
+//! Measures wall-clock over warmup + timed iterations and prints
+//! mean / p50 / p95 plus throughput when an element count is given.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, elems: usize) -> f64 {
+        elems as f64 / self.mean_s
+    }
+}
+
+/// Benchmark runner with warmup and adaptive iteration count.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_seconds: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup_iters: 3, min_iters: 10, max_iters: 10_000, target_seconds: 1.0 }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher { warmup_iters: 1, min_iters: 3, max_iters: 50, target_seconds: 2.0 }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        // estimate per-iter cost from one timed call
+        let t0 = Instant::now();
+        f();
+        let est = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters = ((self.target_seconds / est) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        let mut samples = Vec::with_capacity(iters + 1);
+        samples.push(est);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed().as_secs_f64());
+        }
+        let mean = stats::mean(&samples);
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_s: mean,
+            p50_s: stats::percentile(&samples, 50.0),
+            p95_s: stats::percentile(&samples, 95.0),
+            min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        }
+    }
+
+    /// Run + print in a criterion-like format.
+    pub fn bench<F: FnMut()>(&self, name: &str, f: F) -> BenchResult {
+        let r = self.run(name, f);
+        println!(
+            "{:<44} time: [{} {} {}]  ({} iters)",
+            r.name,
+            fmt_time(r.min_s),
+            fmt_time(r.mean_s),
+            fmt_time(r.p95_s),
+            r.iters
+        );
+        r
+    }
+
+    /// Bench with elements/second throughput reporting.
+    pub fn bench_throughput<F: FnMut()>(&self, name: &str, elems: usize, f: F) -> BenchResult {
+        let r = self.run(name, f);
+        println!(
+            "{:<44} time: [{} {} {}]  thrpt: {:>12}/s  ({} iters)",
+            r.name,
+            fmt_time(r.min_s),
+            fmt_time(r.mean_s),
+            fmt_time(r.p95_s),
+            fmt_count(r.throughput(elems)),
+            r.iters
+        );
+        r
+    }
+}
+
+/// Human time formatting (ns/µs/ms/s).
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.2} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Human count formatting (K/M/G).
+pub fn fmt_count(x: f64) -> String {
+    if x >= 1e9 {
+        format!("{:.2} G", x / 1e9)
+    } else if x >= 1e6 {
+        format!("{:.2} M", x / 1e6)
+    } else if x >= 1e3 {
+        format!("{:.2} K", x / 1e3)
+    } else {
+        format!("{x:.1}")
+    }
+}
+
+/// Markdown table printer shared by the table-reproduction benches.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n## {}\n\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something_positive() {
+        let b = Bencher { warmup_iters: 1, min_iters: 5, max_iters: 20, target_seconds: 0.01 };
+        let mut acc = 0u64;
+        let r = b.run("spin", || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+        });
+        assert!(r.mean_s > 0.0);
+        assert!(r.min_s <= r.mean_s);
+        assert!(r.p50_s <= r.p95_s + 1e-12);
+        assert!(r.iters >= 5);
+        std::hint::black_box(acc);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).contains("ns"));
+        assert!(fmt_time(2.5e-6).contains("µs"));
+        assert!(fmt_time(2.5e-3).contains("ms"));
+        assert!(fmt_time(2.5).contains(" s"));
+        assert_eq!(fmt_count(1.5e6), "1.50 M");
+    }
+
+    #[test]
+    fn table_renders_aligned_markdown() {
+        let mut t = Table::new("Table X", &["Method", "ARC"]);
+        t.row(vec!["FedIT".into(), "66.6".into()]);
+        t.row(vec!["FedIT w/ EcoLoRA".into(), "66.6".into()]);
+        let s = t.render();
+        assert!(s.contains("## Table X"));
+        assert!(s.lines().filter(|l| l.starts_with('|')).count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,136 @@
+//! Adaptive sparsification schedule (paper §3.4, Eq. 4).
+//!
+//! `k_t = k_min + (k_max − k_min) · exp(−γ (L₀ − L_{t−1}))`
+//!
+//! As the global loss drops below its initial value, the kept fraction
+//! decays from k_max toward k_min. Matrices A and B get *different*
+//! (k_min, γ): B is intrinsically sparser and sparsifies faster (larger γ,
+//! smaller k_min) — the matrix-adaptive half of the scheme.
+
+use crate::model::LoraKind;
+
+/// Schedule parameters for one matrix family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KSchedule {
+    pub k_min: f64,
+    pub k_max: f64,
+    pub gamma: f64,
+}
+
+impl KSchedule {
+    /// Eq. 4. `l0` = initial global loss, `l_prev` = last round's loss.
+    pub fn k(&self, l0: f64, l_prev: f64) -> f64 {
+        let drop = (l0 - l_prev).max(0.0); // loss above L0 => no extra sparsity
+        let k = self.k_min + (self.k_max - self.k_min) * (-self.gamma * drop).exp();
+        k.clamp(self.k_min.min(self.k_max), self.k_max.max(self.k_min))
+    }
+}
+
+/// Paper defaults (Appendix A): k_max = 0.95, k_min^A = 0.6, k_min^B = 0.5,
+/// with γ_B > γ_A to track B's faster sparsification.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveSparsifier {
+    pub a: KSchedule,
+    pub b: KSchedule,
+}
+
+impl Default for AdaptiveSparsifier {
+    fn default() -> Self {
+        AdaptiveSparsifier {
+            a: KSchedule { k_min: 0.6, k_max: 0.95, gamma: 1.0 },
+            b: KSchedule { k_min: 0.5, k_max: 0.95, gamma: 2.0 },
+        }
+    }
+}
+
+impl AdaptiveSparsifier {
+    pub fn with_k_mins(k_min_a: f64, k_min_b: f64) -> Self {
+        AdaptiveSparsifier {
+            a: KSchedule { k_min: k_min_a, ..Self::default().a },
+            b: KSchedule { k_min: k_min_b, ..Self::default().b },
+        }
+    }
+
+    /// Fixed-ratio variant (Table 3 "w/ Fixed Sparsification" and the
+    /// Table 5 top-k baseline): k constant for both matrices.
+    pub fn fixed(k: f64) -> Self {
+        AdaptiveSparsifier {
+            a: KSchedule { k_min: k, k_max: k, gamma: 0.0 },
+            b: KSchedule { k_min: k, k_max: k, gamma: 0.0 },
+        }
+    }
+
+    pub fn schedule(&self, kind: LoraKind) -> &KSchedule {
+        match kind {
+            LoraKind::A => &self.a,
+            LoraKind::B => &self.b,
+        }
+    }
+
+    /// Current keep fractions (k_A, k_B) given the loss signal.
+    pub fn k_pair(&self, l0: f64, l_prev: f64) -> (f64, f64) {
+        (self.a.k(l0, l_prev), self.b.k(l0, l_prev))
+    }
+
+    /// Average keep fraction over a vector with `n_a` A-entries and `n_b`
+    /// B-entries (used to pick the Golomb parameter and for accounting).
+    pub fn effective_k(&self, l0: f64, l_prev: f64, n_a: usize, n_b: usize) -> f64 {
+        let (ka, kb) = self.k_pair(l0, l_prev);
+        let n = (n_a + n_b).max(1);
+        (ka * n_a as f64 + kb * n_b as f64) / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_starts_at_kmax_and_decays_to_kmin() {
+        let s = KSchedule { k_min: 0.5, k_max: 0.95, gamma: 2.0 };
+        assert!((s.k(3.0, 3.0) - 0.95).abs() < 1e-12); // no progress yet
+        assert!(s.k(3.0, 2.0) < 0.95);
+        assert!((s.k(3.0, -50.0) - 0.5).abs() < 1e-6); // huge progress
+    }
+
+    #[test]
+    fn loss_increase_does_not_raise_k_above_kmax() {
+        let s = KSchedule { k_min: 0.5, k_max: 0.95, gamma: 2.0 };
+        assert!((s.k(3.0, 10.0) - 0.95).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k_is_monotone_in_loss_drop() {
+        let s = KSchedule { k_min: 0.3, k_max: 0.9, gamma: 1.5 };
+        let mut prev = f64::INFINITY;
+        for i in 0..20 {
+            let l = 3.0 - 0.15 * i as f64;
+            let k = s.k(3.0, l);
+            assert!(k <= prev + 1e-12);
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn b_sparser_than_a_once_training_progresses() {
+        let sp = AdaptiveSparsifier::default();
+        let (ka, kb) = sp.k_pair(3.0, 1.0);
+        assert!(kb < ka, "kA={ka} kB={kb}");
+    }
+
+    #[test]
+    fn fixed_variant_is_constant() {
+        let sp = AdaptiveSparsifier::fixed(0.7);
+        for l in [3.0, 2.0, 0.5] {
+            let (ka, kb) = sp.k_pair(3.0, l);
+            assert!((ka - 0.7).abs() < 1e-12 && (kb - 0.7).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn effective_k_weighted_average() {
+        let sp = AdaptiveSparsifier::with_k_mins(0.6, 0.2);
+        let k = sp.effective_k(3.0, -100.0, 100, 300); // fully decayed
+        assert!((k - (0.6 * 100.0 + 0.2 * 300.0) / 400.0).abs() < 1e-6);
+    }
+}

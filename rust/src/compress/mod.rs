@@ -1,0 +1,234 @@
+//! EcoLoRA compression pipeline (paper §3.4–3.5): matrix-adaptive top-k
+//! sparsification with error feedback, f16 value quantization, and
+//! Golomb-coded sparse wire messages.
+
+pub mod adaptive;
+pub mod golomb;
+pub mod quant;
+pub mod residual;
+pub mod topk;
+pub mod wire;
+
+use std::sync::Arc;
+
+pub use adaptive::AdaptiveSparsifier;
+pub use residual::Residual;
+pub use wire::{Encoding, KindIndex, SparseVec};
+
+use crate::model::LoraKind;
+use crate::util::half::quantize_f16;
+
+/// How updates are sparsified (ablation axis for Tables 3 & 5).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SparsMode {
+    /// Loss- and matrix-adaptive (the paper's scheme).
+    Adaptive(AdaptiveSparsifier),
+    /// Fixed ratio for both matrices ("w/ Fixed Sparsification").
+    Fixed(f64),
+    /// No sparsification ("w/o Sparsification"): dense f16 transmission.
+    Off,
+}
+
+/// One endpoint's compression state (client uplink or server downlink).
+pub struct Compressor {
+    pub mode: SparsMode,
+    pub encoding: Encoding,
+    residual: Residual,
+    kinds: Arc<Vec<LoraKind>>,
+    kidx: Arc<KindIndex>,
+    /// scratch: U + R
+    combined: Vec<f32>,
+}
+
+/// Outcome of compressing one update.
+pub struct Compressed {
+    /// Quantized sparse update (what the receiver will reconstruct).
+    pub sv: SparseVec,
+    /// Densities used, (k_A, k_B) — for wire headers and accounting.
+    pub k: (f64, f64),
+    /// Dense fallback (mode == Off): full quantized vector.
+    pub dense: Option<Vec<f32>>,
+}
+
+impl Compressor {
+    pub fn new(
+        mode: SparsMode,
+        encoding: Encoding,
+        kinds: Arc<Vec<LoraKind>>,
+        kidx: Arc<KindIndex>,
+    ) -> Self {
+        let n = kinds.len();
+        Compressor { mode, encoding, residual: Residual::new(n), kinds, kidx, combined: vec![0.0; n] }
+    }
+
+    pub fn kind_index(&self) -> &KindIndex {
+        &self.kidx
+    }
+
+    /// Residual L1 mass (diagnostics; bounded under error feedback).
+    pub fn residual_l1(&self) -> f64 {
+        self.residual.l1()
+    }
+
+    /// Compress `update` given the loss signal (L0, L_{t-1}).
+    ///
+    /// Applies Eq. 4 per matrix family, Eq. 5 (SC_k over U + R), f16
+    /// quantization, and Eq. 6 residual commit. In `Off` mode the update is
+    /// transmitted dense (quantized, no residual needed beyond the f16
+    /// error, which IS fed back).
+    pub fn compress(&mut self, update: &[f32], l0: f64, l_prev: f64) -> Compressed {
+        assert_eq!(update.len(), self.kinds.len());
+        self.combined.copy_from_slice(update);
+        self.residual.add_into(&mut self.combined);
+
+        let (k_a, k_b) = match self.mode {
+            SparsMode::Adaptive(sp) => sp.k_pair(l0, l_prev),
+            SparsMode::Fixed(k) => (k, k),
+            SparsMode::Off => (1.0, 1.0),
+        };
+
+        if matches!(self.mode, SparsMode::Off) {
+            let dense: Vec<f32> = self.combined.iter().map(|&v| quantize_f16(v)).collect();
+            let idx: Vec<u32> = (0..dense.len() as u32).collect();
+            self.residual.commit(&self.combined, &idx, &dense);
+            return Compressed {
+                sv: SparseVec { idx, vals: dense.clone() },
+                k: (1.0, 1.0),
+                dense: Some(dense),
+            };
+        }
+
+        // Per-family top-k over compacted coordinates, then merge.
+        let mut idx = Vec::new();
+        for (kind, k) in [(LoraKind::A, k_a), (LoraKind::B, k_b)] {
+            let (fam, _r0) = self.kidx.in_range(kind, &(0..self.combined.len()));
+            let famvals: Vec<f32> = fam.iter().map(|&p| self.combined[p as usize]).collect();
+            let keep = ((famvals.len() as f64) * k).round() as usize;
+            let kept = topk::topk_indices(&famvals, keep.min(famvals.len()));
+            idx.extend(kept.iter().map(|&c| fam[c as usize]));
+        }
+        idx.sort_unstable();
+        // Drop entries whose f16 image is exactly zero — transmitting them
+        // is pure waste (e.g. FFA-LoRA's frozen-A updates are all zero).
+        let mut kept_idx = Vec::with_capacity(idx.len());
+        let mut vals = Vec::with_capacity(idx.len());
+        for &i in &idx {
+            let q = quantize_f16(self.combined[i as usize]);
+            if q != 0.0 {
+                kept_idx.push(i);
+                vals.push(q);
+            }
+        }
+        self.residual.commit(&self.combined, &kept_idx, &vals);
+        Compressed { sv: SparseVec { idx: kept_idx, vals }, k: (k_a, k_b), dense: None }
+    }
+
+    /// Wire-encode a (possibly range-restricted) compressed update.
+    pub fn encode_range(
+        &self,
+        c: &Compressed,
+        range: &std::ops::Range<usize>,
+    ) -> anyhow::Result<Vec<u8>> {
+        let sv = c.sv.restrict(range);
+        wire::encode(&sv, range, &self.kidx, c.k, self.encoding)
+    }
+}
+
+/// Bytes for a dense f16 transmission of `n` parameters (baselines and the
+/// `Off` mode; 2 bytes per value, negligible framing).
+pub fn dense_bytes(n: usize) -> usize {
+    2 * n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize) -> (Arc<Vec<LoraKind>>, Arc<KindIndex>) {
+        // alternate A/B blocks of 32 like the real layout
+        let kinds: Vec<LoraKind> = (0..n)
+            .map(|i| if (i / 32) % 2 == 0 { LoraKind::A } else { LoraKind::B })
+            .collect();
+        let kidx = KindIndex::new(&kinds);
+        (Arc::new(kinds), Arc::new(kidx))
+    }
+
+    #[test]
+    fn adaptive_mode_keeps_fewer_b_entries_late_in_training() {
+        let (kinds, kidx) = setup(4096);
+        let mut c = Compressor::new(
+            SparsMode::Adaptive(AdaptiveSparsifier::default()),
+            Encoding::Golomb,
+            kinds.clone(),
+            kidx,
+        );
+        let mut rng = Rng::new(1);
+        let update: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        // late in training: loss has dropped a lot
+        let out = c.compress(&update, 3.0, 0.5);
+        let n_a = out.sv.idx.iter().filter(|&&i| kinds[i as usize] == LoraKind::A).count();
+        let n_b = out.sv.len() - n_a;
+        assert!(n_b < n_a, "kept A={n_a} B={n_b}");
+        assert!(out.k.1 < out.k.0);
+    }
+
+    #[test]
+    fn off_mode_is_dense_and_f16_exact_feedback() {
+        let (kinds, kidx) = setup(128);
+        let mut c = Compressor::new(SparsMode::Off, Encoding::Golomb, kinds, kidx);
+        let update = vec![0.1f32; 128];
+        let out = c.compress(&update, 3.0, 3.0);
+        assert_eq!(out.sv.len(), 128);
+        assert!(out.dense.is_some());
+        // residual carries exactly the f16 quantization error
+        let err = 0.1f32 - quantize_f16(0.1);
+        assert!((c.residual_l1() - 128.0 * err.abs() as f64).abs() < 1e-4);
+    }
+
+    #[test]
+    fn residual_recovers_suppressed_updates_over_rounds() {
+        let (kinds, kidx) = setup(256);
+        let mut c = Compressor::new(SparsMode::Fixed(0.1), Encoding::Golomb, kinds, kidx);
+        // constant small update everywhere: each round transmits the top 10%,
+        // accumulated residue must eventually cover every coordinate.
+        let update = vec![0.01f32; 256];
+        let mut touched = vec![false; 256];
+        for _ in 0..30 {
+            let out = c.compress(&update, 3.0, 3.0);
+            for &i in &out.sv.idx {
+                touched[i as usize] = true;
+            }
+        }
+        let covered = touched.iter().filter(|&&t| t).count();
+        assert!(covered > 250, "covered {covered}/256");
+    }
+
+    #[test]
+    fn fixed_mode_keep_counts_match_ratio() {
+        let (kinds, kidx) = setup(1024);
+        let mut c = Compressor::new(SparsMode::Fixed(0.25), Encoding::Golomb, kinds, kidx);
+        let mut rng = Rng::new(3);
+        let update: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
+        let out = c.compress(&update, 1.0, 1.0);
+        assert_eq!(out.sv.len(), 256);
+    }
+
+    #[test]
+    fn encode_range_roundtrip_through_wire() {
+        let (kinds, kidx) = setup(512);
+        let mut c = Compressor::new(
+            SparsMode::Adaptive(AdaptiveSparsifier::default()),
+            Encoding::Golomb,
+            kinds,
+            kidx.clone(),
+        );
+        let mut rng = Rng::new(7);
+        let update: Vec<f32> = (0..512).map(|_| rng.normal() as f32).collect();
+        let out = c.compress(&update, 3.0, 2.0);
+        let range = 100..300;
+        let bytes = c.encode_range(&out, &range).unwrap();
+        let dec = wire::decode(&bytes, &range, &kidx).unwrap();
+        assert_eq!(dec, out.sv.restrict(&range));
+    }
+}

@@ -1,0 +1,226 @@
+//! Quantization baselines from the paper's related work (§2.3): signSGD
+//! (Bernstein et al. 2018), ternary compression (Xu et al. 2020), and
+//! uniform b-bit stochastic quantization. EcoLoRA argues sparsification
+//! beats quantization for federated LoRA; these implementations let the
+//! comparison be run rather than asserted (bench: hotpath + table5-style
+//! sweeps).
+
+use crate::util::rng::Rng;
+
+/// signSGD: 1 bit per entry plus one shared scale (the mean |x|).
+#[derive(Debug, Clone)]
+pub struct SignCompressed {
+    pub signs: Vec<u8>, // bit-packed, MSB-first
+    pub scale: f32,
+    pub len: usize,
+}
+
+pub fn sign_compress(x: &[f32]) -> SignCompressed {
+    let scale = if x.is_empty() {
+        0.0
+    } else {
+        x.iter().map(|v| v.abs()).sum::<f32>() / x.len() as f32
+    };
+    let mut signs = vec![0u8; (x.len() + 7) / 8];
+    for (i, v) in x.iter().enumerate() {
+        if *v < 0.0 {
+            signs[i / 8] |= 1 << (7 - i % 8);
+        }
+    }
+    SignCompressed { signs, scale, len: x.len() }
+}
+
+pub fn sign_decompress(c: &SignCompressed) -> Vec<f32> {
+    (0..c.len)
+        .map(|i| {
+            if c.signs[i / 8] >> (7 - i % 8) & 1 == 1 {
+                -c.scale
+            } else {
+                c.scale
+            }
+        })
+        .collect()
+}
+
+/// Wire bytes for signSGD (1 bit/entry + f32 scale).
+pub fn sign_bytes(len: usize) -> usize {
+    (len + 7) / 8 + 4
+}
+
+/// Ternary {-s, 0, +s}: entries below `threshold_frac * max|x|` send 0.
+/// 2 bits per entry + scale.
+#[derive(Debug, Clone)]
+pub struct TernaryCompressed {
+    pub codes: Vec<u8>, // 2-bit codes packed 4/byte: 0=zero, 1=+s, 2=-s
+    pub scale: f32,
+    pub len: usize,
+}
+
+pub fn ternary_compress(x: &[f32], threshold_frac: f32) -> TernaryCompressed {
+    let maxabs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let thr = threshold_frac * maxabs;
+    // scale = mean |x| over the kept entries (unbiased-ish reconstruction)
+    let kept: Vec<f32> = x.iter().filter(|v| v.abs() > thr).map(|v| v.abs()).collect();
+    let scale = if kept.is_empty() {
+        0.0
+    } else {
+        kept.iter().sum::<f32>() / kept.len() as f32
+    };
+    let mut codes = vec![0u8; (x.len() + 3) / 4];
+    for (i, v) in x.iter().enumerate() {
+        let code: u8 = if v.abs() <= thr {
+            0
+        } else if *v > 0.0 {
+            1
+        } else {
+            2
+        };
+        codes[i / 4] |= code << (6 - 2 * (i % 4));
+    }
+    TernaryCompressed { codes, scale, len: x.len() }
+}
+
+pub fn ternary_decompress(c: &TernaryCompressed) -> Vec<f32> {
+    (0..c.len)
+        .map(|i| match c.codes[i / 4] >> (6 - 2 * (i % 4)) & 3 {
+            1 => c.scale,
+            2 => -c.scale,
+            _ => 0.0,
+        })
+        .collect()
+}
+
+pub fn ternary_bytes(len: usize) -> usize {
+    (len + 3) / 4 + 4
+}
+
+/// Uniform b-bit stochastic quantization in [-max|x|, max|x|].
+pub fn uniform_quantize(x: &[f32], bits: u32, rng: &mut Rng) -> (Vec<u32>, f32) {
+    assert!(bits >= 1 && bits <= 16);
+    let maxabs = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-30);
+    let levels = (1u32 << bits) - 1;
+    let q = x
+        .iter()
+        .map(|v| {
+            let t = (v + maxabs) / (2.0 * maxabs) * levels as f32;
+            let lo = t.floor();
+            // stochastic rounding: unbiased reconstruction
+            let up = rng.next_f32() < (t - lo);
+            (lo as u32 + up as u32).min(levels)
+        })
+        .collect();
+    (q, maxabs)
+}
+
+pub fn uniform_dequantize(q: &[u32], bits: u32, maxabs: f32) -> Vec<f32> {
+    let levels = ((1u32 << bits) - 1) as f32;
+    q.iter()
+        .map(|&c| (c as f32 / levels) * 2.0 * maxabs - maxabs)
+        .collect()
+}
+
+pub fn uniform_bytes(len: usize, bits: u32) -> usize {
+    (len * bits as usize + 7) / 8 + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn sign_roundtrip_preserves_signs_and_scale() {
+        propcheck(100, |rng| {
+            let n = rng.below(500) + 1;
+            let x: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let c = sign_compress(&x);
+            let y = sign_decompress(&c);
+            assert_eq!(y.len(), n);
+            for (a, b) in x.iter().zip(&y) {
+                if *a != 0.0 {
+                    assert_eq!(a.signum(), b.signum());
+                }
+                assert!((b.abs() - c.scale).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn sign_is_32x_smaller_than_f32() {
+        assert!(sign_bytes(32_000) < 32_000 * 4 / 30);
+    }
+
+    #[test]
+    fn ternary_zeroes_small_entries_and_keeps_large_signs() {
+        let x = vec![10.0f32, -0.01, 0.02, -9.0, 0.0];
+        let c = ternary_compress(&x, 0.1);
+        let y = ternary_decompress(&c);
+        assert!(y[1] == 0.0 && y[2] == 0.0 && y[4] == 0.0);
+        assert!(y[0] > 0.0 && y[3] < 0.0);
+        assert!((y[0] - 9.5).abs() < 1e-5); // mean(10, 9)
+    }
+
+    #[test]
+    fn uniform_quantization_is_unbiased_and_bounded() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..5000).map(|_| rng.normal() as f32).collect();
+        for bits in [2, 4, 8] {
+            let (q, s) = uniform_quantize(&x, bits, &mut rng);
+            let y = uniform_dequantize(&q, bits, s);
+            let step = 2.0 * s / ((1u32 << bits) - 1) as f32;
+            let mut bias = 0.0f64;
+            for (a, b) in x.iter().zip(&y) {
+                assert!((a - b).abs() <= step + 1e-5, "bits={bits}");
+                bias += (*b - *a) as f64;
+            }
+            assert!(
+                (bias / x.len() as f64).abs() < 3.0 * step as f64 / (x.len() as f64).sqrt() + 1e-4,
+                "bits={bits} bias {bias}"
+            );
+        }
+    }
+
+    #[test]
+    fn byte_accounting() {
+        assert_eq!(sign_bytes(8), 1 + 4);
+        assert_eq!(ternary_bytes(8), 2 + 4);
+        assert_eq!(uniform_bytes(8, 4), 4 + 4);
+    }
+
+    #[test]
+    fn sparsified_topk_beats_quantization_on_heavy_tails() {
+        // The paper's §2.3 claim at equal byte budget: for heavy-tailed LoRA
+        // updates, top-k + f16 (EcoLoRA's choice) retains more L2 mass than
+        // sign-1bit at the same wire size.
+        let mut rng = Rng::new(9);
+        let n = 20_000;
+        let x: Vec<f32> = (0..n)
+            .map(|_| {
+                if rng.below(20) == 0 {
+                    rng.normal() as f32 * 5.0
+                } else {
+                    rng.normal() as f32 * 0.02
+                }
+            })
+            .collect();
+        // byte budget = signSGD's
+        let budget = sign_bytes(n);
+        // top-k with ~18 bits/entry (f16 + coded position)
+        let keep = budget * 8 / 18;
+        let (idx, vals) = crate::compress::topk::sparsify(&x, keep);
+        let err_topk: f64 = {
+            let mut y = vec![0.0f32; n];
+            for (&i, &v) in idx.iter().zip(&vals) {
+                y[i as usize] = v;
+            }
+            x.iter().zip(&y).map(|(a, b)| ((a - b) as f64).powi(2)).sum()
+        };
+        let y_sign = sign_decompress(&sign_compress(&x));
+        let err_sign: f64 =
+            x.iter().zip(&y_sign).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        assert!(
+            err_topk < err_sign,
+            "topk err {err_topk:.2} vs sign err {err_sign:.2} at equal bytes"
+        );
+    }
+}

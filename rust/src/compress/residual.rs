@@ -1,0 +1,134 @@
+//! Error-feedback residual accumulation (paper §3.4, Eqs. 5–6).
+//!
+//!   Ĉ = SC_k(U + R)          — compress the update plus carried residue
+//!   R' = (U + R) − Ĉ         — keep what was not transmitted
+//!
+//! Every endpoint that sparsifies (each client's uplink, and the server's
+//! downlink broadcast) owns one `Residual` the size of the LoRA vector, so
+//! large updates go out immediately and small ones accumulate until they
+//! matter. (Eq. 6 in the paper is written R^{t+1} = R^t + P^{t+1} − P̂^{t+1},
+//! the same quantity since P̂ was selected from P + R.)
+
+/// Per-endpoint residual state.
+#[derive(Debug, Clone)]
+pub struct Residual {
+    pub r: Vec<f32>,
+}
+
+impl Residual {
+    pub fn new(len: usize) -> Self {
+        Residual { r: vec![0.0; len] }
+    }
+
+    /// Add the carried residue into `update` in place (U + R), returning a
+    /// scratch reference the caller sparsifies. After selecting the kept
+    /// set, call `commit`.
+    pub fn add_into(&self, update: &mut [f32]) {
+        assert_eq!(update.len(), self.r.len());
+        for (u, r) in update.iter_mut().zip(&self.r) {
+            *u += *r;
+        }
+    }
+
+    /// Commit: `combined` is U + R; `kept_idx`/`kept_vals` is what was
+    /// transmitted (possibly quantized). The new residue is
+    /// combined − transmitted.
+    pub fn commit(&mut self, combined: &[f32], kept_idx: &[u32], kept_vals: &[f32]) {
+        assert_eq!(combined.len(), self.r.len());
+        assert_eq!(kept_idx.len(), kept_vals.len());
+        self.r.copy_from_slice(combined);
+        for (&i, &v) in kept_idx.iter().zip(kept_vals) {
+            self.r[i as usize] -= v;
+        }
+    }
+
+    /// Total |residue| mass (diagnostics: must stay bounded in training).
+    pub fn l1(&self) -> f64 {
+        self.r.iter().map(|x| x.abs() as f64).sum()
+    }
+
+    pub fn reset(&mut self) {
+        self.r.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::topk::sparsify;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn conservation_transmitted_plus_residual_equals_total() {
+        // Over T rounds: sum(transmitted) + final residual == sum(updates)
+        // exactly (no quantization) — the error-feedback invariant.
+        propcheck(100, |rng| {
+            let n = rng.below(500) + 10;
+            let keep = rng.below(n) + 1;
+            let rounds = rng.below(12) + 1;
+            let mut res = Residual::new(n);
+            let mut sum_updates = vec![0.0f64; n];
+            let mut sum_tx = vec![0.0f64; n];
+            for _ in 0..rounds {
+                let update: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                for (s, u) in sum_updates.iter_mut().zip(&update) {
+                    *s += *u as f64;
+                }
+                let mut combined = update.clone();
+                res.add_into(&mut combined);
+                let (idx, vals) = sparsify(&combined, keep);
+                res.commit(&combined, &idx, &vals);
+                for (&i, &v) in idx.iter().zip(&vals) {
+                    sum_tx[i as usize] += v as f64;
+                }
+            }
+            for i in 0..n {
+                let recon = sum_tx[i] + res.r[i] as f64;
+                assert!(
+                    (recon - sum_updates[i]).abs() < 1e-3,
+                    "i={i}: {} vs {}",
+                    recon,
+                    sum_updates[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn keep_all_leaves_zero_residual() {
+        let mut res = Residual::new(4);
+        let mut u = vec![1.0f32, -2.0, 3.0, 0.5];
+        res.add_into(&mut u);
+        let (idx, vals) = sparsify(&u, 4);
+        res.commit(&u, &idx, &vals);
+        assert!(res.r.iter().all(|&x| x == 0.0));
+        assert_eq!(res.l1(), 0.0);
+    }
+
+    #[test]
+    fn untransmitted_mass_carries_forward() {
+        let mut res = Residual::new(3);
+        let mut u = vec![10.0f32, 0.1, 0.2];
+        res.add_into(&mut u);
+        let (idx, vals) = sparsify(&u, 1);
+        res.commit(&u, &idx, &vals);
+        assert_eq!(idx, vec![0]);
+        assert_eq!(res.r, vec![0.0, 0.1, 0.2]);
+
+        // next round the small entries accumulate and eventually win
+        let mut u2 = vec![0.0f32, 0.15, 0.05];
+        res.add_into(&mut u2);
+        assert!((u2[1] - 0.25).abs() < 1e-6);
+        let (idx2, _) = sparsify(&u2, 1);
+        assert_eq!(idx2, vec![1]);
+    }
+
+    #[test]
+    fn quantized_commit_keeps_quantization_error() {
+        let mut res = Residual::new(2);
+        let combined = vec![1.0f32, 0.0];
+        // transmit a quantized version of entry 0
+        res.commit(&combined, &[0], &[0.875]);
+        assert!((res.r[0] - 0.125).abs() < 1e-6);
+    }
+}

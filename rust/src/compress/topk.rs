@@ -1,0 +1,161 @@
+//! Top-k magnitude sparsification (paper §3.4).
+//!
+//! `SC_k` keeps the k-fraction of entries with the largest |value| and
+//! zeroes the rest. The selection threshold is found with an O(n) in-place
+//! quickselect over magnitudes (the paper budgets O(|P| log |P|) for a
+//! sort; quickselect is the optimized hot path, see EXPERIMENTS.md §Perf).
+
+/// Indices (ascending) of the `keep` largest-magnitude entries.
+pub fn topk_indices(values: &[f32], keep: usize) -> Vec<u32> {
+    let n = values.len();
+    if keep == 0 || n == 0 {
+        return vec![];
+    }
+    if keep >= n {
+        return (0..n as u32).collect();
+    }
+    // Quickselect on a scratch copy of magnitudes to find the threshold.
+    let mut mags: Vec<f32> = values.iter().map(|v| v.abs()).collect();
+    let thresh = quickselect_desc(&mut mags, keep - 1);
+
+    // Collect indices >= threshold; ties broken by index order, trimmed to
+    // exactly `keep` so the wire size is deterministic.
+    let mut out = Vec::with_capacity(keep + 8);
+    let above = values.iter().filter(|v| v.abs() > thresh).count();
+    let mut ties_allowed = keep - above;
+    for (i, v) in values.iter().enumerate() {
+        let m = v.abs();
+        if m > thresh {
+            out.push(i as u32);
+        } else if m == thresh && ties_allowed > 0 {
+            out.push(i as u32);
+            ties_allowed -= 1;
+        }
+        if out.len() == keep {
+            break;
+        }
+    }
+    out
+}
+
+/// k-th largest (0-based) element via iterative quickselect; O(n) expected.
+fn quickselect_desc(v: &mut [f32], k: usize) -> f32 {
+    let (mut lo, mut hi) = (0usize, v.len());
+    let mut k = k;
+    loop {
+        if hi - lo <= 1 {
+            return v[lo];
+        }
+        // median-of-three pivot for resilience on sorted inputs
+        let mid = lo + (hi - lo) / 2;
+        let (a, b, c) = (v[lo], v[mid], v[hi - 1]);
+        let pivot = if (a <= b) == (b <= c) { b } else if (b <= a) == (a <= c) { a } else { c };
+
+        // three-way partition (descending: > pivot | == pivot | < pivot)
+        let (mut i, mut j, mut p) = (lo, lo, hi);
+        while j < p {
+            if v[j] > pivot {
+                v.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if v[j] < pivot {
+                p -= 1;
+                v.swap(j, p);
+            } else {
+                j += 1;
+            }
+        }
+        if k < i - lo {
+            hi = i;
+        } else if k < p - lo {
+            return pivot;
+        } else {
+            k -= p - lo;
+            lo = p;
+        }
+    }
+}
+
+/// Apply SC_k: returns (indices, kept values) and leaves a dense sparse
+/// image when asked (used by tests & the residual update).
+pub fn sparsify(values: &[f32], keep: usize) -> (Vec<u32>, Vec<f32>) {
+    let idx = topk_indices(values, keep);
+    let vals = idx.iter().map(|&i| values[i as usize]).collect();
+    (idx, vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    fn brute_force_topk(values: &[f32], keep: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..values.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            values[b as usize]
+                .abs()
+                .partial_cmp(&values[a as usize].abs())
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut out: Vec<u32> = idx.into_iter().take(keep).collect();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn matches_brute_force_on_magnitude_sum() {
+        // Selection sets may differ on ties, but the kept |mass| must match.
+        propcheck(200, |rng| {
+            let n = rng.below(2_000) + 1;
+            let keep = rng.below(n + 1);
+            let values: Vec<f32> = (0..n)
+                .map(|_| (rng.normal() as f32) * if rng.below(4) == 0 { 10.0 } else { 0.1 })
+                .collect();
+            let fast = topk_indices(&values, keep);
+            let brute = brute_force_topk(&values, keep);
+            assert_eq!(fast.len(), keep.min(n));
+            let mass = |idx: &[u32]| -> f64 {
+                idx.iter().map(|&i| values[i as usize].abs() as f64).sum()
+            };
+            assert!((mass(&fast) - mass(&brute)).abs() < 1e-4 * (1.0 + mass(&brute)));
+            // sorted ascending, unique
+            assert!(fast.windows(2).all(|w| w[0] < w[1]));
+        });
+    }
+
+    #[test]
+    fn exact_on_distinct_values() {
+        let values = [0.1f32, -5.0, 3.0, 0.01, -2.0, 4.0];
+        assert_eq!(topk_indices(&values, 3), vec![1, 2, 5]);
+        let (idx, vals) = sparsify(&values, 2);
+        assert_eq!(idx, vec![1, 5]);
+        assert_eq!(vals, vec![-5.0, 4.0]);
+    }
+
+    #[test]
+    fn all_ties_keeps_exactly_k() {
+        let values = vec![1.0f32; 100];
+        let idx = topk_indices(&values, 37);
+        assert_eq!(idx.len(), 37);
+        assert_eq!(idx, (0..37u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn edge_cases() {
+        assert!(topk_indices(&[], 5).is_empty());
+        assert!(topk_indices(&[1.0, 2.0], 0).is_empty());
+        assert_eq!(topk_indices(&[1.0, 2.0], 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn sorted_input_no_quadratic_blowup() {
+        // median-of-three: sorted inputs must still finish fast
+        let values: Vec<f32> = (0..200_000).map(|i| i as f32).collect();
+        let t0 = std::time::Instant::now();
+        let idx = topk_indices(&values, 1000);
+        assert_eq!(idx.len(), 1000);
+        assert!(t0.elapsed().as_secs_f64() < 1.0);
+        assert_eq!(idx[0], 199_000);
+    }
+}

@@ -1,0 +1,406 @@
+//! Sparse wire format (paper §3.5): what actually crosses the network.
+//!
+//! A message carries the kept entries of one flat-vector range (a
+//! round-robin segment on the uplink; the whole vector on the downlink),
+//! split into two blocks — LoRA-A entries and LoRA-B entries — because the
+//! two families are sparsified at different densities and therefore get
+//! different Golomb parameters.
+//!
+//! Per block: positions are compacted into the (range ∩ kind) coordinate
+//! space — in that space the gap distribution is Geometric(k_kind), which
+//! is exactly what Golomb/Rice coding is optimal for — and values travel as
+//! IEEE f16 (sign included in the 16 bits). The `Fixed` encoding variant
+//! (32-bit positions) implements the paper's "w/o Encoding" ablation.
+//!
+//! Layout (little-endian):
+//!   u8  version | u8 encoding | u8 n_blocks
+//!   per block: u8 kind | u8 rice_b | u32 count | u32 idx_bytes_len
+//!              | idx bytes | count × u16 f16 values
+
+use std::ops::Range;
+
+use anyhow::{anyhow, Result};
+
+use crate::compress::golomb;
+use crate::model::LoraKind;
+use crate::util::bitstream::BitWriter;
+use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits};
+
+const VERSION: u8 = 1;
+
+/// Position encoding on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Encoding {
+    /// Golomb/Rice-coded gaps (the paper's scheme).
+    Golomb,
+    /// Fixed 32-bit positions ("w/o Encoding" ablation).
+    Fixed,
+}
+
+/// Precomputed flat positions per LoRA kind (built once per schema).
+#[derive(Debug, Clone)]
+pub struct KindIndex {
+    pos: [Vec<u32>; 2],
+}
+
+impl KindIndex {
+    pub fn new(kinds: &[LoraKind]) -> Self {
+        let mut a = vec![];
+        let mut b = vec![];
+        for (i, k) in kinds.iter().enumerate() {
+            match k {
+                LoraKind::A => a.push(i as u32),
+                LoraKind::B => b.push(i as u32),
+            }
+        }
+        KindIndex { pos: [a, b] }
+    }
+
+    fn family(&self, kind: LoraKind) -> &[u32] {
+        match kind {
+            LoraKind::A => &self.pos[0],
+            LoraKind::B => &self.pos[1],
+        }
+    }
+
+    /// Sub-slice of this kind's positions falling inside `range`, plus the
+    /// rank offset of its first element.
+    pub fn in_range(&self, kind: LoraKind, range: &Range<usize>) -> (&[u32], usize) {
+        let fam = self.family(kind);
+        let lo = fam.partition_point(|&p| (p as usize) < range.start);
+        let hi = fam.partition_point(|&p| (p as usize) < range.end);
+        (&fam[lo..hi], lo)
+    }
+
+    pub fn count(&self, kind: LoraKind) -> usize {
+        self.family(kind).len()
+    }
+}
+
+/// A sparse update: ascending flat indices with values.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SparseVec {
+    pub idx: Vec<u32>,
+    pub vals: Vec<f32>,
+}
+
+impl SparseVec {
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Restrict to a flat range (segment extraction, paper §3.3).
+    pub fn restrict(&self, range: &Range<usize>) -> SparseVec {
+        let lo = self.idx.partition_point(|&i| (i as usize) < range.start);
+        let hi = self.idx.partition_point(|&i| (i as usize) < range.end);
+        SparseVec { idx: self.idx[lo..hi].to_vec(), vals: self.vals[lo..hi].to_vec() }
+    }
+
+    /// Scatter-add into a dense vector.
+    pub fn add_to(&self, dense: &mut [f32]) {
+        for (&i, &v) in self.idx.iter().zip(&self.vals) {
+            dense[i as usize] += v;
+        }
+    }
+}
+
+fn push_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
+    let b = buf
+        .get(*pos..*pos + 4)
+        .ok_or_else(|| anyhow!("wire: truncated u32 at {pos}"))?;
+    *pos += 4;
+    Ok(u32::from_le_bytes(b.try_into().unwrap()))
+}
+
+/// Encode a sparse update restricted to `range`. `k_hint` = (k_A, k_B)
+/// densities used to pick per-block Rice parameters. Values are quantized
+/// to f16 ON ENCODE — the caller must feed the same quantization into its
+/// residual so error feedback sees what the receiver saw.
+pub fn encode(
+    sv: &SparseVec,
+    range: &Range<usize>,
+    kidx: &KindIndex,
+    k_hint: (f64, f64),
+    encoding: Encoding,
+) -> Result<Vec<u8>> {
+    let mut out = vec![VERSION, if encoding == Encoding::Golomb { 0 } else { 1 }, 2];
+    for (kind, k) in [(LoraKind::A, k_hint.0), (LoraKind::B, k_hint.1)] {
+        let (fam, _rank0) = kidx.in_range(kind, range);
+        // Compact kept indices of this kind into family coordinates.
+        let mut compact = Vec::new();
+        let mut vals = Vec::new();
+        let mut cursor = 0usize;
+        for (&i, &v) in sv.idx.iter().zip(&sv.vals) {
+            if (i as usize) < range.start || (i as usize) >= range.end {
+                continue;
+            }
+            // advance cursor in fam to find i (both ascending)
+            while cursor < fam.len() && fam[cursor] < i {
+                cursor += 1;
+            }
+            if cursor < fam.len() && fam[cursor] == i {
+                compact.push(cursor as u32);
+                vals.push(v);
+                cursor += 1;
+            }
+        }
+        let b = golomb::rice_param_for_density(k);
+        out.push(match kind {
+            LoraKind::A => 0,
+            LoraKind::B => 1,
+        });
+        out.push(b as u8);
+        push_u32(&mut out, compact.len() as u32);
+        let idx_bytes = match encoding {
+            Encoding::Golomb => golomb::encode_indices(&compact, b).into_bytes(),
+            Encoding::Fixed => {
+                let mut w = BitWriter::new();
+                for &c in &compact {
+                    w.write_bits(c as u64, 32);
+                }
+                w.into_bytes()
+            }
+        };
+        push_u32(&mut out, idx_bytes.len() as u32);
+        out.extend_from_slice(&idx_bytes);
+        for &v in &vals {
+            out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Decode a message produced by `encode` for the same (range, kidx).
+pub fn decode(bytes: &[u8], range: &Range<usize>, kidx: &KindIndex) -> Result<SparseVec> {
+    if bytes.len() < 3 || bytes[0] != VERSION {
+        return Err(anyhow!("wire: bad header"));
+    }
+    let encoding = if bytes[1] == 0 { Encoding::Golomb } else { Encoding::Fixed };
+    let n_blocks = bytes[2] as usize;
+    let mut pos = 3usize;
+    // per-block streams are ascending; a 2-way merge beats re-sorting
+    let mut blocks: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n_blocks);
+    for _ in 0..n_blocks {
+        let kind = match bytes.get(pos) {
+            Some(0) => LoraKind::A,
+            Some(1) => LoraKind::B,
+            other => return Err(anyhow!("wire: bad kind {other:?}")),
+        };
+        let b = *bytes.get(pos + 1).ok_or_else(|| anyhow!("wire: truncated"))? as u32;
+        pos += 2;
+        let count = read_u32(bytes, &mut pos)? as usize;
+        let idx_len = read_u32(bytes, &mut pos)? as usize;
+        let idx_bytes = bytes
+            .get(pos..pos + idx_len)
+            .ok_or_else(|| anyhow!("wire: truncated index block"))?;
+        pos += idx_len;
+        let compact = match encoding {
+            Encoding::Golomb => golomb::decode_indices(idx_bytes, count, b)
+                .ok_or_else(|| anyhow!("wire: golomb decode failed"))?,
+            Encoding::Fixed => {
+                let mut r = crate::util::bitstream::BitReader::new(idx_bytes);
+                (0..count)
+                    .map(|_| r.read_bits(32).map(|x| x as u32))
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| anyhow!("wire: fixed decode failed"))?
+            }
+        };
+        let (fam, _rank0) = kidx.in_range(kind, range);
+        for c in &compact {
+            if *c as usize >= fam.len() {
+                return Err(anyhow!("wire: compact index out of family range"));
+            }
+        }
+        let mut block = Vec::with_capacity(count);
+        for i in 0..count {
+            let vb = bytes
+                .get(pos..pos + 2)
+                .ok_or_else(|| anyhow!("wire: truncated values"))?;
+            pos += 2;
+            let v = f16_bits_to_f32(u16::from_le_bytes(vb.try_into().unwrap()));
+            block.push((fam[compact[i] as usize], v));
+        }
+        blocks.push(block);
+    }
+    // merge the (ascending) per-kind streams
+    let total: usize = blocks.iter().map(|b| b.len()).sum();
+    let mut idx = Vec::with_capacity(total);
+    let mut vals = Vec::with_capacity(total);
+    let mut cursors = vec![0usize; blocks.len()];
+    for _ in 0..total {
+        let mut best: Option<usize> = None;
+        for (b, &c) in cursors.iter().enumerate() {
+            if c < blocks[b].len()
+                && best.map_or(true, |bb| blocks[b][c].0 < blocks[bb][cursors[bb]].0)
+            {
+                best = Some(b);
+            }
+        }
+        let b = best.unwrap();
+        let (i, v) = blocks[b][cursors[b]];
+        cursors[b] += 1;
+        idx.push(i);
+        vals.push(v);
+    }
+    Ok(SparseVec { idx, vals })
+}
+
+/// Exact on-the-wire size accounting without building the message
+/// (netsim fast path): header + per-block overhead + index stream + values.
+pub fn encoded_size_estimate(n_a: usize, n_b: usize, k_a: f64, k_b: f64, encoding: Encoding) -> usize {
+    let mut bytes = 3usize;
+    for (n, k) in [(n_a, k_a), (n_b, k_b)] {
+        bytes += 2 + 4 + 4;
+        let idx_bits = match encoding {
+            Encoding::Golomb => {
+                let b = golomb::rice_param_for_density(k);
+                (golomb::expected_bits_per_gap(k, b) * n as f64).ceil() as usize
+            }
+            Encoding::Fixed => 32 * n,
+        };
+        bytes += (idx_bits + 7) / 8 + 2 * n;
+    }
+    bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::half::quantize_f16;
+    use crate::util::propcheck::propcheck;
+
+    fn kinds_interleaved(n: usize, block: usize) -> Vec<LoraKind> {
+        // mimic the real layout: alternating A-blocks and B-blocks
+        (0..n)
+            .map(|i| if (i / block) % 2 == 0 { LoraKind::A } else { LoraKind::B })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_property_full_range() {
+        propcheck(150, |rng| {
+            let n = rng.below(5_000) + 32;
+            let kinds = kinds_interleaved(n, 16);
+            let kidx = KindIndex::new(&kinds);
+            let count = rng.below(n / 2) + 1;
+            let mut idx: Vec<u32> =
+                rng.sample_indices(n, count).iter().map(|&i| i as u32).collect();
+            idx.sort_unstable();
+            let vals: Vec<f32> = idx.iter().map(|_| quantize_f16(rng.normal() as f32)).collect();
+            let sv = SparseVec { idx, vals };
+            let range = 0..n;
+            let enc = encode(&sv, &range, &kidx, (0.3, 0.2), Encoding::Golomb).unwrap();
+            let dec = decode(&enc, &range, &kidx).unwrap();
+            assert_eq!(dec, sv);
+        });
+    }
+
+    #[test]
+    fn roundtrip_segment_ranges() {
+        propcheck(150, |rng| {
+            let n = 4_096;
+            let kinds = kinds_interleaved(n, 64);
+            let kidx = KindIndex::new(&kinds);
+            let lo = rng.below(n - 1);
+            let hi = lo + 1 + rng.below(n - lo - 1);
+            let range = lo..hi;
+            let count = rng.below((hi - lo).min(500)) + 1;
+            let mut idx: Vec<u32> = rng
+                .sample_indices(hi - lo, count.min(hi - lo))
+                .iter()
+                .map(|&i| (lo + i) as u32)
+                .collect();
+            idx.sort_unstable();
+            let vals: Vec<f32> = idx.iter().map(|_| quantize_f16(rng.normal() as f32)).collect();
+            let sv = SparseVec { idx, vals };
+            let enc = encode(&sv, &range, &kidx, (0.5, 0.5), Encoding::Golomb).unwrap();
+            let dec = decode(&enc, &range, &kidx).unwrap();
+            assert_eq!(dec, sv);
+        });
+    }
+
+    #[test]
+    fn fixed_encoding_roundtrips_and_is_larger() {
+        let n = 10_000;
+        let kinds = kinds_interleaved(n, 100);
+        let kidx = KindIndex::new(&kinds);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let mut idx: Vec<u32> = (0..n as u32).filter(|_| rng.next_f64() < 0.1).collect();
+        idx.sort_unstable();
+        let vals: Vec<f32> = idx.iter().map(|_| 0.5f32).collect();
+        let sv = SparseVec { idx, vals };
+        let range = 0..n;
+        let g = encode(&sv, &range, &kidx, (0.1, 0.1), Encoding::Golomb).unwrap();
+        let f = encode(&sv, &range, &kidx, (0.1, 0.1), Encoding::Fixed).unwrap();
+        assert_eq!(decode(&f, &range, &kidx).unwrap(), sv);
+        assert!(g.len() < f.len(), "golomb {} vs fixed {}", g.len(), f.len());
+    }
+
+    #[test]
+    fn size_estimate_close_to_actual() {
+        let n = 50_000;
+        let kinds = kinds_interleaved(n, 500);
+        let kidx = KindIndex::new(&kinds);
+        let mut rng = crate::util::rng::Rng::new(9);
+        let (ka, kb) = (0.2f64, 0.08f64);
+        let mut idx = vec![];
+        for (i, k) in kinds.iter().enumerate() {
+            let p = if *k == LoraKind::A { ka } else { kb };
+            if rng.next_f64() < p {
+                idx.push(i as u32);
+            }
+        }
+        let vals: Vec<f32> = idx.iter().map(|_| 1.0f32).collect();
+        let n_a = idx.iter().filter(|&&i| kinds[i as usize] == LoraKind::A).count();
+        let n_b = idx.len() - n_a;
+        let sv = SparseVec { idx, vals };
+        let enc = encode(&sv, &(0..n), &kidx, (ka, kb), Encoding::Golomb).unwrap();
+        let est = encoded_size_estimate(n_a, n_b, ka, kb, Encoding::Golomb);
+        let rel = (enc.len() as f64 - est as f64).abs() / enc.len() as f64;
+        assert!(rel < 0.05, "actual {} est {}", enc.len(), est);
+    }
+
+    #[test]
+    fn values_quantized_to_f16_on_the_wire() {
+        let kinds = kinds_interleaved(64, 8);
+        let kidx = KindIndex::new(&kinds);
+        let sv = SparseVec { idx: vec![3], vals: vec![0.1f32] }; // 0.1 not f16-exact
+        let range = 0..64;
+        let enc = encode(&sv, &range, &kidx, (0.1, 0.1), Encoding::Golomb).unwrap();
+        let dec = decode(&enc, &range, &kidx).unwrap();
+        assert_eq!(dec.vals[0], quantize_f16(0.1));
+        assert_ne!(dec.vals[0], 0.1f32);
+    }
+
+    #[test]
+    fn sparse_vec_restrict_and_scatter() {
+        let sv = SparseVec { idx: vec![1, 5, 9], vals: vec![1.0, 2.0, 3.0] };
+        let r = sv.restrict(&(2..9));
+        assert_eq!(r.idx, vec![5]);
+        let mut dense = vec![0.0f32; 10];
+        sv.add_to(&mut dense);
+        assert_eq!(dense[5], 2.0);
+        assert_eq!(dense[9], 3.0);
+    }
+
+    #[test]
+    fn corrupt_messages_rejected() {
+        let kinds = kinds_interleaved(64, 8);
+        let kidx = KindIndex::new(&kinds);
+        let sv = SparseVec { idx: vec![3, 10], vals: vec![1.0, -1.0] };
+        let range = 0..64;
+        let enc = encode(&sv, &range, &kidx, (0.2, 0.2), Encoding::Golomb).unwrap();
+        assert!(decode(&enc[..enc.len() - 1], &range, &kidx).is_err());
+        let mut bad = enc.clone();
+        bad[0] = 99;
+        assert!(decode(&bad, &range, &kidx).is_err());
+    }
+}

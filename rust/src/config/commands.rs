@@ -1,0 +1,224 @@
+//! `ecolora` CLI dispatcher.
+//!
+//! Subcommands:
+//!   pretrain  --preset small [--steps 400]           create base checkpoint
+//!   train     --preset small --method fedit [--eco] [...]   one federated run
+//!   repro     --table 1..6 | --fig 2|3 [--preset p] [--scaled]
+//!   netsim    --ul 1 --dl 5 [--bytes-up N --bytes-down N --compute S]
+//!   help
+
+use anyhow::{anyhow, Result};
+
+use crate::baselines::Method;
+use crate::compress::{AdaptiveSparsifier, Encoding, SparsMode};
+use crate::data::PartitionKind;
+use crate::fed::{EcoConfig, FedRunner};
+use crate::netsim::{NetSim, RoundPlan, Scenario};
+use crate::util::cli::Args;
+
+use super::experiments;
+use super::profile::Profile;
+
+const HELP: &str = "\
+ecolora — communication-efficient federated LoRA fine-tuning (EMNLP 2025 reproduction)
+
+USAGE: ecolora <subcommand> [flags]
+
+  pretrain   --preset <p> [--steps N] [--samples N]
+  train      --preset <p> [--method fedit|flora|ffa] [--eco] [--dpo]
+             [--rounds N] [--clients N] [--per-round N] [--local-steps N]
+             [--lr X] [--seed N] [--ns N] [--k-min-a X] [--k-min-b X]
+             [--fixed-k X] [--no-spars] [--no-encoding] [--dense-downlink]
+             [--partition dirichlet|clusters|task|iid] [--target-acc X]
+             [--csv out.csv] [--verbose]
+  repro      --table 1|2|3|4|5|6  or  --fig 2|3   [--preset p] [--scaled]
+  netsim     --ul <mbps> --dl <mbps> --bytes-up N --bytes-down N --compute S
+  version / help
+";
+
+pub fn dispatch() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow!(e))?;
+    match args.subcommand.as_str() {
+        "pretrain" => cmd_pretrain(&args),
+        "train" => cmd_train(&args),
+        "repro" => cmd_repro(&args),
+        "netsim" => cmd_netsim(&args),
+        "version" => {
+            println!("ecolora {}", crate::version());
+            Ok(())
+        }
+        "" | "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown subcommand {other:?}; see `ecolora help`")),
+    }
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let mut profile = Profile::full(args.get_or("preset", "small"));
+    profile.pretrain_steps = args.get_usize("steps", profile.pretrain_steps);
+    profile.n_samples = args.get_usize("samples", profile.n_samples);
+    profile.pretrain_lr = args.get_f64("lr", profile.pretrain_lr as f64) as f32;
+    let path = profile.ensure_pretrained()?;
+    println!("checkpoint: {}", path.display());
+    Ok(())
+}
+
+/// Build a `FedConfig` from CLI flags (shared with `train`).
+pub fn fed_config_from_args(args: &Args) -> Result<crate::fed::FedConfig> {
+    let preset = args.get_or("preset", "small");
+    let mut profile = Profile::full(preset);
+    profile.rounds = args.get_usize("rounds", profile.rounds);
+    profile.n_clients = args.get_usize("clients", profile.n_clients);
+    profile.clients_per_round = args.get_usize("per-round", profile.clients_per_round);
+    profile.local_steps = args.get_usize("local-steps", profile.local_steps);
+    profile.lr = args.get_f64("lr", profile.lr as f64) as f32;
+    profile.seed = args.get_u64("seed", profile.seed);
+    profile.n_samples = args.get_usize("samples", profile.n_samples);
+    profile.ensure_pretrained()?;
+
+    let mut cfg = profile.fed_config();
+    cfg.method = Method::parse(args.get_or("method", "fedit"))
+        .ok_or_else(|| anyhow!("bad --method"))?;
+    cfg.dpo = args.has("dpo");
+    cfg.verbose = args.has("verbose");
+    cfg.target_acc = args.get("target-acc").map(|v| v.parse().unwrap());
+    cfg.partition = match args.get_or("partition", "dirichlet") {
+        "dirichlet" => PartitionKind::DirichletLabels { alpha: args.get_f64("alpha", 0.5) },
+        "clusters" => PartitionKind::DirichletClusters {
+            alpha: args.get_f64("alpha", 0.5),
+            k: args.get_usize("k-clusters", 8),
+        },
+        "task" => PartitionKind::TaskDomain,
+        "iid" => PartitionKind::Iid,
+        other => return Err(anyhow!("bad --partition {other}")),
+    };
+
+    if args.has("eco") {
+        let spars = if args.has("no-spars") {
+            SparsMode::Off
+        } else if let Some(k) = args.get("fixed-k") {
+            SparsMode::Fixed(k.parse().map_err(|_| anyhow!("bad --fixed-k"))?)
+        } else {
+            SparsMode::Adaptive(AdaptiveSparsifier::with_k_mins(
+                args.get_f64("k-min-a", 0.6),
+                args.get_f64("k-min-b", 0.5),
+            ))
+        };
+        cfg.eco = Some(EcoConfig {
+            n_s: args.get_usize("ns", 5),
+            beta: args.get_f64("beta", 0.7),
+            spars,
+            encoding: if args.has("no-encoding") { Encoding::Fixed } else { Encoding::Golomb },
+            downlink_sparse: !args.has("dense-downlink"),
+        });
+    }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = fed_config_from_args(args)?;
+    let label_eco = cfg.eco.is_some();
+    let mut runner = FedRunner::new(cfg)?;
+    let out = runner.run()?;
+    println!(
+        "method={}{} preset={}",
+        runner.cfg.method.name(),
+        if label_eco { "+EcoLoRA" } else { "" },
+        runner.cfg.preset
+    );
+    println!("final loss    : {:.4}", out.log.final_loss());
+    println!("final MC acc  : {:.4}", out.final_acc);
+    if let Some(m) = out.final_margin {
+        println!("reward margin : {m:.4}");
+    }
+    println!(
+        "upload        : {:.3} M params / {:.3} MB",
+        out.log.total_up().params_m(),
+        out.log.total_up().bytes as f64 / 1e6
+    );
+    println!(
+        "download      : {:.3} M params / {:.3} MB",
+        out.log.total_down().params_m(),
+        out.log.total_down().bytes as f64 / 1e6
+    );
+    if let Some(t) = out.reached_target_at {
+        println!("target reached: round {t}");
+    }
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, out.log.to_csv())?;
+        println!("round log     : {path}");
+    }
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let preset = args.get_or("preset", "small");
+    let profile = if args.has("scaled") {
+        Profile::scaled(preset)
+    } else {
+        Profile::full(preset)
+    };
+    if let Some(t) = args.get("table") {
+        let table = match t {
+            "1" => experiments::table1(&profile)?,
+            "2" => {
+                let p = if preset.ends_with("_va") {
+                    profile
+                } else {
+                    // VA task uses the r=8/α=16 preset (paper Appendix A)
+                    let mut p = profile.clone();
+                    p.preset = "small_va".into();
+                    p
+                };
+                experiments::table2(&p)?
+            }
+            "3" => experiments::table3(&profile, args.get_f64("target-frac", 0.9))?,
+            "4" => experiments::table4(&profile, args.get_f64("target-frac", 0.9))?,
+            "5" => experiments::table5(&profile)?,
+            "6" => experiments::table6(&profile)?,
+            other => return Err(anyhow!("unknown --table {other}")),
+        };
+        table.print();
+        return Ok(());
+    }
+    if let Some(f) = args.get("fig") {
+        match f {
+            "2" => {
+                let (table, log) = experiments::fig2(&profile)?;
+                table.print();
+                if let Some(path) = args.get("csv") {
+                    std::fs::write(path, log.to_csv())?;
+                }
+            }
+            "3" => experiments::fig3(&profile)?.print(),
+            other => return Err(anyhow!("unknown --fig {other}")),
+        }
+        return Ok(());
+    }
+    Err(anyhow!("repro needs --table N or --fig N"))
+}
+
+fn cmd_netsim(args: &Args) -> Result<()> {
+    let scenario = Scenario {
+        name: "custom",
+        ul_mbps: args.get_f64("ul", 1.0),
+        dl_mbps: args.get_f64("dl", 5.0),
+        latency_s: args.get_f64("latency", 0.05),
+    };
+    let n = args.get_usize("clients", 10);
+    let plan = RoundPlan {
+        dl_bytes: args.get_usize("bytes-down", 1_000_000),
+        compute_s: args.get_f64("compute", 1.0),
+        ul_bytes: args.get_usize("bytes-up", 1_000_000),
+    };
+    let mut sim = NetSim::homogeneous(n, scenario.link());
+    let clients: Vec<usize> = (0..n).collect();
+    let t = sim.run_round(&clients, &vec![plan; n]);
+    println!(
+        "round {:.2}s = compute {:.2}s + comm {:.2}s (mean dl {:.2}s, mean ul {:.2}s)",
+        t.round_s, t.compute_s, t.comm_s, t.mean_dl_s, t.mean_ul_s
+    );
+    Ok(())
+}

@@ -1,0 +1,310 @@
+//! One function per paper table/figure (DESIGN.md §Experiment index).
+//! Shared by `ecolora repro`, the examples, and `rust/benches/` (which call
+//! these with `Profile::scaled`).
+
+use anyhow::Result;
+
+use crate::baselines::Method;
+use crate::bench::Table;
+use crate::compress::{adaptive::KSchedule, AdaptiveSparsifier, Encoding, SparsMode};
+use crate::data::PartitionKind;
+use crate::fed::{EcoConfig, FedConfig, FedOutcome, FedRunner};
+use crate::metrics::RunLog;
+use crate::netsim::{NetSim, RoundPlan, Scenario, PAPER_SCENARIOS};
+
+use super::profile::Profile;
+
+/// Run one configuration to completion.
+pub fn run(cfg: FedConfig) -> Result<FedOutcome> {
+    FedRunner::new(cfg)?.run()
+}
+
+/// Replay a training log's communication through a bandwidth scenario;
+/// returns (total comm seconds, total compute seconds).
+pub fn replay_network(log: &RunLog, n_t: usize, scenario: Scenario) -> (f64, f64) {
+    let mut sim = NetSim::homogeneous(n_t, scenario.link());
+    let clients: Vec<usize> = (0..n_t).collect();
+    let (mut comm, mut compute) = (0.0, 0.0);
+    for r in &log.rounds {
+        let plan = RoundPlan {
+            dl_bytes: (r.down.bytes as usize) / n_t.max(1),
+            compute_s: r.compute_s,
+            ul_bytes: (r.up.bytes as usize) / n_t.max(1),
+        };
+        let t = sim.run_round(&clients, &vec![plan; n_t]);
+        comm += t.comm_s;
+        compute += t.compute_s;
+    }
+    (comm, compute)
+}
+
+fn fmt_m(params: u64) -> String {
+    format!("{:.3}", params as f64 / 1e6)
+}
+
+fn eco_default() -> EcoConfig {
+    EcoConfig::default()
+}
+
+/// Table 1: accuracy + upload/total parameters for FedIT / FLoRA /
+/// FFA-LoRA, with and without EcoLoRA, on the two dataset stand-ins.
+pub fn table1(profile: &Profile) -> Result<Table> {
+    profile.ensure_pretrained()?;
+    let mut table = Table::new(
+        &format!("Table 1 — accuracy & communication parameters (M), preset {}", profile.preset),
+        &["Dataset", "Method", "Acc", "Upload P.", "Total P."],
+    );
+    let datasets: [(&str, PartitionKind); 2] = [
+        ("synth-dolly", PartitionKind::DirichletLabels { alpha: 0.5 }),
+        ("synth-alpaca", PartitionKind::DirichletClusters { alpha: 0.5, k: 8 }),
+    ];
+    for (ds_name, part) in datasets {
+        for method in [Method::FedIt, Method::FLoRa, Method::FfaLora] {
+            for eco in [None, Some(eco_default())] {
+                let mut cfg = profile.fed_config();
+                cfg.method = method;
+                cfg.partition = part;
+                cfg.eco = eco;
+                let out = run(cfg)?;
+                table.row(vec![
+                    ds_name.into(),
+                    format!("{}{}", method.name(), if eco.is_some() { " w/ EcoLoRA" } else { "" }),
+                    format!("{:.3}", out.final_acc),
+                    fmt_m(out.log.total_up().params),
+                    fmt_m(out.log.total_params()),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
+/// Table 2: federated DPO (value alignment) with and without EcoLoRA.
+pub fn table2(profile: &Profile) -> Result<Table> {
+    profile.ensure_pretrained()?;
+    let mut table = Table::new(
+        &format!("Table 2 — federated DPO ± EcoLoRA, preset {}", profile.preset),
+        &["Method", "Reward margin", "MC Acc", "Upload P.", "Total P."],
+    );
+    for eco in [None, Some(eco_default())] {
+        let mut cfg = profile.fed_config();
+        cfg.dpo = true;
+        cfg.eco = eco;
+        let out = run(cfg)?;
+        table.row(vec![
+            format!("DPO{}", if eco.is_some() { " w/ EcoLoRA" } else { "" }),
+            format!("{:.4}", out.final_margin.unwrap_or(f64::NAN)),
+            format!("{:.3}", out.final_acc),
+            fmt_m(out.log.total_up().params),
+            fmt_m(out.log.total_params()),
+        ]);
+    }
+    Ok(table)
+}
+
+/// The Table 3 ablation variants of EcoLoRA on FedIT.
+pub fn ablation_variants() -> Vec<(&'static str, EcoConfig)> {
+    vec![
+        ("Full", eco_default()),
+        ("w/o R.R. Segment", EcoConfig { n_s: 1, ..eco_default() }),
+        ("w/o Sparsification", EcoConfig { spars: SparsMode::Off, ..eco_default() }),
+        ("w/ Fixed Sparsification", EcoConfig { spars: SparsMode::Fixed(0.72), ..eco_default() }),
+        ("w/o Encoding", EcoConfig { encoding: Encoding::Fixed, ..eco_default() }),
+    ]
+}
+
+/// Table 3: per-component ablation — accuracy and the communication time
+/// needed to reach the target accuracy (1/5 Mbps scenario, as in §4.3).
+pub fn table3(profile: &Profile, target_frac: f64) -> Result<Table> {
+    profile.ensure_pretrained()?;
+    // Reference run fixes the accuracy target.
+    let mut ref_cfg = profile.fed_config();
+    ref_cfg.eco = Some(eco_default());
+    let ref_out = run(ref_cfg)?;
+    let target = ref_out.final_acc * target_frac;
+
+    let scenario = PAPER_SCENARIOS[1]; // 1/5 Mbps
+    let mut table = Table::new(
+        &format!(
+            "Table 3 — ablations: comm time (s) to reach acc {:.3} @ {} (preset {})",
+            target, scenario.name, profile.preset
+        ),
+        &["Method", "Acc", "Upload Time", "Total Time"],
+    );
+    for (name, eco) in ablation_variants() {
+        let mut cfg = profile.fed_config();
+        cfg.eco = Some(eco);
+        cfg.target_acc = Some(target);
+        cfg.rounds = profile.rounds * 2; // allow slower variants to get there
+        let out = run(cfg)?;
+        let reached = out.reached_target_at.is_some();
+        let (comm, compute) = replay_network(&out.log, profile.clients_per_round, scenario);
+        // upload share of comm time: weight by byte ratio
+        let up_bytes = out.log.total_up().bytes as f64;
+        let down_bytes = out.log.total_down().bytes as f64;
+        // scale: uplink is ~5x slower per byte in this scenario
+        let up_cost = up_bytes / scenario.ul_mbps;
+        let down_cost = down_bytes / scenario.dl_mbps;
+        let upload_time = comm * up_cost / (up_cost + down_cost).max(1e-9);
+        table.row(vec![
+            name.into(),
+            format!("{:.3}", out.final_acc),
+            if reached { format!("{upload_time:.1}") } else { "-".into() },
+            if reached { format!("{:.1}", comm + compute) } else { "-".into() },
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 4: compression levels — N_s and (k_min^A, k_min^B) sweeps; comm
+/// parameters to reach the target accuracy.
+pub fn table4(profile: &Profile, target_frac: f64) -> Result<Table> {
+    profile.ensure_pretrained()?;
+    let mut ref_cfg = profile.fed_config();
+    ref_cfg.eco = Some(eco_default());
+    let ref_out = run(ref_cfg)?;
+    let target = ref_out.final_acc * target_frac;
+
+    let mut table = Table::new(
+        &format!("Table 4 — compression levels (target acc {:.3}, preset {})", target, profile.preset),
+        &["Config", "Acc", "Upload P.", "Total P."],
+    );
+    let grid: Vec<(usize, f64, f64)> = vec![
+        (3, 0.6, 0.5),
+        (5, 0.6, 0.5),
+        (10, 0.6, 0.5),
+        (5, 0.6, 0.25),
+        (5, 0.3, 0.5),
+    ];
+    for (n_s, ka, kb) in grid {
+        let mut cfg = profile.fed_config();
+        cfg.eco = Some(EcoConfig {
+            n_s,
+            spars: SparsMode::Adaptive(AdaptiveSparsifier::with_k_mins(ka, kb)),
+            ..eco_default()
+        });
+        cfg.target_acc = Some(target);
+        cfg.rounds = profile.rounds * 2;
+        let out = run(cfg)?;
+        let reached = out.reached_target_at.is_some();
+        table.row(vec![
+            format!("{{N_s={n_s}, kA={ka}, kB={kb}}}"),
+            format!("{:.3}", out.final_acc),
+            if reached { fmt_m(out.log.total_up().params) } else { "-".into() },
+            if reached { fmt_m(out.log.total_params()) } else { "-".into() },
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 5: fixed top-k vs adaptive sparsification at matched budgets.
+pub fn table5(profile: &Profile) -> Result<Table> {
+    profile.ensure_pretrained()?;
+    let mut table = Table::new(
+        &format!("Table 5 — fixed top-k vs adaptive, preset {}", profile.preset),
+        &["Threshold k", "Fixed Top-k Acc", "Adaptive Acc"],
+    );
+    for k in [0.9, 0.7, 0.6, 0.5] {
+        let run_mode = |spars: SparsMode| -> Result<f64> {
+            let mut cfg = profile.fed_config();
+            cfg.eco = Some(EcoConfig { spars, ..eco_default() });
+            Ok(run(cfg)?.final_acc)
+        };
+        let fixed_acc = run_mode(SparsMode::Fixed(k))?;
+        // adaptive with the same budget ceiling: k_max = k, family-split mins
+        let adaptive = AdaptiveSparsifier {
+            a: KSchedule { k_min: (k - 0.15).max(0.05), k_max: k, gamma: 1.0 },
+            b: KSchedule { k_min: (k - 0.25).max(0.05), k_max: k, gamma: 2.0 },
+        };
+        let adaptive_acc = run_mode(SparsMode::Adaptive(adaptive))?;
+        table.row(vec![
+            format!("{k:.1}"),
+            format!("{fixed_acc:.3}"),
+            format!("{adaptive_acc:.3}"),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Table 6: task-domain non-IID — all methods ± EcoLoRA.
+pub fn table6(profile: &Profile) -> Result<Table> {
+    profile.ensure_pretrained()?;
+    let mut table = Table::new(
+        &format!("Table 6 — task-domain non-IID, preset {}", profile.preset),
+        &["Method", "Acc", "Upload P.", "Total P."],
+    );
+    for method in [Method::FedIt, Method::FLoRa, Method::FfaLora] {
+        for eco in [None, Some(eco_default())] {
+            let mut cfg = profile.fed_config();
+            cfg.method = method;
+            cfg.partition = PartitionKind::TaskDomain;
+            cfg.eco = eco;
+            let out = run(cfg)?;
+            table.row(vec![
+                format!("{}{}", method.name(), if eco.is_some() { " w/ EcoLoRA" } else { "" }),
+                format!("{:.3}", out.final_acc),
+                fmt_m(out.log.total_up().params),
+                fmt_m(out.log.total_params()),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+/// Figure 2: LoRA A/B sparsity evolution (Gini per round).
+pub fn fig2(profile: &Profile) -> Result<(Table, RunLog)> {
+    profile.ensure_pretrained()?;
+    let mut cfg = profile.fed_config();
+    cfg.eco = Some(eco_default());
+    let out = run(cfg)?;
+    let mut table = Table::new(
+        &format!("Figure 2 — Gini coefficient of LoRA matrices, preset {}", profile.preset),
+        &["Round", "Gini A", "Gini B", "k_A", "k_B"],
+    );
+    let n = out.log.rounds.len();
+    for r in out.log.rounds.iter().filter(|r| {
+        r.round == 0 || (r.round + 1) % (n / 8).max(1) == 0
+    }) {
+        table.row(vec![
+            r.round.to_string(),
+            format!("{:.3}", r.gini_a),
+            format!("{:.3}", r.gini_b),
+            format!("{:.2}", r.k_a),
+            format!("{:.2}", r.k_b),
+        ]);
+    }
+    Ok((table, out.log))
+}
+
+/// Figure 3: computation vs communication time under the four bandwidth
+/// scenarios, FedIT ± EcoLoRA.
+pub fn fig3(profile: &Profile) -> Result<Table> {
+    profile.ensure_pretrained()?;
+    let run_log = |eco: Option<EcoConfig>| -> Result<RunLog> {
+        let mut cfg = profile.fed_config();
+        cfg.eco = eco;
+        Ok(run(cfg)?.log)
+    };
+    let dense = run_log(None)?;
+    let eco = run_log(Some(eco_default()))?;
+
+    let mut table = Table::new(
+        &format!("Figure 3 — compute vs comm time (s) across networks, preset {}", profile.preset),
+        &["UL/DL", "Method", "Compute", "Comm", "Total", "Comm %"],
+    );
+    for sc in PAPER_SCENARIOS {
+        for (name, log) in [("FedIT", &dense), ("FedIT w/ EcoLoRA", &eco)] {
+            let (comm, compute) = replay_network(log, profile.clients_per_round, sc);
+            let total = comm + compute;
+            table.row(vec![
+                sc.name.into(),
+                name.into(),
+                format!("{compute:.1}"),
+                format!("{comm:.1}"),
+                format!("{total:.1}"),
+                format!("{:.0}%", 100.0 * comm / total.max(1e-9)),
+            ]);
+        }
+    }
+    Ok(table)
+}

@@ -1,0 +1,11 @@
+//! Experiment configuration & CLI command layer.
+//!
+//! * `profile` — sizing profiles (full paper-scale vs scaled bench runs)
+//!   shared by the CLI, the examples and `rust/benches/`.
+//! * `experiments` — one function per paper table/figure; each runs the
+//!   necessary federated configurations and renders a `bench::Table`.
+//! * `commands` — the `ecolora` CLI dispatcher.
+
+pub mod commands;
+pub mod experiments;
+pub mod profile;

@@ -1,0 +1,145 @@
+//! Experiment sizing profiles.
+//!
+//! `full()` mirrors the paper's FL setting (Appendix A: 100 clients, 10
+//! sampled per round, 40 rounds, Dirichlet α = 0.5) at this testbed's
+//! model scale; `scaled()` shrinks rounds/fleet for `cargo bench` and CI.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::corpus;
+use crate::fed::{session::Session, FedConfig};
+use crate::util::rng::Rng;
+
+/// Sizing profile shared by CLI / examples / benches.
+#[derive(Debug, Clone)]
+pub struct Profile {
+    pub preset: String,
+    pub rounds: usize,
+    pub n_clients: usize,
+    pub clients_per_round: usize,
+    pub local_steps: usize,
+    pub n_samples: usize,
+    pub eval_items: usize,
+    pub lr: f32,
+    pub pretrain_lr: f32,
+    pub seed: u64,
+    pub pretrain_steps: usize,
+    pub artifacts_dir: PathBuf,
+}
+
+impl Profile {
+    /// Paper-shaped run at testbed model scale.
+    pub fn full(preset: &str) -> Profile {
+        Profile {
+            preset: preset.to_string(),
+            rounds: 40,
+            n_clients: 100,
+            clients_per_round: 10,
+            local_steps: 5,
+            n_samples: 4000,
+            eval_items: 200,
+            lr: 0.6,
+            pretrain_lr: 0.8,
+            seed: 42,
+            pretrain_steps: 4000,
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+
+    /// Bench-sized profile (minutes, not hours).
+    pub fn scaled(preset: &str) -> Profile {
+        Profile {
+            rounds: 6,
+            n_clients: 20,
+            clients_per_round: 5,
+            local_steps: 3,
+            n_samples: 600,
+            eval_items: 60,
+            pretrain_steps: 1000,
+            ..Profile::full(preset)
+        }
+    }
+
+    /// Base `FedConfig` from this profile (method/eco set by the caller).
+    pub fn fed_config(&self) -> FedConfig {
+        let mut cfg = FedConfig::paper_default(&self.preset);
+        cfg.artifacts_dir = self.artifacts_dir.clone();
+        cfg.rounds = self.rounds;
+        cfg.n_clients = self.n_clients;
+        cfg.clients_per_round = self.clients_per_round;
+        cfg.local_steps = self.local_steps;
+        cfg.n_samples = self.n_samples;
+        cfg.eval_items = self.eval_items;
+        cfg.lr = self.lr;
+        cfg.seed = self.seed;
+        cfg.base_checkpoint = Some(self.checkpoint_path());
+        cfg
+    }
+
+    pub fn checkpoint_path(&self) -> PathBuf {
+        self.artifacts_dir
+            .join(format!("pretrained_{}_{}.bin", self.preset, self.pretrain_steps))
+    }
+
+    /// Pretrain the base model on the synthetic corpus and cache the
+    /// checkpoint (no-op when the checkpoint already exists). This stands
+    /// in for the public pre-trained LLM the paper starts from.
+    pub fn ensure_pretrained(&self) -> Result<PathBuf> {
+        let path = self.checkpoint_path();
+        if path.exists() {
+            return Ok(path);
+        }
+        let mut rng = Rng::new(self.seed ^ 0xBA5E);
+        let mut session = Session::new(&self.artifacts_dir, &self.preset, &mut rng)?;
+        let mcfg = session.schema.config.clone();
+        let ccfg = corpus::CorpusCfg::new(mcfg.vocab, mcfg.seq_len, 8);
+        let ds = corpus::generate(&mut rng, self.n_samples.max(1000), ccfg);
+        let mut data = crate::data::ClientData::new((0..ds.samples.len()).collect());
+        let mut loss = f32::NAN;
+        let t0 = std::time::Instant::now();
+        for step in 0..self.pretrain_steps {
+            let batch = data.next_batch(&ds, mcfg.batch, &mut rng);
+            loss = session.pretrain_step(&batch, self.pretrain_lr)?;
+            if step % 100 == 0 {
+                eprintln!("pretrain[{}] step {step}: loss {loss:.4}", self.preset);
+            }
+        }
+        eprintln!(
+            "pretrain[{}] done: {} steps, final loss {loss:.4}, {:.1}s",
+            self.preset,
+            self.pretrain_steps,
+            t0.elapsed().as_secs_f64()
+        );
+        session.save_base(&path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_are_consistent() {
+        let f = Profile::full("small");
+        assert_eq!(f.n_clients, 100);
+        assert_eq!(f.clients_per_round, 10);
+        assert_eq!(f.rounds, 40);
+        let s = Profile::scaled("small");
+        assert!(s.rounds < f.rounds && s.n_clients < f.n_clients);
+        let cfg = s.fed_config();
+        assert_eq!(cfg.rounds, s.rounds);
+        assert!(cfg.base_checkpoint.is_some());
+    }
+
+    #[test]
+    fn checkpoint_path_distinguishes_presets_and_budgets() {
+        let a = Profile::full("small").checkpoint_path();
+        let b = Profile::full("medium").checkpoint_path();
+        let c = Profile::scaled("small").checkpoint_path();
+        assert_ne!(a, b);
+        assert_ne!(a, c); // different pretrain budget
+    }
+}

@@ -1,0 +1,163 @@
+//! KMeans clustering with k-means++ seeding (Lloyd's algorithm) — used to
+//! derive synthetic categories from TF-IDF vectors (paper Appendix A).
+
+use crate::util::linalg::dist_sq;
+use crate::util::rng::Rng;
+
+/// Clustering result.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub centroids: Vec<Vec<f32>>,
+    pub assignment: Vec<usize>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+/// Run KMeans. `points` must be non-empty rows of equal dimension.
+pub fn kmeans(points: &[Vec<f32>], k: usize, max_iters: usize, rng: &mut Rng) -> KMeans {
+    assert!(!points.is_empty() && k >= 1);
+    let k = k.min(points.len());
+    let dim = points[0].len();
+
+    // -- k-means++ seeding ---------------------------------------------------
+    let mut centroids: Vec<Vec<f32>> = Vec::with_capacity(k);
+    centroids.push(points[rng.below(points.len())].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| dist_sq(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(points.len())
+        } else {
+            rng.categorical(&d2)
+        };
+        centroids.push(points[next].clone());
+        let c = centroids.last().unwrap();
+        for (d, p) in d2.iter_mut().zip(points) {
+            *d = d.min(dist_sq(p, c));
+        }
+    }
+
+    // -- Lloyd iterations ----------------------------------------------------
+    let mut assignment = vec![0usize; points.len()];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // assign
+        let mut new_inertia = 0.0;
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let (mut best, mut bd) = (0usize, f64::INFINITY);
+            for (c, cent) in centroids.iter().enumerate() {
+                let d = dist_sq(p, cent);
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+            new_inertia += bd;
+        }
+        inertia = new_inertia;
+        if !changed && it > 0 {
+            break;
+        }
+        // update
+        let mut sums = vec![vec![0.0f64; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (p, &a) in points.iter().zip(&assignment) {
+            counts[a] += 1;
+            for (s, &x) in sums[a].iter_mut().zip(p) {
+                *s += x as f64;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // re-seed empty cluster at the farthest point
+                let far = points
+                    .iter()
+                    .enumerate()
+                    .max_by(|(_, a), (_, b)| {
+                        dist_sq(a, &centroids[assignment[0]])
+                            .partial_cmp(&dist_sq(b, &centroids[assignment[0]]))
+                            .unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                centroids[c] = points[far].clone();
+            } else {
+                for (dst, s) in centroids[c].iter_mut().zip(&sums[c]) {
+                    *dst = (*s / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+    KMeans { centroids, assignment, inertia, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(rng: &mut Rng, per: usize, centers: &[[f32; 2]], spread: f32) -> Vec<Vec<f32>> {
+        let mut pts = vec![];
+        for c in centers {
+            for _ in 0..per {
+                pts.push(vec![
+                    c[0] + spread * rng.normal() as f32,
+                    c[1] + spread * rng.normal() as f32,
+                ]);
+            }
+        }
+        pts
+    }
+
+    #[test]
+    fn separates_well_separated_blobs() {
+        let mut rng = Rng::new(0);
+        let pts = blobs(&mut rng, 50, &[[0.0, 0.0], [10.0, 0.0], [0.0, 10.0]], 0.3);
+        let km = kmeans(&pts, 3, 50, &mut rng);
+        // each blob maps to exactly one cluster
+        for b in 0..3 {
+            let assigns: Vec<usize> = (b * 50..(b + 1) * 50).map(|i| km.assignment[i]).collect();
+            assert!(assigns.iter().all(|&a| a == assigns[0]), "blob {b} split");
+        }
+        // and clusters are distinct
+        assert_ne!(km.assignment[0], km.assignment[50]);
+        assert_ne!(km.assignment[50], km.assignment[100]);
+        assert!(km.inertia < 100.0);
+    }
+
+    #[test]
+    fn inertia_nonincreasing_in_k() {
+        let mut rng = Rng::new(1);
+        let pts = blobs(&mut rng, 40, &[[0.0, 0.0], [5.0, 5.0]], 1.0);
+        let mut last = f64::INFINITY;
+        for k in [1, 2, 4, 8] {
+            let km = kmeans(&pts, k, 50, &mut Rng::new(7));
+            assert!(km.inertia <= last + 1e-6, "k={k}");
+            last = km.inertia;
+        }
+    }
+
+    #[test]
+    fn k_clamped_to_n_points() {
+        let mut rng = Rng::new(2);
+        let pts = vec![vec![0.0f32, 0.0], vec![1.0, 1.0]];
+        let km = kmeans(&pts, 10, 10, &mut rng);
+        assert_eq!(km.centroids.len(), 2);
+        assert!(km.assignment.iter().all(|&a| a < 2));
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let mut r1 = Rng::new(9);
+        let pts = blobs(&mut r1, 30, &[[0.0, 0.0], [8.0, 8.0]], 0.5);
+        let a = kmeans(&pts, 2, 50, &mut Rng::new(5));
+        let b = kmeans(&pts, 2, 50, &mut Rng::new(5));
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

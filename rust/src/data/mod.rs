@@ -1,0 +1,148 @@
+//! Data layer: synthetic corpus, non-IID partitioners, TF-IDF + KMeans
+//! synthetic categories, preference pairs, and client-side batching.
+
+pub mod corpus;
+pub mod kmeans;
+pub mod partition;
+pub mod preference;
+pub mod tfidf;
+
+pub use corpus::{CorpusCfg, Dataset, McItem, Sample};
+
+use crate::util::rng::Rng;
+
+/// How clients are carved from the corpus (paper Appendix A).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PartitionKind {
+    /// Dirichlet(α) over the corpus's true category labels (Dolly-style).
+    DirichletLabels { alpha: f64 },
+    /// Dirichlet(α) over TF-IDF + KMeans synthetic categories
+    /// (Alpaca-style; the true labels are ignored).
+    DirichletClusters { alpha: f64, k: usize },
+    /// One task domain per client (Table 6).
+    TaskDomain,
+    /// IID control.
+    Iid,
+}
+
+/// Build the per-client sample-index partition.
+pub fn partition_dataset(
+    ds: &Dataset,
+    kind: PartitionKind,
+    n_clients: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let labels: Vec<usize> = ds.samples.iter().map(|s| s.category).collect();
+    match kind {
+        PartitionKind::DirichletLabels { alpha } => {
+            partition::dirichlet(&labels, n_clients, alpha, rng)
+        }
+        PartitionKind::DirichletClusters { alpha, k } => {
+            let docs: Vec<Vec<i32>> = ds.samples.iter().map(|s| s.tokens.clone()).collect();
+            let tf = tfidf::tfidf(&docs, ds.cfg.vocab, corpus::CONTENT0);
+            let km = kmeans::kmeans(&tf.vectors, k, 25, rng);
+            partition::dirichlet(&km.assignment, n_clients, alpha, rng)
+        }
+        PartitionKind::TaskDomain => partition::task_domain(&labels, n_clients, rng),
+        PartitionKind::Iid => partition::iid(ds.samples.len(), n_clients, rng),
+    }
+}
+
+/// One client's local data view with epoch-shuffled batch iteration.
+#[derive(Debug, Clone)]
+pub struct ClientData {
+    pub indices: Vec<usize>,
+    cursor: usize,
+    order: Vec<usize>,
+}
+
+impl ClientData {
+    pub fn new(indices: Vec<usize>) -> Self {
+        let order = (0..indices.len()).collect();
+        ClientData { indices, cursor: 0, order }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Next batch of `batch` rows, flattened [batch * seq_tokens] i32,
+    /// cycling with reshuffle at epoch boundaries. Short clients repeat
+    /// samples (standard practice; keeps batch shapes static for XLA).
+    pub fn next_batch(&mut self, ds: &Dataset, batch: usize, rng: &mut Rng) -> Vec<i32> {
+        let seq = ds.cfg.seq_tokens;
+        let mut out = Vec::with_capacity(batch * seq);
+        for _ in 0..batch {
+            if self.indices.is_empty() {
+                // degenerate client: PAD-only rows contribute zero loss
+                out.extend(std::iter::repeat(corpus::PAD).take(seq));
+                continue;
+            }
+            if self.cursor >= self.order.len() {
+                self.cursor = 0;
+                rng.shuffle(&mut self.order);
+            }
+            let s = self.indices[self.order[self.cursor]];
+            self.cursor += 1;
+            out.extend_from_slice(&ds.samples[s].tokens);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dataset() -> Dataset {
+        let cfg = CorpusCfg::new(256, 48, 8);
+        corpus::generate(&mut Rng::new(0), 400, cfg)
+    }
+
+    #[test]
+    fn cluster_partition_covers_dataset() {
+        let ds = dataset();
+        let mut rng = Rng::new(1);
+        let p = partition_dataset(
+            &ds,
+            PartitionKind::DirichletClusters { alpha: 0.5, k: 8 },
+            20,
+            &mut rng,
+        );
+        let total: usize = p.iter().map(|c| c.len()).sum();
+        assert_eq!(total, ds.samples.len());
+    }
+
+    #[test]
+    fn batches_have_static_shape_and_cycle() {
+        let ds = dataset();
+        let mut rng = Rng::new(2);
+        let mut cd = ClientData::new(vec![0, 1, 2]);
+        let seq = ds.cfg.seq_tokens;
+        for _ in 0..5 {
+            let b = cd.next_batch(&ds, 8, &mut rng);
+            assert_eq!(b.len(), 8 * seq);
+        }
+    }
+
+    #[test]
+    fn empty_client_yields_pad_batches() {
+        let ds = dataset();
+        let mut rng = Rng::new(3);
+        let mut cd = ClientData::new(vec![]);
+        let b = cd.next_batch(&ds, 4, &mut rng);
+        assert!(b.iter().all(|&t| t == corpus::PAD));
+    }
+
+    #[test]
+    fn task_domain_partition_routes_by_category() {
+        let ds = dataset();
+        let mut rng = Rng::new(4);
+        let p = partition_dataset(&ds, PartitionKind::TaskDomain, 16, &mut rng);
+        for (c, client) in p.iter().enumerate() {
+            for &s in client {
+                assert_eq!(ds.samples[s].category, c % 8);
+            }
+        }
+    }
+}

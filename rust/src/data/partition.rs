@@ -1,0 +1,167 @@
+//! Non-IID client partitioners (paper Appendix A):
+//!
+//! * `dirichlet` — Dirichlet(α)-weighted allocation over category labels
+//!   (α = 0.5 in the paper); the Dolly-style split.
+//! * `task_domain` — each client draws from a single category (the
+//!   Table 6 / Appendix C extreme-heterogeneity split).
+//! * `iid` — uniform shuffle baseline.
+//!
+//! All partitioners return per-client sample-index lists; every sample is
+//! assigned to exactly one client.
+
+use crate::util::rng::Rng;
+
+/// Dirichlet non-IID split: for each category, the category's samples are
+/// distributed across clients with proportions ~ Dirichlet(alpha).
+pub fn dirichlet(labels: &[usize], n_clients: usize, alpha: f64, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0);
+    let n_categories = labels.iter().max().map_or(0, |m| m + 1);
+    let mut clients: Vec<Vec<usize>> = vec![vec![]; n_clients];
+    for cat in 0..n_categories {
+        let members: Vec<usize> =
+            (0..labels.len()).filter(|&i| labels[i] == cat).collect();
+        if members.is_empty() {
+            continue;
+        }
+        let props = rng.dirichlet(alpha, n_clients);
+        // multinomial assignment by per-sample categorical draw keeps the
+        // expected proportions while assigning every sample exactly once
+        for &s in &members {
+            clients[rng.categorical(&props)].push(s);
+        }
+    }
+    clients
+}
+
+/// Task-domain split: client i draws only from category i mod n_categories.
+pub fn task_domain(labels: &[usize], n_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let n_categories = labels.iter().max().map_or(0, |m| m + 1).max(1);
+    let mut per_cat: Vec<Vec<usize>> = vec![vec![]; n_categories];
+    for (i, &l) in labels.iter().enumerate() {
+        per_cat[l].push(i);
+    }
+    let mut clients: Vec<Vec<usize>> = vec![vec![]; n_clients];
+    // clients of the same category split that category's samples evenly
+    for (cat, members) in per_cat.iter_mut().enumerate() {
+        rng.shuffle(members);
+        let owners: Vec<usize> =
+            (0..n_clients).filter(|c| c % n_categories == cat).collect();
+        if owners.is_empty() {
+            continue;
+        }
+        for (j, &s) in members.iter().enumerate() {
+            clients[owners[j % owners.len()]].push(s);
+        }
+    }
+    clients
+}
+
+/// IID split: shuffle, deal round-robin.
+pub fn iid(n_samples: usize, n_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    let mut idx: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut idx);
+    let mut clients: Vec<Vec<usize>> = vec![vec![]; n_clients];
+    for (j, s) in idx.into_iter().enumerate() {
+        clients[j % n_clients].push(s);
+    }
+    clients
+}
+
+/// Heterogeneity diagnostic: mean over clients of the max category share
+/// (1.0 = every client single-category, 1/C = perfectly mixed).
+pub fn label_skew(partition: &[Vec<usize>], labels: &[usize]) -> f64 {
+    let n_categories = labels.iter().max().map_or(0, |m| m + 1).max(1);
+    let mut total = 0.0;
+    let mut counted = 0usize;
+    for client in partition {
+        if client.is_empty() {
+            continue;
+        }
+        let mut counts = vec![0usize; n_categories];
+        for &s in client {
+            counts[labels[s]] += 1;
+        }
+        total += *counts.iter().max().unwrap() as f64 / client.len() as f64;
+        counted += 1;
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        total / counted as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn labels(n: usize, c: usize, rng: &mut Rng) -> Vec<usize> {
+        (0..n).map(|_| rng.below(c)).collect()
+    }
+
+    fn assert_exact_cover(partition: &[Vec<usize>], n: usize) {
+        let mut seen = vec![false; n];
+        for client in partition {
+            for &s in client {
+                assert!(!seen[s], "sample {s} assigned twice");
+                seen[s] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "every sample assigned");
+    }
+
+    #[test]
+    fn dirichlet_covers_every_sample() {
+        let mut rng = Rng::new(0);
+        let l = labels(5_000, 8, &mut rng);
+        let p = dirichlet(&l, 100, 0.5, &mut rng);
+        assert_eq!(p.len(), 100);
+        assert_exact_cover(&p, l.len());
+    }
+
+    #[test]
+    fn dirichlet_low_alpha_is_more_skewed_than_high_alpha() {
+        let mut rng = Rng::new(1);
+        let l = labels(20_000, 8, &mut rng);
+        let skew_low = label_skew(&dirichlet(&l, 50, 0.1, &mut rng), &l);
+        let skew_high = label_skew(&dirichlet(&l, 50, 100.0, &mut rng), &l);
+        assert!(
+            skew_low > skew_high + 0.1,
+            "alpha=0.1 skew {skew_low:.3} vs alpha=100 skew {skew_high:.3}"
+        );
+    }
+
+    #[test]
+    fn task_domain_clients_are_single_category() {
+        let mut rng = Rng::new(2);
+        let l = labels(4_000, 8, &mut rng);
+        let p = task_domain(&l, 100, &mut rng);
+        assert_exact_cover(&p, l.len());
+        assert!((label_skew(&p, &l) - 1.0).abs() < 1e-12);
+        for (c, client) in p.iter().enumerate() {
+            for &s in client {
+                assert_eq!(l[s], c % 8);
+            }
+        }
+    }
+
+    #[test]
+    fn iid_is_balanced_and_mixed() {
+        let mut rng = Rng::new(3);
+        let l = labels(8_000, 8, &mut rng);
+        let p = iid(l.len(), 100, &mut rng);
+        assert_exact_cover(&p, l.len());
+        let sizes: Vec<usize> = p.iter().map(|c| c.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+        assert!(label_skew(&p, &l) < 0.35); // ~1/8 + noise
+    }
+
+    #[test]
+    fn empty_and_degenerate_cases() {
+        let mut rng = Rng::new(4);
+        let p = dirichlet(&[], 10, 0.5, &mut rng);
+        assert!(p.iter().all(|c| c.is_empty()));
+        let p = iid(5, 10, &mut rng);
+        assert_eq!(p.iter().map(|c| c.len()).sum::<usize>(), 5);
+    }
+}

@@ -1,0 +1,81 @@
+//! Preference pairs for the federated-DPO value-alignment task (paper
+//! §4.2, Table 2) — the UltraFeedback stand-in.
+//!
+//! Each pair shares a prompt; the chosen response is the task-grammar
+//! answer ("highest-scored response"), the rejected one is a corrupted
+//! answer ("randomly designated dispreferred response", following the
+//! paper's Zephyr-style construction).
+
+use super::corpus::{assemble, task_answer, CorpusCfg, CONTENT0};
+use crate::util::rng::Rng;
+
+/// One tokenized preference pair (rows are full padded sequences).
+#[derive(Debug, Clone)]
+pub struct PrefPair {
+    pub chosen: Vec<i32>,
+    pub rejected: Vec<i32>,
+    pub category: usize,
+}
+
+/// Generate `n` preference pairs across categories.
+pub fn generate_pairs(rng: &mut Rng, n: usize, cfg: &CorpusCfg) -> Vec<PrefPair> {
+    (0..n)
+        .map(|_| {
+            let cat = rng.below(cfg.n_categories);
+            let m = cfg.span();
+            let (boff, size) = cfg.band(cat);
+            let base = CONTENT0 + boff;
+            let prompt: Vec<i32> =
+                (0..m).map(|_| base + rng.below(size as usize) as i32).collect();
+            let good = task_answer(cat, &prompt, cfg);
+            // corrupt: random in-band tokens over half the answer
+            let mut bad = good.clone();
+            for _ in 0..(m / 2).max(1) {
+                let i = rng.below(m);
+                bad[i] = base + rng.below(size as usize) as i32;
+            }
+            if bad == good {
+                bad[0] = base + ((bad[0] - base + 1).rem_euclid(size));
+            }
+            PrefPair {
+                chosen: assemble(&prompt, &good, cfg),
+                rejected: assemble(&prompt, &bad, cfg),
+                category: cat,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{BOS, SEP};
+
+    #[test]
+    fn pairs_share_prompt_and_differ_in_answer() {
+        let cfg = CorpusCfg::new(256, 48, 8);
+        let mut rng = Rng::new(0);
+        let pairs = generate_pairs(&mut rng, 40, &cfg);
+        assert_eq!(pairs.len(), 40);
+        for p in &pairs {
+            assert_eq!(p.chosen.len(), cfg.seq_tokens);
+            assert_eq!(p.rejected.len(), cfg.seq_tokens);
+            assert_ne!(p.chosen, p.rejected);
+            // shared prefix through SEP
+            let sep_pos = p.chosen.iter().position(|&t| t == SEP).unwrap();
+            assert_eq!(p.chosen[..=sep_pos], p.rejected[..=sep_pos]);
+            assert_eq!(p.chosen[0], BOS);
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let cfg = CorpusCfg::new(256, 48, 4);
+        let a = generate_pairs(&mut Rng::new(7), 10, &cfg);
+        let b = generate_pairs(&mut Rng::new(7), 10, &cfg);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.chosen, y.chosen);
+            assert_eq!(x.rejected, y.rejected);
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! TF-IDF vectorizer over token sequences — the Alpaca-style synthetic-
+//! category pipeline (paper Appendix A): samples without labels are
+//! embedded as TF-IDF vectors and clustered with KMeans; the clusters act
+//! as categories for the Dirichlet split.
+
+/// TF-IDF matrix: one L2-normalized row per document.
+#[derive(Debug, Clone)]
+pub struct TfIdf {
+    pub vectors: Vec<Vec<f32>>,
+    pub vocab: usize,
+}
+
+/// Build TF-IDF over token-id documents, ignoring ids < `min_token`
+/// (reserved/control tokens act like stop words).
+pub fn tfidf(docs: &[Vec<i32>], vocab: usize, min_token: i32) -> TfIdf {
+    let n = docs.len();
+    let mut df = vec![0u32; vocab];
+    let mut counts: Vec<Vec<(usize, f32)>> = Vec::with_capacity(n);
+
+    for doc in docs {
+        let mut c = std::collections::BTreeMap::new();
+        for &t in doc {
+            if t >= min_token && (t as usize) < vocab {
+                *c.entry(t as usize).or_insert(0.0f32) += 1.0;
+            }
+        }
+        for &tok in c.keys() {
+            df[tok] += 1;
+        }
+        counts.push(c.into_iter().collect());
+    }
+
+    let idf: Vec<f32> = df
+        .iter()
+        .map(|&d| ((1.0 + n as f32) / (1.0 + d as f32)).ln() + 1.0)
+        .collect();
+
+    let vectors = counts
+        .into_iter()
+        .map(|c| {
+            let mut v = vec![0.0f32; vocab];
+            let total: f32 = c.iter().map(|(_, x)| x).sum();
+            for (tok, cnt) in c {
+                v[tok] = (cnt / total.max(1.0)) * idf[tok];
+            }
+            let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 0.0 {
+                for x in &mut v {
+                    *x /= norm;
+                }
+            }
+            v
+        })
+        .collect();
+
+    TfIdf { vectors, vocab }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::linalg::dot;
+
+    #[test]
+    fn rows_are_unit_norm() {
+        let docs = vec![vec![4, 5, 6, 4], vec![7, 8], vec![4, 4, 4]];
+        let t = tfidf(&docs, 16, 4);
+        for v in &t.vectors {
+            let n = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn similar_docs_have_higher_cosine() {
+        let a = vec![4, 5, 6, 7];
+        let b = vec![4, 5, 6, 8]; // shares 3 tokens with a
+        let c = vec![10, 11, 12, 13]; // disjoint
+        let t = tfidf(&[a, b, c], 16, 4);
+        let sim_ab = dot(&t.vectors[0], &t.vectors[1]);
+        let sim_ac = dot(&t.vectors[0], &t.vectors[2]);
+        assert!(sim_ab > sim_ac + 0.3, "{sim_ab} vs {sim_ac}");
+    }
+
+    #[test]
+    fn control_tokens_ignored() {
+        let docs = vec![vec![0, 1, 2, 3, 4], vec![4]];
+        let t = tfidf(&docs, 16, 4);
+        // both docs reduce to {4}: identical vectors
+        assert_eq!(t.vectors[0], t.vectors[1]);
+    }
+
+    #[test]
+    fn rare_tokens_weigh_more_than_common() {
+        // token 4 in every doc, token 9 in one
+        let docs = vec![vec![4, 9], vec![4, 5], vec![4, 6], vec![4, 7]];
+        let t = tfidf(&docs, 16, 4);
+        assert!(t.vectors[0][9] > t.vectors[0][4]);
+    }
+}

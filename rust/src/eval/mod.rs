@@ -1,0 +1,131 @@
+//! Evaluation harness.
+//!
+//! * `McEvaluator` — likelihood-ranked 4-way multiple choice (the ARC /
+//!   MMLU proxy, see DESIGN.md §Substitutions): each item's candidate rows
+//!   are scored by per-row mean loss through the compiled `eval` artifact;
+//!   the argmin row is the model's answer.
+//! * `DpoEvaluator` — mean reward margin over held-out preference pairs
+//!   (MT-bench proxy), computed with the `dpo` artifact at lr = 0.
+
+use anyhow::Result;
+
+use crate::data::corpus::{McItem, PAD};
+use crate::data::preference::PrefPair;
+use crate::fed::session::Session;
+
+/// Likelihood-ranked multiple-choice evaluator.
+pub struct McEvaluator {
+    pub items: Vec<McItem>,
+    seq_tokens: usize,
+}
+
+impl McEvaluator {
+    pub fn new(items: Vec<McItem>, seq_tokens: usize) -> Self {
+        McEvaluator { items, seq_tokens }
+    }
+
+    /// Fraction of items whose lowest-loss row is the correct answer.
+    pub fn accuracy(&self, session: &Session, lora: &[f32]) -> Result<f64> {
+        if self.items.is_empty() {
+            return Ok(0.0);
+        }
+        let be = session.schema.config.eval_batch;
+        let seq = self.seq_tokens;
+
+        // flatten all candidate rows, then score in eval_batch chunks
+        let mut rows: Vec<&[i32]> = Vec::new();
+        for it in &self.items {
+            for r in &it.rows {
+                rows.push(r);
+            }
+        }
+        let mut losses = Vec::with_capacity(rows.len());
+        let mut chunk = Vec::with_capacity(be * seq);
+        let mut pending = 0usize;
+        for (i, r) in rows.iter().enumerate() {
+            chunk.extend_from_slice(r);
+            pending += 1;
+            let last = i + 1 == rows.len();
+            if pending == be || last {
+                // pad the final chunk with PAD-only rows (zero-loss rows)
+                let real = pending;
+                while pending < be {
+                    chunk.extend(std::iter::repeat(PAD).take(seq));
+                    pending += 1;
+                }
+                let out = session.eval_rows(lora, &chunk)?;
+                losses.extend_from_slice(&out[..real]);
+                chunk.clear();
+                pending = 0;
+            }
+        }
+
+        let mut correct = 0usize;
+        for (qi, it) in self.items.iter().enumerate() {
+            let base = qi * it.rows.len();
+            let mut best = 0usize;
+            for c in 1..it.rows.len() {
+                if losses[base + c] < losses[base + best] {
+                    best = c;
+                }
+            }
+            if best == it.correct {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / self.items.len() as f64)
+    }
+}
+
+/// Reward-margin evaluator over preference pairs (uses dpo_step at lr=0,
+/// which leaves the parameters untouched and returns the batch margin).
+pub struct DpoEvaluator {
+    pub pairs: Vec<PrefPair>,
+}
+
+impl DpoEvaluator {
+    pub fn new(pairs: Vec<PrefPair>) -> Self {
+        DpoEvaluator { pairs }
+    }
+
+    /// Mean reward margin E[(πc−refc) − (πr−refr)] over the eval pairs.
+    pub fn mean_margin(&self, session: &Session, lora: &[f32], beta: f32) -> Result<f64> {
+        let b = session.schema.config.batch;
+        let seq = session.schema.config.seq_len + 1;
+        let mask = session.upload_mask(&vec![0.0; session.schema.lora_total])?;
+        let mut total = 0.0f64;
+        let mut batches = 0usize;
+        for chunk in self.pairs.chunks(b) {
+            if chunk.len() < b {
+                break; // static shapes: drop the ragged tail
+            }
+            let mut chosen = Vec::with_capacity(b * seq);
+            let mut rejected = Vec::with_capacity(b * seq);
+            for p in chunk {
+                chosen.extend_from_slice(&p.chosen);
+                rejected.extend_from_slice(&p.rejected);
+            }
+            let (_, _, margin) = session.dpo_step(lora, &chosen, &rejected, 0.0, beta, &mask)?;
+            total += margin as f64;
+            batches += 1;
+        }
+        Ok(if batches == 0 { 0.0 } else { total / batches as f64 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Session-dependent paths are covered by rust/tests/ integration suites
+    // (require compiled artifacts). Here: pure bookkeeping.
+    use super::*;
+    use crate::data::corpus::{self, CorpusCfg};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn evaluator_holds_items() {
+        let cfg = CorpusCfg::new(256, 48, 8);
+        let items = corpus::make_eval_set(&mut Rng::new(0), 12, &cfg);
+        let ev = McEvaluator::new(items, cfg.seq_tokens);
+        assert_eq!(ev.items.len(), 12);
+    }
+}

@@ -1,0 +1,203 @@
+//! Downlink compression state (paper §3.4 applies sparsification "for both
+//! uploading and downloading").
+//!
+//! The server keeps, per client, (a) a reference copy of the global model
+//! as that client last reconstructed it and (b) an error-feedback
+//! compressor. Broadcasting to client i sends the sparsified, Golomb-coded
+//! delta `global − ref_i`; both sides then advance `ref_i` by the decoded
+//! delta, so server and client stay bit-identical without ever sending the
+//! dense vector. Clients idle for many rounds simply get a denser delta
+//! (their residual-corrected gap is larger).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::compress::{wire, Compressed, Compressor, Encoding, KindIndex, SparsMode};
+use crate::model::LoraKind;
+
+/// Per-client downlink channel.
+struct Channel {
+    /// Global model as the client last reconstructed it.
+    reference: Vec<f32>,
+    comp: Compressor,
+}
+
+/// What one broadcast produced.
+pub struct Broadcast {
+    /// The client's reconstruction of the global model.
+    pub reconstructed: Vec<f32>,
+    /// Transmitted parameter count.
+    pub params: usize,
+    /// Exact wire bytes.
+    pub bytes: usize,
+}
+
+pub struct DownlinkState {
+    channels: Vec<Option<Channel>>,
+    kinds: Arc<Vec<LoraKind>>,
+    kidx: Arc<KindIndex>,
+    mode: SparsMode,
+    encoding: Encoding,
+    init: Vec<f32>,
+}
+
+impl DownlinkState {
+    /// `init` is the LoRA state every client starts from (distributed with
+    /// the base model, not counted — paper Appendix A).
+    pub fn new(
+        n_clients: usize,
+        init: Vec<f32>,
+        mode: SparsMode,
+        encoding: Encoding,
+        kinds: Arc<Vec<LoraKind>>,
+        kidx: Arc<KindIndex>,
+    ) -> Self {
+        DownlinkState {
+            channels: (0..n_clients).map(|_| None).collect(),
+            kinds,
+            kidx,
+            mode,
+            encoding,
+            init,
+        }
+    }
+
+    /// Broadcast `global` to `client`, compressed against its reference.
+    /// `l0`/`l_prev` drive the adaptive schedule (Eq. 4).
+    pub fn broadcast(
+        &mut self,
+        client: usize,
+        global: &[f32],
+        l0: f64,
+        l_prev: f64,
+    ) -> Result<Broadcast> {
+        let ch = self.channels[client].get_or_insert_with(|| Channel {
+            reference: self.init.clone(),
+            comp: Compressor::new(self.mode, self.encoding, self.kinds.clone(), self.kidx.clone()),
+        });
+        let n = global.len();
+        let mut delta = vec![0.0f32; n];
+        for i in 0..n {
+            delta[i] = global[i] - ch.reference[i];
+        }
+        let out: Compressed = ch.comp.compress(&delta, l0, l_prev);
+        let range = 0..n;
+        let bytes = match &out.dense {
+            // unsparsified downlink: dense f16 of the full vector
+            Some(d) => crate::compress::dense_bytes(d.len()),
+            None => wire::encode(&out.sv, &range, &self.kidx, out.k, self.encoding)?.len(),
+        };
+        out.sv.add_to(&mut ch.reference);
+        Ok(Broadcast {
+            reconstructed: ch.reference.clone(),
+            params: out.sv.len(),
+            bytes,
+        })
+    }
+
+    /// The client's current reference (test hook / reconnection).
+    pub fn reference(&self, client: usize) -> Option<&[f32]> {
+        self.channels[client].as_ref().map(|c| c.reference.as_slice())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::AdaptiveSparsifier;
+    use crate::util::rng::Rng;
+
+    fn setup(n: usize) -> (Arc<Vec<LoraKind>>, Arc<KindIndex>) {
+        let kinds: Vec<LoraKind> = (0..n)
+            .map(|i| if (i / 16) % 2 == 0 { LoraKind::A } else { LoraKind::B })
+            .collect();
+        let kidx = KindIndex::new(&kinds);
+        (Arc::new(kinds), Arc::new(kidx))
+    }
+
+    #[test]
+    fn repeated_broadcasts_converge_to_global() {
+        let n = 512;
+        let (kinds, kidx) = setup(n);
+        let mut dl = DownlinkState::new(
+            2,
+            vec![0.0; n],
+            SparsMode::Adaptive(AdaptiveSparsifier::default()),
+            Encoding::Golomb,
+            kinds,
+            kidx,
+        );
+        let mut rng = Rng::new(0);
+        let global: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        // broadcasting the SAME global repeatedly: error feedback must make
+        // the reference converge to it (up to f16 precision)
+        let mut err = f64::INFINITY;
+        for _ in 0..6 {
+            let b = dl.broadcast(0, &global, 3.0, 3.0).unwrap();
+            let e: f64 = b
+                .reconstructed
+                .iter()
+                .zip(&global)
+                .map(|(r, g)| ((r - g) as f64).abs())
+                .sum();
+            assert!(e <= err + 1e-9);
+            err = e;
+        }
+        assert!(err / (n as f64) < 1e-3, "mean err {}", err / n as f64);
+    }
+
+    #[test]
+    fn sparse_downlink_cheaper_than_dense_for_incremental_updates() {
+        let n = 4096;
+        let (kinds, kidx) = setup(n);
+        let mut dl = DownlinkState::new(
+            1,
+            vec![0.0; n],
+            SparsMode::Adaptive(AdaptiveSparsifier::default()),
+            Encoding::Golomb,
+            kinds.clone(),
+            kidx.clone(),
+        );
+        let mut rng = Rng::new(1);
+        let mut global: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        dl.broadcast(0, &global, 3.0, 3.0).unwrap();
+        // small incremental change late in training -> few params, few bytes
+        for v in global.iter_mut().take(100) {
+            *v += 0.5;
+        }
+        let b = dl.broadcast(0, &global, 3.0, 0.5).unwrap();
+        assert!(b.bytes < crate::compress::dense_bytes(n), "sparse {} bytes", b.bytes);
+        assert!(b.params < n);
+    }
+
+    #[test]
+    fn off_mode_counts_dense_bytes() {
+        let n = 128;
+        let (kinds, kidx) = setup(n);
+        let mut dl =
+            DownlinkState::new(1, vec![0.0; n], SparsMode::Off, Encoding::Golomb, kinds, kidx);
+        let global = vec![1.0f32; n];
+        let b = dl.broadcast(0, &global, 3.0, 3.0).unwrap();
+        assert_eq!(b.bytes, crate::compress::dense_bytes(n));
+        assert_eq!(b.params, n);
+    }
+
+    #[test]
+    fn channels_are_independent_per_client() {
+        let n = 64;
+        let (kinds, kidx) = setup(n);
+        let mut dl = DownlinkState::new(
+            2,
+            vec![0.0; n],
+            SparsMode::Fixed(0.5),
+            Encoding::Golomb,
+            kinds,
+            kidx,
+        );
+        let g1 = vec![1.0f32; n];
+        dl.broadcast(0, &g1, 3.0, 3.0).unwrap();
+        assert!(dl.reference(0).is_some());
+        assert!(dl.reference(1).is_none());
+    }
+}

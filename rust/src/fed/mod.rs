@@ -1,0 +1,521 @@
+//! Federated fine-tuning coordinator — the paper's system contribution.
+//!
+//! `FedRunner` drives the full protocol per round (DESIGN.md §Training
+//! protocol): client sampling → downlink broadcast (dense or EcoLoRA
+//! sparse) → staleness mixing (Eq. 3) → local SGD/DPO through the compiled
+//! artifacts → uplink (dense, or EcoLoRA round-robin segment + adaptive
+//! top-k + error feedback + Golomb wire) → per-segment weighted
+//! aggregation (Eq. 2) → telemetry.
+
+pub mod downlink;
+pub mod round_robin;
+pub mod sampling;
+pub mod server;
+pub mod session;
+pub mod staleness;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::baselines::Method;
+use crate::compress::{dense_bytes, wire, Compressor, Encoding, KindIndex, SparsMode};
+use crate::data::{self, corpus, preference, ClientData, Dataset, PartitionKind};
+use crate::eval::{DpoEvaluator, McEvaluator};
+use crate::metrics::{sparsity_snapshot, RoundRecord, RunLog};
+use crate::model::LoraKind;
+use crate::util::rng::Rng;
+
+use downlink::DownlinkState;
+use server::SegmentAggregator;
+use session::Session;
+
+/// EcoLoRA communication configuration (`FedConfig.eco == None` = plain
+/// baseline communication).
+#[derive(Debug, Clone, Copy)]
+pub struct EcoConfig {
+    /// Round-robin segments N_s (1 disables RR — the Table 3 ablation).
+    pub n_s: usize,
+    /// Staleness decay β (Eq. 3).
+    pub beta: f64,
+    /// Uplink (and sparse-downlink) sparsification mode.
+    pub spars: SparsMode,
+    /// Position encoding (Golomb vs fixed — the Table 3 ablation).
+    pub encoding: Encoding,
+    /// Sparsify the downlink broadcast too (§3.4).
+    pub downlink_sparse: bool,
+}
+
+impl Default for EcoConfig {
+    fn default() -> Self {
+        EcoConfig {
+            n_s: 5,
+            beta: 0.7,
+            spars: SparsMode::Adaptive(Default::default()),
+            encoding: Encoding::Golomb,
+            downlink_sparse: true,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct FedConfig {
+    pub preset: String,
+    pub artifacts_dir: PathBuf,
+    pub method: Method,
+    pub eco: Option<EcoConfig>,
+    pub n_clients: usize,
+    pub clients_per_round: usize,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    pub n_samples: usize,
+    pub partition: PartitionKind,
+    pub eval_items: usize,
+    pub eval_every: usize,
+    /// Stop once eval accuracy reaches this (Tables 3/4 protocol).
+    pub target_acc: Option<f64>,
+    /// Value-alignment mode: federated DPO on preference pairs (Table 2).
+    pub dpo: bool,
+    pub dpo_beta: f32,
+    /// Client sampling strategy (paper: uniform).
+    pub sampling: sampling::Sampling,
+    /// Pretrained base checkpoint (created by `ecolora pretrain`).
+    pub base_checkpoint: Option<PathBuf>,
+    pub verbose: bool,
+}
+
+impl FedConfig {
+    /// Paper-shaped defaults scaled to this testbed (Appendix A: 100
+    /// clients, 10 per round, 40 rounds, Dirichlet α = 0.5).
+    pub fn paper_default(preset: &str) -> Self {
+        FedConfig {
+            preset: preset.to_string(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            method: Method::FedIt,
+            eco: None,
+            n_clients: 100,
+            clients_per_round: 10,
+            rounds: 40,
+            local_steps: 5,
+            lr: 0.5,
+            seed: 42,
+            n_samples: 4000,
+            partition: PartitionKind::DirichletLabels { alpha: 0.5 },
+            eval_items: 100,
+            eval_every: 5,
+            target_acc: None,
+            dpo: false,
+            dpo_beta: 0.5,
+            sampling: sampling::Sampling::Uniform,
+            base_checkpoint: None,
+            verbose: false,
+        }
+    }
+
+    /// Small fast profile for tests and benches.
+    pub fn test_profile(preset: &str) -> Self {
+        FedConfig {
+            n_clients: 12,
+            clients_per_round: 4,
+            rounds: 4,
+            local_steps: 2,
+            n_samples: 240,
+            eval_items: 24,
+            eval_every: 2,
+            ..Self::paper_default(preset)
+        }
+    }
+}
+
+/// One client's persistent state.
+struct Client {
+    lora: Vec<f32>,
+    tau: u64,
+    comp: Option<Compressor>,
+    data: ClientData,
+    pref_indices: Vec<usize>,
+    n_samples: usize,
+}
+
+/// Outcome of a full federated run.
+pub struct FedOutcome {
+    pub log: RunLog,
+    pub final_lora: Vec<f32>,
+    pub final_acc: f64,
+    pub final_margin: Option<f64>,
+    pub reached_target_at: Option<usize>,
+}
+
+/// The coordinator.
+pub struct FedRunner {
+    pub cfg: FedConfig,
+    pub session: Session,
+    pub ds: Dataset,
+    pairs: Vec<preference::PrefPair>,
+    clients: Vec<Client>,
+    global: Vec<f32>,
+    kinds: Arc<Vec<LoraKind>>,
+    kidx: Arc<KindIndex>,
+    dl: Option<DownlinkState>,
+    evaluator: McEvaluator,
+    dpo_eval: Option<DpoEvaluator>,
+    rng: Rng,
+    l0: Option<f64>,
+    l_prev: f64,
+    lora_init: Vec<f32>,
+}
+
+impl FedRunner {
+    pub fn new(cfg: FedConfig) -> Result<FedRunner> {
+        let mut rng = Rng::new(cfg.seed);
+        let mut session = Session::new(&cfg.artifacts_dir, &cfg.preset, &mut rng.fork(1))?;
+        if let Some(ckpt) = &cfg.base_checkpoint {
+            session.load_base(ckpt)?;
+        }
+        let mcfg = &session.schema.config;
+        let ccfg = corpus::CorpusCfg::new(mcfg.vocab, mcfg.seq_len, 8);
+        let ds = corpus::generate(&mut rng.fork(2), cfg.n_samples, ccfg);
+        let parts = data::partition_dataset(&ds, cfg.partition, cfg.n_clients, &mut rng.fork(3));
+
+        let pairs = if cfg.dpo {
+            preference::generate_pairs(&mut rng.fork(9), cfg.n_samples, &ccfg)
+        } else {
+            vec![]
+        };
+
+        let kinds = Arc::new(session.schema.kind_map());
+        let kidx = Arc::new(KindIndex::new(&kinds));
+        let lora_init = session.schema.init_lora(&mut rng.fork(4));
+
+        let clients: Vec<Client> = parts
+            .into_iter()
+            .enumerate()
+            .map(|(i, indices)| {
+                let n_samples = indices.len().max(1);
+                let pref_indices: Vec<usize> = if cfg.dpo {
+                    (0..pairs.len()).filter(|p| p % cfg.n_clients == i).collect()
+                } else {
+                    vec![]
+                };
+                Client {
+                    lora: lora_init.clone(),
+                    tau: 0,
+                    comp: cfg.eco.map(|e| {
+                        Compressor::new(e.spars, e.encoding, kinds.clone(), kidx.clone())
+                    }),
+                    data: ClientData::new(indices),
+                    pref_indices,
+                    n_samples,
+                }
+            })
+            .collect();
+
+        let dl = cfg.eco.filter(|e| e.downlink_sparse).map(|e| {
+            DownlinkState::new(
+                cfg.n_clients,
+                lora_init.clone(),
+                e.spars,
+                e.encoding,
+                kinds.clone(),
+                kidx.clone(),
+            )
+        });
+
+        let evaluator = McEvaluator::new(
+            corpus::make_eval_set(&mut rng.fork(5), cfg.eval_items, &ccfg),
+            ccfg.seq_tokens,
+        );
+        let dpo_eval = cfg
+            .dpo
+            .then(|| DpoEvaluator::new(preference::generate_pairs(&mut rng.fork(6), 64, &ccfg)));
+
+        Ok(FedRunner {
+            global: lora_init.clone(),
+            lora_init,
+            cfg,
+            session,
+            ds,
+            pairs,
+            clients,
+            kinds,
+            kidx,
+            dl,
+            evaluator,
+            dpo_eval,
+            rng,
+            l0: None,
+            l_prev: f64::NAN,
+        })
+    }
+
+    pub fn schema(&self) -> &crate::model::Schema {
+        &self.session.schema
+    }
+
+    pub fn global_lora(&self) -> &[f32] {
+        &self.global
+    }
+
+    /// Run the configured number of rounds (early-stopping on target_acc).
+    pub fn run(&mut self) -> Result<FedOutcome> {
+        let label = format!(
+            "{}{}-{}",
+            self.cfg.method.name(),
+            if self.cfg.eco.is_some() { "+EcoLoRA" } else { "" },
+            self.cfg.preset
+        );
+        let mut log = RunLog::new(label.clone());
+        let mask = self.session.upload_mask(&self.cfg.method.grad_mask(&self.session.schema))?;
+        let mut reached: Option<usize> = None;
+
+        for t in 0..self.cfg.rounds {
+            let rec = self.round(t as u64, &mask)?;
+            let acc = rec.eval_acc;
+            if self.cfg.verbose {
+                eprintln!(
+                    "[{label}] round {t}: loss {:.4} acc {} upM {:.3} downM {:.3} k=({:.2},{:.2})",
+                    rec.global_loss,
+                    acc.map_or("-".into(), |a| format!("{a:.3}")),
+                    rec.up.params_m(),
+                    rec.down.params_m(),
+                    rec.k_a,
+                    rec.k_b,
+                );
+            }
+            log.push(rec);
+            if let (Some(target), Some(a)) = (self.cfg.target_acc, acc) {
+                if a >= target {
+                    reached = Some(t);
+                    break;
+                }
+            }
+        }
+
+        let final_acc = self.evaluator.accuracy(&self.session, &self.global)?;
+        let final_margin = match &self.dpo_eval {
+            Some(ev) => Some(ev.mean_margin(&self.session, &self.global, self.cfg.dpo_beta)?),
+            None => None,
+        };
+        Ok(FedOutcome {
+            final_lora: self.global.clone(),
+            final_acc,
+            final_margin,
+            reached_target_at: reached,
+            log,
+        })
+    }
+
+    /// One synchronous round.
+    fn round(&mut self, t: u64, mask: &xla::PjRtBuffer) -> Result<RoundRecord> {
+        let n_t = self.cfg.clients_per_round.min(self.cfg.n_clients);
+        let weights: Vec<f64> = self.clients.iter().map(|c| c.n_samples as f64).collect();
+        let sampled = self.cfg.sampling.sample(
+            self.cfg.n_clients, n_t, &weights, t, &mut self.rng.fork(1000 + t));
+        let n_s = self.cfg.eco.map_or(1, |e| e.n_s.max(1)).min(n_t);
+        let lora_total = self.session.schema.lora_total;
+
+        let mut rec = RoundRecord { round: t as usize, ..Default::default() };
+        let loss_signal = if self.l0.is_some() {
+            (self.l0.unwrap(), self.l_prev)
+        } else {
+            (1.0, 1.0) // round 0: Eq. 4 sits at k_max
+        };
+
+        let mut agg = SegmentAggregator::new(lora_total, n_s);
+        let mut flora_modules: Vec<(Vec<f32>, f64)> = Vec::new();
+        let mut loss_acc = 0.0f64;
+        let mut weight_acc = 0.0f64;
+        let mut overhead = 0.0f64;
+        let exec_before = self.session.exec_seconds.get();
+
+        // FLoRA: fresh LoRA init shared by this round's cohort.
+        let flora_init = self
+            .cfg
+            .method
+            .restarts_lora()
+            .then(|| self.session.schema.init_lora(&mut self.rng.fork(2000 + t)));
+
+        for (slot, &ci) in sampled.iter().enumerate() {
+            // ---- downlink --------------------------------------------------
+            let t0 = Instant::now();
+            let start_global: Vec<f32> = if self.cfg.method.restarts_lora() {
+                // FLoRA re-distributes the stacked modules (merged into the
+                // base) — the downlink stays N_t × module even with EcoLoRA
+                // (the paper's Table 1 FLoRA totals remain stack-dominated).
+                let p = self.cfg.method.dense_download_params(&self.session.schema, n_t);
+                rec.down.add(p, dense_bytes(p));
+                self.global.clone()
+            } else { match &mut self.dl {
+                Some(dl) => {
+                    let b = dl.broadcast(ci, &self.global, loss_signal.0, loss_signal.1)?;
+                    rec.down.add(b.params, b.bytes);
+                    b.reconstructed
+                }
+                None => {
+                    let p = self.cfg.method.dense_download_params(&self.session.schema, n_t);
+                    rec.down.add(p, dense_bytes(p));
+                    self.global.clone()
+                }
+            } };
+            overhead += t0.elapsed().as_secs_f64();
+
+            // ---- local init: FLoRA restart or Eq. 3 mixing ------------------
+            let client = &mut self.clients[ci];
+            let base_point: Vec<f32> = match &flora_init {
+                Some(init) => init.clone(),
+                None => start_global.clone(),
+            };
+            let mut local = if flora_init.is_some() {
+                base_point.clone()
+            } else if let Some(eco) = self.cfg.eco {
+                let staleness = (t.saturating_sub(client.tau)).max(1);
+                let mut mixed = client.lora.clone();
+                staleness::mix_into_local(eco.beta, staleness, &start_global, &mut mixed);
+                mixed
+            } else {
+                start_global.clone()
+            };
+
+            // ---- local training --------------------------------------------
+            let mean_loss = if self.cfg.dpo {
+                let b = self.session.schema.config.batch;
+                let seq = self.session.schema.config.seq_len + 1;
+                let mut loss_sum = 0.0f64;
+                let mut prng = self.rng.fork(4000 + t * 131 + ci as u64);
+                for _ in 0..self.cfg.local_steps {
+                    let mut chosen = Vec::with_capacity(b * seq);
+                    let mut rejected = Vec::with_capacity(b * seq);
+                    for _ in 0..b {
+                        let pi = if client.pref_indices.is_empty() {
+                            prng.below(self.pairs.len().max(1))
+                        } else {
+                            client.pref_indices[prng.below(client.pref_indices.len())]
+                        };
+                        let p = &self.pairs[pi];
+                        chosen.extend_from_slice(&p.chosen);
+                        rejected.extend_from_slice(&p.rejected);
+                    }
+                    let (next, loss, _m) = self.session.dpo_step(
+                        &local,
+                        &chosen,
+                        &rejected,
+                        self.cfg.lr,
+                        self.cfg.dpo_beta,
+                        mask,
+                    )?;
+                    local = next;
+                    loss_sum += loss as f64;
+                }
+                loss_sum / self.cfg.local_steps.max(1) as f64
+            } else {
+                let mut batch_rng = self.rng.fork(3000 + t * 131 + ci as u64);
+                let ds = &self.ds;
+                let data = &mut client.data;
+                let batch_size = self.session.schema.config.batch;
+                let (next, mean_loss) = self.session.train_chain(
+                    local,
+                    self.cfg.local_steps,
+                    self.cfg.lr,
+                    mask,
+                    || data.next_batch(ds, batch_size, &mut batch_rng),
+                )?;
+                local = next;
+                mean_loss
+            };
+            loss_acc += mean_loss * client.n_samples as f64;
+            weight_acc += client.n_samples as f64;
+
+            // ---- uplink -----------------------------------------------------
+            let t1 = Instant::now();
+            let mut update = vec![0.0f32; lora_total];
+            for i in 0..lora_total {
+                update[i] = local[i] - base_point[i];
+            }
+            match (&mut client.comp, self.cfg.eco) {
+                (Some(comp), Some(eco)) => {
+                    let out = comp.compress(&update, loss_signal.0, loss_signal.1);
+                    rec.k_a = out.k.0;
+                    rec.k_b = out.k.1;
+                    let seg = round_robin::segment_for(slot, t as usize, n_s);
+                    let range = agg.range(seg).clone();
+                    let sv = out.sv.restrict(&range);
+                    let bytes = wire::encode(&sv, &range, &self.kidx, out.k, eco.encoding)?;
+                    // the server decodes the exact wire message
+                    let decoded = wire::decode(&bytes, &range, &self.kidx)?;
+                    rec.up.add(decoded.len(), bytes.len());
+                    agg.add_sparse(seg, &decoded, client.n_samples as f64);
+                }
+                _ => {
+                    let p = self.cfg.method.dense_upload_params(&self.session.schema);
+                    rec.up.add(p, dense_bytes(p));
+                    if self.cfg.method.restarts_lora() {
+                        // FLoRA dense: each client module merges individually
+                        flora_modules.push((local.clone(), client.n_samples as f64));
+                    } else {
+                        agg.add_dense(0, &update, client.n_samples as f64);
+                    }
+                }
+            }
+            overhead += t1.elapsed().as_secs_f64();
+
+            // ---- persist client state --------------------------------------
+            client.lora = local;
+            client.tau = t;
+        }
+
+        // ---- aggregation (Eq. 2) + global advance ---------------------------
+        let t2 = Instant::now();
+        if self.cfg.method.restarts_lora() {
+            if self.cfg.eco.is_some() {
+                // FLoRA + EcoLoRA: merge the segment-aggregated mean module.
+                let delta = agg.finish();
+                let mut module = flora_init.clone().unwrap();
+                for i in 0..lora_total {
+                    module[i] += delta[i];
+                }
+                self.session.merge_lora(&module, 1.0)?;
+            } else {
+                // exact stacking: merge every client module with weight w_i
+                let w_total: f64 = flora_modules.iter().map(|(_, w)| w).sum();
+                for (module, w) in &flora_modules {
+                    self.session.merge_lora(module, (*w / w_total.max(1.0)) as f32)?;
+                }
+            }
+            // clients restart next round; global LoRA is the zero-adapter
+            self.global = self.lora_init.clone();
+        } else {
+            let delta = agg.finish();
+            for i in 0..lora_total {
+                self.global[i] += delta[i];
+            }
+        }
+        overhead += t2.elapsed().as_secs_f64();
+
+        // ---- telemetry -------------------------------------------------------
+        let round_loss = loss_acc / weight_acc.max(1.0);
+        if self.l0.is_none() {
+            self.l0 = Some(round_loss);
+        }
+        self.l_prev = round_loss;
+        rec.global_loss = round_loss;
+        rec.overhead_s = overhead;
+        rec.compute_s = (self.session.exec_seconds.get() - exec_before) / n_t.max(1) as f64;
+        let snap = sparsity_snapshot(&self.global, &self.kinds);
+        rec.gini_a = snap.gini_a;
+        rec.gini_b = snap.gini_b;
+
+        let eval_now = self.cfg.target_acc.is_some()
+            || (self.cfg.eval_every > 0
+                && (t as usize % self.cfg.eval_every == self.cfg.eval_every - 1
+                    || t as usize + 1 == self.cfg.rounds));
+        if eval_now {
+            rec.eval_acc = Some(self.evaluator.accuracy(&self.session, &self.global)?);
+        }
+        Ok(rec)
+    }
+}

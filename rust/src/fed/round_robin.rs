@@ -1,0 +1,70 @@
+//! Round-robin segment assignment (paper §3.3).
+//!
+//! Client at sampled-slot `j` in round `t` uploads segment
+//! `(j + t) mod N_s`. Using the slot index (not the global client id)
+//! guarantees the paper's coverage requirement — every segment is uploaded
+//! by at least one client per round whenever `N_s <= N_t` — which random
+//! global-id sampling cannot guarantee.
+
+/// Segment id for sampled-slot `slot` in round `round`.
+pub fn segment_for(slot: usize, round: usize, n_s: usize) -> usize {
+    (slot + round) % n_s
+}
+
+/// Slots (positions in the sampled set) assigned to `segment` this round.
+pub fn slots_for_segment(segment: usize, round: usize, n_s: usize, n_t: usize) -> Vec<usize> {
+    (0..n_t).filter(|&j| segment_for(j, round, n_s) == segment).collect()
+}
+
+/// Verify the coverage invariant for a round configuration.
+pub fn covers_all_segments(round: usize, n_s: usize, n_t: usize) -> bool {
+    (0..n_s).all(|s| !slots_for_segment(s, round, n_s, n_t).is_empty())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn matches_paper_worked_example() {
+        // §3.3: N_t = 5, N_s = 3, t = 0 — clients 0..4 upload 0,1,2,0,1.
+        let segs: Vec<usize> = (0..5).map(|j| segment_for(j, 0, 3)).collect();
+        assert_eq!(segs, vec![0, 1, 2, 0, 1]);
+        assert_eq!(slots_for_segment(0, 0, 3, 5), vec![0, 3]);
+        assert_eq!(slots_for_segment(1, 0, 3, 5), vec![1, 4]);
+        assert_eq!(slots_for_segment(2, 0, 3, 5), vec![2]);
+    }
+
+    #[test]
+    fn full_coverage_whenever_ns_le_nt() {
+        propcheck(300, |rng| {
+            let n_t = rng.below(32) + 1;
+            let n_s = rng.below(n_t) + 1;
+            let round = rng.below(1000);
+            assert!(covers_all_segments(round, n_s, n_t));
+        });
+    }
+
+    #[test]
+    fn rotation_over_rounds_touches_all_segments_per_slot() {
+        // any fixed slot uploads every segment over N_s consecutive rounds
+        let n_s = 5;
+        for slot in 0..7 {
+            let mut seen: Vec<usize> = (0..n_s).map(|t| segment_for(slot, t, n_s)).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..n_s).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn balanced_assignment_within_round() {
+        // with n_t a multiple of n_s, every segment gets n_t/n_s uploaders
+        let (n_s, n_t) = (5, 10);
+        for round in 0..10 {
+            for s in 0..n_s {
+                assert_eq!(slots_for_segment(s, round, n_s, n_t).len(), n_t / n_s);
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Client sampling strategies. The paper samples uniformly (Appendix A);
+//! related work (§2.3) uses contribution-aware sampling. Both are provided
+//! so the sampling axis can be ablated, plus a deterministic cohort rotor
+//! for reproducible stress tests.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Uniform without replacement (the paper's setting).
+    Uniform,
+    /// Probability proportional to local sample count (importance-style).
+    WeightedBySamples,
+    /// Deterministic rotating cohorts: round t takes clients
+    /// [t*n_t, (t+1)*n_t) mod n — worst case for staleness (every client
+    /// idles n/n_t − 1 rounds), exercising Eq. 3 hard.
+    RoundRobinCohorts,
+}
+
+impl Sampling {
+    pub fn parse(s: &str) -> Option<Sampling> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Some(Sampling::Uniform),
+            "weighted" => Some(Sampling::WeightedBySamples),
+            "cohorts" => Some(Sampling::RoundRobinCohorts),
+            _ => None,
+        }
+    }
+
+    /// Sample `n_t` distinct clients for round `t`.
+    pub fn sample(
+        &self,
+        n_clients: usize,
+        n_t: usize,
+        client_weights: &[f64],
+        t: u64,
+        rng: &mut Rng,
+    ) -> Vec<usize> {
+        let n_t = n_t.min(n_clients);
+        match self {
+            Sampling::Uniform => rng.sample_indices(n_clients, n_t),
+            Sampling::WeightedBySamples => {
+                // weighted sampling without replacement (successive draws)
+                let mut w = client_weights.to_vec();
+                w.resize(n_clients, 1.0);
+                let mut out = Vec::with_capacity(n_t);
+                for _ in 0..n_t {
+                    let i = rng.categorical(&w);
+                    out.push(i);
+                    w[i] = 0.0;
+                }
+                out
+            }
+            Sampling::RoundRobinCohorts => {
+                let start = (t as usize * n_t) % n_clients;
+                (0..n_t).map(|j| (start + j) % n_clients).collect()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn all_strategies_return_distinct_valid_clients() {
+        propcheck(100, |rng| {
+            let n = rng.below(50) + 2;
+            let n_t = rng.below(n) + 1;
+            let w: Vec<f64> = (0..n).map(|_| rng.below(100) as f64 + 1.0).collect();
+            for s in [Sampling::Uniform, Sampling::WeightedBySamples, Sampling::RoundRobinCohorts]
+            {
+                let picked = s.sample(n, n_t, &w, rng.below(1000) as u64, rng);
+                assert_eq!(picked.len(), n_t);
+                let mut u = picked.clone();
+                u.sort_unstable();
+                u.dedup();
+                assert_eq!(u.len(), n_t, "{s:?} returned duplicates");
+                assert!(picked.iter().all(|&c| c < n));
+            }
+        });
+    }
+
+    #[test]
+    fn weighted_prefers_heavy_clients() {
+        let mut rng = Rng::new(0);
+        let mut counts = vec![0usize; 4];
+        let w = vec![100.0, 1.0, 1.0, 1.0];
+        for t in 0..2000 {
+            for c in Sampling::WeightedBySamples.sample(4, 1, &w, t, &mut rng) {
+                counts[c] += 1;
+            }
+        }
+        assert!(counts[0] > 1500, "{counts:?}");
+    }
+
+    #[test]
+    fn cohorts_cover_everyone_over_a_cycle() {
+        let (n, n_t) = (10, 3);
+        let mut seen = vec![false; n];
+        let mut rng = Rng::new(1);
+        for t in 0..10 {
+            for c in Sampling::RoundRobinCohorts.sample(n, n_t, &[], t, &mut rng) {
+                seen[c] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(Sampling::parse("uniform"), Some(Sampling::Uniform));
+        assert_eq!(Sampling::parse("weighted"), Some(Sampling::WeightedBySamples));
+        assert_eq!(Sampling::parse("cohorts"), Some(Sampling::RoundRobinCohorts));
+        assert_eq!(Sampling::parse("x"), None);
+    }
+}

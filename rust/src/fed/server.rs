@@ -1,0 +1,132 @@
+//! Server-side aggregation (paper §3.3, Eq. 2): segments with the same id
+//! are combined by a sample-count-weighted average and the global model is
+//! reassembled from the aggregated segments.
+
+use std::ops::Range;
+
+use crate::compress::SparseVec;
+use crate::model::segment_ranges;
+
+/// Weighted per-segment aggregator over client UPDATES (deltas from the
+/// round-start global). Works for both sparse (EcoLoRA) and dense
+/// (baseline) uploads; baselines use `n_s = 1`.
+pub struct SegmentAggregator {
+    ranges: Vec<Range<usize>>,
+    acc: Vec<f64>,
+    seg_weight: Vec<f64>,
+}
+
+impl SegmentAggregator {
+    pub fn new(total: usize, n_s: usize) -> Self {
+        SegmentAggregator {
+            ranges: segment_ranges(total, n_s),
+            acc: vec![0.0; total],
+            seg_weight: vec![0.0; n_s],
+        }
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn range(&self, seg: usize) -> &Range<usize> {
+        &self.ranges[seg]
+    }
+
+    /// Add a sparse segment contribution with weight `n_i`. Indices must
+    /// lie inside the segment's range; zeros elsewhere count toward the
+    /// average (standard sparse FedAvg semantics).
+    pub fn add_sparse(&mut self, seg: usize, sv: &SparseVec, n_i: f64) {
+        let r = &self.ranges[seg];
+        for (&i, &v) in sv.idx.iter().zip(&sv.vals) {
+            let i = i as usize;
+            assert!(i >= r.start && i < r.end, "index {i} outside segment {seg}");
+            self.acc[i] += n_i * v as f64;
+        }
+        self.seg_weight[seg] += n_i;
+    }
+
+    /// Add a dense segment contribution (`values` spans the segment range).
+    pub fn add_dense(&mut self, seg: usize, values: &[f32], n_i: f64) {
+        let r = self.ranges[seg].clone();
+        assert_eq!(values.len(), r.len());
+        for (a, &v) in self.acc[r].iter_mut().zip(values) {
+            *a += n_i * v as f64;
+        }
+        self.seg_weight[seg] += n_i;
+    }
+
+    /// Finish: weighted-average delta (zero for segments nobody uploaded —
+    /// cannot happen when the round-robin coverage invariant holds).
+    pub fn finish(self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.acc.len()];
+        for (seg, r) in self.ranges.iter().enumerate() {
+            let w = self.seg_weight[seg];
+            if w <= 0.0 {
+                continue;
+            }
+            for i in r.clone() {
+                out[i] = (self.acc[i] / w) as f32;
+            }
+        }
+        out
+    }
+
+    /// Segments that received at least one upload.
+    pub fn covered(&self) -> Vec<bool> {
+        self.seg_weight.iter().map(|&w| w > 0.0).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_average_matches_eq2() {
+        // two clients upload the same segment with weights 1 and 3
+        let mut agg = SegmentAggregator::new(8, 2);
+        agg.add_dense(0, &[1.0, 1.0, 1.0, 1.0], 1.0);
+        agg.add_dense(0, &[5.0, 5.0, 5.0, 5.0], 3.0);
+        agg.add_dense(1, &[2.0, 2.0, 2.0, 2.0], 2.0);
+        let out = agg.finish();
+        // (1*1 + 3*5)/4 = 4
+        assert_eq!(&out[..4], &[4.0, 4.0, 4.0, 4.0]);
+        assert_eq!(&out[4..], &[2.0, 2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn sparse_contributions_average_against_zeros() {
+        let mut agg = SegmentAggregator::new(4, 1);
+        let sv = SparseVec { idx: vec![1], vals: vec![4.0] };
+        agg.add_sparse(0, &sv, 1.0);
+        agg.add_dense(0, &[0.0, 0.0, 0.0, 8.0], 1.0);
+        let out = agg.finish();
+        assert_eq!(out, vec![0.0, 2.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn uncovered_segment_yields_zero_delta() {
+        let mut agg = SegmentAggregator::new(6, 3);
+        agg.add_dense(1, &[3.0, 3.0], 1.0);
+        assert_eq!(agg.covered(), vec![false, true, false]);
+        let out = agg.finish();
+        assert_eq!(out, vec![0.0, 0.0, 3.0, 3.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside segment")]
+    fn sparse_indices_outside_segment_panic() {
+        let mut agg = SegmentAggregator::new(8, 2);
+        let sv = SparseVec { idx: vec![6], vals: vec![1.0] };
+        agg.add_sparse(0, &sv, 1.0);
+    }
+
+    #[test]
+    fn single_segment_is_plain_fedavg() {
+        let mut agg = SegmentAggregator::new(3, 1);
+        agg.add_dense(0, &[1.0, 2.0, 3.0], 2.0);
+        agg.add_dense(0, &[3.0, 2.0, 1.0], 2.0);
+        assert_eq!(agg.finish(), vec![2.0, 2.0, 2.0]);
+    }
+}

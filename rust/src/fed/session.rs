@@ -1,0 +1,252 @@
+//! Model session: schema + compiled artifacts + device-resident state.
+//!
+//! One `Session` per process wraps the PJRT engine, keeps the frozen base
+//! weights in a single device buffer shared by every simulated client, and
+//! exposes typed step functions (`train_step`, `eval_rows`, `dpo_step`,
+//! `pretrain`, `merge_lora`). Token/LoRA transfers are per-call (small);
+//! the base is re-uploaded only when FLoRA merges into it.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use xla::PjRtBuffer;
+
+use crate::model::Schema;
+use crate::runtime::{literal_f32, literal_scalar_f32, Engine, Exec};
+use crate::util::rng::Rng;
+
+pub struct Session {
+    pub engine: Engine,
+    pub schema: Schema,
+    train: Arc<Exec>,
+    eval_: Arc<Exec>,
+    pretrain_: Option<Arc<Exec>>,
+    merge_: Option<Arc<Exec>>,
+    dpo_: Option<Arc<Exec>>,
+    /// Frozen base weights, resident on device.
+    base_buf: PjRtBuffer,
+    /// Host copy of the base (FLoRA merge bookkeeping, checkpointing).
+    base_host: Vec<f32>,
+    /// Wall-clock spent inside compiled executions (perf accounting).
+    pub exec_seconds: std::cell::Cell<f64>,
+    pub exec_calls: std::cell::Cell<u64>,
+}
+
+impl Session {
+    /// Load a preset's artifacts; base starts at random init unless a
+    /// pretrained checkpoint is supplied via `load_base`.
+    pub fn new(artifacts_dir: &Path, preset: &str, rng: &mut Rng) -> Result<Session> {
+        let schema = Schema::load(artifacts_dir, preset)?;
+        let engine = Engine::new(artifacts_dir)?;
+        let train = engine.load_tagged(&schema, "train")?;
+        let eval_ = engine.load_tagged(&schema, "eval")?;
+        let pretrain_ = schema
+            .artifacts
+            .contains_key("pretrain")
+            .then(|| engine.load_tagged(&schema, "pretrain"))
+            .transpose()?;
+        let merge_ = schema
+            .artifacts
+            .contains_key("merge")
+            .then(|| engine.load_tagged(&schema, "merge"))
+            .transpose()?;
+        let dpo_ = schema
+            .artifacts
+            .contains_key("dpo")
+            .then(|| engine.load_tagged(&schema, "dpo"))
+            .transpose()?;
+        let base_host = schema.init_base(rng);
+        let base_buf = engine.upload_f32(&base_host, &[schema.base_total])?;
+        Ok(Session {
+            engine,
+            schema,
+            train,
+            eval_,
+            pretrain_,
+            merge_,
+            dpo_,
+            base_buf,
+            base_host,
+            exec_seconds: std::cell::Cell::new(0.0),
+            exec_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    fn timed_run(&self, exec: &Exec, args: &[&PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let t0 = std::time::Instant::now();
+        let out = exec.run(args)?;
+        self.exec_seconds
+            .set(self.exec_seconds.get() + t0.elapsed().as_secs_f64());
+        self.exec_calls.set(self.exec_calls.get() + 1);
+        Ok(out)
+    }
+
+    // ---- base management ---------------------------------------------------
+
+    pub fn base_host(&self) -> &[f32] {
+        &self.base_host
+    }
+
+    /// Replace the base weights (pretrained checkpoint or FLoRA merge).
+    pub fn set_base(&mut self, base: Vec<f32>) -> Result<()> {
+        anyhow::ensure!(base.len() == self.schema.base_total, "base length");
+        self.base_buf = self.engine.upload_f32(&base, &[self.schema.base_total])?;
+        self.base_host = base;
+        Ok(())
+    }
+
+    /// Load a base checkpoint written by `save_base`.
+    pub fn load_base(&mut self, path: &Path) -> Result<()> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() == 4 * self.schema.base_total, "checkpoint size");
+        let base: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        self.set_base(base)
+    }
+
+    pub fn save_base(&self, path: &Path) -> Result<()> {
+        let mut bytes = Vec::with_capacity(4 * self.base_host.len());
+        for v in &self.base_host {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    // ---- step functions ---------------------------------------------------
+
+    /// One local SGD step: returns (new_lora, loss).
+    pub fn train_step(
+        &self,
+        lora: &[f32],
+        tokens: &[i32],
+        lr: f32,
+        grad_mask: &PjRtBuffer,
+    ) -> Result<(Vec<f32>, f32)> {
+        let s = &self.schema;
+        let b = s.config.batch;
+        let seq = s.config.seq_len + 1;
+        anyhow::ensure!(tokens.len() == b * seq, "token batch shape");
+        let lora_buf = self.engine.upload_f32(lora, &[s.lora_total])?;
+        let tok_buf = self.engine.upload_i32(tokens, &[b, seq])?;
+        let lr_buf = self.engine.upload_scalar_f32(lr)?;
+        let outs = self.timed_run(
+            &self.train,
+            &[&lora_buf, &self.base_buf, &tok_buf, &lr_buf, grad_mask],
+        )?;
+        anyhow::ensure!(outs.len() == 2, "train_step outputs");
+        Ok((literal_f32(&outs[0])?, literal_scalar_f32(&outs[1])?))
+    }
+
+    /// Run `steps` local steps over batches provided by `next_batch`,
+    /// returning (final lora, mean loss).
+    pub fn train_chain<F: FnMut() -> Vec<i32>>(
+        &self,
+        lora: Vec<f32>,
+        steps: usize,
+        lr: f32,
+        grad_mask: &PjRtBuffer,
+        mut next_batch: F,
+    ) -> Result<(Vec<f32>, f64)> {
+        let mut cur = lora;
+        let mut loss_sum = 0.0f64;
+        for _ in 0..steps {
+            let batch = next_batch();
+            let (next, loss) = self.train_step(&cur, &batch, lr, grad_mask)?;
+            cur = next;
+            loss_sum += loss as f64;
+        }
+        Ok((cur, loss_sum / steps.max(1) as f64))
+    }
+
+    /// Per-row eval losses for `eval_batch` rows of tokens.
+    pub fn eval_rows(&self, lora: &[f32], tokens: &[i32]) -> Result<Vec<f32>> {
+        let s = &self.schema;
+        let be = s.config.eval_batch;
+        let seq = s.config.seq_len + 1;
+        anyhow::ensure!(tokens.len() == be * seq, "eval batch shape");
+        let lora_buf = self.engine.upload_f32(lora, &[s.lora_total])?;
+        let tok_buf = self.engine.upload_i32(tokens, &[be, seq])?;
+        let outs = self.timed_run(&self.eval_, &[&lora_buf, &self.base_buf, &tok_buf])?;
+        literal_f32(&outs[0])
+    }
+
+    /// One full-parameter pretraining step on the plain base model.
+    pub fn pretrain_step(&mut self, tokens: &[i32], lr: f32) -> Result<f32> {
+        let s = &self.schema;
+        let b = s.config.batch;
+        let seq = s.config.seq_len + 1;
+        let pre = self
+            .pretrain_
+            .clone()
+            .ok_or_else(|| anyhow!("preset {} lacks pretrain artifact", s.preset))?;
+        let tok_buf = self.engine.upload_i32(tokens, &[b, seq])?;
+        let lr_buf = self.engine.upload_scalar_f32(lr)?;
+        let outs = self.timed_run(&pre, &[&self.base_buf, &tok_buf, &lr_buf])?;
+        anyhow::ensure!(outs.len() == 2, "pretrain outputs");
+        let new_base = literal_f32(&outs[0])?;
+        let loss = literal_scalar_f32(&outs[1])?;
+        // keep base on device for the next step; host copy refreshed too
+        self.base_buf = self.engine.upload_f32(&new_base, &[s.base_total])?;
+        self.base_host = new_base;
+        Ok(loss)
+    }
+
+    /// Merge a LoRA module into the base with weight `scale` (FLoRA).
+    pub fn merge_lora(&mut self, lora: &[f32], scale: f32) -> Result<()> {
+        let s = &self.schema;
+        let m = self
+            .merge_
+            .clone()
+            .ok_or_else(|| anyhow!("preset {} lacks merge artifact", s.preset))?;
+        let lora_buf = self.engine.upload_f32(lora, &[s.lora_total])?;
+        let scale_buf = self.engine.upload_scalar_f32(scale)?;
+        let outs = self.timed_run(&m, &[&self.base_buf, &lora_buf, &scale_buf])?;
+        let new_base = literal_f32(&outs[0])?;
+        self.base_buf = self.engine.upload_f32(&new_base, &[s.base_total])?;
+        self.base_host = new_base;
+        Ok(())
+    }
+
+    /// One federated-DPO step: returns (new_lora, loss, reward margin).
+    pub fn dpo_step(
+        &self,
+        lora: &[f32],
+        chosen: &[i32],
+        rejected: &[i32],
+        lr: f32,
+        beta: f32,
+        grad_mask: &PjRtBuffer,
+    ) -> Result<(Vec<f32>, f32, f32)> {
+        let s = &self.schema;
+        let b = s.config.batch;
+        let seq = s.config.seq_len + 1;
+        let dpo = self
+            .dpo_
+            .clone()
+            .ok_or_else(|| anyhow!("preset {} lacks dpo artifact", s.preset))?;
+        let lora_buf = self.engine.upload_f32(lora, &[s.lora_total])?;
+        let c_buf = self.engine.upload_i32(chosen, &[b, seq])?;
+        let r_buf = self.engine.upload_i32(rejected, &[b, seq])?;
+        let lr_buf = self.engine.upload_scalar_f32(lr)?;
+        let beta_buf = self.engine.upload_scalar_f32(beta)?;
+        let outs = self.timed_run(
+            &dpo,
+            &[&lora_buf, &self.base_buf, &c_buf, &r_buf, &lr_buf, &beta_buf, grad_mask],
+        )?;
+        anyhow::ensure!(outs.len() == 3, "dpo outputs");
+        Ok((
+            literal_f32(&outs[0])?,
+            literal_scalar_f32(&outs[1])?,
+            literal_scalar_f32(&outs[2])?,
+        ))
+    }
+
+    /// Upload a gradient mask once (reused across every step).
+    pub fn upload_mask(&self, mask: &[f32]) -> Result<PjRtBuffer> {
+        self.engine.upload_f32(mask, &[self.schema.lora_total])
+    }
+}

@@ -1,0 +1,69 @@
+//! Staleness-weighted model mixing (paper §3.3, Eq. 3).
+//!
+//!   P̂ᵢ = (1 − e^{−β(t−τ)}) Pᵗ + e^{−β(t−τ)} Pᵢ^τ
+//!
+//! A client idle since round τ starts local optimization from a blend of
+//! the fresh global model and its stale local model; the exponential decay
+//! (Chen et al. 2019) shifts weight toward the global model as staleness
+//! grows, protecting convergence in cross-device settings.
+
+use crate::util::linalg;
+
+/// Weight on the GLOBAL model for staleness `t − τ` (rounds).
+pub fn global_weight(beta: f64, staleness: u64) -> f64 {
+    1.0 - (-beta * staleness as f64).exp()
+}
+
+/// Mix in place: `local = (1−w_g)·local + w_g·global` per Eq. 3.
+pub fn mix_into_local(beta: f64, staleness: u64, global: &[f32], local: &mut [f32]) {
+    let w_g = global_weight(beta, staleness) as f32;
+    linalg::mix(w_g, global, local);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_staleness_keeps_local() {
+        // t == τ (client participated this round already): weight on the
+        // global model is 0 — pure local.
+        assert_eq!(global_weight(0.5, 0), 0.0);
+        let global = vec![10.0f32; 4];
+        let mut local = vec![1.0f32; 4];
+        mix_into_local(0.5, 0, &global, &mut local);
+        assert_eq!(local, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn infinite_staleness_converges_to_global() {
+        let w = global_weight(0.5, 1000);
+        assert!((w - 1.0).abs() < 1e-12);
+        let global = vec![10.0f32; 4];
+        let mut local = vec![1.0f32; 4];
+        mix_into_local(0.5, 1000, &global, &mut local);
+        assert_eq!(local, vec![10.0; 4]);
+    }
+
+    #[test]
+    fn weight_monotone_in_staleness_and_beta() {
+        let mut prev = -1.0;
+        for s in 0..10 {
+            let w = global_weight(0.7, s);
+            assert!(w > prev);
+            prev = w;
+        }
+        assert!(global_weight(2.0, 3) > global_weight(0.5, 3));
+    }
+
+    #[test]
+    fn one_round_staleness_matches_formula() {
+        let beta = 0.8;
+        let w = global_weight(beta, 1);
+        assert!((w - (1.0 - (-beta as f64).exp())).abs() < 1e-12);
+        let global = vec![2.0f32];
+        let mut local = vec![0.0f32];
+        mix_into_local(beta, 1, &global, &mut local);
+        assert!((local[0] as f64 - 2.0 * w).abs() < 1e-6);
+    }
+}

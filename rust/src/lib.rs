@@ -1,0 +1,36 @@
+//! # EcoLoRA
+//!
+//! Reproduction of *EcoLoRA: Communication-Efficient Federated Fine-Tuning
+//! of Large Language Models* (EMNLP 2025) as a three-layer rust + JAX +
+//! Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the federated-learning coordinator: the
+//!   paper's round-robin segment sharing, adaptive sparsification with
+//!   error feedback, Golomb-coded sparse wire format, the FedIT / FLoRA /
+//!   FFA-LoRA baselines, a discrete-event network simulator, non-IID data
+//!   partitioners, and the evaluation + metrics stack.
+//! * **Layer 2** — `python/compile/model.py`: JAX transformer with LoRA,
+//!   AOT-lowered to HLO text once by `make artifacts`.
+//! * **Layer 1** — `python/compile/kernels/`: the fused LoRA-linear Pallas
+//!   kernel the model calls on its hot path.
+//!
+//! Python never runs at request time: the coordinator executes the compiled
+//! artifacts through PJRT (`runtime`).
+
+pub mod baselines;
+pub mod bench;
+pub mod compress;
+pub mod config;
+pub mod data;
+pub mod eval;
+pub mod fed;
+pub mod metrics;
+pub mod model;
+pub mod netsim;
+pub mod runtime;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

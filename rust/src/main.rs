@@ -1,0 +1,9 @@
+//! `ecolora` CLI — leader entrypoint. Subcommands are implemented in
+//! `config::commands`; see `ecolora help`.
+
+fn main() {
+    if let Err(e) = ecolora::config::commands::dispatch() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

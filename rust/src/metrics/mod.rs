@@ -1,0 +1,255 @@
+//! Communication accounting + round telemetry.
+//!
+//! Tracks exactly what the paper reports: uploaded / downloaded parameter
+//! counts and wire bytes per round (excluding the initial base-model
+//! distribution, per Appendix A), loss curves, eval scores, per-matrix
+//! Gini coefficients (Figure 2), and wall-clock timers.
+
+use std::fmt::Write as _;
+
+use crate::util::stats;
+
+/// One communication direction's totals.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommTotals {
+    /// Transmitted parameter count (the paper's "Param." columns).
+    pub params: u64,
+    /// Exact on-the-wire bytes (drives the netsim).
+    pub bytes: u64,
+}
+
+impl CommTotals {
+    pub fn add(&mut self, params: usize, bytes: usize) {
+        self.params += params as u64;
+        self.bytes += bytes as u64;
+    }
+
+    pub fn merge(&mut self, other: &CommTotals) {
+        self.params += other.params;
+        self.bytes += other.bytes;
+    }
+
+    pub fn params_m(&self) -> f64 {
+        self.params as f64 / 1e6
+    }
+}
+
+/// Per-round record (one row of the training log).
+#[derive(Debug, Clone, Default)]
+pub struct RoundRecord {
+    pub round: usize,
+    pub global_loss: f64,
+    pub eval_acc: Option<f64>,
+    pub up: CommTotals,
+    pub down: CommTotals,
+    pub k_a: f64,
+    pub k_b: f64,
+    pub gini_a: f64,
+    pub gini_b: f64,
+    /// L3 coordinator overhead this round (compress/aggregate/encode), s.
+    pub overhead_s: f64,
+    /// Local training compute per sampled client (mean), s.
+    pub compute_s: f64,
+}
+
+/// Full training telemetry.
+#[derive(Debug, Clone, Default)]
+pub struct RunLog {
+    pub rounds: Vec<RoundRecord>,
+    pub label: String,
+}
+
+impl RunLog {
+    pub fn new(label: impl Into<String>) -> Self {
+        RunLog { rounds: vec![], label: label.into() }
+    }
+
+    pub fn push(&mut self, r: RoundRecord) {
+        self.rounds.push(r);
+    }
+
+    pub fn total_up(&self) -> CommTotals {
+        let mut t = CommTotals::default();
+        for r in &self.rounds {
+            t.merge(&r.up);
+        }
+        t
+    }
+
+    pub fn total_down(&self) -> CommTotals {
+        let mut t = CommTotals::default();
+        for r in &self.rounds {
+            t.merge(&r.down);
+        }
+        t
+    }
+
+    /// Upload + download parameters (the paper's "Total Param." column).
+    pub fn total_params(&self) -> u64 {
+        self.total_up().params + self.total_down().params
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.rounds.last().map(|r| r.global_loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_acc(&self) -> Option<f64> {
+        self.rounds.iter().filter_map(|r| r.eval_acc).fold(None, |m, a| {
+            Some(m.map_or(a, |m: f64| m.max(a)))
+        })
+    }
+
+    /// First round index at which eval accuracy reached `target`
+    /// (Tables 3/4 "communication to reach target accuracy").
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<usize> {
+        self.rounds
+            .iter()
+            .find(|r| r.eval_acc.map_or(false, |a| a >= target))
+            .map(|r| r.round)
+    }
+
+    /// Cumulative comm totals up to and including `round`.
+    pub fn totals_until(&self, round: usize) -> (CommTotals, CommTotals) {
+        let mut up = CommTotals::default();
+        let mut down = CommTotals::default();
+        for r in self.rounds.iter().filter(|r| r.round <= round) {
+            up.merge(&r.up);
+            down.merge(&r.down);
+        }
+        (up, down)
+    }
+
+    /// CSV export (one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s\n",
+        );
+        for r in &self.rounds {
+            let _ = writeln!(
+                s,
+                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4}",
+                r.round,
+                r.global_loss,
+                r.eval_acc.map_or(String::from(""), |a| format!("{a:.4}")),
+                r.up.params,
+                r.up.bytes,
+                r.down.params,
+                r.down.bytes,
+                r.k_a,
+                r.k_b,
+                r.gini_a,
+                r.gini_b,
+                r.overhead_s,
+                r.compute_s,
+            );
+        }
+        s
+    }
+}
+
+/// Per-matrix sparsity snapshot (Figure 2).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SparsitySnapshot {
+    pub gini_a: f64,
+    pub gini_b: f64,
+    pub frac_small_a: f64,
+    pub frac_small_b: f64,
+}
+
+/// Compute the Figure 2 statistics from a flat LoRA vector.
+pub fn sparsity_snapshot(
+    lora: &[f32],
+    kinds: &[crate::model::LoraKind],
+) -> SparsitySnapshot {
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for (v, k) in lora.iter().zip(kinds) {
+        match k {
+            crate::model::LoraKind::A => a.push(*v),
+            crate::model::LoraKind::B => b.push(*v),
+        }
+    }
+    // "small" threshold: 10% of the family's RMS
+    let thr = |v: &[f32]| {
+        let rms = (v.iter().map(|x| (x * x) as f64).sum::<f64>() / v.len().max(1) as f64).sqrt();
+        (0.1 * rms) as f32
+    };
+    SparsitySnapshot {
+        gini_a: stats::gini(&a),
+        gini_b: stats::gini(&b),
+        frac_small_a: stats::sparsity(&a, thr(&a)),
+        frac_small_b: stats::sparsity(&b, thr(&b)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LoraKind;
+
+    fn record(round: usize, acc: f64, up: u64) -> RoundRecord {
+        RoundRecord {
+            round,
+            global_loss: 3.0 - round as f64 * 0.1,
+            eval_acc: Some(acc),
+            up: CommTotals { params: up, bytes: up * 2 },
+            down: CommTotals { params: 2 * up, bytes: 4 * up },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn totals_accumulate() {
+        let mut log = RunLog::new("t");
+        log.push(record(0, 0.3, 100));
+        log.push(record(1, 0.5, 150));
+        assert_eq!(log.total_up().params, 250);
+        assert_eq!(log.total_down().params, 500);
+        assert_eq!(log.total_params(), 750);
+    }
+
+    #[test]
+    fn rounds_to_accuracy_finds_first_crossing() {
+        let mut log = RunLog::new("t");
+        log.push(record(0, 0.30, 1));
+        log.push(record(1, 0.55, 1));
+        log.push(record(2, 0.52, 1));
+        assert_eq!(log.rounds_to_accuracy(0.55), Some(1));
+        assert_eq!(log.rounds_to_accuracy(0.9), None);
+        let (up, _) = log.totals_until(1);
+        assert_eq!(up.params, 2);
+    }
+
+    #[test]
+    fn csv_has_row_per_round() {
+        let mut log = RunLog::new("t");
+        log.push(record(0, 0.3, 10));
+        log.push(record(1, 0.4, 10));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.lines().nth(1).unwrap().starts_with("0,"));
+    }
+
+    #[test]
+    fn snapshot_detects_sparser_b() {
+        let mut rng = crate::util::rng::Rng::new(0);
+        let n = 2000;
+        let kinds: Vec<LoraKind> = (0..n)
+            .map(|i| if i < n / 2 { LoraKind::A } else { LoraKind::B })
+            .collect();
+        let lora: Vec<f32> = (0..n)
+            .map(|i| {
+                if i < n / 2 {
+                    rng.normal() as f32 // dense A
+                } else if rng.below(10) == 0 {
+                    5.0 * rng.normal() as f32 // sparse spiky B
+                } else {
+                    0.01 * rng.normal() as f32
+                }
+            })
+            .collect();
+        let s = sparsity_snapshot(&lora, &kinds);
+        assert!(s.gini_b > s.gini_a, "giniA={} giniB={}", s.gini_a, s.gini_b);
+        assert!(s.frac_small_b > s.frac_small_a);
+    }
+}

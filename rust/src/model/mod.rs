@@ -1,0 +1,373 @@
+//! Model parameter schema, loaded from the artifact manifest emitted by
+//! `python/compile/aot.py`.
+//!
+//! The schema is the single source of truth the coordinator shares with the
+//! compiled HLO: flat-vector sizes, per-tensor offsets/shapes, LoRA A/B
+//! kinds (driving matrix-adaptive sparsification, paper §3.4), and the
+//! round-robin segment partition of the flat LoRA vector (paper §3.3).
+
+use std::ops::Range;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+
+/// Which LoRA factor a tensor belongs to (paper: B grows sparser than A).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoraKind {
+    A,
+    B,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub init: String,
+    /// `None` for base tensors.
+    pub kind: Option<LoraKind>,
+    pub layer: i64,
+}
+
+/// One AOT-compiled entry point (train / eval / pretrain / merge / dpo).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub args: Vec<(String, Vec<usize>, String)>,
+    pub outputs: Vec<(String, Vec<usize>, String)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub rank: usize,
+    pub lora_alpha: f64,
+    pub lora_scale: f64,
+    pub batch: usize,
+    pub eval_batch: usize,
+}
+
+/// Parsed manifest for one preset.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    pub preset: String,
+    pub init_std: f64,
+    pub config: ModelConfig,
+    pub base_total: usize,
+    pub lora_total: usize,
+    pub base_tensors: Vec<TensorSpec>,
+    pub lora_tensors: Vec<TensorSpec>,
+    pub artifacts: std::collections::BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_from_json(t: &Json, lora: bool) -> Result<TensorSpec> {
+    let kind = if lora {
+        match t.req("kind").as_str() {
+            Some("A") => Some(LoraKind::A),
+            Some("B") => Some(LoraKind::B),
+            other => return Err(anyhow!("bad lora kind {other:?}")),
+        }
+    } else {
+        None
+    };
+    Ok(TensorSpec {
+        name: t.req("name").as_str().unwrap_or_default().to_string(),
+        shape: t
+            .req("shape")
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .filter_map(|x| x.as_usize())
+            .collect(),
+        offset: t.req("offset").as_usize().unwrap_or(0),
+        size: t.req("size").as_usize().unwrap_or(0),
+        init: t.req("init").as_str().unwrap_or("zeros").to_string(),
+        kind,
+        layer: t.get("layer").and_then(|x| x.as_f64()).unwrap_or(-1.0) as i64,
+    })
+}
+
+fn args_from_json(a: &Json) -> Vec<(String, Vec<usize>, String)> {
+    a.as_arr()
+        .unwrap_or_default()
+        .iter()
+        .map(|x| {
+            (
+                x.req("name").as_str().unwrap_or_default().to_string(),
+                x.req("shape")
+                    .as_arr()
+                    .unwrap_or_default()
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+                x.req("dtype").as_str().unwrap_or("f32").to_string(),
+            )
+        })
+        .collect()
+}
+
+impl Schema {
+    /// Load `<dir>/<preset>.manifest.json`.
+    pub fn load(artifacts_dir: &Path, preset: &str) -> Result<Schema> {
+        let path = artifacts_dir.join(format!("{preset}.manifest.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        let v = json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let c = v.req("config");
+        let config = ModelConfig {
+            vocab: c.req("vocab").as_usize().unwrap(),
+            d_model: c.req("d_model").as_usize().unwrap(),
+            n_layers: c.req("n_layers").as_usize().unwrap(),
+            n_heads: c.req("n_heads").as_usize().unwrap(),
+            d_ff: c.req("d_ff").as_usize().unwrap(),
+            seq_len: c.req("seq_len").as_usize().unwrap(),
+            rank: c.req("rank").as_usize().unwrap(),
+            lora_alpha: c.req("lora_alpha").as_f64().unwrap(),
+            lora_scale: c.req("lora_scale").as_f64().unwrap(),
+            batch: c.req("batch").as_usize().unwrap(),
+            eval_batch: c.req("eval_batch").as_usize().unwrap(),
+        };
+
+        let base_tensors: Vec<TensorSpec> = v
+            .req("base")
+            .req("tensors")
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .map(|t| tensor_from_json(t, false))
+            .collect::<Result<_>>()?;
+        let lora_tensors: Vec<TensorSpec> = v
+            .req("lora")
+            .req("tensors")
+            .as_arr()
+            .unwrap_or_default()
+            .iter()
+            .map(|t| tensor_from_json(t, true))
+            .collect::<Result<_>>()?;
+
+        let mut artifacts = std::collections::BTreeMap::new();
+        if let Json::Obj(m) = v.req("artifacts") {
+            for (tag, a) in m {
+                artifacts.insert(
+                    tag.clone(),
+                    ArtifactSpec {
+                        file: a.req("file").as_str().unwrap_or_default().to_string(),
+                        args: args_from_json(a.req("args")),
+                        outputs: args_from_json(a.req("outputs")),
+                    },
+                );
+            }
+        }
+
+        let schema = Schema {
+            preset: v.req("preset").as_str().unwrap_or_default().to_string(),
+            init_std: v.req("init_std").as_f64().unwrap_or(0.02),
+            config,
+            base_total: v.req("base").req("total").as_usize().unwrap(),
+            lora_total: v.req("lora").req("total").as_usize().unwrap(),
+            base_tensors,
+            lora_tensors,
+            artifacts,
+        };
+        schema.validate()?;
+        Ok(schema)
+    }
+
+    /// Layout invariants: contiguity and totals.
+    pub fn validate(&self) -> Result<()> {
+        for (tensors, total, fam) in [
+            (&self.base_tensors, self.base_total, "base"),
+            (&self.lora_tensors, self.lora_total, "lora"),
+        ] {
+            let mut off = 0;
+            for t in tensors.iter() {
+                if t.offset != off {
+                    return Err(anyhow!("{fam} tensor {} offset {} != {}", t.name, t.offset, off));
+                }
+                let numel: usize = t.shape.iter().product();
+                if numel != t.size {
+                    return Err(anyhow!("{fam} tensor {} size mismatch", t.name));
+                }
+                off += t.size;
+            }
+            if off != total {
+                return Err(anyhow!("{fam} total {} != sum {}", total, off));
+            }
+        }
+        Ok(())
+    }
+
+    // ---- initialization --------------------------------------------------
+
+    fn init_flat(&self, tensors: &[TensorSpec], total: usize, rng: &mut Rng) -> Vec<f32> {
+        let mut flat = vec![0.0f32; total];
+        let std = self.init_std as f32;
+        for t in tensors {
+            match t.init.as_str() {
+                "normal" => {
+                    for v in &mut flat[t.offset..t.offset + t.size] {
+                        *v = std * rng.normal() as f32;
+                    }
+                }
+                "ones" => flat[t.offset..t.offset + t.size].fill(1.0),
+                _ => {} // zeros
+            }
+        }
+        flat
+    }
+
+    /// Random base initialization (before in-repo pretraining).
+    pub fn init_base(&self, rng: &mut Rng) -> Vec<f32> {
+        self.init_flat(&self.base_tensors, self.base_total, rng)
+    }
+
+    /// Standard LoRA init: A ~ N(0, std), B = 0 (adapter starts as identity).
+    pub fn init_lora(&self, rng: &mut Rng) -> Vec<f32> {
+        self.init_flat(&self.lora_tensors, self.lora_total, rng)
+    }
+
+    // ---- masks & kinds -----------------------------------------------------
+
+    /// Per-entry LoRA kind lookup table (A=false, B=true packing avoided
+    /// for clarity; one byte per entry, built once).
+    pub fn kind_map(&self) -> Vec<LoraKind> {
+        let mut map = vec![LoraKind::A; self.lora_total];
+        for t in &self.lora_tensors {
+            if t.kind == Some(LoraKind::B) {
+                map[t.offset..t.offset + t.size].fill(LoraKind::B);
+            }
+        }
+        map
+    }
+
+    /// grad mask: all ones (FedIT / FLoRA — train both factors).
+    pub fn mask_all(&self) -> Vec<f32> {
+        vec![1.0; self.lora_total]
+    }
+
+    /// grad mask freezing A (FFA-LoRA trains B only).
+    pub fn mask_b_only(&self) -> Vec<f32> {
+        let mut m = vec![0.0f32; self.lora_total];
+        for t in &self.lora_tensors {
+            if t.kind == Some(LoraKind::B) {
+                m[t.offset..t.offset + t.size].fill(1.0);
+            }
+        }
+        m
+    }
+
+    /// Count of trainable params under a mask (for comm accounting).
+    pub fn mask_count(mask: &[f32]) -> usize {
+        mask.iter().filter(|&&x| x != 0.0).count()
+    }
+}
+
+/// Partition `total` flat entries into `n_s` near-equal contiguous segments
+/// (paper §3.3: "equally sized segments"; remainder spread over the first
+/// `total % n_s` segments so sizes differ by at most 1).
+pub fn segment_ranges(total: usize, n_s: usize) -> Vec<Range<usize>> {
+    assert!(n_s >= 1 && n_s <= total.max(1));
+    let base = total / n_s;
+    let rem = total % n_s;
+    let mut out = Vec::with_capacity(n_s);
+    let mut off = 0;
+    for s in 0..n_s {
+        let len = base + usize::from(s < rem);
+        out.push(off..off + len);
+        off += len;
+    }
+    debug_assert_eq!(off, total);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn segment_ranges_cover_exactly() {
+        propcheck(200, |rng| {
+            let total = rng.below(10_000) + 1;
+            let n_s = rng.below(total.min(16)) + 1;
+            let segs = segment_ranges(total, n_s);
+            assert_eq!(segs.len(), n_s);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for r in &segs {
+                assert_eq!(r.start, prev_end);
+                prev_end = r.end;
+                covered += r.len();
+            }
+            assert_eq!(covered, total);
+            let min = segs.iter().map(|r| r.len()).min().unwrap();
+            let max = segs.iter().map(|r| r.len()).max().unwrap();
+            assert!(max - min <= 1, "near-equal sizes");
+        });
+    }
+
+    fn fake_schema() -> Schema {
+        // hand-built two-tensor schema (A then B)
+        Schema {
+            preset: "fake".into(),
+            init_std: 0.02,
+            config: ModelConfig {
+                vocab: 16, d_model: 4, n_layers: 1, n_heads: 1, d_ff: 8,
+                seq_len: 8, rank: 2, lora_alpha: 4.0, lora_scale: 2.0,
+                batch: 2, eval_batch: 4,
+            },
+            base_total: 10,
+            lora_total: 16,
+            base_tensors: vec![TensorSpec {
+                name: "w".into(), shape: vec![10], offset: 0, size: 10,
+                init: "normal".into(), kind: None, layer: -1,
+            }],
+            lora_tensors: vec![
+                TensorSpec { name: "a".into(), shape: vec![4, 2], offset: 0, size: 8,
+                             init: "normal".into(), kind: Some(LoraKind::A), layer: 0 },
+                TensorSpec { name: "b".into(), shape: vec![2, 4], offset: 8, size: 8,
+                             init: "zeros".into(), kind: Some(LoraKind::B), layer: 0 },
+            ],
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn validate_catches_gaps() {
+        let mut s = fake_schema();
+        s.validate().unwrap();
+        s.lora_tensors[1].offset = 9;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn lora_init_is_a_normal_b_zero() {
+        let s = fake_schema();
+        let mut rng = Rng::new(0);
+        let flat = s.init_lora(&mut rng);
+        assert!(flat[..8].iter().any(|&x| x != 0.0));
+        assert!(flat[8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn masks_and_kind_map() {
+        let s = fake_schema();
+        let m = s.mask_b_only();
+        assert_eq!(Schema::mask_count(&m), 8);
+        assert!(m[..8].iter().all(|&x| x == 0.0));
+        let km = s.kind_map();
+        assert!(km[..8].iter().all(|&k| k == LoraKind::A));
+        assert!(km[8..].iter().all(|&k| k == LoraKind::B));
+        assert_eq!(Schema::mask_count(&s.mask_all()), 16);
+    }
+}

@@ -1,0 +1,98 @@
+//! Access-link model: store-and-forward FIFO serialization with one-way
+//! propagation latency. Each client owns an asymmetric (UL, DL) link pair;
+//! flows on the same direction of the same link queue behind each other.
+
+/// Static link parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkSpec {
+    pub ul_mbps: f64,
+    pub dl_mbps: f64,
+    pub latency_s: f64,
+}
+
+impl LinkSpec {
+    /// Pure serialization time of `bytes` at `mbps` (no queueing/latency).
+    pub fn serialize_s(bytes: usize, mbps: f64) -> f64 {
+        (bytes as f64 * 8.0) / (mbps * 1e6)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    Up,
+    Down,
+}
+
+/// One directed link with FIFO occupancy.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub mbps: f64,
+    pub latency_s: f64,
+    busy_until: f64,
+}
+
+impl Link {
+    pub fn new(mbps: f64, latency_s: f64) -> Self {
+        Link { mbps, latency_s, busy_until: 0.0 }
+    }
+
+    /// Enqueue a flow of `bytes` arriving at the sender at `start`;
+    /// returns the receiver-side completion time. Transmission begins when
+    /// the link frees up (FIFO), then takes serialization + latency.
+    pub fn transfer(&mut self, start: f64, bytes: usize) -> f64 {
+        let begin = start.max(self.busy_until);
+        let tx = LinkSpec::serialize_s(bytes, self.mbps);
+        self.busy_until = begin + tx;
+        self.busy_until + self.latency_s
+    }
+
+    /// Completion time without mutating state (capacity probe).
+    pub fn peek_transfer(&self, start: f64, bytes: usize) -> f64 {
+        let begin = start.max(self.busy_until);
+        begin + LinkSpec::serialize_s(bytes, self.mbps) + self.latency_s
+    }
+
+    pub fn reset(&mut self) {
+        self.busy_until = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_time_matches_bandwidth() {
+        // 1 MB at 8 Mbps = 1 second
+        let t = LinkSpec::serialize_s(1_000_000, 8.0);
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_flow_includes_latency() {
+        let mut l = Link::new(8.0, 0.05);
+        let done = l.transfer(0.0, 1_000_000);
+        assert!((done - 1.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fifo_queueing_serializes_flows() {
+        let mut l = Link::new(8.0, 0.05);
+        let d1 = l.transfer(0.0, 1_000_000);
+        let d2 = l.transfer(0.0, 1_000_000); // queued behind flow 1
+        assert!((d1 - 1.05).abs() < 1e-9);
+        assert!((d2 - 2.05).abs() < 1e-9);
+        // a later flow that arrives after the link is free is not delayed
+        let d3 = l.transfer(10.0, 1_000_000);
+        assert!((d3 - 11.05).abs() < 1e-9);
+    }
+
+    #[test]
+    fn peek_does_not_mutate() {
+        let mut l = Link::new(8.0, 0.0);
+        let p = l.peek_transfer(0.0, 1_000_000);
+        let t = l.transfer(0.0, 1_000_000);
+        assert_eq!(p, t);
+        assert!(l.peek_transfer(0.0, 1_000_000) > p);
+    }
+}

@@ -1,0 +1,60 @@
+//! Discrete-event network simulator — the ns-3 substitute (paper §4.3).
+//!
+//! The paper evaluates communication time on a simulated FL platform
+//! (ns3-fl) with asymmetric uplink/downlink access links per client and
+//! 50 ms latency. This module reproduces that measurement: store-and-
+//! forward flows over per-client access links plus an optional finite
+//! server egress link, driven by a virtual-time event queue.
+//!
+//! What Figure 3 depends on is flow-completion time under bandwidth
+//! asymmetry — latency + serialization + FIFO queueing — which this model
+//! captures exactly; packet-level effects (slow start, loss) are not
+//! modelled, matching the paper's observation that "actual throughput
+//! typically falls short of theoretical bandwidth" only qualitatively.
+
+pub mod event;
+pub mod link;
+pub mod sim;
+
+pub use link::{Link, LinkSpec};
+pub use sim::{NetSim, RoundPlan, RoundTiming};
+
+/// A named bandwidth scenario (uplink/downlink in Mbps + one-way latency).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub ul_mbps: f64,
+    pub dl_mbps: f64,
+    pub latency_s: f64,
+}
+
+impl Scenario {
+    pub const fn new(name: &'static str, ul_mbps: f64, dl_mbps: f64) -> Self {
+        Scenario { name, ul_mbps, dl_mbps, latency_s: 0.05 }
+    }
+
+    pub fn link(&self) -> LinkSpec {
+        LinkSpec { ul_mbps: self.ul_mbps, dl_mbps: self.dl_mbps, latency_s: self.latency_s }
+    }
+}
+
+/// The paper's four UL/DL settings (§4.3, Figure 3).
+pub const PAPER_SCENARIOS: [Scenario; 4] = [
+    Scenario::new("0.2/1 Mbps", 0.2, 1.0),
+    Scenario::new("1/5 Mbps", 1.0, 5.0),
+    Scenario::new("2/10 Mbps", 2.0, 10.0),
+    Scenario::new("5/25 Mbps", 5.0, 25.0),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scenarios_are_asymmetric() {
+        for s in PAPER_SCENARIOS {
+            assert!(s.ul_mbps < s.dl_mbps, "{}", s.name);
+            assert_eq!(s.latency_s, 0.05);
+        }
+    }
+}

@@ -1,0 +1,207 @@
+//! Round-level FL network simulation: broadcast → local compute → upload,
+//! driven by the event queue over per-client links and an optional finite
+//! server egress link.
+
+use super::event::EventQueue;
+use super::link::{Link, LinkSpec};
+
+/// Per-round inputs for one sampled client.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundPlan {
+    pub dl_bytes: usize,
+    pub compute_s: f64,
+    pub ul_bytes: usize,
+}
+
+/// Timing decomposition of one round (the Figure 3 quantities).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RoundTiming {
+    /// Wall-clock of the synchronous round (max over clients).
+    pub round_s: f64,
+    /// max_i compute_i — the computation share of the round.
+    pub compute_s: f64,
+    /// round_s − compute_s — the communication share (incl. queueing).
+    pub comm_s: f64,
+    /// mean per-client download completion time.
+    pub mean_dl_s: f64,
+    /// mean per-client upload duration.
+    pub mean_ul_s: f64,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum Ev {
+    DlDone { client: usize },
+    ComputeDone { client: usize },
+    UlDone,
+}
+
+/// Discrete-event simulator for synchronous FL rounds.
+pub struct NetSim {
+    /// Per-client (uplink, downlink).
+    links: Vec<(Link, Link)>,
+    /// Finite server egress (broadcast serialization); `None` = unbounded.
+    server_egress: Option<Link>,
+}
+
+impl NetSim {
+    /// Homogeneous fleet: every client has the same access link.
+    pub fn homogeneous(n_clients: usize, spec: LinkSpec) -> Self {
+        NetSim {
+            links: (0..n_clients)
+                .map(|_| {
+                    (Link::new(spec.ul_mbps, spec.latency_s), Link::new(spec.dl_mbps, spec.latency_s))
+                })
+                .collect(),
+            server_egress: None,
+        }
+    }
+
+    /// Heterogeneous fleet (per-client specs).
+    pub fn heterogeneous(specs: &[LinkSpec]) -> Self {
+        NetSim {
+            links: specs
+                .iter()
+                .map(|s| (Link::new(s.ul_mbps, s.latency_s), Link::new(s.dl_mbps, s.latency_s)))
+                .collect(),
+            server_egress: None,
+        }
+    }
+
+    pub fn with_server_egress(mut self, mbps: f64, latency_s: f64) -> Self {
+        self.server_egress = Some(Link::new(mbps, latency_s));
+        self
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.links.len()
+    }
+
+    /// Simulate one synchronous round over the sampled `clients`.
+    ///
+    /// Sequence per client: server egress (if finite) → client downlink →
+    /// local compute → client uplink. The round completes when the last
+    /// upload lands.
+    pub fn run_round(&mut self, clients: &[usize], plans: &[RoundPlan]) -> RoundTiming {
+        assert_eq!(clients.len(), plans.len());
+        for (ul, dl) in &mut self.links {
+            ul.reset();
+            dl.reset();
+        }
+        if let Some(e) = &mut self.server_egress {
+            e.reset();
+        }
+
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let mut dl_done = vec![0.0f64; clients.len()];
+        let mut ul_dur = vec![0.0f64; clients.len()];
+        let mut round_end = 0.0f64;
+
+        // Kick off broadcasts at t=0 (serialized on the server egress when
+        // finite, concurrent otherwise).
+        for (slot, (&c, plan)) in clients.iter().zip(plans).enumerate() {
+            let egress_done = match &mut self.server_egress {
+                Some(e) => e.transfer(0.0, plan.dl_bytes),
+                None => 0.0,
+            };
+            let done = self.links[c].1.transfer(egress_done, plan.dl_bytes);
+            dl_done[slot] = done;
+            q.push(done, Ev::DlDone { client: slot });
+        }
+
+        while let Some(s) = q.pop() {
+            match s.event {
+                Ev::DlDone { client } => {
+                    q.push(s.time + plans[client].compute_s, Ev::ComputeDone { client });
+                }
+                Ev::ComputeDone { client } => {
+                    let c = clients[client];
+                    let done = self.links[c].0.transfer(s.time, plans[client].ul_bytes);
+                    ul_dur[client] = done - s.time;
+                    q.push(done, Ev::UlDone);
+                }
+                Ev::UlDone => {
+                    round_end = round_end.max(s.time);
+                }
+            }
+        }
+
+        let compute = plans.iter().map(|p| p.compute_s).fold(0.0, f64::max);
+        let n = clients.len().max(1) as f64;
+        RoundTiming {
+            round_s: round_end,
+            compute_s: compute,
+            comm_s: round_end - compute,
+            mean_dl_s: dl_done.iter().sum::<f64>() / n,
+            mean_ul_s: ul_dur.iter().sum::<f64>() / n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(ul: f64, dl: f64) -> LinkSpec {
+        LinkSpec { ul_mbps: ul, dl_mbps: dl, latency_s: 0.05 }
+    }
+
+    #[test]
+    fn closed_form_single_client() {
+        let mut sim = NetSim::homogeneous(1, spec(1.0, 5.0));
+        // 1 MB down at 5 Mbps = 1.6s; 0.5 MB up at 1 Mbps = 4.0s
+        let t = sim.run_round(
+            &[0],
+            &[RoundPlan { dl_bytes: 1_000_000, compute_s: 2.0, ul_bytes: 500_000 }],
+        );
+        let expect = (1.6 + 0.05) + 2.0 + (4.0 + 0.05);
+        assert!((t.round_s - expect).abs() < 1e-9, "{} vs {expect}", t.round_s);
+        assert!((t.compute_s - 2.0).abs() < 1e-12);
+        assert!((t.comm_s - (expect - 2.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_clients_round_is_max_not_sum() {
+        let mut sim = NetSim::homogeneous(4, spec(1.0, 5.0));
+        let plan = RoundPlan { dl_bytes: 1_000_000, compute_s: 1.0, ul_bytes: 1_000_000 };
+        let t = sim.run_round(&[0, 1, 2, 3], &[plan; 4]);
+        let single = (1.6 + 0.05) + 1.0 + (8.0 + 0.05);
+        assert!((t.round_s - single).abs() < 1e-9, "clients have independent links");
+    }
+
+    #[test]
+    fn slower_uplink_dominates_under_asymmetry() {
+        let mut sim = NetSim::homogeneous(1, spec(0.2, 1.0));
+        let t = sim.run_round(
+            &[0],
+            &[RoundPlan { dl_bytes: 500_000, compute_s: 1.0, ul_bytes: 500_000 }],
+        );
+        assert!(t.mean_ul_s > 4.0 * t.mean_dl_s, "ul {} dl {}", t.mean_ul_s, t.mean_dl_s);
+    }
+
+    #[test]
+    fn finite_server_egress_serializes_broadcast() {
+        let plan = RoundPlan { dl_bytes: 1_000_000, compute_s: 0.0, ul_bytes: 0 };
+        let mut free = NetSim::homogeneous(2, spec(100.0, 8.0));
+        let t_free = free.run_round(&[0, 1], &[plan; 2]);
+        let mut tight =
+            NetSim::homogeneous(2, spec(100.0, 8.0)).with_server_egress(8.0, 0.0);
+        let t_tight = tight.run_round(&[0, 1], &[plan; 2]);
+        // with an 8 Mbps egress the second client's 1 MB broadcast waits 1s
+        assert!(t_tight.round_s > t_free.round_s + 0.9);
+    }
+
+    #[test]
+    fn smaller_payloads_reduce_comm_share_monotonically() {
+        let mut sim = NetSim::homogeneous(3, spec(1.0, 5.0));
+        let mut last = f64::INFINITY;
+        for bytes in [4_000_000usize, 1_000_000, 200_000] {
+            let t = sim.run_round(
+                &[0, 1, 2],
+                &[RoundPlan { dl_bytes: bytes, compute_s: 5.0, ul_bytes: bytes }; 3],
+            );
+            assert!(t.comm_s < last);
+            last = t.comm_s;
+            assert!((t.compute_s - 5.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,170 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::from_text_file`
+//! → `compile` → `execute_b`). Python produced the artifacts at build time;
+//! this module is the ONLY place the request path touches the compiled
+//! compute. Frozen base weights are uploaded once per process and shared by
+//! every simulated client as a single device buffer.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::model::Schema;
+
+/// Process-wide PJRT engine (CPU client + compiled executable cache).
+pub struct Engine {
+    client: PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: std::sync::Mutex<BTreeMap<String, std::sync::Arc<Exec>>>,
+    /// Cumulative XLA compile time (reported in perf logs).
+    pub compile_seconds: std::sync::Mutex<f64>,
+}
+
+/// One compiled entry point.
+pub struct Exec {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Engine {
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Engine> {
+        let client = PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            client,
+            artifacts_dir: artifacts_dir.into(),
+            cache: Default::default(),
+            compile_seconds: std::sync::Mutex::new(0.0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached by file name).
+    pub fn load(&self, file: &str) -> Result<std::sync::Arc<Exec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("XLA compile of {file}: {e:?}"))?;
+        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        let exec = std::sync::Arc::new(Exec { exe, name: file.to_string() });
+        self.cache.lock().unwrap().insert(file.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Load the artifact for `tag` ("train" / "eval" / ...) of a preset.
+    pub fn load_tagged(&self, schema: &Schema, tag: &str) -> Result<std::sync::Arc<Exec>> {
+        let art = schema
+            .artifacts
+            .get(tag)
+            .ok_or_else(|| anyhow!("preset {} has no `{tag}` artifact", schema.preset))?;
+        self.load(&art.file)
+    }
+
+    // ---- host <-> device transfers ---------------------------------------
+
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload f32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| anyhow!("upload i32 {dims:?}: {e:?}"))
+    }
+
+    pub fn upload_scalar_f32(&self, x: f32) -> Result<PjRtBuffer> {
+        self.upload_f32(&[x], &[])
+    }
+}
+
+/// Host-side copy of one executable output.
+pub fn literal_f32(lit: &Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to f32 vec: {e:?}"))
+}
+
+pub fn literal_scalar_f32(lit: &Literal) -> Result<f32> {
+    let v = literal_f32(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+impl Exec {
+    /// Execute on device buffers, returning the flattened output leaves as
+    /// host literals. Handles both PJRT output conventions (one tuple
+    /// buffer vs per-leaf buffers).
+    pub fn run(&self, args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        let replica = outs
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output replica", self.name))?;
+        let mut literals = Vec::new();
+        for buf in &replica {
+            let lit = buf
+                .to_literal_sync()
+                .map_err(|e| anyhow!("{}: output fetch: {e:?}", self.name))?;
+            // return_tuple=True artifacts produce a single tuple literal.
+            match lit.primitive_type() {
+                Ok(xla::PrimitiveType::Tuple) => {
+                    let mut l = lit;
+                    literals.extend(
+                        l.decompose_tuple()
+                            .map_err(|e| anyhow!("{}: tuple decompose: {e:?}", self.name))?,
+                    );
+                }
+                _ => literals.push(lit),
+            }
+        }
+        Ok(literals)
+    }
+
+    /// Execute and keep outputs on device (for feedback loops where an
+    /// output becomes the next call's input, e.g. pretraining).
+    pub fn run_buffers(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let outs = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("executing {}: {e:?}", self.name))?;
+        outs.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("{}: no output replica", self.name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Exercised end-to-end by rust/tests/integration_runtime.rs (needs
+    // artifacts); unit-level coverage here is limited to error paths.
+    use super::*;
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        if let Ok(engine) = Engine::new("artifacts") {
+            match engine.load("nope.hlo.txt") {
+                Ok(_) => panic!("expected error"),
+                Err(err) => {
+                    let msg = format!("{err:#}");
+                    assert!(msg.contains("nope.hlo.txt"), "{msg}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,217 @@
+//! Bit-granular I/O substrate for the Golomb codec and the sparse wire
+//! format. MSB-first within each byte; writer pads the tail with zeros.
+
+/// Append-only bit writer.
+#[derive(Default, Debug, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Number of valid bits in the last byte (0 = byte boundary).
+    partial: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn write_bit(&mut self, bit: bool) {
+        if self.partial == 0 {
+            self.buf.push(0);
+        }
+        if bit {
+            let last = self.buf.last_mut().unwrap();
+            *last |= 1 << (7 - self.partial);
+        }
+        self.partial = (self.partial + 1) % 8;
+    }
+
+    /// Write the low `n` bits of `v`, most-significant first (n <= 64).
+    /// Byte-granular fast path (§Perf: Golomb codec hot loop).
+    pub fn write_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        let mut rem = n;
+        while rem > 0 {
+            if self.partial == 0 {
+                self.buf.push(0);
+            }
+            let free = 8 - self.partial;
+            let take = free.min(rem);
+            let chunk = ((v >> (rem - take)) & ((1u64 << take) - 1)) as u8;
+            *self.buf.last_mut().unwrap() |= chunk << (free - take);
+            self.partial = (self.partial + take) % 8;
+            rem -= take;
+        }
+    }
+
+    /// Unary code: `q` ones followed by a zero (bulk-written).
+    pub fn write_unary(&mut self, q: u64) {
+        let mut q = q;
+        while q > 0 {
+            let take = q.min(32) as u32;
+            self.write_bits((1u64 << take) - 1, take);
+            q -= take as u64;
+        }
+        self.write_bit(false);
+    }
+
+    pub fn bit_len(&self) -> u64 {
+        if self.partial == 0 {
+            self.buf.len() as u64 * 8
+        } else {
+            (self.buf.len() as u64 - 1) * 8 + self.partial as u64
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Sequential bit reader over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn read_bit(&mut self) -> Option<bool> {
+        let byte = (self.pos / 8) as usize;
+        if byte >= self.buf.len() {
+            return None;
+        }
+        let bit = (self.buf[byte] >> (7 - (self.pos % 8))) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Read `n` bits MSB-first, byte-granular fast path.
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        if self.pos + n as u64 > self.buf.len() as u64 * 8 {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut need = n;
+        while need > 0 {
+            let byte = self.buf[(self.pos / 8) as usize];
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            let take = avail.min(need);
+            let chunk = (byte >> (avail - take)) & (((1u16 << take) - 1) as u8);
+            out = (out << take) | chunk as u64;
+            self.pos += take as u64;
+            need -= take;
+        }
+        Some(out)
+    }
+
+    /// Read a unary code (count of ones before the terminating zero),
+    /// scanning whole bytes via leading-ones counting.
+    pub fn read_unary(&mut self) -> Option<u64> {
+        let mut q = 0u64;
+        loop {
+            let byte_idx = (self.pos / 8) as usize;
+            if byte_idx >= self.buf.len() {
+                return None;
+            }
+            let off = (self.pos % 8) as u32;
+            let avail = 8 - off;
+            // remaining bits of this byte, MSB-aligned in a u8
+            let x = self.buf[byte_idx] << off;
+            let ones = x.leading_ones().min(avail);
+            if ones < avail {
+                self.pos += ones as u64 + 1; // the run plus its terminator
+                return Some(q + ones as u64);
+            }
+            self.pos += avail as u64;
+            q += avail as u64;
+        }
+    }
+
+    pub fn bits_consumed(&self) -> u64 {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.write_bit(b);
+        }
+        assert_eq!(w.bit_len(), 9);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &b in &pattern {
+            assert_eq!(r.read_bit(), Some(b));
+        }
+    }
+
+    #[test]
+    fn fixed_width_fields_roundtrip() {
+        let mut rng = Rng::new(2);
+        let mut vals = vec![];
+        let mut w = BitWriter::new();
+        for _ in 0..500 {
+            let n = 1 + (rng.below(63) as u32);
+            let v = rng.next_u64() & ((1u64 << n) - 1).max(1);
+            let v = if n == 64 { v } else { v & ((1u64 << n) - 1) };
+            w.write_bits(v, n);
+            vals.push((v, n));
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for (v, n) in vals {
+            assert_eq!(r.read_bits(n), Some(v));
+        }
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let mut w = BitWriter::new();
+        for q in 0..40u64 {
+            w.write_unary(q);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for q in 0..40u64 {
+            assert_eq!(r.read_unary(), Some(q));
+        }
+    }
+
+    #[test]
+    fn reader_exhaustion_returns_none() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), Some(0b101));
+        // remaining 5 padding bits then exhaustion
+        assert!(r.read_bits(5).is_some());
+        assert_eq!(r.read_bit(), None);
+        assert_eq!(r.read_bits(1), None);
+    }
+
+    #[test]
+    fn bit_len_accounts_padding() {
+        let mut w = BitWriter::new();
+        w.write_bits(0xFF, 8);
+        assert_eq!(w.bit_len(), 8);
+        w.write_bit(true);
+        assert_eq!(w.bit_len(), 9);
+        assert_eq!(w.as_bytes().len(), 2);
+    }
+}

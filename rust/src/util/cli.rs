@@ -1,0 +1,121 @@
+//! Command-line parsing substrate (no clap offline).
+//!
+//! Grammar: `ecolora <subcommand> [--flag value | --switch] ...`
+//! Flags may appear in any order; `--flag=value` is accepted too.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.flags.insert(stripped.to_string(), it.next().unwrap());
+                } else {
+                    out.switches.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["train", "--preset", "small", "--rounds=40", "--verbose"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("preset"), Some("small"));
+        assert_eq!(a.get_usize("rounds", 0), 40);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = parse(&["x", "--beta", "0.5", "--offset=-3"]);
+        assert_eq!(a.get_f64("beta", 0.0), 0.5);
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+
+    #[test]
+    fn trailing_switch_is_switch() {
+        let a = parse(&["t", "--fast"]);
+        assert!(a.has("fast"));
+        assert_eq!(a.get("fast"), None);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["t"]);
+        assert_eq!(a.get_or("preset", "tiny"), "tiny");
+        assert_eq!(a.get_usize("rounds", 40), 40);
+        assert_eq!(a.get_f64("alpha", 0.5), 0.5);
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let a = parse(&["repro", "one", "--k", "v", "two"]);
+        assert_eq!(a.positional, vec!["one", "two"]);
+    }
+}

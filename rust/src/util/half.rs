@@ -1,0 +1,144 @@
+//! IEEE 754 binary16 conversion substrate (wire format uses sign + FP16
+//! magnitudes; no `half` crate available offline).
+//!
+//! Round-to-nearest-even f32→f16, exact f16→f32, with correct handling of
+//! subnormals, infinities and NaN.
+
+/// Convert f32 to IEEE binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | m;
+    }
+    // Re-bias: f32 exp-127, f16 exp-15.
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        // Subnormal (or zero) in f16.
+        if e < -10 {
+            return sign; // underflow to signed zero
+        }
+        // Implicit leading 1 becomes explicit; shift right by (1 - e).
+        let m = mant | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let half_ulp = 1u32 << (shift - 1);
+        let rounded = m + half_ulp - 1 + ((m >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    // Normal: round mantissa from 23 to 10 bits (nearest even); a mantissa
+    // carry propagates into the exponent by plain addition.
+    let rounded = mant + 0x0000_0FFF + ((mant >> 13) & 1);
+    let out = ((e as u32) << 10) + (rounded >> 13);
+    if out >= 0x7C00 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    sign | out as u16
+}
+
+/// Convert IEEE binary16 bits to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13)
+    } else if exp == 0 {
+        if mant == 0 {
+            sign
+        } else {
+            // Subnormal: value = mant * 2^-24. Normalize with s left
+            // shifts until bit 10 is set; then value = 1.f * 2^(-14 - s),
+            // so the f32 exponent field is 127 - 14 - s = 113 - s.
+            let mut m = mant;
+            let mut s = 0u32;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                s += 1;
+            }
+            sign | ((113 - s) << 23) | ((m & 0x03FF) << 13)
+        }
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize through the wire format: what the receiver reconstructs.
+pub fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_small_integers_roundtrip() {
+        for i in -2048..=2048 {
+            let x = i as f32;
+            assert_eq!(quantize_f16(x), x, "{x}");
+        }
+    }
+
+    #[test]
+    fn known_values() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00); // overflow -> inf
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+        assert!(f16_bits_to_f32(0x7E00).is_nan());
+    }
+
+    #[test]
+    fn zero_signs() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f16_bits_to_f32(0x8000), -0.0);
+    }
+
+    #[test]
+    fn subnormal_roundtrip() {
+        // smallest positive f16 subnormal
+        let tiny = f16_bits_to_f32(0x0001);
+        assert!(tiny > 0.0 && tiny < 1e-7);
+        assert_eq!(f32_to_f16_bits(tiny), 0x0001);
+    }
+
+    #[test]
+    fn relative_error_bounded_for_normals() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50_000 {
+            let x = (rng.normal() as f32) * 10f32.powi(rng.below(7) as i32 - 3);
+            if x == 0.0 || x.abs() < 6.2e-5 || x.abs() > 65000.0 {
+                continue;
+            }
+            let q = quantize_f16(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 1.0 / 1024.0, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_all_f16_bit_patterns() {
+        // f16 -> f32 -> f16 must be the identity on non-NaN patterns.
+        for h in 0u16..=0xFFFF {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), h, "pattern {h:#06x}");
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! Small host-side dense linear algebra substrate (f32). Used by the
+//! TF-IDF/KMeans partitioner and by aggregation fast paths; the heavy
+//! model math all runs in the compiled XLA artifacts, not here.
+
+/// y += alpha * x (fused axpy — aggregation hot path).
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    assert_eq!(x.len(), y.len());
+    // Chunked to let LLVM autovectorize without bounds checks.
+    let chunks = x.len() / 8 * 8;
+    for i in (0..chunks).step_by(8) {
+        for j in 0..8 {
+            y[i + j] += alpha * x[i + j];
+        }
+    }
+    for i in chunks..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// x *= alpha.
+pub fn scale(alpha: f32, x: &mut [f32]) {
+    for v in x {
+        *v *= alpha;
+    }
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (*a as f64) * (*b as f64)).sum()
+}
+
+/// Squared L2 norm.
+pub fn norm_sq(x: &[f32]) -> f64 {
+    dot(x, x)
+}
+
+/// Squared Euclidean distance.
+pub fn dist_sq(x: &[f32], y: &[f32]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// C[m,n] = A[m,k] @ B[k,n], row-major. ikj loop order for locality.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let aik = a[i * k + p];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// Weighted in-place average: dst = (1-w)*dst + w*src (Eq. 3 mixing).
+pub fn mix(w: f32, src: &[f32], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len());
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d = (1.0 - w) * *d + w * *s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_matches_scalar_loop() {
+        let x: Vec<f32> = (0..37).map(|i| i as f32).collect();
+        let mut y = vec![1.0f32; 37];
+        axpy(0.5, &x, &mut y);
+        for (i, v) in y.iter().enumerate() {
+            assert!((v - (1.0 + 0.5 * i as f32)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x2
+        let eye = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul(&a, &eye, 2, 2, 2), a);
+    }
+
+    #[test]
+    fn matmul_known() {
+        // [1 2; 3 4] @ [5 6; 7 8] = [19 22; 43 50]
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![5.0, 6.0, 7.0, 8.0];
+        assert_eq!(matmul(&a, &b, 2, 2, 2), vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn mix_endpoints() {
+        let src = vec![2.0f32; 4];
+        let mut dst = vec![0.0f32; 4];
+        mix(0.0, &src, &mut dst);
+        assert_eq!(dst, vec![0.0; 4]);
+        mix(1.0, &src, &mut dst);
+        assert_eq!(dst, vec![2.0; 4]);
+        mix(0.25, &vec![4.0; 4], &mut dst);
+        assert_eq!(dst, vec![2.5; 4]);
+    }
+
+    #[test]
+    fn dist_and_norm() {
+        let x = [3.0f32, 4.0];
+        assert!((norm_sq(&x) - 25.0).abs() < 1e-9);
+        assert!((dist_sq(&x, &[0.0, 0.0]) - 25.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! deterministic PRNG, JSON codec, bit I/O, IEEE f16, statistics, host
+//! linear algebra, property-check and CLI parsing.
+
+pub mod bitstream;
+pub mod cli;
+pub mod half;
+pub mod json;
+pub mod linalg;
+pub mod propcheck;
+pub mod rng;
+pub mod stats;

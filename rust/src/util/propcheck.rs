@@ -1,0 +1,66 @@
+//! Property-based testing substrate (no proptest offline): run a property
+//! over many seeded random cases; on failure, report the reproducing seed.
+//!
+//! ```ignore
+//! propcheck(500, |rng| {
+//!     let n = rng.below(1000) + 1;
+//!     let v: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+//!     let enc = encode(&v);
+//!     assert_eq!(decode(&enc), v);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` seeded RNG streams. Panics with the failing
+/// seed so the case is reproducible with `propcheck_seed`.
+pub fn propcheck<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(cases: u64, prop: F) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(0xEC0_10A ^ seed.wrapping_mul(0x2545F4914F6CDD1D));
+            prop(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed (debugging helper).
+pub fn propcheck_seed<F: FnOnce(&mut Rng)>(seed: u64, prop: F) {
+    let mut rng = Rng::new(0xEC0_10A ^ seed.wrapping_mul(0x2545F4914F6CDD1D));
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        propcheck(50, |rng| {
+            let a = rng.below(100) as i64;
+            let b = rng.below(100) as i64;
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            propcheck(50, |rng| {
+                assert!(rng.below(10) < 9, "found the 9");
+            })
+        });
+        let msg = match r {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("case seed"), "{msg}");
+    }
+}

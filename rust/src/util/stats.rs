@@ -1,0 +1,159 @@
+//! Statistics substrate: Gini coefficient (paper §3.4 / Figure 2),
+//! summary statistics, and simple online accumulators used by metrics.
+
+/// Gini coefficient of the |values| distribution (0 = perfectly equal,
+/// -> 1 = all mass in few entries). The paper uses this to quantify the
+/// growing sparsity of LoRA matrices A and B over training.
+pub fn gini(values: &[f32]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut mags: Vec<f64> = values.iter().map(|v| v.abs() as f64).collect();
+    mags.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = mags.len() as f64;
+    let total: f64 = mags.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    // G = (2 * sum_i i*x_i) / (n * sum x) - (n + 1) / n  with 1-based i.
+    let weighted: f64 = mags
+        .iter()
+        .enumerate()
+        .map(|(i, x)| (i as f64 + 1.0) * x)
+        .sum();
+    (2.0 * weighted) / (n * total) - (n + 1.0) / n
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() as f64 - 1.0)).sqrt()
+}
+
+/// Percentile via linear interpolation (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() as f64 - 1.0);
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Fraction of entries with |x| <= eps (the paper's sparsity notion).
+pub fn sparsity(values: &[f32], eps: f32) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().filter(|v| v.abs() <= eps).count() as f64 / values.len() as f64
+}
+
+/// Online mean/min/max accumulator for timers and loss curves.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    pub n: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Running {
+    pub fn add(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        } else {
+            self.min = self.min.min(x);
+            self.max = self.max.max(x);
+        }
+        self.n += 1;
+        self.sum += x;
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gini_uniform_is_zero() {
+        let v = vec![3.0f32; 1000];
+        assert!(gini(&v).abs() < 1e-9);
+    }
+
+    #[test]
+    fn gini_single_spike_near_one() {
+        let mut v = vec![0.0f32; 1000];
+        v[17] = 5.0;
+        assert!(gini(&v) > 0.99);
+    }
+
+    #[test]
+    fn gini_is_scale_invariant_and_monotone_in_concentration() {
+        let mut rng = Rng::new(4);
+        let dense: Vec<f32> = (0..4096).map(|_| rng.normal() as f32).collect();
+        let sparse: Vec<f32> = dense
+            .iter()
+            .enumerate()
+            .map(|(i, &x)| if i % 8 == 0 { x * 8.0 } else { x * 0.01 })
+            .collect();
+        let g1 = gini(&dense);
+        let scaled: Vec<f32> = dense.iter().map(|x| x * 100.0).collect();
+        assert!((gini(&scaled) - g1).abs() < 1e-9);
+        assert!(gini(&sparse) > g1);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparsity_counts_small_entries() {
+        let v = [0.0f32, 1e-9, 0.5, -0.5];
+        assert!((sparsity(&v, 1e-6) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn running_accumulator() {
+        let mut r = Running::default();
+        for x in [2.0, -1.0, 5.0] {
+            r.add(x);
+        }
+        assert_eq!(r.n, 3);
+        assert_eq!(r.min, -1.0);
+        assert_eq!(r.max, 5.0);
+        assert!((r.mean() - 2.0).abs() < 1e-12);
+    }
+}

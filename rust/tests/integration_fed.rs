@@ -1,0 +1,205 @@
+//! Integration: full federated runs (FedRunner) over the real tiny
+//! artifacts — every method, with and without EcoLoRA, plus federated DPO.
+//! Asserts the paper's headline communication claims hold mechanically:
+//! EcoLoRA's uplink is ~1/N_s × sparsity of the dense baseline.
+
+use ecolora::baselines::Method;
+use ecolora::compress::{Encoding, SparsMode};
+use ecolora::data::PartitionKind;
+use ecolora::fed::{EcoConfig, FedConfig, FedRunner};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/tiny.manifest.json").exists()
+}
+
+fn base_cfg() -> FedConfig {
+    let mut cfg = FedConfig::test_profile("tiny");
+    cfg.lr = 2.0;
+    cfg
+}
+
+#[test]
+fn fedit_dense_runs_and_accounts_comm() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut runner = FedRunner::new(base_cfg()).unwrap();
+    let lora_total = runner.schema().lora_total as u64;
+    let out = runner.run().unwrap();
+    assert_eq!(out.log.rounds.len(), 4);
+    // dense: every sampled client ships the whole module both ways
+    let per_round_up = 4 * lora_total;
+    assert_eq!(out.log.total_up().params, 4 * per_round_up);
+    assert_eq!(out.log.total_down().params, 4 * per_round_up);
+    assert!(out.final_acc >= 0.0 && out.final_acc <= 1.0);
+    assert!(out.log.final_loss().is_finite());
+}
+
+#[test]
+fn ecolora_cuts_upload_by_segments_times_sparsity() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.eco = Some(EcoConfig { n_s: 4, ..Default::default() });
+    let mut runner = FedRunner::new(cfg).unwrap();
+    let lora_total = runner.schema().lora_total as u64;
+    let out = runner.run().unwrap();
+
+    let dense_up = 4u64 * 4 * lora_total; // rounds * clients * module
+    let eco_up = out.log.total_up().params;
+    // RR alone gives 1/4; sparsification adds k<=0.95 on top
+    assert!(
+        eco_up < dense_up / 3,
+        "eco upload {eco_up} vs dense {dense_up}"
+    );
+    // uplink bytes beat dense f16 too
+    assert!(out.log.total_up().bytes < 2 * dense_up / 3);
+    // loss signal drove the schedule
+    let last = out.log.rounds.last().unwrap();
+    assert!(last.k_a > 0.0 && last.k_a <= 0.95 + 1e-9);
+    assert!(last.k_b <= last.k_a + 1e-9);
+}
+
+#[test]
+fn ffa_halves_dense_traffic() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.method = Method::FfaLora;
+    let mut runner = FedRunner::new(cfg).unwrap();
+    let lora_total = runner.schema().lora_total as u64;
+    let out = runner.run().unwrap();
+    assert_eq!(out.log.total_up().params, 4 * 4 * lora_total / 2);
+}
+
+#[test]
+fn flora_download_is_stacked() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.method = Method::FLoRa;
+    cfg.rounds = 2;
+    let mut runner = FedRunner::new(cfg).unwrap();
+    let lora_total = runner.schema().lora_total as u64;
+    let out = runner.run().unwrap();
+    // each of 4 clients downloads N_t x module per round
+    assert_eq!(out.log.total_down().params, 2 * 4 * 4 * lora_total);
+    assert!(out.log.final_loss().is_finite());
+}
+
+#[test]
+fn eco_with_fixed_spars_and_no_encoding_variants_run() {
+    if !have_artifacts() {
+        return;
+    }
+    for (spars, encoding) in [
+        (SparsMode::Fixed(0.5), Encoding::Golomb),
+        (SparsMode::Adaptive(Default::default()), Encoding::Fixed),
+        (SparsMode::Off, Encoding::Golomb),
+    ] {
+        let mut cfg = base_cfg();
+        cfg.rounds = 2;
+        cfg.eco = Some(EcoConfig { spars, encoding, ..Default::default() });
+        let mut runner = FedRunner::new(cfg).unwrap();
+        let out = runner.run().unwrap();
+        assert!(out.log.final_loss().is_finite());
+        assert!(out.log.total_up().params > 0);
+    }
+}
+
+#[test]
+fn golomb_encoding_beats_fixed_positions_on_the_wire() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |encoding| {
+        let mut cfg = base_cfg();
+        cfg.rounds = 3;
+        cfg.eco = Some(EcoConfig {
+            spars: SparsMode::Fixed(0.25),
+            encoding,
+            downlink_sparse: false,
+            ..Default::default()
+        });
+        let mut r = FedRunner::new(cfg).unwrap();
+        r.run().unwrap().log.total_up()
+    };
+    let golomb = run(Encoding::Golomb);
+    let fixed = run(Encoding::Fixed);
+    assert_eq!(golomb.params, fixed.params, "same selection, different coding");
+    assert!(
+        golomb.bytes < fixed.bytes,
+        "golomb {} vs fixed {}",
+        golomb.bytes,
+        fixed.bytes
+    );
+}
+
+#[test]
+fn task_domain_partition_run() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.partition = PartitionKind::TaskDomain;
+    cfg.rounds = 2;
+    cfg.eco = Some(EcoConfig::default());
+    let out = FedRunner::new(cfg).unwrap().run().unwrap();
+    assert!(out.log.final_loss().is_finite());
+}
+
+#[test]
+fn dpo_mode_runs_and_reports_margin() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.dpo = true;
+    cfg.rounds = 2;
+    cfg.eco = Some(EcoConfig::default());
+    let out = FedRunner::new(cfg).unwrap().run().unwrap();
+    assert!(out.final_margin.is_some());
+    assert!(out.final_margin.unwrap().is_finite());
+}
+
+#[test]
+fn run_is_seed_deterministic() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = || {
+        let mut cfg = base_cfg();
+        cfg.rounds = 2;
+        cfg.eco = Some(EcoConfig::default());
+        let mut r = FedRunner::new(cfg).unwrap();
+        let out = r.run().unwrap();
+        (
+            out.log.total_up().bytes,
+            out.log.final_loss(),
+            out.final_lora.iter().map(|x| x.abs() as f64).sum::<f64>(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.0, b.0);
+    assert_eq!(a.1, b.1);
+    assert!((a.2 - b.2).abs() < 1e-9);
+}
+
+#[test]
+fn gini_tracked_per_round() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.rounds = 3;
+    cfg.eco = Some(EcoConfig::default());
+    let out = FedRunner::new(cfg).unwrap().run().unwrap();
+    for r in &out.log.rounds {
+        assert!(r.gini_a >= 0.0 && r.gini_a <= 1.0);
+        assert!(r.gini_b >= 0.0 && r.gini_b <= 1.0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Integration: netsim replay of a real training log — the Figure 3
+//! measurement path. A federated run produces per-round byte counts and
+//! compute times; the simulator turns them into comm/compute wall-clock
+//! under each of the paper's bandwidth scenarios.
+
+use ecolora::fed::{EcoConfig, FedConfig, FedRunner};
+use ecolora::metrics::RunLog;
+use ecolora::netsim::{NetSim, RoundPlan, PAPER_SCENARIOS};
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/tiny.manifest.json").exists()
+}
+
+/// Replay a run log through a bandwidth scenario (mirrors
+/// `reports::replay_network`, duplicated here to keep the test independent).
+fn replay(log: &RunLog, n_t: usize, scenario: ecolora::netsim::Scenario) -> (f64, f64) {
+    let mut sim = NetSim::homogeneous(n_t, scenario.link());
+    let mut comm = 0.0;
+    let mut compute = 0.0;
+    for r in &log.rounds {
+        let plan = RoundPlan {
+            dl_bytes: (r.down.bytes as usize) / n_t.max(1),
+            compute_s: r.compute_s,
+            ul_bytes: (r.up.bytes as usize) / n_t.max(1),
+        };
+        let clients: Vec<usize> = (0..n_t).collect();
+        let t = sim.run_round(&clients, &vec![plan; n_t]);
+        comm += t.comm_s;
+        compute += t.compute_s;
+    }
+    (comm, compute)
+}
+
+#[test]
+fn ecolora_comm_time_beats_dense_in_every_scenario() {
+    if !have_artifacts() {
+        return;
+    }
+    let run = |eco: Option<EcoConfig>| {
+        let mut cfg = FedConfig::test_profile("tiny");
+        cfg.lr = 2.0;
+        cfg.rounds = 3;
+        cfg.eco = eco;
+        FedRunner::new(cfg).unwrap().run().unwrap().log
+    };
+    let dense = run(None);
+    let eco = run(Some(EcoConfig::default()));
+
+    for sc in PAPER_SCENARIOS {
+        let (dense_comm, _) = replay(&dense, 4, sc);
+        let (eco_comm, _) = replay(&eco, 4, sc);
+        assert!(
+            eco_comm < dense_comm,
+            "{}: eco {eco_comm:.2}s vs dense {dense_comm:.2}s",
+            sc.name
+        );
+    }
+}
+
+#[test]
+fn comm_share_grows_as_bandwidth_shrinks() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = FedConfig::test_profile("tiny");
+    cfg.lr = 2.0;
+    cfg.rounds = 2;
+    let log = FedRunner::new(cfg).unwrap().run().unwrap().log;
+
+    let mut shares = vec![];
+    for sc in PAPER_SCENARIOS {
+        let (comm, compute) = replay(&log, 4, sc);
+        shares.push(comm / (comm + compute));
+    }
+    // scenarios are ordered slowest -> fastest: comm share must decrease
+    for w in shares.windows(2) {
+        assert!(w[0] > w[1], "shares {shares:?}");
+    }
+}

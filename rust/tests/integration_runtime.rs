@@ -1,0 +1,235 @@
+//! Integration: PJRT runtime + Session against the real AOT artifacts
+//! (requires `make artifacts`). Verifies the python→HLO→rust bridge
+//! end-to-end: shapes, training descent, mask semantics, merge identity,
+//! DPO margin growth.
+
+use std::path::Path;
+
+use ecolora::fed::session::Session;
+use ecolora::model::Schema;
+use ecolora::util::rng::Rng;
+
+fn artifacts() -> &'static Path {
+    Path::new("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts().join("tiny.manifest.json").exists()
+}
+
+fn session() -> Session {
+    let mut rng = Rng::new(7);
+    Session::new(artifacts(), "tiny", &mut rng).expect("session")
+}
+
+fn batch(schema: &Schema, rng: &mut Rng) -> Vec<i32> {
+    let b = schema.config.batch;
+    let seq = schema.config.seq_len + 1;
+    (0..b * seq)
+        .map(|_| 1 + rng.below(schema.config.vocab - 1) as i32)
+        .collect()
+}
+
+#[test]
+fn schema_loads_and_validates_for_all_built_presets() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    for preset in ["tiny", "small", "small_va", "medium"] {
+        if artifacts().join(format!("{preset}.manifest.json")).exists() {
+            let s = Schema::load(artifacts(), preset).expect(preset);
+            assert!(s.lora_total > 0 && s.base_total > s.lora_total);
+            assert!(s.artifacts.contains_key("train"));
+            assert!(s.artifacts.contains_key("eval"));
+        }
+    }
+}
+
+#[test]
+fn train_step_roundtrip_and_descent() {
+    if !have_artifacts() {
+        return;
+    }
+    let sess = session();
+    let mut rng = Rng::new(1);
+    let lora = sess.schema.init_lora(&mut rng);
+    let mask = sess.upload_mask(&sess.schema.mask_all()).unwrap();
+    let tokens = batch(&sess.schema, &mut rng);
+
+    let (l1, first_loss) = sess.train_step(&lora, &tokens, 2.0, &mask).unwrap();
+    assert_eq!(l1.len(), sess.schema.lora_total);
+    assert!(first_loss.is_finite() && first_loss > 0.0);
+
+    // Repeated steps on the same batch must reduce the loss. (LoRA starts
+    // with B = 0, so dL/dA = 0 at step one and SGD descent ramps slowly —
+    // hence the generous step budget.)
+    let mut cur = l1;
+    let mut last = first_loss;
+    for _ in 0..25 {
+        let (next, loss) = sess.train_step(&cur, &tokens, 2.0, &mask).unwrap();
+        cur = next;
+        last = loss;
+    }
+    assert!(
+        last < first_loss - 0.01,
+        "loss did not descend: {first_loss} -> {last}"
+    );
+}
+
+#[test]
+fn ffa_mask_freezes_a_entries() {
+    if !have_artifacts() {
+        return;
+    }
+    let sess = session();
+    let mut rng = Rng::new(2);
+    let lora = sess.schema.init_lora(&mut rng);
+    let mask_b = sess.upload_mask(&sess.schema.mask_b_only()).unwrap();
+    let tokens = batch(&sess.schema, &mut rng);
+    let (new_lora, _) = sess.train_step(&lora, &tokens, 0.5, &mask_b).unwrap();
+    for t in &sess.schema.lora_tensors {
+        let before = &lora[t.offset..t.offset + t.size];
+        let after = &new_lora[t.offset..t.offset + t.size];
+        match t.kind {
+            Some(ecolora::model::LoraKind::A) => assert_eq!(before, after, "{} moved", t.name),
+            _ => {}
+        }
+    }
+    // and B did move
+    let moved = sess
+        .schema
+        .lora_tensors
+        .iter()
+        .filter(|t| t.kind == Some(ecolora::model::LoraKind::B))
+        .any(|t| lora[t.offset..t.offset + t.size] != new_lora[t.offset..t.offset + t.size]);
+    assert!(moved, "B entries should train");
+}
+
+#[test]
+fn eval_rows_shape_and_finiteness() {
+    if !have_artifacts() {
+        return;
+    }
+    let sess = session();
+    let mut rng = Rng::new(3);
+    let lora = sess.schema.init_lora(&mut rng);
+    let be = sess.schema.config.eval_batch;
+    let seq = sess.schema.config.seq_len + 1;
+    let tokens: Vec<i32> = (0..be * seq)
+        .map(|_| 1 + rng.below(sess.schema.config.vocab - 1) as i32)
+        .collect();
+    let rows = sess.eval_rows(&lora, &tokens).unwrap();
+    assert_eq!(rows.len(), be);
+    assert!(rows.iter().all(|x| x.is_finite() && *x > 0.0));
+}
+
+#[test]
+fn zero_lr_is_identity() {
+    if !have_artifacts() {
+        return;
+    }
+    let sess = session();
+    let mut rng = Rng::new(4);
+    let lora = sess.schema.init_lora(&mut rng);
+    let mask = sess.upload_mask(&sess.schema.mask_all()).unwrap();
+    let tokens = batch(&sess.schema, &mut rng);
+    let (new_lora, _) = sess.train_step(&lora, &tokens, 0.0, &mask).unwrap();
+    assert_eq!(lora, new_lora);
+}
+
+#[test]
+fn merge_scale_zero_keeps_base() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut sess = session();
+    let mut rng = Rng::new(5);
+    let lora = sess.schema.init_lora(&mut rng);
+    let before = sess.base_host().to_vec();
+    sess.merge_lora(&lora, 0.0).unwrap();
+    assert_eq!(before, sess.base_host());
+}
+
+#[test]
+fn merge_matches_adapter_semantics_through_eval() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut sess = session();
+    let mut rng = Rng::new(6);
+    // make a LoRA with nonzero B so the adapter acts
+    let mut lora = sess.schema.init_lora(&mut rng);
+    for v in lora.iter_mut() {
+        if *v == 0.0 {
+            *v = 0.03 * rng.normal() as f32;
+        }
+    }
+    let be = sess.schema.config.eval_batch;
+    let seq = sess.schema.config.seq_len + 1;
+    let tokens: Vec<i32> = (0..be * seq)
+        .map(|_| 1 + rng.below(sess.schema.config.vocab - 1) as i32)
+        .collect();
+    let with_adapter = sess.eval_rows(&lora, &tokens).unwrap();
+    sess.merge_lora(&lora, 1.0).unwrap();
+    let zeros = vec![0.0f32; sess.schema.lora_total];
+    let with_merged = sess.eval_rows(&zeros, &tokens).unwrap();
+    for (a, b) in with_adapter.iter().zip(&with_merged) {
+        assert!((a - b).abs() < 2e-2, "{a} vs {b}");
+    }
+}
+
+#[test]
+fn pretrain_descends_and_persists() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut sess = session();
+    let mut rng = Rng::new(8);
+    let tokens = batch(&sess.schema, &mut rng);
+    let first = sess.pretrain_step(&tokens, 0.5).unwrap();
+    let mut last = first;
+    for _ in 0..10 {
+        last = sess.pretrain_step(&tokens, 0.5).unwrap();
+    }
+    assert!(last < first, "pretrain loss {first} -> {last}");
+
+    // checkpoint roundtrip
+    let tmp = std::env::temp_dir().join("ecolora_test_base.bin");
+    sess.save_base(&tmp).unwrap();
+    let before = sess.base_host().to_vec();
+    let mut sess2 = session();
+    sess2.load_base(&tmp).unwrap();
+    assert_eq!(before, sess2.base_host());
+    let _ = std::fs::remove_file(&tmp);
+}
+
+#[test]
+fn dpo_step_runs_and_margin_grows() {
+    if !have_artifacts() {
+        return;
+    }
+    let sess = session();
+    let mut rng = Rng::new(9);
+    let mut lora = sess.schema.init_lora(&mut rng);
+    let mask = sess.upload_mask(&sess.schema.mask_all()).unwrap();
+    let b = sess.schema.config.batch;
+    let seq = sess.schema.config.seq_len + 1;
+    let chosen: Vec<i32> =
+        (0..b * seq).map(|_| 1 + rng.below(sess.schema.config.vocab - 1) as i32).collect();
+    let rejected: Vec<i32> =
+        (0..b * seq).map(|_| 1 + rng.below(sess.schema.config.vocab - 1) as i32).collect();
+
+    let (_, loss0, m0) = sess.dpo_step(&lora, &chosen, &rejected, 0.0, 0.5, &mask).unwrap();
+    assert!(loss0.is_finite());
+    let mut margin = m0;
+    let mut loss = loss0;
+    for _ in 0..10 {
+        let (next, l, m) = sess.dpo_step(&lora, &chosen, &rejected, 0.5, 0.5, &mask).unwrap();
+        lora = next;
+        margin = m;
+        loss = l;
+    }
+    assert!(margin > m0, "margin {m0} -> {margin}");
+    assert!(loss < loss0, "dpo loss {loss0} -> {loss}");
+}
