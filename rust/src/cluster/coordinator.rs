@@ -1,0 +1,366 @@
+//! Coordinator: the server-side round state machine.
+//!
+//! A round moves through four typed phases, each driven by protocol
+//! messages rather than shared memory:
+//!
+//! ```text
+//!   Sampling ──► Broadcast ──► Collect ──► Aggregate
+//!   (fork RNG,   (downlink     (TrainResult (Eq. 2 merge,
+//!    pick cohort) payload per   per slot,    telemetry,
+//!                 slot → tasks) any order)   eval, FLoRA base sync)
+//! ```
+//!
+//! `begin_round` performs Sampling + Broadcast and returns the
+//! slot-ordered `TrainTask`s; `accept` consumes `TrainResult`s in ANY
+//! arrival order; `finish_round` aggregates strictly in slot order so the
+//! floating-point reduction is identical to the monolithic `FedRunner` —
+//! that, plus per-task RNG streams and per-client compressor state on the
+//! participants, is what makes the cluster path bitwise-reproducible.
+//!
+//! The coordinator owns the global model, the per-client downlink
+//! channels (reference + error-feedback compressor), and the evaluation
+//! stack; it never runs local training.
+
+use std::time::Instant;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::dense_bytes;
+use crate::data::{corpus, preference};
+use crate::eval::{DpoEvaluator, McEvaluator};
+use crate::fed::downlink::{DownWire, DownlinkState};
+use crate::fed::server::SegmentAggregator;
+use crate::fed::world::{self, World};
+use crate::fed::{round_robin, FedConfig, FedOutcome};
+use crate::metrics::{sparsity_snapshot, RoundRecord, RunLog};
+
+use super::protocol::{DownPayload, TrainResult, TrainTask, UpPayload};
+
+/// Which lifecycle phase a `RoundState` is in (enforced at runtime so the
+/// message-driven API cannot be called out of order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Tasks handed out, waiting for all `TrainResult`s.
+    Collect,
+    /// Every slot reported; ready for `finish_round`.
+    Aggregate,
+}
+
+/// In-flight state of one round (created by `begin_round`).
+pub struct RoundState {
+    pub t: u64,
+    pub n_t: usize,
+    pub n_s: usize,
+    pub phase: Phase,
+    rec: RoundRecord,
+    overhead: f64,
+    flora_init: Option<Vec<f32>>,
+    results: Vec<Option<TrainResult>>,
+    received: usize,
+}
+
+impl RoundState {
+    /// Per-slot compiled-execution seconds (netsim shim input); slots that
+    /// have not reported yet count as zero.
+    pub fn exec_by_slot(&self) -> Vec<f64> {
+        self.results
+            .iter()
+            .map(|r| r.as_ref().map_or(0.0, |r| r.exec_s))
+            .collect()
+    }
+}
+
+pub struct Coordinator {
+    pub cfg: FedConfig,
+    world: World,
+    dl: Option<DownlinkState>,
+    evaluator: McEvaluator,
+    dpo_eval: Option<DpoEvaluator>,
+    weights: Vec<f64>,
+    global: Vec<f32>,
+    l0: Option<f64>,
+    l_prev: f64,
+}
+
+impl Coordinator {
+    /// Mirrors `FedRunner::new`'s RNG fork order exactly (see
+    /// `fed::world` module docs).
+    pub fn new(cfg: FedConfig) -> Result<Coordinator> {
+        let mut world = World::build(&cfg)?;
+        let dl = cfg.eco.filter(|e| e.downlink_sparse).map(|e| {
+            DownlinkState::new(
+                cfg.n_clients,
+                world.lora_init.clone(),
+                e.spars,
+                e.encoding,
+                world.kinds.clone(),
+                world.kidx.clone(),
+            )
+        });
+        let evaluator = McEvaluator::new(
+            corpus::make_eval_set(&mut world.rng.fork(5), cfg.eval_items, &world.ccfg),
+            world.ccfg.seq_tokens,
+        );
+        let dpo_eval = cfg.dpo.then(|| {
+            DpoEvaluator::new(preference::generate_pairs(&mut world.rng.fork(6), 64, &world.ccfg))
+        });
+        let weights = world.client_weights();
+        Ok(Coordinator {
+            global: world.lora_init.clone(),
+            world,
+            dl,
+            evaluator,
+            dpo_eval,
+            weights,
+            cfg,
+            l0: None,
+            l_prev: f64::NAN,
+        })
+    }
+
+    pub fn global_lora(&self) -> &[f32] {
+        &self.global
+    }
+
+    /// Phases 1+2 (Sampling + Broadcast): pick the cohort, compress each
+    /// client's downlink, fork its batch-RNG stream, and emit slot-ordered
+    /// `(owner_worker, TrainTask)` pairs. `n_workers` fixes the static
+    /// client→worker ownership map (`client mod n_workers`).
+    pub fn begin_round(
+        &mut self,
+        t: u64,
+        n_workers: usize,
+    ) -> Result<(RoundState, Vec<(usize, TrainTask)>)> {
+        let n_t = self.cfg.clients_per_round.min(self.cfg.n_clients);
+        let sampled = self.cfg.sampling.sample(
+            self.cfg.n_clients,
+            n_t,
+            &self.weights,
+            t,
+            &mut self.world.rng.fork(1000 + t),
+        );
+        let n_s = self.cfg.eco.map_or(1, |e| e.n_s.max(1)).min(n_t);
+
+        let mut rec = RoundRecord { round: t as usize, ..Default::default() };
+        let loss_signal = match self.l0 {
+            Some(l0) => (l0, self.l_prev),
+            None => (1.0, 1.0), // round 0: Eq. 4 sits at k_max
+        };
+
+        // FLoRA: fresh LoRA init shared by this round's cohort.
+        let flora_init = self
+            .cfg
+            .method
+            .restarts_lora()
+            .then(|| self.world.session.schema.init_lora(&mut self.world.rng.fork(2000 + t)));
+
+        let mut overhead = 0.0f64;
+        let mut tasks = Vec::with_capacity(n_t);
+        for (slot, &ci) in sampled.iter().enumerate() {
+            let t0 = Instant::now();
+            let down = if let Some(init) = &flora_init {
+                // FLoRA re-distributes the stacked modules: accounted as
+                // N_t × module even though the restart init itself travels.
+                let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
+                rec.down.add(p, dense_bytes(p));
+                DownPayload::FloraInit(init.clone())
+            } else if let Some(dl) = &mut self.dl {
+                let b = dl.broadcast(ci, &self.global, loss_signal.0, loss_signal.1, true)?;
+                rec.down.add(b.params, b.bytes);
+                match b.wire.expect("broadcast(want_wire=true) returns the message") {
+                    DownWire::Sparse(x) => DownPayload::SparseWire(x),
+                    DownWire::DenseF16(x) => DownPayload::DenseF16(x),
+                }
+            } else {
+                let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
+                rec.down.add(p, dense_bytes(p));
+                DownPayload::DenseF32(self.global.clone())
+            };
+            overhead += t0.elapsed().as_secs_f64();
+
+            let brng = self.world.rng.fork(world::batch_salt(self.cfg.dpo, t, ci));
+            let seg = round_robin::segment_for(slot, t as usize, n_s);
+            tasks.push((
+                ci % n_workers.max(1),
+                TrainTask {
+                    round: t,
+                    slot: slot as u32,
+                    client: ci as u32,
+                    segment: seg as u32,
+                    n_s: n_s as u32,
+                    l0: loss_signal.0,
+                    l_prev: loss_signal.1,
+                    rng_state: brng.state(),
+                    down,
+                },
+            ));
+        }
+
+        let rs = RoundState {
+            t,
+            n_t,
+            n_s,
+            // an empty cohort has nothing to collect
+            phase: if n_t == 0 { Phase::Aggregate } else { Phase::Collect },
+            rec,
+            overhead,
+            flora_init,
+            results: (0..n_t).map(|_| None).collect(),
+            received: 0,
+        };
+        Ok((rs, tasks))
+    }
+
+    /// Phase 3 (Collect): feed one `TrainResult` (any arrival order).
+    /// Returns true once every slot has reported.
+    pub fn accept(&mut self, rs: &mut RoundState, res: TrainResult) -> Result<bool> {
+        ensure!(rs.phase == Phase::Collect, "accept called outside Collect");
+        ensure!(res.round == rs.t, "result for round {} during round {}", res.round, rs.t);
+        let slot = res.slot as usize;
+        ensure!(slot < rs.n_t, "result slot {slot} out of range");
+        ensure!(rs.results[slot].is_none(), "duplicate result for slot {slot}");
+        ensure!((res.segment as usize) < rs.n_s, "result segment {} out of range", res.segment);
+        let ci = res.client as usize;
+        ensure!(ci < self.cfg.n_clients, "result for unknown client {ci}");
+        // the participant derived its world independently — its FedAvg
+        // weight must agree with the coordinator's partition
+        ensure!(
+            res.n_samples as f64 == self.weights[ci],
+            "weight mismatch for client {ci}: worker says {}, partition says {}",
+            res.n_samples,
+            self.weights[ci]
+        );
+        rs.results[slot] = Some(res);
+        rs.received += 1;
+        if rs.received == rs.n_t {
+            rs.phase = Phase::Aggregate;
+        }
+        Ok(rs.received == rs.n_t)
+    }
+
+    /// Phase 4 (Aggregate): fold the collected uplinks strictly in slot
+    /// order (Eq. 2), advance the global model, record telemetry, and
+    /// evaluate on schedule. Returns the round record plus — after a
+    /// FLoRA merge — the new base every participant must sync to.
+    pub fn finish_round(&mut self, mut rs: RoundState) -> Result<(RoundRecord, Option<Vec<f32>>)> {
+        ensure!(rs.phase == Phase::Aggregate, "finish_round before all results collected");
+        let t = rs.t;
+        let lora_total = self.world.session.schema.lora_total;
+        let mut rec = rs.rec;
+        let mut agg = SegmentAggregator::new(lora_total, rs.n_s);
+        let mut flora_modules: Vec<(Vec<f32>, f64)> = Vec::new();
+        let mut loss_acc = 0.0f64;
+        let mut weight_acc = 0.0f64;
+        let mut exec_total = 0.0f64;
+
+        let t1 = Instant::now();
+        for slot in 0..rs.n_t {
+            let res = rs.results[slot].take().expect("phase guard");
+            let w = res.n_samples as f64;
+            loss_acc += res.mean_loss * w;
+            weight_acc += w;
+            exec_total += res.exec_s;
+            match res.up {
+                UpPayload::SparseWire(bytes) => {
+                    rec.k_a = res.k_a;
+                    rec.k_b = res.k_b;
+                    let params =
+                        agg.add_wire(res.segment as usize, &bytes, &self.world.kidx, w)?;
+                    rec.up.add(params, bytes.len());
+                }
+                UpPayload::DenseUpdate(update) => {
+                    ensure!(update.len() == lora_total, "dense update length");
+                    let p = self.cfg.method.dense_upload_params(&self.world.session.schema);
+                    rec.up.add(p, dense_bytes(p));
+                    agg.add_dense(0, &update, w);
+                }
+                UpPayload::DenseModule(module) => {
+                    ensure!(module.len() == lora_total, "dense module length");
+                    ensure!(
+                        self.cfg.method.restarts_lora(),
+                        "module upload from a non-restarting method"
+                    );
+                    let p = self.cfg.method.dense_upload_params(&self.world.session.schema);
+                    rec.up.add(p, dense_bytes(p));
+                    flora_modules.push((module, w));
+                }
+            }
+        }
+
+        // ---- aggregation (Eq. 2) + global advance — same as FedRunner ------
+        let mut base_sync = None;
+        if self.cfg.method.restarts_lora() {
+            if self.cfg.eco.is_some() {
+                let delta = agg.finish();
+                let mut module = rs.flora_init.take().expect("restart round has flora_init");
+                for i in 0..lora_total {
+                    module[i] += delta[i];
+                }
+                self.world.session.merge_lora(&module, 1.0)?;
+            } else {
+                let w_total: f64 = flora_modules.iter().map(|(_, w)| w).sum();
+                for (module, w) in &flora_modules {
+                    self.world.session.merge_lora(module, (*w / w_total.max(1.0)) as f32)?;
+                }
+            }
+            self.global = self.world.lora_init.clone();
+            // participants' frozen bases must follow the merge
+            base_sync = Some(self.world.session.base_host().to_vec());
+        } else {
+            let delta = agg.finish();
+            for i in 0..lora_total {
+                self.global[i] += delta[i];
+            }
+        }
+        rs.overhead += t1.elapsed().as_secs_f64();
+
+        // ---- telemetry ------------------------------------------------------
+        let round_loss = loss_acc / weight_acc.max(1.0);
+        if self.l0.is_none() {
+            self.l0 = Some(round_loss);
+        }
+        self.l_prev = round_loss;
+        rec.global_loss = round_loss;
+        rec.overhead_s = rs.overhead;
+        rec.compute_s = exec_total / rs.n_t.max(1) as f64;
+        let snap = sparsity_snapshot(&self.global, &self.world.kinds);
+        rec.gini_a = snap.gini_a;
+        rec.gini_b = snap.gini_b;
+
+        let eval_now = self.cfg.target_acc.is_some()
+            || (self.cfg.eval_every > 0
+                && (t as usize % self.cfg.eval_every == self.cfg.eval_every - 1
+                    || t as usize + 1 == self.cfg.rounds));
+        if eval_now {
+            rec.eval_acc = Some(self.evaluator.accuracy(&self.world.session, &self.global)?);
+        }
+        Ok((rec, base_sync))
+    }
+
+    /// Final evaluation + outcome assembly (mirrors `FedRunner::run`'s
+    /// tail).
+    pub fn outcome(&self, log: RunLog, reached_target_at: Option<usize>) -> Result<FedOutcome> {
+        let final_acc = self.evaluator.accuracy(&self.world.session, &self.global)?;
+        let final_margin = match &self.dpo_eval {
+            Some(ev) => {
+                Some(ev.mean_margin(&self.world.session, &self.global, self.cfg.dpo_beta)?)
+            }
+            None => None,
+        };
+        Ok(FedOutcome {
+            final_lora: self.global.clone(),
+            final_acc,
+            final_margin,
+            reached_target_at,
+            log,
+        })
+    }
+
+    /// Guard against mixed-phase misuse from the runner loop.
+    pub fn ensure_collected(&self, rs: &RoundState) -> Result<()> {
+        if rs.phase != Phase::Aggregate {
+            bail!("round {}: only {}/{} results collected", rs.t, rs.received, rs.n_t);
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,229 @@
+//! Cluster deployment of the federated protocol: an actor-style
+//! coordinator/participant architecture over pluggable transports.
+//!
+//! * [`protocol`] — versioned, checksummed envelopes + typed messages
+//!   (`Hello`, `TrainTask`, `TrainResult`, `BaseSync`, `Shutdown`,
+//!   `Error`); payloads reuse the `compress::wire` format.
+//! * [`transport`] — the [`Conn`](transport::Conn) contract with two
+//!   implementations: deterministic in-memory channels (default CLI path,
+//!   tests) and length-prefix-framed TCP (loopback or real network).
+//! * [`coordinator`] — the server-side round state machine
+//!   (sampling → broadcast → collect → aggregate).
+//! * [`participant`] — worker agents, each owning its own `Session` and a
+//!   shard of logical clients, executing tasks concurrently.
+//! * [`netshim`] — optional transport-layer byte meter replaying real
+//!   protocol traffic through the `netsim` discrete-event simulator.
+//!
+//! [`run`] drives a full federated run on this substrate and produces the
+//! same `FedOutcome` as the monolithic `FedRunner` — bitwise, for a fixed
+//! seed (enforced by `tests/integration_cluster.rs`). Uplink encoding,
+//! local training, and server-side work overlap because every participant
+//! worker runs on its own thread with its own PJRT engine.
+
+pub mod coordinator;
+pub mod netshim;
+pub mod participant;
+pub mod protocol;
+pub mod transport;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::fed::{FedConfig, FedOutcome};
+use crate::metrics::RunLog;
+use crate::netsim::{RoundTiming, Scenario};
+
+pub use coordinator::Coordinator;
+pub use participant::Participant;
+pub use transport::ClusterMode;
+
+use protocol::Message;
+use transport::{ConnRx, ConnTx};
+
+/// How to deploy a run on the cluster substrate.
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    pub mode: ClusterMode,
+    /// Worker thread count; default min(clients_per_round, CPU threads).
+    pub workers: Option<usize>,
+    /// Replay transport traffic through the network simulator.
+    pub netsim: Option<Scenario>,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        ClusterOptions { mode: ClusterMode::Mem, workers: None, netsim: None }
+    }
+}
+
+/// A cluster run's result: the federated outcome plus deployment facts.
+pub struct ClusterOutcome {
+    pub fed: FedOutcome,
+    /// Simulated per-round timing (when `ClusterOptions::netsim` is set).
+    pub timings: Vec<RoundTiming>,
+    pub workers: usize,
+    pub transport: &'static str,
+}
+
+/// Run a full federated job over the cluster: spawn `n_workers`
+/// participant threads, drive the coordinator state machine round by
+/// round, and assemble the outcome. Equivalent to
+/// `FedRunner::new(cfg)?.run()` — bitwise, for a fixed seed — but with
+/// participants executing concurrently and every payload crossing a
+/// transport boundary.
+pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
+    let n_t = cfg.clients_per_round.min(cfg.n_clients).max(1);
+    let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let n_workers = opts
+        .workers
+        .unwrap_or_else(|| n_t.min(hw))
+        .clamp(1, cfg.n_clients.max(1));
+
+    let (coord_conns, worker_conns) = transport::establish(opts.mode, n_workers)?;
+
+    // Participants: one thread each, each building its own world/session.
+    let mut handles = Vec::with_capacity(n_workers);
+    for (w, conn) in worker_conns.into_iter().enumerate() {
+        let cfg_w = cfg.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("ecolora-worker-{w}"))
+            .spawn(move || participant::run_worker(cfg_w, w as u32, conn))
+            .context("cluster: spawn worker thread")?;
+        handles.push(handle);
+    }
+
+    // Split coordinator-side conns; results drain through reader threads
+    // into one queue so dispatch can never deadlock against collection.
+    let meter = opts.netsim.as_ref().map(|_| netshim::Meter::new());
+    let mut txs: Vec<Box<dyn ConnTx>> = Vec::with_capacity(n_workers);
+    let (results_tx, results_rx) = std::sync::mpsc::channel::<(usize, protocol::Envelope)>();
+    let mut reader_handles = Vec::with_capacity(n_workers);
+    for (i, conn) in coord_conns.into_iter().enumerate() {
+        let (tx, rx) = conn.split()?;
+        let (tx, mut rx) = match &meter {
+            Some(m) => (m.wrap_tx(tx), m.wrap_rx(rx)),
+            None => (tx, rx),
+        };
+        txs.push(tx);
+        let fwd = results_tx.clone();
+        reader_handles.push(std::thread::spawn(move || {
+            // forward until the peer hangs up (normal at shutdown)
+            while let Ok(env) = rx.recv() {
+                if fwd.send((i, env)).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    drop(results_tx);
+
+    // Handshake: map worker id -> conn index.
+    let mut tx_of_worker: Vec<usize> = vec![usize::MAX; n_workers];
+    for _ in 0..n_workers {
+        let (conn_idx, env) = results_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("cluster: all workers disconnected during handshake"))?;
+        match Message::from_envelope(&env)? {
+            Message::Hello { worker } => {
+                let w = worker as usize;
+                ensure!(w < n_workers, "hello from unknown worker {w}");
+                ensure!(tx_of_worker[w] == usize::MAX, "duplicate hello from worker {w}");
+                tx_of_worker[w] = conn_idx;
+            }
+            Message::Error { text } => bail!("worker failed during startup: {text}"),
+            other => bail!("cluster: expected Hello, got {:?}", other.kind()),
+        }
+    }
+
+    // The coordinator builds its own world while workers build theirs.
+    let mut coordinator = Coordinator::new(cfg)?;
+    let label = coordinator.cfg.run_label();
+    let mut log = RunLog::new(label.clone());
+    let mut reached: Option<usize> = None;
+    let mut timings = Vec::new();
+
+    let send_to = |txs: &mut [Box<dyn ConnTx>], w: usize, msg: &Message| -> Result<()> {
+        txs[w].send(&msg.to_envelope())
+    };
+
+    for t in 0..coordinator.cfg.rounds {
+        // Sampling + Broadcast
+        let (mut rs, tasks) = coordinator.begin_round(t as u64, n_workers)?;
+        for (w, task) in tasks {
+            send_to(&mut txs, tx_of_worker[w], &Message::TrainTask(task))
+                .with_context(|| format!("cluster: dispatch to worker {w}"))?;
+        }
+        // Collect (any arrival order)
+        while rs.phase == coordinator::Phase::Collect {
+            let (_idx, env) = results_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("cluster: workers disconnected mid-round"))?;
+            match Message::from_envelope(&env)? {
+                Message::TrainResult(res) => {
+                    coordinator.accept(&mut rs, res)?;
+                }
+                Message::Error { text } => bail!("worker failed: {text}"),
+                other => bail!("cluster: expected TrainResult, got {:?}", other.kind()),
+            }
+        }
+        coordinator.ensure_collected(&rs)?;
+        let compute_by_slot = rs.exec_by_slot();
+        // Aggregate
+        let (rec, base_sync) = coordinator.finish_round(rs)?;
+        if let Some(base) = base_sync {
+            for w in 0..n_workers {
+                send_to(&mut txs, tx_of_worker[w], &Message::BaseSync { base: base.clone() })?;
+            }
+        }
+        if let (Some(m), Some(scenario)) = (&meter, &opts.netsim) {
+            timings.push(m.round_timing(t as u64, &compute_by_slot, scenario)?);
+        }
+        if coordinator.cfg.verbose {
+            let acc = rec.eval_acc;
+            eprintln!(
+                "[{label}@{}x{n_workers}] round {t}: loss {:.4} acc {} upM {:.3} downM {:.3} k=({:.2},{:.2})",
+                opts.mode.name(),
+                rec.global_loss,
+                acc.map_or("-".into(), |a| format!("{a:.3}")),
+                rec.up.params_m(),
+                rec.down.params_m(),
+                rec.k_a,
+                rec.k_b,
+            );
+        }
+        let acc = rec.eval_acc;
+        log.push(rec);
+        if let (Some(target), Some(a)) = (coordinator.cfg.target_acc, acc) {
+            if a >= target {
+                reached = Some(t);
+                break;
+            }
+        }
+    }
+
+    let outcome = coordinator.outcome(log, reached)?;
+
+    // Orderly shutdown: tell every worker, then join.
+    for w in 0..n_workers {
+        let _ = send_to(&mut txs, tx_of_worker[w], &Message::Shutdown);
+    }
+    // Dropping senders lets worker recv() error out even if a Shutdown was
+    // lost; reader threads exit when peers hang up.
+    txs.clear();
+    for (w, h) in handles.into_iter().enumerate() {
+        match h.join() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => bail!("worker {w} exited with error: {e:#}"),
+            Err(_) => bail!("worker {w} panicked"),
+        }
+    }
+    for h in reader_handles {
+        let _ = h.join();
+    }
+
+    Ok(ClusterOutcome {
+        fed: outcome,
+        timings,
+        workers: n_workers,
+        transport: opts.mode.name(),
+    })
+}

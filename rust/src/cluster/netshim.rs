@@ -1,0 +1,229 @@
+//! Optional netsim shim at the transport layer.
+//!
+//! Wraps the coordinator-side send/receive halves so every framed message
+//! is counted (direction, round, kind, exact bytes incl. the 4-byte frame
+//! prefix) as it crosses the transport. After a round, the recorded
+//! TrainTask/TrainResult flows replay through the discrete-event network
+//! simulator under a bandwidth `Scenario`, giving Figure-3-style round
+//! timing for the REAL protocol bytes — compression, envelope overhead
+//! and all — instead of the analytic payload estimates.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::netsim::{NetSim, RoundPlan, RoundTiming, Scenario};
+use crate::util::lock_unpoisoned;
+
+use super::protocol::{Envelope, MsgKind};
+use super::transport::{ConnRx, ConnTx};
+
+/// One observed message crossing the transport.
+#[derive(Debug, Clone, Copy)]
+pub struct Flow {
+    pub round: u64,
+    pub kind: MsgKind,
+    /// Framed size: header + payload + length prefix.
+    pub bytes: usize,
+    /// true = coordinator → worker (downlink direction).
+    pub to_worker: bool,
+    /// Round slot, for task/result messages (peeked from the payload —
+    /// `slot` is the first field of both, see `protocol`).
+    pub slot: Option<u32>,
+}
+
+fn slot_of(env: &Envelope) -> Option<u32> {
+    match env.kind {
+        MsgKind::TrainTask | MsgKind::TrainResult => env
+            .payload
+            .get(0..4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap())),
+        _ => None,
+    }
+}
+
+/// Shared traffic journal, filled by the metered halves.
+#[derive(Debug, Default)]
+pub struct TrafficLog {
+    pub flows: Vec<Flow>,
+}
+
+/// Byte meter handed to `wrap_tx`/`wrap_rx`.
+#[derive(Clone, Default)]
+pub struct Meter {
+    log: Arc<Mutex<TrafficLog>>,
+}
+
+/// 4-byte length prefix used by the TCP framing (counted uniformly so mem
+/// and tcp runs report comparable numbers).
+const FRAME_PREFIX: usize = 4;
+
+impl Meter {
+    pub fn new() -> Meter {
+        Meter::default()
+    }
+
+    fn record(&self, env: &Envelope, to_worker: bool) {
+        lock_unpoisoned(&self.log).flows.push(Flow {
+            round: env.round,
+            kind: env.kind,
+            bytes: env.encoded_len() + FRAME_PREFIX,
+            to_worker,
+            slot: slot_of(env),
+        });
+    }
+
+    pub fn wrap_tx(&self, inner: Box<dyn ConnTx>) -> Box<dyn ConnTx> {
+        Box::new(MeteredTx { inner, meter: self.clone() })
+    }
+
+    pub fn wrap_rx(&self, inner: Box<dyn ConnRx>) -> Box<dyn ConnRx> {
+        Box::new(MeteredRx { inner, meter: self.clone() })
+    }
+
+    /// Total bytes each direction for `round` (task/result messages only).
+    pub fn round_bytes(&self, round: u64) -> (usize, usize) {
+        let log = lock_unpoisoned(&self.log);
+        let mut down = 0;
+        let mut up = 0;
+        for f in log.flows.iter().filter(|f| f.round == round) {
+            match f.kind {
+                MsgKind::TrainTask if f.to_worker => down += f.bytes,
+                MsgKind::TrainResult if !f.to_worker => up += f.bytes,
+                _ => {}
+            }
+        }
+        (down, up)
+    }
+
+    /// Replay `round`'s traffic through the discrete-event simulator:
+    /// one `RoundPlan` per slot, with the slot's task bytes, result bytes
+    /// and compute seconds matched by slot id (recording order carries no
+    /// meaning — results arrive in any order). `compute_s` is indexed by
+    /// slot, as produced by `RoundState::exec_by_slot`.
+    pub fn round_timing(
+        &self,
+        round: u64,
+        compute_s: &[f64],
+        scenario: &Scenario,
+    ) -> Result<RoundTiming> {
+        let n = compute_s.len();
+        let mut dl = vec![None; n];
+        let mut ul = vec![None; n];
+        {
+            let log = lock_unpoisoned(&self.log);
+            for f in log.flows.iter().filter(|f| f.round == round) {
+                let target = match (f.kind, f.to_worker) {
+                    (MsgKind::TrainTask, true) => &mut dl,
+                    (MsgKind::TrainResult, false) => &mut ul,
+                    _ => continue,
+                };
+                if let Some(slot) = f.slot {
+                    if let Some(entry) = target.get_mut(slot as usize) {
+                        *entry = Some(f.bytes);
+                    }
+                }
+            }
+        }
+        let plans: Vec<RoundPlan> = (0..n)
+            .filter_map(|slot| match (dl[slot], ul[slot]) {
+                (Some(d), Some(u)) => {
+                    Some(RoundPlan { dl_bytes: d, compute_s: compute_s[slot], ul_bytes: u })
+                }
+                _ => None,
+            })
+            .collect();
+        anyhow::ensure!(!plans.is_empty(), "netsim shim: no traffic recorded for round {round}");
+        let mut sim = NetSim::homogeneous(plans.len(), scenario.link());
+        let clients: Vec<usize> = (0..plans.len()).collect();
+        Ok(sim.run_round(&clients, &plans))
+    }
+}
+
+struct MeteredTx {
+    inner: Box<dyn ConnTx>,
+    meter: Meter,
+}
+
+impl ConnTx for MeteredTx {
+    fn send(&mut self, env: &Envelope) -> Result<()> {
+        self.meter.record(env, true);
+        self.inner.send(env)
+    }
+}
+
+struct MeteredRx {
+    inner: Box<dyn ConnRx>,
+    meter: Meter,
+}
+
+impl ConnRx for MeteredRx {
+    fn recv(&mut self) -> Result<Envelope> {
+        let env = self.inner.recv()?;
+        self.meter.record(&env, false);
+        Ok(env)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::transport::{establish, ClusterMode};
+    use crate::netsim::Scenario;
+
+    /// Task/result payload with the given slot in the leading u32 (the
+    /// field `round_timing` peeks) followed by padding to `len` bytes.
+    fn slot_payload(slot: u32, len: usize) -> Vec<u8> {
+        let mut p = slot.to_le_bytes().to_vec();
+        p.resize(len, 0xEE);
+        p
+    }
+
+    #[test]
+    fn meter_records_and_replays_round_traffic() {
+        let (coord, work) = establish(ClusterMode::Mem, 1).unwrap();
+        let mut worker = work.into_iter().next().unwrap();
+        let peer = std::thread::spawn(move || {
+            // echo tasks back as results in REVERSE slot order: slot
+            // matching must not depend on arrival order
+            let mut seen = Vec::new();
+            for _ in 0..3 {
+                seen.push(worker.recv().unwrap());
+            }
+            for env in seen.into_iter().rev() {
+                let reply = Envelope::new(
+                    MsgKind::TrainResult,
+                    env.round,
+                    env.segment,
+                    1,
+                    env.payload[0..4].iter().copied().chain([0xAB; 36]).collect(),
+                );
+                worker.send(&reply).unwrap();
+            }
+        });
+        let meter = Meter::new();
+        let (tx, rx) = coord.into_iter().next().unwrap().split().unwrap();
+        let mut tx = meter.wrap_tx(tx);
+        let mut rx = meter.wrap_rx(rx);
+        for slot in 0..3u32 {
+            tx.send(&Envelope::new(MsgKind::TrainTask, 7, 0, 0, slot_payload(slot, 100))).unwrap();
+        }
+        for _ in 0..3 {
+            rx.recv().unwrap();
+        }
+        peer.join().unwrap();
+
+        let (down, up) = meter.round_bytes(7);
+        assert_eq!(down, 3 * (28 + 100 + 4));
+        assert_eq!(up, 3 * (28 + 40 + 4));
+        assert_eq!(meter.round_bytes(8), (0, 0));
+
+        let scenario = Scenario { name: "test", ul_mbps: 1.0, dl_mbps: 5.0, latency_s: 0.05 };
+        let timing = meter.round_timing(7, &[0.5, 0.5, 0.5], &scenario).unwrap();
+        assert!(timing.round_s > 0.5, "{timing:?}");
+        assert!((timing.compute_s - 0.5).abs() < 1e-12);
+        assert!(timing.comm_s > 0.0);
+        // a round with no recorded traffic is an error, not a zero timing
+        assert!(meter.round_timing(9, &[0.5], &scenario).is_err());
+    }
+}

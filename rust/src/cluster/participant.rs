@@ -1,0 +1,195 @@
+//! Participant agent: owns its own `Session` (PJRT engine, compiled
+//! artifacts, device-resident base) plus the local state of the logical
+//! clients it hosts (client id mod worker count), and serves `TrainTask`s
+//! until `Shutdown`.
+//!
+//! A participant reconstructs everything it needs deterministically from
+//! the `FedConfig` (see `fed::world`); only wire payloads cross the
+//! transport. Per-task batch-RNG streams arrive inside the task, so the
+//! result of a task is a pure function of (world, client state, task) —
+//! independent of worker count and scheduling order. That is what lets
+//! participants run concurrently while staying bitwise-parity with the
+//! monolithic `FedRunner`.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::compress::wire;
+use crate::fed::downlink::{self, DownWire};
+use crate::fed::world::{self, ClientState, World};
+use crate::fed::{staleness, FedConfig};
+use crate::model::segment_ranges;
+use crate::util::rng::Rng;
+use crate::xla::PjRtBuffer;
+
+use super::protocol::{DownPayload, Message, TrainResult, TrainTask, UpPayload};
+use super::transport::Conn;
+
+/// One worker process's state.
+pub struct Participant {
+    cfg: FedConfig,
+    pub world: World,
+    mask: PjRtBuffer,
+    /// Hosted clients, materialized lazily on first task.
+    clients: HashMap<usize, ClientState>,
+    /// Per-client downlink reference (mirror of the server's channel).
+    refs: HashMap<usize, Vec<f32>>,
+}
+
+impl Participant {
+    pub fn new(cfg: FedConfig) -> Result<Participant> {
+        let world = World::build(&cfg).context("participant: world build")?;
+        let mask_host = cfg.method.grad_mask(&world.session.schema);
+        let mask = world.session.upload_mask(&mask_host)?;
+        Ok(Participant { cfg, world, mask, clients: HashMap::new(), refs: HashMap::new() })
+    }
+
+    /// Replace the frozen base (FLoRA merge sync from the coordinator).
+    pub fn sync_base(&mut self, base: Vec<f32>) -> Result<()> {
+        self.world.session.set_base(base)
+    }
+
+    /// Execute one task: reconstruct the downlink, mix/restart, train
+    /// locally, compress the uplink. Mirrors `FedRunner::round`'s
+    /// per-client block exactly — keep the two in sync.
+    pub fn handle(&mut self, task: &TrainTask) -> Result<TrainResult> {
+        let ci = task.client as usize;
+        ensure!(ci < self.cfg.n_clients, "task for unknown client {ci}");
+        let lora_total = self.world.session.schema.lora_total;
+        let exec_before = self.world.session.exec_seconds.get();
+
+        // ---- downlink reconstruction ---------------------------------------
+        let start_global: Option<Vec<f32>> = match &task.down {
+            DownPayload::FloraInit(_) => None,
+            DownPayload::DenseF32(g) => {
+                ensure!(g.len() == lora_total, "downlink dense f32 length");
+                Some(g.clone())
+            }
+            DownPayload::SparseWire(_) | DownPayload::DenseF16(_) => {
+                let reference = self
+                    .refs
+                    .entry(ci)
+                    .or_insert_with(|| self.world.lora_init.clone());
+                let msg = match &task.down {
+                    DownPayload::SparseWire(b) => DownWire::Sparse(b.clone()),
+                    DownPayload::DenseF16(b) => DownWire::DenseF16(b.clone()),
+                    _ => unreachable!(),
+                };
+                downlink::apply_down_wire(&msg, reference, &self.world.kidx)?;
+                Some(reference.clone())
+            }
+        };
+
+        if !self.clients.contains_key(&ci) {
+            let st = self.world.client_state(&self.cfg, ci);
+            self.clients.insert(ci, st);
+        }
+        let client = self.clients.get_mut(&ci).unwrap();
+
+        // ---- local init: FLoRA restart or Eq. 3 mixing ----------------------
+        let (base_point, local): (Vec<f32>, Vec<f32>) = match (&task.down, &start_global) {
+            (DownPayload::FloraInit(init), _) => {
+                ensure!(init.len() == lora_total, "flora init length");
+                (init.clone(), init.clone())
+            }
+            (_, Some(g)) => {
+                let local = if let Some(eco) = self.cfg.eco {
+                    let staleness = (task.round.saturating_sub(client.tau)).max(1);
+                    let mut mixed = client.lora.clone();
+                    staleness::mix_into_local(eco.beta, staleness, g, &mut mixed);
+                    mixed
+                } else {
+                    g.clone()
+                };
+                (g.clone(), local)
+            }
+            _ => unreachable!("start_global is Some for every non-restart payload"),
+        };
+
+        // ---- local training (code shared with the monolithic runner) -------
+        let mut brng = Rng::from_state(task.rng_state);
+        let (local, mean_loss) = world::local_train(
+            &self.world.session,
+            &self.cfg,
+            &self.world.ds,
+            &self.world.pairs,
+            client,
+            local,
+            &mut brng,
+            &self.mask,
+        )?;
+
+        // ---- uplink ---------------------------------------------------------
+        let mut update = vec![0.0f32; lora_total];
+        for i in 0..lora_total {
+            update[i] = local[i] - base_point[i];
+        }
+        let (up, k) = match (&mut client.comp, self.cfg.eco) {
+            (Some(comp), Some(eco)) => {
+                let out = comp.compress(&update, task.l0, task.l_prev);
+                let ranges = segment_ranges(lora_total, (task.n_s as usize).max(1));
+                let seg = task.segment as usize;
+                ensure!(seg < ranges.len(), "segment {seg} out of range");
+                let range = ranges[seg].clone();
+                let sv = out.sv.restrict(&range);
+                let bytes = wire::encode(&sv, &range, &self.world.kidx, out.k, eco.encoding)?;
+                (UpPayload::SparseWire(bytes), out.k)
+            }
+            _ => {
+                if self.cfg.method.restarts_lora() {
+                    (UpPayload::DenseModule(local.clone()), (0.0, 0.0))
+                } else {
+                    (UpPayload::DenseUpdate(update.clone()), (0.0, 0.0))
+                }
+            }
+        };
+
+        // ---- persist client state ------------------------------------------
+        client.lora = local;
+        client.tau = task.round;
+
+        Ok(TrainResult {
+            round: task.round,
+            slot: task.slot,
+            client: task.client,
+            segment: task.segment,
+            n_samples: client.n_samples as u32,
+            mean_loss,
+            k_a: k.0,
+            k_b: k.1,
+            exec_s: self.world.session.exec_seconds.get() - exec_before,
+            up,
+        })
+    }
+}
+
+/// Serve one worker connection: handshake, then tasks until `Shutdown`.
+/// Fatal errors are reported to the coordinator as `Error` messages before
+/// the thread exits, so the run fails loudly instead of hanging.
+pub fn run_worker(cfg: FedConfig, worker_id: u32, mut conn: Box<dyn Conn>) -> Result<()> {
+    conn.send(&Message::Hello { worker: worker_id }.to_envelope())?;
+    let mut participant = match Participant::new(cfg) {
+        Ok(p) => p,
+        Err(e) => {
+            let _ = conn.send(&Message::Error { text: format!("{e:#}") }.to_envelope());
+            return Err(e);
+        }
+    };
+    loop {
+        let env = conn.recv()?;
+        let msg = Message::from_envelope(&env)?;
+        let step: Result<()> = match msg {
+            Message::TrainTask(task) => participant
+                .handle(&task)
+                .and_then(|res| conn.send(&Message::TrainResult(res).to_envelope())),
+            Message::BaseSync { base } => participant.sync_base(base),
+            Message::Shutdown => return Ok(()),
+            other => bail!("participant: unexpected {:?} message", other.kind()),
+        };
+        if let Err(e) = step {
+            let _ = conn.send(&Message::Error { text: format!("{e:#}") }.to_envelope());
+            return Err(e);
+        }
+    }
+}

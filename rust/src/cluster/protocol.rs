@@ -1,0 +1,639 @@
+//! Typed coordinator↔participant protocol and its byte-exact wire format.
+//!
+//! Every message travels as an [`Envelope`]: a fixed 28-byte header —
+//! magic, protocol version, message kind, FNV-1a checksum, round id,
+//! segment id, sample count, payload length — followed by a kind-specific
+//! payload. The checksum covers the whole envelope except itself, so any
+//! single corrupted byte (header field or payload) is rejected rather
+//! than misinterpreted; truncation and version skew get dedicated errors.
+//!
+//! Payload contents reuse the existing `compress::wire` messages wherever
+//! compression is on; dense fallbacks ship raw little-endian f32/f16.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Protocol magic ("EcoLoRA cluster, wire rev 1").
+pub const MAGIC: [u8; 2] = [0xEC, 0x57];
+/// Protocol version carried in every envelope header.
+pub const PROTO_VERSION: u8 = 1;
+/// Fixed header length in bytes.
+pub const HEADER_LEN: usize = 28;
+/// Hard cap on one payload (base-model sync dominates; 1 GiB is generous).
+pub const MAX_PAYLOAD: usize = 1 << 30;
+
+/// Message discriminant (header byte 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum MsgKind {
+    /// Worker → coordinator: identify this connection.
+    Hello = 1,
+    /// Coordinator → worker: train one sampled client this round.
+    TrainTask = 2,
+    /// Worker → coordinator: the client's uplink contribution.
+    TrainResult = 3,
+    /// Coordinator → workers: replace the frozen base (FLoRA merge).
+    BaseSync = 4,
+    /// Coordinator → workers: end of run.
+    Shutdown = 5,
+    /// Either direction: fatal peer failure, human-readable.
+    Error = 6,
+}
+
+impl MsgKind {
+    fn from_u8(x: u8) -> Result<MsgKind> {
+        Ok(match x {
+            1 => MsgKind::Hello,
+            2 => MsgKind::TrainTask,
+            3 => MsgKind::TrainResult,
+            4 => MsgKind::BaseSync,
+            5 => MsgKind::Shutdown,
+            6 => MsgKind::Error,
+            other => bail!("envelope: unknown message kind {other}"),
+        })
+    }
+}
+
+/// One framed protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Envelope {
+    pub kind: MsgKind,
+    pub round: u64,
+    pub segment: u32,
+    pub sample_count: u32,
+    pub payload: Vec<u8>,
+}
+
+/// FNV-1a over two byte ranges (header-before-checksum ++ header-after ++
+/// payload); cheap, order-sensitive, catches any single-byte corruption.
+fn fnv1a_parts(a: &[u8], b: &[u8]) -> u32 {
+    let mut h = 0x811C_9DC5u32;
+    for &x in a.iter().chain(b) {
+        h ^= x as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+impl Envelope {
+    pub fn new(
+        kind: MsgKind,
+        round: u64,
+        segment: u32,
+        sample_count: u32,
+        payload: Vec<u8>,
+    ) -> Envelope {
+        Envelope { kind, round, segment, sample_count, payload }
+    }
+
+    /// Total encoded size (framing accounting for the netsim shim).
+    pub fn encoded_len(&self) -> usize {
+        HEADER_LEN + self.payload.len()
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.encoded_len());
+        out.extend_from_slice(&MAGIC);
+        out.push(PROTO_VERSION);
+        out.push(self.kind as u8);
+        out.extend_from_slice(&[0u8; 4]); // checksum backfilled below
+        out.extend_from_slice(&self.round.to_le_bytes());
+        out.extend_from_slice(&self.segment.to_le_bytes());
+        out.extend_from_slice(&self.sample_count.to_le_bytes());
+        out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        let c = fnv1a_parts(&out[0..4], &out[8..]);
+        out[4..8].copy_from_slice(&c.to_le_bytes());
+        out
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Envelope> {
+        ensure!(
+            bytes.len() >= HEADER_LEN,
+            "envelope: truncated header ({} of {HEADER_LEN} bytes)",
+            bytes.len()
+        );
+        ensure!(
+            bytes[0..2] == MAGIC,
+            "envelope: bad magic {:02x}{:02x}",
+            bytes[0],
+            bytes[1]
+        );
+        ensure!(
+            bytes[2] == PROTO_VERSION,
+            "envelope: protocol version mismatch (got {}, want {PROTO_VERSION})",
+            bytes[2]
+        );
+        let kind = MsgKind::from_u8(bytes[3])?;
+        let checksum = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        ensure!(
+            fnv1a_parts(&bytes[0..4], &bytes[8..]) == checksum,
+            "envelope: checksum mismatch (corrupt message)"
+        );
+        let round = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
+        let segment = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let sample_count = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
+        let payload_len = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+        ensure!(payload_len <= MAX_PAYLOAD, "envelope: payload length {payload_len} over cap");
+        ensure!(
+            bytes.len() == HEADER_LEN + payload_len,
+            "envelope: length mismatch ({} bytes, header says {})",
+            bytes.len(),
+            HEADER_LEN + payload_len
+        );
+        Ok(Envelope { kind, round, segment, sample_count, payload: bytes[HEADER_LEN..].to_vec() })
+    }
+}
+
+// ---- payload codec helpers (little-endian throughout) ----------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    fn bytes(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.buf.extend_from_slice(b);
+    }
+
+    fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let b = self
+            .buf
+            .get(self.pos..self.pos + n)
+            .ok_or_else(|| anyhow!("payload: truncated at byte {}", self.pos))?;
+        self.pos += n;
+        Ok(b)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_PAYLOAD, "payload: byte block of {n} over cap");
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        ensure!(n <= MAX_PAYLOAD / 4, "payload: f32 block of {n} over cap");
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(self.pos == self.buf.len(), "payload: {} trailing bytes", self.buf.len() - self.pos);
+        Ok(())
+    }
+}
+
+// ---- typed messages --------------------------------------------------------
+
+/// Coordinator → participant downlink content for one task.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DownPayload {
+    /// Exact global LoRA vector, f32 — dense baseline downlink.
+    DenseF32(Vec<f32>),
+    /// Sparse compressed delta against the client's reference.
+    SparseWire(Vec<u8>),
+    /// Dense f16 delta against the client's reference (`SparsMode::Off`).
+    DenseF16(Vec<u8>),
+    /// Fresh FLoRA restart module (train from this; no mixing).
+    FloraInit(Vec<f32>),
+}
+
+/// Participant → coordinator uplink content.
+#[derive(Debug, Clone, PartialEq)]
+pub enum UpPayload {
+    /// Compressed round-robin segment update (`compress::wire` bytes).
+    SparseWire(Vec<u8>),
+    /// Dense f32 update (local − base_point) over the whole vector.
+    DenseUpdate(Vec<f32>),
+    /// Dense f32 local module (FLoRA stacking upload).
+    DenseModule(Vec<f32>),
+}
+
+/// One unit of work: "train client `client` on segment `segment`".
+///
+/// Wire note: `slot` is serialized as the FIRST payload field of both
+/// `TrainTask` and `TrainResult` — the netsim shim peeks it without a
+/// full decode. Keep it first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainTask {
+    pub round: u64,
+    pub slot: u32,
+    pub client: u32,
+    pub segment: u32,
+    /// Round-robin segment count this round (min(N_s, N_t)).
+    pub n_s: u32,
+    /// Loss signal (L₀, L_{t−1}) driving Eq. 4.
+    pub l0: f64,
+    pub l_prev: f64,
+    /// Per-task batch-RNG stream, forked by the coordinator so results
+    /// are independent of worker scheduling order.
+    pub rng_state: [u64; 4],
+    pub down: DownPayload,
+}
+
+/// One finished unit of work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainResult {
+    pub round: u64,
+    pub slot: u32,
+    pub client: u32,
+    pub segment: u32,
+    /// FedAvg weight n_i.
+    pub n_samples: u32,
+    pub mean_loss: f64,
+    /// Densities used (0 when not compressing).
+    pub k_a: f64,
+    pub k_b: f64,
+    /// Seconds spent in compiled execution (perf accounting).
+    pub exec_s: f64,
+    pub up: UpPayload,
+}
+
+/// The protocol, typed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Hello { worker: u32 },
+    TrainTask(TrainTask),
+    TrainResult(TrainResult),
+    BaseSync { base: Vec<f32> },
+    Shutdown,
+    Error { text: String },
+}
+
+fn down_encode(w: &mut Writer, d: &DownPayload) {
+    match d {
+        DownPayload::DenseF32(v) => {
+            w.u8(0);
+            w.f32s(v);
+        }
+        DownPayload::SparseWire(b) => {
+            w.u8(1);
+            w.bytes(b);
+        }
+        DownPayload::DenseF16(b) => {
+            w.u8(2);
+            w.bytes(b);
+        }
+        DownPayload::FloraInit(v) => {
+            w.u8(3);
+            w.f32s(v);
+        }
+    }
+}
+
+fn down_decode(r: &mut Reader) -> Result<DownPayload> {
+    Ok(match r.u8()? {
+        0 => DownPayload::DenseF32(r.f32s()?),
+        1 => DownPayload::SparseWire(r.bytes()?),
+        2 => DownPayload::DenseF16(r.bytes()?),
+        3 => DownPayload::FloraInit(r.f32s()?),
+        other => bail!("payload: unknown downlink tag {other}"),
+    })
+}
+
+fn up_encode(w: &mut Writer, u: &UpPayload) {
+    match u {
+        UpPayload::SparseWire(b) => {
+            w.u8(0);
+            w.bytes(b);
+        }
+        UpPayload::DenseUpdate(v) => {
+            w.u8(1);
+            w.f32s(v);
+        }
+        UpPayload::DenseModule(v) => {
+            w.u8(2);
+            w.f32s(v);
+        }
+    }
+}
+
+fn up_decode(r: &mut Reader) -> Result<UpPayload> {
+    Ok(match r.u8()? {
+        0 => UpPayload::SparseWire(r.bytes()?),
+        1 => UpPayload::DenseUpdate(r.f32s()?),
+        2 => UpPayload::DenseModule(r.f32s()?),
+        other => bail!("payload: unknown uplink tag {other}"),
+    })
+}
+
+impl Message {
+    pub fn kind(&self) -> MsgKind {
+        match self {
+            Message::Hello { .. } => MsgKind::Hello,
+            Message::TrainTask(_) => MsgKind::TrainTask,
+            Message::TrainResult(_) => MsgKind::TrainResult,
+            Message::BaseSync { .. } => MsgKind::BaseSync,
+            Message::Shutdown => MsgKind::Shutdown,
+            Message::Error { .. } => MsgKind::Error,
+        }
+    }
+
+    pub fn to_envelope(&self) -> Envelope {
+        let mut w = Writer::new();
+        let (round, segment, sample_count) = match self {
+            Message::Hello { worker } => {
+                w.u32(*worker);
+                (0, 0, 0)
+            }
+            Message::TrainTask(t) => {
+                w.u32(t.slot);
+                w.u32(t.client);
+                w.u32(t.n_s);
+                w.f64(t.l0);
+                w.f64(t.l_prev);
+                for s in t.rng_state {
+                    w.u64(s);
+                }
+                down_encode(&mut w, &t.down);
+                (t.round, t.segment, 0)
+            }
+            Message::TrainResult(r) => {
+                w.u32(r.slot);
+                w.u32(r.client);
+                w.f64(r.mean_loss);
+                w.f64(r.k_a);
+                w.f64(r.k_b);
+                w.f64(r.exec_s);
+                up_encode(&mut w, &r.up);
+                (r.round, r.segment, r.n_samples)
+            }
+            Message::BaseSync { base } => {
+                w.f32s(base);
+                (0, 0, 0)
+            }
+            Message::Shutdown => (0, 0, 0),
+            Message::Error { text } => {
+                w.bytes(text.as_bytes());
+                (0, 0, 0)
+            }
+        };
+        Envelope::new(self.kind(), round, segment, sample_count, w.finish())
+    }
+
+    pub fn from_envelope(env: &Envelope) -> Result<Message> {
+        let mut r = Reader::new(&env.payload);
+        let msg = match env.kind {
+            MsgKind::Hello => Message::Hello { worker: r.u32()? },
+            MsgKind::TrainTask => {
+                let slot = r.u32()?;
+                let client = r.u32()?;
+                let n_s = r.u32()?;
+                let l0 = r.f64()?;
+                let l_prev = r.f64()?;
+                let mut rng_state = [0u64; 4];
+                for s in &mut rng_state {
+                    *s = r.u64()?;
+                }
+                let down = down_decode(&mut r)?;
+                Message::TrainTask(TrainTask {
+                    round: env.round,
+                    slot,
+                    client,
+                    segment: env.segment,
+                    n_s,
+                    l0,
+                    l_prev,
+                    rng_state,
+                    down,
+                })
+            }
+            MsgKind::TrainResult => {
+                let slot = r.u32()?;
+                let client = r.u32()?;
+                let mean_loss = r.f64()?;
+                let k_a = r.f64()?;
+                let k_b = r.f64()?;
+                let exec_s = r.f64()?;
+                let up = up_decode(&mut r)?;
+                Message::TrainResult(TrainResult {
+                    round: env.round,
+                    slot,
+                    client,
+                    segment: env.segment,
+                    n_samples: env.sample_count,
+                    mean_loss,
+                    k_a,
+                    k_b,
+                    exec_s,
+                    up,
+                })
+            }
+            MsgKind::BaseSync => Message::BaseSync { base: r.f32s()? },
+            MsgKind::Shutdown => Message::Shutdown,
+            MsgKind::Error => {
+                let raw = r.bytes()?;
+                Message::Error { text: String::from_utf8_lossy(&raw).into_owned() }
+            }
+        };
+        r.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+    use crate::util::rng::Rng;
+
+    fn random_message(rng: &mut Rng) -> Message {
+        match rng.below(6) {
+            0 => Message::Hello { worker: rng.below(64) as u32 },
+            1 => {
+                let n = rng.below(200);
+                Message::TrainTask(TrainTask {
+                    round: rng.below(1000) as u64,
+                    slot: rng.below(16) as u32,
+                    client: rng.below(100) as u32,
+                    segment: rng.below(8) as u32,
+                    n_s: rng.below(8) as u32 + 1,
+                    l0: rng.normal(),
+                    l_prev: rng.normal(),
+                    rng_state: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+                    down: match rng.below(4) {
+                        0 => DownPayload::DenseF32((0..n).map(|_| rng.normal() as f32).collect()),
+                        1 => DownPayload::SparseWire((0..n).map(|_| rng.below(256) as u8).collect()),
+                        2 => DownPayload::DenseF16((0..n).map(|_| rng.below(256) as u8).collect()),
+                        _ => DownPayload::FloraInit((0..n).map(|_| rng.normal() as f32).collect()),
+                    },
+                })
+            }
+            2 => {
+                let n = rng.below(200);
+                Message::TrainResult(TrainResult {
+                    round: rng.below(1000) as u64,
+                    slot: rng.below(16) as u32,
+                    client: rng.below(100) as u32,
+                    segment: rng.below(8) as u32,
+                    n_samples: rng.below(500) as u32 + 1,
+                    mean_loss: rng.normal(),
+                    k_a: rng.next_f64(),
+                    k_b: rng.next_f64(),
+                    exec_s: rng.next_f64(),
+                    up: match rng.below(3) {
+                        0 => UpPayload::SparseWire((0..n).map(|_| rng.below(256) as u8).collect()),
+                        1 => UpPayload::DenseUpdate((0..n).map(|_| rng.normal() as f32).collect()),
+                        _ => UpPayload::DenseModule((0..n).map(|_| rng.normal() as f32).collect()),
+                    },
+                })
+            }
+            3 => Message::BaseSync {
+                base: (0..rng.below(300)).map(|_| rng.normal() as f32).collect(),
+            },
+            4 => Message::Shutdown,
+            _ => Message::Error { text: format!("err-{}", rng.below(1000)) },
+        }
+    }
+
+    #[test]
+    fn message_roundtrip_property() {
+        propcheck(300, |rng| {
+            let msg = random_message(rng);
+            let env = msg.to_envelope();
+            let bytes = env.encode();
+            let dec_env = Envelope::decode(&bytes).unwrap();
+            assert_eq!(dec_env, env);
+            let dec_msg = Message::from_envelope(&dec_env).unwrap();
+            assert_eq!(dec_msg, msg);
+        });
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_length() {
+        propcheck(60, |rng| {
+            let bytes = random_message(rng).to_envelope().encode();
+            // every strict prefix must fail to decode
+            let step = (bytes.len() / 17).max(1);
+            let mut cut = 0;
+            while cut < bytes.len() {
+                assert!(
+                    Envelope::decode(&bytes[..cut]).is_err(),
+                    "prefix of {cut}/{} decoded",
+                    bytes.len()
+                );
+                cut += step;
+            }
+        });
+    }
+
+    #[test]
+    fn single_corrupt_byte_rejected() {
+        propcheck(200, |rng| {
+            let env = random_message(rng).to_envelope();
+            let bytes = env.encode();
+            let pos = rng.below(bytes.len());
+            let flip = (rng.below(255) + 1) as u8; // non-zero => byte changes
+            let mut bad = bytes.clone();
+            bad[pos] ^= flip;
+            // either the envelope is rejected outright, or (for a corrupt
+            // checksum colliding — impossible for 1 byte with FNV) never OK
+            assert!(
+                Envelope::decode(&bad).is_err(),
+                "corrupt byte at {pos} accepted"
+            );
+        });
+    }
+
+    #[test]
+    fn version_mismatch_is_a_distinct_error() {
+        let env = Message::Shutdown.to_envelope();
+        let mut bytes = env.encode();
+        bytes[2] = PROTO_VERSION + 1;
+        // rewrite a valid checksum so ONLY the version differs
+        let c = super::fnv1a_parts(&bytes[0..4], &bytes[28..]);
+        bytes[4..8].copy_from_slice(&c.to_le_bytes());
+        let err = Envelope::decode(&bytes).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("version mismatch"), "{msg}");
+        assert!(msg.contains(&format!("got {}", PROTO_VERSION + 1)), "{msg}");
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let mut bytes = Message::Hello { worker: 3 }.to_envelope().encode();
+        bytes.push(0);
+        assert!(Envelope::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn payload_trailing_bytes_rejected() {
+        // a Shutdown with spurious payload must not silently parse
+        let env = Envelope::new(MsgKind::Shutdown, 0, 0, 0, vec![1, 2, 3]);
+        let dec = Envelope::decode(&env.encode()).unwrap();
+        assert!(Message::from_envelope(&dec).is_err());
+    }
+
+    #[test]
+    fn header_fields_survive_roundtrip() {
+        let env = Envelope::new(MsgKind::TrainResult, 7, 3, 41, vec![9; 12]);
+        let dec = Envelope::decode(&env.encode()).unwrap();
+        assert_eq!(dec.round, 7);
+        assert_eq!(dec.segment, 3);
+        assert_eq!(dec.sample_count, 41);
+        assert_eq!(dec.kind, MsgKind::TrainResult);
+        assert_eq!(dec.payload, vec![9; 12]);
+    }
+}

@@ -1,0 +1,314 @@
+//! Pluggable byte transports connecting the coordinator to participants.
+//!
+//! Two implementations of the same duplex [`Conn`] contract:
+//!
+//! * [`ClusterMode::Mem`] — std::sync::mpsc channel pairs. Deterministic,
+//!   zero-config; the default CLI path and the parity tests run on it.
+//!   Envelopes are still byte-encoded through the full codec so the mem
+//!   path exercises exactly the bytes TCP would carry.
+//! * [`ClusterMode::Tcp`] — loopback (or real) TCP with length-prefixed
+//!   framing: `u32 le frame length` + envelope bytes.
+//!
+//! A `Conn` can be [`Conn::split`] into independently-owned send/receive
+//! halves so the coordinator can drain results on reader threads while it
+//! is still dispatching tasks — that split is what makes the dispatch
+//! phase deadlock-free regardless of kernel socket buffer sizes.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::protocol::{Envelope, HEADER_LEN, MAX_PAYLOAD};
+
+/// Sending half of a connection.
+pub trait ConnTx: Send {
+    fn send(&mut self, env: &Envelope) -> Result<()>;
+}
+
+/// Receiving half of a connection (blocking).
+pub trait ConnRx: Send {
+    fn recv(&mut self) -> Result<Envelope>;
+}
+
+/// One reliable, ordered duplex message pipe.
+pub trait Conn: Send {
+    fn send(&mut self, env: &Envelope) -> Result<()>;
+    fn recv(&mut self) -> Result<Envelope>;
+    /// Split into independently-owned halves (thread-per-direction use).
+    fn split(self: Box<Self>) -> Result<(Box<dyn ConnTx>, Box<dyn ConnRx>)>;
+}
+
+/// Which transport carries the protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    Mem,
+    Tcp,
+}
+
+impl ClusterMode {
+    pub fn parse(s: &str) -> Option<ClusterMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "mem" | "memory" | "channel" => Some(ClusterMode::Mem),
+            "tcp" | "loopback" => Some(ClusterMode::Tcp),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ClusterMode::Mem => "mem",
+            ClusterMode::Tcp => "tcp",
+        }
+    }
+}
+
+// ---- in-memory channel transport -------------------------------------------
+
+pub struct MemTx {
+    tx: mpsc::Sender<Vec<u8>>,
+}
+
+pub struct MemRx {
+    rx: mpsc::Receiver<Vec<u8>>,
+}
+
+impl ConnTx for MemTx {
+    fn send(&mut self, env: &Envelope) -> Result<()> {
+        self.tx
+            .send(env.encode())
+            .map_err(|_| anyhow!("mem transport: peer hung up on send"))
+    }
+}
+
+impl ConnRx for MemRx {
+    fn recv(&mut self) -> Result<Envelope> {
+        let bytes = self
+            .rx
+            .recv()
+            .map_err(|_| anyhow!("mem transport: peer hung up on recv"))?;
+        Envelope::decode(&bytes)
+    }
+}
+
+pub struct MemConn {
+    tx: MemTx,
+    rx: MemRx,
+}
+
+impl Conn for MemConn {
+    fn send(&mut self, env: &Envelope) -> Result<()> {
+        self.tx.send(env)
+    }
+
+    fn recv(&mut self) -> Result<Envelope> {
+        self.rx.recv()
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn ConnTx>, Box<dyn ConnRx>)> {
+        Ok((Box::new(self.tx), Box::new(self.rx)))
+    }
+}
+
+// ---- TCP transport ----------------------------------------------------------
+
+fn tcp_send(stream: &mut TcpStream, env: &Envelope) -> Result<()> {
+    let bytes = env.encode();
+    stream
+        .write_all(&(bytes.len() as u32).to_le_bytes())
+        .context("tcp send: frame length")?;
+    stream.write_all(&bytes).context("tcp send: frame body")?;
+    stream.flush().context("tcp send: flush")?;
+    Ok(())
+}
+
+fn tcp_recv(stream: &mut TcpStream) -> Result<Envelope> {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4).context("tcp recv: frame length")?;
+    let len = u32::from_le_bytes(len4) as usize;
+    ensure!(
+        (HEADER_LEN..=HEADER_LEN + MAX_PAYLOAD).contains(&len),
+        "tcp recv: implausible frame length {len}"
+    );
+    let mut buf = vec![0u8; len];
+    stream.read_exact(&mut buf).context("tcp recv: frame body")?;
+    Envelope::decode(&buf)
+}
+
+pub struct TcpTx {
+    stream: TcpStream,
+}
+
+pub struct TcpRx {
+    stream: TcpStream,
+}
+
+impl ConnTx for TcpTx {
+    fn send(&mut self, env: &Envelope) -> Result<()> {
+        tcp_send(&mut self.stream, env)
+    }
+}
+
+impl ConnRx for TcpRx {
+    fn recv(&mut self) -> Result<Envelope> {
+        tcp_recv(&mut self.stream)
+    }
+}
+
+pub struct TcpConn {
+    stream: TcpStream,
+}
+
+impl TcpConn {
+    /// Wrap an already-connected stream (external deployments).
+    pub fn from_stream(stream: TcpStream) -> TcpConn {
+        stream.set_nodelay(true).ok();
+        TcpConn { stream }
+    }
+}
+
+impl Conn for TcpConn {
+    fn send(&mut self, env: &Envelope) -> Result<()> {
+        tcp_send(&mut self.stream, env)
+    }
+
+    fn recv(&mut self) -> Result<Envelope> {
+        tcp_recv(&mut self.stream)
+    }
+
+    fn split(self: Box<Self>) -> Result<(Box<dyn ConnTx>, Box<dyn ConnRx>)> {
+        let reader = self.stream.try_clone().context("tcp split: clone stream")?;
+        Ok((Box::new(TcpTx { stream: self.stream }), Box::new(TcpRx { stream: reader })))
+    }
+}
+
+/// Build `n` connected coordinator↔worker pipes. Returns
+/// (coordinator-side conns, worker-side conns), index-aligned.
+pub fn establish(mode: ClusterMode, n: usize) -> Result<(Vec<Box<dyn Conn>>, Vec<Box<dyn Conn>>)> {
+    let mut coord: Vec<Box<dyn Conn>> = Vec::with_capacity(n);
+    let mut work: Vec<Box<dyn Conn>> = Vec::with_capacity(n);
+    match mode {
+        ClusterMode::Mem => {
+            for _ in 0..n {
+                let (to_worker_tx, to_worker_rx) = mpsc::channel();
+                let (to_coord_tx, to_coord_rx) = mpsc::channel();
+                coord.push(Box::new(MemConn {
+                    tx: MemTx { tx: to_worker_tx },
+                    rx: MemRx { rx: to_coord_rx },
+                }));
+                work.push(Box::new(MemConn {
+                    tx: MemTx { tx: to_coord_tx },
+                    rx: MemRx { rx: to_worker_rx },
+                }));
+            }
+        }
+        ClusterMode::Tcp => {
+            let listener =
+                TcpListener::bind(("127.0.0.1", 0)).context("tcp transport: bind loopback")?;
+            let addr = listener.local_addr().context("tcp transport: local addr")?;
+            for _ in 0..n {
+                // connect-then-accept one at a time keeps pairing aligned;
+                // the Hello handshake re-checks identity on top anyway.
+                let worker_side =
+                    TcpStream::connect(addr).context("tcp transport: connect loopback")?;
+                let (coord_side, _peer) = listener.accept().context("tcp transport: accept")?;
+                coord.push(Box::new(TcpConn::from_stream(coord_side)));
+                work.push(Box::new(TcpConn::from_stream(worker_side)));
+            }
+        }
+    }
+    Ok((coord, work))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::protocol::{Message, MsgKind};
+
+    fn echo_roundtrip(mode: ClusterMode) {
+        let (mut coord, work) = establish(mode, 2).unwrap();
+        let mut handles = Vec::new();
+        for (w, mut conn) in work.into_iter().enumerate() {
+            handles.push(std::thread::spawn(move || {
+                // identify, then echo everything until Shutdown
+                conn.send(&Message::Hello { worker: w as u32 }.to_envelope()).unwrap();
+                loop {
+                    let env = conn.recv().unwrap();
+                    if env.kind == MsgKind::Shutdown {
+                        return;
+                    }
+                    conn.send(&env).unwrap();
+                }
+            }));
+        }
+        for (i, conn) in coord.iter_mut().enumerate() {
+            let hello = conn.recv().unwrap();
+            match Message::from_envelope(&hello).unwrap() {
+                Message::Hello { worker } => assert_eq!(worker as usize, i),
+                other => panic!("expected hello, got {other:?}"),
+            }
+            let msg = Message::BaseSync { base: vec![1.5; 1000 + i] };
+            let env = msg.to_envelope();
+            conn.send(&env).unwrap();
+            let back = conn.recv().unwrap();
+            assert_eq!(back, env);
+            conn.send(&Message::Shutdown.to_envelope()).unwrap();
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn mem_transport_roundtrips() {
+        echo_roundtrip(ClusterMode::Mem);
+    }
+
+    #[test]
+    fn tcp_transport_roundtrips_on_loopback() {
+        echo_roundtrip(ClusterMode::Tcp);
+    }
+
+    #[test]
+    fn split_halves_work_from_separate_threads() {
+        for mode in [ClusterMode::Mem, ClusterMode::Tcp] {
+            let (coord, work) = establish(mode, 1).unwrap();
+            let mut worker_conn = work.into_iter().next().unwrap();
+            let peer = std::thread::spawn(move || {
+                for _ in 0..3 {
+                    let env = worker_conn.recv().unwrap();
+                    worker_conn.send(&env).unwrap();
+                }
+            });
+            let (mut tx, mut rx) = coord.into_iter().next().unwrap().split().unwrap();
+            let reader = std::thread::spawn(move || {
+                let mut seen = Vec::new();
+                for _ in 0..3 {
+                    seen.push(rx.recv().unwrap().round);
+                }
+                seen
+            });
+            for round in 0..3u64 {
+                let env = crate::cluster::protocol::Envelope::new(
+                    MsgKind::TrainTask,
+                    round,
+                    0,
+                    0,
+                    vec![7; 64],
+                );
+                tx.send(&env).unwrap();
+            }
+            assert_eq!(reader.join().unwrap(), vec![0, 1, 2]);
+            peer.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(ClusterMode::parse("mem"), Some(ClusterMode::Mem));
+        assert_eq!(ClusterMode::parse("TCP"), Some(ClusterMode::Tcp));
+        assert_eq!(ClusterMode::parse("carrier-pigeon"), None);
+        assert_eq!(ClusterMode::Mem.name(), "mem");
+    }
+}

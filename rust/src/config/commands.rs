@@ -10,9 +10,10 @@
 use anyhow::{anyhow, Result};
 
 use crate::baselines::Method;
+use crate::cluster::{self, ClusterMode, ClusterOptions};
 use crate::compress::{AdaptiveSparsifier, Encoding, SparsMode};
 use crate::data::PartitionKind;
-use crate::fed::{EcoConfig, FedRunner};
+use crate::fed::{EcoConfig, FedOutcome, FedRunner};
 use crate::netsim::{NetSim, RoundPlan, Scenario};
 use crate::util::cli::Args;
 
@@ -26,6 +27,7 @@ USAGE: ecolora <subcommand> [flags]
 
   pretrain   --preset <p> [--steps N] [--samples N]
   train      --preset <p> [--method fedit|flora|ffa] [--eco] [--dpo]
+             [--cluster mem|tcp|mono] [--workers N] [--sim-ul X --sim-dl X]
              [--rounds N] [--clients N] [--per-round N] [--local-steps N]
              [--lr X] [--seed N] [--ns N] [--k-min-a X] [--k-min-b X]
              [--fixed-k X] [--no-spars] [--no-encoding] [--dense-downlink]
@@ -34,6 +36,13 @@ USAGE: ecolora <subcommand> [flags]
   repro      --table 1|2|3|4|5|6  or  --fig 2|3   [--preset p] [--scaled]
   netsim     --ul <mbps> --dl <mbps> --bytes-up N --bytes-down N --compute S
   version / help
+
+train runs on the message-passing cluster by default (--cluster mem:
+in-process channel transport, participant threads in parallel).
+--cluster tcp moves the same protocol onto loopback TCP; --cluster mono
+uses the single-threaded monolithic reference loop. --sim-ul/--sim-dl
+(Mbps) attach the netsim shim to the transport and report simulated
+per-round communication time over the real protocol bytes.
 ";
 
 pub fn dispatch() -> Result<()> {
@@ -119,15 +128,56 @@ pub fn fed_config_from_args(args: &Args) -> Result<crate::fed::FedConfig> {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = fed_config_from_args(args)?;
-    let label_eco = cfg.eco.is_some();
-    let mut runner = FedRunner::new(cfg)?;
-    let out = runner.run()?;
-    println!(
-        "method={}{} preset={}",
-        runner.cfg.method.name(),
-        if label_eco { "+EcoLoRA" } else { "" },
-        runner.cfg.preset
-    );
+    let label = cfg.run_label();
+
+    let out = match args.get_or("cluster", "mem") {
+        // old monolithic entry point, kept as a thin wrapper
+        "mono" | "off" | "none" => {
+            for flag in ["workers", "sim-ul", "sim-dl", "sim-latency"] {
+                if args.get(flag).is_some() {
+                    return Err(anyhow!("--{flag} needs a cluster deployment (--cluster mem|tcp)"));
+                }
+            }
+            println!("deployment    : monolithic");
+            FedRunner::new(cfg)?.run()?
+        }
+        mode => {
+            let mode = ClusterMode::parse(mode)
+                .ok_or_else(|| anyhow!("bad --cluster {mode:?} (mem, tcp or mono)"))?;
+            // any sim-* flag turns the shim on (the others take defaults)
+            let sim_requested =
+                ["sim-ul", "sim-dl", "sim-latency"].iter().any(|k| args.get(k).is_some());
+            let netsim = sim_requested.then(|| Scenario {
+                name: "custom",
+                ul_mbps: args.get_f64("sim-ul", 1.0),
+                dl_mbps: args.get_f64("sim-dl", 5.0),
+                latency_s: args.get_f64("sim-latency", 0.05),
+            });
+            let opts = ClusterOptions {
+                mode,
+                workers: args.get("workers").map(|v| {
+                    v.parse().unwrap_or_else(|_| panic!("--workers expects an integer, got {v:?}"))
+                }),
+                netsim,
+            };
+            let out = cluster::run(cfg, &opts)?;
+            println!(
+                "deployment    : cluster ({} transport, {} workers)",
+                out.transport, out.workers
+            );
+            if !out.timings.is_empty() {
+                let comm: f64 = out.timings.iter().map(|t| t.comm_s).sum();
+                let total: f64 = out.timings.iter().map(|t| t.round_s).sum();
+                println!("sim round time: {total:.2}s total, {comm:.2}s communication");
+            }
+            out.fed
+        }
+    };
+    print_train_outcome(&label, &out, args)
+}
+
+fn print_train_outcome(label: &str, out: &FedOutcome, args: &Args) -> Result<()> {
+    println!("run           : {label}");
     println!("final loss    : {:.4}", out.log.final_loss());
     println!("final MC acc  : {:.4}", out.final_acc);
     if let Some(m) = out.final_margin {

@@ -15,12 +15,24 @@ use anyhow::Result;
 
 use crate::compress::{wire, Compressed, Compressor, Encoding, KindIndex, SparsMode};
 use crate::model::LoraKind;
+use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits};
 
 /// Per-client downlink channel.
 struct Channel {
     /// Global model as the client last reconstructed it.
     reference: Vec<f32>,
     comp: Compressor,
+}
+
+/// The exact client-bound bytes of one broadcast — what the cluster
+/// transport ships. The monolithic runner ignores this and uses
+/// `Broadcast::reconstructed` directly.
+#[derive(Debug, Clone)]
+pub enum DownWire {
+    /// Golomb/fixed sparse delta message over the full vector range.
+    Sparse(Vec<u8>),
+    /// Dense f16 bits of the full-vector delta (`SparsMode::Off`).
+    DenseF16(Vec<u8>),
 }
 
 /// What one broadcast produced.
@@ -31,6 +43,39 @@ pub struct Broadcast {
     pub params: usize,
     /// Exact wire bytes.
     pub bytes: usize,
+    /// The client-bound message itself (present iff `want_wire` was set —
+    /// the monolithic runner skips materializing it).
+    pub wire: Option<DownWire>,
+}
+
+/// Client-side mirror of [`DownlinkState::broadcast`]: advance the local
+/// `reference` copy by the decoded delta. Server and client apply the SAME
+/// quantized values, so the two references stay bit-identical. Returns the
+/// transmitted parameter count.
+pub fn apply_down_wire(
+    msg: &DownWire,
+    reference: &mut [f32],
+    kidx: &KindIndex,
+) -> Result<usize> {
+    match msg {
+        DownWire::Sparse(bytes) => {
+            let sv = wire::decode(bytes, &(0..reference.len()), kidx)?;
+            sv.add_to(reference);
+            Ok(sv.len())
+        }
+        DownWire::DenseF16(bytes) => {
+            anyhow::ensure!(
+                bytes.len() == 2 * reference.len(),
+                "downlink dense f16 payload: {} bytes for {} params",
+                bytes.len(),
+                reference.len()
+            );
+            for (r, ch) in reference.iter_mut().zip(bytes.chunks_exact(2)) {
+                *r += f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
+            }
+            Ok(reference.len())
+        }
+    }
 }
 
 pub struct DownlinkState {
@@ -64,13 +109,16 @@ impl DownlinkState {
     }
 
     /// Broadcast `global` to `client`, compressed against its reference.
-    /// `l0`/`l_prev` drive the adaptive schedule (Eq. 4).
+    /// `l0`/`l_prev` drive the adaptive schedule (Eq. 4). `want_wire`
+    /// materializes the client-bound message (cluster transports); the
+    /// in-process runner passes false and reads `reconstructed` directly.
     pub fn broadcast(
         &mut self,
         client: usize,
         global: &[f32],
         l0: f64,
         l_prev: f64,
+        want_wire: bool,
     ) -> Result<Broadcast> {
         let ch = self.channels[client].get_or_insert_with(|| Channel {
             reference: self.init.clone(),
@@ -83,16 +131,32 @@ impl DownlinkState {
         }
         let out: Compressed = ch.comp.compress(&delta, l0, l_prev);
         let range = 0..n;
-        let bytes = match &out.dense {
-            // unsparsified downlink: dense f16 of the full vector
-            Some(d) => crate::compress::dense_bytes(d.len()),
-            None => wire::encode(&out.sv, &range, &self.kidx, out.k, self.encoding)?.len(),
+        let (bytes, msg) = match &out.dense {
+            // unsparsified downlink: dense f16 of the full vector. The sv
+            // values ARE the quantized dense delta, so shipping their f16
+            // bits reconstructs exactly what `add_to` applies server-side.
+            Some(d) => {
+                let msg = want_wire.then(|| {
+                    let mut w = Vec::with_capacity(2 * d.len());
+                    for &v in d {
+                        w.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
+                    }
+                    DownWire::DenseF16(w)
+                });
+                (crate::compress::dense_bytes(d.len()), msg)
+            }
+            None => {
+                // the sparse message is built anyway for exact byte counts
+                let enc = wire::encode(&out.sv, &range, &self.kidx, out.k, self.encoding)?;
+                (enc.len(), want_wire.then(|| DownWire::Sparse(enc)))
+            }
         };
         out.sv.add_to(&mut ch.reference);
         Ok(Broadcast {
             reconstructed: ch.reference.clone(),
             params: out.sv.len(),
             bytes,
+            wire: msg,
         })
     }
 
@@ -134,7 +198,7 @@ mod tests {
         // the reference converge to it (up to f16 precision)
         let mut err = f64::INFINITY;
         for _ in 0..6 {
-            let b = dl.broadcast(0, &global, 3.0, 3.0).unwrap();
+            let b = dl.broadcast(0, &global, 3.0, 3.0, false).unwrap();
             let e: f64 = b
                 .reconstructed
                 .iter()
@@ -161,12 +225,12 @@ mod tests {
         );
         let mut rng = Rng::new(1);
         let mut global: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-        dl.broadcast(0, &global, 3.0, 3.0).unwrap();
+        dl.broadcast(0, &global, 3.0, 3.0, false).unwrap();
         // small incremental change late in training -> few params, few bytes
         for v in global.iter_mut().take(100) {
             *v += 0.5;
         }
-        let b = dl.broadcast(0, &global, 3.0, 0.5).unwrap();
+        let b = dl.broadcast(0, &global, 3.0, 0.5, false).unwrap();
         assert!(b.bytes < crate::compress::dense_bytes(n), "sparse {} bytes", b.bytes);
         assert!(b.params < n);
     }
@@ -178,9 +242,36 @@ mod tests {
         let mut dl =
             DownlinkState::new(1, vec![0.0; n], SparsMode::Off, Encoding::Golomb, kinds, kidx);
         let global = vec![1.0f32; n];
-        let b = dl.broadcast(0, &global, 3.0, 3.0).unwrap();
+        let b = dl.broadcast(0, &global, 3.0, 3.0, false).unwrap();
         assert_eq!(b.bytes, crate::compress::dense_bytes(n));
         assert_eq!(b.params, n);
+    }
+
+    #[test]
+    fn client_side_apply_matches_server_reconstruction() {
+        // the cluster participant replays the wire message; its reference
+        // must track the server's reconstruction bit-for-bit
+        for mode in [SparsMode::Adaptive(AdaptiveSparsifier::default()), SparsMode::Off] {
+            let n = 256;
+            let (kinds, kidx) = setup(n);
+            let mut dl =
+                DownlinkState::new(1, vec![0.0; n], mode, Encoding::Golomb, kinds, kidx.clone());
+            let mut reference = vec![0.0f32; n];
+            let mut rng = Rng::new(3);
+            let mut global: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            for round in 0..4u32 {
+                let b = dl.broadcast(0, &global, 3.0, 2.0, true).unwrap();
+                let msg = b.wire.as_ref().expect("want_wire returns the message");
+                let params = apply_down_wire(msg, &mut reference, &kidx).unwrap();
+                assert_eq!(params, b.params, "{mode:?} round {round}");
+                for (r, s) in reference.iter().zip(&b.reconstructed) {
+                    assert_eq!(r.to_bits(), s.to_bits(), "{mode:?} round {round}");
+                }
+                for v in global.iter_mut().take(30) {
+                    *v += 0.1 * (round + 1) as f32;
+                }
+            }
+        }
     }
 
     #[test]
@@ -196,7 +287,7 @@ mod tests {
             kidx,
         );
         let g1 = vec![1.0f32; n];
-        dl.broadcast(0, &g1, 3.0, 3.0).unwrap();
+        dl.broadcast(0, &g1, 3.0, 3.0, false).unwrap();
         assert!(dl.reference(0).is_some());
         assert!(dl.reference(1).is_none());
     }

@@ -6,6 +6,13 @@
 //! artifacts → uplink (dense, or EcoLoRA round-robin segment + adaptive
 //! top-k + error feedback + Golomb wire) → per-segment weighted
 //! aggregation (Eq. 2) → telemetry.
+//!
+//! `FedRunner` is the monolithic, single-threaded reference path. The
+//! message-passing deployment of the same protocol lives in
+//! `crate::cluster` (coordinator/participant over pluggable transports);
+//! both paths share their deterministic setup and local-training code via
+//! [`world`], and `tests/integration_cluster.rs` proves they agree
+//! bitwise.
 
 pub mod downlink;
 pub mod round_robin;
@@ -13,6 +20,7 @@ pub mod sampling;
 pub mod server;
 pub mod session;
 pub mod staleness;
+pub mod world;
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -21,8 +29,9 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::baselines::Method;
-use crate::compress::{dense_bytes, wire, Compressor, Encoding, KindIndex, SparsMode};
-use crate::data::{self, corpus, preference, ClientData, Dataset, PartitionKind};
+use crate::compress::{dense_bytes, wire, Encoding, KindIndex, SparsMode};
+use crate::xla;
+use crate::data::{corpus, preference, Dataset, PartitionKind};
 use crate::eval::{DpoEvaluator, McEvaluator};
 use crate::metrics::{sparsity_snapshot, RoundRecord, RunLog};
 use crate::model::LoraKind;
@@ -31,6 +40,7 @@ use crate::util::rng::Rng;
 use downlink::DownlinkState;
 use server::SegmentAggregator;
 use session::Session;
+use world::{ClientState, World};
 
 /// EcoLoRA communication configuration (`FedConfig.eco == None` = plain
 /// baseline communication).
@@ -130,16 +140,16 @@ impl FedConfig {
             ..Self::paper_default(preset)
         }
     }
-}
 
-/// One client's persistent state.
-struct Client {
-    lora: Vec<f32>,
-    tau: u64,
-    comp: Option<Compressor>,
-    data: ClientData,
-    pref_indices: Vec<usize>,
-    n_samples: usize,
+    /// Run label shared by the monolithic and cluster paths.
+    pub fn run_label(&self) -> String {
+        format!(
+            "{}{}-{}",
+            self.method.name(),
+            if self.eco.is_some() { "+EcoLoRA" } else { "" },
+            self.preset
+        )
+    }
 }
 
 /// Outcome of a full federated run.
@@ -151,13 +161,13 @@ pub struct FedOutcome {
     pub reached_target_at: Option<usize>,
 }
 
-/// The coordinator.
+/// The monolithic coordinator.
 pub struct FedRunner {
     pub cfg: FedConfig,
     pub session: Session,
     pub ds: Dataset,
     pairs: Vec<preference::PrefPair>,
-    clients: Vec<Client>,
+    clients: Vec<ClientState>,
     global: Vec<f32>,
     kinds: Arc<Vec<LoraKind>>,
     kidx: Arc<KindIndex>,
@@ -172,82 +182,43 @@ pub struct FedRunner {
 
 impl FedRunner {
     pub fn new(cfg: FedConfig) -> Result<FedRunner> {
-        let mut rng = Rng::new(cfg.seed);
-        let mut session = Session::new(&cfg.artifacts_dir, &cfg.preset, &mut rng.fork(1))?;
-        if let Some(ckpt) = &cfg.base_checkpoint {
-            session.load_base(ckpt)?;
-        }
-        let mcfg = &session.schema.config;
-        let ccfg = corpus::CorpusCfg::new(mcfg.vocab, mcfg.seq_len, 8);
-        let ds = corpus::generate(&mut rng.fork(2), cfg.n_samples, ccfg);
-        let parts = data::partition_dataset(&ds, cfg.partition, cfg.n_clients, &mut rng.fork(3));
-
-        let pairs = if cfg.dpo {
-            preference::generate_pairs(&mut rng.fork(9), cfg.n_samples, &ccfg)
-        } else {
-            vec![]
-        };
-
-        let kinds = Arc::new(session.schema.kind_map());
-        let kidx = Arc::new(KindIndex::new(&kinds));
-        let lora_init = session.schema.init_lora(&mut rng.fork(4));
-
-        let clients: Vec<Client> = parts
-            .into_iter()
-            .enumerate()
-            .map(|(i, indices)| {
-                let n_samples = indices.len().max(1);
-                let pref_indices: Vec<usize> = if cfg.dpo {
-                    (0..pairs.len()).filter(|p| p % cfg.n_clients == i).collect()
-                } else {
-                    vec![]
-                };
-                Client {
-                    lora: lora_init.clone(),
-                    tau: 0,
-                    comp: cfg.eco.map(|e| {
-                        Compressor::new(e.spars, e.encoding, kinds.clone(), kidx.clone())
-                    }),
-                    data: ClientData::new(indices),
-                    pref_indices,
-                    n_samples,
-                }
-            })
-            .collect();
+        let mut world = World::build(&cfg)?;
+        let clients: Vec<ClientState> =
+            (0..cfg.n_clients).map(|i| world.client_state(&cfg, i)).collect();
 
         let dl = cfg.eco.filter(|e| e.downlink_sparse).map(|e| {
             DownlinkState::new(
                 cfg.n_clients,
-                lora_init.clone(),
+                world.lora_init.clone(),
                 e.spars,
                 e.encoding,
-                kinds.clone(),
-                kidx.clone(),
+                world.kinds.clone(),
+                world.kidx.clone(),
             )
         });
 
         let evaluator = McEvaluator::new(
-            corpus::make_eval_set(&mut rng.fork(5), cfg.eval_items, &ccfg),
-            ccfg.seq_tokens,
+            corpus::make_eval_set(&mut world.rng.fork(5), cfg.eval_items, &world.ccfg),
+            world.ccfg.seq_tokens,
         );
-        let dpo_eval = cfg
-            .dpo
-            .then(|| DpoEvaluator::new(preference::generate_pairs(&mut rng.fork(6), 64, &ccfg)));
+        let dpo_eval = cfg.dpo.then(|| {
+            DpoEvaluator::new(preference::generate_pairs(&mut world.rng.fork(6), 64, &world.ccfg))
+        });
 
         Ok(FedRunner {
-            global: lora_init.clone(),
-            lora_init,
+            global: world.lora_init.clone(),
+            lora_init: world.lora_init,
             cfg,
-            session,
-            ds,
-            pairs,
+            session: world.session,
+            ds: world.ds,
+            pairs: world.pairs,
             clients,
-            kinds,
-            kidx,
+            kinds: world.kinds,
+            kidx: world.kidx,
             dl,
             evaluator,
             dpo_eval,
-            rng,
+            rng: world.rng,
             l0: None,
             l_prev: f64::NAN,
         })
@@ -263,12 +234,7 @@ impl FedRunner {
 
     /// Run the configured number of rounds (early-stopping on target_acc).
     pub fn run(&mut self) -> Result<FedOutcome> {
-        let label = format!(
-            "{}{}-{}",
-            self.cfg.method.name(),
-            if self.cfg.eco.is_some() { "+EcoLoRA" } else { "" },
-            self.cfg.preset
-        );
+        let label = self.cfg.run_label();
         let mut log = RunLog::new(label.clone());
         let mask = self.session.upload_mask(&self.cfg.method.grad_mask(&self.session.schema))?;
         let mut reached: Option<usize> = None;
@@ -352,7 +318,7 @@ impl FedRunner {
                 self.global.clone()
             } else { match &mut self.dl {
                 Some(dl) => {
-                    let b = dl.broadcast(ci, &self.global, loss_signal.0, loss_signal.1)?;
+                    let b = dl.broadcast(ci, &self.global, loss_signal.0, loss_signal.1, false)?;
                     rec.down.add(b.params, b.bytes);
                     b.reconstructed
                 }
@@ -370,7 +336,7 @@ impl FedRunner {
                 Some(init) => init.clone(),
                 None => start_global.clone(),
             };
-            let mut local = if flora_init.is_some() {
+            let local = if flora_init.is_some() {
                 base_point.clone()
             } else if let Some(eco) = self.cfg.eco {
                 let staleness = (t.saturating_sub(client.tau)).max(1);
@@ -381,52 +347,10 @@ impl FedRunner {
                 start_global.clone()
             };
 
-            // ---- local training --------------------------------------------
-            let mean_loss = if self.cfg.dpo {
-                let b = self.session.schema.config.batch;
-                let seq = self.session.schema.config.seq_len + 1;
-                let mut loss_sum = 0.0f64;
-                let mut prng = self.rng.fork(4000 + t * 131 + ci as u64);
-                for _ in 0..self.cfg.local_steps {
-                    let mut chosen = Vec::with_capacity(b * seq);
-                    let mut rejected = Vec::with_capacity(b * seq);
-                    for _ in 0..b {
-                        let pi = if client.pref_indices.is_empty() {
-                            prng.below(self.pairs.len().max(1))
-                        } else {
-                            client.pref_indices[prng.below(client.pref_indices.len())]
-                        };
-                        let p = &self.pairs[pi];
-                        chosen.extend_from_slice(&p.chosen);
-                        rejected.extend_from_slice(&p.rejected);
-                    }
-                    let (next, loss, _m) = self.session.dpo_step(
-                        &local,
-                        &chosen,
-                        &rejected,
-                        self.cfg.lr,
-                        self.cfg.dpo_beta,
-                        mask,
-                    )?;
-                    local = next;
-                    loss_sum += loss as f64;
-                }
-                loss_sum / self.cfg.local_steps.max(1) as f64
-            } else {
-                let mut batch_rng = self.rng.fork(3000 + t * 131 + ci as u64);
-                let ds = &self.ds;
-                let data = &mut client.data;
-                let batch_size = self.session.schema.config.batch;
-                let (next, mean_loss) = self.session.train_chain(
-                    local,
-                    self.cfg.local_steps,
-                    self.cfg.lr,
-                    mask,
-                    || data.next_batch(ds, batch_size, &mut batch_rng),
-                )?;
-                local = next;
-                mean_loss
-            };
+            // ---- local training (code shared with cluster participants) ----
+            let mut brng = self.rng.fork(world::batch_salt(self.cfg.dpo, t, ci));
+            let (local, mean_loss) = world::local_train(
+                &self.session, &self.cfg, &self.ds, &self.pairs, client, local, &mut brng, mask)?;
             loss_acc += mean_loss * client.n_samples as f64;
             weight_acc += client.n_samples as f64;
 
@@ -446,9 +370,8 @@ impl FedRunner {
                     let sv = out.sv.restrict(&range);
                     let bytes = wire::encode(&sv, &range, &self.kidx, out.k, eco.encoding)?;
                     // the server decodes the exact wire message
-                    let decoded = wire::decode(&bytes, &range, &self.kidx)?;
-                    rec.up.add(decoded.len(), bytes.len());
-                    agg.add_sparse(seg, &decoded, client.n_samples as f64);
+                    let params = agg.add_wire(seg, &bytes, &self.kidx, client.n_samples as f64)?;
+                    rec.up.add(params, bytes.len());
                 }
                 _ => {
                     let p = self.cfg.method.dense_upload_params(&self.session.schema);

@@ -4,7 +4,7 @@
 
 use std::ops::Range;
 
-use crate::compress::SparseVec;
+use crate::compress::{wire, KindIndex, SparseVec};
 use crate::model::segment_ranges;
 
 /// Weighted per-segment aggregator over client UPDATES (deltas from the
@@ -44,6 +44,24 @@ impl SegmentAggregator {
             self.acc[i] += n_i * v as f64;
         }
         self.seg_weight[seg] += n_i;
+    }
+
+    /// Decode one uplink wire message for `seg` and fold it in with weight
+    /// `n_i` — the server side of the EcoLoRA uplink, shared by the
+    /// monolithic runner and the cluster coordinator. Returns the
+    /// transmitted parameter count (comm accounting).
+    pub fn add_wire(
+        &mut self,
+        seg: usize,
+        bytes: &[u8],
+        kidx: &KindIndex,
+        n_i: f64,
+    ) -> anyhow::Result<usize> {
+        let range = self.ranges[seg].clone();
+        let decoded = wire::decode(bytes, &range, kidx)?;
+        let params = decoded.len();
+        self.add_sparse(seg, &decoded, n_i);
+        Ok(params)
     }
 
     /// Add a dense segment contribution (`values` spans the segment range).

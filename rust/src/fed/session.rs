@@ -10,7 +10,9 @@ use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{anyhow, Result};
-use xla::PjRtBuffer;
+
+use crate::xla;
+use crate::xla::PjRtBuffer;
 
 use crate::model::Schema;
 use crate::runtime::{literal_f32, literal_scalar_f32, Engine, Exec};

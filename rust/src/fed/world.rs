@@ -1,0 +1,179 @@
+//! Shared deterministic world construction for the monolithic `FedRunner`
+//! and the cluster coordinator/participant processes.
+//!
+//! The cluster ships only wire payloads — never host state — so every
+//! peer must materialize an IDENTICAL world (model session, synthetic
+//! corpus, partition, preference pairs, LoRA init) from the `FedConfig`
+//! alone. `Rng::fork` advances the root stream, which makes the fork
+//! ORDER below part of the protocol: reordering any call breaks bitwise
+//! parity between the monolithic and cluster paths (and across cluster
+//! peers). `tests/integration_cluster.rs` enforces the parity.
+//!
+//! Fork schedule (root = `Rng::new(cfg.seed)`):
+//!   1 → session base init, 2 → corpus, 3 → partition,
+//!   9 → preference pairs (DPO only), 4 → LoRA init,
+//!   then (coordinator/monolith only) 5 → eval set, 6 → DPO eval set,
+//!   then per round t: 1000+t → sampling, 2000+t → FLoRA restart init,
+//!   (3000|4000)+t·131+ci → per-client batch stream.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::compress::{Compressor, KindIndex};
+use crate::data::{self, corpus, preference, ClientData, Dataset};
+use crate::model::LoraKind;
+use crate::util::rng::Rng;
+use crate::xla::PjRtBuffer;
+
+use super::session::Session;
+use super::FedConfig;
+
+/// One logical client's persistent local state (owned by the monolithic
+/// runner, or by whichever cluster participant hosts the client).
+pub struct ClientState {
+    /// Last local LoRA vector (staleness mixing input, Eq. 3).
+    pub lora: Vec<f32>,
+    /// Round the client last participated in (τ).
+    pub tau: u64,
+    /// Uplink compressor with error-feedback residual (EcoLoRA only).
+    pub comp: Option<Compressor>,
+    /// Local data view with epoch-shuffled batching.
+    pub data: ClientData,
+    /// Preference pairs assigned to this client (DPO only).
+    pub pref_indices: Vec<usize>,
+    /// FedAvg weight n_i (≥ 1 even for empty clients).
+    pub n_samples: usize,
+}
+
+/// Everything deterministically derivable from a `FedConfig`.
+pub struct World {
+    pub session: Session,
+    pub ds: Dataset,
+    pub ccfg: corpus::CorpusCfg,
+    pub pairs: Vec<preference::PrefPair>,
+    /// Per-client sample-index partition.
+    pub parts: Vec<Vec<usize>>,
+    pub kinds: Arc<Vec<LoraKind>>,
+    pub kidx: Arc<KindIndex>,
+    pub lora_init: Vec<f32>,
+    /// Root RNG, positioned just after the setup forks (see module docs).
+    pub rng: Rng,
+}
+
+impl World {
+    /// Build the world. The fork order here is load-bearing — see module
+    /// docs before touching it.
+    pub fn build(cfg: &FedConfig) -> Result<World> {
+        let mut rng = Rng::new(cfg.seed);
+        let mut session = Session::new(&cfg.artifacts_dir, &cfg.preset, &mut rng.fork(1))?;
+        if let Some(ckpt) = &cfg.base_checkpoint {
+            session.load_base(ckpt)?;
+        }
+        let mcfg = &session.schema.config;
+        let ccfg = corpus::CorpusCfg::new(mcfg.vocab, mcfg.seq_len, 8);
+        let ds = corpus::generate(&mut rng.fork(2), cfg.n_samples, ccfg);
+        let parts = data::partition_dataset(&ds, cfg.partition, cfg.n_clients, &mut rng.fork(3));
+
+        let pairs = if cfg.dpo {
+            preference::generate_pairs(&mut rng.fork(9), cfg.n_samples, &ccfg)
+        } else {
+            vec![]
+        };
+
+        let kinds = Arc::new(session.schema.kind_map());
+        let kidx = Arc::new(KindIndex::new(&kinds));
+        let lora_init = session.schema.init_lora(&mut rng.fork(4));
+
+        Ok(World { session, ds, ccfg, pairs, parts, kinds, kidx, lora_init, rng })
+    }
+
+    /// Fresh state for client `ci` — identical whether built eagerly (the
+    /// monolithic runner) or lazily on first task (cluster participants).
+    pub fn client_state(&self, cfg: &FedConfig, ci: usize) -> ClientState {
+        let indices = self.parts[ci].clone();
+        let n_samples = indices.len().max(1);
+        let pref_indices: Vec<usize> = if cfg.dpo {
+            (0..self.pairs.len()).filter(|p| p % cfg.n_clients == ci).collect()
+        } else {
+            vec![]
+        };
+        ClientState {
+            lora: self.lora_init.clone(),
+            tau: 0,
+            comp: cfg
+                .eco
+                .map(|e| Compressor::new(e.spars, e.encoding, self.kinds.clone(), self.kidx.clone())),
+            data: ClientData::new(indices),
+            pref_indices,
+            n_samples,
+        }
+    }
+
+    /// FedAvg weights n_i for every client (sampling + aggregation).
+    pub fn client_weights(&self) -> Vec<f64> {
+        self.parts.iter().map(|p| p.len().max(1) as f64).collect()
+    }
+}
+
+/// One client's local optimization (SGD chain or DPO). Shared verbatim by
+/// the monolithic runner and cluster participants so the two paths cannot
+/// drift: `rng` is the per-task batch stream, `local` the mixed/restarted
+/// starting point. Returns the trained vector and the mean local loss.
+pub fn local_train(
+    session: &Session,
+    cfg: &FedConfig,
+    ds: &Dataset,
+    pairs: &[preference::PrefPair],
+    client: &mut ClientState,
+    mut local: Vec<f32>,
+    rng: &mut Rng,
+    mask: &PjRtBuffer,
+) -> Result<(Vec<f32>, f64)> {
+    let mean_loss = if cfg.dpo {
+        let b = session.schema.config.batch;
+        let seq = session.schema.config.seq_len + 1;
+        let mut loss_sum = 0.0f64;
+        for _ in 0..cfg.local_steps {
+            let mut chosen = Vec::with_capacity(b * seq);
+            let mut rejected = Vec::with_capacity(b * seq);
+            for _ in 0..b {
+                let pi = if client.pref_indices.is_empty() {
+                    rng.below(pairs.len().max(1))
+                } else {
+                    client.pref_indices[rng.below(client.pref_indices.len())]
+                };
+                let p = &pairs[pi];
+                chosen.extend_from_slice(&p.chosen);
+                rejected.extend_from_slice(&p.rejected);
+            }
+            let (next, loss, _m) =
+                session.dpo_step(&local, &chosen, &rejected, cfg.lr, cfg.dpo_beta, mask)?;
+            local = next;
+            loss_sum += loss as f64;
+        }
+        loss_sum / cfg.local_steps.max(1) as f64
+    } else {
+        let batch_size = session.schema.config.batch;
+        let data = &mut client.data;
+        let (next, mean_loss) = session.train_chain(
+            local,
+            cfg.local_steps,
+            cfg.lr,
+            mask,
+            || data.next_batch(ds, batch_size, rng),
+        )?;
+        local = next;
+        mean_loss
+    };
+    Ok((local, mean_loss))
+}
+
+/// Salt for a client's per-round batch stream (shared by both paths).
+pub fn batch_salt(dpo: bool, t: u64, ci: usize) -> u64 {
+    if dpo {
+        4000 + t * 131 + ci as u64
+    } else {
+        3000 + t * 131 + ci as u64
+    }
+}

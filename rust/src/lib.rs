@@ -4,11 +4,15 @@
 //! of Large Language Models* (EMNLP 2025) as a three-layer rust + JAX +
 //! Pallas system:
 //!
-//! * **Layer 3 (this crate)** — the federated-learning coordinator: the
+//! * **Layer 3 (this crate)** — the federated-learning system: the
 //!   paper's round-robin segment sharing, adaptive sparsification with
 //!   error feedback, Golomb-coded sparse wire format, the FedIT / FLoRA /
 //!   FFA-LoRA baselines, a discrete-event network simulator, non-IID data
-//!   partitioners, and the evaluation + metrics stack.
+//!   partitioners, the evaluation + metrics stack, and the `cluster`
+//!   subsystem — an actor-style coordinator/participant deployment of the
+//!   protocol over pluggable transports (in-memory channels or framed
+//!   TCP) that reproduces the monolithic `fed::FedRunner` bitwise (see
+//!   docs/ARCHITECTURE.md).
 //! * **Layer 2** — `python/compile/model.py`: JAX transformer with LoRA,
 //!   AOT-lowered to HLO text once by `make artifacts`.
 //! * **Layer 1** — `python/compile/kernels/`: the fused LoRA-linear Pallas
@@ -17,8 +21,23 @@
 //! Python never runs at request time: the coordinator executes the compiled
 //! artifacts through PJRT (`runtime`).
 
+// Everything in this crate reaches PJRT through `crate::xla`: a re-export
+// of the native bindings when the `pjrt` feature is on, or the compile-time
+// stub when it is off. Import `crate::xla::…`, never the extern crate.
+// The `pjrt` feature expects you to add the xla-rs dependency by hand —
+// see the feature comment in Cargo.toml.
+#[cfg(feature = "pjrt")]
+pub mod xla {
+    //! Native PJRT bindings (`xla-rs`); twin of `xla_stub.rs`.
+    pub use ::xla::*;
+}
+#[cfg(not(feature = "pjrt"))]
+#[path = "xla_stub.rs"]
+pub mod xla;
+
 pub mod baselines;
 pub mod bench;
+pub mod cluster;
 pub mod compress;
 pub mod config;
 pub mod data;

@@ -11,9 +11,18 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
-use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::xla;
+use crate::xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
 use crate::model::Schema;
+use crate::util::lock_unpoisoned;
+
+/// Whether this build links the real PJRT runtime (the `pjrt` feature).
+/// When false, `Engine::new` fails cleanly and artifact-backed tests skip.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "pjrt")
+}
 
 /// Process-wide PJRT engine (CPU client + compiled executable cache).
 pub struct Engine {
@@ -47,7 +56,7 @@ impl Engine {
 
     /// Load + compile an HLO-text artifact (cached by file name).
     pub fn load(&self, file: &str) -> Result<std::sync::Arc<Exec>> {
-        if let Some(e) = self.cache.lock().unwrap().get(file) {
+        if let Some(e) = lock_unpoisoned(&self.cache).get(file) {
             return Ok(e.clone());
         }
         let path = self.artifacts_dir.join(file);
@@ -59,9 +68,9 @@ impl Engine {
             .client
             .compile(&comp)
             .map_err(|e| anyhow!("XLA compile of {file}: {e:?}"))?;
-        *self.compile_seconds.lock().unwrap() += t0.elapsed().as_secs_f64();
+        *lock_unpoisoned(&self.compile_seconds) += t0.elapsed().as_secs_f64();
         let exec = std::sync::Arc::new(Exec { exe, name: file.to_string() });
-        self.cache.lock().unwrap().insert(file.to_string(), exec.clone());
+        lock_unpoisoned(&self.cache).insert(file.to_string(), exec.clone());
         Ok(exec)
     }
 

@@ -10,3 +10,12 @@ pub mod linalg;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+
+/// Poison-tolerant mutex lock: recover the guarded value even if another
+/// thread panicked while holding the lock. Cluster participants run on
+/// worker threads; one crashed worker must not poison shared engine state
+/// for everyone else (the guarded values here are plain caches/counters,
+/// valid regardless of where the holder panicked).
+pub fn lock_unpoisoned<T>(m: &std::sync::Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}

@@ -30,6 +30,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ salt.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Raw xoshiro state. The cluster protocol ships per-task batch-RNG
+    /// streams so participant results are independent of scheduling order.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a stream captured with [`Rng::state`].
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)

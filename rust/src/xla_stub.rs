@@ -1,0 +1,104 @@
+//! Compile-time stand-in for the `xla` PJRT bindings, used when the `pjrt`
+//! feature is off (see Cargo.toml). Every constructor returns a clean
+//! error, so the pure-Rust layers — compression, cluster protocol and
+//! transports, netsim, data, metrics — build and test without the native
+//! XLA extension, while anything that actually needs device execution
+//! surfaces "built without the `pjrt` feature" instead of a link failure.
+//!
+//! The surface mirrors exactly the subset of xla-rs this crate calls
+//! (`runtime::Engine`, `fed::session::Session`); keep the two in sync.
+
+#![allow(dead_code)]
+
+/// Error type standing in for `xla::Error` (only ever formatted `{:?}`).
+pub struct Error(pub String);
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: ecolora was built without the `pjrt` feature; \
+         rebuild with `--features pjrt` (needs the native XLA extension)"
+    )))
+}
+
+pub struct PjRtClient(());
+pub struct PjRtLoadedExecutable(());
+pub struct PjRtBuffer(());
+pub struct Literal(());
+pub struct HloModuleProto(());
+pub struct XlaComputation(());
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrimitiveType {
+    Invalid,
+    Tuple,
+    F32,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "pjrt-stub".to_string()
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+impl Literal {
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn primitive_type(&self) -> Result<PrimitiveType> {
+        unavailable("Literal::primitive_type")
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        unavailable("Literal::decompose_tuple")
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<std::path::Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}

@@ -1,0 +1,187 @@
+//! Cluster integration.
+//!
+//! Transport/protocol behavior runs everywhere (no PJRT needed). The
+//! parity suite — proving the message-passing cluster reproduces the
+//! monolithic `FedRunner` BITWISE for a fixed seed — additionally needs
+//! the tiny artifacts (`make artifacts`) and a `--features pjrt` build;
+//! without them those tests no-op, same convention as integration_fed.
+
+use ecolora::cluster::{self, ClusterMode, ClusterOptions};
+use ecolora::fed::{EcoConfig, FedConfig, FedOutcome, FedRunner};
+use ecolora::netsim::Scenario;
+use ecolora::runtime::pjrt_available;
+
+fn have_artifacts() -> bool {
+    pjrt_available() && std::path::Path::new("artifacts/tiny.manifest.json").exists()
+}
+
+fn base_cfg() -> FedConfig {
+    let mut cfg = FedConfig::test_profile("tiny");
+    cfg.lr = 2.0;
+    cfg
+}
+
+fn assert_bitwise_equal(mono: &FedOutcome, clus: &FedOutcome, what: &str) {
+    assert_eq!(mono.final_lora.len(), clus.final_lora.len(), "{what}: lora length");
+    for (i, (a, b)) in mono.final_lora.iter().zip(&clus.final_lora).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: final_lora[{i}] {a} vs {b}");
+    }
+    assert_eq!(mono.final_acc.to_bits(), clus.final_acc.to_bits(), "{what}: final_acc");
+    assert_eq!(mono.log.rounds.len(), clus.log.rounds.len(), "{what}: round count");
+    for (mr, cr) in mono.log.rounds.iter().zip(&clus.log.rounds) {
+        assert_eq!(mr.global_loss.to_bits(), cr.global_loss.to_bits(), "{what}: loss r{}", mr.round);
+        assert_eq!(mr.up, cr.up, "{what}: uplink accounting r{}", mr.round);
+        assert_eq!(mr.down, cr.down, "{what}: downlink accounting r{}", mr.round);
+        assert_eq!(mr.eval_acc, cr.eval_acc, "{what}: eval r{}", mr.round);
+        assert_eq!(mr.k_a, cr.k_a, "{what}: k_a r{}", mr.round);
+    }
+}
+
+fn run_both(cfg: FedConfig, workers: usize, what: &str) {
+    let mono = FedRunner::new(cfg.clone()).unwrap().run().unwrap();
+    let opts =
+        ClusterOptions { mode: ClusterMode::Mem, workers: Some(workers), netsim: None };
+    let clus = cluster::run(cfg, &opts).unwrap();
+    assert_eq!(clus.workers, workers);
+    assert_bitwise_equal(&mono, &clus.fed, what);
+}
+
+#[test]
+fn one_round_eco_parity_bitwise() {
+    if !have_artifacts() {
+        return;
+    }
+    // the acceptance-criteria case: one full EcoLoRA round over the
+    // in-memory cluster == the monolithic path, bit for bit
+    let mut cfg = base_cfg();
+    cfg.rounds = 1;
+    cfg.eco = Some(EcoConfig::default());
+    run_both(cfg, 3, "eco 1 round");
+}
+
+#[test]
+fn multi_round_eco_parity_bitwise() {
+    if !have_artifacts() {
+        return;
+    }
+    // staleness mixing, error-feedback residuals and the downlink
+    // references all carry state across rounds — parity must survive them
+    let mut cfg = base_cfg();
+    cfg.eco = Some(EcoConfig { n_s: 3, ..Default::default() });
+    run_both(cfg, 2, "eco 4 rounds");
+}
+
+#[test]
+fn dense_fedit_parity_bitwise() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.rounds = 2;
+    run_both(cfg, 4, "dense fedit");
+}
+
+#[test]
+fn flora_parity_bitwise_with_base_sync() {
+    if !have_artifacts() {
+        return;
+    }
+    // FLoRA merges into the frozen base every round: exercises BaseSync
+    let mut cfg = base_cfg();
+    cfg.method = ecolora::baselines::Method::FLoRa;
+    cfg.rounds = 2;
+    run_both(cfg, 2, "flora dense");
+}
+
+#[test]
+fn worker_count_does_not_change_results() {
+    if !have_artifacts() {
+        return;
+    }
+    let mk = || {
+        let mut cfg = base_cfg();
+        cfg.rounds = 2;
+        cfg.eco = Some(EcoConfig::default());
+        cfg
+    };
+    let one = cluster::run(
+        mk(),
+        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(1), netsim: None },
+    )
+    .unwrap();
+    let four = cluster::run(
+        mk(),
+        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(4), netsim: None },
+    )
+    .unwrap();
+    assert_bitwise_equal(&one.fed, &four.fed, "1 vs 4 workers");
+}
+
+#[test]
+fn tcp_loopback_runs_and_matches_mem() {
+    if !have_artifacts() {
+        return;
+    }
+    let mk = || {
+        let mut cfg = base_cfg();
+        cfg.rounds = 2;
+        cfg.eco = Some(EcoConfig::default());
+        cfg
+    };
+    let mem = cluster::run(
+        mk(),
+        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(2), netsim: None },
+    )
+    .unwrap();
+    let tcp = cluster::run(
+        mk(),
+        &ClusterOptions { mode: ClusterMode::Tcp, workers: Some(2), netsim: None },
+    )
+    .unwrap();
+    assert_eq!(tcp.transport, "tcp");
+    assert_bitwise_equal(&mem.fed, &tcp.fed, "mem vs tcp");
+}
+
+#[test]
+fn netsim_shim_reports_round_timings() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.rounds = 2;
+    cfg.eco = Some(EcoConfig::default());
+    let scenario = Scenario { name: "1/5 Mbps", ul_mbps: 1.0, dl_mbps: 5.0, latency_s: 0.05 };
+    let out = cluster::run(
+        cfg,
+        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(2), netsim: Some(scenario) },
+    )
+    .unwrap();
+    assert_eq!(out.timings.len(), 2);
+    for t in &out.timings {
+        assert!(t.round_s > 0.0 && t.round_s.is_finite(), "{t:?}");
+        assert!(t.comm_s > 0.0, "{t:?}");
+    }
+}
+
+#[test]
+fn dpo_over_cluster_parity() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut cfg = base_cfg();
+    cfg.dpo = true;
+    cfg.rounds = 2;
+    cfg.eco = Some(EcoConfig::default());
+    let mono = FedRunner::new(cfg.clone()).unwrap().run().unwrap();
+    let clus = cluster::run(
+        cfg,
+        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(2), netsim: None },
+    )
+    .unwrap();
+    assert_bitwise_equal(&mono, &clus.fed, "dpo");
+    assert_eq!(
+        mono.final_margin.unwrap().to_bits(),
+        clus.fed.final_margin.unwrap().to_bits(),
+        "dpo margin"
+    );
+}

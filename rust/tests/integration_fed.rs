@@ -9,7 +9,8 @@ use ecolora::data::PartitionKind;
 use ecolora::fed::{EcoConfig, FedConfig, FedRunner};
 
 fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/tiny.manifest.json").exists()
+    ecolora::runtime::pjrt_available()
+        && std::path::Path::new("artifacts/tiny.manifest.json").exists()
 }
 
 fn base_cfg() -> FedConfig {

@@ -8,7 +8,8 @@ use ecolora::metrics::RunLog;
 use ecolora::netsim::{NetSim, RoundPlan, PAPER_SCENARIOS};
 
 fn have_artifacts() -> bool {
-    std::path::Path::new("artifacts/tiny.manifest.json").exists()
+    ecolora::runtime::pjrt_available()
+        && std::path::Path::new("artifacts/tiny.manifest.json").exists()
 }
 
 /// Replay a run log through a bandwidth scenario (mirrors

@@ -14,7 +14,7 @@ fn artifacts() -> &'static Path {
 }
 
 fn have_artifacts() -> bool {
-    artifacts().join("tiny.manifest.json").exists()
+    ecolora::runtime::pjrt_available() && artifacts().join("tiny.manifest.json").exists()
 }
 
 fn session() -> Session {
