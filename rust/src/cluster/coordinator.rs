@@ -6,8 +6,10 @@
 //! ```text
 //!   Sampling ──► Broadcast ──► Collect ──► Aggregate
 //!   (fork RNG,   (downlink     (TrainResult (Eq. 2 merge,
-//!    pick cohort) payload per   per slot,    telemetry,
-//!                 slot → tasks) any order)   eval, FLoRA base sync)
+//!    pick cohort) payload per   per slot,    late-uplink fold,
+//!                 slot → tasks) any order,   telemetry, eval,
+//!                               close at     FLoRA base sync)
+//!                               quorum)
 //! ```
 //!
 //! `begin_round` performs Sampling + Broadcast and returns the
@@ -17,46 +19,137 @@
 //! that, plus per-task RNG streams and per-client compressor state on the
 //! participants, is what makes the cluster path bitwise-reproducible.
 //!
+//! The Collect barrier is a policy, not a law: under
+//! [`RoundPolicy::Quorum`] the round closes as soon as `ceil(q·N_t)`
+//! results arrive. Straggler uplinks that land after the close are
+//! buffered ([`LateBuffer`]) and folded into the NEXT round's Eq. 2
+//! aggregate with the Eq. 3 staleness discount
+//! (`fed::staleness::stale_discount`), and slots that outlive the policy
+//! timeout are resampled to a replacement client with a fully
+//! deterministic re-dispatch stream (`fed::world::resample_rng`).
+//! `Quorum { q: 1.0, .. }` with no timeouts firing is bitwise identical
+//! to `Sync` — the parity tests in `tests/integration_cluster.rs` enforce
+//! it.
+//!
 //! The coordinator owns the global model, the per-client downlink
 //! channels (reference + error-feedback compressor), and the evaluation
 //! stack; it never runs local training.
 
-use std::time::Instant;
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
 
-use crate::compress::dense_bytes;
+use crate::compress::{dense_bytes, KindIndex};
 use crate::data::{corpus, preference};
 use crate::eval::{DpoEvaluator, McEvaluator};
 use crate::fed::downlink::{DownWire, DownlinkState};
 use crate::fed::server::SegmentAggregator;
 use crate::fed::world::{self, World};
-use crate::fed::{round_robin, FedConfig, FedOutcome};
+use crate::fed::{round_robin, staleness, EcoConfig, FedConfig, FedOutcome};
 use crate::metrics::{sparsity_snapshot, RoundRecord, RunLog};
 
 use super::protocol::{DownPayload, TrainResult, TrainTask, UpPayload};
+
+/// Upper bound on re-dispatches per slot: after this many replacement
+/// waves the coordinator stops spending downlink bandwidth on the slot
+/// and simply waits for quorum from whatever is still in flight.
+pub const MAX_REDISPATCH: u32 = 3;
+
+/// How many rounds back the coordinator remembers which (round, slot)
+/// pairs already contributed to an aggregate, so a racer result arriving
+/// after its slot was filled (original vs. replacement) cannot fold a
+/// second time. Beyond this horizon the Eq. 3 discount `e^{−β·s}` is
+/// below 1e-19 for any realistic β, so a theoretical double fold past it
+/// is numerically nil.
+pub const FILLED_HORIZON: u64 = 64;
+
+/// When a round may close.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RoundPolicy {
+    /// Block until every slot reports (the PR-1 collect barrier; the
+    /// reference semantics shared with the monolithic `FedRunner`).
+    Sync,
+    /// K-of-N aggregation: close the round once `ceil(q · N_t)` results
+    /// arrive; buffer stragglers for the next round's staleness-discounted
+    /// fold, and resample slots that outlive `timeout` to a replacement
+    /// client (deterministic re-dispatch, at most [`MAX_REDISPATCH`]
+    /// waves per slot).
+    Quorum {
+        /// Quorum fraction q ∈ (0, 1].
+        q: f64,
+        /// Per-dispatch-wave slot timeout.
+        timeout: Duration,
+    },
+}
+
+impl RoundPolicy {
+    /// Results required to close a round of `n_t` slots.
+    pub fn quorum_of(&self, n_t: usize) -> usize {
+        match self {
+            RoundPolicy::Sync => n_t,
+            RoundPolicy::Quorum { q, .. } => {
+                if n_t == 0 {
+                    0
+                } else {
+                    ((q * n_t as f64).ceil() as usize).clamp(1, n_t)
+                }
+            }
+        }
+    }
+
+    /// Task deadline carried in the protocol header, ms (0 = no deadline).
+    pub fn deadline_ms(&self) -> u64 {
+        match self {
+            RoundPolicy::Sync => 0,
+            RoundPolicy::Quorum { timeout, .. } => timeout.as_millis() as u64,
+        }
+    }
+
+    /// The wave timeout, when one exists.
+    pub fn slot_timeout(&self) -> Option<Duration> {
+        match self {
+            RoundPolicy::Sync => None,
+            RoundPolicy::Quorum { timeout, .. } => Some(*timeout),
+        }
+    }
+}
 
 /// Which lifecycle phase a `RoundState` is in (enforced at runtime so the
 /// message-driven API cannot be called out of order).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
-    /// Tasks handed out, waiting for all `TrainResult`s.
+    /// Tasks handed out, waiting for quorum (all slots, under `Sync`).
     Collect,
-    /// Every slot reported; ready for `finish_round`.
+    /// Quorum reached; ready for `finish_round`.
     Aggregate,
 }
 
 /// In-flight state of one round (created by `begin_round`).
 pub struct RoundState {
+    /// Round index.
     pub t: u64,
+    /// Cohort size N_t (slots dispatched).
     pub n_t: usize,
+    /// Round-robin segment count this round.
     pub n_s: usize,
+    /// Collect/Aggregate lifecycle phase.
     pub phase: Phase,
+    /// Results required before the round may close.
+    pub quorum: usize,
     rec: RoundRecord,
     overhead: f64,
     flora_init: Option<Vec<f32>>,
+    loss_signal: (f64, f64),
     results: Vec<Option<TrainResult>>,
     received: usize,
+    /// Clients ever assigned to each slot (original first, then
+    /// replacements) — the set of legitimate reporters for the slot.
+    assignees: Vec<Vec<u32>>,
+    attempts: Vec<u32>,
+    orphaned: usize,
+    started: Instant,
+    quorum_wait_s: Option<f64>,
 }
 
 impl RoundState {
@@ -68,24 +161,190 @@ impl RoundState {
             .map(|r| r.as_ref().map_or(0.0, |r| r.exec_s))
             .collect()
     }
+
+    /// Results accepted so far.
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    /// Slots still waiting for a result.
+    pub fn unfilled_slots(&self) -> Vec<usize> {
+        (0..self.n_t).filter(|&s| self.results[s].is_none()).collect()
+    }
 }
 
+/// Everything [`LateBuffer::fold_into`] needs from the folding round.
+#[derive(Debug, Clone, Copy)]
+pub struct FoldCtx<'a> {
+    /// Per-client FedAvg weights (the coordinator's partition sizes).
+    pub weights: &'a [f64],
+    /// Staleness decay β (Eq. 3).
+    pub beta: f64,
+    /// The round whose aggregate absorbs the fold.
+    pub now_round: u64,
+    /// `Method::dense_upload_params` — the parameter count an ON-TIME
+    /// dense uplink is charged, so a late arrival of the identical
+    /// payload costs the same in comm telemetry.
+    pub dense_params: usize,
+}
+
+/// Buffer of straggler uplinks that arrived after their round closed,
+/// awaiting the next round's staleness-discounted fold.
+///
+/// Arrival order carries no meaning: entries are deduped by
+/// (origin round, slot) — first arrival wins — and folded in
+/// (origin round, slot) order, so the resulting aggregate is a pure
+/// function of the SET of buffered results (property-tested in
+/// `tests/integration_cluster.rs`).
+#[derive(Default)]
+pub struct LateBuffer {
+    entries: Vec<TrainResult>,
+    /// Results discarded instead of folded: duplicates of an already
+    /// buffered (round, slot), FLoRA module uploads (their restart base
+    /// has already advanced), or geometry mismatches against the folding
+    /// round's aggregator.
+    pub dropped: usize,
+}
+
+impl LateBuffer {
+    /// Fresh empty buffer.
+    pub fn new() -> LateBuffer {
+        LateBuffer::default()
+    }
+
+    /// Buffered entry count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Buffer one late result; returns true when it was kept. FLoRA
+    /// module uploads are rejected outright — a restart module only makes
+    /// sense against the base it restarted from, which a later round has
+    /// already merged past.
+    pub fn push(&mut self, res: TrainResult) -> bool {
+        if matches!(res.up, UpPayload::DenseModule(_)) {
+            self.dropped += 1;
+            return false;
+        }
+        if self
+            .entries
+            .iter()
+            .any(|e| e.stale_from_round == res.stale_from_round && e.slot == res.slot)
+        {
+            self.dropped += 1;
+            return false;
+        }
+        self.entries.push(res);
+        true
+    }
+
+    /// Drain the buffer into `agg`, weighting every entry by its FedAvg
+    /// weight times the Eq. 3 staleness discount
+    /// `e^{−β·(now_round − origin_round)}`. Folds in (origin round, slot)
+    /// order regardless of arrival order; undecodable or mismatched
+    /// entries are counted in [`LateBuffer::dropped`] and reflected in
+    /// `rec.orphaned` rather than failing the round. Comm accounting for
+    /// the folded uplinks lands in `rec.up` (the bytes crossed the wire in
+    /// the round that folds them, not the round that lost them); dense
+    /// uplinks are charged `FoldCtx::dense_params` parameters — the same
+    /// `Method::dense_upload_params` figure an on-time arrival of the
+    /// identical payload is charged. Returns the (origin round, slot)
+    /// identities that actually folded, so the caller can mark them
+    /// aggregated and reject any future racer for the same slot.
+    pub fn fold_into(
+        &mut self,
+        agg: &mut SegmentAggregator,
+        kidx: &KindIndex,
+        ctx: FoldCtx<'_>,
+        rec: &mut RoundRecord,
+    ) -> Vec<(u64, u32)> {
+        let mut entries = std::mem::take(&mut self.entries);
+        entries.sort_by_key(|e| (e.stale_from_round, e.slot));
+        let mut folded_ids = Vec::new();
+        for res in entries {
+            let ci = res.client as usize;
+            let staleness = ctx.now_round.saturating_sub(res.stale_from_round).max(1);
+            let w = ctx.weights.get(ci).copied().unwrap_or(0.0)
+                * staleness::stale_discount(ctx.beta, staleness);
+            if w <= 0.0 {
+                self.dropped += 1;
+                rec.orphaned += 1;
+                continue;
+            }
+            let folded = match &res.up {
+                UpPayload::SparseWire(bytes) => {
+                    let seg = res.segment as usize;
+                    seg < agg.n_segments()
+                        && agg
+                            .add_wire(seg, bytes, kidx, w)
+                            .map(|params| rec.up.add(params, bytes.len()))
+                            .is_ok()
+                }
+                UpPayload::DenseUpdate(v) => {
+                    let fits = agg.n_segments() == 1 && v.len() == agg.range(0).len();
+                    if fits {
+                        agg.add_dense(0, v, w);
+                        rec.up.add(ctx.dense_params, dense_bytes(ctx.dense_params));
+                    }
+                    fits
+                }
+                // push() rejects these; defensive
+                UpPayload::DenseModule(_) => false,
+            };
+            if folded {
+                rec.late_folds += 1;
+                folded_ids.push((res.stale_from_round, res.slot));
+            } else {
+                self.dropped += 1;
+                rec.orphaned += 1;
+            }
+        }
+        folded_ids
+    }
+}
+
+/// The server-side agent: owns the global model, downlink channels, the
+/// evaluation stack, and the round state machine.
 pub struct Coordinator {
+    /// Experiment configuration (shared with every participant).
     pub cfg: FedConfig,
+    policy: RoundPolicy,
     world: World,
     dl: Option<DownlinkState>,
     evaluator: McEvaluator,
     dpo_eval: Option<DpoEvaluator>,
     weights: Vec<f64>,
     global: Vec<f32>,
+    late: LateBuffer,
+    /// (round, slot) pairs that already contributed to some aggregate —
+    /// on time or via a late fold — kept for [`FILLED_HORIZON`] rounds so
+    /// a racer result (original vs. replacement of a resampled slot)
+    /// arriving after its round closed cannot fold a second time.
+    filled: HashSet<(u64, u32)>,
     l0: Option<f64>,
     l_prev: f64,
 }
 
 impl Coordinator {
     /// Mirrors `FedRunner::new`'s RNG fork order exactly (see
-    /// `fed::world` module docs).
-    pub fn new(cfg: FedConfig) -> Result<Coordinator> {
+    /// `fed::world` module docs). Rejects `Quorum` policies with an
+    /// out-of-range fraction, a zero timeout, or a restart-based method
+    /// (a late FLoRA module cannot merge into an already-advanced base).
+    pub fn new(cfg: FedConfig, policy: RoundPolicy) -> Result<Coordinator> {
+        if let RoundPolicy::Quorum { q, timeout } = policy {
+            ensure!(q > 0.0 && q <= 1.0, "quorum fraction must be in (0, 1], got {q}");
+            ensure!(!timeout.is_zero(), "slot timeout must be positive");
+            ensure!(
+                !cfg.method.restarts_lora(),
+                "round policy quorum is incompatible with restart-based method {}",
+                cfg.method.name()
+            );
+        }
         let mut world = World::build(&cfg)?;
         let dl = cfg.eco.filter(|e| e.downlink_sparse).map(|e| {
             DownlinkState::new(
@@ -113,13 +372,58 @@ impl Coordinator {
             dpo_eval,
             weights,
             cfg,
+            policy,
+            late: LateBuffer::new(),
+            filled: HashSet::new(),
             l0: None,
             l_prev: f64::NAN,
         })
     }
 
+    /// Current global LoRA vector.
     pub fn global_lora(&self) -> &[f32] {
         &self.global
+    }
+
+    /// The round-close policy this coordinator runs under.
+    pub fn policy(&self) -> RoundPolicy {
+        self.policy
+    }
+
+    /// Straggler uplinks currently buffered for the next round's fold.
+    pub fn late_pending(&self) -> usize {
+        self.late.len()
+    }
+
+    /// Compress (or materialize) the downlink payload for `ci` and charge
+    /// it to `rec.down` — shared by the initial broadcast and timed-out
+    /// slot re-dispatch.
+    fn make_downlink(
+        &mut self,
+        ci: usize,
+        n_t: usize,
+        loss_signal: (f64, f64),
+        flora_init: Option<&[f32]>,
+        rec: &mut RoundRecord,
+    ) -> Result<DownPayload> {
+        Ok(if let Some(init) = flora_init {
+            // FLoRA re-distributes the stacked modules: accounted as
+            // N_t × module even though the restart init itself travels.
+            let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
+            rec.down.add(p, dense_bytes(p));
+            DownPayload::FloraInit(init.to_vec())
+        } else if let Some(dl) = &mut self.dl {
+            let b = dl.broadcast(ci, &self.global, loss_signal.0, loss_signal.1, true)?;
+            rec.down.add(b.params, b.bytes);
+            match b.wire.expect("broadcast(want_wire=true) returns the message") {
+                DownWire::Sparse(x) => DownPayload::SparseWire(x),
+                DownWire::DenseF16(x) => DownPayload::DenseF16(x),
+            }
+        } else {
+            let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
+            rec.down.add(p, dense_bytes(p));
+            DownPayload::DenseF32(self.global.clone())
+        })
     }
 
     /// Phases 1+2 (Sampling + Broadcast): pick the cohort, compress each
@@ -154,28 +458,13 @@ impl Coordinator {
             .restarts_lora()
             .then(|| self.world.session.schema.init_lora(&mut self.world.rng.fork(2000 + t)));
 
+        let deadline_ms = self.policy.deadline_ms();
         let mut overhead = 0.0f64;
         let mut tasks = Vec::with_capacity(n_t);
         for (slot, &ci) in sampled.iter().enumerate() {
             let t0 = Instant::now();
-            let down = if let Some(init) = &flora_init {
-                // FLoRA re-distributes the stacked modules: accounted as
-                // N_t × module even though the restart init itself travels.
-                let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
-                rec.down.add(p, dense_bytes(p));
-                DownPayload::FloraInit(init.clone())
-            } else if let Some(dl) = &mut self.dl {
-                let b = dl.broadcast(ci, &self.global, loss_signal.0, loss_signal.1, true)?;
-                rec.down.add(b.params, b.bytes);
-                match b.wire.expect("broadcast(want_wire=true) returns the message") {
-                    DownWire::Sparse(x) => DownPayload::SparseWire(x),
-                    DownWire::DenseF16(x) => DownPayload::DenseF16(x),
-                }
-            } else {
-                let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
-                rec.down.add(p, dense_bytes(p));
-                DownPayload::DenseF32(self.global.clone())
-            };
+            let down =
+                self.make_downlink(ci, n_t, loss_signal, flora_init.as_deref(), &mut rec)?;
             overhead += t0.elapsed().as_secs_f64();
 
             let brng = self.world.rng.fork(world::batch_salt(self.cfg.dpo, t, ci));
@@ -191,6 +480,7 @@ impl Coordinator {
                     l0: loss_signal.0,
                     l_prev: loss_signal.1,
                     rng_state: brng.state(),
+                    deadline_ms,
                     down,
                 },
             ));
@@ -202,26 +492,40 @@ impl Coordinator {
             n_s,
             // an empty cohort has nothing to collect
             phase: if n_t == 0 { Phase::Aggregate } else { Phase::Collect },
+            quorum: self.policy.quorum_of(n_t),
             rec,
             overhead,
             flora_init,
+            loss_signal,
             results: (0..n_t).map(|_| None).collect(),
             received: 0,
+            assignees: sampled.iter().map(|&ci| vec![ci as u32]).collect(),
+            attempts: vec![0; n_t],
+            orphaned: 0,
+            started: Instant::now(),
+            quorum_wait_s: None,
         };
         Ok((rs, tasks))
     }
 
-    /// Phase 3 (Collect): feed one `TrainResult` (any arrival order).
-    /// Returns true once every slot has reported.
+    /// Phase 3 (Collect): feed one `TrainResult` for the CURRENT round
+    /// (any arrival order). Returns true once the quorum is reached and
+    /// the round may close. A second result for a resampled slot (the
+    /// original assignee racing its replacement) is counted as orphaned
+    /// and discarded; results for earlier rounds belong in
+    /// [`Coordinator::accept_late`] instead.
     pub fn accept(&mut self, rs: &mut RoundState, res: TrainResult) -> Result<bool> {
         ensure!(rs.phase == Phase::Collect, "accept called outside Collect");
         ensure!(res.round == rs.t, "result for round {} during round {}", res.round, rs.t);
         let slot = res.slot as usize;
         ensure!(slot < rs.n_t, "result slot {slot} out of range");
-        ensure!(rs.results[slot].is_none(), "duplicate result for slot {slot}");
         ensure!((res.segment as usize) < rs.n_s, "result segment {} out of range", res.segment);
         let ci = res.client as usize;
         ensure!(ci < self.cfg.n_clients, "result for unknown client {ci}");
+        ensure!(
+            rs.assignees[slot].contains(&res.client),
+            "client {ci} was never assigned slot {slot}"
+        );
         // the participant derived its world independently — its FedAvg
         // weight must agree with the coordinator's partition
         ensure!(
@@ -230,20 +534,104 @@ impl Coordinator {
             res.n_samples,
             self.weights[ci]
         );
+        if rs.results[slot].is_some() {
+            // a resampled slot legitimately reports more than once: the
+            // first arrival won the slot, the rest are orphans
+            ensure!(rs.attempts[slot] > 0, "duplicate result for slot {slot}");
+            rs.orphaned += 1;
+            return Ok(false);
+        }
         rs.results[slot] = Some(res);
         rs.received += 1;
-        if rs.received == rs.n_t {
+        if rs.received >= rs.quorum {
             rs.phase = Phase::Aggregate;
+            if rs.quorum_wait_s.is_none() {
+                rs.quorum_wait_s = Some(rs.started.elapsed().as_secs_f64());
+            }
         }
-        Ok(rs.received == rs.n_t)
+        Ok(rs.phase == Phase::Aggregate)
+    }
+
+    /// Buffer a straggler result from an ALREADY-CLOSED round for the next
+    /// `finish_round`'s staleness-discounted fold. Returns true when the
+    /// result was kept (false: unknown client, a slot that already
+    /// contributed to an aggregate — e.g. the losing racer of a resampled
+    /// slot — or a buffer-level duplicate; all counted by the buffer).
+    pub fn accept_late(&mut self, res: TrainResult) -> bool {
+        let ci = res.client as usize;
+        if ci >= self.cfg.n_clients || self.filled.contains(&(res.stale_from_round, res.slot)) {
+            self.late.dropped += 1;
+            return false;
+        }
+        self.late.push(res)
+    }
+
+    /// Re-dispatch a timed-out slot to a deterministically-chosen
+    /// replacement client: the replacement and its batch stream are drawn
+    /// from `fed::world::resample_rng(seed, t, slot, attempt)`, which
+    /// never touches the root RNG — a quorum run in which no slot ever
+    /// times out therefore stays bitwise identical to the sync path.
+    /// Returns `None` once the slot has exhausted [`MAX_REDISPATCH`]
+    /// waves (the round then waits for quorum from what is in flight).
+    pub fn resample_slot(
+        &mut self,
+        rs: &mut RoundState,
+        slot: usize,
+        n_workers: usize,
+    ) -> Result<Option<(usize, TrainTask)>> {
+        ensure!(rs.phase == Phase::Collect, "resample outside Collect");
+        ensure!(slot < rs.n_t, "resample slot {slot} out of range");
+        ensure!(rs.results[slot].is_none(), "resample of a slot that already reported");
+        if rs.attempts[slot] >= MAX_REDISPATCH {
+            return Ok(None);
+        }
+        rs.attempts[slot] += 1;
+        let mut rrng = world::resample_rng(self.cfg.seed, rs.t, slot as u32, rs.attempts[slot]);
+
+        // candidates: clients not already tied to this round (sampled,
+        // completed, or previously dispatched as a replacement)
+        let candidates: Vec<u32> = (0..self.cfg.n_clients as u32)
+            .filter(|c| !rs.assignees.iter().any(|a| a.contains(c)))
+            .collect();
+        let ci = if candidates.is_empty() {
+            // the whole population is in flight: re-dispatch the original
+            rs.assignees[slot][0]
+        } else {
+            candidates[rrng.below(candidates.len())]
+        } as usize;
+
+        let t0 = Instant::now();
+        let down = self.make_downlink(ci, rs.n_t, rs.loss_signal, None, &mut rs.rec)?;
+        rs.overhead += t0.elapsed().as_secs_f64();
+
+        let brng = rrng.fork(world::batch_salt(self.cfg.dpo, rs.t, ci));
+        let seg = round_robin::segment_for(slot, rs.t as usize, rs.n_s);
+        rs.assignees[slot].push(ci as u32);
+        Ok(Some((
+            ci % n_workers.max(1),
+            TrainTask {
+                round: rs.t,
+                slot: slot as u32,
+                client: ci as u32,
+                segment: seg as u32,
+                n_s: rs.n_s as u32,
+                l0: rs.loss_signal.0,
+                l_prev: rs.loss_signal.1,
+                rng_state: brng.state(),
+                deadline_ms: self.policy.deadline_ms(),
+                down,
+            },
+        )))
     }
 
     /// Phase 4 (Aggregate): fold the collected uplinks strictly in slot
-    /// order (Eq. 2), advance the global model, record telemetry, and
-    /// evaluate on schedule. Returns the round record plus — after a
-    /// FLoRA merge — the new base every participant must sync to.
+    /// order (Eq. 2), fold any buffered late uplinks from earlier rounds
+    /// with their staleness discount, advance the global model, record
+    /// telemetry, and evaluate on schedule. Returns the round record plus
+    /// — after a FLoRA merge — the new base every participant must sync
+    /// to.
     pub fn finish_round(&mut self, mut rs: RoundState) -> Result<(RoundRecord, Option<Vec<f32>>)> {
-        ensure!(rs.phase == Phase::Aggregate, "finish_round before all results collected");
+        ensure!(rs.phase == Phase::Aggregate, "finish_round before quorum reached");
         let t = rs.t;
         let lora_total = self.world.session.schema.lora_total;
         let mut rec = rs.rec;
@@ -255,7 +643,10 @@ impl Coordinator {
 
         let t1 = Instant::now();
         for slot in 0..rs.n_t {
-            let res = rs.results[slot].take().expect("phase guard");
+            let Some(res) = rs.results[slot].take() else {
+                continue; // straggler: its uplink folds into a later round
+            };
+            self.filled.insert((t, slot as u32));
             let w = res.n_samples as f64;
             loss_acc += res.mean_loss * w;
             weight_acc += w;
@@ -286,6 +677,19 @@ impl Coordinator {
                 }
             }
         }
+
+        // ---- late-uplink fold (quorum rounds; empty under Sync) -------------
+        let ctx = FoldCtx {
+            weights: &self.weights,
+            beta: self.cfg.eco.map_or(EcoConfig::default().beta, |e| e.beta),
+            now_round: t,
+            dense_params: self.cfg.method.dense_upload_params(&self.world.session.schema),
+        };
+        let folded = self.late.fold_into(&mut agg, &self.world.kidx, ctx, &mut rec);
+        self.filled.extend(folded);
+        // forget aggregates old enough that any racer would fold with a
+        // numerically-nil discount anyway
+        self.filled.retain(|&(r, _)| r + FILLED_HORIZON >= t);
 
         // ---- aggregation (Eq. 2) + global advance — same as FedRunner ------
         let mut base_sync = None;
@@ -322,7 +726,12 @@ impl Coordinator {
         self.l_prev = round_loss;
         rec.global_loss = round_loss;
         rec.overhead_s = rs.overhead;
-        rec.compute_s = exec_total / rs.n_t.max(1) as f64;
+        rec.compute_s = exec_total / rs.received.max(1) as f64;
+        rec.cohort = rs.n_t;
+        rec.stragglers = rs.n_t - rs.received;
+        rec.resampled = rs.attempts.iter().map(|&a| a as usize).sum();
+        rec.orphaned += rs.orphaned;
+        rec.quorum_wait_s = rs.quorum_wait_s.unwrap_or(0.0);
         let snap = sparsity_snapshot(&self.global, &self.world.kinds);
         rec.gini_a = snap.gini_a;
         rec.gini_b = snap.gini_b;
@@ -359,7 +768,13 @@ impl Coordinator {
     /// Guard against mixed-phase misuse from the runner loop.
     pub fn ensure_collected(&self, rs: &RoundState) -> Result<()> {
         if rs.phase != Phase::Aggregate {
-            bail!("round {}: only {}/{} results collected", rs.t, rs.received, rs.n_t);
+            bail!(
+                "round {}: only {}/{} results collected (quorum {})",
+                rs.t,
+                rs.received,
+                rs.n_t,
+                rs.quorum
+            );
         }
         Ok(())
     }

@@ -3,22 +3,33 @@
 //!
 //! * [`protocol`] — versioned, checksummed envelopes + typed messages
 //!   (`Hello`, `TrainTask`, `TrainResult`, `BaseSync`, `Shutdown`,
-//!   `Error`); payloads reuse the `compress::wire` format.
+//!   `Error`); payloads reuse the `compress::wire` format. The normative
+//!   wire spec lives in docs/PROTOCOL.md.
 //! * [`transport`] — the [`Conn`](transport::Conn) contract with two
 //!   implementations: deterministic in-memory channels (default CLI path,
 //!   tests) and length-prefix-framed TCP (loopback or real network).
 //! * [`coordinator`] — the server-side round state machine
-//!   (sampling → broadcast → collect → aggregate).
+//!   (sampling → broadcast → collect-until-quorum → aggregate), including
+//!   the [`RoundPolicy`] that decides when a round may close, the
+//!   straggler [`LateBuffer`](coordinator::LateBuffer), and timed-out-slot
+//!   resampling.
 //! * [`participant`] — worker agents, each owning its own `Session` and a
 //!   shard of logical clients, executing tasks concurrently.
 //! * [`netshim`] — optional transport-layer byte meter replaying real
-//!   protocol traffic through the `netsim` discrete-event simulator.
+//!   protocol traffic through the `netsim` discrete-event simulator,
+//!   quorum-aware and optionally heterogeneous
+//!   ([`SimProfile`](netshim::SimProfile)).
 //!
 //! [`run`] drives a full federated run on this substrate and produces the
 //! same `FedOutcome` as the monolithic `FedRunner` — bitwise, for a fixed
-//! seed (enforced by `tests/integration_cluster.rs`). Uplink encoding,
-//! local training, and server-side work overlap because every participant
-//! worker runs on its own thread with its own PJRT engine.
+//! seed, under `RoundPolicy::Sync` or a quorum of 1.0 with no timeouts
+//! (enforced by `tests/integration_cluster.rs`). Under
+//! `RoundPolicy::Quorum` the server stops blocking on stragglers: rounds
+//! close at K-of-N, late uplinks fold into the next round with the Eq. 3
+//! staleness discount, and timed-out slots are re-dispatched to
+//! deterministically-chosen replacement clients.
+
+#![warn(missing_docs)]
 
 pub mod coordinator;
 pub mod netshim;
@@ -26,50 +37,79 @@ pub mod participant;
 pub mod protocol;
 pub mod transport;
 
+use std::time::{Duration, Instant};
+
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::fed::{FedConfig, FedOutcome};
 use crate::metrics::RunLog;
-use crate::netsim::{RoundTiming, Scenario};
+use crate::netsim::RoundTiming;
 
-pub use coordinator::Coordinator;
+pub use coordinator::{Coordinator, RoundPolicy};
+pub use netshim::SimProfile;
 pub use participant::Participant;
 pub use transport::ClusterMode;
 
 use protocol::Message;
 use transport::{ConnRx, ConnTx};
 
+/// Deterministic fault injection for straggler / dropout testing: every
+/// task for `client` is delayed by `delay` on the participant AFTER local
+/// training, BEFORE the result is sent — a slow uplink, from the
+/// coordinator's point of view.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// Logical client whose uplinks are slowed.
+    pub client: usize,
+    /// Injected delay per task.
+    pub delay: Duration,
+}
+
 /// How to deploy a run on the cluster substrate.
 #[derive(Debug, Clone)]
 pub struct ClusterOptions {
+    /// Which transport carries the protocol.
     pub mode: ClusterMode,
     /// Worker thread count; default min(clients_per_round, CPU threads).
     pub workers: Option<usize>,
     /// Replay transport traffic through the network simulator.
-    pub netsim: Option<Scenario>,
+    pub netsim: Option<SimProfile>,
+    /// When a round may close (sync barrier vs K-of-N quorum).
+    pub policy: RoundPolicy,
+    /// Inject a deterministic slow client (tests, demos).
+    pub fault: Option<FaultSpec>,
 }
 
 impl Default for ClusterOptions {
     fn default() -> Self {
-        ClusterOptions { mode: ClusterMode::Mem, workers: None, netsim: None }
+        ClusterOptions {
+            mode: ClusterMode::Mem,
+            workers: None,
+            netsim: None,
+            policy: RoundPolicy::Sync,
+            fault: None,
+        }
     }
 }
 
 /// A cluster run's result: the federated outcome plus deployment facts.
 pub struct ClusterOutcome {
+    /// The federated outcome (same shape as the monolithic runner's).
     pub fed: FedOutcome,
     /// Simulated per-round timing (when `ClusterOptions::netsim` is set).
     pub timings: Vec<RoundTiming>,
+    /// Worker threads the run used.
     pub workers: usize,
+    /// Transport name ("mem" or "tcp").
     pub transport: &'static str,
 }
 
 /// Run a full federated job over the cluster: spawn `n_workers`
 /// participant threads, drive the coordinator state machine round by
 /// round, and assemble the outcome. Equivalent to
-/// `FedRunner::new(cfg)?.run()` — bitwise, for a fixed seed — but with
-/// participants executing concurrently and every payload crossing a
-/// transport boundary.
+/// `FedRunner::new(cfg)?.run()` — bitwise, for a fixed seed, when no
+/// round closes early — but with participants executing concurrently and
+/// every payload crossing a transport boundary.
 pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
     let n_t = cfg.clients_per_round.min(cfg.n_clients).max(1);
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -84,9 +124,10 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
     let mut handles = Vec::with_capacity(n_workers);
     for (w, conn) in worker_conns.into_iter().enumerate() {
         let cfg_w = cfg.clone();
+        let fault = opts.fault;
         let handle = std::thread::Builder::new()
             .name(format!("ecolora-worker-{w}"))
-            .spawn(move || participant::run_worker(cfg_w, w as u32, conn))
+            .spawn(move || participant::run_worker(cfg_w, w as u32, conn, fault))
             .context("cluster: spawn worker thread")?;
         handles.push(handle);
     }
@@ -135,7 +176,7 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
     }
 
     // The coordinator builds its own world while workers build theirs.
-    let mut coordinator = Coordinator::new(cfg)?;
+    let mut coordinator = Coordinator::new(cfg, opts.policy)?;
     let label = coordinator.cfg.run_label();
     let mut log = RunLog::new(label.clone());
     let mut reached: Option<usize> = None;
@@ -152,35 +193,78 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
             send_to(&mut txs, tx_of_worker[w], &Message::TrainTask(task))
                 .with_context(|| format!("cluster: dispatch to worker {w}"))?;
         }
-        // Collect (any arrival order)
+        // Collect: every result is routed — current round into the round
+        // state (closing it at quorum), earlier rounds into the late
+        // buffer. Under a Quorum policy the wait is bounded by the slot
+        // timeout; each expiry re-dispatches the outstanding slots to
+        // replacement clients (up to coordinator::MAX_REDISPATCH waves
+        // per slot), then keeps waiting — a slot that went quiet forever
+        // surfaces as a disconnect, not a hang.
+        let mut wave_deadline = opts.policy.slot_timeout().map(|d| Instant::now() + d);
         while rs.phase == coordinator::Phase::Collect {
-            let (_idx, env) = results_rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("cluster: workers disconnected mid-round"))?;
-            match Message::from_envelope(&env)? {
-                Message::TrainResult(res) => {
-                    coordinator.accept(&mut rs, res)?;
+            let received = match wave_deadline {
+                None => match results_rx.recv() {
+                    Ok(x) => Some(x),
+                    Err(_) => bail!("cluster: workers disconnected mid-round"),
+                },
+                Some(deadline) => {
+                    let wait = deadline.saturating_duration_since(Instant::now());
+                    match results_rx.recv_timeout(wait) {
+                        Ok(x) => Some(x),
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                            bail!("cluster: workers disconnected mid-round")
+                        }
+                    }
                 }
-                Message::Error { text } => bail!("worker failed: {text}"),
-                other => bail!("cluster: expected TrainResult, got {:?}", other.kind()),
+            };
+            match received {
+                Some((_idx, env)) => match Message::from_envelope(&env)? {
+                    Message::TrainResult(res) => {
+                        if res.round == rs.t {
+                            coordinator.accept(&mut rs, res)?;
+                        } else if res.round < rs.t {
+                            // straggler from a closed quorum round
+                            coordinator.accept_late(res);
+                        } else {
+                            bail!("cluster: result for future round {}", res.round);
+                        }
+                    }
+                    Message::Error { text } => bail!("worker failed: {text}"),
+                    other => bail!("cluster: expected TrainResult, got {:?}", other.kind()),
+                },
+                None => {
+                    // wave timeout: re-dispatch every outstanding slot
+                    for slot in rs.unfilled_slots() {
+                        if let Some((w, task)) =
+                            coordinator.resample_slot(&mut rs, slot, n_workers)?
+                        {
+                            send_to(&mut txs, tx_of_worker[w], &Message::TrainTask(task))
+                                .with_context(|| format!("cluster: re-dispatch slot {slot}"))?;
+                        }
+                    }
+                    let timeout = opts.policy.slot_timeout().expect("deadline implies timeout");
+                    wave_deadline = Some(Instant::now() + timeout);
+                }
             }
         }
         coordinator.ensure_collected(&rs)?;
         let compute_by_slot = rs.exec_by_slot();
-        // Aggregate
+        let quorum = rs.quorum;
+        // Aggregate (incl. the staleness-discounted late-uplink fold)
         let (rec, base_sync) = coordinator.finish_round(rs)?;
         if let Some(base) = base_sync {
             for w in 0..n_workers {
                 send_to(&mut txs, tx_of_worker[w], &Message::BaseSync { base: base.clone() })?;
             }
         }
-        if let (Some(m), Some(scenario)) = (&meter, &opts.netsim) {
-            timings.push(m.round_timing(t as u64, &compute_by_slot, scenario)?);
+        if let (Some(m), Some(profile)) = (&meter, &opts.netsim) {
+            timings.push(m.round_timing(t as u64, &compute_by_slot, profile, quorum)?);
         }
         if coordinator.cfg.verbose {
             let acc = rec.eval_acc;
             eprintln!(
-                "[{label}@{}x{n_workers}] round {t}: loss {:.4} acc {} upM {:.3} downM {:.3} k=({:.2},{:.2})",
+                "[{label}@{}x{n_workers}] round {t}: loss {:.4} acc {} upM {:.3} downM {:.3} k=({:.2},{:.2}) stragglers {} late {}",
                 opts.mode.name(),
                 rec.global_loss,
                 acc.map_or("-".into(), |a| format!("{a:.3}")),
@@ -188,6 +272,8 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
                 rec.down.params_m(),
                 rec.k_a,
                 rec.k_b,
+                rec.stragglers,
+                rec.late_folds,
             );
         }
         let acc = rec.eval_acc;

@@ -12,16 +12,63 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
-use crate::netsim::{NetSim, RoundPlan, RoundTiming, Scenario};
+use crate::netsim::{LinkSpec, NetSim, RoundPlan, RoundTiming, Scenario};
 use crate::util::lock_unpoisoned;
 
 use super::protocol::{Envelope, MsgKind};
 use super::transport::{ConnRx, ConnTx};
 
+/// What the shim simulates: a base bandwidth scenario plus an optional
+/// heterogeneous tail — a fraction of each round's slots whose access
+/// links are `slow_factor`× slower than the scenario's. Heterogeneity is
+/// what makes quorum rounds measurably faster than synchronous ones: the
+/// slow tail stops gating the round once K of N uploads suffice.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimProfile {
+    /// Base access-link scenario (every non-slow slot).
+    pub scenario: Scenario,
+    /// Fraction of slots (rounded up) on the slow tail, in [0, 1].
+    pub slow_frac: f64,
+    /// Bandwidth divisor for slow slots (1.0 = homogeneous fleet).
+    pub slow_factor: f64,
+}
+
+impl SimProfile {
+    /// A homogeneous fleet on `scenario` (no slow tail).
+    pub fn uniform(scenario: Scenario) -> SimProfile {
+        SimProfile { scenario, slow_frac: 0.0, slow_factor: 1.0 }
+    }
+
+    /// Per-slot link specs for a round of `n` slots: the FIRST
+    /// `ceil(slow_frac · n)` slots get the slowed link (slot order is the
+    /// coordinator's deterministic cohort order, so the assignment is
+    /// reproducible).
+    pub fn slot_links(&self, n: usize) -> Vec<LinkSpec> {
+        let base = self.scenario.link();
+        let n_slow = ((self.slow_frac.clamp(0.0, 1.0) * n as f64).ceil() as usize).min(n);
+        let f = self.slow_factor.max(1.0);
+        (0..n)
+            .map(|slot| {
+                if slot < n_slow {
+                    LinkSpec {
+                        ul_mbps: base.ul_mbps / f,
+                        dl_mbps: base.dl_mbps / f,
+                        latency_s: base.latency_s,
+                    }
+                } else {
+                    base
+                }
+            })
+            .collect()
+    }
+}
+
 /// One observed message crossing the transport.
 #[derive(Debug, Clone, Copy)]
 pub struct Flow {
+    /// Round the envelope belongs to.
     pub round: u64,
+    /// Message kind (only task/result flows enter the replay).
     pub kind: MsgKind,
     /// Framed size: header + payload + length prefix.
     pub bytes: usize,
@@ -45,6 +92,7 @@ fn slot_of(env: &Envelope) -> Option<u32> {
 /// Shared traffic journal, filled by the metered halves.
 #[derive(Debug, Default)]
 pub struct TrafficLog {
+    /// Every observed flow, in recording order.
     pub flows: Vec<Flow>,
 }
 
@@ -59,6 +107,7 @@ pub struct Meter {
 const FRAME_PREFIX: usize = 4;
 
 impl Meter {
+    /// Fresh meter with an empty traffic journal.
     pub fn new() -> Meter {
         Meter::default()
     }
@@ -73,10 +122,12 @@ impl Meter {
         });
     }
 
+    /// Wrap a send half so every outgoing envelope is journaled.
     pub fn wrap_tx(&self, inner: Box<dyn ConnTx>) -> Box<dyn ConnTx> {
         Box::new(MeteredTx { inner, meter: self.clone() })
     }
 
+    /// Wrap a receive half so every incoming envelope is journaled.
     pub fn wrap_rx(&self, inner: Box<dyn ConnRx>) -> Box<dyn ConnRx> {
         Box::new(MeteredRx { inner, meter: self.clone() })
     }
@@ -99,13 +150,22 @@ impl Meter {
     /// Replay `round`'s traffic through the discrete-event simulator:
     /// one `RoundPlan` per slot, with the slot's task bytes, result bytes
     /// and compute seconds matched by slot id (recording order carries no
-    /// meaning — results arrive in any order). `compute_s` is indexed by
-    /// slot, as produced by `RoundState::exec_by_slot`.
+    /// meaning — results arrive in any order). A slot that saw several
+    /// flows in one direction — re-dispatch waves on the downlink, racer
+    /// results on the uplink — contributes their SUM, since they all
+    /// serialized over that slot's access link. `compute_s` is indexed by
+    /// slot, as produced by `RoundState::exec_by_slot`. Slots whose result
+    /// never crossed the transport during `round` (quorum stragglers) are
+    /// excluded from the replay — their bytes surface in the round that
+    /// eventually folds them, not here; `quorum` is the number of uploads
+    /// that closed the round (pass `compute_s.len()` for synchronous
+    /// rounds).
     pub fn round_timing(
         &self,
         round: u64,
         compute_s: &[f64],
-        scenario: &Scenario,
+        profile: &SimProfile,
+        quorum: usize,
     ) -> Result<RoundTiming> {
         let n = compute_s.len();
         let mut dl = vec![None; n];
@@ -120,23 +180,24 @@ impl Meter {
                 };
                 if let Some(slot) = f.slot {
                     if let Some(entry) = target.get_mut(slot as usize) {
-                        *entry = Some(f.bytes);
+                        *entry = Some(entry.unwrap_or(0) + f.bytes);
                     }
                 }
             }
         }
-        let plans: Vec<RoundPlan> = (0..n)
-            .filter_map(|slot| match (dl[slot], ul[slot]) {
-                (Some(d), Some(u)) => {
-                    Some(RoundPlan { dl_bytes: d, compute_s: compute_s[slot], ul_bytes: u })
-                }
-                _ => None,
-            })
-            .collect();
+        let links = profile.slot_links(n);
+        let mut plans: Vec<RoundPlan> = Vec::with_capacity(n);
+        let mut specs: Vec<LinkSpec> = Vec::with_capacity(n);
+        for slot in 0..n {
+            if let (Some(d), Some(u)) = (dl[slot], ul[slot]) {
+                plans.push(RoundPlan { dl_bytes: d, compute_s: compute_s[slot], ul_bytes: u });
+                specs.push(links[slot]);
+            }
+        }
         anyhow::ensure!(!plans.is_empty(), "netsim shim: no traffic recorded for round {round}");
-        let mut sim = NetSim::homogeneous(plans.len(), scenario.link());
+        let mut sim = NetSim::heterogeneous(&specs);
         let clients: Vec<usize> = (0..plans.len()).collect();
-        Ok(sim.run_round(&clients, &plans))
+        Ok(sim.run_round_quorum(&clients, &plans, quorum.clamp(1, plans.len())))
     }
 }
 
@@ -214,16 +275,44 @@ mod tests {
         peer.join().unwrap();
 
         let (down, up) = meter.round_bytes(7);
-        assert_eq!(down, 3 * (28 + 100 + 4));
-        assert_eq!(up, 3 * (28 + 40 + 4));
+        assert_eq!(down, 3 * (crate::cluster::protocol::HEADER_LEN + 100 + 4));
+        assert_eq!(up, 3 * (crate::cluster::protocol::HEADER_LEN + 40 + 4));
         assert_eq!(meter.round_bytes(8), (0, 0));
 
         let scenario = Scenario { name: "test", ul_mbps: 1.0, dl_mbps: 5.0, latency_s: 0.05 };
-        let timing = meter.round_timing(7, &[0.5, 0.5, 0.5], &scenario).unwrap();
+        let profile = SimProfile::uniform(scenario);
+        let timing = meter.round_timing(7, &[0.5, 0.5, 0.5], &profile, 3).unwrap();
         assert!(timing.round_s > 0.5, "{timing:?}");
         assert!((timing.compute_s - 0.5).abs() < 1e-12);
         assert!(timing.comm_s > 0.0);
         // a round with no recorded traffic is an error, not a zero timing
-        assert!(meter.round_timing(9, &[0.5], &scenario).is_err());
+        assert!(meter.round_timing(9, &[0.5], &profile, 1).is_err());
+
+        // heterogeneous links: a 2-of-3 quorum closes on the fast slots
+        // and must beat the synchronous round that waits for the slow one
+        let hetero = SimProfile { scenario, slow_frac: 0.3, slow_factor: 10.0 }; // ceil(0.9) = 1 slow slot
+        let t_sync = meter.round_timing(7, &[0.5, 0.5, 0.5], &hetero, 3).unwrap();
+        let t_quorum = meter.round_timing(7, &[0.5, 0.5, 0.5], &hetero, 2).unwrap();
+        assert!(
+            t_quorum.round_s < t_sync.round_s,
+            "quorum {} !< sync {}",
+            t_quorum.round_s,
+            t_sync.round_s
+        );
+    }
+
+    #[test]
+    fn slot_links_put_the_slow_tail_first() {
+        let scenario = Scenario { name: "test", ul_mbps: 2.0, dl_mbps: 10.0, latency_s: 0.05 };
+        let p = SimProfile { scenario, slow_frac: 0.25, slow_factor: 4.0 };
+        let links = p.slot_links(4);
+        assert_eq!(links.len(), 4);
+        assert!((links[0].ul_mbps - 0.5).abs() < 1e-12);
+        for l in &links[1..] {
+            assert!((l.ul_mbps - 2.0).abs() < 1e-12);
+        }
+        // uniform profile: no slow slots at all
+        let uni = SimProfile::uniform(scenario).slot_links(4);
+        assert!(uni.iter().all(|l| (l.ul_mbps - 2.0).abs() < 1e-12));
     }
 }

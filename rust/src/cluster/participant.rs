@@ -25,10 +25,12 @@ use crate::xla::PjRtBuffer;
 
 use super::protocol::{DownPayload, Message, TrainResult, TrainTask, UpPayload};
 use super::transport::Conn;
+use super::FaultSpec;
 
 /// One worker process's state.
 pub struct Participant {
     cfg: FedConfig,
+    /// The worker's deterministic world (own session, corpus, partition).
     pub world: World,
     mask: PjRtBuffer,
     /// Hosted clients, materialized lazily on first task.
@@ -38,6 +40,8 @@ pub struct Participant {
 }
 
 impl Participant {
+    /// Build a worker's world from the config alone (no host state ever
+    /// crosses the transport).
     pub fn new(cfg: FedConfig) -> Result<Participant> {
         let world = World::build(&cfg).context("participant: world build")?;
         let mask_host = cfg.method.grad_mask(&world.session.schema);
@@ -159,6 +163,10 @@ impl Participant {
             k_a: k.0,
             k_b: k.1,
             exec_s: self.world.session.exec_seconds.get() - exec_before,
+            // the update was computed against this round's downlink; the
+            // coordinator derives the staleness discount of a late
+            // arrival from this field (protocol v2)
+            stale_from_round: task.round,
             up,
         })
     }
@@ -167,7 +175,21 @@ impl Participant {
 /// Serve one worker connection: handshake, then tasks until `Shutdown`.
 /// Fatal errors are reported to the coordinator as `Error` messages before
 /// the thread exits, so the run fails loudly instead of hanging.
-pub fn run_worker(cfg: FedConfig, worker_id: u32, mut conn: Box<dyn Conn>) -> Result<()> {
+///
+/// `fault` injects a deterministic straggler: every task for the named
+/// client sleeps for the configured delay AFTER local training and BEFORE
+/// the result is sent (a slow uplink, from the coordinator's point of
+/// view) — the hook behind the dropout/quorum integration tests and the
+/// `--inject-slow` CLI flag. The participant itself never looks at
+/// `TrainTask::deadline_ms`: a worker has no clock reference for the
+/// coordinator's dispatch instant, so deadline enforcement (and slot
+/// resampling) is entirely server-side.
+pub fn run_worker(
+    cfg: FedConfig,
+    worker_id: u32,
+    mut conn: Box<dyn Conn>,
+    fault: Option<FaultSpec>,
+) -> Result<()> {
     conn.send(&Message::Hello { worker: worker_id }.to_envelope())?;
     let mut participant = match Participant::new(cfg) {
         Ok(p) => p,
@@ -180,9 +202,14 @@ pub fn run_worker(cfg: FedConfig, worker_id: u32, mut conn: Box<dyn Conn>) -> Re
         let env = conn.recv()?;
         let msg = Message::from_envelope(&env)?;
         let step: Result<()> = match msg {
-            Message::TrainTask(task) => participant
-                .handle(&task)
-                .and_then(|res| conn.send(&Message::TrainResult(res).to_envelope())),
+            Message::TrainTask(task) => participant.handle(&task).and_then(|res| {
+                if let Some(f) = fault {
+                    if f.client == task.client as usize {
+                        std::thread::sleep(f.delay);
+                    }
+                }
+                conn.send(&Message::TrainResult(res).to_envelope())
+            }),
             Message::BaseSync { base } => participant.sync_base(base),
             Message::Shutdown => return Ok(()),
             other => bail!("participant: unexpected {:?} message", other.kind()),

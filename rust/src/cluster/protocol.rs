@@ -1,23 +1,32 @@
 //! Typed coordinator↔participant protocol and its byte-exact wire format.
 //!
-//! Every message travels as an [`Envelope`]: a fixed 28-byte header —
+//! Every message travels as an [`Envelope`]: a fixed 44-byte header —
 //! magic, protocol version, message kind, FNV-1a checksum, round id,
-//! segment id, sample count, payload length — followed by a kind-specific
-//! payload. The checksum covers the whole envelope except itself, so any
-//! single corrupted byte (header field or payload) is rejected rather
-//! than misinterpreted; truncation and version skew get dedicated errors.
+//! segment id, sample count, round deadline, stale-from round, payload
+//! length — followed by a kind-specific payload. The checksum covers the
+//! whole envelope except itself, so any single corrupted byte (header
+//! field or payload) is rejected rather than misinterpreted; truncation
+//! and version skew get dedicated errors.
+//!
+//! Version 2 (this revision) added the two round-policy header fields
+//! (`round_deadline`, `stale_from_round`) that drive K-of-N quorum
+//! aggregation; peers speaking different versions reject each other's
+//! envelopes outright — see docs/PROTOCOL.md for the normative layout
+//! and the compatibility table.
 //!
 //! Payload contents reuse the existing `compress::wire` messages wherever
 //! compression is on; dense fallbacks ship raw little-endian f32/f16.
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-/// Protocol magic ("EcoLoRA cluster, wire rev 1").
+/// Protocol magic ("EcoLoRA cluster").
 pub const MAGIC: [u8; 2] = [0xEC, 0x57];
-/// Protocol version carried in every envelope header.
-pub const PROTO_VERSION: u8 = 1;
+/// Protocol version carried in every envelope header. Bumped to 2 when
+/// the `round_deadline`/`stale_from_round` header fields were added for
+/// quorum rounds; v1 peers reject v2 envelopes and vice versa.
+pub const PROTO_VERSION: u8 = 2;
 /// Fixed header length in bytes.
-pub const HEADER_LEN: usize = 28;
+pub const HEADER_LEN: usize = 44;
 /// Hard cap on one payload (base-model sync dominates; 1 GiB is generous).
 pub const MAX_PAYLOAD: usize = 1 << 30;
 
@@ -56,10 +65,25 @@ impl MsgKind {
 /// One framed protocol message.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Envelope {
+    /// Message discriminant (selects the payload codec).
     pub kind: MsgKind,
+    /// Federated round this message belongs to (0 for control messages).
     pub round: u64,
+    /// Round-robin segment id (task/result messages; 0 otherwise).
     pub segment: u32,
+    /// FedAvg weight n_i (results; 0 otherwise).
     pub sample_count: u32,
+    /// Milliseconds the coordinator allots the task before the slot may be
+    /// resampled; 0 = no deadline (`RoundPolicy::Sync`). Set on
+    /// `TrainTask`, 0 elsewhere. Added in protocol v2.
+    pub round_deadline: u64,
+    /// The round the carried update was computed against. For on-time
+    /// results this equals `round`; the coordinator computes the staleness
+    /// discount of a late uplink from this field rather than from `round`
+    /// so a future transport-level retry can preserve the origin round.
+    /// Added in protocol v2.
+    pub stale_from_round: u64,
+    /// Kind-specific payload bytes.
     pub payload: Vec<u8>,
 }
 
@@ -75,6 +99,8 @@ fn fnv1a_parts(a: &[u8], b: &[u8]) -> u32 {
 }
 
 impl Envelope {
+    /// Build an envelope with no deadline and `stale_from_round == round`
+    /// (the common case for control and on-time messages).
     pub fn new(
         kind: MsgKind,
         round: u64,
@@ -82,7 +108,15 @@ impl Envelope {
         sample_count: u32,
         payload: Vec<u8>,
     ) -> Envelope {
-        Envelope { kind, round, segment, sample_count, payload }
+        Envelope {
+            kind,
+            round,
+            segment,
+            sample_count,
+            round_deadline: 0,
+            stale_from_round: round,
+            payload,
+        }
     }
 
     /// Total encoded size (framing accounting for the netsim shim).
@@ -90,6 +124,7 @@ impl Envelope {
         HEADER_LEN + self.payload.len()
     }
 
+    /// Serialize to the byte-exact wire form (header + payload).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.encoded_len());
         out.extend_from_slice(&MAGIC);
@@ -99,6 +134,8 @@ impl Envelope {
         out.extend_from_slice(&self.round.to_le_bytes());
         out.extend_from_slice(&self.segment.to_le_bytes());
         out.extend_from_slice(&self.sample_count.to_le_bytes());
+        out.extend_from_slice(&self.round_deadline.to_le_bytes());
+        out.extend_from_slice(&self.stale_from_round.to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.payload);
         let c = fnv1a_parts(&out[0..4], &out[8..]);
@@ -106,6 +143,7 @@ impl Envelope {
         out
     }
 
+    /// Parse and validate one encoded envelope (exact-length input).
     pub fn decode(bytes: &[u8]) -> Result<Envelope> {
         ensure!(
             bytes.len() >= HEADER_LEN,
@@ -132,7 +170,9 @@ impl Envelope {
         let round = u64::from_le_bytes(bytes[8..16].try_into().unwrap());
         let segment = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
         let sample_count = u32::from_le_bytes(bytes[20..24].try_into().unwrap());
-        let payload_len = u32::from_le_bytes(bytes[24..28].try_into().unwrap()) as usize;
+        let round_deadline = u64::from_le_bytes(bytes[24..32].try_into().unwrap());
+        let stale_from_round = u64::from_le_bytes(bytes[32..40].try_into().unwrap());
+        let payload_len = u32::from_le_bytes(bytes[40..44].try_into().unwrap()) as usize;
         ensure!(payload_len <= MAX_PAYLOAD, "envelope: payload length {payload_len} over cap");
         ensure!(
             bytes.len() == HEADER_LEN + payload_len,
@@ -140,7 +180,15 @@ impl Envelope {
             bytes.len(),
             HEADER_LEN + payload_len
         );
-        Ok(Envelope { kind, round, segment, sample_count, payload: bytes[HEADER_LEN..].to_vec() })
+        Ok(Envelope {
+            kind,
+            round,
+            segment,
+            sample_count,
+            round_deadline,
+            stale_from_round,
+            payload: bytes[HEADER_LEN..].to_vec(),
+        })
     }
 }
 
@@ -278,48 +326,83 @@ pub enum UpPayload {
 /// full decode. Keep it first.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainTask {
+    /// Round this task belongs to.
     pub round: u64,
+    /// Cohort slot (position in the round's sampled client list).
     pub slot: u32,
+    /// Logical client to train.
     pub client: u32,
+    /// Round-robin segment this client uploads.
     pub segment: u32,
     /// Round-robin segment count this round (min(N_s, N_t)).
     pub n_s: u32,
     /// Loss signal (L₀, L_{t−1}) driving Eq. 4.
     pub l0: f64,
+    /// Previous-round mean loss (second half of the Eq. 4 signal).
     pub l_prev: f64,
     /// Per-task batch-RNG stream, forked by the coordinator so results
     /// are independent of worker scheduling order.
     pub rng_state: [u64; 4],
+    /// Milliseconds the coordinator allots before the slot may be
+    /// resampled to a replacement client (0 = no deadline, sync rounds).
+    pub deadline_ms: u64,
+    /// Downlink content (see [`DownPayload`]).
     pub down: DownPayload,
 }
 
 /// One finished unit of work.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainResult {
+    /// Round the executed task belonged to.
     pub round: u64,
+    /// Cohort slot the task occupied.
     pub slot: u32,
+    /// Logical client that trained.
     pub client: u32,
+    /// Round-robin segment the uplink covers.
     pub segment: u32,
     /// FedAvg weight n_i.
     pub n_samples: u32,
+    /// Sample-weighted mean local loss over the local steps.
     pub mean_loss: f64,
-    /// Densities used (0 when not compressing).
+    /// Density used for A matrices (0 when not compressing).
     pub k_a: f64,
+    /// Density used for B matrices (0 when not compressing).
     pub k_b: f64,
     /// Seconds spent in compiled execution (perf accounting).
     pub exec_s: f64,
+    /// Round the carried update was computed against (equals `round` for
+    /// results produced by this revision; the coordinator derives the
+    /// staleness discount of a late uplink from this field).
+    pub stale_from_round: u64,
+    /// Uplink content (see [`UpPayload`]).
     pub up: UpPayload,
 }
 
 /// The protocol, typed.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    Hello { worker: u32 },
+    /// Worker → coordinator: identify this connection.
+    Hello {
+        /// Worker index (0..n_workers).
+        worker: u32,
+    },
+    /// Coordinator → worker: train one sampled client this round.
     TrainTask(TrainTask),
+    /// Worker → coordinator: the client's uplink contribution.
     TrainResult(TrainResult),
-    BaseSync { base: Vec<f32> },
+    /// Coordinator → workers: replace the frozen base (FLoRA merge).
+    BaseSync {
+        /// The merged base every participant must sync to.
+        base: Vec<f32>,
+    },
+    /// Coordinator → workers: end of run.
     Shutdown,
-    Error { text: String },
+    /// Either direction: fatal peer failure, human-readable.
+    Error {
+        /// Human-readable failure description.
+        text: String,
+    },
 }
 
 fn down_encode(w: &mut Writer, d: &DownPayload) {
@@ -380,6 +463,7 @@ fn up_decode(r: &mut Reader) -> Result<UpPayload> {
 }
 
 impl Message {
+    /// The envelope discriminant this message serializes under.
     pub fn kind(&self) -> MsgKind {
         match self {
             Message::Hello { .. } => MsgKind::Hello,
@@ -391,12 +475,13 @@ impl Message {
         }
     }
 
+    /// Serialize into an [`Envelope`] (header fields + payload codec).
     pub fn to_envelope(&self) -> Envelope {
         let mut w = Writer::new();
-        let (round, segment, sample_count) = match self {
+        let (round, segment, sample_count, round_deadline, stale_from_round) = match self {
             Message::Hello { worker } => {
                 w.u32(*worker);
-                (0, 0, 0)
+                (0, 0, 0, 0, 0)
             }
             Message::TrainTask(t) => {
                 w.u32(t.slot);
@@ -408,7 +493,7 @@ impl Message {
                     w.u64(s);
                 }
                 down_encode(&mut w, &t.down);
-                (t.round, t.segment, 0)
+                (t.round, t.segment, 0, t.deadline_ms, t.round)
             }
             Message::TrainResult(r) => {
                 w.u32(r.slot);
@@ -418,21 +503,30 @@ impl Message {
                 w.f64(r.k_b);
                 w.f64(r.exec_s);
                 up_encode(&mut w, &r.up);
-                (r.round, r.segment, r.n_samples)
+                (r.round, r.segment, r.n_samples, 0, r.stale_from_round)
             }
             Message::BaseSync { base } => {
                 w.f32s(base);
-                (0, 0, 0)
+                (0, 0, 0, 0, 0)
             }
-            Message::Shutdown => (0, 0, 0),
+            Message::Shutdown => (0, 0, 0, 0, 0),
             Message::Error { text } => {
                 w.bytes(text.as_bytes());
-                (0, 0, 0)
+                (0, 0, 0, 0, 0)
             }
         };
-        Envelope::new(self.kind(), round, segment, sample_count, w.finish())
+        Envelope {
+            kind: self.kind(),
+            round,
+            segment,
+            sample_count,
+            round_deadline,
+            stale_from_round,
+            payload: w.finish(),
+        }
     }
 
+    /// Deserialize a decoded [`Envelope`] back into a typed message.
     pub fn from_envelope(env: &Envelope) -> Result<Message> {
         let mut r = Reader::new(&env.payload);
         let msg = match env.kind {
@@ -457,6 +551,7 @@ impl Message {
                     l0,
                     l_prev,
                     rng_state,
+                    deadline_ms: env.round_deadline,
                     down,
                 })
             }
@@ -478,6 +573,7 @@ impl Message {
                     k_a,
                     k_b,
                     exec_s,
+                    stale_from_round: env.stale_from_round,
                     up,
                 })
             }
@@ -513,6 +609,7 @@ mod tests {
                     l0: rng.normal(),
                     l_prev: rng.normal(),
                     rng_state: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
+                    deadline_ms: rng.below(100_000) as u64,
                     down: match rng.below(4) {
                         0 => DownPayload::DenseF32((0..n).map(|_| rng.normal() as f32).collect()),
                         1 => DownPayload::SparseWire((0..n).map(|_| rng.below(256) as u8).collect()),
@@ -523,8 +620,10 @@ mod tests {
             }
             2 => {
                 let n = rng.below(200);
+                let round = rng.below(1000) as u64;
                 Message::TrainResult(TrainResult {
-                    round: rng.below(1000) as u64,
+                    round,
+                    stale_from_round: round.saturating_sub(rng.below(3) as u64),
                     slot: rng.below(16) as u32,
                     client: rng.below(100) as u32,
                     segment: rng.below(8) as u32,
@@ -603,7 +702,7 @@ mod tests {
         let mut bytes = env.encode();
         bytes[2] = PROTO_VERSION + 1;
         // rewrite a valid checksum so ONLY the version differs
-        let c = super::fnv1a_parts(&bytes[0..4], &bytes[28..]);
+        let c = super::fnv1a_parts(&bytes[0..4], &bytes[8..]);
         bytes[4..8].copy_from_slice(&c.to_le_bytes());
         let err = Envelope::decode(&bytes).unwrap_err();
         let msg = format!("{err:#}");
@@ -634,6 +733,70 @@ mod tests {
         assert_eq!(dec.segment, 3);
         assert_eq!(dec.sample_count, 41);
         assert_eq!(dec.kind, MsgKind::TrainResult);
+        assert_eq!(dec.round_deadline, 0, "Envelope::new defaults to no deadline");
+        assert_eq!(dec.stale_from_round, 7, "Envelope::new defaults stale_from to round");
         assert_eq!(dec.payload, vec![9; 12]);
+    }
+
+    #[test]
+    fn round_policy_header_fields_survive_roundtrip() {
+        let env = Envelope {
+            kind: MsgKind::TrainTask,
+            round: 9,
+            segment: 1,
+            sample_count: 0,
+            round_deadline: 2_500,
+            stale_from_round: 8,
+            payload: vec![0xAB; 8],
+        };
+        let dec = Envelope::decode(&env.encode()).unwrap();
+        assert_eq!(dec, env);
+        assert_eq!(dec.round_deadline, 2_500);
+        assert_eq!(dec.stale_from_round, 8);
+    }
+
+    #[test]
+    fn task_deadline_and_result_staleness_travel_in_the_header() {
+        // deadline_ms rides the TrainTask header; stale_from_round rides
+        // the TrainResult header — both must survive the typed roundtrip
+        let task = TrainTask {
+            round: 5,
+            slot: 2,
+            client: 17,
+            segment: 1,
+            n_s: 3,
+            l0: 2.0,
+            l_prev: 1.5,
+            rng_state: [1, 2, 3, 4],
+            deadline_ms: 750,
+            down: DownPayload::DenseF32(vec![0.5; 16]),
+        };
+        let env = Message::TrainTask(task.clone()).to_envelope();
+        assert_eq!(env.round_deadline, 750);
+        assert_eq!(env.stale_from_round, 5);
+        match Message::from_envelope(&Envelope::decode(&env.encode()).unwrap()).unwrap() {
+            Message::TrainTask(t) => assert_eq!(t, task),
+            other => panic!("expected TrainTask, got {:?}", other.kind()),
+        }
+
+        let res = TrainResult {
+            round: 6,
+            slot: 2,
+            client: 17,
+            segment: 1,
+            n_samples: 12,
+            mean_loss: 1.25,
+            k_a: 0.5,
+            k_b: 0.25,
+            exec_s: 0.01,
+            stale_from_round: 5,
+            up: UpPayload::DenseUpdate(vec![0.0; 16]),
+        };
+        let env = Message::TrainResult(res.clone()).to_envelope();
+        assert_eq!(env.stale_from_round, 5);
+        match Message::from_envelope(&Envelope::decode(&env.encode()).unwrap()).unwrap() {
+            Message::TrainResult(r) => assert_eq!(r, res),
+            other => panic!("expected TrainResult, got {:?}", other.kind()),
+        }
     }
 }

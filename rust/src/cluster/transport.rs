@@ -24,17 +24,21 @@ use super::protocol::{Envelope, HEADER_LEN, MAX_PAYLOAD};
 
 /// Sending half of a connection.
 pub trait ConnTx: Send {
+    /// Transmit one envelope (blocking until handed to the transport).
     fn send(&mut self, env: &Envelope) -> Result<()>;
 }
 
 /// Receiving half of a connection (blocking).
 pub trait ConnRx: Send {
+    /// Receive the next envelope (blocking; errors when the peer is gone).
     fn recv(&mut self) -> Result<Envelope>;
 }
 
 /// One reliable, ordered duplex message pipe.
 pub trait Conn: Send {
+    /// Transmit one envelope.
     fn send(&mut self, env: &Envelope) -> Result<()>;
+    /// Receive the next envelope (blocking).
     fn recv(&mut self) -> Result<Envelope>;
     /// Split into independently-owned halves (thread-per-direction use).
     fn split(self: Box<Self>) -> Result<(Box<dyn ConnTx>, Box<dyn ConnRx>)>;
@@ -43,11 +47,14 @@ pub trait Conn: Send {
 /// Which transport carries the protocol.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ClusterMode {
+    /// In-process `std::sync::mpsc` channel pairs (deterministic default).
     Mem,
+    /// Length-prefix-framed TCP (loopback by default).
     Tcp,
 }
 
 impl ClusterMode {
+    /// Parse a CLI spelling ("mem"/"memory"/"channel", "tcp"/"loopback").
     pub fn parse(s: &str) -> Option<ClusterMode> {
         match s.to_ascii_lowercase().as_str() {
             "mem" | "memory" | "channel" => Some(ClusterMode::Mem),
@@ -56,6 +63,7 @@ impl ClusterMode {
         }
     }
 
+    /// Canonical short name ("mem" or "tcp").
     pub fn name(self) -> &'static str {
         match self {
             ClusterMode::Mem => "mem",
@@ -66,10 +74,12 @@ impl ClusterMode {
 
 // ---- in-memory channel transport -------------------------------------------
 
+/// Sending half of an in-memory connection.
 pub struct MemTx {
     tx: mpsc::Sender<Vec<u8>>,
 }
 
+/// Receiving half of an in-memory connection.
 pub struct MemRx {
     rx: mpsc::Receiver<Vec<u8>>,
 }
@@ -92,6 +102,7 @@ impl ConnRx for MemRx {
     }
 }
 
+/// Duplex in-memory channel connection (see [`ClusterMode::Mem`]).
 pub struct MemConn {
     tx: MemTx,
     rx: MemRx,
@@ -136,10 +147,12 @@ fn tcp_recv(stream: &mut TcpStream) -> Result<Envelope> {
     Envelope::decode(&buf)
 }
 
+/// Sending half of a TCP connection.
 pub struct TcpTx {
     stream: TcpStream,
 }
 
+/// Receiving half of a TCP connection (a cloned stream handle).
 pub struct TcpRx {
     stream: TcpStream,
 }
@@ -156,6 +169,7 @@ impl ConnRx for TcpRx {
     }
 }
 
+/// Duplex framed-TCP connection (see [`ClusterMode::Tcp`]).
 pub struct TcpConn {
     stream: TcpStream,
 }

@@ -7,10 +7,12 @@
 //!   netsim    --ul 1 --dl 5 [--bytes-up N --bytes-down N --compute S]
 //!   help
 
+use std::time::Duration;
+
 use anyhow::{anyhow, Result};
 
 use crate::baselines::Method;
-use crate::cluster::{self, ClusterMode, ClusterOptions};
+use crate::cluster::{self, ClusterMode, ClusterOptions, FaultSpec, RoundPolicy, SimProfile};
 use crate::compress::{AdaptiveSparsifier, Encoding, SparsMode};
 use crate::data::PartitionKind;
 use crate::fed::{EcoConfig, FedOutcome, FedRunner};
@@ -28,6 +30,9 @@ USAGE: ecolora <subcommand> [flags]
   pretrain   --preset <p> [--steps N] [--samples N]
   train      --preset <p> [--method fedit|flora|ffa] [--eco] [--dpo]
              [--cluster mem|tcp|mono] [--workers N] [--sim-ul X --sim-dl X]
+             [--sim-slow-frac X --sim-slow-factor X]
+             [--round-policy sync|quorum] [--quorum Q] [--slot-timeout MS]
+             [--inject-slow CLIENT] [--inject-delay-ms MS]
              [--rounds N] [--clients N] [--per-round N] [--local-steps N]
              [--lr X] [--seed N] [--ns N] [--k-min-a X] [--k-min-b X]
              [--fixed-k X] [--no-spars] [--no-encoding] [--dense-downlink]
@@ -42,7 +47,16 @@ in-process channel transport, participant threads in parallel).
 --cluster tcp moves the same protocol onto loopback TCP; --cluster mono
 uses the single-threaded monolithic reference loop. --sim-ul/--sim-dl
 (Mbps) attach the netsim shim to the transport and report simulated
-per-round communication time over the real protocol bytes.
+per-round communication time over the real protocol bytes;
+--sim-slow-frac/--sim-slow-factor put that fraction of each round's
+slots on links that many times slower (straggler heterogeneity).
+
+--round-policy quorum drops the collect barrier: a round closes once
+ceil(Q × N_t) results arrive (--quorum, default 0.8); stragglers fold
+into the next round with the Eq. 3 staleness discount, and slots
+outliving --slot-timeout (ms, default 30000) are re-dispatched to a
+deterministic replacement client. --inject-slow/--inject-delay-ms delay
+one client's uplinks to exercise the policy.
 ";
 
 pub fn dispatch() -> Result<()> {
@@ -126,6 +140,33 @@ pub fn fed_config_from_args(args: &Args) -> Result<crate::fed::FedConfig> {
     Ok(cfg)
 }
 
+/// Build the round-close policy from CLI flags (shared with `train`).
+pub fn round_policy_from_args(args: &Args) -> Result<RoundPolicy> {
+    match args.get_or("round-policy", "sync") {
+        "sync" => {
+            // refuse to silently ignore quorum knobs on a sync run
+            for flag in ["quorum", "slot-timeout"] {
+                if args.get(flag).is_some() {
+                    return Err(anyhow!("--{flag} requires --round-policy quorum"));
+                }
+            }
+            Ok(RoundPolicy::Sync)
+        }
+        "quorum" | "async" => {
+            let q = args.get_f64("quorum", 0.8);
+            if q <= 0.0 || q > 1.0 {
+                return Err(anyhow!("--quorum expects a fraction in (0, 1], got {q}"));
+            }
+            let timeout_ms = args.get_u64("slot-timeout", 30_000);
+            if timeout_ms == 0 {
+                return Err(anyhow!("--slot-timeout expects a positive millisecond count"));
+            }
+            Ok(RoundPolicy::Quorum { q, timeout: Duration::from_millis(timeout_ms) })
+        }
+        other => Err(anyhow!("bad --round-policy {other:?} (sync or quorum)")),
+    }
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = fed_config_from_args(args)?;
     let label = cfg.run_label();
@@ -133,7 +174,19 @@ fn cmd_train(args: &Args) -> Result<()> {
     let out = match args.get_or("cluster", "mem") {
         // old monolithic entry point, kept as a thin wrapper
         "mono" | "off" | "none" => {
-            for flag in ["workers", "sim-ul", "sim-dl", "sim-latency"] {
+            for flag in [
+                "workers",
+                "sim-ul",
+                "sim-dl",
+                "sim-latency",
+                "sim-slow-frac",
+                "sim-slow-factor",
+                "round-policy",
+                "quorum",
+                "slot-timeout",
+                "inject-slow",
+                "inject-delay-ms",
+            ] {
                 if args.get(flag).is_some() {
                     return Err(anyhow!("--{flag} needs a cluster deployment (--cluster mem|tcp)"));
                 }
@@ -145,13 +198,31 @@ fn cmd_train(args: &Args) -> Result<()> {
             let mode = ClusterMode::parse(mode)
                 .ok_or_else(|| anyhow!("bad --cluster {mode:?} (mem, tcp or mono)"))?;
             // any sim-* flag turns the shim on (the others take defaults)
-            let sim_requested =
-                ["sim-ul", "sim-dl", "sim-latency"].iter().any(|k| args.get(k).is_some());
-            let netsim = sim_requested.then(|| Scenario {
-                name: "custom",
-                ul_mbps: args.get_f64("sim-ul", 1.0),
-                dl_mbps: args.get_f64("sim-dl", 5.0),
-                latency_s: args.get_f64("sim-latency", 0.05),
+            let sim_requested = ["sim-ul", "sim-dl", "sim-latency", "sim-slow-frac", "sim-slow-factor"]
+                .iter()
+                .any(|k| args.get(k).is_some());
+            let netsim = sim_requested.then(|| SimProfile {
+                scenario: Scenario {
+                    name: "custom",
+                    ul_mbps: args.get_f64("sim-ul", 1.0),
+                    dl_mbps: args.get_f64("sim-dl", 5.0),
+                    latency_s: args.get_f64("sim-latency", 0.05),
+                },
+                slow_frac: args.get_f64("sim-slow-frac", 0.0),
+                slow_factor: args.get_f64("sim-slow-factor", 1.0),
+            });
+            let policy = round_policy_from_args(args)?;
+            if args.get("inject-delay-ms").is_some() && args.get("inject-slow").is_none() {
+                return Err(anyhow!("--inject-delay-ms requires --inject-slow <client>"));
+            }
+            let fault = args.get("inject-slow").map(|v| {
+                let client: usize = v
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--inject-slow expects a client id, got {v:?}"));
+                FaultSpec {
+                    client,
+                    delay: Duration::from_millis(args.get_u64("inject-delay-ms", 1_000)),
+                }
             });
             let opts = ClusterOptions {
                 mode,
@@ -159,12 +230,28 @@ fn cmd_train(args: &Args) -> Result<()> {
                     v.parse().unwrap_or_else(|_| panic!("--workers expects an integer, got {v:?}"))
                 }),
                 netsim,
+                policy,
+                fault,
             };
             let out = cluster::run(cfg, &opts)?;
             println!(
                 "deployment    : cluster ({} transport, {} workers)",
                 out.transport, out.workers
             );
+            if let RoundPolicy::Quorum { q, timeout } = policy {
+                println!(
+                    "round policy  : quorum (q={q}, slot timeout {} ms)",
+                    timeout.as_millis()
+                );
+                println!(
+                    "dropout       : {:.1}% ({} stragglers / {} late folds / {} resampled, mean quorum wait {:.3}s)",
+                    100.0 * out.fed.log.dropout_rate(),
+                    out.fed.log.total_stragglers(),
+                    out.fed.log.total_late_folds(),
+                    out.fed.log.total_resampled(),
+                    out.fed.log.mean_quorum_wait_s(),
+                );
+            }
             if !out.timings.is_empty() {
                 let comm: f64 = out.timings.iter().map(|t| t.comm_s).sum();
                 let total: f64 = out.timings.iter().map(|t| t.round_s).sum();

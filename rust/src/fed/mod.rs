@@ -427,6 +427,7 @@ impl FedRunner {
         self.l_prev = round_loss;
         rec.global_loss = round_loss;
         rec.overhead_s = overhead;
+        rec.cohort = n_t;
         rec.compute_s = (self.session.exec_seconds.get() - exec_before) / n_t.max(1) as f64;
         let snap = sparsity_snapshot(&self.global, &self.kinds);
         rec.gini_a = snap.gini_a;

@@ -20,6 +20,19 @@ pub fn mix_into_local(beta: f64, staleness: u64, global: &[f32], local: &mut [f3
     linalg::mix(w_g, global, local);
 }
 
+/// Server-side dual of Eq. 3: the FedAvg-weight multiplier for a LATE
+/// uplink folded `staleness` rounds after the round it was computed
+/// against, `e^{−β·staleness}` (the complement of [`global_weight`]).
+///
+/// Quorum rounds (`cluster::RoundPolicy::Quorum`) buffer straggler
+/// uplinks instead of blocking on them; when the buffer is folded into a
+/// later round's Eq. 2 aggregate, this discount shifts weight away from
+/// the stale contribution exactly as the client-side mixing shifts weight
+/// away from a stale local model.
+pub fn stale_discount(beta: f64, staleness: u64) -> f64 {
+    (-beta * staleness as f64).exp()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -54,6 +67,24 @@ mod tests {
             prev = w;
         }
         assert!(global_weight(2.0, 3) > global_weight(0.5, 3));
+    }
+
+    #[test]
+    fn stale_discount_complements_global_weight() {
+        for s in 0..10 {
+            let (w, d) = (global_weight(0.7, s), stale_discount(0.7, s));
+            assert!((w + d - 1.0).abs() < 1e-12, "s={s}: {w} + {d} != 1");
+        }
+        // fresh uplink: full weight; very stale uplink: negligible weight
+        assert_eq!(stale_discount(0.7, 0), 1.0);
+        assert!(stale_discount(0.7, 100) < 1e-12);
+        // monotone decreasing in staleness
+        let mut prev = 2.0;
+        for s in 0..10 {
+            let d = stale_discount(0.5, s);
+            assert!(d < prev);
+            prev = d;
+        }
     }
 
     #[test]

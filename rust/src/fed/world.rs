@@ -15,6 +15,14 @@
 //!   then (coordinator/monolith only) 5 → eval set, 6 → DPO eval set,
 //!   then per round t: 1000+t → sampling, 2000+t → FLoRA restart init,
 //!   (3000|4000)+t·131+ci → per-client batch stream.
+//!
+//! Streams for timeout-driven re-dispatch ([`resample_rng`]) deliberately
+//! do NOT come from the root stream: whether a slot times out depends on
+//! wall-clock events, and advancing the root on one would shift every
+//! later fork — breaking the bitwise parity between a quorum run with no
+//! timeouts and the synchronous path.
+
+#![warn(missing_docs)]
 
 use std::sync::Arc;
 
@@ -48,14 +56,21 @@ pub struct ClientState {
 
 /// Everything deterministically derivable from a `FedConfig`.
 pub struct World {
+    /// Model session (PJRT engine + compiled artifacts + frozen base).
     pub session: Session,
+    /// Synthetic training corpus.
     pub ds: Dataset,
+    /// Corpus shape parameters (vocab, sequence length, …).
     pub ccfg: corpus::CorpusCfg,
+    /// Preference pairs (DPO only; empty otherwise).
     pub pairs: Vec<preference::PrefPair>,
     /// Per-client sample-index partition.
     pub parts: Vec<Vec<usize>>,
+    /// Per-parameter LoRA matrix family (A or B).
     pub kinds: Arc<Vec<LoraKind>>,
+    /// Kind-wise index over the flat LoRA vector (wire codec input).
     pub kidx: Arc<KindIndex>,
+    /// Initial LoRA vector every client starts from.
     pub lora_init: Vec<f32>,
     /// Root RNG, positioned just after the setup forks (see module docs).
     pub rng: Rng,
@@ -176,4 +191,18 @@ pub fn batch_salt(dpo: bool, t: u64, ci: usize) -> u64 {
     } else {
         3000 + t * 131 + ci as u64
     }
+}
+
+/// Deterministic stream for re-dispatching a timed-out slot: a pure
+/// function of (experiment seed, round, slot, re-dispatch attempt) that
+/// never touches the root stream (see the module docs on why). The
+/// coordinator draws the replacement client AND the replacement task's
+/// batch stream from it, so a re-dispatch is fully reproducible given
+/// which slot timed out on which attempt.
+pub fn resample_rng(seed: u64, t: u64, slot: u32, attempt: u32) -> Rng {
+    let salt = 0xD15D_A7C4_5EED_0000u64
+        ^ t.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ ((slot as u64) << 20)
+        ^ attempt as u64;
+    Rng::new(seed ^ salt)
 }

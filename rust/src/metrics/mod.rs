@@ -50,6 +50,23 @@ pub struct RoundRecord {
     pub overhead_s: f64,
     /// Local training compute per sampled client (mean), s.
     pub compute_s: f64,
+    /// Cohort size N_t (slots dispatched this round).
+    pub cohort: usize,
+    /// Slots still outstanding when the round closed (quorum rounds only;
+    /// their uplinks are buffered for the next round's staleness fold).
+    pub stragglers: usize,
+    /// Buffered late uplinks from earlier rounds folded into this round's
+    /// aggregate with the Eq. 3 staleness discount.
+    pub late_folds: usize,
+    /// Timed-out slots re-dispatched to a replacement client.
+    pub resampled: usize,
+    /// Results discarded without folding: a slot already filled by a
+    /// replacement (or vice versa), or a buffered late uplink that could
+    /// not be folded into this round's aggregate.
+    pub orphaned: usize,
+    /// Seconds from task dispatch until the quorum was reached (equals the
+    /// full collect wait under `RoundPolicy::Sync`).
+    pub quorum_wait_s: f64,
 }
 
 /// Full training telemetry.
@@ -108,6 +125,43 @@ impl RunLog {
             .map(|r| r.round)
     }
 
+    /// Fraction of dispatched slots that were still outstanding when
+    /// their round closed (the paper-style client dropout rate under
+    /// quorum aggregation). 0.0 for synchronous runs.
+    pub fn dropout_rate(&self) -> f64 {
+        let slots: usize = self.rounds.iter().map(|r| r.cohort).sum();
+        let stragglers: usize = self.rounds.iter().map(|r| r.stragglers).sum();
+        if slots == 0 {
+            0.0
+        } else {
+            stragglers as f64 / slots as f64
+        }
+    }
+
+    /// Total straggler slots across the run.
+    pub fn total_stragglers(&self) -> usize {
+        self.rounds.iter().map(|r| r.stragglers).sum()
+    }
+
+    /// Total late uplinks folded back in across the run.
+    pub fn total_late_folds(&self) -> usize {
+        self.rounds.iter().map(|r| r.late_folds).sum()
+    }
+
+    /// Total timed-out slots re-dispatched across the run.
+    pub fn total_resampled(&self) -> usize {
+        self.rounds.iter().map(|r| r.resampled).sum()
+    }
+
+    /// Mean seconds from dispatch to quorum over all rounds.
+    pub fn mean_quorum_wait_s(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            self.rounds.iter().map(|r| r.quorum_wait_s).sum::<f64>() / self.rounds.len() as f64
+        }
+    }
+
     /// Cumulative comm totals up to and including `round`.
     pub fn totals_until(&self, round: usize) -> (CommTotals, CommTotals) {
         let mut up = CommTotals::default();
@@ -122,12 +176,12 @@ impl RunLog {
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s\n",
+            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4}",
+                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4}",
                 r.round,
                 r.global_loss,
                 r.eval_acc.map_or(String::from(""), |a| format!("{a:.4}")),
@@ -141,6 +195,12 @@ impl RunLog {
                 r.gini_b,
                 r.overhead_s,
                 r.compute_s,
+                r.cohort,
+                r.stragglers,
+                r.late_folds,
+                r.resampled,
+                r.orphaned,
+                r.quorum_wait_s,
             );
         }
         s
@@ -228,6 +288,23 @@ mod tests {
         let csv = log.to_csv();
         assert_eq!(csv.lines().count(), 3);
         assert!(csv.lines().nth(1).unwrap().starts_with("0,"));
+        // every row carries the same number of columns as the header
+        let cols = csv.lines().next().unwrap().split(',').count();
+        for line in csv.lines().skip(1) {
+            assert_eq!(line.split(',').count(), cols, "{line}");
+        }
+    }
+
+    #[test]
+    fn dropout_accounting_over_quorum_rounds() {
+        let mut log = RunLog::new("t");
+        log.push(RoundRecord { round: 0, cohort: 4, stragglers: 1, resampled: 1, ..Default::default() });
+        log.push(RoundRecord { round: 1, cohort: 4, late_folds: 1, ..Default::default() });
+        assert!((log.dropout_rate() - 1.0 / 8.0).abs() < 1e-12);
+        assert_eq!(log.total_stragglers(), 1);
+        assert_eq!(log.total_late_folds(), 1);
+        assert_eq!(log.total_resampled(), 1);
+        assert_eq!(RunLog::new("empty").dropout_rate(), 0.0);
     }
 
     #[test]

