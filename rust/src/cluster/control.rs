@@ -1,41 +1,48 @@
-//! Coordinator: the server-side round state machine.
+//! The round-control plane: the server-side round state machine, with the
+//! aggregation math moved out to the sharded plane (`shard` + `router`).
 //!
 //! A round moves through four typed phases, each driven by protocol
 //! messages rather than shared memory:
 //!
 //! ```text
 //!   Sampling ──► Broadcast ──► Collect ──► Aggregate
-//!   (fork RNG,   (downlink     (TrainResult (Eq. 2 merge,
-//!    pick cohort) payload per   per slot,    late-uplink fold,
-//!                 slot → tasks) any order,   telemetry, eval,
-//!                               close at     FLoRA base sync)
-//!                               quorum)
+//!   (fork RNG,   (downlink     (TrainResult (router closes the
+//!    pick cohort) payload per   per slot,    shards; Eq. 2 delta
+//!                 slot → tasks) any order,   gathers back; control
+//!                               close at     folds scalars, advances
+//!                               quorum)      the global, evaluates)
 //! ```
 //!
 //! `begin_round` performs Sampling + Broadcast and returns the
 //! slot-ordered `TrainTask`s; `accept` consumes `TrainResult`s in ANY
-//! arrival order; `finish_round` aggregates strictly in slot order so the
-//! floating-point reduction is identical to the monolithic `FedRunner` —
-//! that, plus per-task RNG streams and per-client compressor state on the
-//! participants, is what makes the cluster path bitwise-reproducible.
+//! arrival order, handing each accepted payload back as a
+//! [`RoutedAdd`](super::router::RoutedAdd) for the router to forward to
+//! the shard owning its segment; `finish_round` consumes the router's
+//! gathered aggregate and performs the strictly slot-ordered SCALAR pass
+//! (loss/weight/exec/k telemetry, FLoRA module stacking) so the
+//! floating-point reductions are identical to the monolithic `FedRunner`.
+//! Per-task RNG streams and per-client compressor state on the
+//! participants complete the bitwise-reproducibility story.
 //!
 //! The Collect barrier is a policy, not a law: under
 //! [`RoundPolicy::Quorum`] the round closes as soon as `ceil(q·N_t)`
-//! results arrive. Straggler uplinks that land after the close are
-//! buffered ([`LateBuffer`]) and folded into the NEXT round's Eq. 2
+//! results arrive. Straggler uplinks that land after the close route to
+//! the owning shard's `LateBuffer` and fold into the NEXT round's Eq. 2
 //! aggregate with the Eq. 3 staleness discount
 //! (`fed::staleness::stale_discount`), and slots that outlive the policy
 //! timeout are resampled to a replacement client with a fully
 //! deterministic re-dispatch stream (`fed::world::resample_rng`).
 //! `Quorum { q: 1.0, .. }` with no timeouts firing is bitwise identical
 //! to `Sync` — the parity tests in `tests/integration_cluster.rs` enforce
-//! it.
+//! it, as they do `--shards N` ≡ `--shards 1`.
 //!
-//! The coordinator owns the global model, the per-client downlink
+//! The control plane owns the global model, the per-client downlink
 //! channels (reference + error-feedback compressor), and the evaluation
-//! stack; it never runs local training.
+//! stack; it never runs local training and never touches uplink payload
+//! bytes — those flow router → shard.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, ensure, Result};
@@ -44,19 +51,20 @@ use crate::compress::{dense_bytes, KindIndex};
 use crate::data::{corpus, preference};
 use crate::eval::{DpoEvaluator, McEvaluator};
 use crate::fed::downlink::{DownWire, DownlinkState};
-use crate::fed::server::SegmentAggregator;
 use crate::fed::world::{self, World};
-use crate::fed::{round_robin, staleness, EcoConfig, FedConfig, FedOutcome};
+use crate::fed::{round_robin, EcoConfig, FedConfig, FedOutcome};
 use crate::metrics::{sparsity_snapshot, RoundRecord, RunLog};
 
 use super::protocol::{DownPayload, TrainResult, TrainTask, UpPayload};
+use super::router::{GatheredAgg, RoutedAdd};
+use super::shard::{self, Payload};
 
 /// Upper bound on re-dispatches per slot: after this many replacement
-/// waves the coordinator stops spending downlink bandwidth on the slot
+/// waves the control plane stops spending downlink bandwidth on the slot
 /// and simply waits for quorum from whatever is still in flight.
 pub const MAX_REDISPATCH: u32 = 3;
 
-/// How many rounds back the coordinator remembers which (round, slot)
+/// How many rounds back the control plane remembers which (round, slot)
 /// pairs already contributed to an aggregate, so a racer result arriving
 /// after its slot was filled (original vs. replacement) cannot fold a
 /// second time. Beyond this horizon the Eq. 3 discount `e^{−β·s}` is
@@ -125,6 +133,22 @@ pub enum Phase {
     Aggregate,
 }
 
+/// The scalar residue of one accepted result: everything `finish_round`'s
+/// slot-ordered pass needs AFTER the payload itself has been routed to
+/// the aggregation plane.
+struct SlotDone {
+    n_samples: u32,
+    mean_loss: f64,
+    k_a: f64,
+    k_b: f64,
+    exec_s: f64,
+    /// True for a sparse-wire upload (the k densities are meaningful).
+    sparse: bool,
+    /// FLoRA module upload (stacked by the control plane, never sharded —
+    /// a restart module merges into the session base, not the Eq. 2 sum).
+    module: Option<Vec<f32>>,
+}
+
 /// In-flight state of one round (created by `begin_round`).
 pub struct RoundState {
     /// Round index.
@@ -141,7 +165,7 @@ pub struct RoundState {
     overhead: f64,
     flora_init: Option<Vec<f32>>,
     loss_signal: (f64, f64),
-    results: Vec<Option<TrainResult>>,
+    done: Vec<Option<SlotDone>>,
     received: usize,
     /// Clients ever assigned to each slot (original first, then
     /// replacements) — the set of legitimate reporters for the slot.
@@ -156,7 +180,7 @@ impl RoundState {
     /// Per-slot compiled-execution seconds (netsim shim input); slots that
     /// have not reported yet count as zero.
     pub fn exec_by_slot(&self) -> Vec<f64> {
-        self.results
+        self.done
             .iter()
             .map(|r| r.as_ref().map_or(0.0, |r| r.exec_s))
             .collect()
@@ -169,148 +193,15 @@ impl RoundState {
 
     /// Slots still waiting for a result.
     pub fn unfilled_slots(&self) -> Vec<usize> {
-        (0..self.n_t).filter(|&s| self.results[s].is_none()).collect()
+        (0..self.n_t).filter(|&s| self.done[s].is_none()).collect()
     }
 }
 
-/// Everything [`LateBuffer::fold_into`] needs from the folding round.
-#[derive(Debug, Clone, Copy)]
-pub struct FoldCtx<'a> {
-    /// Per-client FedAvg weights (the coordinator's partition sizes).
-    pub weights: &'a [f64],
-    /// Staleness decay β (Eq. 3).
-    pub beta: f64,
-    /// The round whose aggregate absorbs the fold.
-    pub now_round: u64,
-    /// `Method::dense_upload_params` — the parameter count an ON-TIME
-    /// dense uplink is charged, so a late arrival of the identical
-    /// payload costs the same in comm telemetry.
-    pub dense_params: usize,
-}
-
-/// Buffer of straggler uplinks that arrived after their round closed,
-/// awaiting the next round's staleness-discounted fold.
-///
-/// Arrival order carries no meaning: entries are deduped by
-/// (origin round, slot) — first arrival wins — and folded in
-/// (origin round, slot) order, so the resulting aggregate is a pure
-/// function of the SET of buffered results (property-tested in
-/// `tests/integration_cluster.rs`).
-#[derive(Default)]
-pub struct LateBuffer {
-    entries: Vec<TrainResult>,
-    /// Results discarded instead of folded: duplicates of an already
-    /// buffered (round, slot), FLoRA module uploads (their restart base
-    /// has already advanced), or geometry mismatches against the folding
-    /// round's aggregator.
-    pub dropped: usize,
-}
-
-impl LateBuffer {
-    /// Fresh empty buffer.
-    pub fn new() -> LateBuffer {
-        LateBuffer::default()
-    }
-
-    /// Buffered entry count.
-    pub fn len(&self) -> usize {
-        self.entries.len()
-    }
-
-    /// True when nothing is buffered.
-    pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
-    }
-
-    /// Buffer one late result; returns true when it was kept. FLoRA
-    /// module uploads are rejected outright — a restart module only makes
-    /// sense against the base it restarted from, which a later round has
-    /// already merged past.
-    pub fn push(&mut self, res: TrainResult) -> bool {
-        if matches!(res.up, UpPayload::DenseModule(_)) {
-            self.dropped += 1;
-            return false;
-        }
-        if self
-            .entries
-            .iter()
-            .any(|e| e.stale_from_round == res.stale_from_round && e.slot == res.slot)
-        {
-            self.dropped += 1;
-            return false;
-        }
-        self.entries.push(res);
-        true
-    }
-
-    /// Drain the buffer into `agg`, weighting every entry by its FedAvg
-    /// weight times the Eq. 3 staleness discount
-    /// `e^{−β·(now_round − origin_round)}`. Folds in (origin round, slot)
-    /// order regardless of arrival order; undecodable or mismatched
-    /// entries are counted in [`LateBuffer::dropped`] and reflected in
-    /// `rec.orphaned` rather than failing the round. Comm accounting for
-    /// the folded uplinks lands in `rec.up` (the bytes crossed the wire in
-    /// the round that folds them, not the round that lost them); dense
-    /// uplinks are charged `FoldCtx::dense_params` parameters — the same
-    /// `Method::dense_upload_params` figure an on-time arrival of the
-    /// identical payload is charged. Returns the (origin round, slot)
-    /// identities that actually folded, so the caller can mark them
-    /// aggregated and reject any future racer for the same slot.
-    pub fn fold_into(
-        &mut self,
-        agg: &mut SegmentAggregator,
-        kidx: &KindIndex,
-        ctx: FoldCtx<'_>,
-        rec: &mut RoundRecord,
-    ) -> Vec<(u64, u32)> {
-        let mut entries = std::mem::take(&mut self.entries);
-        entries.sort_by_key(|e| (e.stale_from_round, e.slot));
-        let mut folded_ids = Vec::new();
-        for res in entries {
-            let ci = res.client as usize;
-            let staleness = ctx.now_round.saturating_sub(res.stale_from_round).max(1);
-            let w = ctx.weights.get(ci).copied().unwrap_or(0.0)
-                * staleness::stale_discount(ctx.beta, staleness);
-            if w <= 0.0 {
-                self.dropped += 1;
-                rec.orphaned += 1;
-                continue;
-            }
-            let folded = match &res.up {
-                UpPayload::SparseWire(bytes) => {
-                    let seg = res.segment as usize;
-                    seg < agg.n_segments()
-                        && agg
-                            .add_wire(seg, bytes, kidx, w)
-                            .map(|params| rec.up.add(params, bytes.len()))
-                            .is_ok()
-                }
-                UpPayload::DenseUpdate(v) => {
-                    let fits = agg.n_segments() == 1 && v.len() == agg.range(0).len();
-                    if fits {
-                        agg.add_dense(0, v, w);
-                        rec.up.add(ctx.dense_params, dense_bytes(ctx.dense_params));
-                    }
-                    fits
-                }
-                // push() rejects these; defensive
-                UpPayload::DenseModule(_) => false,
-            };
-            if folded {
-                rec.late_folds += 1;
-                folded_ids.push((res.stale_from_round, res.slot));
-            } else {
-                self.dropped += 1;
-                rec.orphaned += 1;
-            }
-        }
-        folded_ids
-    }
-}
-
-/// The server-side agent: owns the global model, downlink channels, the
-/// evaluation stack, and the round state machine.
-pub struct Coordinator {
+/// The server-side control agent: owns the global model, downlink
+/// channels, the evaluation stack, and the round state machine. The
+/// Eq. 2/Eq. 3 aggregation math lives in the sharded plane behind the
+/// [`Router`](super::router::Router).
+pub struct ControlPlane {
     /// Experiment configuration (shared with every participant).
     pub cfg: FedConfig,
     policy: RoundPolicy,
@@ -318,24 +209,30 @@ pub struct Coordinator {
     dl: Option<DownlinkState>,
     evaluator: McEvaluator,
     dpo_eval: Option<DpoEvaluator>,
-    weights: Vec<f64>,
+    weights: Arc<Vec<f64>>,
     global: Vec<f32>,
-    late: LateBuffer,
     /// (round, slot) pairs that already contributed to some aggregate —
     /// on time or via a late fold — kept for [`FILLED_HORIZON`] rounds so
     /// a racer result (original vs. replacement of a resampled slot)
     /// arriving after its round closed cannot fold a second time.
     filled: HashSet<(u64, u32)>,
+    /// Straggler payload bytes admitted toward the aggregation plane's
+    /// byte cap since the last round close (global meter — the admission
+    /// decision must not depend on the shard map, so `--shards N` stays
+    /// bitwise-identical to `--shards 1` even when the cap binds).
+    late_bytes: usize,
+    /// Stragglers evicted by the global byte cap since the last close.
+    late_evicted: usize,
     l0: Option<f64>,
     l_prev: f64,
 }
 
-impl Coordinator {
+impl ControlPlane {
     /// Mirrors `FedRunner::new`'s RNG fork order exactly (see
     /// `fed::world` module docs). Rejects `Quorum` policies with an
     /// out-of-range fraction, a zero timeout, or a restart-based method
     /// (a late FLoRA module cannot merge into an already-advanced base).
-    pub fn new(cfg: FedConfig, policy: RoundPolicy) -> Result<Coordinator> {
+    pub fn new(cfg: FedConfig, policy: RoundPolicy) -> Result<ControlPlane> {
         if let RoundPolicy::Quorum { q, timeout } = policy {
             ensure!(q > 0.0 && q <= 1.0, "quorum fraction must be in (0, 1], got {q}");
             ensure!(!timeout.is_zero(), "slot timeout must be positive");
@@ -363,8 +260,8 @@ impl Coordinator {
         let dpo_eval = cfg.dpo.then(|| {
             DpoEvaluator::new(preference::generate_pairs(&mut world.rng.fork(6), 64, &world.ccfg))
         });
-        let weights = world.client_weights();
-        Ok(Coordinator {
+        let weights = Arc::new(world.client_weights());
+        Ok(ControlPlane {
             global: world.lora_init.clone(),
             world,
             dl,
@@ -373,8 +270,9 @@ impl Coordinator {
             weights,
             cfg,
             policy,
-            late: LateBuffer::new(),
             filled: HashSet::new(),
+            late_bytes: 0,
+            late_evicted: 0,
             l0: None,
             l_prev: f64::NAN,
         })
@@ -385,14 +283,37 @@ impl Coordinator {
         &self.global
     }
 
-    /// The round-close policy this coordinator runs under.
+    /// The round-close policy this control plane runs under.
     pub fn policy(&self) -> RoundPolicy {
         self.policy
     }
 
-    /// Straggler uplinks currently buffered for the next round's fold.
-    pub fn late_pending(&self) -> usize {
-        self.late.len()
+    /// Flat LoRA parameter count (router/shard geometry input).
+    pub fn lora_total(&self) -> usize {
+        self.world.session.schema.lora_total
+    }
+
+    /// Per-client FedAvg weights, shared with the shard threads for the
+    /// staleness-discounted late fold.
+    pub fn client_weights(&self) -> Arc<Vec<f64>> {
+        self.weights.clone()
+    }
+
+    /// Kind-wise index over the flat LoRA vector (shard decode input).
+    pub fn kind_index(&self) -> Arc<KindIndex> {
+        self.world.kidx.clone()
+    }
+
+    /// Eq. 3 staleness decay β for late folds (EcoConfig's, or its
+    /// default when running a non-eco baseline).
+    pub fn fold_beta(&self) -> f64 {
+        self.cfg.eco.map_or(EcoConfig::default().beta, |e| e.beta)
+    }
+
+    /// The parameter count a dense uplink is charged
+    /// (`Method::dense_upload_params`).
+    pub fn dense_upload_params(&self) -> usize {
+        self.cfg.method.dense_upload_params(&self.world.session.schema)
     }
 
     /// Compress (or materialize) the downlink payload for `ci` and charge
@@ -497,7 +418,7 @@ impl Coordinator {
             overhead,
             flora_init,
             loss_signal,
-            results: (0..n_t).map(|_| None).collect(),
+            done: (0..n_t).map(|_| None).collect(),
             received: 0,
             assignees: sampled.iter().map(|&ci| vec![ci as u32]).collect(),
             attempts: vec![0; n_t],
@@ -509,12 +430,16 @@ impl Coordinator {
     }
 
     /// Phase 3 (Collect): feed one `TrainResult` for the CURRENT round
-    /// (any arrival order). Returns true once the quorum is reached and
-    /// the round may close. A second result for a resampled slot (the
-    /// original assignee racing its replacement) is counted as orphaned
-    /// and discarded; results for earlier rounds belong in
-    /// [`Coordinator::accept_late`] instead.
-    pub fn accept(&mut self, rs: &mut RoundState, res: TrainResult) -> Result<bool> {
+    /// (any arrival order). The scalar residue stays in the round state;
+    /// the payload comes back as a [`RoutedAdd`] for the router to
+    /// forward to the owning shard (`None` for FLoRA module uploads,
+    /// which the control plane stacks itself, and for orphaned racers).
+    /// The round may close — check `rs.phase` — once the quorum is
+    /// reached. A second result for a resampled slot (the original
+    /// assignee racing its replacement) is counted as orphaned and
+    /// discarded; results for earlier rounds belong in
+    /// [`ControlPlane::accept_late`] instead.
+    pub fn accept(&mut self, rs: &mut RoundState, res: TrainResult) -> Result<Option<RoutedAdd>> {
         ensure!(rs.phase == Phase::Collect, "accept called outside Collect");
         ensure!(res.round == rs.t, "result for round {} during round {}", res.round, rs.t);
         let slot = res.slot as usize;
@@ -527,21 +452,65 @@ impl Coordinator {
             "client {ci} was never assigned slot {slot}"
         );
         // the participant derived its world independently — its FedAvg
-        // weight must agree with the coordinator's partition
+        // weight must agree with the control plane's partition
         ensure!(
             res.n_samples as f64 == self.weights[ci],
             "weight mismatch for client {ci}: worker says {}, partition says {}",
             res.n_samples,
             self.weights[ci]
         );
-        if rs.results[slot].is_some() {
+        if rs.done[slot].is_some() {
             // a resampled slot legitimately reports more than once: the
             // first arrival won the slot, the rest are orphans
             ensure!(rs.attempts[slot] > 0, "duplicate result for slot {slot}");
             rs.orphaned += 1;
-            return Ok(false);
+            return Ok(None);
         }
-        rs.results[slot] = Some(res);
+
+        let lora_total = self.world.session.schema.lora_total;
+        let weight = res.n_samples as f64;
+        let (routed, module, sparse) = match res.up {
+            UpPayload::SparseWire(bytes) => (
+                Some(RoutedAdd {
+                    slot: res.slot,
+                    segment: res.segment as usize,
+                    weight,
+                    payload: Payload::Wire(bytes),
+                }),
+                None,
+                true,
+            ),
+            UpPayload::DenseUpdate(v) => {
+                ensure!(v.len() == lora_total, "dense update length");
+                (
+                    Some(RoutedAdd {
+                        slot: res.slot,
+                        segment: res.segment as usize,
+                        weight,
+                        payload: Payload::Dense(v),
+                    }),
+                    None,
+                    false,
+                )
+            }
+            UpPayload::DenseModule(m) => {
+                ensure!(m.len() == lora_total, "dense module length");
+                ensure!(
+                    self.cfg.method.restarts_lora(),
+                    "module upload from a non-restarting method"
+                );
+                (None, Some(m), false)
+            }
+        };
+        rs.done[slot] = Some(SlotDone {
+            n_samples: res.n_samples,
+            mean_loss: res.mean_loss,
+            k_a: res.k_a,
+            k_b: res.k_b,
+            exec_s: res.exec_s,
+            sparse,
+            module,
+        });
         rs.received += 1;
         if rs.received >= rs.quorum {
             rs.phase = Phase::Aggregate;
@@ -549,21 +518,31 @@ impl Coordinator {
                 rs.quorum_wait_s = Some(rs.started.elapsed().as_secs_f64());
             }
         }
-        Ok(rs.phase == Phase::Aggregate)
+        Ok(routed)
     }
 
-    /// Buffer a straggler result from an ALREADY-CLOSED round for the next
-    /// `finish_round`'s staleness-discounted fold. Returns true when the
-    /// result was kept (false: unknown client, a slot that already
-    /// contributed to an aggregate — e.g. the losing racer of a resampled
-    /// slot — or a buffer-level duplicate; all counted by the buffer).
-    pub fn accept_late(&mut self, res: TrainResult) -> bool {
+    /// Vet a straggler result from an ALREADY-CLOSED round. Returns the
+    /// result for the router to buffer on the owning shard, or `None`
+    /// when it must be discarded: unknown client, a slot that already
+    /// contributed to an aggregate (e.g. the losing racer of a resampled
+    /// slot), or an arrival past the global straggler byte cap
+    /// (`shard::LATE_BUFFER_MAX_BYTES`) — metered HERE, before sharding,
+    /// so the eviction decision is identical at every shard count. The
+    /// meter counts vetted arrivals, a deterministic upper bound on what
+    /// the shards actually keep (per-shard dedup may drop a few more).
+    /// Buffer-level dedup stays with the shard's `LateBuffer`.
+    pub fn accept_late(&mut self, res: TrainResult) -> Option<TrainResult> {
         let ci = res.client as usize;
         if ci >= self.cfg.n_clients || self.filled.contains(&(res.stale_from_round, res.slot)) {
-            self.late.dropped += 1;
-            return false;
+            return None;
         }
-        self.late.push(res)
+        let cost = shard::late_payload_bytes(&res);
+        if self.late_bytes + cost > shard::LATE_BUFFER_MAX_BYTES {
+            self.late_evicted += 1;
+            return None;
+        }
+        self.late_bytes += cost;
+        Some(res)
     }
 
     /// Re-dispatch a timed-out slot to a deterministically-chosen
@@ -581,7 +560,7 @@ impl Coordinator {
     ) -> Result<Option<(usize, TrainTask)>> {
         ensure!(rs.phase == Phase::Collect, "resample outside Collect");
         ensure!(slot < rs.n_t, "resample slot {slot} out of range");
-        ensure!(rs.results[slot].is_none(), "resample of a slot that already reported");
+        ensure!(rs.done[slot].is_none(), "resample of a slot that already reported");
         if rs.attempts[slot] >= MAX_REDISPATCH {
             return Ok(None);
         }
@@ -624,18 +603,26 @@ impl Coordinator {
         )))
     }
 
-    /// Phase 4 (Aggregate): fold the collected uplinks strictly in slot
-    /// order (Eq. 2), fold any buffered late uplinks from earlier rounds
-    /// with their staleness discount, advance the global model, record
-    /// telemetry, and evaluate on schedule. Returns the round record plus
-    /// — after a FLoRA merge — the new base every participant must sync
-    /// to.
-    pub fn finish_round(&mut self, mut rs: RoundState) -> Result<(RoundRecord, Option<Vec<f32>>)> {
+    /// Phase 4 (Aggregate): consume the aggregation plane's gathered
+    /// Eq. 2 delta, run the strictly slot-ordered scalar pass (loss,
+    /// weights, k telemetry, FLoRA module stacking), advance the global
+    /// model, record telemetry, and evaluate on schedule. Returns the
+    /// round record plus — after a FLoRA merge — the new base every
+    /// participant must sync to.
+    pub fn finish_round(
+        &mut self,
+        mut rs: RoundState,
+        agg: GatheredAgg,
+    ) -> Result<(RoundRecord, Option<Vec<f32>>)> {
         ensure!(rs.phase == Phase::Aggregate, "finish_round before quorum reached");
         let t = rs.t;
         let lora_total = self.world.session.schema.lora_total;
+        ensure!(
+            agg.delta.len() == lora_total,
+            "gathered delta length {} != lora_total {lora_total}",
+            agg.delta.len()
+        );
         let mut rec = rs.rec;
-        let mut agg = SegmentAggregator::new(lora_total, rs.n_s);
         let mut flora_modules: Vec<(Vec<f32>, f64)> = Vec::new();
         let mut loss_acc = 0.0f64;
         let mut weight_acc = 0.0f64;
@@ -643,62 +630,40 @@ impl Coordinator {
 
         let t1 = Instant::now();
         for slot in 0..rs.n_t {
-            let Some(res) = rs.results[slot].take() else {
+            let Some(done) = rs.done[slot].take() else {
                 continue; // straggler: its uplink folds into a later round
             };
             self.filled.insert((t, slot as u32));
-            let w = res.n_samples as f64;
-            loss_acc += res.mean_loss * w;
+            let w = done.n_samples as f64;
+            loss_acc += done.mean_loss * w;
             weight_acc += w;
-            exec_total += res.exec_s;
-            match res.up {
-                UpPayload::SparseWire(bytes) => {
-                    rec.k_a = res.k_a;
-                    rec.k_b = res.k_b;
-                    let params =
-                        agg.add_wire(res.segment as usize, &bytes, &self.world.kidx, w)?;
-                    rec.up.add(params, bytes.len());
-                }
-                UpPayload::DenseUpdate(update) => {
-                    ensure!(update.len() == lora_total, "dense update length");
-                    let p = self.cfg.method.dense_upload_params(&self.world.session.schema);
-                    rec.up.add(p, dense_bytes(p));
-                    agg.add_dense(0, &update, w);
-                }
-                UpPayload::DenseModule(module) => {
-                    ensure!(module.len() == lora_total, "dense module length");
-                    ensure!(
-                        self.cfg.method.restarts_lora(),
-                        "module upload from a non-restarting method"
-                    );
-                    let p = self.cfg.method.dense_upload_params(&self.world.session.schema);
-                    rec.up.add(p, dense_bytes(p));
-                    flora_modules.push((module, w));
-                }
+            exec_total += done.exec_s;
+            if done.sparse {
+                rec.k_a = done.k_a;
+                rec.k_b = done.k_b;
+            }
+            if let Some(module) = done.module {
+                let p = self.cfg.method.dense_upload_params(&self.world.session.schema);
+                rec.up.add(p, dense_bytes(p));
+                flora_modules.push((module, w));
             }
         }
 
-        // ---- late-uplink fold (quorum rounds; empty under Sync) -------------
-        let ctx = FoldCtx {
-            weights: &self.weights,
-            beta: self.cfg.eco.map_or(EcoConfig::default().beta, |e| e.beta),
-            now_round: t,
-            dense_params: self.cfg.method.dense_upload_params(&self.world.session.schema),
-        };
-        let folded = self.late.fold_into(&mut agg, &self.world.kidx, ctx, &mut rec);
-        self.filled.extend(folded);
+        // ---- aggregation-plane tallies --------------------------------------
+        rec.up.merge(&agg.stats.up);
+        rec.late_folds = agg.stats.late_folds;
+        self.filled.extend(agg.folded.iter().copied());
         // forget aggregates old enough that any racer would fold with a
         // numerically-nil discount anyway
         self.filled.retain(|&(r, _)| r + FILLED_HORIZON >= t);
 
-        // ---- aggregation (Eq. 2) + global advance — same as FedRunner ------
+        // ---- global advance (Eq. 2 delta came gathered from the shards) ----
         let mut base_sync = None;
         if self.cfg.method.restarts_lora() {
             if self.cfg.eco.is_some() {
-                let delta = agg.finish();
                 let mut module = rs.flora_init.take().expect("restart round has flora_init");
-                for i in 0..lora_total {
-                    module[i] += delta[i];
+                for (m, d) in module.iter_mut().zip(&agg.delta) {
+                    *m += *d;
                 }
                 self.world.session.merge_lora(&module, 1.0)?;
             } else {
@@ -711,9 +676,8 @@ impl Coordinator {
             // participants' frozen bases must follow the merge
             base_sync = Some(self.world.session.base_host().to_vec());
         } else {
-            let delta = agg.finish();
-            for i in 0..lora_total {
-                self.global[i] += delta[i];
+            for (g, d) in self.global.iter_mut().zip(&agg.delta) {
+                *g += *d;
             }
         }
         rs.overhead += t1.elapsed().as_secs_f64();
@@ -730,8 +694,16 @@ impl Coordinator {
         rec.cohort = rs.n_t;
         rec.stragglers = rs.n_t - rs.received;
         rec.resampled = rs.attempts.iter().map(|&a| a as usize).sum();
-        rec.orphaned += rs.orphaned;
+        rec.orphaned += rs.orphaned + agg.stats.orphaned;
         rec.quorum_wait_s = rs.quorum_wait_s.unwrap_or(0.0);
+        rec.shards = agg.shards;
+        rec.shard_agg_ms_max = agg.shard_agg_s_max * 1e3;
+        rec.router_queue_max = agg.queue_max;
+        // the shards just drained their buffers (fold_into takes every
+        // entry), so the global admission meter starts the next round at 0
+        rec.late_evicted = std::mem::take(&mut self.late_evicted) + agg.late_evicted;
+        self.late_bytes = 0;
+        rec.seg_uncovered = agg.covered.iter().filter(|&&c| !c).count();
         let snap = sparsity_snapshot(&self.global, &self.world.kinds);
         rec.gini_a = snap.gini_a;
         rec.gini_b = snap.gini_b;

@@ -1,5 +1,7 @@
 //! Cluster deployment of the federated protocol: an actor-style
-//! coordinator/participant architecture over pluggable transports.
+//! coordinator/participant architecture over pluggable transports, with
+//! the server side split into a round-control plane and a sharded
+//! aggregation plane behind a router.
 //!
 //! * [`protocol`] — versioned, checksummed envelopes + typed messages
 //!   (`Hello`, `TrainTask`, `TrainResult`, `BaseSync`, `Shutdown`,
@@ -8,33 +10,44 @@
 //! * [`transport`] — the [`Conn`](transport::Conn) contract with two
 //!   implementations: deterministic in-memory channels (default CLI path,
 //!   tests) and length-prefix-framed TCP (loopback or real network).
-//! * [`coordinator`] — the server-side round state machine
-//!   (sampling → broadcast → collect-until-quorum → aggregate), including
-//!   the [`RoundPolicy`] that decides when a round may close, the
-//!   straggler [`LateBuffer`](coordinator::LateBuffer), and timed-out-slot
-//!   resampling.
+//! * [`control`] — the round-control plane
+//!   (sampling → broadcast → collect-until-quorum → round close),
+//!   including the [`RoundPolicy`] that decides when a round may close
+//!   and timed-out-slot resampling. It owns the global model and the
+//!   evaluation stack but none of the aggregation math.
+//! * [`shard`] — the aggregation plane: N
+//!   [`ShardAggregator`](shard::ShardAggregator)s, each owning a
+//!   contiguous slice of the round-robin segment space plus its slice of
+//!   the straggler [`LateBuffer`](shard::LateBuffer), running Eq. 2 (and
+//!   the Eq. 3 late fold) on its own worker thread.
+//! * [`router`] — dispatches uplink payloads to shards by the segment id
+//!   the v2 envelope header carries, and gathers the shard deltas back
+//!   into one global vector at round close.
 //! * [`participant`] — worker agents, each owning its own `Session` and a
 //!   shard of logical clients, executing tasks concurrently.
 //! * [`netshim`] — optional transport-layer byte meter replaying real
 //!   protocol traffic through the `netsim` discrete-event simulator,
-//!   quorum-aware and optionally heterogeneous
+//!   quorum- and shard-aware, optionally heterogeneous
 //!   ([`SimProfile`](netshim::SimProfile)).
 //!
 //! [`run`] drives a full federated run on this substrate and produces the
 //! same `FedOutcome` as the monolithic `FedRunner` — bitwise, for a fixed
-//! seed, under `RoundPolicy::Sync` or a quorum of 1.0 with no timeouts
-//! (enforced by `tests/integration_cluster.rs`). Under
-//! `RoundPolicy::Quorum` the server stops blocking on stragglers: rounds
-//! close at K-of-N, late uplinks fold into the next round with the Eq. 3
-//! staleness discount, and timed-out slots are re-dispatched to
+//! seed, under `RoundPolicy::Sync` or a quorum of 1.0 with no timeouts,
+//! and for ANY `--shards N` (aggregation order within a segment is
+//! preserved per shard; enforced by `tests/integration_cluster.rs`).
+//! Under `RoundPolicy::Quorum` the server stops blocking on stragglers:
+//! rounds close at K-of-N, late uplinks fold into the next round with the
+//! Eq. 3 staleness discount, and timed-out slots are re-dispatched to
 //! deterministically-chosen replacement clients.
 
 #![warn(missing_docs)]
 
-pub mod coordinator;
+pub mod control;
 pub mod netshim;
 pub mod participant;
 pub mod protocol;
+pub mod router;
+pub mod shard;
 pub mod transport;
 
 use std::time::{Duration, Instant};
@@ -45,9 +58,11 @@ use crate::fed::{FedConfig, FedOutcome};
 use crate::metrics::RunLog;
 use crate::netsim::RoundTiming;
 
-pub use coordinator::{Coordinator, RoundPolicy};
+pub use control::{ControlPlane, Phase, RoundPolicy, RoundState};
 pub use netshim::SimProfile;
 pub use participant::Participant;
+pub use router::{GatheredAgg, RoutedAdd, Router, ShardMap};
+pub use shard::{AggStats, FoldCtx, LateBuffer, ShardAggregator, LATE_BUFFER_MAX_BYTES};
 pub use transport::ClusterMode;
 
 use protocol::Message;
@@ -72,6 +87,10 @@ pub struct ClusterOptions {
     pub mode: ClusterMode,
     /// Worker thread count; default min(clients_per_round, CPU threads).
     pub workers: Option<usize>,
+    /// Aggregation-plane shard count (each runs on its own thread);
+    /// 1 = the single-aggregator reference path. Any value is
+    /// bitwise-identical to 1 — more shards only buy wall-clock.
+    pub shards: usize,
     /// Replay transport traffic through the network simulator.
     pub netsim: Option<SimProfile>,
     /// When a round may close (sync barrier vs K-of-N quorum).
@@ -85,6 +104,7 @@ impl Default for ClusterOptions {
         ClusterOptions {
             mode: ClusterMode::Mem,
             workers: None,
+            shards: 1,
             netsim: None,
             policy: RoundPolicy::Sync,
             fault: None,
@@ -100,16 +120,20 @@ pub struct ClusterOutcome {
     pub timings: Vec<RoundTiming>,
     /// Worker threads the run used.
     pub workers: usize,
+    /// Aggregation-plane shard threads the run used.
+    pub shards: usize,
     /// Transport name ("mem" or "tcp").
     pub transport: &'static str,
 }
 
 /// Run a full federated job over the cluster: spawn `n_workers`
-/// participant threads, drive the coordinator state machine round by
-/// round, and assemble the outcome. Equivalent to
-/// `FedRunner::new(cfg)?.run()` — bitwise, for a fixed seed, when no
-/// round closes early — but with participants executing concurrently and
-/// every payload crossing a transport boundary.
+/// participant threads and `shards` aggregation-shard threads, drive the
+/// control plane's state machine round by round — routing every accepted
+/// uplink payload to the shard owning its segment — and assemble the
+/// outcome. Equivalent to `FedRunner::new(cfg)?.run()` — bitwise, for a
+/// fixed seed, when no round closes early, at ANY shard count — but with
+/// participants and shards executing concurrently and every payload
+/// crossing a transport boundary.
 pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
     let n_t = cfg.clients_per_round.min(cfg.n_clients).max(1);
     let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -117,6 +141,7 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         .workers
         .unwrap_or_else(|| n_t.min(hw))
         .clamp(1, cfg.n_clients.max(1));
+    let n_shards = opts.shards.max(1);
 
     let (coord_conns, worker_conns) = transport::establish(opts.mode, n_workers)?;
 
@@ -175,9 +200,18 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         }
     }
 
-    // The coordinator builds its own world while workers build theirs.
-    let mut coordinator = Coordinator::new(cfg, opts.policy)?;
-    let label = coordinator.cfg.run_label();
+    // The control plane builds its own world while workers build theirs;
+    // the router then spins up the aggregation shards around its geometry.
+    let mut control = ControlPlane::new(cfg, opts.policy)?;
+    let mut router = Router::new(
+        control.lora_total(),
+        n_shards,
+        control.client_weights(),
+        control.kind_index(),
+        control.fold_beta(),
+        control.dense_upload_params(),
+    )?;
+    let label = control.cfg.run_label();
     let mut log = RunLog::new(label.clone());
     let mut reached: Option<usize> = None;
     let mut timings = Vec::new();
@@ -186,22 +220,24 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         txs[w].send(&msg.to_envelope())
     };
 
-    for t in 0..coordinator.cfg.rounds {
+    for t in 0..control.cfg.rounds {
         // Sampling + Broadcast
-        let (mut rs, tasks) = coordinator.begin_round(t as u64, n_workers)?;
+        let (mut rs, tasks) = control.begin_round(t as u64, n_workers)?;
+        router.begin_round(t as u64, rs.n_s)?;
         for (w, task) in tasks {
             send_to(&mut txs, tx_of_worker[w], &Message::TrainTask(task))
                 .with_context(|| format!("cluster: dispatch to worker {w}"))?;
         }
         // Collect: every result is routed — current round into the round
-        // state (closing it at quorum), earlier rounds into the late
+        // state (closing it at quorum) with its payload forwarded to the
+        // owning aggregation shard, earlier rounds into that shard's late
         // buffer. Under a Quorum policy the wait is bounded by the slot
         // timeout; each expiry re-dispatches the outstanding slots to
-        // replacement clients (up to coordinator::MAX_REDISPATCH waves
-        // per slot), then keeps waiting — a slot that went quiet forever
+        // replacement clients (up to control::MAX_REDISPATCH waves per
+        // slot), then keeps waiting — a slot that went quiet forever
         // surfaces as a disconnect, not a hang.
         let mut wave_deadline = opts.policy.slot_timeout().map(|d| Instant::now() + d);
-        while rs.phase == coordinator::Phase::Collect {
+        while rs.phase == Phase::Collect {
             let received = match wave_deadline {
                 None => match results_rx.recv() {
                     Ok(x) => Some(x),
@@ -222,10 +258,14 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
                 Some((_idx, env)) => match Message::from_envelope(&env)? {
                     Message::TrainResult(res) => {
                         if res.round == rs.t {
-                            coordinator.accept(&mut rs, res)?;
+                            if let Some(add) = control.accept(&mut rs, res)? {
+                                router.route(add)?;
+                            }
                         } else if res.round < rs.t {
                             // straggler from a closed quorum round
-                            coordinator.accept_late(res);
+                            if let Some(fwd) = control.accept_late(res) {
+                                router.route_late(fwd)?;
+                            }
                         } else {
                             bail!("cluster: result for future round {}", res.round);
                         }
@@ -236,9 +276,7 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
                 None => {
                     // wave timeout: re-dispatch every outstanding slot
                     for slot in rs.unfilled_slots() {
-                        if let Some((w, task)) =
-                            coordinator.resample_slot(&mut rs, slot, n_workers)?
-                        {
+                        if let Some((w, task)) = control.resample_slot(&mut rs, slot, n_workers)? {
                             send_to(&mut txs, tx_of_worker[w], &Message::TrainTask(task))
                                 .with_context(|| format!("cluster: re-dispatch slot {slot}"))?;
                         }
@@ -248,23 +286,31 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
                 }
             }
         }
-        coordinator.ensure_collected(&rs)?;
+        control.ensure_collected(&rs)?;
         let compute_by_slot = rs.exec_by_slot();
         let quorum = rs.quorum;
-        // Aggregate (incl. the staleness-discounted late-uplink fold)
-        let (rec, base_sync) = coordinator.finish_round(rs)?;
+        // shards beyond the segment count own nothing and add no
+        // parallelism — the netsim agg model must not credit them
+        let agg_parallelism = n_shards.min(rs.n_s.max(1));
+        // Aggregate: close the shards (slot-ordered accumulate + the
+        // staleness-discounted late fold, in parallel across shards),
+        // gather the Eq. 2 delta, and let the control plane finish.
+        let gathered = router.close_round(t as u64)?;
+        let (rec, base_sync) = control.finish_round(rs, gathered)?;
         if let Some(base) = base_sync {
             for w in 0..n_workers {
                 send_to(&mut txs, tx_of_worker[w], &Message::BaseSync { base: base.clone() })?;
             }
         }
         if let (Some(m), Some(profile)) = (&meter, &opts.netsim) {
-            timings.push(m.round_timing(t as u64, &compute_by_slot, profile, quorum)?);
+            timings.push(
+                m.round_timing(t as u64, &compute_by_slot, profile, quorum, agg_parallelism)?,
+            );
         }
-        if coordinator.cfg.verbose {
+        if control.cfg.verbose {
             let acc = rec.eval_acc;
             eprintln!(
-                "[{label}@{}x{n_workers}] round {t}: loss {:.4} acc {} upM {:.3} downM {:.3} k=({:.2},{:.2}) stragglers {} late {}",
+                "[{label}@{}x{n_workers}s{n_shards}] round {t}: loss {:.4} acc {} upM {:.3} downM {:.3} k=({:.2},{:.2}) stragglers {} late {} aggMs {:.2}",
                 opts.mode.name(),
                 rec.global_loss,
                 acc.map_or("-".into(), |a| format!("{a:.3}")),
@@ -274,11 +320,12 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
                 rec.k_b,
                 rec.stragglers,
                 rec.late_folds,
+                rec.shard_agg_ms_max,
             );
         }
         let acc = rec.eval_acc;
         log.push(rec);
-        if let (Some(target), Some(a)) = (coordinator.cfg.target_acc, acc) {
+        if let (Some(target), Some(a)) = (control.cfg.target_acc, acc) {
             if a >= target {
                 reached = Some(t);
                 break;
@@ -286,9 +333,9 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         }
     }
 
-    let outcome = coordinator.outcome(log, reached)?;
+    let outcome = control.outcome(log, reached)?;
 
-    // Orderly shutdown: tell every worker, then join.
+    // Orderly shutdown: tell every worker, then join; same for shards.
     for w in 0..n_workers {
         let _ = send_to(&mut txs, tx_of_worker[w], &Message::Shutdown);
     }
@@ -305,11 +352,13 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
     for h in reader_handles {
         let _ = h.join();
     }
+    router.shutdown()?;
 
     Ok(ClusterOutcome {
         fed: outcome,
         timings,
         workers: n_workers,
+        shards: n_shards,
         transport: opts.mode.name(),
     })
 }

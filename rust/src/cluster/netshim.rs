@@ -23,6 +23,12 @@ use super::transport::{ConnRx, ConnTx};
 /// links are `slow_factor`× slower than the scenario's. Heterogeneity is
 /// what makes quorum rounds measurably faster than synchronous ones: the
 /// slow tail stops gating the round once K of N uploads suffice.
+///
+/// `agg_mbps` optionally models the server-side aggregation stage: the
+/// round's uplink bytes are processed at that rate, divided by the shard
+/// count — shards own disjoint segment slices, so their Eq. 2 work is
+/// embarrassingly parallel. 0 leaves aggregation out of the simulated
+/// round time (the pre-sharding behavior).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimProfile {
     /// Base access-link scenario (every non-slow slot).
@@ -31,12 +37,16 @@ pub struct SimProfile {
     pub slow_frac: f64,
     /// Bandwidth divisor for slow slots (1.0 = homogeneous fleet).
     pub slow_factor: f64,
+    /// Server aggregation processing rate over the round's uplink bytes,
+    /// Mbps (0 = aggregation not modeled).
+    pub agg_mbps: f64,
 }
 
 impl SimProfile {
-    /// A homogeneous fleet on `scenario` (no slow tail).
+    /// A homogeneous fleet on `scenario` (no slow tail, no modeled
+    /// aggregation stage).
     pub fn uniform(scenario: Scenario) -> SimProfile {
-        SimProfile { scenario, slow_frac: 0.0, slow_factor: 1.0 }
+        SimProfile { scenario, slow_frac: 0.0, slow_factor: 1.0, agg_mbps: 0.0 }
     }
 
     /// Per-slot link specs for a round of `n` slots: the FIRST
@@ -159,13 +169,18 @@ impl Meter {
     /// excluded from the replay — their bytes surface in the round that
     /// eventually folds them, not here; `quorum` is the number of uploads
     /// that closed the round (pass `compute_s.len()` for synchronous
-    /// rounds).
+    /// rounds). When `profile.agg_mbps > 0`, a server aggregation stage
+    /// over the replayed uplink bytes is appended to the round time,
+    /// divided across `shards` parallel segment shards — pass the
+    /// EFFECTIVE width `min(configured shards, n_s)`, since shards that
+    /// own no segment contribute no parallelism.
     pub fn round_timing(
         &self,
         round: u64,
         compute_s: &[f64],
         profile: &SimProfile,
         quorum: usize,
+        shards: usize,
     ) -> Result<RoundTiming> {
         let n = compute_s.len();
         let mut dl = vec![None; n];
@@ -197,7 +212,15 @@ impl Meter {
         anyhow::ensure!(!plans.is_empty(), "netsim shim: no traffic recorded for round {round}");
         let mut sim = NetSim::heterogeneous(&specs);
         let clients: Vec<usize> = (0..plans.len()).collect();
-        Ok(sim.run_round_quorum(&clients, &plans, quorum.clamp(1, plans.len())))
+        let mut timing = sim.run_round_quorum(&clients, &plans, quorum.clamp(1, plans.len()));
+        if profile.agg_mbps > 0.0 {
+            let ul_total: usize = plans.iter().map(|p| p.ul_bytes).sum();
+            let agg_s =
+                (ul_total as f64 * 8.0 / 1e6) / profile.agg_mbps / shards.max(1) as f64;
+            timing.agg_s = agg_s;
+            timing.round_s += agg_s;
+        }
+        Ok(timing)
     }
 }
 
@@ -281,18 +304,19 @@ mod tests {
 
         let scenario = Scenario { name: "test", ul_mbps: 1.0, dl_mbps: 5.0, latency_s: 0.05 };
         let profile = SimProfile::uniform(scenario);
-        let timing = meter.round_timing(7, &[0.5, 0.5, 0.5], &profile, 3).unwrap();
+        let timing = meter.round_timing(7, &[0.5, 0.5, 0.5], &profile, 3, 1).unwrap();
         assert!(timing.round_s > 0.5, "{timing:?}");
         assert!((timing.compute_s - 0.5).abs() < 1e-12);
         assert!(timing.comm_s > 0.0);
+        assert_eq!(timing.agg_s, 0.0, "aggregation not modeled by default");
         // a round with no recorded traffic is an error, not a zero timing
-        assert!(meter.round_timing(9, &[0.5], &profile, 1).is_err());
+        assert!(meter.round_timing(9, &[0.5], &profile, 1, 1).is_err());
 
         // heterogeneous links: a 2-of-3 quorum closes on the fast slots
         // and must beat the synchronous round that waits for the slow one
-        let hetero = SimProfile { scenario, slow_frac: 0.3, slow_factor: 10.0 }; // ceil(0.9) = 1 slow slot
-        let t_sync = meter.round_timing(7, &[0.5, 0.5, 0.5], &hetero, 3).unwrap();
-        let t_quorum = meter.round_timing(7, &[0.5, 0.5, 0.5], &hetero, 2).unwrap();
+        let hetero = SimProfile { scenario, slow_frac: 0.3, slow_factor: 10.0, agg_mbps: 0.0 }; // ceil(0.9) = 1 slow slot
+        let t_sync = meter.round_timing(7, &[0.5, 0.5, 0.5], &hetero, 3, 1).unwrap();
+        let t_quorum = meter.round_timing(7, &[0.5, 0.5, 0.5], &hetero, 2, 1).unwrap();
         assert!(
             t_quorum.round_s < t_sync.round_s,
             "quorum {} !< sync {}",
@@ -302,9 +326,50 @@ mod tests {
     }
 
     #[test]
+    fn modeled_aggregation_shrinks_with_shard_count() {
+        // replay the same round with a modeled aggregation stage: N
+        // shards divide the server-side share by N, deterministically
+        let (coord, work) = establish(ClusterMode::Mem, 1).unwrap();
+        let mut worker = work.into_iter().next().unwrap();
+        let peer = std::thread::spawn(move || {
+            for _ in 0..2 {
+                let env = worker.recv().unwrap();
+                let reply = Envelope::new(
+                    MsgKind::TrainResult,
+                    env.round,
+                    env.segment,
+                    1,
+                    env.payload[0..4].iter().copied().chain([0xCD; 96]).collect(),
+                );
+                worker.send(&reply).unwrap();
+            }
+        });
+        let meter = Meter::new();
+        let (tx, rx) = coord.into_iter().next().unwrap().split().unwrap();
+        let mut tx = meter.wrap_tx(tx);
+        let mut rx = meter.wrap_rx(rx);
+        for slot in 0..2u32 {
+            tx.send(&Envelope::new(MsgKind::TrainTask, 3, 0, 0, slot_payload(slot, 50))).unwrap();
+        }
+        for _ in 0..2 {
+            rx.recv().unwrap();
+        }
+        peer.join().unwrap();
+
+        let scenario = Scenario { name: "test", ul_mbps: 1.0, dl_mbps: 5.0, latency_s: 0.05 };
+        let profile = SimProfile { scenario, slow_frac: 0.0, slow_factor: 1.0, agg_mbps: 0.001 };
+        let one = meter.round_timing(3, &[0.1, 0.1], &profile, 2, 1).unwrap();
+        let four = meter.round_timing(3, &[0.1, 0.1], &profile, 2, 4).unwrap();
+        assert!(one.agg_s > 0.0, "{one:?}");
+        assert!((four.agg_s - one.agg_s / 4.0).abs() < 1e-12, "4 shards quarter the agg share");
+        assert!(four.round_s < one.round_s, "shard-parallel agg shortens the simulated round");
+        assert_eq!(one.comm_s, four.comm_s, "link time is unaffected by server sharding");
+    }
+
+    #[test]
     fn slot_links_put_the_slow_tail_first() {
         let scenario = Scenario { name: "test", ul_mbps: 2.0, dl_mbps: 10.0, latency_s: 0.05 };
-        let p = SimProfile { scenario, slow_frac: 0.25, slow_factor: 4.0 };
+        let p = SimProfile { scenario, slow_frac: 0.25, slow_factor: 4.0, agg_mbps: 0.0 };
         let links = p.slot_links(4);
         assert_eq!(links.len(), 4);
         assert!((links[0].ul_mbps - 0.5).abs() < 1e-12);

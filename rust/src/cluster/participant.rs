@@ -10,6 +10,11 @@
 //! independent of worker count and scheduling order. That is what lets
 //! participants run concurrently while staying bitwise-parity with the
 //! monolithic `FedRunner`.
+//!
+//! Participants are oblivious to server-side aggregation sharding: the
+//! segment id they echo into the result header (`TrainTask::segment`) is
+//! all the router needs to pick a shard, so `--shards N` never changes
+//! anything on this side of the transport.
 
 use std::collections::HashMap;
 

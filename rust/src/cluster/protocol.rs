@@ -69,7 +69,10 @@ pub struct Envelope {
     pub kind: MsgKind,
     /// Federated round this message belongs to (0 for control messages).
     pub round: u64,
-    /// Round-robin segment id (task/result messages; 0 otherwise).
+    /// Round-robin segment id (task/result messages; 0 otherwise). Living
+    /// in the fixed header — not the payload — is what lets the server's
+    /// router pick a result's aggregation shard without decoding the
+    /// payload body.
     pub segment: u32,
     /// FedAvg weight n_i (results; 0 otherwise).
     pub sample_count: u32,

@@ -1,0 +1,362 @@
+//! The router in front of the sharded aggregation plane.
+//!
+//! Uplink results are dispatched to shards by the segment id the v2
+//! envelope header already carries (`protocol::Envelope::segment`):
+//! the segment space `[0, n_s)` is partitioned into `shards` contiguous,
+//! near-equal slices ([`ShardMap`]), one shard worker thread each. During
+//! the collect phase the router forwards payloads as they arrive —
+//! shards decode concurrently with the control plane's wait — and at
+//! round close it gathers every shard's delta slice back into one
+//! global-length delta plus merged tallies ([`GatheredAgg`]).
+//!
+//! The router never touches the model math: order-sensitive aggregation
+//! lives entirely inside each shard (slot order within a segment), so
+//! gather order only affects commutative bookkeeping.
+
+use std::sync::atomic::{AtomicIsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::compress::KindIndex;
+
+use super::protocol::TrainResult;
+use super::shard::{run_shard, AggStats, Payload, ShardMsg, ShardReport};
+
+/// Contiguous near-equal partition of the segment space `[0, n_s)` into
+/// `shards` slices (the remainder spread over the first slices, same rule
+/// as `model::segment_ranges`). Slices may be empty when `shards > n_s`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardMap {
+    n_s: usize,
+    shards: usize,
+}
+
+impl ShardMap {
+    /// Partition `n_s` segments across `shards` aggregators.
+    pub fn new(n_s: usize, shards: usize) -> ShardMap {
+        assert!(n_s >= 1 && shards >= 1, "shard map needs n_s >= 1 and shards >= 1");
+        ShardMap { n_s, shards }
+    }
+
+    /// Shard count (including empty shards).
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    /// Segment count being partitioned.
+    pub fn n_segments(&self) -> usize {
+        self.n_s
+    }
+
+    /// Global segment range `[lo, hi)` owned by `shard`.
+    pub fn range(&self, shard: usize) -> (usize, usize) {
+        assert!(shard < self.shards);
+        let base = self.n_s / self.shards;
+        let rem = self.n_s % self.shards;
+        let lo = shard * base + shard.min(rem);
+        let hi = lo + base + usize::from(shard < rem);
+        (lo, hi)
+    }
+
+    /// The shard owning global segment `seg`. Out-of-range segments
+    /// (possible on malformed or stale late uplinks) map to shard 0,
+    /// whose fold will orphan them — deterministic, never a panic.
+    pub fn shard_of(&self, seg: usize) -> usize {
+        if seg >= self.n_s {
+            return 0;
+        }
+        let base = self.n_s / self.shards;
+        let rem = self.n_s % self.shards;
+        let fat = rem * (base + 1); // segments living on the (base+1)-sized shards
+        if seg < fat {
+            seg / (base + 1)
+        } else {
+            rem + (seg - fat) / base
+        }
+    }
+}
+
+/// One on-time contribution the control plane accepted and wants routed
+/// (produced by `control::ControlPlane::accept`).
+#[derive(Debug)]
+pub struct RoutedAdd {
+    /// Cohort slot (per-segment accumulation order key).
+    pub slot: u32,
+    /// Global round-robin segment id (from the v2 envelope header).
+    pub segment: usize,
+    /// FedAvg weight n_i.
+    pub weight: f64,
+    /// The uplink payload body.
+    pub payload: Payload,
+}
+
+/// Everything the aggregation plane hands the control plane at round
+/// close: the global delta plus merged tallies and plane telemetry.
+pub struct GatheredAgg {
+    /// Global-length weighted-average delta (Eq. 2), zeros where no
+    /// segment contribution landed.
+    pub delta: Vec<f32>,
+    /// Merged per-shard tallies (comm accounting, folds, orphans).
+    pub stats: AggStats,
+    /// (origin round, slot) identities that late-folded this round.
+    pub folded: Vec<(u64, u32)>,
+    /// Per global segment: did it receive at least one contribution?
+    pub covered: Vec<bool>,
+    /// Max wall seconds any one shard spent decoding + accumulating.
+    pub shard_agg_s_max: f64,
+    /// Max router→shard queue backlog observed during the round.
+    pub queue_max: usize,
+    /// Late arrivals evicted by the per-shard byte-cap backstop this
+    /// round (the control plane's global meter adds its own count).
+    pub late_evicted: usize,
+    /// Shard count that produced this aggregate.
+    pub shards: usize,
+}
+
+/// Router + shard-thread pool. One per cluster run; geometry can change
+/// per round (it never does in practice — `n_s` is fixed by the config —
+/// but the contract allows it).
+pub struct Router {
+    map: ShardMap,
+    txs: Vec<mpsc::Sender<ShardMsg>>,
+    reports_rx: mpsc::Receiver<ShardReport>,
+    handles: Vec<JoinHandle<()>>,
+    depth: Arc<AtomicIsize>,
+    queue_max: usize,
+    total: usize,
+    beta: f64,
+    dense_params: usize,
+}
+
+impl Router {
+    /// Spawn `shards` shard worker threads over a `total`-parameter
+    /// vector. `weights` are the per-client FedAvg weights (late-fold
+    /// input), `beta` the Eq. 3 staleness decay, `dense_params` the
+    /// dense-uplink parameter charge.
+    pub fn new(
+        total: usize,
+        shards: usize,
+        weights: Arc<Vec<f64>>,
+        kidx: Arc<KindIndex>,
+        beta: f64,
+        dense_params: usize,
+    ) -> Result<Router> {
+        ensure!(shards >= 1, "router needs at least one shard");
+        let depth = Arc::new(AtomicIsize::new(0));
+        let (reports_tx, reports_rx) = mpsc::channel();
+        let mut txs = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for id in 0..shards {
+            let (tx, rx) = mpsc::channel();
+            let (w, k, rep, d) =
+                (weights.clone(), kidx.clone(), reports_tx.clone(), depth.clone());
+            let handle = std::thread::Builder::new()
+                .name(format!("ecolora-shard-{id}"))
+                .spawn(move || run_shard(id, total, w, k, rx, rep, d))?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        Ok(Router {
+            map: ShardMap::new(1, shards),
+            txs,
+            reports_rx,
+            handles,
+            depth,
+            queue_max: 0,
+            total,
+            beta,
+            dense_params,
+        })
+    }
+
+    /// Shard count this router fans out to.
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Open round `t` with `n_s` round-robin segments: rebuild the shard
+    /// map and tell every shard which slice it owns.
+    pub fn begin_round(&mut self, t: u64, n_s: usize) -> Result<()> {
+        self.map = ShardMap::new(n_s.max(1), self.txs.len());
+        self.queue_max = 0;
+        for (shard, tx) in self.txs.iter().enumerate() {
+            let (seg_lo, seg_hi) = self.map.range(shard);
+            if tx.send(ShardMsg::Begin { round: t, n_s: self.map.n_segments(), seg_lo, seg_hi }).is_err()
+            {
+                bail!("shard {shard} died before round {t}");
+            }
+        }
+        Ok(())
+    }
+
+    fn bump_depth(&mut self) {
+        let now = self.depth.fetch_add(1, Ordering::Relaxed) + 1;
+        self.queue_max = self.queue_max.max(now.max(0) as usize);
+    }
+
+    /// Forward one accepted on-time contribution to its owning shard.
+    pub fn route(&mut self, add: RoutedAdd) -> Result<()> {
+        let shard = self.map.shard_of(add.segment);
+        self.bump_depth();
+        if self.txs[shard]
+            .send(ShardMsg::Add {
+                slot: add.slot,
+                seg: add.segment,
+                w: add.weight,
+                payload: add.payload,
+            })
+            .is_err()
+        {
+            bail!("shard {shard} died mid-round");
+        }
+        Ok(())
+    }
+
+    /// Forward one straggler from an earlier round to the shard owning
+    /// its segment (under the CURRENT map; `n_s` is fixed in practice).
+    pub fn route_late(&mut self, res: TrainResult) -> Result<()> {
+        let shard = self.map.shard_of(res.segment as usize);
+        self.bump_depth();
+        if self.txs[shard].send(ShardMsg::Late(Box::new(res))).is_err() {
+            bail!("shard {shard} died mid-round");
+        }
+        Ok(())
+    }
+
+    /// Close round `t`: every shard folds in slot order, late-folds its
+    /// straggler slice, and reports; the router scatters the shard deltas
+    /// into one global vector and merges the tallies. Fails loudly if any
+    /// shard poisoned the round (decode error, geometry mismatch).
+    pub fn close_round(&mut self, t: u64) -> Result<GatheredAgg> {
+        for (shard, tx) in self.txs.iter().enumerate() {
+            let msg = ShardMsg::Close {
+                beta: self.beta,
+                now_round: t,
+                dense_params: self.dense_params,
+            };
+            if tx.send(msg).is_err() {
+                bail!("shard {shard} died before close of round {t}");
+            }
+        }
+        let mut reports: Vec<Option<ShardReport>> = (0..self.txs.len()).map(|_| None).collect();
+        for _ in 0..self.txs.len() {
+            let rep = self
+                .reports_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("aggregation plane died during round {t} close"))?;
+            let id = rep.shard;
+            ensure!(id < reports.len() && reports[id].is_none(), "duplicate report from shard {id}");
+            reports[id] = Some(rep);
+        }
+
+        let mut out = GatheredAgg {
+            delta: vec![0.0f32; self.total],
+            stats: AggStats::default(),
+            folded: Vec::new(),
+            covered: Vec::new(),
+            shard_agg_s_max: 0.0,
+            queue_max: self.queue_max,
+            late_evicted: 0,
+            shards: self.txs.len(),
+        };
+        // gather in shard-id order: deltas scatter to disjoint spans and
+        // the tallies are commutative, so this order is cosmetic
+        for rep in reports.into_iter().map(|r| r.expect("filled above")) {
+            if let Some(e) = rep.error {
+                bail!("round {t}: {e}");
+            }
+            out.delta[rep.base..rep.base + rep.delta.len()].copy_from_slice(&rep.delta);
+            out.stats.merge(&rep.stats);
+            out.folded.extend(rep.folded);
+            out.covered.extend(rep.covered);
+            out.shard_agg_s_max = out.shard_agg_s_max.max(rep.agg_s);
+            out.late_evicted += rep.late_evicted;
+        }
+        Ok(out)
+    }
+
+    /// Orderly end of run: stop every shard thread and join it.
+    pub fn shutdown(self) -> Result<()> {
+        for tx in &self.txs {
+            let _ = tx.send(ShardMsg::Shutdown);
+        }
+        drop(self.txs);
+        for (id, h) in self.handles.into_iter().enumerate() {
+            if h.join().is_err() {
+                bail!("shard thread {id} panicked");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::propcheck;
+
+    #[test]
+    fn shard_map_partitions_exactly() {
+        // property: for random (n_s, shards) every segment is owned by
+        // exactly one shard, ranges are contiguous, and shard_of agrees
+        // with range()
+        propcheck(300, |rng| {
+            let n_s = rng.below(40) + 1;
+            let shards = rng.below(12) + 1;
+            let map = ShardMap::new(n_s, shards);
+            let mut owner = vec![usize::MAX; n_s];
+            let mut expect_lo = 0usize;
+            for s in 0..shards {
+                let (lo, hi) = map.range(s);
+                assert_eq!(lo, expect_lo, "no gap/overlap between shards");
+                assert!(hi >= lo && hi <= n_s);
+                for seg in lo..hi {
+                    assert_eq!(owner[seg], usize::MAX, "segment {seg} owned twice");
+                    owner[seg] = s;
+                    assert_eq!(map.shard_of(seg), s, "shard_of disagrees with range");
+                }
+                expect_lo = hi;
+            }
+            assert_eq!(expect_lo, n_s, "every segment owned");
+            assert!(owner.iter().all(|&o| o != usize::MAX));
+            // near-equal: sizes differ by at most one
+            let sizes: Vec<usize> = (0..shards).map(|s| {
+                let (lo, hi) = map.range(s);
+                hi - lo
+            }).collect();
+            let min = sizes.iter().min().unwrap();
+            let max = sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "near-equal shard sizes: {sizes:?}");
+        });
+    }
+
+    #[test]
+    fn out_of_range_segment_routes_to_shard_zero() {
+        let map = ShardMap::new(4, 2);
+        assert_eq!(map.shard_of(9), 0);
+    }
+
+    #[test]
+    fn more_shards_than_segments_leaves_trailing_shards_empty() {
+        let map = ShardMap::new(2, 5);
+        assert_eq!(map.range(0), (0, 1));
+        assert_eq!(map.range(1), (1, 2));
+        for s in 2..5 {
+            let (lo, hi) = map.range(s);
+            assert_eq!(lo, hi, "shard {s} must own nothing");
+        }
+        assert_eq!(map.shard_of(0), 0);
+        assert_eq!(map.shard_of(1), 1);
+    }
+
+    #[test]
+    fn single_shard_owns_everything() {
+        let map = ShardMap::new(7, 1);
+        assert_eq!(map.range(0), (0, 7));
+        for seg in 0..7 {
+            assert_eq!(map.shard_of(seg), 0);
+        }
+    }
+}

@@ -1,0 +1,582 @@
+//! The sharded aggregation plane: N [`ShardAggregator`]s, each owning a
+//! contiguous slice of the round-robin segment space, running the Eq. 2
+//! merge (and the Eq. 3 staleness-discounted late fold) off the control
+//! plane's thread.
+//!
+//! A shard receives uplink payloads as they arrive (any order), decodes
+//! them EAGERLY — overlap with the network wait is where sharding buys
+//! wall-clock — but ACCUMULATES them only at round close, strictly in
+//! slot order within each segment. Since every flat index belongs to
+//! exactly one segment and every segment to exactly one shard, the
+//! per-index floating-point reduction of an N-shard round is the same
+//! sequence of operations as the single-shard (and monolithic) one:
+//! `--shards N` is bitwise-identical to `--shards 1` by construction,
+//! and `tests/integration_cluster.rs` enforces it.
+//!
+//! Each shard also owns its slice of the straggler [`LateBuffer`]: a late
+//! uplink covers one segment, so buffering it on the owning shard keeps
+//! the fold local. The buffer is byte-capped ([`LATE_BUFFER_MAX_BYTES`])
+//! so a pathological slow tail cannot grow server memory without bound;
+//! evictions are counted and surfaced in the round metrics.
+
+use std::sync::atomic::{AtomicIsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::compress::{dense_bytes, wire, KindIndex, SparseVec};
+use crate::fed::server::SegmentAggregator;
+use crate::fed::staleness;
+use crate::metrics::CommTotals;
+
+use super::protocol::{TrainResult, UpPayload};
+
+/// Cap on buffered straggler payload bytes (sparse wire bytes, or
+/// 4 bytes/param for dense). 64 MiB comfortably buffers thousands of
+/// compressed LoRA segment uplinks; past it the slow tail is dropping
+/// results faster than rounds can fold them, and buffering more would
+/// only defer the memory blow-up — new arrivals are evicted (counted in
+/// the round metrics) rather than admitted.
+///
+/// The AUTHORITATIVE admission check runs in the control plane
+/// (`control::ControlPlane::accept_late`) against this cap as a GLOBAL
+/// budget, BEFORE the entry is routed to a shard — an eviction decision
+/// made there depends only on arrival order, never on how the segment
+/// space is sharded, which keeps `--shards N` bitwise-identical to
+/// `--shards 1` even when the cap binds. Each shard's [`LateBuffer`]
+/// enforces the same cap per shard purely as a memory-safety backstop
+/// (per-shard bytes ≤ admitted bytes ≤ cap, so it cannot fire first).
+pub const LATE_BUFFER_MAX_BYTES: usize = 64 << 20;
+
+/// Byte cost a straggler payload is charged against
+/// [`LATE_BUFFER_MAX_BYTES`] (shared by the control plane's global
+/// admission meter and the per-shard buffer's backstop).
+pub fn late_payload_bytes(res: &TrainResult) -> usize {
+    match &res.up {
+        UpPayload::SparseWire(b) => b.len(),
+        UpPayload::DenseUpdate(v) | UpPayload::DenseModule(v) => 4 * v.len(),
+    }
+}
+
+/// Everything [`LateBuffer::fold_into`] needs from the folding round.
+#[derive(Debug, Clone, Copy)]
+pub struct FoldCtx<'a> {
+    /// Per-client FedAvg weights (the coordinator's partition sizes).
+    pub weights: &'a [f64],
+    /// Staleness decay β (Eq. 3).
+    pub beta: f64,
+    /// The round whose aggregate absorbs the fold.
+    pub now_round: u64,
+    /// `Method::dense_upload_params` — the parameter count an ON-TIME
+    /// dense uplink is charged, so a late arrival of the identical
+    /// payload costs the same in comm telemetry.
+    pub dense_params: usize,
+}
+
+/// Aggregation-side tallies a shard accumulates over one round (merged
+/// across shards by the router at round close).
+#[derive(Debug, Clone, Default)]
+pub struct AggStats {
+    /// Uplink comm accounting for everything folded into the aggregate
+    /// (on-time wire/dense uploads plus late folds).
+    pub up: CommTotals,
+    /// Buffered late uplinks from earlier rounds folded into this round.
+    pub late_folds: usize,
+    /// Late entries discarded instead of folded (geometry mismatch,
+    /// non-positive weight).
+    pub orphaned: usize,
+}
+
+impl AggStats {
+    /// Merge another shard's tallies (order-independent: counts and ints).
+    pub fn merge(&mut self, other: &AggStats) {
+        self.up.merge(&other.up);
+        self.late_folds += other.late_folds;
+        self.orphaned += other.orphaned;
+    }
+}
+
+/// Buffer of straggler uplinks that arrived after their round closed,
+/// awaiting the next round's staleness-discounted fold.
+///
+/// Arrival order carries no meaning: entries are deduped by
+/// (origin round, slot) — first arrival wins — and folded in
+/// (origin round, slot) order, so the resulting aggregate is a pure
+/// function of the SET of buffered results (property-tested in
+/// `tests/integration_cluster.rs`). Total buffered payload bytes are
+/// capped at [`LATE_BUFFER_MAX_BYTES`]; arrivals past the cap are
+/// rejected and counted in [`LateBuffer::evicted`].
+#[derive(Default)]
+pub struct LateBuffer {
+    entries: Vec<TrainResult>,
+    bytes: usize,
+    /// Results discarded instead of buffered/folded: duplicates of an
+    /// already buffered (round, slot), FLoRA module uploads (their
+    /// restart base has already advanced), or geometry mismatches against
+    /// the folding round's aggregator.
+    pub dropped: usize,
+    /// Results rejected by the [`LATE_BUFFER_MAX_BYTES`] byte cap.
+    pub evicted: usize,
+}
+
+impl LateBuffer {
+    /// Fresh empty buffer.
+    pub fn new() -> LateBuffer {
+        LateBuffer::default()
+    }
+
+    /// Buffered entry count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is buffered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Payload bytes currently buffered (what the cap meters).
+    pub fn buffered_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Buffer one late result; returns true when it was kept. FLoRA
+    /// module uploads are rejected outright — a restart module only makes
+    /// sense against the base it restarted from, which a later round has
+    /// already merged past. Arrivals that would push the buffered payload
+    /// bytes past [`LATE_BUFFER_MAX_BYTES`] are evicted instead of kept
+    /// (a backstop — the control plane's global admission meter normally
+    /// fires first; see the cap's docs).
+    pub fn push(&mut self, res: TrainResult) -> bool {
+        if matches!(res.up, UpPayload::DenseModule(_)) {
+            self.dropped += 1;
+            return false;
+        }
+        if self
+            .entries
+            .iter()
+            .any(|e| e.stale_from_round == res.stale_from_round && e.slot == res.slot)
+        {
+            self.dropped += 1;
+            return false;
+        }
+        let cost = late_payload_bytes(&res);
+        if self.bytes + cost > LATE_BUFFER_MAX_BYTES {
+            self.evicted += 1;
+            return false;
+        }
+        self.bytes += cost;
+        self.entries.push(res);
+        true
+    }
+
+    /// Drain the buffer into `agg`, weighting every entry by its FedAvg
+    /// weight times the Eq. 3 staleness discount
+    /// `e^{−β·(now_round − origin_round)}`. Folds in (origin round, slot)
+    /// order regardless of arrival order; undecodable or mismatched
+    /// entries are counted in [`LateBuffer::dropped`] and
+    /// `stats.orphaned` rather than failing the round. Comm accounting
+    /// for the folded uplinks lands in `stats.up` (the bytes crossed the
+    /// wire in the round that folds them, not the round that lost them);
+    /// dense uplinks are charged `FoldCtx::dense_params` parameters — the
+    /// same `Method::dense_upload_params` figure an on-time arrival of
+    /// the identical payload is charged. Returns the (origin round, slot)
+    /// identities that actually folded, so the caller can mark them
+    /// aggregated and reject any future racer for the same slot.
+    pub fn fold_into(
+        &mut self,
+        agg: &mut SegmentAggregator,
+        kidx: &KindIndex,
+        ctx: FoldCtx<'_>,
+        stats: &mut AggStats,
+    ) -> Vec<(u64, u32)> {
+        let mut entries = std::mem::take(&mut self.entries);
+        self.bytes = 0;
+        entries.sort_by_key(|e| (e.stale_from_round, e.slot));
+        let mut folded_ids = Vec::new();
+        for res in entries {
+            let ci = res.client as usize;
+            let staleness = ctx.now_round.saturating_sub(res.stale_from_round).max(1);
+            let w = ctx.weights.get(ci).copied().unwrap_or(0.0)
+                * staleness::stale_discount(ctx.beta, staleness);
+            if w <= 0.0 {
+                self.dropped += 1;
+                stats.orphaned += 1;
+                continue;
+            }
+            let folded = match &res.up {
+                UpPayload::SparseWire(bytes) => {
+                    let seg = res.segment as usize;
+                    agg.owns(seg)
+                        && agg
+                            .add_wire(seg, bytes, kidx, w)
+                            .map(|params| stats.up.add(params, bytes.len()))
+                            .is_ok()
+                }
+                UpPayload::DenseUpdate(v) => {
+                    let fits = agg.owns(0) && v.len() == agg.range(0).len();
+                    if fits {
+                        agg.add_dense(0, v, w);
+                        stats.up.add(ctx.dense_params, dense_bytes(ctx.dense_params));
+                    }
+                    fits
+                }
+                // push() rejects these; defensive
+                UpPayload::DenseModule(_) => false,
+            };
+            if folded {
+                stats.late_folds += 1;
+                folded_ids.push((res.stale_from_round, res.slot));
+            } else {
+                self.dropped += 1;
+                stats.orphaned += 1;
+            }
+        }
+        folded_ids
+    }
+}
+
+/// One on-time uplink payload routed to a shard (the envelope's typed
+/// body; the segment id that picked the shard came from the v2 header).
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// Compressed round-robin segment update (`compress::wire` bytes).
+    Wire(Vec<u8>),
+    /// Dense f32 update over the whole vector (baselines, `n_s = 1`).
+    Dense(Vec<f32>),
+}
+
+/// A decoded on-time contribution waiting for round close.
+enum Decoded {
+    Sparse { sv: SparseVec, params: usize, bytes: usize },
+    Dense(Vec<f32>),
+}
+
+struct Pending {
+    slot: u32,
+    seg: usize,
+    w: f64,
+    d: Decoded,
+}
+
+/// One shard of the aggregation plane: a contiguous slice of the segment
+/// space, its Eq. 2 accumulator, and its slice of the straggler buffer.
+/// Runs synchronously; [`run_shard`] wraps it in a worker-thread loop.
+pub struct ShardAggregator {
+    id: usize,
+    total: usize,
+    agg: SegmentAggregator,
+    late: LateBuffer,
+    pending: Vec<Pending>,
+    stats: AggStats,
+    agg_s: f64,
+    error: Option<String>,
+}
+
+/// What one shard hands back at round close.
+pub struct ShardReport {
+    /// Shard index (router-side gather key).
+    pub shard: usize,
+    /// First flat index `delta` refers to.
+    pub base: usize,
+    /// Weighted-average delta over the shard's owned index span.
+    pub delta: Vec<f32>,
+    /// Per-round aggregation tallies (comm accounting, folds, orphans).
+    pub stats: AggStats,
+    /// (origin round, slot) identities that late-folded this round.
+    pub folded: Vec<(u64, u32)>,
+    /// Per owned segment: did it receive at least one contribution?
+    pub covered: Vec<bool>,
+    /// Wall seconds this shard spent decoding + accumulating this round.
+    pub agg_s: f64,
+    /// Late arrivals evicted by the byte-cap backstop this round
+    /// (normally 0 — the control plane's global meter fires first).
+    pub late_evicted: usize,
+    /// Fatal shard error (a poisoned round: the run must fail loudly).
+    pub error: Option<String>,
+}
+
+impl ShardAggregator {
+    /// Fresh shard `id` over a `total`-parameter vector; geometry is set
+    /// per round by [`ShardAggregator::begin`].
+    pub fn new(id: usize, total: usize) -> ShardAggregator {
+        ShardAggregator {
+            id,
+            total,
+            agg: SegmentAggregator::for_segments(total, 1, 0, 0),
+            late: LateBuffer::new(),
+            pending: Vec::new(),
+            stats: AggStats::default(),
+            agg_s: 0.0,
+            error: None,
+        }
+    }
+
+    /// Open a round: own global segments `[seg_lo, seg_hi)` of an
+    /// `n_s`-segment space and reset the per-round state. The late buffer
+    /// persists across rounds — it holds OTHER rounds' stragglers.
+    pub fn begin(&mut self, n_s: usize, seg_lo: usize, seg_hi: usize) {
+        self.agg = SegmentAggregator::for_segments(self.total, n_s, seg_lo, seg_hi);
+        self.pending.clear();
+        self.stats = AggStats::default();
+        self.agg_s = 0.0;
+        self.error = None;
+        self.late.evicted = 0;
+    }
+
+    /// Accept one on-time contribution (any arrival order). Wire payloads
+    /// decode NOW — concurrent with the control plane's collect wait —
+    /// but fold into the accumulator only at [`ShardAggregator::close`],
+    /// in slot order. Errors poison the round and surface in the close
+    /// report rather than panicking the worker thread.
+    pub fn add(&mut self, slot: u32, seg: usize, w: f64, payload: Payload, kidx: &KindIndex) {
+        if self.error.is_some() {
+            return;
+        }
+        let t0 = Instant::now();
+        let decoded = match payload {
+            Payload::Wire(bytes) => {
+                if !self.agg.owns(seg) {
+                    self.error = Some(format!("shard {}: segment {seg} not owned", self.id));
+                    return;
+                }
+                match wire::decode(&bytes, self.agg.range(seg), kidx) {
+                    Ok(sv) => {
+                        let params = sv.len();
+                        Decoded::Sparse { sv, params, bytes: bytes.len() }
+                    }
+                    Err(e) => {
+                        self.error = Some(format!("shard {}: slot {slot} decode: {e:#}", self.id));
+                        return;
+                    }
+                }
+            }
+            Payload::Dense(v) => {
+                if !(self.agg.owns(seg) && seg == 0 && v.len() == self.agg.range(0).len()) {
+                    self.error = Some(format!(
+                        "shard {}: dense update of {} params does not fit segment {seg}",
+                        self.id,
+                        v.len()
+                    ));
+                    return;
+                }
+                Decoded::Dense(v)
+            }
+        };
+        self.agg_s += t0.elapsed().as_secs_f64();
+        self.pending.push(Pending { slot, seg, w, d: decoded });
+    }
+
+    /// Buffer a straggler from an already-closed round for a later fold.
+    pub fn add_late(&mut self, res: TrainResult) {
+        self.late.push(res);
+    }
+
+    /// Close the round: accumulate the pending on-time contributions in
+    /// slot order, fold the buffered stragglers (origin-round/slot order,
+    /// Eq. 3 discount), and emit the shard's delta + tallies.
+    pub fn close(&mut self, ctx: FoldCtx<'_>, kidx: &KindIndex) -> ShardReport {
+        let t0 = Instant::now();
+        self.pending.sort_by_key(|p| p.slot);
+        let dense_params = ctx.dense_params;
+        for p in self.pending.drain(..) {
+            match p.d {
+                Decoded::Sparse { sv, params, bytes } => {
+                    self.agg.add_sparse(p.seg, &sv, p.w);
+                    self.stats.up.add(params, bytes);
+                }
+                Decoded::Dense(v) => {
+                    self.agg.add_dense(p.seg, &v, p.w);
+                    self.stats.up.add(dense_params, dense_bytes(dense_params));
+                }
+            }
+        }
+        let folded = self.late.fold_into(&mut self.agg, kidx, ctx, &mut self.stats);
+        let agg = std::mem::replace(&mut self.agg, SegmentAggregator::for_segments(0, 1, 0, 0));
+        let base = agg.base();
+        let covered = agg.covered();
+        let delta = agg.finish();
+        self.agg_s += t0.elapsed().as_secs_f64();
+        ShardReport {
+            shard: self.id,
+            base,
+            delta,
+            stats: std::mem::take(&mut self.stats),
+            folded,
+            covered,
+            agg_s: self.agg_s,
+            late_evicted: self.late.evicted,
+            error: self.error.take(),
+        }
+    }
+}
+
+/// Message contract between the router and one shard worker thread.
+pub enum ShardMsg {
+    /// Open round `round` owning segments `[seg_lo, seg_hi)` of `n_s`.
+    Begin {
+        /// Round index (display/debug only; geometry is what matters).
+        round: u64,
+        /// Round-robin segment count this round.
+        n_s: usize,
+        /// First owned global segment.
+        seg_lo: usize,
+        /// One past the last owned global segment.
+        seg_hi: usize,
+    },
+    /// On-time contribution for the open round.
+    Add {
+        /// Cohort slot (accumulation order key).
+        slot: u32,
+        /// Global segment id (already verified to be this shard's).
+        seg: usize,
+        /// FedAvg weight n_i.
+        w: f64,
+        /// The uplink payload.
+        payload: Payload,
+    },
+    /// Straggler from an earlier round, for a later staleness fold.
+    Late(Box<TrainResult>),
+    /// Close the open round and reply with a [`ShardReport`].
+    Close {
+        /// Staleness decay β (Eq. 3) for the fold.
+        beta: f64,
+        /// The folding round.
+        now_round: u64,
+        /// Dense-uplink parameter charge (`Method::dense_upload_params`).
+        dense_params: usize,
+    },
+    /// End of run: drop state and exit the worker loop.
+    Shutdown,
+}
+
+/// Worker-thread loop for one shard: drain [`ShardMsg`]s until `Shutdown`
+/// (or the router hangs up), decrementing the shared `depth` gauge per
+/// processed payload message so the router can observe queue backlog.
+/// Reports travel back over `reports` keyed by shard id.
+pub fn run_shard(
+    id: usize,
+    total: usize,
+    weights: Arc<Vec<f64>>,
+    kidx: Arc<KindIndex>,
+    rx: mpsc::Receiver<ShardMsg>,
+    reports: mpsc::Sender<ShardReport>,
+    depth: Arc<AtomicIsize>,
+) {
+    let mut shard = ShardAggregator::new(id, total);
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ShardMsg::Begin { n_s, seg_lo, seg_hi, .. } => shard.begin(n_s, seg_lo, seg_hi),
+            ShardMsg::Add { slot, seg, w, payload } => {
+                shard.add(slot, seg, w, payload, &kidx);
+                depth.fetch_sub(1, Ordering::Relaxed);
+            }
+            ShardMsg::Late(res) => {
+                shard.add_late(*res);
+                depth.fetch_sub(1, Ordering::Relaxed);
+            }
+            ShardMsg::Close { beta, now_round, dense_params } => {
+                let ctx = FoldCtx { weights: &weights, beta, now_round, dense_params };
+                let report = shard.close(ctx, &kidx);
+                if reports.send(report).is_err() {
+                    return; // router is gone; nothing left to serve
+                }
+            }
+            ShardMsg::Shutdown => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LoraKind;
+
+    fn kidx(n: usize) -> KindIndex {
+        let kinds: Vec<LoraKind> = (0..n)
+            .map(|i| if (i / 16) % 2 == 0 { LoraKind::A } else { LoraKind::B })
+            .collect();
+        KindIndex::new(&kinds)
+    }
+
+    fn dense_result(origin: u64, slot: u32, client: u32, n: usize) -> TrainResult {
+        TrainResult {
+            round: origin,
+            slot,
+            client,
+            segment: 0,
+            n_samples: 1,
+            mean_loss: 0.0,
+            k_a: 0.0,
+            k_b: 0.0,
+            exec_s: 0.0,
+            stale_from_round: origin,
+            up: UpPayload::DenseUpdate(vec![1.0; n]),
+        }
+    }
+
+    #[test]
+    fn late_buffer_byte_cap_evicts_instead_of_growing() {
+        let mut buf = LateBuffer::new();
+        // each dense entry costs 4·n bytes; size entries so two fit and
+        // the third trips the cap
+        let n = LATE_BUFFER_MAX_BYTES / 4 / 2;
+        assert!(buf.push(dense_result(1, 0, 0, n)));
+        assert!(buf.push(dense_result(1, 1, 1, n)));
+        assert_eq!(buf.buffered_bytes(), LATE_BUFFER_MAX_BYTES);
+        assert!(!buf.push(dense_result(1, 2, 2, n)), "cap rejects the overflow entry");
+        assert_eq!(buf.evicted, 1);
+        assert_eq!(buf.dropped, 0, "eviction is counted separately from dedup drops");
+        assert_eq!(buf.len(), 2);
+        // a tiny entry still fails once the budget is exhausted exactly
+        assert!(!buf.push(dense_result(1, 3, 3, 1)));
+        assert_eq!(buf.evicted, 2);
+    }
+
+    #[test]
+    fn fold_resets_byte_meter() {
+        let mut buf = LateBuffer::new();
+        assert!(buf.push(dense_result(2, 0, 0, 8)));
+        assert_eq!(buf.buffered_bytes(), 32);
+        let mut agg = SegmentAggregator::new(8, 1);
+        let mut stats = AggStats::default();
+        let ctx = FoldCtx { weights: &[1.0], beta: 0.7, now_round: 3, dense_params: 8 };
+        let folded = buf.fold_into(&mut agg, &kidx(8), ctx, &mut stats);
+        assert_eq!(folded, vec![(2, 0)]);
+        assert_eq!(stats.late_folds, 1);
+        assert!(buf.is_empty());
+        assert_eq!(buf.buffered_bytes(), 0);
+    }
+
+    #[test]
+    fn shard_decodes_eagerly_but_accumulates_in_slot_order() {
+        let n = 32;
+        let kidx = kidx(n);
+        let mut shard = ShardAggregator::new(0, n);
+        shard.begin(1, 0, 1);
+        // arrival order 1, 0 — close must fold 0 first (slot order)
+        shard.add(1, 0, 1.0, Payload::Dense(vec![3.0; n]), &kidx);
+        shard.add(0, 0, 3.0, Payload::Dense(vec![1.0; n]), &kidx);
+        let ctx = FoldCtx { weights: &[1.0], beta: 0.7, now_round: 0, dense_params: n };
+        let rep = shard.close(ctx, &kidx);
+        assert!(rep.error.is_none());
+        assert_eq!(rep.base, 0);
+        assert_eq!(rep.covered, vec![true]);
+        // (3·1 + 1·3)/4 = 1.5 either way — order shows up in the bits of
+        // harder sums; here assert the bookkeeping
+        assert_eq!(rep.delta, vec![1.5; n]);
+        assert_eq!(rep.stats.up.params as usize, 2 * n);
+    }
+
+    #[test]
+    fn shard_reports_decode_errors_at_close() {
+        let n = 32;
+        let kidx = kidx(n);
+        let mut shard = ShardAggregator::new(2, n);
+        shard.begin(2, 1, 2);
+        shard.add(0, 0, 1.0, Payload::Wire(vec![0xFF; 10]), &kidx); // foreign segment
+        let ctx = FoldCtx { weights: &[1.0], beta: 0.7, now_round: 0, dense_params: 0 };
+        let rep = shard.close(ctx, &kidx);
+        let msg = rep.error.expect("foreign segment must poison the round");
+        assert!(msg.contains("not owned"), "{msg}");
+    }
+}

@@ -29,7 +29,8 @@ USAGE: ecolora <subcommand> [flags]
 
   pretrain   --preset <p> [--steps N] [--samples N]
   train      --preset <p> [--method fedit|flora|ffa] [--eco] [--dpo]
-             [--cluster mem|tcp|mono] [--workers N] [--sim-ul X --sim-dl X]
+             [--cluster mem|tcp|mono] [--workers N] [--shards N]
+             [--sim-ul X --sim-dl X] [--sim-latency X] [--sim-agg-mbps X]
              [--sim-slow-frac X --sim-slow-factor X]
              [--round-policy sync|quorum] [--quorum Q] [--slot-timeout MS]
              [--inject-slow CLIENT] [--inject-delay-ms MS]
@@ -45,11 +46,16 @@ USAGE: ecolora <subcommand> [flags]
 train runs on the message-passing cluster by default (--cluster mem:
 in-process channel transport, participant threads in parallel).
 --cluster tcp moves the same protocol onto loopback TCP; --cluster mono
-uses the single-threaded monolithic reference loop. --sim-ul/--sim-dl
-(Mbps) attach the netsim shim to the transport and report simulated
-per-round communication time over the real protocol bytes;
+uses the single-threaded monolithic reference loop. --shards N splits
+the server's aggregation plane into N segment-sharded aggregator
+threads behind a router (bitwise-identical to --shards 1; more shards
+only buy aggregation wall-clock). --sim-ul/--sim-dl (Mbps) attach the
+netsim shim to the transport and report simulated per-round
+communication time over the real protocol bytes;
 --sim-slow-frac/--sim-slow-factor put that fraction of each round's
-slots on links that many times slower (straggler heterogeneity).
+slots on links that many times slower (straggler heterogeneity), and
+--sim-agg-mbps models the server aggregation stage at that processing
+rate, divided across the shards.
 
 --round-policy quorum drops the collect barrier: a round closes once
 ceil(Q × N_t) results arrive (--quorum, default 0.8); stragglers fold
@@ -176,9 +182,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         "mono" | "off" | "none" => {
             for flag in [
                 "workers",
+                "shards",
                 "sim-ul",
                 "sim-dl",
                 "sim-latency",
+                "sim-agg-mbps",
                 "sim-slow-frac",
                 "sim-slow-factor",
                 "round-policy",
@@ -198,9 +206,16 @@ fn cmd_train(args: &Args) -> Result<()> {
             let mode = ClusterMode::parse(mode)
                 .ok_or_else(|| anyhow!("bad --cluster {mode:?} (mem, tcp or mono)"))?;
             // any sim-* flag turns the shim on (the others take defaults)
-            let sim_requested = ["sim-ul", "sim-dl", "sim-latency", "sim-slow-frac", "sim-slow-factor"]
-                .iter()
-                .any(|k| args.get(k).is_some());
+            let sim_requested = [
+                "sim-ul",
+                "sim-dl",
+                "sim-latency",
+                "sim-agg-mbps",
+                "sim-slow-frac",
+                "sim-slow-factor",
+            ]
+            .iter()
+            .any(|k| args.get(k).is_some());
             let netsim = sim_requested.then(|| SimProfile {
                 scenario: Scenario {
                     name: "custom",
@@ -210,6 +225,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 },
                 slow_frac: args.get_f64("sim-slow-frac", 0.0),
                 slow_factor: args.get_f64("sim-slow-factor", 1.0),
+                agg_mbps: args.get_f64("sim-agg-mbps", 0.0),
             });
             let policy = round_policy_from_args(args)?;
             if args.get("inject-delay-ms").is_some() && args.get("inject-slow").is_none() {
@@ -224,38 +240,60 @@ fn cmd_train(args: &Args) -> Result<()> {
                     delay: Duration::from_millis(args.get_u64("inject-delay-ms", 1_000)),
                 }
             });
+            let shards = args.get_usize("shards", 1);
+            if shards == 0 {
+                return Err(anyhow!("--shards expects a positive shard count"));
+            }
             let opts = ClusterOptions {
                 mode,
                 workers: args.get("workers").map(|v| {
                     v.parse().unwrap_or_else(|_| panic!("--workers expects an integer, got {v:?}"))
                 }),
+                shards,
                 netsim,
                 policy,
                 fault,
             };
             let out = cluster::run(cfg, &opts)?;
             println!(
-                "deployment    : cluster ({} transport, {} workers)",
-                out.transport, out.workers
+                "deployment    : cluster ({} transport, {} workers, {} aggregation shard{})",
+                out.transport,
+                out.workers,
+                out.shards,
+                if out.shards == 1 { "" } else { "s" },
             );
+            if out.shards > 1 {
+                println!(
+                    "aggregation   : max per-round shard agg {:.2} ms",
+                    out.fed.log.max_shard_agg_ms()
+                );
+            }
             if let RoundPolicy::Quorum { q, timeout } = policy {
                 println!(
                     "round policy  : quorum (q={q}, slot timeout {} ms)",
                     timeout.as_millis()
                 );
                 println!(
-                    "dropout       : {:.1}% ({} stragglers / {} late folds / {} resampled, mean quorum wait {:.3}s)",
+                    "dropout       : {:.1}% ({} stragglers / {} late folds / {} resampled / {} evicted, mean quorum wait {:.3}s)",
                     100.0 * out.fed.log.dropout_rate(),
                     out.fed.log.total_stragglers(),
                     out.fed.log.total_late_folds(),
                     out.fed.log.total_resampled(),
+                    out.fed.log.total_late_evicted(),
                     out.fed.log.mean_quorum_wait_s(),
                 );
             }
             if !out.timings.is_empty() {
                 let comm: f64 = out.timings.iter().map(|t| t.comm_s).sum();
                 let total: f64 = out.timings.iter().map(|t| t.round_s).sum();
-                println!("sim round time: {total:.2}s total, {comm:.2}s communication");
+                let agg: f64 = out.timings.iter().map(|t| t.agg_s).sum();
+                if agg > 0.0 {
+                    println!(
+                        "sim round time: {total:.2}s total, {comm:.2}s communication, {agg:.2}s aggregation"
+                    );
+                } else {
+                    println!("sim round time: {total:.2}s total, {comm:.2}s communication");
+                }
             }
             out.fed
         }

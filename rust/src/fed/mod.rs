@@ -393,6 +393,7 @@ impl FedRunner {
 
         // ---- aggregation (Eq. 2) + global advance ---------------------------
         let t2 = Instant::now();
+        rec.seg_uncovered = agg.covered().iter().filter(|&&c| !c).count();
         if self.cfg.method.restarts_lora() {
             if self.cfg.eco.is_some() {
                 // FLoRA + EcoLoRA: merge the segment-aggregated mean module.
@@ -428,6 +429,7 @@ impl FedRunner {
         rec.global_loss = round_loss;
         rec.overhead_s = overhead;
         rec.cohort = n_t;
+        rec.shards = 1; // the monolithic path is a one-shard plane
         rec.compute_s = (self.session.exec_seconds.get() - exec_before) / n_t.max(1) as f64;
         let snap = sparsity_snapshot(&self.global, &self.kinds);
         rec.gini_a = snap.gini_a;

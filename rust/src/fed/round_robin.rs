@@ -21,6 +21,18 @@ pub fn covers_all_segments(round: usize, n_s: usize, n_t: usize) -> bool {
     (0..n_s).all(|s| !slots_for_segment(s, round, n_s, n_t).is_empty())
 }
 
+/// Per-segment coverage given the slots that actually reported: quorum
+/// rounds can close before a segment's only uploader lands, leaving that
+/// segment's delta zero for the round (`SegmentAggregator::covered`
+/// observes the same thing on the aggregation plane).
+pub fn covered_segments(reported_slots: &[usize], round: usize, n_s: usize) -> Vec<bool> {
+    let mut covered = vec![false; n_s];
+    for &slot in reported_slots {
+        covered[segment_for(slot, round, n_s)] = true;
+    }
+    covered
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,6 +67,23 @@ mod tests {
             seen.sort_unstable();
             assert_eq!(seen, (0..n_s).collect::<Vec<_>>());
         }
+    }
+
+    #[test]
+    fn covered_segments_tracks_reported_slots() {
+        // §3.3 worked example: slots 0..4 upload segments 0,1,2,0,1 — if
+        // only slots 0 and 4 report, segment 2 is the coverage gap
+        assert_eq!(covered_segments(&[0, 4], 0, 3), vec![true, true, false]);
+        assert_eq!(covered_segments(&[], 0, 3), vec![false, false, false]);
+        assert_eq!(covered_segments(&[0, 1, 2], 0, 3), vec![true, true, true]);
+        // a full cohort always covers when n_s <= n_t
+        propcheck(100, |rng| {
+            let n_t = rng.below(16) + 1;
+            let n_s = rng.below(n_t) + 1;
+            let round = rng.below(100);
+            let all: Vec<usize> = (0..n_t).collect();
+            assert!(covered_segments(&all, round, n_s).iter().all(|&c| c));
+        });
     }
 
     #[test]

@@ -1,6 +1,15 @@
 //! Server-side aggregation (paper §3.3, Eq. 2): segments with the same id
 //! are combined by a sample-count-weighted average and the global model is
 //! reassembled from the aggregated segments.
+//!
+//! An aggregator no longer has to own the whole segment space: the
+//! sharded aggregation plane (`cluster::shard`) builds one aggregator per
+//! shard over a contiguous slice `[seg_lo, seg_hi)` of the segments via
+//! [`SegmentAggregator::for_segments`]. Segment ids and sparse indices
+//! stay GLOBAL everywhere — only the accumulator storage is offset — so
+//! the per-index floating-point reduction of a sharded round is the same
+//! sequence of operations as the unsharded one, which is what keeps
+//! `--shards N` bitwise-identical to `--shards 1`.
 
 use std::ops::Range;
 
@@ -11,44 +20,86 @@ use crate::model::segment_ranges;
 /// round-start global). Works for both sparse (EcoLoRA) and dense
 /// (baseline) uploads; baselines use `n_s = 1`.
 pub struct SegmentAggregator {
+    /// GLOBAL index ranges of the owned segments (contiguous slice).
     ranges: Vec<Range<usize>>,
+    /// Global id of the first owned segment.
+    seg0: usize,
+    /// First owned flat index (0 when owning everything or nothing).
+    base: usize,
     acc: Vec<f64>,
     seg_weight: Vec<f64>,
 }
 
 impl SegmentAggregator {
+    /// Aggregator owning the WHOLE segment space (the monolithic runner
+    /// and `--shards 1`).
     pub fn new(total: usize, n_s: usize) -> Self {
+        Self::for_segments(total, n_s, 0, n_s)
+    }
+
+    /// Aggregator owning the contiguous global segments `[seg_lo, seg_hi)`
+    /// of a `total`-parameter vector split into `n_s` segments. Segment
+    /// ids passed to `add_*`/`range` stay global; `seg_lo == seg_hi`
+    /// builds an empty aggregator that owns nothing.
+    pub fn for_segments(total: usize, n_s: usize, seg_lo: usize, seg_hi: usize) -> Self {
+        assert!(seg_lo <= seg_hi && seg_hi <= n_s, "shard [{seg_lo},{seg_hi}) outside 0..{n_s}");
+        let all = segment_ranges(total, n_s);
+        let ranges: Vec<Range<usize>> = all[seg_lo..seg_hi].to_vec();
+        let base = ranges.first().map_or(0, |r| r.start);
+        let span = ranges.last().map_or(0, |r| r.end) - base;
         SegmentAggregator {
-            ranges: segment_ranges(total, n_s),
-            acc: vec![0.0; total],
-            seg_weight: vec![0.0; n_s],
+            ranges,
+            seg0: seg_lo,
+            base,
+            acc: vec![0.0; span],
+            seg_weight: vec![0.0; seg_hi - seg_lo],
         }
     }
 
+    /// Owned segment count (the full `n_s` for a whole-space aggregator).
     pub fn n_segments(&self) -> usize {
         self.ranges.len()
     }
 
+    /// Global id of the first owned segment (0 for a whole-space one).
+    pub fn seg0(&self) -> usize {
+        self.seg0
+    }
+
+    /// First flat index this aggregator's [`SegmentAggregator::finish`]
+    /// delta refers to (0 for a whole-space aggregator).
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// True when this aggregator owns global segment `seg`.
+    pub fn owns(&self, seg: usize) -> bool {
+        seg >= self.seg0 && seg < self.seg0 + self.ranges.len()
+    }
+
+    /// GLOBAL flat-index range of owned global segment `seg`.
     pub fn range(&self, seg: usize) -> &Range<usize> {
-        &self.ranges[seg]
+        assert!(self.owns(seg), "segment {seg} not owned by this aggregator");
+        &self.ranges[seg - self.seg0]
     }
 
     /// Add a sparse segment contribution with weight `n_i`. Indices must
     /// lie inside the segment's range; zeros elsewhere count toward the
     /// average (standard sparse FedAvg semantics).
     pub fn add_sparse(&mut self, seg: usize, sv: &SparseVec, n_i: f64) {
-        let r = &self.ranges[seg];
+        let r = self.range(seg);
+        let (start, end) = (r.start, r.end);
         for (&i, &v) in sv.idx.iter().zip(&sv.vals) {
             let i = i as usize;
-            assert!(i >= r.start && i < r.end, "index {i} outside segment {seg}");
-            self.acc[i] += n_i * v as f64;
+            assert!(i >= start && i < end, "index {i} outside segment {seg}");
+            self.acc[i - self.base] += n_i * v as f64;
         }
-        self.seg_weight[seg] += n_i;
+        self.seg_weight[seg - self.seg0] += n_i;
     }
 
     /// Decode one uplink wire message for `seg` and fold it in with weight
     /// `n_i` — the server side of the EcoLoRA uplink, shared by the
-    /// monolithic runner and the cluster coordinator. Returns the
+    /// monolithic runner and the sharded cluster plane. Returns the
     /// transmitted parameter count (comm accounting).
     pub fn add_wire(
         &mut self,
@@ -57,7 +108,8 @@ impl SegmentAggregator {
         kidx: &KindIndex,
         n_i: f64,
     ) -> anyhow::Result<usize> {
-        let range = self.ranges[seg].clone();
+        anyhow::ensure!(self.owns(seg), "segment {seg} not owned by this aggregator");
+        let range = self.range(seg).clone();
         let decoded = wire::decode(bytes, &range, kidx)?;
         let params = decoded.len();
         self.add_sparse(seg, &decoded, n_i);
@@ -66,31 +118,36 @@ impl SegmentAggregator {
 
     /// Add a dense segment contribution (`values` spans the segment range).
     pub fn add_dense(&mut self, seg: usize, values: &[f32], n_i: f64) {
-        let r = self.ranges[seg].clone();
+        let r = self.range(seg).clone();
         assert_eq!(values.len(), r.len());
-        for (a, &v) in self.acc[r].iter_mut().zip(values) {
+        for (a, &v) in self.acc[r.start - self.base..r.end - self.base].iter_mut().zip(values) {
             *a += n_i * v as f64;
         }
-        self.seg_weight[seg] += n_i;
+        self.seg_weight[seg - self.seg0] += n_i;
     }
 
-    /// Finish: weighted-average delta (zero for segments nobody uploaded —
-    /// cannot happen when the round-robin coverage invariant holds).
+    /// Finish: weighted-average delta over the OWNED index span (index 0
+    /// of the result is flat index [`SegmentAggregator::base`]; the full
+    /// vector for a whole-space aggregator). Segments nobody uploaded stay
+    /// zero — cannot happen when the round-robin coverage invariant holds,
+    /// but quorum rounds can close before a segment's only uploader
+    /// reports.
     pub fn finish(self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.acc.len()];
-        for (seg, r) in self.ranges.iter().enumerate() {
-            let w = self.seg_weight[seg];
+        for (s, r) in self.ranges.iter().enumerate() {
+            let w = self.seg_weight[s];
             if w <= 0.0 {
                 continue;
             }
             for i in r.clone() {
-                out[i] = (self.acc[i] / w) as f32;
+                out[i - self.base] = (self.acc[i - self.base] / w) as f32;
             }
         }
         out
     }
 
-    /// Segments that received at least one upload.
+    /// Per owned segment (in global-id order from `seg0`): did it receive
+    /// at least one upload?
     pub fn covered(&self) -> Vec<bool> {
         self.seg_weight.iter().map(|&w| w > 0.0).collect()
     }
@@ -146,5 +203,91 @@ mod tests {
         agg.add_dense(0, &[1.0, 2.0, 3.0], 2.0);
         agg.add_dense(0, &[3.0, 2.0, 1.0], 2.0);
         assert_eq!(agg.finish(), vec![2.0, 2.0, 2.0]);
+    }
+
+    // ---- offset shards ------------------------------------------------------
+
+    #[test]
+    fn shard_slice_uses_global_ids_and_offset_storage() {
+        // 10 params in 4 segments: 3,3,2,2 → shard owns segments [1, 3)
+        let mut shard = SegmentAggregator::for_segments(10, 4, 1, 3);
+        assert_eq!(shard.n_segments(), 2);
+        assert_eq!(shard.seg0(), 1);
+        assert_eq!(shard.base(), 3);
+        assert!(!shard.owns(0) && shard.owns(1) && shard.owns(2) && !shard.owns(3));
+        assert_eq!(shard.range(1), &(3..6));
+        assert_eq!(shard.range(2), &(6..8));
+        shard.add_dense(1, &[1.0, 2.0, 3.0], 2.0);
+        shard.add_sparse(2, &SparseVec { idx: vec![7], vals: vec![4.0] }, 1.0);
+        assert_eq!(shard.covered(), vec![true, true]);
+        let out = shard.finish();
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 0.0, 4.0]);
+    }
+
+    #[test]
+    fn shard_slice_matches_whole_space_bitwise() {
+        // the same contributions through a whole-space aggregator and
+        // through two shard slices must produce identical bits
+        let total = 13;
+        let n_s = 3;
+        let contributions: Vec<(usize, Vec<f32>, f64)> = vec![
+            (0, vec![0.5, -1.0, 2.0, 0.25, 1.0], 3.0),
+            (1, vec![1.5, 0.0, -0.125, 0.75], 2.0),
+            (0, vec![-0.25, 0.5, 0.5, 1.0, -2.0], 1.0),
+            (2, vec![2.0, 2.0, 2.0, -1.0], 5.0),
+        ];
+        let mut whole = SegmentAggregator::new(total, n_s);
+        for (seg, v, w) in &contributions {
+            whole.add_dense(*seg, v, *w);
+        }
+        let want = whole.finish();
+
+        let mut lo = SegmentAggregator::for_segments(total, n_s, 0, 1);
+        let mut hi = SegmentAggregator::for_segments(total, n_s, 1, 3);
+        for (seg, v, w) in &contributions {
+            if lo.owns(*seg) {
+                lo.add_dense(*seg, v, *w);
+            } else {
+                hi.add_dense(*seg, v, *w);
+            }
+        }
+        let (lo_base, hi_base) = (lo.base(), hi.base());
+        let mut got = vec![0.0f32; total];
+        for (base, part) in [(lo_base, lo.finish()), (hi_base, hi.finish())] {
+            got[base..base + part.len()].copy_from_slice(&part);
+        }
+        assert_eq!(want.len(), got.len());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn empty_shard_owns_nothing() {
+        let agg = SegmentAggregator::for_segments(10, 4, 2, 2);
+        assert_eq!(agg.n_segments(), 0);
+        assert_eq!(agg.base(), 0);
+        assert!(!agg.owns(2));
+        assert!(agg.covered().is_empty());
+        assert!(agg.finish().is_empty());
+    }
+
+    #[test]
+    fn partial_coverage_round_reports_uncovered_segments() {
+        // a quorum round that closed before segment 2's only uploader
+        // reported: covered() exposes the gap, finish() leaves it zero
+        let mut agg = SegmentAggregator::new(9, 3);
+        agg.add_dense(0, &[1.0, 1.0, 1.0], 1.0);
+        agg.add_dense(1, &[2.0, 2.0, 2.0], 1.0);
+        assert_eq!(agg.covered(), vec![true, true, false]);
+        let out = agg.finish();
+        assert_eq!(&out[6..], &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "not owned")]
+    fn foreign_segment_rejected() {
+        let mut shard = SegmentAggregator::for_segments(10, 4, 1, 3);
+        shard.add_dense(0, &[0.0, 0.0, 0.0], 1.0);
     }
 }

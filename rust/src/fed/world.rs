@@ -21,6 +21,11 @@
 //! wall-clock events, and advancing the root on one would shift every
 //! later fork — breaking the bitwise parity between a quorum run with no
 //! timeouts and the synchronous path.
+//!
+//! The sharded aggregation plane (`cluster::{router, shard}`) consumes NO
+//! randomness at all: shard geometry is a pure function of (n_s, shards),
+//! so the shard count can never perturb any stream above — `--shards N`
+//! parity depends on it.
 
 #![warn(missing_docs)]
 

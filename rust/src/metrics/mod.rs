@@ -67,6 +67,22 @@ pub struct RoundRecord {
     /// Seconds from task dispatch until the quorum was reached (equals the
     /// full collect wait under `RoundPolicy::Sync`).
     pub quorum_wait_s: f64,
+    /// Aggregation-plane shard count (1 = single aggregator; the
+    /// monolithic runner also reports 1).
+    pub shards: usize,
+    /// Max wall milliseconds any one shard spent decoding + accumulating
+    /// this round (the aggregation plane's critical path).
+    pub shard_agg_ms_max: f64,
+    /// Max router→shard queue backlog observed during collect.
+    pub router_queue_max: usize,
+    /// Straggler payloads rejected by the late-buffer byte cap
+    /// (`cluster::shard::LATE_BUFFER_MAX_BYTES`).
+    pub late_evicted: usize,
+    /// Round-robin segments that received NO contribution this round —
+    /// always 0 under `Sync` (the §3.3 coverage invariant), possibly
+    /// positive when a quorum round closes before a segment's only
+    /// uploader reports (that segment's delta stays zero for the round).
+    pub seg_uncovered: usize,
 }
 
 /// Full training telemetry.
@@ -153,6 +169,17 @@ impl RunLog {
         self.rounds.iter().map(|r| r.resampled).sum()
     }
 
+    /// Max per-round shard aggregation wall time, ms (0 when unsharded
+    /// timing was never recorded).
+    pub fn max_shard_agg_ms(&self) -> f64 {
+        self.rounds.iter().map(|r| r.shard_agg_ms_max).fold(0.0, f64::max)
+    }
+
+    /// Total straggler payloads evicted by the late-buffer byte cap.
+    pub fn total_late_evicted(&self) -> usize {
+        self.rounds.iter().map(|r| r.late_evicted).sum()
+    }
+
     /// Mean seconds from dispatch to quorum over all rounds.
     pub fn mean_quorum_wait_s(&self) -> f64 {
         if self.rounds.is_empty() {
@@ -176,12 +203,12 @@ impl RunLog {
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s\n",
+            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4}",
+                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{}",
                 r.round,
                 r.global_loss,
                 r.eval_acc.map_or(String::from(""), |a| format!("{a:.4}")),
@@ -201,6 +228,11 @@ impl RunLog {
                 r.resampled,
                 r.orphaned,
                 r.quorum_wait_s,
+                r.shards,
+                r.shard_agg_ms_max,
+                r.router_queue_max,
+                r.late_evicted,
+                r.seg_uncovered,
             );
         }
         s
@@ -305,6 +337,31 @@ mod tests {
         assert_eq!(log.total_late_folds(), 1);
         assert_eq!(log.total_resampled(), 1);
         assert_eq!(RunLog::new("empty").dropout_rate(), 0.0);
+    }
+
+    #[test]
+    fn shard_columns_round_trip_through_csv() {
+        let mut log = RunLog::new("t");
+        log.push(RoundRecord {
+            round: 0,
+            shards: 4,
+            shard_agg_ms_max: 12.5,
+            router_queue_max: 7,
+            late_evicted: 2,
+            seg_uncovered: 1,
+            ..Default::default()
+        });
+        let csv = log.to_csv();
+        let header = csv.lines().next().unwrap();
+        for col in
+            ["shards", "shard_agg_ms_max", "router_queue_max", "late_evicted", "seg_uncovered"]
+        {
+            assert!(header.contains(col), "missing column {col}");
+        }
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",4,12.5000,7,2,1"), "{row}");
+        assert_eq!(log.max_shard_agg_ms(), 12.5);
+        assert_eq!(log.total_late_evicted(), 2);
     }
 
     #[test]

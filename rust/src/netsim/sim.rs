@@ -16,12 +16,18 @@ pub struct RoundPlan {
 /// Timing decomposition of one round (the Figure 3 quantities).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct RoundTiming {
-    /// Wall-clock of the synchronous round (max over clients).
+    /// Wall-clock of the round: upload landing (max over clients / the
+    /// quorum-th landing) plus any modeled server aggregation share.
     pub round_s: f64,
     /// max_i compute_i — the computation share of the round.
     pub compute_s: f64,
-    /// round_s − compute_s — the communication share (incl. queueing).
+    /// Communication share (incl. queueing) up to the closing upload.
     pub comm_s: f64,
+    /// Modeled server-side aggregation share (0 unless the caller models
+    /// it — see `cluster::netshim::SimProfile::agg_mbps`; divided by the
+    /// shard count, since shards aggregate disjoint segments in
+    /// parallel).
+    pub agg_s: f64,
     /// mean per-client download completion time.
     pub mean_dl_s: f64,
     /// mean per-client upload duration.
@@ -155,6 +161,7 @@ impl NetSim {
             round_s: round_end,
             compute_s: compute,
             comm_s: round_end - compute,
+            agg_s: 0.0,
             mean_dl_s: dl_done.iter().sum::<f64>() / n,
             mean_ul_s: ul_dur.iter().sum::<f64>() / n,
         }
