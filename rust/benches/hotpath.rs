@@ -1,28 +1,41 @@
 //! Hot-path micro-benchmarks (the §Perf L3 targets): top-k selection,
 //! Golomb encode/decode, wire format, aggregation, residual update, and
 //! one compiled train-step execution. `cargo bench --bench hotpath`.
+//!
+//! Besides the stdout summary, results are written as machine-readable
+//! JSON to `BENCH_hotpath.json` (override with `ECOLORA_BENCH_OUT`;
+//! schema in docs/EXPERIMENTS.md) — the repo's perf-trajectory data
+//! point, uploaded as a CI artifact by the perf-smoke job. Set
+//! `ECOLORA_BENCH_QUICK=1` for the short CI profile.
 
 use std::sync::Arc;
 
-use ecolora::bench::Bencher;
-use ecolora::compress::{golomb, topk, wire, AdaptiveSparsifier, Compressor, Encoding, KindIndex, SparsMode};
+use ecolora::bench::{Bencher, Report};
+use ecolora::compress::{
+    golomb, topk, wire, AdaptiveSparsifier, Compressed, Compressor, Encoding, KindIndex, SparsMode,
+};
 use ecolora::fed::server::SegmentAggregator;
 use ecolora::model::LoraKind;
 use ecolora::util::linalg;
 use ecolora::util::rng::Rng;
 
 fn main() {
-    let b = Bencher::default();
+    let b = Bencher::from_env();
+    let mut report = Report::new();
     let n = 262_144; // `large` preset LoRA size
     let mut rng = Rng::new(0);
     let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
 
     // ---- top-k selection (quickselect) ------------------------------------
+    let mut mags = Vec::new();
+    let mut kept = Vec::new();
     for keep_frac in [0.05, 0.5] {
         let keep = (n as f64 * keep_frac) as usize;
-        b.bench_throughput(&format!("topk/select k={keep_frac}"), n, || {
-            std::hint::black_box(topk::topk_indices(&values, keep));
+        let r = b.bench_throughput(&format!("topk/select k={keep_frac}"), n, || {
+            topk::topk_indices_into(&values, keep, &mut mags, &mut kept);
+            std::hint::black_box(&kept);
         });
+        report.add(&r, Some(n), Some(4 * n));
     }
 
     // ---- golomb codec ------------------------------------------------------
@@ -32,13 +45,28 @@ fn main() {
         (0..n as u32).filter(|_| r.next_f64() < k).collect()
     };
     let p = golomb::rice_param_for_density(k);
-    b.bench_throughput("golomb/encode k=0.1", idx.len(), || {
+    let stream = golomb::encode_indices(&idx, p).into_bytes();
+    let r = b.bench_throughput("golomb/encode k=0.1", idx.len(), || {
         std::hint::black_box(golomb::encode_indices(&idx, p));
     });
-    let stream = golomb::encode_indices(&idx, p).into_bytes();
-    b.bench_throughput("golomb/decode k=0.1", idx.len(), || {
+    report.add(&r, Some(idx.len()), Some(stream.len()));
+    let mut gw = ecolora::util::bitstream::BitWriter::new();
+    let r = b.bench_throughput("golomb/encode_into k=0.1 (scratch)", idx.len(), || {
+        gw.clear();
+        golomb::encode_indices_into(&idx, p, &mut gw);
+        std::hint::black_box(&gw);
+    });
+    report.add(&r, Some(idx.len()), Some(stream.len()));
+    let r = b.bench_throughput("golomb/decode k=0.1", idx.len(), || {
         std::hint::black_box(golomb::decode_indices(&stream, idx.len(), p)).unwrap();
     });
+    report.add(&r, Some(idx.len()), Some(stream.len()));
+    let mut gout = Vec::new();
+    let r = b.bench_throughput("golomb/decode_into k=0.1 (scratch)", idx.len(), || {
+        golomb::decode_indices_into(&stream, idx.len(), p, &mut gout).unwrap();
+        std::hint::black_box(&gout);
+    });
+    report.add(&r, Some(idx.len()), Some(stream.len()));
 
     // ---- full wire messages -------------------------------------------------
     let kinds: Vec<LoraKind> = (0..n)
@@ -52,34 +80,54 @@ fn main() {
         kinds.clone(),
         kidx.clone(),
     );
-    b.bench_throughput("compress/adaptive+residual+f16", n, || {
-        std::hint::black_box(comp.compress(&values, 3.0, 2.0));
+    let mut out = Compressed::default();
+    let r = b.bench_throughput("compress/adaptive+residual+f16", n, || {
+        comp.compress_into(&values, 3.0, 2.0, &mut out);
+        std::hint::black_box(&out);
     });
-    let out = comp.compress(&values, 3.0, 2.0);
+    report.add(&r, Some(n), Some(4 * n));
+    comp.compress_into(&values, 3.0, 2.0, &mut out);
     let range = 0..n;
-    b.bench_throughput("wire/encode full-range", out.sv.len(), || {
+    let msg = wire::encode(&out.sv, &range, &kidx, out.k, Encoding::Golomb).unwrap();
+    let r = b.bench_throughput("wire/encode full-range", out.sv.len(), || {
         std::hint::black_box(wire::encode(&out.sv, &range, &kidx, out.k, Encoding::Golomb)).unwrap();
     });
-    let msg = wire::encode(&out.sv, &range, &kidx, out.k, Encoding::Golomb).unwrap();
-    b.bench_throughput("wire/decode full-range", out.sv.len(), || {
+    report.add(&r, Some(out.sv.len()), Some(msg.len()));
+    let mut wbytes = Vec::new();
+    let r = b.bench_throughput("wire/encode_into full-range (scratch)", out.sv.len(), || {
+        comp.encode_range_into(&out, &range, &mut wbytes).unwrap();
+        std::hint::black_box(&wbytes);
+    });
+    report.add(&r, Some(out.sv.len()), Some(msg.len()));
+    let r = b.bench_throughput("wire/decode full-range", out.sv.len(), || {
         std::hint::black_box(wire::decode(&msg, &range, &kidx)).unwrap();
     });
+    report.add(&r, Some(out.sv.len()), Some(msg.len()));
+    let mut dec = wire::Decoder::new();
+    let mut dsv = wire::SparseVec::default();
+    let r = b.bench_throughput("wire/decode_into full-range (scratch)", out.sv.len(), || {
+        dec.decode_into(&msg, &range, &kidx, &mut dsv).unwrap();
+        std::hint::black_box(&dsv);
+    });
+    report.add(&r, Some(out.sv.len()), Some(msg.len()));
 
     // ---- aggregation ---------------------------------------------------------
-    b.bench_throughput("aggregate/10 dense clients", 10 * n, || {
+    let r = b.bench_throughput("aggregate/10 dense clients", 10 * n, || {
         let mut agg = SegmentAggregator::new(n, 1);
         for _ in 0..10 {
             agg.add_dense(0, &values, 40.0);
         }
         std::hint::black_box(agg.finish());
     });
+    report.add(&r, Some(10 * n), Some(10 * 4 * n));
 
     // ---- axpy (aggregation inner loop) ---------------------------------------
     let mut acc = vec![0.0f32; n];
-    b.bench_throughput("linalg/axpy", n, || {
+    let r = b.bench_throughput("linalg/axpy", n, || {
         linalg::axpy(0.5, &values, &mut acc);
         std::hint::black_box(&acc);
     });
+    report.add(&r, Some(n), Some(8 * n));
 
     // ---- compiled train step (L2+L1 through PJRT), if artifacts exist --------
     if std::path::Path::new("artifacts/tiny.manifest.json").exists() {
@@ -95,17 +143,26 @@ fn main() {
             .map(|_| 1 + srng.below(sess.schema.config.vocab - 1) as i32)
             .collect();
         let quick = Bencher::quick();
-        quick.bench("pjrt/train_step tiny", || {
+        let r = quick.bench("pjrt/train_step tiny", || {
             std::hint::black_box(sess.train_step(&lora, &tokens, 0.5, &mask)).unwrap();
         });
+        report.add(&r, None, None);
         let be = sess.schema.config.eval_batch;
         let etokens: Vec<i32> = (0..be * seq)
             .map(|_| 1 + srng.below(sess.schema.config.vocab - 1) as i32)
             .collect();
-        quick.bench("pjrt/eval_rows tiny", || {
+        let r = quick.bench("pjrt/eval_rows tiny", || {
             std::hint::black_box(sess.eval_rows(&lora, &etokens)).unwrap();
         });
+        report.add(&r, None, None);
     } else {
         eprintln!("artifacts missing: skipping pjrt benches (run `make artifacts`)");
     }
+
+    // ---- machine-readable perf trajectory -------------------------------------
+    let out_path = std::env::var("ECOLORA_BENCH_OUT").unwrap_or_else(|_| "BENCH_hotpath.json".into());
+    report
+        .write("hotpath", std::path::Path::new(&out_path))
+        .expect("write bench report");
+    println!("\nwrote {} ({} benches)", out_path, report.len());
 }

@@ -3,9 +3,14 @@
 //!
 //! Measures wall-clock over warmup + timed iterations and prints
 //! mean / p50 / p95 plus throughput when an element count is given.
+//! Results can additionally be collected into a [`Report`] and written
+//! as machine-readable JSON (`BENCH_<suite>.json`) — the perf-trajectory
+//! sink consumed by CI and recorded across PRs (schema in
+//! docs/EXPERIMENTS.md).
 
 use std::time::Instant;
 
+use crate::util::json::Json;
 use crate::util::stats;
 
 /// Result of one benchmark.
@@ -43,6 +48,16 @@ impl Bencher {
     /// Quick profile for expensive end-to-end benches.
     pub fn quick() -> Self {
         Bencher { warmup_iters: 1, min_iters: 3, max_iters: 50, target_seconds: 2.0 }
+    }
+
+    /// Default profile, or the quick one when `ECOLORA_BENCH_QUICK` is
+    /// set (the CI perf-smoke mode).
+    pub fn from_env() -> Self {
+        if std::env::var_os("ECOLORA_BENCH_QUICK").is_some() {
+            Bencher { warmup_iters: 1, min_iters: 3, max_iters: 30, target_seconds: 0.2 }
+        } else {
+            Bencher::default()
+        }
     }
 
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
@@ -127,6 +142,91 @@ pub fn fmt_count(x: f64) -> String {
         format!("{:.2} K", x / 1e3)
     } else {
         format!("{x:.1}")
+    }
+}
+
+/// One collected entry of a [`Report`].
+struct ReportEntry {
+    r: BenchResult,
+    elems: Option<usize>,
+    bytes: Option<usize>,
+}
+
+/// Machine-readable bench collection: every recorded [`BenchResult`]
+/// plus optional per-iteration element and byte counts, serialized as
+/// `BENCH_<suite>.json` (schema v1, documented in docs/EXPERIMENTS.md).
+#[derive(Default)]
+pub struct Report {
+    entries: Vec<ReportEntry>,
+}
+
+impl Report {
+    pub fn new() -> Report {
+        Report::default()
+    }
+
+    /// Record one result. `elems` (work items per iteration) enables the
+    /// derived `ns_per_elem`; `bytes` (bytes processed per iteration)
+    /// enables `mb_per_s`.
+    pub fn add(&mut self, r: &BenchResult, elems: Option<usize>, bytes: Option<usize>) {
+        self.entries.push(ReportEntry { r: r.clone(), elems, bytes });
+    }
+
+    /// Number of recorded entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Serialize as schema v1:
+    /// `{"bench": suite, "schema": 1, "results": [{name, iters, mean_ns,
+    /// p50_ns, p95_ns, min_ns, elems?, ns_per_elem?, bytes?, mb_per_s?}]}`.
+    /// Derived rates are emitted only when finite, so the output is
+    /// always valid JSON.
+    pub fn to_json(&self, suite: &str) -> Json {
+        let results: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut pairs = vec![
+                    ("name", Json::str(&e.r.name)),
+                    ("iters", Json::num(e.r.iters as f64)),
+                    ("mean_ns", Json::num(e.r.mean_s * 1e9)),
+                    ("p50_ns", Json::num(e.r.p50_s * 1e9)),
+                    ("p95_ns", Json::num(e.r.p95_s * 1e9)),
+                    ("min_ns", Json::num(e.r.min_s * 1e9)),
+                ];
+                if let Some(n) = e.elems {
+                    pairs.push(("elems", Json::num(n as f64)));
+                    if n > 0 && e.r.mean_s > 0.0 {
+                        pairs.push(("ns_per_elem", Json::num(e.r.mean_s * 1e9 / n as f64)));
+                    }
+                }
+                if let Some(b) = e.bytes {
+                    pairs.push(("bytes", Json::num(b as f64)));
+                    if b > 0 && e.r.mean_s > 0.0 {
+                        pairs.push(("mb_per_s", Json::num(b as f64 / 1e6 / e.r.mean_s)));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("bench", Json::str(suite)),
+            ("schema", Json::num(1.0)),
+            ("results", Json::Arr(results)),
+        ])
+    }
+
+    /// Write the JSON report to `path` (the CI perf-smoke artifact).
+    pub fn write(&self, suite: &str, path: &std::path::Path) -> std::io::Result<()> {
+        let mut text = self.to_json(suite).to_string();
+        text.push('\n');
+        std::fs::write(path, text)
     }
 }
 
@@ -229,5 +329,54 @@ mod tests {
     fn table_rejects_bad_row() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(vec!["only-one".into()]);
+    }
+
+    fn fake_result(name: &str, mean_s: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 11,
+            mean_s,
+            p50_s: mean_s,
+            p95_s: mean_s * 1.2,
+            min_s: mean_s * 0.8,
+        }
+    }
+
+    #[test]
+    fn report_json_roundtrips_with_derived_rates() {
+        let mut rep = Report::new();
+        rep.add(&fake_result("golomb/encode", 1e-3), Some(26_214), Some(16_384));
+        rep.add(&fake_result("plain", 2e-3), None, None);
+        // degenerate counts must not emit non-finite rates
+        rep.add(&fake_result("empty", 1e-3), Some(0), Some(0));
+        let text = rep.to_json("hotpath").to_string();
+        let v = crate::util::json::parse(&text).expect("report must be valid JSON");
+        assert_eq!(v.req("bench").as_str(), Some("hotpath"));
+        assert_eq!(v.req("schema").as_usize(), Some(1));
+        let results = v.req("results").as_arr().unwrap();
+        assert_eq!(results.len(), 3);
+        let r0 = &results[0];
+        assert_eq!(r0.req("name").as_str(), Some("golomb/encode"));
+        assert!((r0.req("mean_ns").as_f64().unwrap() - 1e6).abs() < 1e-3);
+        let nspe = r0.req("ns_per_elem").as_f64().unwrap();
+        assert!((nspe - 1e6 / 26_214.0).abs() < 1e-6, "{nspe}");
+        let mbps = r0.req("mb_per_s").as_f64().unwrap();
+        assert!((mbps - 16.384).abs() < 1e-9, "{mbps}");
+        assert!(results[1].get("elems").is_none());
+        assert!(results[2].get("ns_per_elem").is_none());
+        assert!(results[2].get("mb_per_s").is_none());
+    }
+
+    #[test]
+    fn report_write_emits_parseable_file() {
+        let mut rep = Report::new();
+        rep.add(&fake_result("a/b", 5e-4), Some(100), None);
+        let path = std::env::temp_dir().join(format!("ecolora_bench_test_{}.json", std::process::id()));
+        rep.write("unit", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        let v = crate::util::json::parse(text.trim()).unwrap();
+        assert_eq!(v.req("bench").as_str(), Some("unit"));
+        assert_eq!(v.req("results").as_arr().unwrap().len(), 1);
     }
 }

@@ -20,8 +20,8 @@ use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::compress::wire;
-use crate::fed::downlink::{self, DownWire};
+use crate::compress::{wire, Compressed};
+use crate::fed::downlink;
 use crate::fed::world::{self, ClientState, World};
 use crate::fed::{staleness, FedConfig};
 use crate::model::segment_ranges;
@@ -42,6 +42,15 @@ pub struct Participant {
     clients: HashMap<usize, ClientState>,
     /// Per-client downlink reference (mirror of the server's channel).
     refs: HashMap<usize, Vec<f32>>,
+    /// Codec scratch reused across tasks (§Perf, codec hot path): the
+    /// downlink wire decoder + decoded delta, the uplink update vector,
+    /// the compression output, and a running payload-size high-water mark
+    /// used to presize each round's uplink buffer in one allocation.
+    dec: wire::Decoder,
+    down_sv: wire::SparseVec,
+    update: Vec<f32>,
+    comp_out: Compressed,
+    up_watermark: usize,
 }
 
 impl Participant {
@@ -51,7 +60,18 @@ impl Participant {
         let world = World::build(&cfg).context("participant: world build")?;
         let mask_host = cfg.method.grad_mask(&world.session.schema);
         let mask = world.session.upload_mask(&mask_host)?;
-        Ok(Participant { cfg, world, mask, clients: HashMap::new(), refs: HashMap::new() })
+        Ok(Participant {
+            cfg,
+            world,
+            mask,
+            clients: HashMap::new(),
+            refs: HashMap::new(),
+            dec: wire::Decoder::new(),
+            down_sv: wire::SparseVec::default(),
+            update: Vec::new(),
+            comp_out: Compressed::default(),
+            up_watermark: 0,
+        })
     }
 
     /// Replace the frozen base (FLoRA merge sync from the coordinator).
@@ -80,12 +100,24 @@ impl Participant {
                     .refs
                     .entry(ci)
                     .or_insert_with(|| self.world.lora_init.clone());
-                let msg = match &task.down {
-                    DownPayload::SparseWire(b) => DownWire::Sparse(b.clone()),
-                    DownPayload::DenseF16(b) => DownWire::DenseF16(b.clone()),
+                // apply straight off the task's payload bytes, reusing the
+                // worker's decoder scratch (no payload clone, no per-task
+                // SparseVec)
+                match &task.down {
+                    DownPayload::SparseWire(b) => {
+                        downlink::apply_sparse_down(
+                            b,
+                            reference,
+                            &self.world.kidx,
+                            &mut self.dec,
+                            &mut self.down_sv,
+                        )?;
+                    }
+                    DownPayload::DenseF16(b) => {
+                        downlink::apply_dense_f16(b, reference)?;
+                    }
                     _ => unreachable!(),
-                };
-                downlink::apply_down_wire(&msg, reference, &self.world.kidx)?;
+                }
                 Some(reference.clone())
             }
         };
@@ -130,20 +162,25 @@ impl Participant {
         )?;
 
         // ---- uplink ---------------------------------------------------------
-        let mut update = vec![0.0f32; lora_total];
-        for i in 0..lora_total {
-            update[i] = local[i] - base_point[i];
-        }
+        let update = &mut self.update;
+        update.clear();
+        update.reserve(lora_total);
+        update.extend(local.iter().zip(&base_point).map(|(l, b)| l - b));
         let (up, k) = match (&mut client.comp, self.cfg.eco) {
-            (Some(comp), Some(eco)) => {
-                let out = comp.compress(&update, task.l0, task.l_prev);
+            (Some(comp), Some(_eco)) => {
+                // compress + encode through the worker's reusable scratch;
+                // the payload Vec itself must be owned by the message, so
+                // it is the ONE buffer allocated per task (presized from
+                // the high-water mark of earlier rounds)
+                comp.compress_into(update, task.l0, task.l_prev, &mut self.comp_out);
                 let ranges = segment_ranges(lora_total, (task.n_s as usize).max(1));
                 let seg = task.segment as usize;
                 ensure!(seg < ranges.len(), "segment {seg} out of range");
                 let range = ranges[seg].clone();
-                let sv = out.sv.restrict(&range);
-                let bytes = wire::encode(&sv, &range, &self.world.kidx, out.k, eco.encoding)?;
-                (UpPayload::SparseWire(bytes), out.k)
+                let mut bytes = Vec::with_capacity(self.up_watermark);
+                comp.encode_range_into(&self.comp_out, &range, &mut bytes)?;
+                self.up_watermark = self.up_watermark.max(bytes.len());
+                (UpPayload::SparseWire(bytes), self.comp_out.k)
             }
             _ => {
                 if self.cfg.method.restarts_lora() {

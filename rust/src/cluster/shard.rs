@@ -270,7 +270,18 @@ pub struct ShardAggregator {
     stats: AggStats,
     agg_s: f64,
     error: Option<String>,
+    /// Wire decoder scratch, owned by this shard's thread (§Perf, codec
+    /// hot path): eager decodes reuse its buffers round after round.
+    dec: wire::Decoder,
+    /// Recycled `SparseVec`s: close() returns each decoded contribution
+    /// here instead of dropping it, so steady-state rounds decode into
+    /// warm buffers without heap allocation.
+    pool: Vec<SparseVec>,
 }
+
+/// Cap on recycled decode buffers a shard retains (bounds pool memory at
+/// roughly one round's worth of contributions).
+const DECODE_POOL_MAX: usize = 64;
 
 /// What one shard hands back at round close.
 pub struct ShardReport {
@@ -308,6 +319,8 @@ impl ShardAggregator {
             stats: AggStats::default(),
             agg_s: 0.0,
             error: None,
+            dec: wire::Decoder::new(),
+            pool: Vec::new(),
         }
     }
 
@@ -339,12 +352,14 @@ impl ShardAggregator {
                     self.error = Some(format!("shard {}: segment {seg} not owned", self.id));
                     return;
                 }
-                match wire::decode(&bytes, self.agg.range(seg), kidx) {
-                    Ok(sv) => {
+                let mut sv = self.pool.pop().unwrap_or_default();
+                match self.dec.decode_into(&bytes, self.agg.range(seg), kidx, &mut sv) {
+                    Ok(()) => {
                         let params = sv.len();
                         Decoded::Sparse { sv, params, bytes: bytes.len() }
                     }
                     Err(e) => {
+                        self.pool.push(sv);
                         self.error = Some(format!("shard {}: slot {slot} decode: {e:#}", self.id));
                         return;
                     }
@@ -383,6 +398,9 @@ impl ShardAggregator {
                 Decoded::Sparse { sv, params, bytes } => {
                     self.agg.add_sparse(p.seg, &sv, p.w);
                     self.stats.up.add(params, bytes);
+                    if self.pool.len() < DECODE_POOL_MAX {
+                        self.pool.push(sv); // recycle the decode buffer
+                    }
                 }
                 Decoded::Dense(v) => {
                     self.agg.add_dense(p.seg, &v, p.w);

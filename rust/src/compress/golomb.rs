@@ -31,11 +31,18 @@ pub fn expected_bits_per_gap(k: f64, b: u32) -> f64 {
     e_quot + 1.0 + b as f64
 }
 
-/// Encode one nonnegative gap with Rice parameter b.
+/// Encode one nonnegative gap with Rice parameter b (b < 64).
+///
+/// (Historical bug, fixed: the remainder used to be masked with
+/// `((1u64 << b) - 1).min(u64::MAX)` — the `.min` was a no-op that did
+/// NOT guard the `b == 64` shift overflow it was presumably written for.
+/// `BitWriter::write_bits` masks to the low `b` bits itself, and is a
+/// no-op for `b == 0`, so no pre-mask is needed at all.)
 #[inline]
 pub fn encode_gap(w: &mut BitWriter, gap: u64, b: u32) {
+    debug_assert!(b < 64, "rice parameter must leave room for the quotient shift");
     w.write_unary(gap >> b);
-    w.write_bits(gap & ((1u64 << b) - 1).min(u64::MAX), b);
+    w.write_bits(gap, b);
 }
 
 /// Decode one gap.
@@ -46,23 +53,49 @@ pub fn decode_gap(r: &mut BitReader, b: u32) -> Option<u64> {
     Some((q << b) | rem)
 }
 
+/// Encode a sorted index list as Golomb-coded gaps into an existing
+/// writer (scratch-reuse hot path; the writer is NOT cleared first).
+pub fn encode_indices_into(indices: &[u32], b: u32, w: &mut BitWriter) {
+    let mut prev = 0u64;
+    for (i, &idx) in indices.iter().enumerate() {
+        let gap = if i == 0 { idx as u64 } else { idx as u64 - prev - 1 };
+        encode_gap(w, gap, b);
+        prev = idx as u64;
+    }
+}
+
 /// Encode a sorted index list as Golomb-coded gaps.
 /// Returns the bitstream; `b` must match on decode.
 pub fn encode_indices(indices: &[u32], b: u32) -> BitWriter {
     let mut w = BitWriter::new();
-    let mut prev = 0u64;
-    for (i, &idx) in indices.iter().enumerate() {
-        let gap = if i == 0 { idx as u64 } else { idx as u64 - prev - 1 };
-        encode_gap(&mut w, gap, b);
-        prev = idx as u64;
-    }
+    encode_indices_into(indices, b, &mut w);
     w
 }
 
-/// Decode `count` indices from a Golomb gap stream.
-pub fn decode_indices(bytes: &[u8], count: usize, b: u32) -> Option<Vec<u32>> {
+/// Upper bound on the encoded bit length of `count` ascending indices
+/// drawn from `[0, universe)` with Rice parameter `b`: each entry costs
+/// `1 + b` bits (terminator + remainder) and the unary quotients sum to
+/// at most `universe >> b` (the gaps sum to less than `universe`). Used
+/// to presize scratch writers so the steady-state encode path never
+/// reallocates.
+pub fn max_stream_bits(count: usize, universe: usize, b: u32) -> u64 {
+    debug_assert!(b < 64);
+    count as u64 * (1 + b as u64) + ((universe as u64) >> b)
+}
+
+/// Decode `count` indices from a Golomb gap stream into `out`
+/// (cleared and presized from the caller's header count). Returns the
+/// number of bits consumed so the caller can cross-check the stream
+/// length from its framing header.
+pub fn decode_indices_into(
+    bytes: &[u8],
+    count: usize,
+    b: u32,
+    out: &mut Vec<u32>,
+) -> Option<u64> {
     let mut r = BitReader::new(bytes);
-    let mut out = Vec::with_capacity(count);
+    out.clear();
+    out.reserve(count);
     let mut prev = 0u64;
     for i in 0..count {
         let gap = decode_gap(&mut r, b)?;
@@ -70,6 +103,13 @@ pub fn decode_indices(bytes: &[u8], count: usize, b: u32) -> Option<Vec<u32>> {
         out.push(u32::try_from(idx).ok()?);
         prev = idx;
     }
+    Some(r.bits_consumed())
+}
+
+/// Decode `count` indices from a Golomb gap stream.
+pub fn decode_indices(bytes: &[u8], count: usize, b: u32) -> Option<Vec<u32>> {
+    let mut out = Vec::with_capacity(count);
+    decode_indices_into(bytes, count, b, &mut out)?;
     Some(out)
 }
 
@@ -106,9 +146,52 @@ mod tests {
             let idx: Vec<u32> = idx.iter().map(|&i| i as u32).collect();
             let b = rice_param_for_density(k);
             let stream = encode_indices(&idx, b);
-            let decoded = decode_indices(stream.as_bytes(), idx.len(), b).unwrap();
+            let bit_len = stream.bit_len();
+            let bytes = stream.into_bytes();
+            let mut decoded = Vec::new();
+            let consumed = decode_indices_into(&bytes, idx.len(), b, &mut decoded).unwrap();
             assert_eq!(decoded, idx);
+            // the decoder must consume exactly what the encoder wrote
+            assert_eq!(consumed, bit_len);
+            assert!(bit_len <= max_stream_bits(idx.len(), universe, b), "bound violated");
         });
+    }
+
+    #[test]
+    fn b_zero_is_pure_unary_and_roundtrips() {
+        // b == 0: no remainder bits at all; encode_gap must not emit a
+        // zero-width field with garbage, and decode_gap must not read one
+        let gaps = [0u64, 1, 5, 63, 64, 200];
+        let mut w = BitWriter::new();
+        for &g in &gaps {
+            encode_gap(&mut w, g, 0);
+        }
+        // pure unary: total bits = sum(gaps) + one terminator each
+        let expect_bits: u64 = gaps.iter().sum::<u64>() + gaps.len() as u64;
+        assert_eq!(w.bit_len(), expect_bits);
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &g in &gaps {
+            assert_eq!(decode_gap(&mut r, 0), Some(g));
+        }
+        assert_eq!(r.bits_consumed(), expect_bits);
+    }
+
+    #[test]
+    fn large_b_remainders_keep_all_bits() {
+        // b = 24 (the clamp ceiling): remainders are wide fields; a gap
+        // just below / at / above 2^b exercises the quotient boundary
+        let b = 24u32;
+        let gaps = [0u64, (1 << 24) - 1, 1 << 24, (1 << 24) + 1, (3 << 24) + 12345];
+        let mut w = BitWriter::new();
+        for &g in &gaps {
+            encode_gap(&mut w, g, b);
+        }
+        let bytes = w.into_bytes();
+        let mut r = BitReader::new(&bytes);
+        for &g in &gaps {
+            assert_eq!(decode_gap(&mut r, b), Some(g), "g={g}");
+        }
     }
 
     #[test]

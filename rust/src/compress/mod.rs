@@ -13,7 +13,7 @@ use std::sync::Arc;
 
 pub use adaptive::AdaptiveSparsifier;
 pub use residual::Residual;
-pub use wire::{Encoding, KindIndex, SparseVec};
+pub use wire::{Decoder, EncodeScratch, Encoding, KindIndex, SparseVec};
 
 use crate::model::LoraKind;
 use crate::util::half::quantize_f16;
@@ -29,6 +29,29 @@ pub enum SparsMode {
     Off,
 }
 
+/// Reusable per-compressor working buffers (§Perf, codec hot path).
+///
+/// Owned by exactly one `Compressor`, which is owned by exactly one
+/// thread (a participant worker's client state, or the server's
+/// per-client downlink channel) — never shared. Every buffer is cleared
+/// (capacity kept) on use, so steady-state rounds run the whole
+/// sparsify→quantize→encode pipeline without heap allocation.
+#[derive(Default)]
+struct Scratch {
+    /// U + R (presized to the full vector at construction).
+    combined: Vec<f32>,
+    /// One family's gathered values (top-k input).
+    fam_vals: Vec<f32>,
+    /// Quickselect magnitude scratch.
+    mags: Vec<f32>,
+    /// One family's kept compact indices (top-k output).
+    fam_kept: Vec<u32>,
+    /// Merged global kept indices, pre f16-zero filter.
+    merged: Vec<u32>,
+    /// Wire-encode buffers (compacted blocks + bit writer).
+    enc: wire::EncodeScratch,
+}
+
 /// One endpoint's compression state (client uplink or server downlink).
 pub struct Compressor {
     pub mode: SparsMode,
@@ -36,11 +59,13 @@ pub struct Compressor {
     residual: Residual,
     kinds: Arc<Vec<LoraKind>>,
     kidx: Arc<KindIndex>,
-    /// scratch: U + R
-    combined: Vec<f32>,
+    scratch: Scratch,
 }
 
-/// Outcome of compressing one update.
+/// Outcome of compressing one update. Reusable across rounds via
+/// [`Compressor::compress_into`]: buffers are cleared but keep their
+/// capacity, so a warmed `Compressed` costs no allocations to refill.
+#[derive(Default)]
 pub struct Compressed {
     /// Quantized sparse update (what the receiver will reconstruct).
     pub sv: SparseVec,
@@ -58,7 +83,8 @@ impl Compressor {
         kidx: Arc<KindIndex>,
     ) -> Self {
         let n = kinds.len();
-        Compressor { mode, encoding, residual: Residual::new(n), kinds, kidx, combined: vec![0.0; n] }
+        let scratch = Scratch { combined: vec![0.0; n], ..Scratch::default() };
+        Compressor { mode, encoding, residual: Residual::new(n), kinds, kidx, scratch }
     }
 
     pub fn kind_index(&self) -> &KindIndex {
@@ -70,67 +96,104 @@ impl Compressor {
         self.residual.l1()
     }
 
-    /// Compress `update` given the loss signal (L0, L_{t-1}).
+    /// Compress `update` given the loss signal (L0, L_{t-1}), writing the
+    /// result into `out` (cleared first, capacity kept — the
+    /// zero-allocation hot path).
     ///
     /// Applies Eq. 4 per matrix family, Eq. 5 (SC_k over U + R), f16
     /// quantization, and Eq. 6 residual commit. In `Off` mode the update is
     /// transmitted dense (quantized, no residual needed beyond the f16
     /// error, which IS fed back).
-    pub fn compress(&mut self, update: &[f32], l0: f64, l_prev: f64) -> Compressed {
+    pub fn compress_into(&mut self, update: &[f32], l0: f64, l_prev: f64, out: &mut Compressed) {
         assert_eq!(update.len(), self.kinds.len());
-        self.combined.copy_from_slice(update);
-        self.residual.add_into(&mut self.combined);
+        let combined = &mut self.scratch.combined;
+        combined.copy_from_slice(update);
+        self.residual.add_into(combined);
 
         let (k_a, k_b) = match self.mode {
             SparsMode::Adaptive(sp) => sp.k_pair(l0, l_prev),
             SparsMode::Fixed(k) => (k, k),
             SparsMode::Off => (1.0, 1.0),
         };
+        out.sv.clear();
+        out.k = (k_a, k_b);
 
         if matches!(self.mode, SparsMode::Off) {
-            let dense: Vec<f32> = self.combined.iter().map(|&v| quantize_f16(v)).collect();
-            let idx: Vec<u32> = (0..dense.len() as u32).collect();
-            self.residual.commit(&self.combined, &idx, &dense);
-            return Compressed {
-                sv: SparseVec { idx, vals: dense.clone() },
-                k: (1.0, 1.0),
-                dense: Some(dense),
-            };
+            let dense = out.dense.get_or_insert_with(Vec::new);
+            dense.clear();
+            dense.reserve(combined.len());
+            dense.extend(combined.iter().map(|&v| quantize_f16(v)));
+            out.sv.idx.reserve(dense.len());
+            out.sv.idx.extend(0..dense.len() as u32);
+            out.sv.vals.extend_from_slice(dense);
+            self.residual.commit(combined, &out.sv.idx, dense);
+            return;
         }
+        out.dense = None;
 
         // Per-family top-k over compacted coordinates, then merge.
-        let mut idx = Vec::new();
+        let merged = &mut self.scratch.merged;
+        merged.clear();
         for (kind, k) in [(LoraKind::A, k_a), (LoraKind::B, k_b)] {
-            let (fam, _r0) = self.kidx.in_range(kind, &(0..self.combined.len()));
-            let famvals: Vec<f32> = fam.iter().map(|&p| self.combined[p as usize]).collect();
-            let keep = ((famvals.len() as f64) * k).round() as usize;
-            let kept = topk::topk_indices(&famvals, keep.min(famvals.len()));
-            idx.extend(kept.iter().map(|&c| fam[c as usize]));
+            let (fam, _r0) = self.kidx.in_range(kind, &(0..combined.len()));
+            let fam_vals = &mut self.scratch.fam_vals;
+            fam_vals.clear();
+            fam_vals.reserve(fam.len());
+            fam_vals.extend(fam.iter().map(|&p| combined[p as usize]));
+            let keep = ((fam_vals.len() as f64) * k).round() as usize;
+            topk::topk_indices_into(
+                fam_vals,
+                keep.min(fam_vals.len()),
+                &mut self.scratch.mags,
+                &mut self.scratch.fam_kept,
+            );
+            merged.extend(self.scratch.fam_kept.iter().map(|&c| fam[c as usize]));
         }
-        idx.sort_unstable();
+        merged.sort_unstable();
         // Drop entries whose f16 image is exactly zero — transmitting them
         // is pure waste (e.g. FFA-LoRA's frozen-A updates are all zero).
-        let mut kept_idx = Vec::with_capacity(idx.len());
-        let mut vals = Vec::with_capacity(idx.len());
-        for &i in &idx {
-            let q = quantize_f16(self.combined[i as usize]);
+        out.sv.idx.reserve(merged.len());
+        out.sv.vals.reserve(merged.len());
+        for &i in merged.iter() {
+            let q = quantize_f16(combined[i as usize]);
             if q != 0.0 {
-                kept_idx.push(i);
-                vals.push(q);
+                out.sv.idx.push(i);
+                out.sv.vals.push(q);
             }
         }
-        self.residual.commit(&self.combined, &kept_idx, &vals);
-        Compressed { sv: SparseVec { idx: kept_idx, vals }, k: (k_a, k_b), dense: None }
+        self.residual.commit(combined, &out.sv.idx, &out.sv.vals);
+    }
+
+    /// Compress `update` (allocating convenience form of
+    /// [`Compressor::compress_into`]).
+    pub fn compress(&mut self, update: &[f32], l0: f64, l_prev: f64) -> Compressed {
+        let mut out = Compressed::default();
+        self.compress_into(update, l0, l_prev, &mut out);
+        out
+    }
+
+    /// Wire-encode a (possibly range-restricted) compressed update into
+    /// `out` (cleared first), reusing the compressor's encode scratch.
+    /// The range window of `c.sv` is located with two binary searches —
+    /// no restricted `SparseVec` copy is materialized.
+    pub fn encode_range_into(
+        &mut self,
+        c: &Compressed,
+        range: &std::ops::Range<usize>,
+        out: &mut Vec<u8>,
+    ) -> anyhow::Result<()> {
+        wire::encode_into(&c.sv, range, &self.kidx, c.k, self.encoding, &mut self.scratch.enc, out)
     }
 
     /// Wire-encode a (possibly range-restricted) compressed update.
     pub fn encode_range(
-        &self,
+        &mut self,
         c: &Compressed,
         range: &std::ops::Range<usize>,
     ) -> anyhow::Result<Vec<u8>> {
-        let sv = c.sv.restrict(range);
-        wire::encode(&sv, range, &self.kidx, c.k, self.encoding)
+        let mut out = Vec::new();
+        self.encode_range_into(c, range, &mut out)?;
+        Ok(out)
     }
 }
 
@@ -212,6 +275,47 @@ mod tests {
         let update: Vec<f32> = (0..1024).map(|_| rng.normal() as f32).collect();
         let out = c.compress(&update, 1.0, 1.0);
         assert_eq!(out.sv.len(), 256);
+    }
+
+    #[test]
+    fn compress_into_reuse_matches_fresh_allocation() {
+        // a warmed Compressed + payload buffer reused across rounds must
+        // be bit-identical to fresh allocations every round (the residual
+        // states evolve in lockstep because the outputs match)
+        let (kinds, kidx) = setup(2048);
+        let mode = SparsMode::Adaptive(AdaptiveSparsifier::default());
+        let mut c1 = Compressor::new(mode, Encoding::Golomb, kinds.clone(), kidx.clone());
+        let mut c2 = Compressor::new(mode, Encoding::Golomb, kinds, kidx);
+        let mut rng = Rng::new(21);
+        let mut out = Compressed::default();
+        let mut bytes = Vec::new();
+        for round in 0..6 {
+            let update: Vec<f32> = (0..2048).map(|_| rng.normal() as f32).collect();
+            let l_prev = 3.0 - 0.4 * round as f64;
+            let fresh = c1.compress(&update, 3.0, l_prev);
+            c2.compress_into(&update, 3.0, l_prev, &mut out);
+            assert_eq!(out.sv, fresh.sv, "round {round}");
+            assert_eq!(out.k, fresh.k, "round {round}");
+            let range = 300..1500;
+            let fresh_bytes = c1.encode_range(&fresh, &range).unwrap();
+            c2.encode_range_into(&out, &range, &mut bytes).unwrap();
+            assert_eq!(bytes, fresh_bytes, "round {round}");
+        }
+    }
+
+    #[test]
+    fn off_mode_compress_into_reuses_dense_buffer() {
+        let (kinds, kidx) = setup(128);
+        let mut c = Compressor::new(SparsMode::Off, Encoding::Golomb, kinds, kidx);
+        let mut out = Compressed::default();
+        for round in 0..3 {
+            let update = vec![0.1f32 * (round + 1) as f32; 128];
+            c.compress_into(&update, 3.0, 3.0, &mut out);
+            let dense = out.dense.as_ref().expect("off mode is dense");
+            assert_eq!(dense.len(), 128);
+            assert_eq!(out.sv.len(), 128);
+            assert_eq!(out.sv.vals, *dense);
+        }
     }
 
     #[test]

@@ -5,23 +5,31 @@
 //! quickselect over magnitudes (the paper budgets O(|P| log |P|) for a
 //! sort; quickselect is the optimized hot path, see EXPERIMENTS.md §Perf).
 
-/// Indices (ascending) of the `keep` largest-magnitude entries.
-pub fn topk_indices(values: &[f32], keep: usize) -> Vec<u32> {
+/// Indices (ascending) of the `keep` largest-magnitude entries, written
+/// into `out` using `mags` as selection scratch (both cleared first,
+/// capacity retained — the zero-allocation hot path; see
+/// docs/ARCHITECTURE.md §Codec hot path).
+pub fn topk_indices_into(values: &[f32], keep: usize, mags: &mut Vec<f32>, out: &mut Vec<u32>) {
+    out.clear();
     let n = values.len();
     if keep == 0 || n == 0 {
-        return vec![];
+        return;
     }
     if keep >= n {
-        return (0..n as u32).collect();
+        out.extend(0..n as u32);
+        return;
     }
-    // Quickselect on a scratch copy of magnitudes to find the threshold.
-    let mut mags: Vec<f32> = values.iter().map(|v| v.abs()).collect();
-    let thresh = quickselect_desc(&mut mags, keep - 1);
+    // Quickselect over magnitudes in the caller's scratch buffer; the
+    // strictly-above count falls out of the partition bookkeeping, so no
+    // second full scan is needed.
+    mags.clear();
+    mags.reserve(n);
+    mags.extend(values.iter().map(|v| v.abs()));
+    let (thresh, above) = quickselect_desc(mags, keep - 1);
 
     // Collect indices >= threshold; ties broken by index order, trimmed to
     // exactly `keep` so the wire size is deterministic.
-    let mut out = Vec::with_capacity(keep + 8);
-    let above = values.iter().filter(|v| v.abs() > thresh).count();
+    out.reserve(keep);
     let mut ties_allowed = keep - above;
     for (i, v) in values.iter().enumerate() {
         let m = v.abs();
@@ -35,16 +43,33 @@ pub fn topk_indices(values: &[f32], keep: usize) -> Vec<u32> {
             break;
         }
     }
+}
+
+/// Indices (ascending) of the `keep` largest-magnitude entries.
+pub fn topk_indices(values: &[f32], keep: usize) -> Vec<u32> {
+    let mut mags = Vec::new();
+    let mut out = Vec::new();
+    topk_indices_into(values, keep, &mut mags, &mut out);
     out
 }
 
-/// k-th largest (0-based) element via iterative quickselect; O(n) expected.
-fn quickselect_desc(v: &mut [f32], k: usize) -> f32 {
+/// k-th largest (0-based) element via iterative quickselect, plus the
+/// exact count of elements strictly greater than it — fused into the
+/// partition bookkeeping rather than recounted with a full scan
+/// (§Perf: the count is needed for deterministic tie trimming).
+/// O(n) expected.
+fn quickselect_desc(v: &mut [f32], k: usize) -> (f32, usize) {
     let (mut lo, mut hi) = (0usize, v.len());
     let mut k = k;
+    // Elements discarded to the LEFT of the live window when recursing
+    // right are >= that step's pivot, while the final answer is strictly
+    // below it — so they are exactly the elements proven strictly greater
+    // than the answer. Left recursions discard only elements <= pivot
+    // < answer, which contribute nothing.
+    let mut above = 0usize;
     loop {
         if hi - lo <= 1 {
-            return v[lo];
+            return (v[lo], above);
         }
         // median-of-three pivot for resilience on sorted inputs
         let mid = lo + (hi - lo) / 2;
@@ -66,10 +91,14 @@ fn quickselect_desc(v: &mut [f32], k: usize) -> f32 {
             }
         }
         if k < i - lo {
+            // answer is > pivot: everything at or below pivot drops out
             hi = i;
         } else if k < p - lo {
-            return pivot;
+            // answer IS pivot: [lo, i) holds its strictly-greater peers
+            return (pivot, above + (i - lo));
         } else {
+            // answer is < pivot: all of [lo, p) is strictly greater
+            above += p - lo;
             k -= p - lo;
             lo = p;
         }
@@ -146,6 +175,41 @@ mod tests {
         assert!(topk_indices(&[], 5).is_empty());
         assert!(topk_indices(&[1.0, 2.0], 0).is_empty());
         assert_eq!(topk_indices(&[1.0, 2.0], 5), vec![0, 1]);
+    }
+
+    #[test]
+    fn fused_above_count_matches_full_scan() {
+        // the partition-fused strictly-greater count must equal the count
+        // the old implementation obtained with a second pass
+        propcheck(300, |rng| {
+            let n = rng.below(1_500) + 2;
+            let keep = rng.below(n - 1) + 1; // 1..n so quickselect runs
+            let values: Vec<f32> = (0..n)
+                .map(|_| {
+                    // heavy ties: quantized magnitudes
+                    let v = (rng.normal() * 4.0).round() as f32 * 0.25;
+                    if rng.below(2) == 0 { v } else { -v }
+                })
+                .collect();
+            let mut mags: Vec<f32> = values.iter().map(|v| v.abs()).collect();
+            let (thresh, above) = quickselect_desc(&mut mags, keep - 1);
+            let scanned = values.iter().filter(|v| v.abs() > thresh).count();
+            assert_eq!(above, scanned, "n={n} keep={keep} thresh={thresh}");
+        });
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation() {
+        // warm buffers across calls of varying size must not change results
+        let mut mags = Vec::new();
+        let mut out = Vec::new();
+        let mut rng = crate::util::rng::Rng::new(11);
+        for n in [500usize, 37, 1200, 1, 64] {
+            let values: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+            let keep = n / 3;
+            topk_indices_into(&values, keep, &mut mags, &mut out);
+            assert_eq!(out, topk_indices(&values, keep), "n={n}");
+        }
     }
 
     #[test]

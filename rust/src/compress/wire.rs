@@ -16,14 +16,23 @@
 //!   u8  version | u8 encoding | u8 n_blocks
 //!   per block: u8 kind | u8 rice_b | u32 count | u32 idx_bytes_len
 //!              | idx bytes | count × u16 f16 values
+//!
+//! §Perf (codec hot path): the encode/decode entry points come in two
+//! flavors — the allocating convenience wrappers ([`encode`]/[`decode`])
+//! and the scratch-reusing hot-path forms ([`encode_into`] with an
+//! [`EncodeScratch`], [`Decoder::decode_into`]) that do no heap
+//! allocation once their buffers are warm. Both produce/accept identical
+//! bytes. The decoder cross-checks the index block's framed byte length
+//! against the bits the gap decoder actually consumed, so a truncated or
+//! padded index stream is rejected instead of silently tolerated.
 
 use std::ops::Range;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
 use crate::compress::golomb;
 use crate::model::LoraKind;
-use crate::util::bitstream::BitWriter;
+use crate::util::bitstream::{BitReader, BitWriter};
 use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits};
 
 const VERSION: u8 = 1;
@@ -93,6 +102,12 @@ impl SparseVec {
         self.idx.is_empty()
     }
 
+    /// Empty both columns, keeping their capacity (scratch reuse).
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.vals.clear();
+    }
+
     /// Restrict to a flat range (segment extraction, paper §3.3).
     pub fn restrict(&self, range: &Range<usize>) -> SparseVec {
         let lo = self.idx.partition_point(|&i| (i as usize) < range.start);
@@ -120,28 +135,62 @@ fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
     Ok(u32::from_le_bytes(b.try_into().unwrap()))
 }
 
-/// Encode a sparse update restricted to `range`. `k_hint` = (k_A, k_B)
-/// densities used to pick per-block Rice parameters. Values are quantized
-/// to f16 ON ENCODE — the caller must feed the same quantization into its
-/// residual so error feedback sees what the receiver saw.
-pub fn encode(
+/// Reusable encode-side buffers: per-block compacted indices and values,
+/// plus the bit writer. One per `Compressor` (or per encoding thread);
+/// never shared across threads. All buffers are presized with worst-case
+/// bounds on use, so a warm scratch never reallocates.
+#[derive(Default)]
+pub struct EncodeScratch {
+    compact: Vec<u32>,
+    vals: Vec<f32>,
+    bw: BitWriter,
+}
+
+impl EncodeScratch {
+    pub fn new() -> EncodeScratch {
+        EncodeScratch::default()
+    }
+}
+
+/// Encode a sparse update restricted to `range` into `out` (cleared
+/// first), reusing `scratch`. `k_hint` = (k_A, k_B) densities used to
+/// pick per-block Rice parameters. Values are quantized to f16 ON ENCODE
+/// — the caller must feed the same quantization into its residual so
+/// error feedback sees what the receiver saw.
+///
+/// `sv` may span more than `range`: the range window is located with two
+/// binary searches (no restricted copy is materialized) and out-of-range
+/// entries never influence the bytes.
+pub fn encode_into(
     sv: &SparseVec,
     range: &Range<usize>,
     kidx: &KindIndex,
     k_hint: (f64, f64),
     encoding: Encoding,
-) -> Result<Vec<u8>> {
-    let mut out = vec![VERSION, if encoding == Encoding::Golomb { 0 } else { 1 }, 2];
+    scratch: &mut EncodeScratch,
+    out: &mut Vec<u8>,
+) -> Result<()> {
+    out.clear();
+    let lo = sv.idx.partition_point(|&i| (i as usize) < range.start);
+    let hi = sv.idx.partition_point(|&i| (i as usize) < range.end);
+    let win_idx = &sv.idx[lo..hi];
+    let win_vals = &sv.vals[lo..hi];
+
+    out.reserve(3 + 2 * (2 + 4 + 4));
+    out.push(VERSION);
+    out.push(if encoding == Encoding::Golomb { 0 } else { 1 });
+    out.push(2);
     for (kind, k) in [(LoraKind::A, k_hint.0), (LoraKind::B, k_hint.1)] {
         let (fam, _rank0) = kidx.in_range(kind, range);
         // Compact kept indices of this kind into family coordinates.
-        let mut compact = Vec::new();
-        let mut vals = Vec::new();
+        let compact = &mut scratch.compact;
+        let vals = &mut scratch.vals;
+        compact.clear();
+        vals.clear();
+        compact.reserve(win_idx.len());
+        vals.reserve(win_idx.len());
         let mut cursor = 0usize;
-        for (&i, &v) in sv.idx.iter().zip(&sv.vals) {
-            if (i as usize) < range.start || (i as usize) >= range.end {
-                continue;
-            }
+        for (&i, &v) in win_idx.iter().zip(win_vals) {
             // advance cursor in fam to find i (both ascending)
             while cursor < fam.len() && fam[cursor] < i {
                 cursor += 1;
@@ -158,99 +207,177 @@ pub fn encode(
             LoraKind::B => 1,
         });
         out.push(b as u8);
-        push_u32(&mut out, compact.len() as u32);
-        let idx_bytes = match encoding {
-            Encoding::Golomb => golomb::encode_indices(&compact, b).into_bytes(),
-            Encoding::Fixed => {
-                let mut w = BitWriter::new();
-                for &c in &compact {
-                    w.write_bits(c as u64, 32);
-                }
-                w.into_bytes()
+        push_u32(out, compact.len() as u32);
+        let bw = &mut scratch.bw;
+        bw.clear();
+        match encoding {
+            Encoding::Golomb => {
+                bw.reserve_bits(golomb::max_stream_bits(compact.len(), fam.len(), b));
+                golomb::encode_indices_into(compact, b, bw);
             }
-        };
-        push_u32(&mut out, idx_bytes.len() as u32);
-        out.extend_from_slice(&idx_bytes);
-        for &v in &vals {
+            Encoding::Fixed => {
+                bw.reserve_bits(32 * compact.len() as u64);
+                for &c in compact.iter() {
+                    bw.write_bits(c as u64, 32);
+                }
+            }
+        }
+        push_u32(out, bw.byte_len() as u32);
+        out.reserve(bw.byte_len() + 2 * vals.len());
+        bw.drain_into(out);
+        for &v in vals.iter() {
             out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
         }
     }
+    Ok(())
+}
+
+/// Encode a sparse update restricted to `range` (allocating convenience
+/// form of [`encode_into`]; identical bytes).
+pub fn encode(
+    sv: &SparseVec,
+    range: &Range<usize>,
+    kidx: &KindIndex,
+    k_hint: (f64, f64),
+    encoding: Encoding,
+) -> Result<Vec<u8>> {
+    let mut scratch = EncodeScratch::default();
+    let mut out = Vec::new();
+    encode_into(sv, range, kidx, k_hint, encoding, &mut scratch, &mut out)?;
     Ok(out)
 }
 
-/// Decode a message produced by `encode` for the same (range, kidx).
-pub fn decode(bytes: &[u8], range: &Range<usize>, kidx: &KindIndex) -> Result<SparseVec> {
-    if bytes.len() < 3 || bytes[0] != VERSION {
-        return Err(anyhow!("wire: bad header"));
+/// Reusable decode-side buffers: the compact-index scratch and the
+/// per-kind block staging used by the ascending merge. One per
+/// participant worker / shard thread; never shared across threads. Warm
+/// buffers make [`Decoder::decode_into`] allocation-free in steady state.
+#[derive(Default)]
+pub struct Decoder {
+    compact: Vec<u32>,
+    blocks: Vec<Vec<(u32, f32)>>,
+    cursors: Vec<usize>,
+}
+
+impl Decoder {
+    pub fn new() -> Decoder {
+        Decoder::default()
     }
-    let encoding = if bytes[1] == 0 { Encoding::Golomb } else { Encoding::Fixed };
-    let n_blocks = bytes[2] as usize;
-    let mut pos = 3usize;
-    // per-block streams are ascending; a 2-way merge beats re-sorting
-    let mut blocks: Vec<Vec<(u32, f32)>> = Vec::with_capacity(n_blocks);
-    for _ in 0..n_blocks {
-        let kind = match bytes.get(pos) {
-            Some(0) => LoraKind::A,
-            Some(1) => LoraKind::B,
-            other => return Err(anyhow!("wire: bad kind {other:?}")),
-        };
-        let b = *bytes.get(pos + 1).ok_or_else(|| anyhow!("wire: truncated"))? as u32;
-        pos += 2;
-        let count = read_u32(bytes, &mut pos)? as usize;
-        let idx_len = read_u32(bytes, &mut pos)? as usize;
-        let idx_bytes = bytes
-            .get(pos..pos + idx_len)
-            .ok_or_else(|| anyhow!("wire: truncated index block"))?;
-        pos += idx_len;
-        let compact = match encoding {
-            Encoding::Golomb => golomb::decode_indices(idx_bytes, count, b)
-                .ok_or_else(|| anyhow!("wire: golomb decode failed"))?,
-            Encoding::Fixed => {
-                let mut r = crate::util::bitstream::BitReader::new(idx_bytes);
-                (0..count)
-                    .map(|_| r.read_bits(32).map(|x| x as u32))
-                    .collect::<Option<Vec<_>>>()
-                    .ok_or_else(|| anyhow!("wire: fixed decode failed"))?
-            }
-        };
-        let (fam, _rank0) = kidx.in_range(kind, range);
-        for c in &compact {
-            if *c as usize >= fam.len() {
-                return Err(anyhow!("wire: compact index out of family range"));
-            }
+
+    /// Decode a message produced by [`encode`] for the same
+    /// (range, kidx) into `out` (cleared first, capacity retained).
+    ///
+    /// Every decode-side buffer is presized from the header's entry
+    /// counts, and the index block's framed byte length must match the
+    /// bits the gap decoder consumed (`ceil(bits/8) == idx_bytes_len`) —
+    /// over- or under-running index streams are rejected.
+    pub fn decode_into(
+        &mut self,
+        bytes: &[u8],
+        range: &Range<usize>,
+        kidx: &KindIndex,
+        out: &mut SparseVec,
+    ) -> Result<()> {
+        out.clear();
+        if bytes.len() < 3 || bytes[0] != VERSION {
+            return Err(anyhow!("wire: bad header"));
         }
-        let mut block = Vec::with_capacity(count);
-        for i in 0..count {
-            let vb = bytes
-                .get(pos..pos + 2)
-                .ok_or_else(|| anyhow!("wire: truncated values"))?;
+        let encoding = if bytes[1] == 0 { Encoding::Golomb } else { Encoding::Fixed };
+        let n_blocks = bytes[2] as usize;
+        let mut pos = 3usize;
+        // per-block streams are ascending; a 2-way merge beats re-sorting
+        if self.blocks.len() < n_blocks {
+            self.blocks.resize_with(n_blocks, Vec::new);
+        }
+        for block in &mut self.blocks {
+            block.clear();
+        }
+        for bi in 0..n_blocks {
+            let kind = match bytes.get(pos) {
+                Some(0) => LoraKind::A,
+                Some(1) => LoraKind::B,
+                other => return Err(anyhow!("wire: bad kind {other:?}")),
+            };
+            let b = *bytes.get(pos + 1).ok_or_else(|| anyhow!("wire: truncated"))? as u32;
+            ensure!(b < 64, "wire: rice parameter {b} out of range");
             pos += 2;
-            let v = f16_bits_to_f32(u16::from_le_bytes(vb.try_into().unwrap()));
-            block.push((fam[compact[i] as usize], v));
-        }
-        blocks.push(block);
-    }
-    // merge the (ascending) per-kind streams
-    let total: usize = blocks.iter().map(|b| b.len()).sum();
-    let mut idx = Vec::with_capacity(total);
-    let mut vals = Vec::with_capacity(total);
-    let mut cursors = vec![0usize; blocks.len()];
-    for _ in 0..total {
-        let mut best: Option<usize> = None;
-        for (b, &c) in cursors.iter().enumerate() {
-            if c < blocks[b].len()
-                && best.map_or(true, |bb| blocks[b][c].0 < blocks[bb][cursors[bb]].0)
-            {
-                best = Some(b);
+            let count = read_u32(bytes, &mut pos)? as usize;
+            let idx_len = read_u32(bytes, &mut pos)? as usize;
+            let idx_bytes = bytes
+                .get(pos..pos + idx_len)
+                .ok_or_else(|| anyhow!("wire: truncated index block"))?;
+            pos += idx_len;
+            let compact = &mut self.compact;
+            let bits_used = match encoding {
+                Encoding::Golomb => golomb::decode_indices_into(idx_bytes, count, b, compact)
+                    .ok_or_else(|| anyhow!("wire: golomb decode failed"))?,
+                Encoding::Fixed => {
+                    let mut r = BitReader::new(idx_bytes);
+                    compact.clear();
+                    compact.reserve(count);
+                    for _ in 0..count {
+                        let x = r
+                            .read_bits(32)
+                            .ok_or_else(|| anyhow!("wire: fixed decode failed"))?;
+                        compact.push(x as u32);
+                    }
+                    r.bits_consumed()
+                }
+            };
+            ensure!(
+                bits_used.div_ceil(8) == idx_len as u64,
+                "wire: index block length mismatch ({bits_used} bits decoded in {idx_len} framed bytes)"
+            );
+            let (fam, _rank0) = kidx.in_range(kind, range);
+            for c in compact.iter() {
+                if *c as usize >= fam.len() {
+                    return Err(anyhow!("wire: compact index out of family range"));
+                }
+            }
+            let block = &mut self.blocks[bi];
+            block.reserve(count);
+            for &c in compact.iter() {
+                let vb = bytes
+                    .get(pos..pos + 2)
+                    .ok_or_else(|| anyhow!("wire: truncated values"))?;
+                pos += 2;
+                let v = f16_bits_to_f32(u16::from_le_bytes(vb.try_into().unwrap()));
+                block.push((fam[c as usize], v));
             }
         }
-        let b = best.unwrap();
-        let (i, v) = blocks[b][cursors[b]];
-        cursors[b] += 1;
-        idx.push(i);
-        vals.push(v);
+        // merge the (ascending) per-kind streams
+        let blocks = &self.blocks[..n_blocks];
+        let total: usize = blocks.iter().map(|b| b.len()).sum();
+        out.idx.reserve(total);
+        out.vals.reserve(total);
+        let cursors = &mut self.cursors;
+        cursors.clear();
+        cursors.resize(n_blocks, 0);
+        for _ in 0..total {
+            let mut best: Option<usize> = None;
+            for (b, &c) in cursors.iter().enumerate() {
+                if c < blocks[b].len()
+                    && best.is_none_or(|bb| blocks[b][c].0 < blocks[bb][cursors[bb]].0)
+                {
+                    best = Some(b);
+                }
+            }
+            let b = best.unwrap();
+            let (i, v) = blocks[b][cursors[b]];
+            cursors[b] += 1;
+            out.idx.push(i);
+            out.vals.push(v);
+        }
+        Ok(())
     }
-    Ok(SparseVec { idx, vals })
+}
+
+/// Decode a message produced by `encode` for the same (range, kidx)
+/// (allocating convenience form of [`Decoder::decode_into`]).
+pub fn decode(bytes: &[u8], range: &Range<usize>, kidx: &KindIndex) -> Result<SparseVec> {
+    let mut dec = Decoder::new();
+    let mut out = SparseVec::default();
+    dec.decode_into(bytes, range, kidx, &mut out)?;
+    Ok(out)
 }
 
 /// Exact on-the-wire size accounting without building the message
@@ -266,7 +393,7 @@ pub fn encoded_size_estimate(n_a: usize, n_b: usize, k_a: f64, k_b: f64, encodin
             }
             Encoding::Fixed => 32 * n,
         };
-        bytes += (idx_bits + 7) / 8 + 2 * n;
+        bytes += idx_bits.div_ceil(8) + 2 * n;
     }
     bytes
 }
@@ -325,6 +452,88 @@ mod tests {
             let dec = decode(&enc, &range, &kidx).unwrap();
             assert_eq!(dec, sv);
         });
+    }
+
+    #[test]
+    fn scratch_paths_match_allocating_paths_bytewise() {
+        // encode_into with a warm reused scratch must emit the exact
+        // bytes of the allocating encode(), and Decoder::decode_into must
+        // agree with decode(), across ranges, encodings, and sv windows
+        // wider than the range (the no-restrict path).
+        let mut scratch = EncodeScratch::default();
+        let mut dec = Decoder::new();
+        let mut out = Vec::new();
+        let mut dsv = SparseVec::default();
+        // plain loop (not propcheck): the scratch must stay warm ACROSS
+        // cases, which a Fn closure cannot mutably capture
+        let mut rng = crate::util::rng::Rng::new(0xC0DEC);
+        for case in 0..120 {
+            let rng = &mut rng;
+            let n = 2_048;
+            let kinds = kinds_interleaved(n, 32);
+            let kidx = KindIndex::new(&kinds);
+            let count = rng.below(n / 2) + 1;
+            let mut idx: Vec<u32> =
+                rng.sample_indices(n, count).iter().map(|&i| i as u32).collect();
+            idx.sort_unstable();
+            let vals: Vec<f32> = idx.iter().map(|_| quantize_f16(rng.normal() as f32)).collect();
+            let sv = SparseVec { idx, vals };
+            let lo = rng.below(n - 1);
+            let hi = lo + 1 + rng.below(n - lo - 1);
+            let range = lo..hi;
+            let encoding = if rng.below(2) == 0 { Encoding::Golomb } else { Encoding::Fixed };
+            let k = (rng.range_f64(0.01, 0.95), rng.range_f64(0.01, 0.95));
+
+            // NOTE: sv deliberately spans beyond `range` — encode() used
+            // to rely on the caller restricting; encode_into windows
+            // internally and must match encode() on the SAME input.
+            let reference = encode(&sv, &range, &kidx, k, encoding).unwrap();
+            let mut local_scratch = EncodeScratch::default();
+            let mut fresh = Vec::new();
+            encode_into(&sv, &range, &kidx, k, encoding, &mut local_scratch, &mut fresh).unwrap();
+            assert_eq!(fresh, reference, "fresh scratch diverges (case {case})");
+
+            encode_into(&sv, &range, &kidx, k, encoding, &mut scratch, &mut out).unwrap();
+            assert_eq!(out, reference, "warm scratch diverges (case {case})");
+
+            let expect = decode(&reference, &range, &kidx).unwrap();
+            dec.decode_into(&reference, &range, &kidx, &mut dsv).unwrap();
+            assert_eq!(dsv, expect, "warm decoder diverges (case {case})");
+            assert_eq!(dsv, sv.restrict(&range), "decode loses the window (case {case})");
+        }
+    }
+
+    #[test]
+    fn index_block_length_mismatch_rejected() {
+        // a message whose framed idx_bytes_len disagrees with the bits the
+        // gap decoder consumes must be rejected (padded AND truncated)
+        let n = 64;
+        let kinds = kinds_interleaved(n, 8);
+        let kidx = KindIndex::new(&kinds);
+        let sv = SparseVec { idx: vec![3, 10, 17], vals: vec![1.0, -1.0, 0.5] };
+        let range = 0..n;
+        let good = encode(&sv, &range, &kidx, (0.2, 0.2), Encoding::Golomb).unwrap();
+        assert!(decode(&good, &range, &kidx).is_ok());
+
+        // block 0 starts at offset 3: kind(1) b(1) count(4) idx_len(4)
+        let idx_len_off = 3 + 2 + 4;
+        let old_len = u32::from_le_bytes(good[idx_len_off..idx_len_off + 4].try_into().unwrap());
+        assert!(old_len > 0, "test needs a nonempty index block");
+
+        // pad: one extra zero byte inside the framed index block
+        let mut padded = good.clone();
+        padded[idx_len_off..idx_len_off + 4].copy_from_slice(&(old_len + 1).to_le_bytes());
+        let data_start = idx_len_off + 4;
+        padded.insert(data_start + old_len as usize, 0);
+        let err = decode(&padded, &range, &kidx).unwrap_err();
+        assert!(format!("{err:#}").contains("length mismatch"), "{err:#}");
+
+        // truncate: drop the frame's last byte (and the byte itself) —
+        // the gap decoder runs out of bits mid-stream and must reject
+        let mut truncated = good.clone();
+        truncated[idx_len_off..idx_len_off + 4].copy_from_slice(&(old_len - 1).to_le_bytes());
+        truncated.remove(data_start + old_len as usize - 1);
+        assert!(decode(&truncated, &range, &kidx).is_err(), "truncated frame accepted");
     }
 
     #[test]

@@ -48,6 +48,35 @@ pub struct Broadcast {
     pub wire: Option<DownWire>,
 }
 
+/// Apply one sparse downlink message to `reference`, reusing the
+/// caller's decoder + `SparseVec` scratch (the participant hot path:
+/// allocation-free once warm). Returns the transmitted parameter count.
+pub fn apply_sparse_down(
+    bytes: &[u8],
+    reference: &mut [f32],
+    kidx: &KindIndex,
+    dec: &mut wire::Decoder,
+    sv: &mut wire::SparseVec,
+) -> Result<usize> {
+    dec.decode_into(bytes, &(0..reference.len()), kidx, sv)?;
+    sv.add_to(reference);
+    Ok(sv.len())
+}
+
+/// Apply one dense-f16 downlink delta to `reference` (allocation-free).
+pub fn apply_dense_f16(bytes: &[u8], reference: &mut [f32]) -> Result<usize> {
+    anyhow::ensure!(
+        bytes.len() == 2 * reference.len(),
+        "downlink dense f16 payload: {} bytes for {} params",
+        bytes.len(),
+        reference.len()
+    );
+    for (r, ch) in reference.iter_mut().zip(bytes.chunks_exact(2)) {
+        *r += f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
+    }
+    Ok(reference.len())
+}
+
 /// Client-side mirror of [`DownlinkState::broadcast`]: advance the local
 /// `reference` copy by the decoded delta. Server and client apply the SAME
 /// quantized values, so the two references stay bit-identical. Returns the
@@ -59,22 +88,11 @@ pub fn apply_down_wire(
 ) -> Result<usize> {
     match msg {
         DownWire::Sparse(bytes) => {
-            let sv = wire::decode(bytes, &(0..reference.len()), kidx)?;
-            sv.add_to(reference);
-            Ok(sv.len())
+            let mut dec = wire::Decoder::new();
+            let mut sv = wire::SparseVec::default();
+            apply_sparse_down(bytes, reference, kidx, &mut dec, &mut sv)
         }
-        DownWire::DenseF16(bytes) => {
-            anyhow::ensure!(
-                bytes.len() == 2 * reference.len(),
-                "downlink dense f16 payload: {} bytes for {} params",
-                bytes.len(),
-                reference.len()
-            );
-            for (r, ch) in reference.iter_mut().zip(bytes.chunks_exact(2)) {
-                *r += f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
-            }
-            Ok(reference.len())
-        }
+        DownWire::DenseF16(bytes) => apply_dense_f16(bytes, reference),
     }
 }
 
@@ -85,6 +103,10 @@ pub struct DownlinkState {
     mode: SparsMode,
     encoding: Encoding,
     init: Vec<f32>,
+    /// Broadcast scratch (channels are served serially): the dense delta
+    /// `global − ref_i` and the compression output, reused every call.
+    delta: Vec<f32>,
+    out: Compressed,
 }
 
 impl DownlinkState {
@@ -105,6 +127,8 @@ impl DownlinkState {
             mode,
             encoding,
             init,
+            delta: Vec::new(),
+            out: Compressed::default(),
         }
     }
 
@@ -125,11 +149,12 @@ impl DownlinkState {
             comp: Compressor::new(self.mode, self.encoding, self.kinds.clone(), self.kidx.clone()),
         });
         let n = global.len();
-        let mut delta = vec![0.0f32; n];
-        for i in 0..n {
-            delta[i] = global[i] - ch.reference[i];
-        }
-        let out: Compressed = ch.comp.compress(&delta, l0, l_prev);
+        let delta = &mut self.delta;
+        delta.clear();
+        delta.reserve(n);
+        delta.extend(global.iter().zip(&ch.reference).map(|(g, r)| g - r));
+        ch.comp.compress_into(delta, l0, l_prev, &mut self.out);
+        let out = &self.out;
         let range = 0..n;
         let (bytes, msg) = match &out.dense {
             // unsparsified downlink: dense f16 of the full vector. The sv
@@ -147,7 +172,8 @@ impl DownlinkState {
             }
             None => {
                 // the sparse message is built anyway for exact byte counts
-                let enc = wire::encode(&out.sv, &range, &self.kidx, out.k, self.encoding)?;
+                let mut enc = Vec::new();
+                ch.comp.encode_range_into(out, &range, &mut enc)?;
                 (enc.len(), want_wire.then(|| DownWire::Sparse(enc)))
             }
         };

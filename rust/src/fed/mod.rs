@@ -29,7 +29,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::baselines::Method;
-use crate::compress::{dense_bytes, wire, Encoding, KindIndex, SparsMode};
+use crate::compress::{dense_bytes, Encoding, KindIndex, SparsMode};
 use crate::xla;
 use crate::data::{corpus, preference, Dataset, PartitionKind};
 use crate::eval::{DpoEvaluator, McEvaluator};
@@ -361,14 +361,16 @@ impl FedRunner {
                 update[i] = local[i] - base_point[i];
             }
             match (&mut client.comp, self.cfg.eco) {
-                (Some(comp), Some(eco)) => {
+                (Some(comp), Some(_eco)) => {
                     let out = comp.compress(&update, loss_signal.0, loss_signal.1);
                     rec.k_a = out.k.0;
                     rec.k_b = out.k.1;
                     let seg = round_robin::segment_for(slot, t as usize, n_s);
                     let range = agg.range(seg).clone();
-                    let sv = out.sv.restrict(&range);
-                    let bytes = wire::encode(&sv, &range, &self.kidx, out.k, eco.encoding)?;
+                    // encodes straight from the binary-searched range
+                    // window of out.sv (byte-identical to the historical
+                    // restrict-then-encode; comp.encoding == eco.encoding)
+                    let bytes = comp.encode_range(&out, &range)?;
                     // the server decodes the exact wire message
                     let params = agg.add_wire(seg, &bytes, &self.kidx, client.n_samples as f64)?;
                     rec.up.add(params, bytes.len());

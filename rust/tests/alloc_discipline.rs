@@ -1,0 +1,164 @@
+//! Steady-state allocation discipline (§Perf, codec hot path): after
+//! warm-up, `Compressor::compress_into` + `encode_range_into` rounds and
+//! `Decoder::decode_into` rounds must perform ZERO heap allocations —
+//! every buffer in the sparsify→quantize→Golomb-encode pipeline is
+//! reusable scratch.
+//!
+//! Gated behind `ECOLORA_ALLOC_TESTS=1` (the CI perf-smoke job sets it):
+//! a counting global allocator needs a quiet, dedicated test process —
+//! this file is its own integration-test binary with exactly these
+//! tests, run with `cargo test --release --test alloc_discipline`.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use ecolora::compress::{wire, Compressed, Compressor, Encoding, KindIndex, SparsMode, SparseVec};
+use ecolora::model::LoraKind;
+use ecolora::util::rng::Rng;
+
+/// Pass-through allocator that counts alloc/realloc events while armed.
+struct CountingAlloc;
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static REALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            ALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if ARMED.load(Ordering::Relaxed) {
+            REALLOCS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// The counters are process-global and libtest runs `#[test]`s on
+/// parallel threads, so the armed window of one test must never overlap
+/// another test's setup allocations: every test body runs under this
+/// lock (CI additionally passes `--test-threads=1`, but the lock makes
+/// the binary safe to run bare).
+static SERIAL: Mutex<()> = Mutex::new(());
+
+fn gated() -> bool {
+    if std::env::var_os("ECOLORA_ALLOC_TESTS").is_none() {
+        eprintln!(
+            "alloc_discipline: skipped (set ECOLORA_ALLOC_TESTS=1; needs a quiet dedicated process)"
+        );
+        return false;
+    }
+    true
+}
+
+fn arm() {
+    ALLOCS.store(0, Ordering::SeqCst);
+    REALLOCS.store(0, Ordering::SeqCst);
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+fn disarm() -> (u64, u64) {
+    ARMED.store(false, Ordering::SeqCst);
+    (ALLOCS.load(Ordering::SeqCst), REALLOCS.load(Ordering::SeqCst))
+}
+
+fn setup(n: usize) -> (Arc<Vec<LoraKind>>, Arc<KindIndex>, Vec<f32>) {
+    let kinds: Vec<LoraKind> = (0..n)
+        .map(|i| if (i / 32) % 2 == 0 { LoraKind::A } else { LoraKind::B })
+        .collect();
+    let kidx = Arc::new(KindIndex::new(&kinds));
+    let mut rng = Rng::new(404);
+    let update: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.05).collect();
+    (Arc::new(kinds), kidx, update)
+}
+
+#[test]
+fn steady_state_compress_and_encode_do_not_allocate() {
+    let _serial = SERIAL.lock().unwrap();
+    if !gated() {
+        return;
+    }
+    let n = 8_192;
+    let (kinds, kidx, update) = setup(n);
+    let mut comp = Compressor::new(SparsMode::Fixed(0.1), Encoding::Golomb, kinds, kidx);
+    let mut out = Compressed::default();
+    let mut bytes = Vec::new();
+    // full-vector range: the window size (and so every scratch high-water
+    // mark) is identical round over round, while the error-feedback
+    // rotation still changes WHICH indices are kept each round
+    let range = 0..n;
+
+    // warm up: grow every scratch buffer to its steady-state capacity
+    for _ in 0..5 {
+        comp.compress_into(&update, 3.0, 2.0, &mut out);
+        comp.encode_range_into(&out, &range, &mut bytes).unwrap();
+    }
+    // generous headroom for the payload buffer: the encoded length
+    // breathes a few bytes round-to-round as the kept set rotates
+    bytes.reserve(4096);
+
+    arm();
+    for _ in 0..3 {
+        comp.compress_into(&update, 3.0, 2.0, &mut out);
+        comp.encode_range_into(&out, &range, &mut bytes).unwrap();
+    }
+    let (allocs, reallocs) = disarm();
+    assert!(!out.sv.is_empty() && !bytes.is_empty(), "pipeline must have produced output");
+    assert_eq!(
+        (allocs, reallocs),
+        (0, 0),
+        "steady-state compress+encode rounds allocated: {allocs} allocs, {reallocs} reallocs"
+    );
+}
+
+#[test]
+fn steady_state_decode_does_not_allocate() {
+    let _serial = SERIAL.lock().unwrap();
+    if !gated() {
+        return;
+    }
+    let n = 8_192;
+    let (kinds, kidx, update) = setup(n);
+    let mut comp = Compressor::new(SparsMode::Fixed(0.1), Encoding::Golomb, kinds, kidx.clone());
+    let out = comp.compress(&update, 3.0, 2.0);
+    let range = 0..n;
+    let msg = comp.encode_range(&out, &range).unwrap();
+
+    let mut dec = wire::Decoder::new();
+    let mut sv = SparseVec::default();
+    for _ in 0..3 {
+        dec.decode_into(&msg, &range, &kidx, &mut sv).unwrap();
+    }
+
+    arm();
+    for _ in 0..3 {
+        dec.decode_into(&msg, &range, &kidx, &mut sv).unwrap();
+    }
+    let (allocs, reallocs) = disarm();
+    assert_eq!(sv, out.sv, "decode must reconstruct the update");
+    assert_eq!(
+        (allocs, reallocs),
+        (0, 0),
+        "steady-state decode rounds allocated: {allocs} allocs, {reallocs} reallocs"
+    );
+}

@@ -1,0 +1,121 @@
+//! Golden wire vectors: byte-exact fixtures captured from the
+//! PRE-REFACTOR (byte-at-a-time) encoder, pinning the frozen wire format
+//! across codec rewrites. If any of these fail, the wire format changed
+//! — that is a protocol break, not a test to update. (Generated once
+//! with an independent reimplementation of the historical encoder and
+//! verified bit-by-bit by hand; see the word-vs-byte equivalence
+//! propcheck in `util::bitstream` for the exhaustive randomized check.)
+//!
+//! Ungated: runs everywhere, no artifacts needed.
+
+use ecolora::compress::{golomb, wire, Encoding, KindIndex, SparseVec};
+use ecolora::model::LoraKind;
+
+fn unhex(s: &str) -> Vec<u8> {
+    assert!(s.len() % 2 == 0);
+    (0..s.len() / 2)
+        .map(|i| u8::from_str_radix(&s[2 * i..2 * i + 2], 16).unwrap())
+        .collect()
+}
+
+fn kinds_16_interleaved(n: usize) -> Vec<LoraKind> {
+    (0..n)
+        .map(|i| if (i / 16) % 2 == 0 { LoraKind::A } else { LoraKind::B })
+        .collect()
+}
+
+/// The shared fixture update: ascending indices over a 64-param vector
+/// with alternating 16-wide A/B blocks, all values exactly f16.
+fn fixture_sv() -> SparseVec {
+    SparseVec {
+        idx: vec![1, 5, 14, 16, 18, 30, 33, 47, 50, 63],
+        vals: vec![1.0, -2.0, 0.5, 0.25, -0.75, 3.0, -1.5, 8.0, -0.125, 2.5],
+    }
+}
+
+#[test]
+fn golden_rice_params() {
+    // pinned Golomb parameters for the fixture densities
+    assert_eq!(golomb::rice_param_for_density(0.5), 0);
+    assert_eq!(golomb::rice_param_for_density(0.3), 1);
+    assert_eq!(golomb::rice_param_for_density(0.2), 2);
+    assert_eq!(golomb::rice_param_for_density(0.1), 3);
+}
+
+#[test]
+fn golden_golomb_streams() {
+    let idx: Vec<u32> = vec![0, 3, 4, 11, 12, 13, 40, 41, 96, 255];
+    let cases = [
+        (0u32, 256u64, "67e3ffffff3fffffffffffff7ffffffffffffffffffffffffffffffffffffffe"),
+        (1, 143, "21c0fff87ffffff3fffffffffffffffffff8"),
+        (2, 89, "08501fa1fff5fffffffffd00"),
+        (4, 63, "00806002a0737fdc"),
+    ];
+    for (b, bits, hex) in cases {
+        let w = golomb::encode_indices(&idx, b);
+        assert_eq!(w.bit_len(), bits, "b={b} bit length");
+        let bytes = w.into_bytes();
+        assert_eq!(bytes, unhex(hex), "b={b} stream bytes");
+        // and the word-at-a-time decoder reads the historical bytes back
+        let mut decoded = Vec::new();
+        let consumed = golomb::decode_indices_into(&bytes, idx.len(), b, &mut decoded).unwrap();
+        assert_eq!(decoded, idx, "b={b} decode");
+        assert_eq!(consumed, bits, "b={b} bits consumed");
+    }
+}
+
+#[test]
+fn golden_wire_message_full_range() {
+    let kinds = kinds_16_interleaved(64);
+    let kidx = KindIndex::new(&kinds);
+    let sv = fixture_sv();
+    let golden = unhex(
+        "010002000105000000030000006f93f4003c00c0003800be00480102050000000300\
+         0000076f80003400ba004200b00041",
+    );
+    let enc = wire::encode(&sv, &(0..64), &kidx, (0.3, 0.2), Encoding::Golomb).unwrap();
+    assert_eq!(enc, golden, "allocating encoder diverges from golden bytes");
+
+    let mut scratch = wire::EncodeScratch::new();
+    let mut out = Vec::new();
+    wire::encode_into(&sv, &(0..64), &kidx, (0.3, 0.2), Encoding::Golomb, &mut scratch, &mut out)
+        .unwrap();
+    assert_eq!(out, golden, "scratch encoder diverges from golden bytes");
+
+    assert_eq!(wire::decode(&golden, &(0..64), &kidx).unwrap(), sv);
+    let mut dec = wire::Decoder::new();
+    let mut dsv = SparseVec::default();
+    dec.decode_into(&golden, &(0..64), &kidx, &mut dsv).unwrap();
+    assert_eq!(dsv, sv);
+}
+
+#[test]
+fn golden_wire_message_segment_range() {
+    let kinds = kinds_16_interleaved(64);
+    let kidx = KindIndex::new(&kinds);
+    let sv = fixture_sv();
+    let range = 10..50;
+    let golden = unhex(
+        "01000200000300000003000000f6fff8003800be0048010303000000020000000198\
+         003400ba0042",
+    );
+    // sv spans beyond the range on both sides: the encoder must window
+    let enc = wire::encode(&sv, &range, &kidx, (0.5, 0.1), Encoding::Golomb).unwrap();
+    assert_eq!(enc, golden, "segment encoder diverges from golden bytes");
+    assert_eq!(wire::decode(&golden, &range, &kidx).unwrap(), sv.restrict(&range));
+}
+
+#[test]
+fn golden_wire_message_fixed_encoding() {
+    let kinds = kinds_16_interleaved(64);
+    let kidx = KindIndex::new(&kinds);
+    let sv = fixture_sv();
+    let golden = unhex(
+        "0101020001050000001400000000000001000000050000000e000000110000001f00\
+         3c00c0003800be00480102050000001400000000000000000000020000000e000000\
+         120000001f003400ba004200b00041",
+    );
+    let enc = wire::encode(&sv, &(0..64), &kidx, (0.3, 0.2), Encoding::Fixed).unwrap();
+    assert_eq!(enc, golden, "fixed-encoding diverges from golden bytes");
+    assert_eq!(wire::decode(&golden, &(0..64), &kidx).unwrap(), sv);
+}
