@@ -170,7 +170,18 @@ pub struct RoundState {
     /// Clients ever assigned to each slot (original first, then
     /// replacements) — the set of legitimate reporters for the slot.
     assignees: Vec<Vec<u32>>,
+    /// Per-slot re-dispatch waves spent against the CURRENT worker
+    /// capacity (reset by [`RoundState::reopen_waves`] when a worker
+    /// rejoins mid-collect).
     attempts: Vec<u32>,
+    /// Per-slot count of tasks actually BUILT (broadcast + successful
+    /// resample draws) — the upper bound on legitimate reporters, which
+    /// is what the duplicate-result guard must compare against
+    /// (assignee draws whose owner was down never produced a task).
+    tasks_built: Vec<u32>,
+    /// Total re-dispatches this round, monotone across wave-budget
+    /// resets (feeds the `resampled` metric).
+    waves_spent: usize,
     orphaned: usize,
     started: Instant,
     quorum_wait_s: Option<f64>,
@@ -195,6 +206,22 @@ impl RoundState {
     pub fn unfilled_slots(&self) -> Vec<usize> {
         (0..self.n_t).filter(|&s| self.done[s].is_none()).collect()
     }
+
+    /// A worker (re)joined mid-collect: grant every unfilled slot a
+    /// fresh re-dispatch wave budget so the recovered capacity can be
+    /// used — without this, a slot whose [`MAX_REDISPATCH`] waves were
+    /// all spent against dead connections could never be dispatched to
+    /// the rejoined worker and the round would be stuck waiting on
+    /// nothing. Replacement choice stays deterministic: the resample
+    /// stream is keyed by `(seed, round, slot, attempt)` and previously
+    /// assigned clients remain excluded via the assignee list.
+    pub fn reopen_waves(&mut self) {
+        for slot in 0..self.n_t {
+            if self.done[slot].is_none() {
+                self.attempts[slot] = 0;
+            }
+        }
+    }
 }
 
 /// The server-side control agent: owns the global model, downlink
@@ -216,6 +243,17 @@ pub struct ControlPlane {
     /// a racer result (original vs. replacement of a resampled slot)
     /// arriving after its round closed cannot fold a second time.
     filled: HashSet<(u64, u32)>,
+    /// Per-client count of STATEFUL downlinks (sparse/f16 deltas) ever
+    /// built — the `TrainTask::down_seq` the participant checks so a
+    /// delta lost in transit fails loudly instead of silently
+    /// desynchronizing the client's reference reconstruction.
+    down_seq: Vec<u64>,
+    /// Clients whose stateful downlink channel lost a delta in transit
+    /// (a task was built — advancing the channel — but its send failed).
+    /// Their reconstruction can never be trusted again this run, so they
+    /// are excluded from every future dispatch instead of aborting the
+    /// run rounds later on the participant's desync guard.
+    lost_channel: HashSet<usize>,
     /// Straggler payload bytes admitted toward the aggregation plane's
     /// byte cap since the last round close (global meter — the admission
     /// decision must not depend on the shard map, so `--shards N` stays
@@ -268,6 +306,8 @@ impl ControlPlane {
             evaluator,
             dpo_eval,
             weights,
+            down_seq: vec![0; cfg.n_clients],
+            lost_channel: HashSet::new(),
             cfg,
             policy,
             filled: HashSet::new(),
@@ -318,7 +358,8 @@ impl ControlPlane {
 
     /// Compress (or materialize) the downlink payload for `ci` and charge
     /// it to `rec.down` — shared by the initial broadcast and timed-out
-    /// slot re-dispatch.
+    /// slot re-dispatch. Returns the payload plus its stateful-downlink
+    /// sequence number (`TrainTask::down_seq`; 0 for stateless payloads).
     fn make_downlink(
         &mut self,
         ci: usize,
@@ -326,35 +367,47 @@ impl ControlPlane {
         loss_signal: (f64, f64),
         flora_init: Option<&[f32]>,
         rec: &mut RoundRecord,
-    ) -> Result<DownPayload> {
+    ) -> Result<(DownPayload, u64)> {
         Ok(if let Some(init) = flora_init {
             // FLoRA re-distributes the stacked modules: accounted as
             // N_t × module even though the restart init itself travels.
             let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
             rec.down.add(p, dense_bytes(p));
-            DownPayload::FloraInit(init.to_vec())
+            (DownPayload::FloraInit(init.to_vec()), 0)
         } else if let Some(dl) = &mut self.dl {
             let b = dl.broadcast(ci, &self.global, loss_signal.0, loss_signal.1, true)?;
             rec.down.add(b.params, b.bytes);
-            match b.wire.expect("broadcast(want_wire=true) returns the message") {
+            // the broadcast advanced the server-side reference for `ci`;
+            // the sequence number lets the participant prove it applied
+            // every predecessor before this delta
+            self.down_seq[ci] += 1;
+            let payload = match b.wire.expect("broadcast(want_wire=true) returns the message") {
                 DownWire::Sparse(x) => DownPayload::SparseWire(x),
                 DownWire::DenseF16(x) => DownPayload::DenseF16(x),
-            }
+            };
+            (payload, self.down_seq[ci])
         } else {
             let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
             rec.down.add(p, dense_bytes(p));
-            DownPayload::DenseF32(self.global.clone())
+            (DownPayload::DenseF32(self.global.clone()), 0)
         })
     }
 
     /// Phases 1+2 (Sampling + Broadcast): pick the cohort, compress each
     /// client's downlink, fork its batch-RNG stream, and emit slot-ordered
     /// `(owner_worker, TrainTask)` pairs. `n_workers` fixes the static
-    /// client→worker ownership map (`client mod n_workers`).
+    /// client→worker ownership map (`client mod n_workers`); `alive[w]`
+    /// says whether worker `w` currently has a live connection — a slot
+    /// whose owner is down gets NO task (building one would advance the
+    /// client's stateful downlink channel for bytes that can never be
+    /// delivered, poisoning the client against a future rejoin); under
+    /// `Quorum` the wave machinery resamples such slots, and a `Sync`
+    /// caller must refuse to start the round instead.
     pub fn begin_round(
         &mut self,
         t: u64,
         n_workers: usize,
+        alive: &[bool],
     ) -> Result<(RoundState, Vec<(usize, TrainTask)>)> {
         let n_t = self.cfg.clients_per_round.min(self.cfg.n_clients);
         let sampled = self.cfg.sampling.sample(
@@ -382,9 +435,18 @@ impl ControlPlane {
         let deadline_ms = self.policy.deadline_ms();
         let mut overhead = 0.0f64;
         let mut tasks = Vec::with_capacity(n_t);
+        let mut tasks_built = vec![0u32; n_t];
         for (slot, &ci) in sampled.iter().enumerate() {
+            let owner = ci % n_workers.max(1);
+            if !alive.get(owner).copied().unwrap_or(true)
+                || self.lost_channel.contains(&ci)
+            {
+                continue; // owner down or channel lost: no task, no
+                          // stateful-downlink advance
+            }
+            tasks_built[slot] = 1;
             let t0 = Instant::now();
-            let down =
+            let (down, down_seq) =
                 self.make_downlink(ci, n_t, loss_signal, flora_init.as_deref(), &mut rec)?;
             overhead += t0.elapsed().as_secs_f64();
 
@@ -402,6 +464,7 @@ impl ControlPlane {
                     l_prev: loss_signal.1,
                     rng_state: brng.state(),
                     deadline_ms,
+                    down_seq,
                     down,
                 },
             ));
@@ -422,6 +485,8 @@ impl ControlPlane {
             received: 0,
             assignees: sampled.iter().map(|&ci| vec![ci as u32]).collect(),
             attempts: vec![0; n_t],
+            tasks_built,
+            waves_spent: 0,
             orphaned: 0,
             started: Instant::now(),
             quorum_wait_s: None,
@@ -461,8 +526,13 @@ impl ControlPlane {
         );
         if rs.done[slot].is_some() {
             // a resampled slot legitimately reports more than once: the
-            // first arrival won the slot, the rest are orphans
-            ensure!(rs.attempts[slot] > 0, "duplicate result for slot {slot}");
+            // first arrival won the slot, the rest are orphans. Judged by
+            // the count of tasks actually built for the slot — not the
+            // wave counter (reset by `reopen_waves`) and not the assignee
+            // list (which also records dead-owner draws that never became
+            // a task) — so a second result from a slot's ONLY task is
+            // still the protocol violation it always was
+            ensure!(rs.tasks_built[slot] > 1, "duplicate result for slot {slot}");
             rs.orphaned += 1;
             return Ok(None);
         }
@@ -521,6 +591,20 @@ impl ControlPlane {
         Ok(routed)
     }
 
+    /// A built task carrying a stateful downlink could not be handed to
+    /// the transport (the owning worker died between the task build and
+    /// the send): the server-side channel advanced for a delta that
+    /// never left, so the client's reconstruction is unrecoverable this
+    /// run. Excludes the client from all future dispatch — the run
+    /// degrades by one client instead of aborting rounds later on the
+    /// participant's desync guard. No-op for stateless downlink
+    /// configurations (nothing server-side advanced).
+    pub fn downlink_lost(&mut self, client: u32) {
+        if self.dl.is_some() {
+            self.lost_channel.insert(client as usize);
+        }
+    }
+
     /// Vet a straggler result from an ALREADY-CLOSED round. Returns the
     /// result for the router to buffer on the owning shard, or `None`
     /// when it must be discarded: unknown client, a slot that already
@@ -551,12 +635,17 @@ impl ControlPlane {
     /// never touches the root RNG — a quorum run in which no slot ever
     /// times out therefore stays bitwise identical to the sync path.
     /// Returns `None` once the slot has exhausted [`MAX_REDISPATCH`]
-    /// waves (the round then waits for quorum from what is in flight).
+    /// waves (the round then waits for quorum from what is in flight),
+    /// and also when the drawn replacement's owning worker is down
+    /// (`alive`, as in [`ControlPlane::begin_round`]) — the wave is
+    /// spent, the client's channel stays untouched, and the next wave
+    /// draws a different replacement.
     pub fn resample_slot(
         &mut self,
         rs: &mut RoundState,
         slot: usize,
         n_workers: usize,
+        alive: &[bool],
     ) -> Result<Option<(usize, TrainTask)>> {
         ensure!(rs.phase == Phase::Collect, "resample outside Collect");
         ensure!(slot < rs.n_t, "resample slot {slot} out of range");
@@ -565,12 +654,17 @@ impl ControlPlane {
             return Ok(None);
         }
         rs.attempts[slot] += 1;
+        rs.waves_spent += 1;
         let mut rrng = world::resample_rng(self.cfg.seed, rs.t, slot as u32, rs.attempts[slot]);
 
         // candidates: clients not already tied to this round (sampled,
-        // completed, or previously dispatched as a replacement)
+        // completed, or previously drawn as a replacement) whose
+        // downlink channel is still intact
         let candidates: Vec<u32> = (0..self.cfg.n_clients as u32)
-            .filter(|c| !rs.assignees.iter().any(|a| a.contains(c)))
+            .filter(|c| {
+                !self.lost_channel.contains(&(*c as usize))
+                    && !rs.assignees.iter().any(|a| a.contains(c))
+            })
             .collect();
         let ci = if candidates.is_empty() {
             // the whole population is in flight: re-dispatch the original
@@ -579,12 +673,23 @@ impl ControlPlane {
             candidates[rrng.below(candidates.len())]
         } as usize;
 
+        let owner = ci % n_workers.max(1);
+        if !alive.get(owner).copied().unwrap_or(true) || self.lost_channel.contains(&ci) {
+            // keep the draw in the exclusion list so the next wave moves
+            // on, but never advance the client's downlink channel toward
+            // a connection that does not exist (the lost-channel arm only
+            // triggers via the all-assigned fallback above)
+            rs.assignees[slot].push(ci as u32);
+            return Ok(None);
+        }
+
         let t0 = Instant::now();
-        let down = self.make_downlink(ci, rs.n_t, rs.loss_signal, None, &mut rs.rec)?;
+        let (down, down_seq) = self.make_downlink(ci, rs.n_t, rs.loss_signal, None, &mut rs.rec)?;
         rs.overhead += t0.elapsed().as_secs_f64();
 
         let brng = rrng.fork(world::batch_salt(self.cfg.dpo, rs.t, ci));
         let seg = round_robin::segment_for(slot, rs.t as usize, rs.n_s);
+        rs.tasks_built[slot] += 1;
         rs.assignees[slot].push(ci as u32);
         Ok(Some((
             ci % n_workers.max(1),
@@ -598,6 +703,7 @@ impl ControlPlane {
                 l_prev: rs.loss_signal.1,
                 rng_state: brng.state(),
                 deadline_ms: self.policy.deadline_ms(),
+                down_seq,
                 down,
             },
         )))
@@ -693,7 +799,7 @@ impl ControlPlane {
         rec.compute_s = exec_total / rs.received.max(1) as f64;
         rec.cohort = rs.n_t;
         rec.stragglers = rs.n_t - rs.received;
-        rec.resampled = rs.attempts.iter().map(|&a| a as usize).sum();
+        rec.resampled = rs.waves_spent;
         rec.orphaned += rs.orphaned + agg.stats.orphaned;
         rec.quorum_wait_s = rs.quorum_wait_s.unwrap_or(0.0);
         rec.shards = agg.shards;

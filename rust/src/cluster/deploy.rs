@@ -1,0 +1,1114 @@
+//! Multi-process deployment: the machinery that turns the in-process
+//! cluster of PR 1–4 into separate `ecolora serve` / `ecolora worker`
+//! binaries on real links.
+//!
+//! Three pieces:
+//!
+//! * [`WorkerPool`] — the coordinator's connection table. PR 1 assumed
+//!   every connection exists, index-aligned, before round 0; the pool
+//!   replaces that with a registration *state machine*: slots are
+//!   (re)occupied by [`Event::Joined`] notices, a failed send or a
+//!   reader hangup marks a slot dead, and each occupation carries a
+//!   generation counter so notices from a replaced connection are
+//!   ignored. The in-process path ([`crate::cluster::run`]) uses the
+//!   same pool with all slots installed up front, so both deployments
+//!   drive rounds through one loop.
+//! * [`spawn_registry`] — the `serve` accept loop: polls the listener
+//!   for the whole run, admits connections through the protocol-v3
+//!   handshake ([`crate::cluster::handshake`]), and feeds admitted
+//!   connections to the pool. A worker that drops and dials back in is
+//!   re-admitted into its old slot — from the round state machine's
+//!   point of view the drop was just a straggler burst, absorbed by the
+//!   existing quorum/resample machinery.
+//! * [`drive_rounds`] — the shared round loop (dispatch → collect →
+//!   close), lifted out of `cluster::run` and hardened for dead
+//!   workers: under [`RoundPolicy::Quorum`] a dead worker's slots
+//!   expire at the wave timeout and resample to replacement clients;
+//!   under [`RoundPolicy::Sync`] a death is fatal (sync rounds cannot
+//!   resample, by definition). A round whose quorum can provably no
+//!   longer arrive — every unfilled slot's dispatches went to
+//!   connections that no longer exist and no re-dispatch wave remains —
+//!   fails loudly instead of spinning.
+//!
+//! Bitwise parity: `serve` + N spawned `worker` processes over loopback
+//! produce the same deterministic round metrics as the in-process mem
+//! cluster (enforced by the gated end-to-end test in
+//! `tests/integration_deploy.rs`), because worker slots host the same
+//! logical clients (`client mod n_workers`) regardless of which OS
+//! process holds the slot, and every result is a pure function of
+//! (world, client state, task) — see `fed::world`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::fed::FedConfig;
+use crate::metrics::RunLog;
+use crate::netsim::RoundTiming;
+use crate::util::lock_unpoisoned;
+
+use super::control::{ControlPlane, Phase};
+use super::handshake::{self, Admission, AuthToken, HandshakeSpec, Rejected};
+use super::netshim::Meter;
+use super::participant::{self, Participant};
+use super::protocol::{Envelope, Message, MsgKind, RejectCode};
+use super::router::Router;
+use super::transport::{self, Conn, ConnRx as _, ConnTx as _, Listener};
+use super::{ClusterOptions, ClusterOutcome, FaultSpec};
+
+// ---- connection telemetry ---------------------------------------------------
+
+/// Per-worker-slot connection lifecycle counters (the `metrics`
+/// satellite of the multi-host deployment: who connected, how often the
+/// link dropped, and how much protocol traffic the slot carried).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerConnStats {
+    /// Worker slot id.
+    pub worker: usize,
+    /// Times a connection was installed into this slot (1 for a stable
+    /// worker; each rejoin adds one).
+    pub joins: usize,
+    /// Times the slot's connection died (send failure or reader hangup).
+    pub drops: usize,
+    /// `TrainTask` messages dispatched to this slot.
+    pub tasks_sent: usize,
+    /// `TrainResult` messages received from this slot.
+    pub results_received: usize,
+}
+
+// ---- worker pool ------------------------------------------------------------
+
+/// Internal pool event, produced by reader threads and the registry.
+pub(crate) enum Event {
+    /// An envelope arrived from worker `worker`'s generation-`gen` conn.
+    Msg {
+        /// Worker slot the connection belongs to.
+        worker: usize,
+        /// Connection generation at spawn (stale generations are dropped).
+        gen: u64,
+        /// The received envelope.
+        env: Envelope,
+    },
+    /// Worker `worker`'s generation-`gen` connection hung up.
+    Down {
+        /// Worker slot the connection belonged to.
+        worker: usize,
+        /// Connection generation at spawn.
+        gen: u64,
+    },
+    /// The registry admitted a connection for slot `worker`.
+    Joined {
+        /// Worker slot the connection was admitted into.
+        worker: usize,
+        /// True when the slot had previously dropped (a rejoin).
+        rejoin: bool,
+        /// The admitted, post-handshake connection.
+        conn: Box<dyn Conn>,
+    },
+}
+
+/// What [`WorkerPool::next`] hands the drive loop.
+pub(crate) enum PoolNotice {
+    /// An envelope from a live worker connection.
+    Msg(usize, Envelope),
+    /// A worker's connection died (already marked dead in the pool).
+    Down(usize),
+    /// A worker (re)joined and is ready for dispatch.
+    Joined(usize),
+    /// The caller-supplied deadline passed with no event.
+    Timeout,
+}
+
+/// The coordinator's worker-connection table (see module docs).
+pub(crate) struct WorkerPool {
+    txs: Vec<Option<Box<dyn transport::ConnTx>>>,
+    alive: Vec<bool>,
+    gen: Vec<u64>,
+    events_tx: mpsc::Sender<Event>,
+    events_rx: mpsc::Receiver<Event>,
+    meter: Option<Meter>,
+    /// Slot phases shared with the registry thread (None for the
+    /// in-process pool, which has no registry).
+    ledger: Option<Arc<Mutex<RegistryLedger>>>,
+    stats: Vec<WorkerConnStats>,
+    round_drops: usize,
+    round_rejoins: usize,
+    readers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Empty pool with `n` worker slots.
+    pub(crate) fn new(
+        n: usize,
+        meter: Option<Meter>,
+        ledger: Option<Arc<Mutex<RegistryLedger>>>,
+    ) -> WorkerPool {
+        let (events_tx, events_rx) = mpsc::channel();
+        WorkerPool {
+            txs: (0..n).map(|_| None).collect(),
+            alive: vec![false; n],
+            gen: vec![0; n],
+            events_tx,
+            events_rx,
+            meter,
+            ledger,
+            stats: (0..n).map(|worker| WorkerConnStats { worker, ..Default::default() }).collect(),
+            round_drops: 0,
+            round_rejoins: 0,
+            readers: Vec::new(),
+        }
+    }
+
+    /// Sender half for the registry thread's `Joined` events.
+    pub(crate) fn events_sender(&self) -> mpsc::Sender<Event> {
+        self.events_tx.clone()
+    }
+
+    /// Worker slot count.
+    pub(crate) fn n(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Slots with a live connection.
+    pub(crate) fn alive_count(&self) -> usize {
+        self.alive.iter().filter(|&&a| a).count()
+    }
+
+    /// Whether slot `w` currently has a live connection.
+    pub(crate) fn is_alive(&self, w: usize) -> bool {
+        self.alive[w]
+    }
+
+    /// Current connection generation of slot `w` (bumps on every
+    /// install; a dispatch records it so the drive loop can tell whether
+    /// the connection that carried a task still exists).
+    pub(crate) fn generation(&self, w: usize) -> u64 {
+        self.gen[w]
+    }
+
+    /// The transport byte meter, when netsim is attached.
+    pub(crate) fn meter(&self) -> Option<&Meter> {
+        self.meter.as_ref()
+    }
+
+    /// Whether a registry is accepting joins for this pool (serve mode).
+    /// When true, a dead worker may yet be replaced by a rejoin; when
+    /// false (in-process pool) lost capacity is lost for good.
+    pub(crate) fn has_registry(&self) -> bool {
+        self.ledger.is_some()
+    }
+
+    /// Install a connection into slot `w`: bump the generation, split
+    /// the conn, wrap the halves in the byte meter, spawn the reader
+    /// thread, and mark the slot alive.
+    pub(crate) fn install(&mut self, w: usize, rejoin: bool, conn: Box<dyn Conn>) -> Result<()> {
+        ensure!(w < self.n(), "pool: install into unknown slot {w}");
+        self.gen[w] += 1;
+        let gen = self.gen[w];
+        let (tx, rx) = conn.split()?;
+        let (tx, mut rx) = match &self.meter {
+            Some(m) => (m.wrap_tx(tx), m.wrap_rx(rx)),
+            None => (tx, rx),
+        };
+        self.txs[w] = Some(tx);
+        self.alive[w] = true;
+        self.stats[w].joins += 1;
+        if rejoin {
+            self.round_rejoins += 1;
+        }
+        let fwd = self.events_tx.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("ecolora-reader-{w}"))
+            .spawn(move || {
+                while let Ok(env) = rx.recv() {
+                    if fwd.send(Event::Msg { worker: w, gen, env }).is_err() {
+                        return; // pool is gone
+                    }
+                }
+                let _ = fwd.send(Event::Down { worker: w, gen });
+            })
+            .context("pool: spawn reader thread")?;
+        self.readers.push(reader);
+        Ok(())
+    }
+
+    fn mark_down(&mut self, w: usize) {
+        if !self.alive[w] {
+            return;
+        }
+        self.alive[w] = false;
+        self.txs[w] = None;
+        self.stats[w].drops += 1;
+        self.round_drops += 1;
+        if let Some(ledger) = &self.ledger {
+            lock_unpoisoned(ledger).mark_dropped(w);
+        }
+    }
+
+    /// Send `msg` to slot `w`. Returns false — marking the slot dead —
+    /// when the slot has no live connection or the transport reports a
+    /// send failure; the caller decides whether that is fatal
+    /// (`RoundPolicy::Sync`) or absorbed (`Quorum` resampling).
+    pub(crate) fn send(&mut self, w: usize, msg: &Message) -> bool {
+        if !self.alive[w] {
+            return false;
+        }
+        let env = msg.to_envelope();
+        let ok = self
+            .txs[w]
+            .as_mut()
+            .expect("alive slot has a tx")
+            .send(&env)
+            .is_ok();
+        if ok {
+            if env.kind == MsgKind::TrainTask {
+                self.stats[w].tasks_sent += 1;
+            }
+        } else {
+            self.mark_down(w);
+        }
+        ok
+    }
+
+    /// Block until the next pool event (or `deadline`). `Joined` events
+    /// are installed before being surfaced; stale-generation events are
+    /// swallowed.
+    pub(crate) fn next(&mut self, deadline: Option<Instant>) -> Result<PoolNotice> {
+        loop {
+            let ev = match deadline {
+                None => self
+                    .events_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("pool: event channel closed"))?,
+                Some(d) => {
+                    let wait = d.saturating_duration_since(Instant::now());
+                    match self.events_rx.recv_timeout(wait) {
+                        Ok(ev) => ev,
+                        Err(mpsc::RecvTimeoutError::Timeout) => return Ok(PoolNotice::Timeout),
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            bail!("pool: event channel closed")
+                        }
+                    }
+                }
+            };
+            match ev {
+                Event::Msg { worker, gen: _, env } => {
+                    // deliver regardless of the slot's liveness or
+                    // generation: an envelope the reader forwarded before
+                    // its connection died (or was replaced) is finished,
+                    // valid work — possibly the result that completes the
+                    // quorum — and the control plane validates contents
+                    // anyway. Only Down notices are generation-gated.
+                    if env.kind == MsgKind::TrainResult {
+                        self.stats[worker].results_received += 1;
+                    }
+                    return Ok(PoolNotice::Msg(worker, env));
+                }
+                Event::Down { worker, gen } => {
+                    if gen != self.gen[worker] || !self.alive[worker] {
+                        continue; // already replaced or already marked
+                    }
+                    self.mark_down(worker);
+                    return Ok(PoolNotice::Down(worker));
+                }
+                Event::Joined { worker, rejoin, conn } => {
+                    match self.install(worker, rejoin, conn) {
+                        Ok(()) => return Ok(PoolNotice::Joined(worker)),
+                        Err(e) => {
+                            // fd/thread exhaustion while installing one
+                            // admitted connection must not kill the run:
+                            // drop the conn, roll the slot fully back
+                            // (ledger included) so the worker can rejoin,
+                            // and keep serving
+                            eprintln!(
+                                "[serve] installing worker {worker}'s connection \
+                                 failed ({e:#}); slot reopened for rejoin"
+                            );
+                            self.alive[worker] = false;
+                            self.txs[worker] = None;
+                            if let Some(ledger) = &self.ledger {
+                                lock_unpoisoned(ledger).mark_dropped(worker);
+                            }
+                            continue;
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Drain the per-round drop/rejoin counters (for `RoundRecord`).
+    pub(crate) fn take_round_counters(&mut self) -> (usize, usize) {
+        (std::mem::take(&mut self.round_drops), std::mem::take(&mut self.round_rejoins))
+    }
+
+    /// Send `Shutdown` to every live worker and drop all senders (so
+    /// peers blocked on recv observe the hangup even if the `Shutdown`
+    /// was lost). `join_readers` additionally joins the reader threads —
+    /// right for in-process runs, where the workers are known to exit;
+    /// a serve coordinator skips it so a wedged remote socket cannot
+    /// block its own exit.
+    pub(crate) fn shutdown(&mut self, join_readers: bool) {
+        for w in 0..self.n() {
+            if self.alive[w] {
+                self.send(w, &Message::Shutdown);
+            }
+        }
+        for tx in &mut self.txs {
+            *tx = None;
+        }
+        if join_readers {
+            for h in self.readers.drain(..) {
+                let _ = h.join();
+            }
+        }
+    }
+
+    /// Consume the pool, returning the per-slot connection telemetry.
+    pub(crate) fn into_stats(self) -> Vec<WorkerConnStats> {
+        self.stats
+    }
+}
+
+// ---- registry ---------------------------------------------------------------
+
+/// Slot occupancy as the registry sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SlotPhase {
+    /// Never occupied.
+    Free,
+    /// A live connection holds the slot.
+    Connected,
+    /// Previously occupied; the connection died. Re-assignable (rejoin).
+    Dropped,
+}
+
+/// Worker-slot assignment state shared between the registry thread
+/// (reserving slots for joiners) and the pool (releasing them on drops).
+pub(crate) struct RegistryLedger {
+    slots: Vec<SlotPhase>,
+}
+
+impl RegistryLedger {
+    /// All-free ledger with `n` slots.
+    pub(crate) fn new(n: usize) -> RegistryLedger {
+        RegistryLedger { slots: vec![SlotPhase::Free; n] }
+    }
+
+    /// Reserve a slot for a joiner (the handshake's id-assignment
+    /// policy): an explicit id must be in range and not currently
+    /// connected; a wildcard takes the first free slot, else the first
+    /// dropped one. Returns `(id, rejoin)`.
+    pub(crate) fn reserve(
+        &mut self,
+        requested: Option<u32>,
+    ) -> std::result::Result<(u32, bool), (RejectCode, String)> {
+        let n = self.slots.len();
+        match requested {
+            Some(id) => {
+                let i = id as usize;
+                if i >= n {
+                    return Err((
+                        RejectCode::ClusterFull,
+                        format!("worker id {id} out of range (cluster has {n} slots)"),
+                    ));
+                }
+                match self.slots[i] {
+                    SlotPhase::Connected => Err((
+                        RejectCode::DuplicateWorker,
+                        format!("worker id {id} is already connected"),
+                    )),
+                    phase => {
+                        self.slots[i] = SlotPhase::Connected;
+                        Ok((id, phase == SlotPhase::Dropped))
+                    }
+                }
+            }
+            None => {
+                if let Some(i) = self.slots.iter().position(|&p| p == SlotPhase::Free) {
+                    self.slots[i] = SlotPhase::Connected;
+                    Ok((i as u32, false))
+                } else if let Some(i) =
+                    self.slots.iter().position(|&p| p == SlotPhase::Dropped)
+                {
+                    self.slots[i] = SlotPhase::Connected;
+                    Ok((i as u32, true))
+                } else {
+                    Err((
+                        RejectCode::ClusterFull,
+                        format!("all {n} worker slots are connected"),
+                    ))
+                }
+            }
+        }
+    }
+
+    /// Roll back a reservation whose `Welcome` never arrived. The slot
+    /// becomes `Dropped` (re-assignable either way; the distinction only
+    /// feeds the rejoin counter).
+    pub(crate) fn unreserve(&mut self, id: u32) {
+        if let Some(p) = self.slots.get_mut(id as usize) {
+            if *p == SlotPhase::Connected {
+                *p = SlotPhase::Dropped;
+            }
+        }
+    }
+
+    /// The pool observed slot `w`'s connection die.
+    pub(crate) fn mark_dropped(&mut self, w: usize) {
+        if let Some(p) = self.slots.get_mut(w) {
+            if *p == SlotPhase::Connected {
+                *p = SlotPhase::Dropped;
+            }
+        }
+    }
+}
+
+/// Handle to the background accept loop; stops (and joins) on drop.
+pub(crate) struct Registry {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Registry {
+    /// Signal the accept loop to exit and wait for it.
+    pub(crate) fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Registry {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Spawn the serve-side accept loop: poll `listener`, run the v3
+/// admission handshake on every connection, and forward admitted conns
+/// to the pool as [`Event::Joined`]. Runs for the whole run so dropped
+/// workers can rejoin mid-round.
+///
+/// Each admission runs on its own short-lived thread: a handshake can
+/// legitimately take up to [`handshake::HANDSHAKE_TIMEOUT`] against a
+/// silent peer, and serializing that on the accept loop would let one
+/// garbage connection stall a legitimate rejoin past the drive loop's
+/// grace window (the slot ledger is behind a mutex precisely so
+/// admissions may race; id reservation stays atomic).
+pub(crate) fn spawn_registry(
+    listener: Listener,
+    spec: HandshakeSpec,
+    ledger: Arc<Mutex<RegistryLedger>>,
+    events: mpsc::Sender<Event>,
+    resume_round: Arc<AtomicU64>,
+) -> Result<Registry> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_flag = stop.clone();
+    let spec = Arc::new(spec);
+    let thread = std::thread::Builder::new()
+        .name("ecolora-registry".into())
+        .spawn(move || {
+            while !stop_flag.load(Ordering::Relaxed) {
+                match listener.try_accept() {
+                    Ok(Some((conn, peer))) => {
+                        let spec = spec.clone();
+                        let ledger = ledger.clone();
+                        let events = events.clone();
+                        let resume_round = resume_round.clone();
+                        let spawned = std::thread::Builder::new()
+                            .name("ecolora-admit".into())
+                            .spawn(move || {
+                                admit_one(conn, peer, &spec, &ledger, &events, &resume_round)
+                            });
+                        if let Err(e) = spawned {
+                            eprintln!("[serve] could not spawn admission thread: {e}");
+                        }
+                    }
+                    Ok(None) => std::thread::sleep(Duration::from_millis(25)),
+                    Err(e) => {
+                        eprintln!("[serve] listener error: {e:#}");
+                        std::thread::sleep(Duration::from_millis(250));
+                    }
+                }
+            }
+        })
+        .context("serve: spawn registry thread")?;
+    Ok(Registry { stop, thread: Some(thread) })
+}
+
+/// One admission, run on its own thread (see [`spawn_registry`]).
+fn admit_one(
+    mut conn: transport::TcpConn,
+    peer: std::net::SocketAddr,
+    spec: &HandshakeSpec,
+    ledger: &Arc<Mutex<RegistryLedger>>,
+    events: &mpsc::Sender<Event>,
+    resume_round: &AtomicU64,
+) {
+    let resume = resume_round.load(Ordering::Relaxed);
+    let outcome = handshake::admit(
+        &mut conn,
+        spec,
+        |requested| lock_unpoisoned(ledger).reserve(requested),
+        |id| lock_unpoisoned(ledger).unreserve(id),
+        resume,
+    );
+    match outcome {
+        Ok(Admission::Admitted { worker, rejoin }) => {
+            eprintln!(
+                "[serve] worker {worker} {} from {peer}",
+                if rejoin { "rejoined" } else { "joined" }
+            );
+            let ev = Event::Joined { worker: worker as usize, rejoin, conn: Box::new(conn) };
+            // a send failure means the pool is gone and the run is over
+            let _ = events.send(ev);
+        }
+        Ok(Admission::Rejected(code)) => {
+            eprintln!("[serve] rejected join from {peer}: {}", code.name());
+        }
+        Err(e) => {
+            // silent peer, early disconnect, version skew, corrupt
+            // frame: drop the socket and keep serving — an aborted
+            // handshake must never poison the run
+            eprintln!("[serve] handshake with {peer} aborted: {e:#}");
+        }
+    }
+}
+
+// ---- shared round-drive loop ------------------------------------------------
+
+/// Consecutive no-progress wave timeouts a quorum round tolerates while
+/// a registry is accepting rejoins, before concluding the quorum is
+/// unreachable. The grace window is therefore `REJOIN_GRACE_WAVES ×
+/// --slot-timeout` — enough for a `--reconnect` worker's backoff + dial
+/// + handshake at any sane timeout, while still bounding how long a
+/// fully-dead round can linger.
+pub(crate) const REJOIN_GRACE_WAVES: usize = 4;
+
+/// What [`drive_rounds`] produces (the control plane turns it into a
+/// `FedOutcome`).
+pub(crate) struct DriveOutcome {
+    /// Per-round telemetry.
+    pub(crate) log: RunLog,
+    /// Round at which `target_acc` was reached, if it was.
+    pub(crate) reached: Option<usize>,
+    /// Simulated per-round timings (when netsim is attached).
+    pub(crate) timings: Vec<RoundTiming>,
+}
+
+/// Drive every round of a run over `pool` (see module docs): the one
+/// loop behind both the in-process cluster and the multi-process serve
+/// path. `resume_round`, when given, is kept at the round currently
+/// being dispatched so rejoin `Welcome`s can report it.
+pub(crate) fn drive_rounds(
+    control: &mut ControlPlane,
+    router: &mut Router,
+    pool: &mut WorkerPool,
+    opts: &ClusterOptions,
+    resume_round: Option<&AtomicU64>,
+) -> Result<DriveOutcome> {
+    let n_workers = pool.n();
+    let n_shards = opts.shards.max(1);
+    let sync = opts.policy.slot_timeout().is_none();
+    let label = control.cfg.run_label();
+    let mut log = RunLog::new(label.clone());
+    let mut reached: Option<usize> = None;
+    let mut timings = Vec::new();
+
+    for t in 0..control.cfg.rounds {
+        if let Some(r) = resume_round {
+            r.store(t as u64, Ordering::Relaxed);
+        }
+        if sync {
+            // Sync cannot resample, so every slot must be deliverable
+            // before the round spends any downlink state
+            ensure!(
+                pool.alive_count() == n_workers,
+                "cluster: {} of {n_workers} workers are disconnected and \
+                 RoundPolicy::Sync cannot resample their slots; rerun with \
+                 --round-policy quorum for fault tolerance",
+                n_workers - pool.alive_count(),
+            );
+        }
+        // Sampling + Broadcast. Slots whose owning worker is down get no
+        // task (and crucially no stateful-downlink channel advance); the
+        // quorum wave machinery re-dispatches them to live replacements.
+        let alive_now: Vec<bool> = (0..n_workers).map(|w| pool.is_alive(w)).collect();
+        let (mut rs, tasks) = control.begin_round(t as u64, n_workers, &alive_now)?;
+        router.begin_round(t as u64, rs.n_s)?;
+        // Which (worker, generation) each slot's task went to: a slot can
+        // still report iff one of its dispatches sits on a connection
+        // that is still that worker's live one.
+        let mut inflight: Vec<Vec<(usize, u64)>> = vec![Vec::new(); rs.n_t];
+        for (w, task) in tasks {
+            let slot = task.slot as usize;
+            let client = task.client;
+            let stateful = task.down_seq > 0;
+            let gen = pool.generation(w);
+            if pool.send(w, &Message::TrainTask(task)) {
+                inflight[slot].push((w, gen));
+            } else if sync {
+                bail!(
+                    "cluster: worker {w} is down and RoundPolicy::Sync cannot resample \
+                     slot {slot}; rerun with --round-policy quorum for fault tolerance"
+                );
+            } else {
+                // quorum: the slot re-dispatches at the wave timeout —
+                // but a stateful downlink that never left already
+                // advanced the client's channel, which is unrecoverable
+                if stateful {
+                    eprintln!(
+                        "[serve] client {client}'s sparse downlink was built but its \
+                         worker died before the send; excluding the client for the \
+                         rest of the run"
+                    );
+                    control.downlink_lost(client);
+                }
+            }
+        }
+        // Collect: every result is routed — current round into the round
+        // state (closing it at quorum) with its payload forwarded to the
+        // owning aggregation shard, earlier rounds into that shard's late
+        // buffer. Worker deaths are fatal under Sync and absorbed by the
+        // resample machinery under Quorum.
+        let mut wave_deadline = opts.policy.slot_timeout().map(|d| Instant::now() + d);
+        // consecutive no-progress wave timeouts (quorum liveness; reset
+        // whenever a dispatch goes out or a worker rejoins)
+        let mut idle_waves = 0usize;
+        while rs.phase == Phase::Collect {
+            if sync {
+                // under Sync any disconnect bails below; an empty pool
+                // here would otherwise block forever on the deadline-less
+                // recv
+                ensure!(
+                    pool.alive_count() > 0,
+                    "cluster: every worker is disconnected during round {t}"
+                );
+            }
+            match pool.next(wave_deadline)? {
+                PoolNotice::Msg(_w, env) => match Message::from_envelope(&env)? {
+                    Message::TrainResult(res) => {
+                        if res.round == rs.t {
+                            if let Some(add) = control.accept(&mut rs, res)? {
+                                router.route(add)?;
+                            }
+                        } else if res.round < rs.t {
+                            // straggler from a closed quorum round
+                            if let Some(fwd) = control.accept_late(res) {
+                                router.route_late(fwd)?;
+                            }
+                        } else {
+                            bail!("cluster: result for future round {}", res.round);
+                        }
+                    }
+                    Message::Error { text } => bail!("worker failed: {text}"),
+                    other => bail!("cluster: expected TrainResult, got {:?}", other.kind()),
+                },
+                PoolNotice::Down(w) => {
+                    if sync {
+                        bail!(
+                            "cluster: worker {w} disconnected during round {t} under \
+                             RoundPolicy::Sync (its tasks cannot be resampled; rerun \
+                             with --round-policy quorum for fault tolerance)"
+                        );
+                    }
+                    // quorum: its slots expire at the wave deadline and
+                    // resample to replacement clients
+                }
+                PoolNotice::Joined(_w) => {
+                    // recovered capacity: grant the unfilled slots a
+                    // fresh re-dispatch budget (waves already spent
+                    // against dead connections must not starve the
+                    // rejoined worker) and reset the liveness clock
+                    rs.reopen_waves();
+                    idle_waves = 0;
+                }
+                PoolNotice::Timeout => {
+                    // wave timeout: re-dispatch every outstanding slot to
+                    // replacements hosted on currently-live workers
+                    let alive_now: Vec<bool> =
+                        (0..n_workers).map(|w| pool.is_alive(w)).collect();
+                    let mut dispatched = false;
+                    for slot in rs.unfilled_slots() {
+                        if let Some((w, task)) =
+                            control.resample_slot(&mut rs, slot, n_workers, &alive_now)?
+                        {
+                            let client = task.client;
+                            let stateful = task.down_seq > 0;
+                            let gen = pool.generation(w);
+                            if pool.send(w, &Message::TrainTask(task)) {
+                                inflight[slot].push((w, gen));
+                                dispatched = true;
+                            } else if stateful {
+                                // the owner died since the snapshot: the
+                                // wave is spent, and the built downlink
+                                // already advanced this client's channel
+                                eprintln!(
+                                    "[serve] client {client}'s sparse downlink was \
+                                     built but its worker died before the send; \
+                                     excluding the client for the rest of the run"
+                                );
+                                control.downlink_lost(client);
+                            }
+                        }
+                    }
+                    // Liveness: nothing new went out AND no unfilled slot
+                    // has a dispatch on a still-live connection ⇒ the
+                    // quorum cannot arrive from what exists right now.
+                    // With a registry a rejoin could still save the round,
+                    // so allow a bounded grace window before failing; an
+                    // in-process pool has nobody to wait for.
+                    let can_progress = dispatched
+                        || rs.unfilled_slots().iter().any(|&slot| {
+                            inflight[slot]
+                                .iter()
+                                .any(|&(w, g)| pool.is_alive(w) && pool.generation(w) == g)
+                        });
+                    if can_progress {
+                        idle_waves = 0;
+                    } else {
+                        idle_waves += 1;
+                        if !pool.has_registry() || idle_waves >= REJOIN_GRACE_WAVES {
+                            bail!(
+                                "cluster: round {t} can no longer reach quorum \
+                                 ({} of {} results; every outstanding dispatch went to a \
+                                 connection that no longer exists and no re-dispatch wave \
+                                 or rejoin arrived)",
+                                rs.received(),
+                                rs.quorum,
+                            );
+                        }
+                    }
+                    let timeout = opts.policy.slot_timeout().expect("deadline implies timeout");
+                    wave_deadline = Some(Instant::now() + timeout);
+                }
+            }
+        }
+        control.ensure_collected(&rs)?;
+        let compute_by_slot = rs.exec_by_slot();
+        let quorum = rs.quorum;
+        // shards beyond the segment count own nothing and add no
+        // parallelism — the netsim agg model must not credit them
+        let agg_parallelism = n_shards.min(rs.n_s.max(1));
+        // Aggregate: close the shards, gather the Eq. 2 delta, and let
+        // the control plane finish.
+        let gathered = router.close_round(t as u64)?;
+        let (mut rec, base_sync) = control.finish_round(rs, gathered)?;
+        if let Some(base) = base_sync {
+            for w in 0..n_workers {
+                // base sync only happens for restart methods, which the
+                // control plane only admits under Sync — where a dead
+                // worker is fatal
+                if !pool.send(w, &Message::BaseSync { base: base.clone() }) {
+                    bail!("cluster: worker {w} disconnected during base sync");
+                }
+            }
+        }
+        let (drops, rejoins) = pool.take_round_counters();
+        rec.worker_drops = drops;
+        rec.worker_rejoins = rejoins;
+        if let (Some(m), Some(profile)) = (pool.meter(), &opts.netsim) {
+            timings.push(
+                m.round_timing(t as u64, &compute_by_slot, profile, quorum, agg_parallelism)?,
+            );
+        }
+        if control.cfg.verbose {
+            let acc = rec.eval_acc;
+            eprintln!(
+                "[{label}@{}x{n_workers}s{n_shards}] round {t}: loss {:.4} acc {} upM {:.3} downM {:.3} k=({:.2},{:.2}) stragglers {} late {} drops {} aggMs {:.2}",
+                opts.mode.name(),
+                rec.global_loss,
+                acc.map_or("-".into(), |a| format!("{a:.3}")),
+                rec.up.params_m(),
+                rec.down.params_m(),
+                rec.k_a,
+                rec.k_b,
+                rec.stragglers,
+                rec.late_folds,
+                rec.worker_drops,
+                rec.shard_agg_ms_max,
+            );
+        }
+        let acc = rec.eval_acc;
+        log.push(rec);
+        if let (Some(target), Some(a)) = (control.cfg.target_acc, acc) {
+            if a >= target {
+                reached = Some(t);
+                break;
+            }
+        }
+    }
+    Ok(DriveOutcome { log, reached, timings })
+}
+
+// ---- serve / worker entry points --------------------------------------------
+
+/// `ecolora serve` configuration.
+pub struct ServeOptions {
+    /// Address to bind the coordinator listener on (e.g.
+    /// `127.0.0.1:7878`, `0.0.0.0:7878`).
+    pub listen: String,
+    /// The deployment's shared secret.
+    pub token: AuthToken,
+    /// Worker slots; the run starts once this many workers have joined.
+    pub expect_workers: usize,
+    /// How long to wait for the initial worker wave before giving up.
+    pub join_timeout: Duration,
+    /// Round/shard/netsim options (the `mode` field is ignored — serve
+    /// is TCP by construction; `workers` is superseded by
+    /// `expect_workers`; `fault` belongs to the worker side).
+    pub cluster: ClusterOptions,
+}
+
+/// Run a federated job as a multi-process coordinator: bind the
+/// listener, admit `expect_workers` authenticated `ecolora worker`
+/// processes through the protocol-v3 handshake, then drive the standard
+/// round loop over their connections. Workers that drop mid-run are
+/// stragglers (absorbed under `--round-policy quorum`, fatal under
+/// sync), and may rejoin through the same listener at any time.
+pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
+    let n_workers = opts.expect_workers;
+    ensure!(n_workers >= 1, "serve: --expect-workers must be at least 1");
+    ensure!(
+        n_workers <= cfg.n_clients.max(1),
+        "serve: --expect-workers {n_workers} exceeds the client population {}",
+        cfg.n_clients
+    );
+    let digest = cfg.digest();
+    let listener = Listener::bind(&opts.listen)?;
+    let addr = listener.local_addr()?;
+    eprintln!(
+        "[serve] listening on {addr} ({n_workers} worker slot{}, config digest {digest:016x})",
+        if n_workers == 1 { "" } else { "s" }
+    );
+
+    let ledger = Arc::new(Mutex::new(RegistryLedger::new(n_workers)));
+    let resume_round = Arc::new(AtomicU64::new(0));
+    let meter = opts.cluster.netsim.as_ref().map(|_| Meter::new());
+    let mut pool = WorkerPool::new(n_workers, meter, Some(ledger.clone()));
+    let spec = HandshakeSpec {
+        token: opts.token.clone(),
+        config_digest: digest,
+        n_workers,
+    };
+    let mut registry =
+        spawn_registry(listener, spec, ledger, pool.events_sender(), resume_round.clone())?;
+
+    // Build the server world while workers dial in and build theirs.
+    let mut control = ControlPlane::new(cfg, opts.cluster.policy)?;
+    let n_shards = opts.cluster.shards.max(1);
+    let mut router = Router::new(
+        control.lora_total(),
+        n_shards,
+        control.client_weights(),
+        control.kind_index(),
+        control.fold_beta(),
+        control.dense_upload_params(),
+    )?;
+
+    // Wait for the full first wave.
+    let deadline = Instant::now() + opts.join_timeout;
+    while pool.alive_count() < n_workers {
+        match pool.next(Some(deadline))? {
+            PoolNotice::Joined(_w) => {
+                eprintln!("[serve] {}/{} workers connected", pool.alive_count(), n_workers);
+            }
+            PoolNotice::Down(w) => {
+                eprintln!("[serve] worker {w} dropped before the run started");
+            }
+            PoolNotice::Timeout => bail!(
+                "serve: only {} of {n_workers} workers joined within {:?}; start the \
+                 missing workers with `ecolora worker --connect {addr} --token-file …` \
+                 and matching run flags",
+                pool.alive_count(),
+                opts.join_timeout,
+            ),
+            PoolNotice::Msg(w, _env) => {
+                bail!("serve: unexpected protocol message from worker {w} before round 0")
+            }
+        }
+    }
+    // pre-run churn is not round telemetry
+    let _ = pool.take_round_counters();
+    eprintln!("[serve] all {n_workers} workers connected; starting round 0");
+
+    let out = drive_rounds(&mut control, &mut router, &mut pool, &opts.cluster, Some(&resume_round))?;
+    let outcome = control.outcome(out.log, out.reached)?;
+    pool.shutdown(false);
+    registry.stop();
+    router.shutdown()?;
+    Ok(ClusterOutcome {
+        fed: outcome,
+        timings: out.timings,
+        workers: n_workers,
+        shards: n_shards,
+        transport: "tcp",
+        worker_conns: pool.into_stats(),
+    })
+}
+
+/// `ecolora worker` configuration.
+pub struct WorkerOptions {
+    /// Coordinator address to dial (e.g. `coordinator.example:7878`).
+    pub connect: String,
+    /// The deployment's shared secret.
+    pub token: AuthToken,
+    /// Ask for a specific worker slot (`None` = let the coordinator
+    /// assign one).
+    pub requested_id: Option<u32>,
+    /// Rejoin attempts after a lost connection (0 = die with the link).
+    pub reconnect: u32,
+    /// Per-dial window during which connection-refused is retried.
+    pub dial_timeout: Duration,
+    /// Deterministic straggler injection (tests, demos).
+    pub fault: Option<FaultSpec>,
+}
+
+/// Run a federated participant as its own process: build the
+/// deterministic world from the local configuration, dial the
+/// coordinator, complete the protocol-v3 join handshake, and serve
+/// tasks until `Shutdown`. On a lost connection the worker redials and
+/// rejoins its old slot (up to `reconnect` times), keeping its client
+/// state — the coordinator sees the outage as a straggler burst.
+pub fn run_remote_worker(cfg: FedConfig, opts: &WorkerOptions) -> Result<()> {
+    let digest = cfg.digest();
+    eprintln!(
+        "[worker] building world for {} (config digest {digest:016x})…",
+        cfg.run_label()
+    );
+    let mut participant = Participant::new(cfg).context("worker: building world")?;
+    let mut requested = opts.requested_id;
+    let mut rejoins_left = opts.reconnect;
+    loop {
+        let mut conn = transport::dial(&opts.connect, opts.dial_timeout)?;
+        let joined = match handshake::join(&mut conn, &opts.token, digest, requested) {
+            Ok(j) => j,
+            Err(e) => {
+                // A rejoin can race the coordinator's own detection of
+                // the dropped link: until the pool processes the old
+                // connection's hangup, this worker's slot still reads as
+                // connected and the coordinator answers DuplicateWorker.
+                // That — and any transport-level handshake failure — is
+                // transient and worth the remaining rejoin budget.
+                // Deterministic refusals (bad token, config mismatch,
+                // cluster full, malformed) stay immediately fatal:
+                // retrying them can never succeed.
+                let transient = match e.downcast_ref::<Rejected>() {
+                    Some(r) => r.code == RejectCode::DuplicateWorker,
+                    None => true,
+                };
+                if transient && rejoins_left > 0 {
+                    rejoins_left -= 1;
+                    eprintln!(
+                        "[worker] join did not complete ({e:#}); retrying \
+                         ({rejoins_left} attempts left)…"
+                    );
+                    std::thread::sleep(Duration::from_millis(500));
+                    continue;
+                }
+                return Err(e);
+            }
+        };
+        eprintln!(
+            "[worker] joined {} as worker {} of {} (coordinator at round {})",
+            opts.connect, joined.worker, joined.n_workers, joined.resume_round
+        );
+        // keep the same identity (and therefore client shard) on rejoin
+        requested = Some(joined.worker);
+        match participant::serve_conn(&mut participant, &mut conn, opts.fault) {
+            Ok(()) => {
+                eprintln!("[worker] run complete (coordinator sent Shutdown)");
+                return Ok(());
+            }
+            Err(e) if rejoins_left > 0 => {
+                rejoins_left -= 1;
+                eprintln!(
+                    "[worker] connection lost ({e:#}); rejoining as worker {} \
+                     ({rejoins_left} attempts left)…",
+                    joined.worker
+                );
+                std::thread::sleep(Duration::from_millis(500));
+            }
+            Err(e) => {
+                return Err(e.context("worker: connection lost and no rejoin attempts remain"))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_assigns_frees_and_rejoins() {
+        let mut l = RegistryLedger::new(3);
+        assert_eq!(l.reserve(None), Ok((0, false)));
+        assert_eq!(l.reserve(None), Ok((1, false)));
+        assert_eq!(l.reserve(Some(2)), Ok((2, false)));
+        // full cluster: wildcard and explicit both refused
+        assert_eq!(l.reserve(None).unwrap_err().0, RejectCode::ClusterFull);
+        assert_eq!(l.reserve(Some(1)).unwrap_err().0, RejectCode::DuplicateWorker);
+        assert_eq!(l.reserve(Some(9)).unwrap_err().0, RejectCode::ClusterFull);
+        // a drop frees the slot for a rejoin, flagged as such
+        l.mark_dropped(1);
+        assert_eq!(l.reserve(Some(1)), Ok((1, true)));
+        l.mark_dropped(0);
+        assert_eq!(l.reserve(None), Ok((0, true)), "wildcard takes the dropped slot");
+    }
+
+    #[test]
+    fn ledger_unreserve_reopens_the_slot() {
+        let mut l = RegistryLedger::new(1);
+        assert_eq!(l.reserve(Some(0)), Ok((0, false)));
+        l.unreserve(0);
+        // the peer never completed its join; the slot must be usable
+        assert!(l.reserve(Some(0)).is_ok());
+        l.unreserve(9); // out of range: no-op, not a panic
+    }
+
+    #[test]
+    fn pool_tracks_generations_and_round_counters() {
+        // a mem pipe pair stands in for an admitted connection
+        let (coord, mut workers) = transport::establish(super::super::ClusterMode::Mem, 1).unwrap();
+        let worker_conn = workers.pop().unwrap();
+        let mut pool = WorkerPool::new(1, None, None);
+        assert_eq!(pool.alive_count(), 0);
+        let mut coord = coord;
+        pool.install(0, false, coord.pop().unwrap()).unwrap();
+        assert_eq!(pool.alive_count(), 1);
+        assert_eq!(pool.generation(0), 1);
+
+        // peer answers one envelope then hangs up
+        let peer = std::thread::spawn(move || {
+            let mut conn = worker_conn;
+            let env = conn.recv().unwrap();
+            conn.send(&env).unwrap();
+            // dropping the conn hangs up
+        });
+        assert!(pool.send(0, &Message::Shutdown));
+        match pool.next(Some(Instant::now() + Duration::from_secs(5))).unwrap() {
+            PoolNotice::Msg(0, env) => assert_eq!(env.kind, MsgKind::Shutdown),
+            _ => panic!("expected the echoed message"),
+        }
+        peer.join().unwrap();
+        match pool.next(Some(Instant::now() + Duration::from_secs(5))).unwrap() {
+            PoolNotice::Down(0) => {}
+            _ => panic!("expected the hangup notice"),
+        }
+        assert_eq!(pool.alive_count(), 0);
+        assert!(!pool.send(0, &Message::Shutdown), "sends to a dead slot report failure");
+        let (drops, rejoins) = pool.take_round_counters();
+        assert_eq!((drops, rejoins), (1, 0));
+        assert_eq!(pool.take_round_counters(), (0, 0), "counters drain");
+        let stats = pool.into_stats();
+        assert_eq!(stats[0].joins, 1);
+        assert_eq!(stats[0].drops, 1);
+    }
+}

@@ -1,0 +1,340 @@
+//! The protocol-v3 deployment handshake: how an externally-spawned
+//! `ecolora worker` process becomes a registered participant of an
+//! `ecolora serve` coordinator.
+//!
+//! Sequence (normative wire spec: docs/PROTOCOL.md §Handshake):
+//!
+//! ```text
+//!   worker                         coordinator
+//!     │ ── Join {token, digest, ──►  validate, in order:
+//!     │          id?, build}          1. envelope version (framing layer)
+//!     │                               2. auth token (constant-time)
+//!     │                               3. config digest
+//!     │                               4. worker-id reservation
+//!     │ ◄── Welcome {id, n, round} ─  … or Reject {code, reason} + close
+//! ```
+//!
+//! Version skew never reaches this module: a peer speaking a different
+//! protocol version fails at `Envelope::decode` (the framing layer) with
+//! a dedicated "protocol version mismatch" error, and the coordinator
+//! closes the socket. Everything else — bad token, config divergence,
+//! duplicate worker id, a full cluster, or a first message that is not a
+//! `Join` — is answered with an explicit [`Reject`](Message::Reject)
+//! before the close, so the operator on the worker side sees *why*.
+//!
+//! A failed or abandoned handshake must never poison coordinator round
+//! state: [`admit`] touches nothing but the one connection and the
+//! caller-supplied reservation closure, and the registry drops the
+//! connection on any error — enforced by the reject-path tests in
+//! `tests/integration_deploy.rs`.
+
+use std::fmt;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::protocol::{Message, RejectCode, ANY_WORKER};
+use super::transport::{Conn, TcpConn};
+
+/// Frame cap applied to a connection while its peer is unauthenticated:
+/// a `Join` is a few hundred bytes, so anything bigger is garbage (and a
+/// pre-auth allocation vector). Restored to the protocol default after
+/// `Welcome`.
+pub const JOIN_FRAME_CAP: usize = 64 * 1024;
+
+/// How long the coordinator waits for each handshake message before
+/// dropping a silent connection (a peer that connects and says nothing
+/// must not stall the registry).
+pub const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Hard cap on the shared-secret length (sanity, not security).
+pub const MAX_TOKEN_LEN: usize = 512;
+
+/// The deployment's shared secret. Debug/Display never print the bytes.
+#[derive(Clone)]
+pub struct AuthToken(Vec<u8>);
+
+impl fmt::Debug for AuthToken {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "AuthToken(<{} bytes, redacted>)", self.0.len())
+    }
+}
+
+impl AuthToken {
+    /// Build from raw secret bytes (must be non-empty and at most
+    /// [`MAX_TOKEN_LEN`] bytes after trimming ASCII whitespace).
+    pub fn new(raw: impl AsRef<[u8]>) -> Result<AuthToken> {
+        let trimmed: Vec<u8> = {
+            let b = raw.as_ref();
+            let start = b.iter().position(|c| !c.is_ascii_whitespace()).unwrap_or(b.len());
+            let end = b.iter().rposition(|c| !c.is_ascii_whitespace()).map_or(start, |e| e + 1);
+            b[start..end].to_vec()
+        };
+        if trimmed.is_empty() {
+            bail!("auth token is empty (whitespace does not count)");
+        }
+        if trimmed.len() > MAX_TOKEN_LEN {
+            bail!("auth token is {} bytes; the cap is {MAX_TOKEN_LEN}", trimmed.len());
+        }
+        Ok(AuthToken(trimmed))
+    }
+
+    /// Resolve the CLI spelling: `--token-file` (read + trim) wins over
+    /// an inline `--token`; providing neither is an error — deployment
+    /// auth is not optional.
+    pub fn from_cli(inline: Option<&str>, file: Option<&str>) -> Result<AuthToken> {
+        match (file, inline) {
+            (Some(path), _) => {
+                let raw = std::fs::read(path)
+                    .with_context(|| format!("reading --token-file {path}"))?;
+                AuthToken::new(raw).with_context(|| format!("--token-file {path}"))
+            }
+            (None, Some(tok)) => AuthToken::new(tok).context("--token"),
+            (None, None) => bail!(
+                "multi-host deployment requires a shared secret: pass --token-file <path> \
+                 (preferred; keeps the secret out of `ps`) or --token <string>"
+            ),
+        }
+    }
+
+    /// The secret bytes (what `Join` carries on the wire).
+    pub fn bytes(&self) -> &[u8] {
+        &self.0
+    }
+
+    /// Constant-time-style comparison: the scan length depends only on
+    /// the longer input, never on where the first mismatch sits.
+    pub fn matches(&self, presented: &[u8]) -> bool {
+        let a = &self.0;
+        let n = a.len().max(presented.len());
+        let mut acc = (a.len() != presented.len()) as u8;
+        for i in 0..n {
+            let x = a.get(i).copied().unwrap_or(0);
+            let y = presented.get(i).copied().unwrap_or(0);
+            acc |= x ^ y;
+        }
+        acc == 0
+    }
+}
+
+/// What the coordinator requires of every joiner.
+pub struct HandshakeSpec {
+    /// The deployment's shared secret.
+    pub token: AuthToken,
+    /// `FedConfig::digest()` of the coordinator's run configuration.
+    pub config_digest: u64,
+    /// Total worker slots (echoed in `Welcome`).
+    pub n_workers: usize,
+}
+
+/// A `Join` the coordinator refused (the worker-side error: carries the
+/// coordinator's `Reject`). `ecolora worker` maps this onto its own exit
+/// code so scripts can tell "refused" from "crashed".
+#[derive(Debug, Clone)]
+pub struct Rejected {
+    /// Machine-readable refusal category.
+    pub code: RejectCode,
+    /// Human-readable refusal detail from the coordinator.
+    pub reason: String,
+}
+
+impl fmt::Display for Rejected {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "coordinator rejected join ({}): {}", self.code.name(), self.reason)
+    }
+}
+
+impl std::error::Error for Rejected {}
+
+/// Outcome of one server-side admission attempt.
+#[derive(Debug)]
+pub enum Admission {
+    /// Peer authenticated and reserved a slot; install its connection.
+    Admitted {
+        /// Assigned worker id.
+        worker: u32,
+        /// True when the slot belonged to a previously-dropped worker
+        /// (this connection is a rejoin).
+        rejoin: bool,
+    },
+    /// Peer was answered with a `Reject` and must be dropped.
+    Rejected(RejectCode),
+}
+
+/// Server side: run the admission protocol on a freshly-accepted
+/// connection. `reserve` is the registry's id-assignment policy —
+/// called only after token and config checks pass, it either reserves a
+/// slot (`Ok((id, rejoin))`) or names the refusal; `unreserve` rolls the
+/// reservation back if the `Welcome` cannot be delivered (so a peer that
+/// dies mid-handshake never leaks a slot).
+///
+/// Returns `Err` only for connection-level failures (silent peer, early
+/// disconnect, version skew, corrupt frame); the caller drops the
+/// connection either way, but an `Err` never sent a `Reject`.
+pub fn admit(
+    conn: &mut TcpConn,
+    spec: &HandshakeSpec,
+    reserve: impl FnOnce(Option<u32>) -> std::result::Result<(u32, bool), (RejectCode, String)>,
+    unreserve: impl FnOnce(u32),
+    resume_round: u64,
+) -> Result<Admission> {
+    conn.set_frame_cap(JOIN_FRAME_CAP);
+    conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    let env = conn.recv().context("handshake: waiting for Join")?;
+    let msg = Message::from_envelope(&env).context("handshake: parsing Join")?;
+    let kind = msg.kind();
+    let Message::Join { token, config_digest, requested_worker, build } = msg else {
+        let code = RejectCode::Malformed;
+        let reason = format!("expected Join as the first message, got {kind:?}");
+        let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
+        return Ok(Admission::Rejected(code));
+    };
+    if !spec.token.matches(&token) {
+        // never echo anything token-derived back to an unauthenticated peer
+        let code = RejectCode::BadToken;
+        let _ = conn.send(
+            &Message::Reject { code, reason: "auth token mismatch".into() }.to_envelope(),
+        );
+        return Ok(Admission::Rejected(code));
+    }
+    if config_digest != spec.config_digest {
+        let code = RejectCode::ConfigMismatch;
+        let reason = format!(
+            "config digest {config_digest:016x} != coordinator's {:016x} \
+             (worker build {build:?}, coordinator build {:?}); launch both sides with \
+             identical run flags — see docs/DEPLOYMENT.md",
+            spec.config_digest,
+            crate::version(),
+        );
+        let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
+        return Ok(Admission::Rejected(code));
+    }
+    let requested = (requested_worker != ANY_WORKER).then_some(requested_worker);
+    match reserve(requested) {
+        Ok((worker, rejoin)) => {
+            let welcome = Message::Welcome {
+                worker,
+                n_workers: spec.n_workers as u32,
+                resume_round,
+            };
+            // deliver the Welcome AND restore steady-state transport
+            // settings; any failure in between means this connection is
+            // unusable, so the reservation must roll back either way (a
+            // worker that did receive the Welcome will find its slot
+            // Dropped and simply rejoin)
+            let finish = conn
+                .send(&welcome.to_envelope())
+                .and_then(|()| {
+                    conn.clear_frame_cap();
+                    conn.set_read_timeout(None)
+                });
+            if let Err(e) = finish {
+                unreserve(worker);
+                return Err(e).context("handshake: completing admission");
+            }
+            Ok(Admission::Admitted { worker, rejoin })
+        }
+        Err((code, reason)) => {
+            let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
+            Ok(Admission::Rejected(code))
+        }
+    }
+}
+
+/// What a successful client-side join learns from the coordinator.
+#[derive(Debug, Clone, Copy)]
+pub struct Joined {
+    /// Assigned worker id.
+    pub worker: u32,
+    /// Total worker slots in the deployment.
+    pub n_workers: u32,
+    /// Round the coordinator dispatches next (0 on a fresh run).
+    pub resume_round: u64,
+}
+
+/// Client side: authenticate against a coordinator on a freshly-dialed
+/// connection. A coordinator `Reject` surfaces as the typed
+/// [`Rejected`] error (retrying is pointless); connection-level failures
+/// surface as ordinary errors (retrying may help).
+pub fn join(
+    conn: &mut TcpConn,
+    token: &AuthToken,
+    config_digest: u64,
+    requested_worker: Option<u32>,
+) -> Result<Joined> {
+    conn.set_frame_cap(JOIN_FRAME_CAP);
+    conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    conn.send(
+        &Message::Join {
+            token: token.bytes().to_vec(),
+            config_digest,
+            requested_worker: requested_worker.unwrap_or(ANY_WORKER),
+            build: crate::version().to_string(),
+        }
+        .to_envelope(),
+    )
+    .context("handshake: sending Join")?;
+    let env = conn.recv().context("handshake: waiting for Welcome")?;
+    match Message::from_envelope(&env).context("handshake: parsing Welcome")? {
+        Message::Welcome { worker, n_workers, resume_round } => {
+            conn.clear_frame_cap();
+            conn.set_read_timeout(None)?;
+            Ok(Joined { worker, n_workers, resume_round })
+        }
+        Message::Reject { code, reason } => Err(Rejected { code, reason }.into()),
+        other => bail!("handshake: expected Welcome or Reject, got {:?}", other.kind()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn token_trims_and_validates() {
+        let t = AuthToken::new("  hunter2\n").unwrap();
+        assert_eq!(t.bytes(), b"hunter2");
+        assert!(AuthToken::new("   \n\t ").is_err(), "whitespace-only is empty");
+        assert!(AuthToken::new("").is_err());
+        assert!(AuthToken::new(vec![b'x'; MAX_TOKEN_LEN + 1]).is_err());
+        assert!(AuthToken::new(vec![b'x'; MAX_TOKEN_LEN]).is_ok());
+    }
+
+    #[test]
+    fn token_matching_is_exact() {
+        let t = AuthToken::new("correct horse").unwrap();
+        assert!(t.matches(b"correct horse"));
+        assert!(!t.matches(b"correct horsf"));
+        assert!(!t.matches(b"correct hors"));
+        assert!(!t.matches(b"correct horse "), "matching is post-trim exact bytes");
+        assert!(!t.matches(b""));
+    }
+
+    #[test]
+    fn token_debug_never_leaks_the_secret() {
+        let t = AuthToken::new("super-secret-value").unwrap();
+        let dbg = format!("{t:?}");
+        assert!(!dbg.contains("super-secret-value"), "{dbg}");
+        assert!(dbg.contains("redacted"), "{dbg}");
+    }
+
+    #[test]
+    fn token_from_cli_prefers_file_and_requires_one_source() {
+        let dir = std::env::temp_dir().join("ecolora-handshake-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("token.txt");
+        std::fs::write(&path, "file-secret\n").unwrap();
+        let p = path.to_str().unwrap();
+        assert_eq!(AuthToken::from_cli(Some("inline"), Some(p)).unwrap().bytes(), b"file-secret");
+        assert_eq!(AuthToken::from_cli(Some("inline"), None).unwrap().bytes(), b"inline");
+        assert!(AuthToken::from_cli(None, None).is_err());
+        assert!(AuthToken::from_cli(None, Some("/no/such/token/file")).is_err());
+    }
+
+    #[test]
+    fn rejected_error_formats_the_code() {
+        let r = Rejected { code: RejectCode::BadToken, reason: "auth token mismatch".into() };
+        let s = r.to_string();
+        assert!(s.contains("bad_token") && s.contains("auth token mismatch"), "{s}");
+    }
+}

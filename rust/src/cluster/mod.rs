@@ -25,6 +25,14 @@
 //!   into one global vector at round close.
 //! * [`participant`] — worker agents, each owning its own `Session` and a
 //!   shard of logical clients, executing tasks concurrently.
+//! * [`handshake`] — the protocol-v3 deployment handshake: shared-token
+//!   auth plus config-digest negotiation that an external `ecolora
+//!   worker` process completes before entering the task loop.
+//! * [`deploy`] — real multi-process deployment: the [`serve`] listener
+//!   coordinator and [`run_remote_worker`] dialing participant, built on
+//!   a dynamic worker-registration state machine in which a dropped
+//!   worker process is just a straggler (absorbed by the quorum/resample
+//!   machinery) and may rejoin mid-run.
 //! * [`netshim`] — optional transport-layer byte meter replaying real
 //!   protocol traffic through the `netsim` discrete-event simulator,
 //!   quorum- and shard-aware, optionally heterogeneous
@@ -43,6 +51,8 @@
 #![warn(missing_docs)]
 
 pub mod control;
+pub mod deploy;
+pub mod handshake;
 pub mod netshim;
 pub mod participant;
 pub mod protocol;
@@ -50,23 +60,25 @@ pub mod router;
 pub mod shard;
 pub mod transport;
 
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::fed::{FedConfig, FedOutcome};
-use crate::metrics::RunLog;
 use crate::netsim::RoundTiming;
 
 pub use control::{ControlPlane, Phase, RoundPolicy, RoundState};
+pub use deploy::{run_remote_worker, serve, ServeOptions, WorkerConnStats, WorkerOptions};
+pub use handshake::{AuthToken, Rejected};
 pub use netshim::SimProfile;
 pub use participant::Participant;
 pub use router::{GatheredAgg, RoutedAdd, Router, ShardMap};
 pub use shard::{AggStats, FoldCtx, LateBuffer, ShardAggregator, LATE_BUFFER_MAX_BYTES};
 pub use transport::ClusterMode;
 
+use deploy::WorkerPool;
 use protocol::Message;
-use transport::{ConnRx, ConnTx};
+use transport::Conn as _;
 
 /// Deterministic fault injection for straggler / dropout testing: every
 /// task for `client` is delayed by `delay` on the participant AFTER local
@@ -124,6 +136,10 @@ pub struct ClusterOutcome {
     pub shards: usize,
     /// Transport name ("mem" or "tcp").
     pub transport: &'static str,
+    /// Per-worker-slot connection telemetry (joins/drops/traffic). For
+    /// an in-process run every slot reports one join and no drops; a
+    /// multi-process `serve` run surfaces worker churn here.
+    pub worker_conns: Vec<WorkerConnStats>,
 }
 
 /// Run a full federated job over the cluster: spawn `n_workers`
@@ -157,47 +173,26 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         handles.push(handle);
     }
 
-    // Split coordinator-side conns; results drain through reader threads
-    // into one queue so dispatch can never deadlock against collection.
+    // Install every pipe into the worker pool (the same connection table
+    // the multi-process `serve` path drives — see `deploy`), checking the
+    // identifying Hello on each. `establish` pairs pipes index-aligned,
+    // and `run_worker` sends its Hello before building its world, so the
+    // sequential handshake completes while the worlds are still loading.
     let meter = opts.netsim.as_ref().map(|_| netshim::Meter::new());
-    let mut txs: Vec<Box<dyn ConnTx>> = Vec::with_capacity(n_workers);
-    let (results_tx, results_rx) = std::sync::mpsc::channel::<(usize, protocol::Envelope)>();
-    let mut reader_handles = Vec::with_capacity(n_workers);
-    for (i, conn) in coord_conns.into_iter().enumerate() {
-        let (tx, rx) = conn.split()?;
-        let (tx, mut rx) = match &meter {
-            Some(m) => (m.wrap_tx(tx), m.wrap_rx(rx)),
-            None => (tx, rx),
-        };
-        txs.push(tx);
-        let fwd = results_tx.clone();
-        reader_handles.push(std::thread::spawn(move || {
-            // forward until the peer hangs up (normal at shutdown)
-            while let Ok(env) = rx.recv() {
-                if fwd.send((i, env)).is_err() {
-                    break;
-                }
-            }
-        }));
-    }
-    drop(results_tx);
-
-    // Handshake: map worker id -> conn index.
-    let mut tx_of_worker: Vec<usize> = vec![usize::MAX; n_workers];
-    for _ in 0..n_workers {
-        let (conn_idx, env) = results_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("cluster: all workers disconnected during handshake"))?;
+    let mut pool = WorkerPool::new(n_workers, meter, None);
+    for (i, mut conn) in coord_conns.into_iter().enumerate() {
+        let env = conn.recv().context("cluster: worker handshake")?;
         match Message::from_envelope(&env)? {
             Message::Hello { worker } => {
-                let w = worker as usize;
-                ensure!(w < n_workers, "hello from unknown worker {w}");
-                ensure!(tx_of_worker[w] == usize::MAX, "duplicate hello from worker {w}");
-                tx_of_worker[w] = conn_idx;
+                ensure!(
+                    worker as usize == i,
+                    "cluster: hello from worker {worker} on pipe {i}"
+                );
             }
             Message::Error { text } => bail!("worker failed during startup: {text}"),
             other => bail!("cluster: expected Hello, got {:?}", other.kind()),
         }
+        pool.install(i, false, conn)?;
     }
 
     // The control plane builds its own world while workers build theirs;
@@ -211,137 +206,12 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         control.fold_beta(),
         control.dense_upload_params(),
     )?;
-    let label = control.cfg.run_label();
-    let mut log = RunLog::new(label.clone());
-    let mut reached: Option<usize> = None;
-    let mut timings = Vec::new();
 
-    let send_to = |txs: &mut [Box<dyn ConnTx>], w: usize, msg: &Message| -> Result<()> {
-        txs[w].send(&msg.to_envelope())
-    };
-
-    for t in 0..control.cfg.rounds {
-        // Sampling + Broadcast
-        let (mut rs, tasks) = control.begin_round(t as u64, n_workers)?;
-        router.begin_round(t as u64, rs.n_s)?;
-        for (w, task) in tasks {
-            send_to(&mut txs, tx_of_worker[w], &Message::TrainTask(task))
-                .with_context(|| format!("cluster: dispatch to worker {w}"))?;
-        }
-        // Collect: every result is routed — current round into the round
-        // state (closing it at quorum) with its payload forwarded to the
-        // owning aggregation shard, earlier rounds into that shard's late
-        // buffer. Under a Quorum policy the wait is bounded by the slot
-        // timeout; each expiry re-dispatches the outstanding slots to
-        // replacement clients (up to control::MAX_REDISPATCH waves per
-        // slot), then keeps waiting — a slot that went quiet forever
-        // surfaces as a disconnect, not a hang.
-        let mut wave_deadline = opts.policy.slot_timeout().map(|d| Instant::now() + d);
-        while rs.phase == Phase::Collect {
-            let received = match wave_deadline {
-                None => match results_rx.recv() {
-                    Ok(x) => Some(x),
-                    Err(_) => bail!("cluster: workers disconnected mid-round"),
-                },
-                Some(deadline) => {
-                    let wait = deadline.saturating_duration_since(Instant::now());
-                    match results_rx.recv_timeout(wait) {
-                        Ok(x) => Some(x),
-                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => None,
-                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                            bail!("cluster: workers disconnected mid-round")
-                        }
-                    }
-                }
-            };
-            match received {
-                Some((_idx, env)) => match Message::from_envelope(&env)? {
-                    Message::TrainResult(res) => {
-                        if res.round == rs.t {
-                            if let Some(add) = control.accept(&mut rs, res)? {
-                                router.route(add)?;
-                            }
-                        } else if res.round < rs.t {
-                            // straggler from a closed quorum round
-                            if let Some(fwd) = control.accept_late(res) {
-                                router.route_late(fwd)?;
-                            }
-                        } else {
-                            bail!("cluster: result for future round {}", res.round);
-                        }
-                    }
-                    Message::Error { text } => bail!("worker failed: {text}"),
-                    other => bail!("cluster: expected TrainResult, got {:?}", other.kind()),
-                },
-                None => {
-                    // wave timeout: re-dispatch every outstanding slot
-                    for slot in rs.unfilled_slots() {
-                        if let Some((w, task)) = control.resample_slot(&mut rs, slot, n_workers)? {
-                            send_to(&mut txs, tx_of_worker[w], &Message::TrainTask(task))
-                                .with_context(|| format!("cluster: re-dispatch slot {slot}"))?;
-                        }
-                    }
-                    let timeout = opts.policy.slot_timeout().expect("deadline implies timeout");
-                    wave_deadline = Some(Instant::now() + timeout);
-                }
-            }
-        }
-        control.ensure_collected(&rs)?;
-        let compute_by_slot = rs.exec_by_slot();
-        let quorum = rs.quorum;
-        // shards beyond the segment count own nothing and add no
-        // parallelism — the netsim agg model must not credit them
-        let agg_parallelism = n_shards.min(rs.n_s.max(1));
-        // Aggregate: close the shards (slot-ordered accumulate + the
-        // staleness-discounted late fold, in parallel across shards),
-        // gather the Eq. 2 delta, and let the control plane finish.
-        let gathered = router.close_round(t as u64)?;
-        let (rec, base_sync) = control.finish_round(rs, gathered)?;
-        if let Some(base) = base_sync {
-            for w in 0..n_workers {
-                send_to(&mut txs, tx_of_worker[w], &Message::BaseSync { base: base.clone() })?;
-            }
-        }
-        if let (Some(m), Some(profile)) = (&meter, &opts.netsim) {
-            timings.push(
-                m.round_timing(t as u64, &compute_by_slot, profile, quorum, agg_parallelism)?,
-            );
-        }
-        if control.cfg.verbose {
-            let acc = rec.eval_acc;
-            eprintln!(
-                "[{label}@{}x{n_workers}s{n_shards}] round {t}: loss {:.4} acc {} upM {:.3} downM {:.3} k=({:.2},{:.2}) stragglers {} late {} aggMs {:.2}",
-                opts.mode.name(),
-                rec.global_loss,
-                acc.map_or("-".into(), |a| format!("{a:.3}")),
-                rec.up.params_m(),
-                rec.down.params_m(),
-                rec.k_a,
-                rec.k_b,
-                rec.stragglers,
-                rec.late_folds,
-                rec.shard_agg_ms_max,
-            );
-        }
-        let acc = rec.eval_acc;
-        log.push(rec);
-        if let (Some(target), Some(a)) = (control.cfg.target_acc, acc) {
-            if a >= target {
-                reached = Some(t);
-                break;
-            }
-        }
-    }
-
-    let outcome = control.outcome(log, reached)?;
+    let out = deploy::drive_rounds(&mut control, &mut router, &mut pool, opts, None)?;
+    let outcome = control.outcome(out.log, out.reached)?;
 
     // Orderly shutdown: tell every worker, then join; same for shards.
-    for w in 0..n_workers {
-        let _ = send_to(&mut txs, tx_of_worker[w], &Message::Shutdown);
-    }
-    // Dropping senders lets worker recv() error out even if a Shutdown was
-    // lost; reader threads exit when peers hang up.
-    txs.clear();
+    pool.shutdown(true);
     for (w, h) in handles.into_iter().enumerate() {
         match h.join() {
             Ok(Ok(())) => {}
@@ -349,16 +219,14 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
             Err(_) => bail!("worker {w} panicked"),
         }
     }
-    for h in reader_handles {
-        let _ = h.join();
-    }
     router.shutdown()?;
 
     Ok(ClusterOutcome {
         fed: outcome,
-        timings,
+        timings: out.timings,
         workers: n_workers,
         shards: n_shards,
         transport: opts.mode.name(),
+        worker_conns: pool.into_stats(),
     })
 }

@@ -42,6 +42,11 @@ pub struct Participant {
     clients: HashMap<usize, ClientState>,
     /// Per-client downlink reference (mirror of the server's channel).
     refs: HashMap<usize, Vec<f32>>,
+    /// Per-client count of stateful downlinks applied, checked against
+    /// `TrainTask::down_seq`: a delta lost in transit (dead connection,
+    /// worker restart) would silently desynchronize the reference
+    /// reconstruction, so the gap fails loudly here instead.
+    applied_seq: HashMap<usize, u64>,
     /// Codec scratch reused across tasks (§Perf, codec hot path): the
     /// downlink wire decoder + decoded delta, the uplink update vector,
     /// the compression output, and a running payload-size high-water mark
@@ -66,6 +71,7 @@ impl Participant {
             mask,
             clients: HashMap::new(),
             refs: HashMap::new(),
+            applied_seq: HashMap::new(),
             dec: wire::Decoder::new(),
             down_sv: wire::SparseVec::default(),
             update: Vec::new(),
@@ -96,6 +102,19 @@ impl Participant {
                 Some(g.clone())
             }
             DownPayload::SparseWire(_) | DownPayload::DenseF16(_) => {
+                // every stateful delta builds on the previous one —
+                // prove none was lost before mutating the reference
+                let applied = self.applied_seq.entry(ci).or_insert(0);
+                ensure!(
+                    task.down_seq == *applied + 1,
+                    "downlink reference desync for client {ci}: task carries stateful \
+                     downlink #{}, this participant has applied {} (a delta was lost in \
+                     transit — a restarted or disconnected worker cannot resume this \
+                     client's channel; restart the run)",
+                    task.down_seq,
+                    *applied
+                );
+                *applied += 1;
                 let reference = self
                     .refs
                     .entry(ci)
@@ -240,6 +259,19 @@ pub fn run_worker(
             return Err(e);
         }
     };
+    serve_conn(&mut participant, conn.as_mut(), fault)
+}
+
+/// Serve one already-identified connection until `Shutdown`: the task
+/// loop shared by in-process workers (after their `Hello`) and remote
+/// `ecolora worker` processes (after their protocol-v3 join handshake —
+/// see `cluster::deploy::run_remote_worker`, which calls this once per
+/// connection so a rejoining worker keeps its participant state).
+pub fn serve_conn(
+    participant: &mut Participant,
+    conn: &mut dyn Conn,
+    fault: Option<FaultSpec>,
+) -> Result<()> {
     loop {
         let env = conn.recv()?;
         let msg = Message::from_envelope(&env)?;

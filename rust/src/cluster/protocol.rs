@@ -8,11 +8,17 @@
 //! field or payload) is rejected rather than misinterpreted; truncation
 //! and version skew get dedicated errors.
 //!
-//! Version 2 (this revision) added the two round-policy header fields
+//! Version 2 added the two round-policy header fields
 //! (`round_deadline`, `stale_from_round`) that drive K-of-N quorum
-//! aggregation; peers speaking different versions reject each other's
-//! envelopes outright — see docs/PROTOCOL.md for the normative layout
-//! and the compatibility table.
+//! aggregation. Version 3 (this revision) added the deployment
+//! handshake kinds — [`Join`](Message::Join) /
+//! [`Welcome`](Message::Welcome) / [`Reject`](Message::Reject) — that
+//! let an externally-spawned `ecolora worker` process authenticate
+//! (shared token) and negotiate (config digest) with an `ecolora serve`
+//! coordinator before entering the task loop. The header layout is
+//! unchanged from v2. Peers speaking different versions reject each
+//! other's envelopes outright — see docs/PROTOCOL.md for the normative
+//! layout and the compatibility table.
 //!
 //! Payload contents reuse the existing `compress::wire` messages wherever
 //! compression is on; dense fallbacks ship raw little-endian f32/f16.
@@ -23,8 +29,12 @@ use anyhow::{anyhow, bail, ensure, Result};
 pub const MAGIC: [u8; 2] = [0xEC, 0x57];
 /// Protocol version carried in every envelope header. Bumped to 2 when
 /// the `round_deadline`/`stale_from_round` header fields were added for
-/// quorum rounds; v1 peers reject v2 envelopes and vice versa.
-pub const PROTO_VERSION: u8 = 2;
+/// quorum rounds, and to 3 when the `Join`/`Welcome`/`Reject` handshake
+/// kinds were added for authenticated multi-process deployment. Peers
+/// speaking different versions reject each other's envelopes.
+pub const PROTO_VERSION: u8 = 3;
+/// `Join::requested_worker` wildcard: "assign me any free worker id".
+pub const ANY_WORKER: u32 = u32::MAX;
 /// Fixed header length in bytes.
 pub const HEADER_LEN: usize = 44;
 /// Hard cap on one payload (base-model sync dominates; 1 GiB is generous).
@@ -46,6 +56,12 @@ pub enum MsgKind {
     Shutdown = 5,
     /// Either direction: fatal peer failure, human-readable.
     Error = 6,
+    /// Worker → coordinator: authenticated join request (v3 handshake).
+    Join = 7,
+    /// Coordinator → worker: join accepted, worker id assigned.
+    Welcome = 8,
+    /// Coordinator → worker: join refused; connection closes after this.
+    Reject = 9,
 }
 
 impl MsgKind {
@@ -57,8 +73,54 @@ impl MsgKind {
             4 => MsgKind::BaseSync,
             5 => MsgKind::Shutdown,
             6 => MsgKind::Error,
+            7 => MsgKind::Join,
+            8 => MsgKind::Welcome,
+            9 => MsgKind::Reject,
             other => bail!("envelope: unknown message kind {other}"),
         })
+    }
+}
+
+/// Why a coordinator refused a `Join` (the `Reject` payload code).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RejectCode {
+    /// Presented auth token does not match the coordinator's secret.
+    BadToken = 1,
+    /// Config digests disagree: the two processes were launched with
+    /// different run configurations and could not produce a well-defined
+    /// federated run together.
+    ConfigMismatch = 2,
+    /// The requested worker id is already connected.
+    DuplicateWorker = 3,
+    /// No free worker slot (requested id out of range, or every slot
+    /// taken).
+    ClusterFull = 4,
+    /// The peer's first message was not a well-formed `Join`.
+    Malformed = 5,
+}
+
+impl RejectCode {
+    fn from_u8(x: u8) -> Result<RejectCode> {
+        Ok(match x {
+            1 => RejectCode::BadToken,
+            2 => RejectCode::ConfigMismatch,
+            3 => RejectCode::DuplicateWorker,
+            4 => RejectCode::ClusterFull,
+            5 => RejectCode::Malformed,
+            other => bail!("payload: unknown reject code {other}"),
+        })
+    }
+
+    /// Stable lower-snake name (log lines, operator diagnostics).
+    pub fn name(self) -> &'static str {
+        match self {
+            RejectCode::BadToken => "bad_token",
+            RejectCode::ConfigMismatch => "config_mismatch",
+            RejectCode::DuplicateWorker => "duplicate_worker",
+            RejectCode::ClusterFull => "cluster_full",
+            RejectCode::Malformed => "malformed",
+        }
     }
 }
 
@@ -349,6 +411,14 @@ pub struct TrainTask {
     /// Milliseconds the coordinator allots before the slot may be
     /// resampled to a replacement client (0 = no deadline, sync rounds).
     pub deadline_ms: u64,
+    /// Sequence number of this downlink within the client's STATEFUL
+    /// downlink channel: the n-th sparse/f16 delta the coordinator has
+    /// ever built for this client (1-based); 0 for stateless payloads
+    /// (exact dense vector, FLoRA restart init). The participant checks
+    /// it against its own applied count so a stateful downlink lost in
+    /// transit — which would silently desynchronize the client's
+    /// reference reconstruction — fails loudly instead. New in v3.
+    pub down_seq: u64,
     /// Downlink content (see [`DownPayload`]).
     pub down: DownPayload,
 }
@@ -405,6 +475,39 @@ pub enum Message {
     Error {
         /// Human-readable failure description.
         text: String,
+    },
+    /// Worker → coordinator: authenticated join request, first message on
+    /// an externally-dialed connection (v3 deployment handshake).
+    Join {
+        /// Shared-secret bearer token bytes (compared constant-time by
+        /// the coordinator; see `cluster::handshake`).
+        token: Vec<u8>,
+        /// `FedConfig::digest()` of the worker's run configuration; the
+        /// coordinator hard-rejects on mismatch.
+        config_digest: u64,
+        /// Worker id the process wants ([`ANY_WORKER`] = assign one).
+        requested_worker: u32,
+        /// Peer build version string (diagnostics only — the envelope
+        /// version byte, not this field, gates compatibility).
+        build: String,
+    },
+    /// Coordinator → worker: join accepted.
+    Welcome {
+        /// Assigned worker id (0..n_workers).
+        worker: u32,
+        /// Total worker slots in this deployment.
+        n_workers: u32,
+        /// Round the coordinator will dispatch next (0 on a fresh run;
+        /// tells a rejoining worker where the run currently stands).
+        resume_round: u64,
+    },
+    /// Coordinator → worker: join refused; the coordinator closes the
+    /// connection after sending this.
+    Reject {
+        /// Machine-readable refusal category.
+        code: RejectCode,
+        /// Human-readable refusal detail.
+        reason: String,
     },
 }
 
@@ -475,6 +578,9 @@ impl Message {
             Message::BaseSync { .. } => MsgKind::BaseSync,
             Message::Shutdown => MsgKind::Shutdown,
             Message::Error { .. } => MsgKind::Error,
+            Message::Join { .. } => MsgKind::Join,
+            Message::Welcome { .. } => MsgKind::Welcome,
+            Message::Reject { .. } => MsgKind::Reject,
         }
     }
 
@@ -495,6 +601,7 @@ impl Message {
                 for s in t.rng_state {
                     w.u64(s);
                 }
+                w.u64(t.down_seq);
                 down_encode(&mut w, &t.down);
                 (t.round, t.segment, 0, t.deadline_ms, t.round)
             }
@@ -515,6 +622,24 @@ impl Message {
             Message::Shutdown => (0, 0, 0, 0, 0),
             Message::Error { text } => {
                 w.bytes(text.as_bytes());
+                (0, 0, 0, 0, 0)
+            }
+            Message::Join { token, config_digest, requested_worker, build } => {
+                w.bytes(token);
+                w.u64(*config_digest);
+                w.u32(*requested_worker);
+                w.bytes(build.as_bytes());
+                (0, 0, 0, 0, 0)
+            }
+            Message::Welcome { worker, n_workers, resume_round } => {
+                w.u32(*worker);
+                w.u32(*n_workers);
+                w.u64(*resume_round);
+                (0, 0, 0, 0, 0)
+            }
+            Message::Reject { code, reason } => {
+                w.u8(*code as u8);
+                w.bytes(reason.as_bytes());
                 (0, 0, 0, 0, 0)
             }
         };
@@ -544,6 +669,7 @@ impl Message {
                 for s in &mut rng_state {
                     *s = r.u64()?;
                 }
+                let down_seq = r.u64()?;
                 let down = down_decode(&mut r)?;
                 Message::TrainTask(TrainTask {
                     round: env.round,
@@ -555,6 +681,7 @@ impl Message {
                     l_prev,
                     rng_state,
                     deadline_ms: env.round_deadline,
+                    down_seq,
                     down,
                 })
             }
@@ -586,6 +713,23 @@ impl Message {
                 let raw = r.bytes()?;
                 Message::Error { text: String::from_utf8_lossy(&raw).into_owned() }
             }
+            MsgKind::Join => {
+                let token = r.bytes()?;
+                let config_digest = r.u64()?;
+                let requested_worker = r.u32()?;
+                let build = String::from_utf8_lossy(&r.bytes()?).into_owned();
+                Message::Join { token, config_digest, requested_worker, build }
+            }
+            MsgKind::Welcome => Message::Welcome {
+                worker: r.u32()?,
+                n_workers: r.u32()?,
+                resume_round: r.u64()?,
+            },
+            MsgKind::Reject => {
+                let code = RejectCode::from_u8(r.u8()?)?;
+                let reason = String::from_utf8_lossy(&r.bytes()?).into_owned();
+                Message::Reject { code, reason }
+            }
         };
         r.done()?;
         Ok(msg)
@@ -599,7 +743,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn random_message(rng: &mut Rng) -> Message {
-        match rng.below(6) {
+        match rng.below(9) {
             0 => Message::Hello { worker: rng.below(64) as u32 },
             1 => {
                 let n = rng.below(200);
@@ -613,6 +757,7 @@ mod tests {
                     l_prev: rng.normal(),
                     rng_state: [rng.next_u64(), rng.next_u64(), rng.next_u64(), rng.next_u64()],
                     deadline_ms: rng.below(100_000) as u64,
+                    down_seq: rng.below(1000) as u64,
                     down: match rng.below(4) {
                         0 => DownPayload::DenseF32((0..n).map(|_| rng.normal() as f32).collect()),
                         1 => DownPayload::SparseWire((0..n).map(|_| rng.below(256) as u8).collect()),
@@ -646,7 +791,32 @@ mod tests {
                 base: (0..rng.below(300)).map(|_| rng.normal() as f32).collect(),
             },
             4 => Message::Shutdown,
-            _ => Message::Error { text: format!("err-{}", rng.below(1000)) },
+            5 => Message::Error { text: format!("err-{}", rng.below(1000)) },
+            6 => Message::Join {
+                token: (0..rng.below(64)).map(|_| rng.below(256) as u8).collect(),
+                config_digest: rng.next_u64(),
+                requested_worker: if rng.below(4) == 0 {
+                    ANY_WORKER
+                } else {
+                    rng.below(64) as u32
+                },
+                build: format!("0.{}.{}", rng.below(10), rng.below(10)),
+            },
+            7 => Message::Welcome {
+                worker: rng.below(64) as u32,
+                n_workers: rng.below(64) as u32 + 1,
+                resume_round: rng.below(1000) as u64,
+            },
+            _ => Message::Reject {
+                code: match rng.below(5) {
+                    0 => RejectCode::BadToken,
+                    1 => RejectCode::ConfigMismatch,
+                    2 => RejectCode::DuplicateWorker,
+                    3 => RejectCode::ClusterFull,
+                    _ => RejectCode::Malformed,
+                },
+                reason: format!("reason-{}", rng.below(1000)),
+            },
         }
     }
 
@@ -721,6 +891,46 @@ mod tests {
     }
 
     #[test]
+    fn handshake_messages_roundtrip_exactly() {
+        // the v3 handshake triple must survive the codec byte-for-byte,
+        // including an empty token and the ANY_WORKER wildcard
+        let msgs = [
+            Message::Join {
+                token: vec![],
+                config_digest: 0xDEAD_BEEF_0123_4567,
+                requested_worker: ANY_WORKER,
+                build: String::new(),
+            },
+            Message::Join {
+                token: b"s3cret".to_vec(),
+                config_digest: 1,
+                requested_worker: 3,
+                build: "0.1.0".into(),
+            },
+            Message::Welcome { worker: 2, n_workers: 8, resume_round: 41 },
+            Message::Reject { code: RejectCode::BadToken, reason: "auth token mismatch".into() },
+            Message::Reject { code: RejectCode::ConfigMismatch, reason: String::new() },
+        ];
+        for msg in msgs {
+            let env = msg.to_envelope();
+            assert_eq!(env.round, 0, "handshake messages are round-less");
+            let dec = Message::from_envelope(&Envelope::decode(&env.encode()).unwrap()).unwrap();
+            assert_eq!(dec, msg);
+        }
+    }
+
+    #[test]
+    fn unknown_reject_code_is_rejected() {
+        let env = Message::Reject { code: RejectCode::ClusterFull, reason: "x".into() }
+            .to_envelope();
+        let mut payload = env.payload.clone();
+        payload[0] = 99; // not a known RejectCode discriminant
+        let bad = Envelope::new(MsgKind::Reject, 0, 0, 0, payload);
+        let dec = Envelope::decode(&bad.encode()).unwrap();
+        assert!(Message::from_envelope(&dec).is_err());
+    }
+
+    #[test]
     fn payload_trailing_bytes_rejected() {
         // a Shutdown with spurious payload must not silently parse
         let env = Envelope::new(MsgKind::Shutdown, 0, 0, 0, vec![1, 2, 3]);
@@ -772,6 +982,7 @@ mod tests {
             l_prev: 1.5,
             rng_state: [1, 2, 3, 4],
             deadline_ms: 750,
+            down_seq: 0,
             down: DownPayload::DenseF32(vec![0.5; 16]),
         };
         let env = Message::TrainTask(task.clone()).to_envelope();

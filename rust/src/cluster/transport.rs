@@ -14,11 +14,12 @@
 //! is still dispatching tasks — that split is what makes the dispatch
 //! phase deadlock-free regardless of kernel socket buffer sizes.
 
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, ensure, Context, Result};
+use anyhow::{anyhow, bail, ensure, Context, Result};
 
 use super::protocol::{Envelope, HEADER_LEN, MAX_PAYLOAD};
 
@@ -134,7 +135,7 @@ fn tcp_send(stream: &mut TcpStream, env: &Envelope) -> Result<()> {
     Ok(())
 }
 
-fn tcp_recv(stream: &mut TcpStream) -> Result<Envelope> {
+fn tcp_recv(stream: &mut TcpStream, frame_cap: usize) -> Result<Envelope> {
     let mut len4 = [0u8; 4];
     stream.read_exact(&mut len4).context("tcp recv: frame length")?;
     let len = u32::from_le_bytes(len4) as usize;
@@ -142,10 +143,17 @@ fn tcp_recv(stream: &mut TcpStream) -> Result<Envelope> {
         (HEADER_LEN..=HEADER_LEN + MAX_PAYLOAD).contains(&len),
         "tcp recv: implausible frame length {len}"
     );
+    ensure!(
+        len <= frame_cap,
+        "tcp recv: frame length {len} over the connection cap {frame_cap}"
+    );
     let mut buf = vec![0u8; len];
     stream.read_exact(&mut buf).context("tcp recv: frame body")?;
     Envelope::decode(&buf)
 }
+
+/// Default per-frame byte cap: anything the protocol can legally carry.
+const FRAME_CAP_DEFAULT: usize = HEADER_LEN + MAX_PAYLOAD;
 
 /// Sending half of a TCP connection.
 pub struct TcpTx {
@@ -155,6 +163,7 @@ pub struct TcpTx {
 /// Receiving half of a TCP connection (a cloned stream handle).
 pub struct TcpRx {
     stream: TcpStream,
+    frame_cap: usize,
 }
 
 impl ConnTx for TcpTx {
@@ -165,20 +174,50 @@ impl ConnTx for TcpTx {
 
 impl ConnRx for TcpRx {
     fn recv(&mut self) -> Result<Envelope> {
-        tcp_recv(&mut self.stream)
+        tcp_recv(&mut self.stream, self.frame_cap)
     }
 }
 
 /// Duplex framed-TCP connection (see [`ClusterMode::Tcp`]).
 pub struct TcpConn {
     stream: TcpStream,
+    frame_cap: usize,
 }
 
 impl TcpConn {
     /// Wrap an already-connected stream (external deployments).
     pub fn from_stream(stream: TcpStream) -> TcpConn {
         stream.set_nodelay(true).ok();
-        TcpConn { stream }
+        TcpConn { stream, frame_cap: FRAME_CAP_DEFAULT }
+    }
+
+    /// Cap the length any incoming frame may claim before its body is
+    /// allocated. The deployment handshake lowers this to 64 KiB while
+    /// the peer is still unauthenticated (a giant pre-auth frame is a
+    /// memory-exhaustion vector), then restores the protocol-wide default
+    /// after `Welcome`.
+    pub fn set_frame_cap(&mut self, cap: usize) {
+        self.frame_cap = cap.clamp(HEADER_LEN, FRAME_CAP_DEFAULT);
+    }
+
+    /// Restore the protocol-wide default frame cap.
+    pub fn clear_frame_cap(&mut self) {
+        self.frame_cap = FRAME_CAP_DEFAULT;
+    }
+
+    /// Bound how long a blocking [`Conn::recv`] may wait (`None` = wait
+    /// forever). The deployment handshake sets a bound so a peer that
+    /// connects and then goes silent cannot stall the coordinator's
+    /// registry; steady-state connections run unbounded.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.stream
+            .set_read_timeout(timeout)
+            .context("tcp: set read timeout")
+    }
+
+    /// Remote peer address (log lines).
+    pub fn peer_addr(&self) -> Result<SocketAddr> {
+        self.stream.peer_addr().context("tcp: peer addr")
     }
 }
 
@@ -188,12 +227,93 @@ impl Conn for TcpConn {
     }
 
     fn recv(&mut self) -> Result<Envelope> {
-        tcp_recv(&mut self.stream)
+        tcp_recv(&mut self.stream, self.frame_cap)
     }
 
     fn split(self: Box<Self>) -> Result<(Box<dyn ConnTx>, Box<dyn ConnRx>)> {
         let reader = self.stream.try_clone().context("tcp split: clone stream")?;
-        Ok((Box::new(TcpTx { stream: self.stream }), Box::new(TcpRx { stream: reader })))
+        // read timeouts are a handshake-phase tool; the split steady-state
+        // halves always block indefinitely (the reader thread owns recv)
+        reader.set_read_timeout(None).context("tcp split: clear read timeout")?;
+        Ok((
+            Box::new(TcpTx { stream: self.stream }),
+            Box::new(TcpRx { stream: reader, frame_cap: self.frame_cap }),
+        ))
+    }
+}
+
+/// A bound coordinator listener accepting external worker connections
+/// (the `ecolora serve` front door).
+pub struct Listener {
+    inner: TcpListener,
+}
+
+impl Listener {
+    /// Bind `addr` (e.g. `127.0.0.1:7878` or `0.0.0.0:7878`). The
+    /// listener is non-blocking: poll it with [`Listener::try_accept`].
+    pub fn bind(addr: &str) -> Result<Listener> {
+        let inner = TcpListener::bind(addr)
+            .with_context(|| format!("serve: bind listener on {addr}"))?;
+        inner.set_nonblocking(true).context("serve: set listener non-blocking")?;
+        Ok(Listener { inner })
+    }
+
+    /// The bound local address (port 0 resolves to the real port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.inner.local_addr().context("serve: listener local addr")
+    }
+
+    /// Accept one pending connection, or `None` when nobody is waiting.
+    pub fn try_accept(&self) -> Result<Option<(TcpConn, SocketAddr)>> {
+        match self.inner.accept() {
+            Ok((stream, peer)) => {
+                stream.set_nonblocking(false).context("serve: accepted stream blocking mode")?;
+                Ok(Some((TcpConn::from_stream(stream), peer)))
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => Ok(None),
+            Err(e) => Err(e).context("serve: accept"),
+        }
+    }
+}
+
+/// Dial a coordinator, retrying until `timeout` elapses (an `ecolora
+/// worker` may legitimately start before its `serve` peer has bound the
+/// listener; connection-refused within the window is not an error).
+/// Every single attempt is bounded by `connect_timeout` too, so a
+/// blackholed address cannot hold one attempt open past the window the
+/// operator configured.
+pub fn dial(addr: &str, timeout: Duration) -> Result<TcpConn> {
+    let deadline = Instant::now() + timeout;
+    let mut last_err: Option<std::io::Error> = None;
+    loop {
+        // re-resolve each attempt: DNS may converge while we wait
+        match addr.to_socket_addrs() {
+            Ok(addrs) => {
+                for a in addrs {
+                    // re-derive the budget per address so a multi-record
+                    // name cannot stack attempts past the deadline; 5 s
+                    // caps any one attempt within a long window
+                    let remaining = deadline.saturating_duration_since(Instant::now());
+                    if remaining.is_zero() {
+                        break;
+                    }
+                    match TcpStream::connect_timeout(&a, remaining.min(Duration::from_secs(5)))
+                    {
+                        Ok(stream) => return Ok(TcpConn::from_stream(stream)),
+                        Err(e) => last_err = Some(e),
+                    }
+                }
+            }
+            Err(e) => last_err = Some(e),
+        }
+        if Instant::now() >= deadline {
+            bail!(
+                "worker: could not reach coordinator at {addr} within {:.0?}: {}",
+                timeout,
+                last_err.map_or_else(|| "no error recorded".into(), |e| e.to_string())
+            );
+        }
+        std::thread::sleep(Duration::from_millis(250));
     }
 }
 
@@ -316,6 +436,65 @@ mod tests {
             assert_eq!(reader.join().unwrap(), vec![0, 1, 2]);
             peer.join().unwrap();
         }
+    }
+
+    #[test]
+    fn listener_accepts_dialed_connections() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        assert!(listener.try_accept().unwrap().is_none(), "nobody connected yet");
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut worker_side = dial(&addr, Duration::from_secs(5)).unwrap();
+        // the non-blocking accept needs a beat for the connection to land
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut coord_side = loop {
+            if let Some((conn, _peer)) = listener.try_accept().unwrap() {
+                break conn;
+            }
+            assert!(Instant::now() < deadline, "accept never saw the dialed connection");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        let env = Message::Hello { worker: 9 }.to_envelope();
+        worker_side.send(&env).unwrap();
+        assert_eq!(coord_side.recv().unwrap(), env);
+    }
+
+    #[test]
+    fn dial_times_out_against_a_dead_address() {
+        // bind-then-drop guarantees an unoccupied port
+        let port = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let err = dial(&format!("127.0.0.1:{port}"), Duration::from_millis(300)).unwrap_err();
+        assert!(format!("{err:#}").contains("could not reach coordinator"), "{err:#}");
+    }
+
+    #[test]
+    fn frame_cap_rejects_oversized_frames_before_allocation() {
+        let listener = Listener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut worker_side = dial(&addr, Duration::from_secs(5)).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let mut coord_side = loop {
+            if let Some((conn, _)) = listener.try_accept().unwrap() {
+                break conn;
+            }
+            assert!(Instant::now() < deadline);
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        coord_side.set_frame_cap(256);
+        // under the cap: passes
+        let small = Message::Hello { worker: 1 }.to_envelope();
+        worker_side.send(&small).unwrap();
+        assert_eq!(coord_side.recv().unwrap(), small);
+        // over the cap: rejected with the cap named
+        let big = Message::BaseSync { base: vec![1.0; 4096] }.to_envelope();
+        worker_side.send(&big).unwrap();
+        let err = coord_side.recv().unwrap_err();
+        assert!(format!("{err:#}").contains("over the connection cap"), "{err:#}");
+        // restoring the default admits big frames again (fresh stream —
+        // the oversized frame body is still in flight on the old one)
+        coord_side.clear_frame_cap();
     }
 
     #[test]

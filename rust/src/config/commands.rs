@@ -3,6 +3,8 @@
 //! Subcommands:
 //!   pretrain  --preset small [--steps 400]           create base checkpoint
 //!   train     --preset small --method fedit [--eco] [...]   one federated run
+//!   serve     --listen 0.0.0.0:7878 --token-file t --expect-workers N [...]
+//!   worker    --connect host:7878 --token-file t [...]
 //!   repro     --table 1..6 | --fig 2|3 [--preset p] [--scaled]
 //!   netsim    --ul 1 --dl 5 [--bytes-up N --bytes-down N --compute S]
 //!   help
@@ -12,10 +14,13 @@ use std::time::Duration;
 use anyhow::{anyhow, Result};
 
 use crate::baselines::Method;
-use crate::cluster::{self, ClusterMode, ClusterOptions, FaultSpec, RoundPolicy, SimProfile};
+use crate::cluster::{
+    self, AuthToken, ClusterMode, ClusterOptions, FaultSpec, RoundPolicy, ServeOptions,
+    SimProfile, WorkerOptions,
+};
 use crate::compress::{AdaptiveSparsifier, Encoding, SparsMode};
 use crate::data::PartitionKind;
-use crate::fed::{EcoConfig, FedOutcome, FedRunner};
+use crate::fed::{EcoConfig, FedConfig, FedOutcome, FedRunner};
 use crate::netsim::{NetSim, RoundPlan, Scenario};
 use crate::util::cli::Args;
 
@@ -39,6 +44,11 @@ USAGE: ecolora <subcommand> [flags]
              [--fixed-k X] [--no-spars] [--no-encoding] [--dense-downlink]
              [--partition dirichlet|clusters|task|iid] [--target-acc X]
              [--csv out.csv] [--verbose]
+  serve      --listen <addr:port> --token-file <path> --expect-workers N
+             [--join-timeout-s S] [same run flags as train, minus --cluster/--workers]
+  worker     --connect <addr:port> --token-file <path> [--worker-id N]
+             [--reconnect N] [--dial-timeout-s S] [--inject-slow CLIENT]
+             [--inject-delay-ms MS] [same run flags as the serve side]
   repro      --table 1|2|3|4|5|6  or  --fig 2|3   [--preset p] [--scaled]
   netsim     --ul <mbps> --dl <mbps> --bytes-up N --bytes-down N --compute S
   version / help
@@ -63,6 +73,15 @@ into the next round with the Eq. 3 staleness discount, and slots
 outliving --slot-timeout (ms, default 30000) are re-dispatched to a
 deterministic replacement client. --inject-slow/--inject-delay-ms delay
 one client's uplinks to exercise the policy.
+
+serve/worker run the SAME protocol as separate processes on real links:
+serve binds a coordinator listener and admits --expect-workers `worker`
+processes through the authenticated protocol-v3 handshake (shared
+--token/--token-file secret + config-digest negotiation — both sides
+must be launched with identical run flags, and each host needs the
+pretrain checkpoint). Workers that drop mid-run are stragglers (absorbed
+under --round-policy quorum, fatal under sync) and may rejoin
+(--reconnect N). See docs/DEPLOYMENT.md for the operator guide.
 ";
 
 pub fn dispatch() -> Result<()> {
@@ -70,6 +89,8 @@ pub fn dispatch() -> Result<()> {
     match args.subcommand.as_str() {
         "pretrain" => cmd_pretrain(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "repro" => cmd_repro(&args),
         "netsim" => cmd_netsim(&args),
         "version" => {
@@ -205,41 +226,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         mode => {
             let mode = ClusterMode::parse(mode)
                 .ok_or_else(|| anyhow!("bad --cluster {mode:?} (mem, tcp or mono)"))?;
-            // any sim-* flag turns the shim on (the others take defaults)
-            let sim_requested = [
-                "sim-ul",
-                "sim-dl",
-                "sim-latency",
-                "sim-agg-mbps",
-                "sim-slow-frac",
-                "sim-slow-factor",
-            ]
-            .iter()
-            .any(|k| args.get(k).is_some());
-            let netsim = sim_requested.then(|| SimProfile {
-                scenario: Scenario {
-                    name: "custom",
-                    ul_mbps: args.get_f64("sim-ul", 1.0),
-                    dl_mbps: args.get_f64("sim-dl", 5.0),
-                    latency_s: args.get_f64("sim-latency", 0.05),
-                },
-                slow_frac: args.get_f64("sim-slow-frac", 0.0),
-                slow_factor: args.get_f64("sim-slow-factor", 1.0),
-                agg_mbps: args.get_f64("sim-agg-mbps", 0.0),
-            });
+            let netsim = sim_profile_from_args(args);
             let policy = round_policy_from_args(args)?;
-            if args.get("inject-delay-ms").is_some() && args.get("inject-slow").is_none() {
-                return Err(anyhow!("--inject-delay-ms requires --inject-slow <client>"));
-            }
-            let fault = args.get("inject-slow").map(|v| {
-                let client: usize = v
-                    .parse()
-                    .unwrap_or_else(|_| panic!("--inject-slow expects a client id, got {v:?}"));
-                FaultSpec {
-                    client,
-                    delay: Duration::from_millis(args.get_u64("inject-delay-ms", 1_000)),
-                }
-            });
+            let fault = fault_from_args(args)?;
             let shards = args.get_usize("shards", 1);
             if shards == 0 {
                 return Err(anyhow!("--shards expects a positive shard count"));
@@ -255,50 +244,215 @@ fn cmd_train(args: &Args) -> Result<()> {
                 fault,
             };
             let out = cluster::run(cfg, &opts)?;
-            println!(
-                "deployment    : cluster ({} transport, {} workers, {} aggregation shard{})",
-                out.transport,
-                out.workers,
-                out.shards,
-                if out.shards == 1 { "" } else { "s" },
-            );
-            if out.shards > 1 {
-                println!(
-                    "aggregation   : max per-round shard agg {:.2} ms",
-                    out.fed.log.max_shard_agg_ms()
-                );
-            }
-            if let RoundPolicy::Quorum { q, timeout } = policy {
-                println!(
-                    "round policy  : quorum (q={q}, slot timeout {} ms)",
-                    timeout.as_millis()
-                );
-                println!(
-                    "dropout       : {:.1}% ({} stragglers / {} late folds / {} resampled / {} evicted, mean quorum wait {:.3}s)",
-                    100.0 * out.fed.log.dropout_rate(),
-                    out.fed.log.total_stragglers(),
-                    out.fed.log.total_late_folds(),
-                    out.fed.log.total_resampled(),
-                    out.fed.log.total_late_evicted(),
-                    out.fed.log.mean_quorum_wait_s(),
-                );
-            }
-            if !out.timings.is_empty() {
-                let comm: f64 = out.timings.iter().map(|t| t.comm_s).sum();
-                let total: f64 = out.timings.iter().map(|t| t.round_s).sum();
-                let agg: f64 = out.timings.iter().map(|t| t.agg_s).sum();
-                if agg > 0.0 {
-                    println!(
-                        "sim round time: {total:.2}s total, {comm:.2}s communication, {agg:.2}s aggregation"
-                    );
-                } else {
-                    println!("sim round time: {total:.2}s total, {comm:.2}s communication");
-                }
-            }
+            report_cluster(&out, policy);
             out.fed
         }
     };
     print_train_outcome(&label, &out, args)
+}
+
+/// Shared post-run summary for cluster deployments (`train --cluster`
+/// and `serve`): deployment facts, aggregation/quorum/netsim tallies,
+/// and — when any worker link churned — the per-slot connection table.
+fn report_cluster(out: &cluster::ClusterOutcome, policy: RoundPolicy) {
+    println!(
+        "deployment    : cluster ({} transport, {} workers, {} aggregation shard{})",
+        out.transport,
+        out.workers,
+        out.shards,
+        if out.shards == 1 { "" } else { "s" },
+    );
+    if out.shards > 1 {
+        println!(
+            "aggregation   : max per-round shard agg {:.2} ms",
+            out.fed.log.max_shard_agg_ms()
+        );
+    }
+    if let RoundPolicy::Quorum { q, timeout } = policy {
+        println!(
+            "round policy  : quorum (q={q}, slot timeout {} ms)",
+            timeout.as_millis()
+        );
+        println!(
+            "dropout       : {:.1}% ({} stragglers / {} late folds / {} resampled / {} evicted, mean quorum wait {:.3}s)",
+            100.0 * out.fed.log.dropout_rate(),
+            out.fed.log.total_stragglers(),
+            out.fed.log.total_late_folds(),
+            out.fed.log.total_resampled(),
+            out.fed.log.total_late_evicted(),
+            out.fed.log.mean_quorum_wait_s(),
+        );
+    }
+    let churned = out.worker_conns.iter().any(|s| s.drops > 0 || s.joins > 1);
+    if churned {
+        // totals from the same per-slot stats the table shows (they
+        // include pre-round-0 churn, which the per-round CSV columns
+        // deliberately exclude)
+        let drops: usize = out.worker_conns.iter().map(|s| s.drops).sum();
+        let rejoins: usize =
+            out.worker_conns.iter().map(|s| s.joins.saturating_sub(1)).sum();
+        println!("worker links  : {drops} drops / {rejoins} rejoins across the run");
+        for s in &out.worker_conns {
+            println!(
+                "  worker {:>3}  : {} join{} / {} drop{}, {} tasks sent, {} results received",
+                s.worker,
+                s.joins,
+                if s.joins == 1 { "" } else { "s" },
+                s.drops,
+                if s.drops == 1 { "" } else { "s" },
+                s.tasks_sent,
+                s.results_received,
+            );
+        }
+    }
+    if !out.timings.is_empty() {
+        let comm: f64 = out.timings.iter().map(|t| t.comm_s).sum();
+        let total: f64 = out.timings.iter().map(|t| t.round_s).sum();
+        let agg: f64 = out.timings.iter().map(|t| t.agg_s).sum();
+        if agg > 0.0 {
+            println!(
+                "sim round time: {total:.2}s total, {comm:.2}s communication, {agg:.2}s aggregation"
+            );
+        } else {
+            println!("sim round time: {total:.2}s total, {comm:.2}s communication");
+        }
+    }
+}
+
+/// Run configuration for the multi-process subcommands. Both sides of a
+/// deployment MUST resolve the same configuration — the handshake
+/// hard-rejects a digest mismatch. `--test-profile <name>` swaps the
+/// full preset pipeline for `FedConfig::test_profile` (no pretraining
+/// checkpoint required) — the hook the gated multi-process parity test
+/// drives; it honors the subset of flags that profile exposes.
+fn deploy_config_from_args(args: &Args) -> Result<FedConfig> {
+    match args.get("test-profile") {
+        None => fed_config_from_args(args),
+        Some(name) => {
+            let mut cfg = FedConfig::test_profile(name);
+            cfg.rounds = args.get_usize("rounds", cfg.rounds);
+            cfg.n_clients = args.get_usize("clients", cfg.n_clients);
+            cfg.clients_per_round = args.get_usize("per-round", cfg.clients_per_round);
+            cfg.local_steps = args.get_usize("local-steps", cfg.local_steps);
+            cfg.seed = args.get_u64("seed", cfg.seed);
+            cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
+            cfg.verbose = args.has("verbose");
+            if let Some(m) = args.get("method") {
+                cfg.method = Method::parse(m).ok_or_else(|| anyhow!("bad --method"))?;
+            }
+            if args.has("eco") {
+                cfg.eco = Some(EcoConfig {
+                    n_s: args.get_usize("ns", EcoConfig::default().n_s),
+                    ..EcoConfig::default()
+                });
+            }
+            Ok(cfg)
+        }
+    }
+}
+
+/// Netsim shim flags, shared by `train` and `serve`: any `--sim-*` flag
+/// turns the shim on (the others take defaults); none leaves it off.
+fn sim_profile_from_args(args: &Args) -> Option<SimProfile> {
+    let sim_requested = [
+        "sim-ul",
+        "sim-dl",
+        "sim-latency",
+        "sim-agg-mbps",
+        "sim-slow-frac",
+        "sim-slow-factor",
+    ]
+    .iter()
+    .any(|k| args.get(k).is_some());
+    sim_requested.then(|| SimProfile {
+        scenario: Scenario {
+            name: "custom",
+            ul_mbps: args.get_f64("sim-ul", 1.0),
+            dl_mbps: args.get_f64("sim-dl", 5.0),
+            latency_s: args.get_f64("sim-latency", 0.05),
+        },
+        slow_frac: args.get_f64("sim-slow-frac", 0.0),
+        slow_factor: args.get_f64("sim-slow-factor", 1.0),
+        agg_mbps: args.get_f64("sim-agg-mbps", 0.0),
+    })
+}
+
+/// Deterministic straggler injection flags (worker-side).
+fn fault_from_args(args: &Args) -> Result<Option<FaultSpec>> {
+    if args.get("inject-delay-ms").is_some() && args.get("inject-slow").is_none() {
+        return Err(anyhow!("--inject-delay-ms requires --inject-slow <client>"));
+    }
+    Ok(args.get("inject-slow").map(|v| {
+        let client: usize = v
+            .parse()
+            .unwrap_or_else(|_| panic!("--inject-slow expects a client id, got {v:?}"));
+        FaultSpec {
+            client,
+            delay: Duration::from_millis(args.get_u64("inject-delay-ms", 1_000)),
+        }
+    }))
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = deploy_config_from_args(args)?;
+    let label = cfg.run_label();
+    let token = AuthToken::from_cli(args.get("token"), args.get("token-file"))?;
+    let expect_workers = args
+        .get("expect-workers")
+        .ok_or_else(|| anyhow!("serve requires --expect-workers <n> (worker slots to admit)"))?
+        .parse::<usize>()
+        .map_err(|_| anyhow!("--expect-workers expects a positive integer"))?;
+    // the straggler injection hook lives in the worker process
+    for flag in ["inject-slow", "inject-delay-ms"] {
+        if args.get(flag).is_some() {
+            return Err(anyhow!("--{flag} belongs to the `worker` subcommand"));
+        }
+    }
+    let policy = round_policy_from_args(args)?;
+    let shards = args.get_usize("shards", 1);
+    if shards == 0 {
+        return Err(anyhow!("--shards expects a positive shard count"));
+    }
+    let netsim = sim_profile_from_args(args);
+    let opts = ServeOptions {
+        listen: args.get_or("listen", "127.0.0.1:7878").to_string(),
+        token,
+        expect_workers,
+        join_timeout: Duration::from_secs(args.get_u64("join-timeout-s", 600)),
+        cluster: ClusterOptions {
+            mode: ClusterMode::Tcp,
+            workers: Some(expect_workers),
+            shards,
+            netsim,
+            policy,
+            fault: None,
+        },
+    };
+    let out = cluster::serve(cfg, &opts)?;
+    report_cluster(&out, policy);
+    print_train_outcome(&label, &out.fed, args)
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let cfg = deploy_config_from_args(args)?;
+    let token = AuthToken::from_cli(args.get("token"), args.get("token-file"))?;
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("worker requires --connect <addr:port> (the serve listener)"))?
+        .to_string();
+    let requested_id = args
+        .get("worker-id")
+        .map(|v| v.parse::<u32>().map_err(|_| anyhow!("--worker-id expects an integer")))
+        .transpose()?;
+    let opts = WorkerOptions {
+        connect,
+        token,
+        requested_id,
+        reconnect: args.get_u64("reconnect", 0) as u32,
+        dial_timeout: Duration::from_secs(args.get_u64("dial-timeout-s", 60)),
+        fault: fault_from_args(args)?,
+    };
+    cluster::run_remote_worker(cfg, &opts)
 }
 
 fn print_train_outcome(label: &str, out: &FedOutcome, args: &Args) -> Result<()> {

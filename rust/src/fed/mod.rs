@@ -150,6 +150,134 @@ impl FedConfig {
             self.preset
         )
     }
+
+    /// 64-bit fingerprint of every configuration field that must agree
+    /// between the processes of a multi-host deployment for the federated
+    /// run to be well-defined (the `serve`/`worker` handshake hard-rejects
+    /// a `Join` whose digest differs — see `cluster::handshake` and
+    /// docs/PROTOCOL.md §Handshake).
+    ///
+    /// Host-local fields — `artifacts_dir`, `base_checkpoint` paths,
+    /// `verbose` — are deliberately excluded: the paths may differ per
+    /// host as long as they hold the same bytes (`World::build` is a pure
+    /// function of the remaining fields plus the checkpoint contents).
+    /// FNV-1a over a canonical little-endian field serialization; not
+    /// cryptographic — it catches operator mistakes, not adversaries
+    /// (the auth token handles those).
+    pub fn digest(&self) -> u64 {
+        let mut h = ConfigHasher::new();
+        h.str(&self.preset);
+        h.str(self.method.name());
+        match &self.eco {
+            None => h.u8(0),
+            Some(e) => {
+                h.u8(1);
+                h.u64(e.n_s as u64);
+                h.f64(e.beta);
+                match &e.spars {
+                    SparsMode::Off => h.u8(0),
+                    SparsMode::Fixed(k) => {
+                        h.u8(1);
+                        h.f64(*k);
+                    }
+                    SparsMode::Adaptive(a) => {
+                        h.u8(2);
+                        for s in [&a.a, &a.b] {
+                            h.f64(s.k_min);
+                            h.f64(s.k_max);
+                            h.f64(s.gamma);
+                        }
+                    }
+                }
+                h.u8(match e.encoding {
+                    Encoding::Golomb => 0,
+                    Encoding::Fixed => 1,
+                });
+                h.u8(e.downlink_sparse as u8);
+            }
+        }
+        h.u64(self.n_clients as u64);
+        h.u64(self.clients_per_round as u64);
+        h.u64(self.rounds as u64);
+        h.u64(self.local_steps as u64);
+        h.u64(self.lr.to_bits() as u64);
+        h.u64(self.seed);
+        h.u64(self.n_samples as u64);
+        match &self.partition {
+            PartitionKind::DirichletLabels { alpha } => {
+                h.u8(0);
+                h.f64(*alpha);
+            }
+            PartitionKind::DirichletClusters { alpha, k } => {
+                h.u8(1);
+                h.f64(*alpha);
+                h.u64(*k as u64);
+            }
+            PartitionKind::TaskDomain => h.u8(2),
+            PartitionKind::Iid => h.u8(3),
+        }
+        h.u64(self.eval_items as u64);
+        h.u64(self.eval_every as u64);
+        match self.target_acc {
+            None => h.u8(0),
+            Some(t) => {
+                h.u8(1);
+                h.f64(t);
+            }
+        }
+        h.u8(self.dpo as u8);
+        h.u64(self.dpo_beta.to_bits() as u64);
+        h.u8(match self.sampling {
+            sampling::Sampling::Uniform => 0,
+            sampling::Sampling::WeightedBySamples => 1,
+            sampling::Sampling::RoundRobinCohorts => 2,
+        });
+        h.finish()
+    }
+}
+
+/// FNV-1a-64 accumulator over a canonical field serialization (see
+/// [`FedConfig::digest`]). Every field write is length-delimited or
+/// fixed-width, so distinct configurations cannot collide by
+/// concatenation ambiguity.
+struct ConfigHasher {
+    h: u64,
+}
+
+impl ConfigHasher {
+    fn new() -> ConfigHasher {
+        ConfigHasher { h: 0xCBF2_9CE4_8422_2325 }
+    }
+
+    fn byte(&mut self, x: u8) {
+        self.h ^= x as u64;
+        self.h = self.h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+
+    fn u8(&mut self, x: u8) {
+        self.byte(x);
+    }
+
+    fn u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.byte(b);
+        }
+    }
+
+    fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        for b in s.as_bytes() {
+            self.byte(*b);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.h
+    }
 }
 
 /// Outcome of a full federated run.
@@ -445,5 +573,63 @@ impl FedRunner {
             rec.eval_acc = Some(self.evaluator.accuracy(&self.session, &self.global)?);
         }
         Ok(rec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_digest_is_stable_and_ignores_host_local_fields() {
+        let cfg = FedConfig::test_profile("tiny");
+        let d = cfg.digest();
+        assert_eq!(d, cfg.clone().digest(), "digest is a pure function");
+
+        // host-local fields must not perturb the handshake fingerprint
+        let mut local = cfg.clone();
+        local.artifacts_dir = PathBuf::from("/somewhere/else");
+        local.base_checkpoint = Some(PathBuf::from("/elsewhere/ckpt.bin"));
+        local.verbose = true;
+        assert_eq!(local.digest(), d);
+    }
+
+    #[test]
+    fn config_digest_detects_run_defining_divergence() {
+        let base = FedConfig::test_profile("tiny");
+        let d = base.digest();
+        let mut variants = Vec::new();
+
+        let mut c = base.clone();
+        c.seed += 1;
+        variants.push(("seed", c));
+        let mut c = base.clone();
+        c.rounds += 1;
+        variants.push(("rounds", c));
+        let mut c = base.clone();
+        c.method = Method::FfaLora;
+        variants.push(("method", c));
+        let mut c = base.clone();
+        c.eco = Some(EcoConfig::default());
+        variants.push(("eco on", c));
+        let mut c = base.clone();
+        c.eco = Some(EcoConfig { n_s: 3, ..EcoConfig::default() });
+        variants.push(("eco n_s", c));
+        let mut c = base.clone();
+        c.lr *= 2.0;
+        variants.push(("lr", c));
+        let mut c = base.clone();
+        c.partition = PartitionKind::Iid;
+        variants.push(("partition", c));
+        let mut c = base.clone();
+        c.sampling = sampling::Sampling::RoundRobinCohorts;
+        variants.push(("sampling", c));
+        let mut c = base.clone();
+        c.target_acc = Some(0.9);
+        variants.push(("target_acc", c));
+
+        for (what, v) in variants {
+            assert_ne!(v.digest(), d, "digest must change when {what} changes");
+        }
     }
 }

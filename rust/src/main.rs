@@ -1,9 +1,19 @@
 //! `ecolora` CLI — leader entrypoint. Subcommands are implemented in
 //! `config::commands`; see `ecolora help`.
+//!
+//! Exit codes: 0 success, 1 generic failure, 3 the coordinator refused
+//! this process's join handshake (`ecolora worker` against a `serve`
+//! peer). A 3 for a bad token, config mismatch, full cluster or
+//! malformed join is deterministic — deployment scripts must not
+//! blindly retry it; a 3 naming `duplicate_worker` means the rejoin
+//! race outlived the worker's own `--reconnect` budget and is worth one
+//! supervised restart after the coordinator logs the drop (see
+//! docs/PROTOCOL.md §5a).
 
 fn main() {
     if let Err(e) = ecolora::config::commands::dispatch() {
         eprintln!("error: {e:#}");
-        std::process::exit(1);
+        let code = if e.downcast_ref::<ecolora::cluster::Rejected>().is_some() { 3 } else { 1 };
+        std::process::exit(code);
     }
 }

@@ -83,6 +83,13 @@ pub struct RoundRecord {
     /// positive when a quorum round closes before a segment's only
     /// uploader reports (that segment's delta stays zero for the round).
     pub seg_uncovered: usize,
+    /// Worker connections that died during this round (send failure or
+    /// reader hangup). Always 0 for in-process and monolithic runs; a
+    /// multi-process `serve` run counts each lost `ecolora worker` link.
+    pub worker_drops: usize,
+    /// Worker connections re-admitted into a previously-dropped slot
+    /// during this round (multi-process rejoins; see `cluster::deploy`).
+    pub worker_rejoins: usize,
 }
 
 /// Full training telemetry.
@@ -180,6 +187,17 @@ impl RunLog {
         self.rounds.iter().map(|r| r.late_evicted).sum()
     }
 
+    /// Total worker-connection drops across the run (multi-process
+    /// deployments; 0 in-process).
+    pub fn total_worker_drops(&self) -> usize {
+        self.rounds.iter().map(|r| r.worker_drops).sum()
+    }
+
+    /// Total worker rejoins across the run (multi-process deployments).
+    pub fn total_worker_rejoins(&self) -> usize {
+        self.rounds.iter().map(|r| r.worker_rejoins).sum()
+    }
+
     /// Mean seconds from dispatch to quorum over all rounds.
     pub fn mean_quorum_wait_s(&self) -> f64 {
         if self.rounds.is_empty() {
@@ -203,12 +221,12 @@ impl RunLog {
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered\n",
+            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{}",
+                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{}",
                 r.round,
                 r.global_loss,
                 r.eval_acc.map_or(String::from(""), |a| format!("{a:.4}")),
@@ -233,6 +251,8 @@ impl RunLog {
                 r.router_queue_max,
                 r.late_evicted,
                 r.seg_uncovered,
+                r.worker_drops,
+                r.worker_rejoins,
             );
         }
         s
@@ -349,19 +369,29 @@ mod tests {
             router_queue_max: 7,
             late_evicted: 2,
             seg_uncovered: 1,
+            worker_drops: 3,
+            worker_rejoins: 2,
             ..Default::default()
         });
         let csv = log.to_csv();
         let header = csv.lines().next().unwrap();
-        for col in
-            ["shards", "shard_agg_ms_max", "router_queue_max", "late_evicted", "seg_uncovered"]
-        {
+        for col in [
+            "shards",
+            "shard_agg_ms_max",
+            "router_queue_max",
+            "late_evicted",
+            "seg_uncovered",
+            "worker_drops",
+            "worker_rejoins",
+        ] {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",4,12.5000,7,2,1"), "{row}");
+        assert!(row.ends_with(",4,12.5000,7,2,1,3,2"), "{row}");
         assert_eq!(log.max_shard_agg_ms(), 12.5);
         assert_eq!(log.total_late_evicted(), 2);
+        assert_eq!(log.total_worker_drops(), 3);
+        assert_eq!(log.total_worker_rejoins(), 2);
     }
 
     #[test]

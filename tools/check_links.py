@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Dead intra-repo link checker for the docs suite.
+
+Scans the repo-root markdown files plus everything under docs/ for
+inline markdown links and image references, and fails (exit 1) when a
+relative link points at a file that does not exist. External links
+(http/https/mailto) are ignored — CI must not depend on the network —
+and pure-fragment links (#section) are ignored too; fragments on file
+links are stripped before the existence check.
+
+Fenced code blocks are skipped so wire-layout diagrams and shell
+snippets cannot produce false positives.
+
+Stdlib only (the repo's no-new-dependencies rule applies to CI as much
+as to the crate).
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def md_files(root: Path):
+    yield from sorted(root.glob("*.md"))
+    yield from sorted((root / "docs").rglob("*.md"))
+
+
+def links_in(path: Path):
+    """(line_number, target) pairs for inline links outside code fences."""
+    in_fence = False
+    for lineno, line in enumerate(path.read_text(encoding="utf-8").splitlines(), 1):
+        if FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        for m in LINK_RE.finditer(line):
+            yield lineno, m.group(1)
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    broken = []
+    checked = 0
+    for md in md_files(root):
+        for lineno, target in links_in(md):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            checked += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            dest = (md.parent / rel).resolve()
+            try:
+                dest.relative_to(root)
+            except ValueError:
+                broken.append((md, lineno, target, "escapes the repository"))
+                continue
+            if not dest.exists():
+                broken.append((md, lineno, target, "target does not exist"))
+    if broken:
+        for md, lineno, target, why in broken:
+            print(f"{md.relative_to(root)}:{lineno}: broken link '{target}' ({why})")
+        print(f"\n{len(broken)} broken link(s) out of {checked} checked.")
+        return 1
+    print(f"all {checked} intra-repo links resolve.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
