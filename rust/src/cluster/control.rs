@@ -51,9 +51,11 @@ use crate::compress::{dense_bytes, KindIndex};
 use crate::data::{corpus, preference};
 use crate::eval::{DpoEvaluator, McEvaluator};
 use crate::fed::downlink::{DownWire, DownlinkState};
-use crate::fed::world::{self, World};
+use crate::fed::session::Session;
+use crate::fed::world::{self, WorldSeed};
 use crate::fed::{round_robin, EcoConfig, FedConfig, FedOutcome};
 use crate::metrics::{sparsity_snapshot, RoundRecord, RunLog};
+use crate::runtime::Engine;
 
 use super::protocol::{DownPayload, TrainResult, TrainTask, UpPayload};
 use super::router::{GatheredAgg, RoutedAdd};
@@ -232,7 +234,12 @@ pub struct ControlPlane {
     /// Experiment configuration (shared with every participant).
     pub cfg: FedConfig,
     policy: RoundPolicy,
-    world: World,
+    /// Session-free world kernel (schema, corpus, partition, RNG stream).
+    seed: WorldSeed,
+    /// Compiled-compute session: `None` on the session-free scale path
+    /// (`--preset synthetic`), where evaluation and FLoRA merges are
+    /// structurally excluded by the `new()` guards.
+    session: Option<Session>,
     dl: Option<DownlinkState>,
     evaluator: McEvaluator,
     dpo_eval: Option<DpoEvaluator>,
@@ -280,28 +287,47 @@ impl ControlPlane {
                 cfg.method.name()
             );
         }
-        let mut world = World::build(&cfg)?;
+        let synthetic = cfg.preset == "synthetic";
+        if synthetic {
+            // the session-free scale path has no compiled compute: every
+            // code path that would need it must be unreachable by config
+            ensure!(cfg.eval_every == 0, "--preset synthetic cannot evaluate (set eval_every 0)");
+            ensure!(cfg.target_acc.is_none(), "--preset synthetic cannot evaluate a target");
+            ensure!(
+                !cfg.method.restarts_lora(),
+                "--preset synthetic cannot merge FLoRA modules (method {})",
+                cfg.method.name()
+            );
+            ensure!(!cfg.dpo, "--preset synthetic has no DPO artifacts");
+        }
+        let mut seed = WorldSeed::build(&cfg)?;
+        let session = if synthetic {
+            None
+        } else {
+            Some(Session::from_seed(Arc::new(Engine::new(&cfg.artifacts_dir)?), &seed)?)
+        };
         let dl = cfg.eco.filter(|e| e.downlink_sparse).map(|e| {
             DownlinkState::new(
                 cfg.n_clients,
-                world.lora_init.clone(),
+                seed.lora_init.clone(),
                 e.spars,
                 e.encoding,
-                world.kinds.clone(),
-                world.kidx.clone(),
+                seed.kinds.clone(),
+                seed.kidx.clone(),
             )
         });
         let evaluator = McEvaluator::new(
-            corpus::make_eval_set(&mut world.rng.fork(5), cfg.eval_items, &world.ccfg),
-            world.ccfg.seq_tokens,
+            corpus::make_eval_set(&mut seed.rng.fork(5), cfg.eval_items, &seed.ccfg),
+            seed.ccfg.seq_tokens,
         );
         let dpo_eval = cfg.dpo.then(|| {
-            DpoEvaluator::new(preference::generate_pairs(&mut world.rng.fork(6), 64, &world.ccfg))
+            DpoEvaluator::new(preference::generate_pairs(&mut seed.rng.fork(6), 64, &seed.ccfg))
         });
-        let weights = Arc::new(world.client_weights());
+        let weights = Arc::new(seed.client_weights());
         Ok(ControlPlane {
-            global: world.lora_init.clone(),
-            world,
+            global: seed.lora_init.clone(),
+            seed,
+            session,
             dl,
             evaluator,
             dpo_eval,
@@ -330,7 +356,7 @@ impl ControlPlane {
 
     /// Flat LoRA parameter count (router/shard geometry input).
     pub fn lora_total(&self) -> usize {
-        self.world.session.schema.lora_total
+        self.seed.schema.lora_total
     }
 
     /// Per-client FedAvg weights, shared with the shard threads for the
@@ -341,7 +367,7 @@ impl ControlPlane {
 
     /// Kind-wise index over the flat LoRA vector (shard decode input).
     pub fn kind_index(&self) -> Arc<KindIndex> {
-        self.world.kidx.clone()
+        self.seed.kidx.clone()
     }
 
     /// Eq. 3 staleness decay β for late folds (EcoConfig's, or its
@@ -353,7 +379,7 @@ impl ControlPlane {
     /// The parameter count a dense uplink is charged
     /// (`Method::dense_upload_params`).
     pub fn dense_upload_params(&self) -> usize {
-        self.cfg.method.dense_upload_params(&self.world.session.schema)
+        self.cfg.method.dense_upload_params(&self.seed.schema)
     }
 
     /// Compress (or materialize) the downlink payload for `ci` and charge
@@ -371,7 +397,7 @@ impl ControlPlane {
         Ok(if let Some(init) = flora_init {
             // FLoRA re-distributes the stacked modules: accounted as
             // N_t × module even though the restart init itself travels.
-            let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
+            let p = self.cfg.method.dense_download_params(&self.seed.schema, n_t);
             rec.down.add(p, dense_bytes(p));
             (DownPayload::FloraInit(init.to_vec()), 0)
         } else if let Some(dl) = &mut self.dl {
@@ -387,7 +413,7 @@ impl ControlPlane {
             };
             (payload, self.down_seq[ci])
         } else {
-            let p = self.cfg.method.dense_download_params(&self.world.session.schema, n_t);
+            let p = self.cfg.method.dense_download_params(&self.seed.schema, n_t);
             rec.down.add(p, dense_bytes(p));
             (DownPayload::DenseF32(self.global.clone()), 0)
         })
@@ -415,7 +441,7 @@ impl ControlPlane {
             n_t,
             &self.weights,
             t,
-            &mut self.world.rng.fork(1000 + t),
+            &mut self.seed.rng.fork(1000 + t),
         );
         let n_s = self.cfg.eco.map_or(1, |e| e.n_s.max(1)).min(n_t);
 
@@ -430,7 +456,7 @@ impl ControlPlane {
             .cfg
             .method
             .restarts_lora()
-            .then(|| self.world.session.schema.init_lora(&mut self.world.rng.fork(2000 + t)));
+            .then(|| self.seed.schema.init_lora(&mut self.seed.rng.fork(2000 + t)));
 
         let deadline_ms = self.policy.deadline_ms();
         let mut overhead = 0.0f64;
@@ -450,7 +476,7 @@ impl ControlPlane {
                 self.make_downlink(ci, n_t, loss_signal, flora_init.as_deref(), &mut rec)?;
             overhead += t0.elapsed().as_secs_f64();
 
-            let brng = self.world.rng.fork(world::batch_salt(self.cfg.dpo, t, ci));
+            let brng = self.seed.rng.fork(world::batch_salt(self.cfg.dpo, t, ci));
             let seg = round_robin::segment_for(slot, t as usize, n_s);
             tasks.push((
                 ci % n_workers.max(1),
@@ -537,7 +563,7 @@ impl ControlPlane {
             return Ok(None);
         }
 
-        let lora_total = self.world.session.schema.lora_total;
+        let lora_total = self.seed.schema.lora_total;
         let weight = res.n_samples as f64;
         let (routed, module, sparse) = match res.up {
             UpPayload::SparseWire(bytes) => (
@@ -629,6 +655,13 @@ impl ControlPlane {
         Some(res)
     }
 
+    /// Stragglers evicted by the global admission byte cap since the
+    /// last round close (tested directly; surfaced per round in
+    /// `RoundRecord::late_evicted`).
+    pub fn late_evicted(&self) -> usize {
+        self.late_evicted
+    }
+
     /// Re-dispatch a timed-out slot to a deterministically-chosen
     /// replacement client: the replacement and its batch stream are drawn
     /// from `fed::world::resample_rng(seed, t, slot, attempt)`, which
@@ -659,18 +692,34 @@ impl ControlPlane {
 
         // candidates: clients not already tied to this round (sampled,
         // completed, or previously drawn as a replacement) whose
-        // downlink channel is still intact
-        let candidates: Vec<u32> = (0..self.cfg.n_clients as u32)
-            .filter(|c| {
-                !self.lost_channel.contains(&(*c as usize))
-                    && !rs.assignees.iter().any(|a| a.contains(c))
-            })
+        // downlink channel is still intact. O(excluded log excluded),
+        // NOT O(population): the historical code materialized the full
+        // candidate list; since that list was exactly "ascending indices
+        // minus the exclusion set", drawing its r-th element is the
+        // r-th non-excluded index — same `below(count)` draw, same
+        // client, at 10⁻⁵ of the cost when n_clients is 10⁵–10⁶.
+        let mut excluded: Vec<u32> = self
+            .lost_channel
+            .iter()
+            .map(|&c| c as u32)
+            .chain(rs.assignees.iter().flatten().copied())
             .collect();
-        let ci = if candidates.is_empty() {
+        excluded.sort_unstable();
+        excluded.dedup();
+        let n_candidates = self.cfg.n_clients - excluded.len();
+        let ci = if n_candidates == 0 {
             // the whole population is in flight: re-dispatch the original
             rs.assignees[slot][0]
         } else {
-            candidates[rrng.below(candidates.len())]
+            let mut v = rrng.below(n_candidates) as u32;
+            for &e in &excluded {
+                if e <= v {
+                    v += 1;
+                } else {
+                    break;
+                }
+            }
+            v
         } as usize;
 
         let owner = ci % n_workers.max(1);
@@ -722,7 +771,7 @@ impl ControlPlane {
     ) -> Result<(RoundRecord, Option<Vec<f32>>)> {
         ensure!(rs.phase == Phase::Aggregate, "finish_round before quorum reached");
         let t = rs.t;
-        let lora_total = self.world.session.schema.lora_total;
+        let lora_total = self.seed.schema.lora_total;
         ensure!(
             agg.delta.len() == lora_total,
             "gathered delta length {} != lora_total {lora_total}",
@@ -749,7 +798,7 @@ impl ControlPlane {
                 rec.k_b = done.k_b;
             }
             if let Some(module) = done.module {
-                let p = self.cfg.method.dense_upload_params(&self.world.session.schema);
+                let p = self.cfg.method.dense_upload_params(&self.seed.schema);
                 rec.up.add(p, dense_bytes(p));
                 flora_modules.push((module, w));
             }
@@ -766,21 +815,26 @@ impl ControlPlane {
         // ---- global advance (Eq. 2 delta came gathered from the shards) ----
         let mut base_sync = None;
         if self.cfg.method.restarts_lora() {
+            // restart methods are rejected for --preset synthetic in new()
+            let session = self
+                .session
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("FLoRA merge requires a session"))?;
             if self.cfg.eco.is_some() {
                 let mut module = rs.flora_init.take().expect("restart round has flora_init");
                 for (m, d) in module.iter_mut().zip(&agg.delta) {
                     *m += *d;
                 }
-                self.world.session.merge_lora(&module, 1.0)?;
+                session.merge_lora(&module, 1.0)?;
             } else {
                 let w_total: f64 = flora_modules.iter().map(|(_, w)| w).sum();
                 for (module, w) in &flora_modules {
-                    self.world.session.merge_lora(module, (*w / w_total.max(1.0)) as f32)?;
+                    session.merge_lora(module, (*w / w_total.max(1.0)) as f32)?;
                 }
             }
-            self.global = self.world.lora_init.clone();
+            self.global = self.seed.lora_init.clone();
             // participants' frozen bases must follow the merge
-            base_sync = Some(self.world.session.base_host().to_vec());
+            base_sync = Some(session.base_host().to_vec());
         } else {
             for (g, d) in self.global.iter_mut().zip(&agg.delta) {
                 *g += *d;
@@ -810,7 +864,7 @@ impl ControlPlane {
         rec.late_evicted = std::mem::take(&mut self.late_evicted) + agg.late_evicted;
         self.late_bytes = 0;
         rec.seg_uncovered = agg.covered.iter().filter(|&&c| !c).count();
-        let snap = sparsity_snapshot(&self.global, &self.world.kinds);
+        let snap = sparsity_snapshot(&self.global, &self.seed.kinds);
         rec.gini_a = snap.gini_a;
         rec.gini_b = snap.gini_b;
 
@@ -819,20 +873,27 @@ impl ControlPlane {
                 && (t as usize % self.cfg.eval_every == self.cfg.eval_every - 1
                     || t as usize + 1 == self.cfg.rounds));
         if eval_now {
-            rec.eval_acc = Some(self.evaluator.accuracy(&self.world.session, &self.global)?);
+            let session = self
+                .session
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("evaluation requires a session"))?;
+            rec.eval_acc = Some(self.evaluator.accuracy(session, &self.global)?);
         }
         Ok((rec, base_sync))
     }
 
     /// Final evaluation + outcome assembly (mirrors `FedRunner::run`'s
-    /// tail).
+    /// tail). On the session-free synthetic path there is no compiled
+    /// eval graph, so `final_acc` is NaN (the run's value is its scale
+    /// and parity telemetry, not task accuracy).
     pub fn outcome(&self, log: RunLog, reached_target_at: Option<usize>) -> Result<FedOutcome> {
-        let final_acc = self.evaluator.accuracy(&self.world.session, &self.global)?;
-        let final_margin = match &self.dpo_eval {
-            Some(ev) => {
-                Some(ev.mean_margin(&self.world.session, &self.global, self.cfg.dpo_beta)?)
-            }
-            None => None,
+        let final_acc = match &self.session {
+            Some(s) => self.evaluator.accuracy(s, &self.global)?,
+            None => f64::NAN,
+        };
+        let final_margin = match (&self.dpo_eval, &self.session) {
+            (Some(ev), Some(s)) => Some(ev.mean_margin(s, &self.global, self.cfg.dpo_beta)?),
+            _ => None,
         };
         Ok(FedOutcome {
             final_lora: self.global.clone(),

@@ -616,6 +616,9 @@ pub(crate) fn drive_rounds(
     let n_workers = pool.n();
     let n_shards = opts.shards.max(1);
     let sync = opts.policy.slot_timeout().is_none();
+    // resolved by `cluster::run` (0 for the threads plane and for serve,
+    // whose client plane lives in other processes)
+    let mux_workers = opts.mux_workers.unwrap_or(0);
     let label = control.cfg.run_label();
     let mut log = RunLog::new(label.clone());
     let mut reached: Option<usize> = None;
@@ -639,6 +642,13 @@ pub(crate) fn drive_rounds(
         // Sampling + Broadcast. Slots whose owning worker is down get no
         // task (and crucially no stateful-downlink channel advance); the
         // quorum wave machinery re-dispatches them to live replacements.
+        // `sched_ms` accumulates the coordinator's scheduling cost —
+        // sampling, downlink build, dispatch, resample waves, round close
+        // — the work that must stay O(active cohort), not O(population).
+        let sched_t0 = Instant::now();
+        let mut sched_ms = 0.0f64;
+        // successful task dispatches this round (initial + resample waves)
+        let mut active_cohort = 0usize;
         let alive_now: Vec<bool> = (0..n_workers).map(|w| pool.is_alive(w)).collect();
         let (mut rs, tasks) = control.begin_round(t as u64, n_workers, &alive_now)?;
         router.begin_round(t as u64, rs.n_s)?;
@@ -653,6 +663,7 @@ pub(crate) fn drive_rounds(
             let gen = pool.generation(w);
             if pool.send(w, &Message::TrainTask(task)) {
                 inflight[slot].push((w, gen));
+                active_cohort += 1;
             } else if sync {
                 bail!(
                     "cluster: worker {w} is down and RoundPolicy::Sync cannot resample \
@@ -672,6 +683,7 @@ pub(crate) fn drive_rounds(
                 }
             }
         }
+        sched_ms += sched_t0.elapsed().as_secs_f64() * 1e3;
         // Collect: every result is routed — current round into the round
         // state (closing it at quorum) with its payload forwarded to the
         // owning aggregation shard, earlier rounds into that shard's late
@@ -732,6 +744,7 @@ pub(crate) fn drive_rounds(
                 PoolNotice::Timeout => {
                     // wave timeout: re-dispatch every outstanding slot to
                     // replacements hosted on currently-live workers
+                    let wave_t0 = Instant::now();
                     let alive_now: Vec<bool> =
                         (0..n_workers).map(|w| pool.is_alive(w)).collect();
                     let mut dispatched = false;
@@ -745,6 +758,7 @@ pub(crate) fn drive_rounds(
                             if pool.send(w, &Message::TrainTask(task)) {
                                 inflight[slot].push((w, gen));
                                 dispatched = true;
+                                active_cohort += 1;
                             } else if stateful {
                                 // the owner died since the snapshot: the
                                 // wave is spent, and the built downlink
@@ -787,6 +801,7 @@ pub(crate) fn drive_rounds(
                     }
                     let timeout = opts.policy.slot_timeout().expect("deadline implies timeout");
                     wave_deadline = Some(Instant::now() + timeout);
+                    sched_ms += wave_t0.elapsed().as_secs_f64() * 1e3;
                 }
             }
         }
@@ -798,8 +813,14 @@ pub(crate) fn drive_rounds(
         let agg_parallelism = n_shards.min(rs.n_s.max(1));
         // Aggregate: close the shards, gather the Eq. 2 delta, and let
         // the control plane finish.
+        let close_t0 = Instant::now();
         let gathered = router.close_round(t as u64)?;
         let (mut rec, base_sync) = control.finish_round(rs, gathered)?;
+        sched_ms += close_t0.elapsed().as_secs_f64() * 1e3;
+        rec.population = control.cfg.n_clients;
+        rec.active_cohort = active_cohort;
+        rec.mux_workers = mux_workers;
+        rec.sched_ms = sched_ms;
         if let Some(base) = base_sync {
             for w in 0..n_workers {
                 // base sync only happens for restart methods, which the

@@ -23,8 +23,13 @@
 //! * [`router`] — dispatches uplink payloads to shards by the segment id
 //!   the v2 envelope header carries, and gathers the shard deltas back
 //!   into one global vector at round close.
-//! * [`participant`] — worker agents, each owning its own `Session` and a
-//!   shard of logical clients, executing tasks concurrently.
+//! * [`participant`] — thread-per-worker agents, each owning its own
+//!   `Session` and a shard of logical clients, executing tasks
+//!   concurrently.
+//! * [`mux`] — the event-driven client multiplexer (default in-process
+//!   plane): a fixed compute pool drives per-client state machines over
+//!   one shared world and a pooled engine cache, simulating 10⁴–10⁶
+//!   logical clients per host at O(active cohort) cost.
 //! * [`handshake`] — the protocol-v3 deployment handshake: shared-token
 //!   auth plus config-digest negotiation that an external `ecolora
 //!   worker` process completes before entering the task loop.
@@ -53,6 +58,7 @@
 pub mod control;
 pub mod deploy;
 pub mod handshake;
+pub mod mux;
 pub mod netshim;
 pub mod participant;
 pub mod protocol;
@@ -70,6 +76,7 @@ use crate::netsim::RoundTiming;
 pub use control::{ControlPlane, Phase, RoundPolicy, RoundState};
 pub use deploy::{run_remote_worker, serve, ServeOptions, WorkerConnStats, WorkerOptions};
 pub use handshake::{AuthToken, Rejected};
+pub use mux::{EngineCache, MuxOptions};
 pub use netshim::SimProfile;
 pub use participant::Participant;
 pub use router::{GatheredAgg, RoutedAdd, Router, ShardMap};
@@ -92,6 +99,36 @@ pub struct FaultSpec {
     pub delay: Duration,
 }
 
+/// Which in-process client plane hosts the simulated participants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientPlane {
+    /// Event-driven multiplexer (default): a fixed compute pool drives
+    /// per-client state machines over one shared world — see [`mux`].
+    Mux,
+    /// Thread-per-worker participants, one world each — see
+    /// [`participant`]. Kept as the reference plane for parity tests.
+    Threads,
+}
+
+impl ClientPlane {
+    /// Parse a `--client-plane` CLI value.
+    pub fn parse(s: &str) -> Result<ClientPlane> {
+        match s {
+            "mux" => Ok(ClientPlane::Mux),
+            "threads" => Ok(ClientPlane::Threads),
+            other => bail!("unknown client plane '{other}' (expected mux|threads)"),
+        }
+    }
+
+    /// Stable lower-case name (logs, CSV).
+    pub fn name(self) -> &'static str {
+        match self {
+            ClientPlane::Mux => "mux",
+            ClientPlane::Threads => "threads",
+        }
+    }
+}
+
 /// How to deploy a run on the cluster substrate.
 #[derive(Debug, Clone)]
 pub struct ClusterOptions {
@@ -99,6 +136,12 @@ pub struct ClusterOptions {
     pub mode: ClusterMode,
     /// Worker thread count; default min(clients_per_round, CPU threads).
     pub workers: Option<usize>,
+    /// Which in-process client plane hosts the participants.
+    pub client_plane: ClientPlane,
+    /// Mux compute-pool size; default CPU threads. 0/ignored for the
+    /// threads plane (and for multi-process `serve`, where the client
+    /// plane lives in other processes).
+    pub mux_workers: Option<usize>,
     /// Aggregation-plane shard count (each runs on its own thread);
     /// 1 = the single-aggregator reference path. Any value is
     /// bitwise-identical to 1 — more shards only buy wall-clock.
@@ -116,6 +159,8 @@ impl Default for ClusterOptions {
         ClusterOptions {
             mode: ClusterMode::Mem,
             workers: None,
+            client_plane: ClientPlane::Mux,
+            mux_workers: None,
             shards: 1,
             netsim: None,
             policy: RoundPolicy::Sync,
@@ -158,19 +203,43 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         .unwrap_or_else(|| n_t.min(hw))
         .clamp(1, cfg.n_clients.max(1));
     let n_shards = opts.shards.max(1);
+    let mux_workers = match opts.client_plane {
+        ClientPlane::Mux => opts.mux_workers.unwrap_or(hw).max(1),
+        ClientPlane::Threads => 0,
+    };
+    ensure!(
+        cfg.preset != "synthetic" || opts.client_plane == ClientPlane::Mux,
+        "--preset synthetic requires the mux client plane (threads-plane \
+         participants each need a compiled session)"
+    );
 
     let (coord_conns, worker_conns) = transport::establish(opts.mode, n_workers)?;
 
-    // Participants: one thread each, each building its own world/session.
-    let mut handles = Vec::with_capacity(n_workers);
-    for (w, conn) in worker_conns.into_iter().enumerate() {
-        let cfg_w = cfg.clone();
-        let fault = opts.fault;
-        let handle = std::thread::Builder::new()
-            .name(format!("ecolora-worker-{w}"))
-            .spawn(move || participant::run_worker(cfg_w, w as u32, conn, fault))
-            .context("cluster: spawn worker thread")?;
-        handles.push(handle);
+    // Client plane: either one mux plane multiplexing every lane over a
+    // fixed compute pool and one shared world, or the reference
+    // thread-per-worker participants, each building its own world/session.
+    let mut handles = Vec::new();
+    match opts.client_plane {
+        ClientPlane::Mux => {
+            let cfg_w = cfg.clone();
+            let mux_opts = mux::MuxOptions { workers: mux_workers, fault: opts.fault };
+            let handle = std::thread::Builder::new()
+                .name("ecolora-mux-plane".to_string())
+                .spawn(move || mux::run_plane(cfg_w, worker_conns, mux_opts))
+                .context("cluster: spawn mux plane")?;
+            handles.push(handle);
+        }
+        ClientPlane::Threads => {
+            for (w, conn) in worker_conns.into_iter().enumerate() {
+                let cfg_w = cfg.clone();
+                let fault = opts.fault;
+                let handle = std::thread::Builder::new()
+                    .name(format!("ecolora-worker-{w}"))
+                    .spawn(move || participant::run_worker(cfg_w, w as u32, conn, fault))
+                    .context("cluster: spawn worker thread")?;
+                handles.push(handle);
+            }
+        }
     }
 
     // Install every pipe into the worker pool (the same connection table
@@ -207,16 +276,20 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         control.dense_upload_params(),
     )?;
 
-    let out = deploy::drive_rounds(&mut control, &mut router, &mut pool, opts, None)?;
+    // hand drive_rounds the RESOLVED mux pool size so the CSV reports the
+    // defaulted value, not the Option
+    let opts_resolved = ClusterOptions { mux_workers: Some(mux_workers), ..opts.clone() };
+    let out = deploy::drive_rounds(&mut control, &mut router, &mut pool, &opts_resolved, None)?;
     let outcome = control.outcome(out.log, out.reached)?;
 
     // Orderly shutdown: tell every worker, then join; same for shards.
     pool.shutdown(true);
+    let plane_name = opts.client_plane.name();
     for (w, h) in handles.into_iter().enumerate() {
         match h.join() {
             Ok(Ok(())) => {}
-            Ok(Err(e)) => bail!("worker {w} exited with error: {e:#}"),
-            Err(_) => bail!("worker {w} panicked"),
+            Ok(Err(e)) => bail!("{plane_name} plane worker {w} exited with error: {e:#}"),
+            Err(_) => bail!("{plane_name} plane worker {w} panicked"),
         }
     }
     router.shutdown()?;

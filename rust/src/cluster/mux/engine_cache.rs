@@ -1,0 +1,282 @@
+//! Shared-engine session pool for the mux client plane.
+//!
+//! Thread-per-client gave every logical client its own `Session` — its
+//! own PJRT engine, its own compiled-executable cache, its own device
+//! copy of the frozen base — which is what capped a host at N≈32. The
+//! mux plane inverts the ownership: ONE [`Engine`] per process (compiled
+//! executables are keyed by artifact file inside it, so same-config
+//! clients compile once), and a small pool of [`PooledSession`]s checked
+//! out per task by whichever compute worker runs the task. Steady state
+//! holds at most `mux_workers` sessions, independent of the client
+//! population.
+//!
+//! The pooling substrate ([`Pool`]) is generic and session-free so its
+//! concurrency contract — hit/miss accounting, poison-on-panic — is
+//! unit-testable without PJRT; [`EngineCache`] layers the session
+//! construction, grad-mask upload, and FLoRA base-generation sync on top.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::fed::session::Session;
+use crate::fed::world::WorldSeed;
+use crate::fed::FedConfig;
+use crate::runtime::Engine;
+use crate::util::lock_unpoisoned;
+use crate::xla::PjRtBuffer;
+
+/// Checkout/return counters a pool accumulates over its lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Checkouts served from the pool (no construction ran).
+    pub hits: u64,
+    /// Checkouts that had to construct a fresh item.
+    pub misses: u64,
+    /// Leases discarded because the holding thread panicked — the item
+    /// is dropped, never returned to the pool.
+    pub poisoned: u64,
+}
+
+/// A generic checkout/return pool with poison-on-panic semantics.
+///
+/// Invariants:
+/// * an item is owned by exactly one lease at a time;
+/// * a lease dropped during a panic DISCARDS its item (a session mid-
+///   panic may hold device state in an unknown condition) and counts it
+///   in `poisoned`;
+/// * a lease dropped normally returns the item for the next checkout.
+pub struct Pool<T> {
+    items: Mutex<Vec<T>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    poisoned: AtomicU64,
+}
+
+impl<T> Default for Pool<T> {
+    fn default() -> Self {
+        Pool {
+            items: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            poisoned: AtomicU64::new(0),
+        }
+    }
+}
+
+impl<T> Pool<T> {
+    /// Check an item out, constructing one with `make` only on a miss.
+    pub fn checkout_with(&self, make: impl FnOnce() -> Result<T>) -> Result<Lease<'_, T>> {
+        let popped = lock_unpoisoned(&self.items).pop();
+        let item = match popped {
+            Some(item) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                item
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                make()?
+            }
+        };
+        Ok(Lease { pool: self, item: Some(item) })
+    }
+
+    /// Items currently idle in the pool.
+    pub fn idle(&self) -> usize {
+        lock_unpoisoned(&self.items).len()
+    }
+
+    /// Lifetime checkout/return counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            poisoned: self.poisoned.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// RAII lease over one pooled item (returns it on drop; discards it when
+/// the drop happens during a panic).
+pub struct Lease<'a, T> {
+    pool: &'a Pool<T>,
+    item: Option<T>,
+}
+
+impl<T> std::ops::Deref for Lease<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.item.as_ref().expect("lease holds its item until drop")
+    }
+}
+
+impl<T> std::ops::DerefMut for Lease<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.item.as_mut().expect("lease holds its item until drop")
+    }
+}
+
+impl<T> Drop for Lease<'_, T> {
+    fn drop(&mut self) {
+        let Some(item) = self.item.take() else { return };
+        if std::thread::panicking() {
+            // the holder died mid-task: the item's state is suspect
+            self.pool.poisoned.fetch_add(1, Ordering::Relaxed);
+            drop(item);
+        } else {
+            lock_unpoisoned(&self.pool.items).push(item);
+        }
+    }
+}
+
+/// One pooled session: compiled artifacts + device base + the uploaded
+/// grad mask, plus the FLoRA base generation it last synced to.
+pub struct PooledSession {
+    /// The PJRT session (engine shared with every other pooled session).
+    pub session: Session,
+    /// The method's grad mask, device-resident (reused across steps).
+    pub mask: PjRtBuffer,
+    base_gen: u64,
+}
+
+/// The mux plane's shared compiled-compute cache: one engine, a session
+/// pool, and the FLoRA base-sync generation.
+pub struct EngineCache {
+    engine: Arc<Engine>,
+    seed: Arc<WorldSeed>,
+    mask_host: Vec<f32>,
+    pool: Pool<PooledSession>,
+    /// Current base weights (updated by `BaseSync`; sessions re-upload
+    /// lazily on checkout when their generation is stale).
+    base: Mutex<Arc<Vec<f32>>>,
+    base_gen: AtomicU64,
+}
+
+impl EngineCache {
+    /// One engine for the whole plane; sessions materialize lazily on
+    /// first checkout per compute worker.
+    pub fn new(cfg: &FedConfig, seed: Arc<WorldSeed>) -> Result<EngineCache> {
+        let engine = Arc::new(Engine::new(&cfg.artifacts_dir)?);
+        let mask_host = cfg.method.grad_mask(&seed.schema);
+        let base = Arc::new(seed.base_host.clone());
+        Ok(EngineCache {
+            engine,
+            seed,
+            mask_host,
+            pool: Pool::default(),
+            base: Mutex::new(base),
+            base_gen: AtomicU64::new(0),
+        })
+    }
+
+    /// Check a session out for one task. A cache miss builds a fresh
+    /// session over the SHARED engine — compiled executables are reused
+    /// across sessions, so the miss costs an upload, not a compile. A
+    /// stale base generation (a FLoRA merge landed since this session
+    /// last ran) re-uploads the current base before the task sees it.
+    pub fn checkout(&self) -> Result<Lease<'_, PooledSession>> {
+        let mut lease = self.pool.checkout_with(|| {
+            let session = Session::from_seed(self.engine.clone(), &self.seed)?;
+            let mask = session.upload_mask(&self.mask_host)?;
+            Ok(PooledSession { session, mask, base_gen: 0 })
+        })?;
+        let gen = self.base_gen.load(Ordering::Acquire);
+        if lease.base_gen != gen {
+            let base = lock_unpoisoned(&self.base).clone();
+            lease.session.set_base((*base).clone())?;
+            lease.base_gen = gen;
+        }
+        Ok(lease)
+    }
+
+    /// Install a new frozen base (FLoRA merge sync). Generation-stamped:
+    /// pooled sessions re-upload on their next checkout, not eagerly.
+    pub fn sync_base(&self, base: Vec<f32>) {
+        *lock_unpoisoned(&self.base) = Arc::new(base);
+        self.base_gen.fetch_add(1, Ordering::Release);
+    }
+
+    /// Lifetime checkout/return counters.
+    pub fn stats(&self) -> CacheStats {
+        self.pool.stats()
+    }
+
+    /// Sessions currently idle in the pool.
+    pub fn idle_sessions(&self) -> usize {
+        self.pool.idle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pool_hits_after_first_return() {
+        let pool: Pool<u32> = Pool::default();
+        {
+            let lease = pool.checkout_with(|| Ok(7)).unwrap();
+            assert_eq!(*lease, 7);
+        }
+        assert_eq!(pool.idle(), 1);
+        {
+            let lease = pool.checkout_with(|| Ok(99)).unwrap();
+            assert_eq!(*lease, 7, "second checkout reuses the returned item");
+        }
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.poisoned), (1, 1, 0));
+    }
+
+    #[test]
+    fn panicking_holder_poisons_instead_of_returning() {
+        let pool: Pool<u32> = Pool::default();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _lease = pool.checkout_with(|| Ok(1)).unwrap();
+            panic!("task died mid-lease");
+        }));
+        assert!(r.is_err());
+        assert_eq!(pool.idle(), 0, "a poisoned item never re-enters the pool");
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.poisoned), (0, 1, 1));
+        // the pool itself stays usable
+        let lease = pool.checkout_with(|| Ok(2)).unwrap();
+        assert_eq!(*lease, 2);
+    }
+
+    #[test]
+    fn concurrent_checkout_return_under_poison_keeps_counters_consistent() {
+        let pool: Arc<Pool<usize>> = Arc::new(Pool::default());
+        let threads = 8;
+        let iters = 200;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let pool = pool.clone();
+                std::thread::spawn(move || {
+                    for i in 0..iters {
+                        if (t + i) % 17 == 0 {
+                            // a deliberately panicking holder
+                            let _ = std::panic::catch_unwind(
+                                std::panic::AssertUnwindSafe(|| {
+                                    let _lease = pool.checkout_with(|| Ok(t)).unwrap();
+                                    panic!("poison");
+                                }),
+                            );
+                        } else {
+                            let lease = pool.checkout_with(|| Ok(t)).unwrap();
+                            assert!(*lease < threads);
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = pool.stats();
+        assert_eq!(s.hits + s.misses, (threads * iters) as u64, "every checkout counted once");
+        assert!(s.poisoned > 0, "the panicking holders must have poisoned some leases");
+        // conservation: items constructed = items idle + items poisoned
+        assert_eq!(s.misses, pool.idle() as u64 + s.poisoned);
+    }
+}

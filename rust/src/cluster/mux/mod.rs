@@ -1,0 +1,628 @@
+//! Event-driven client multiplexer: the massive-scale in-process client
+//! plane.
+//!
+//! The thread-per-client plane (`cluster::participant`) spawns one OS
+//! thread per worker connection and builds one full `World` — its own
+//! PJRT engine, corpus, partition — per thread. That caps a host at tens
+//! of simulated clients. This module replaces it with an event-driven
+//! plane that simulates 10⁴–10⁶ logical clients on a fixed number of OS
+//! threads:
+//!
+//! * **Lanes** — one per worker connection, exactly as many as the
+//!   coordinator's `n_workers`. Client ownership stays `ci % n_workers`,
+//!   so lane assignment is bitwise-identical to the threads plane and the
+//!   coordinator cannot tell the two apart.
+//! * **RX pumps** — one lightweight thread per lane that only decodes
+//!   envelopes and feeds the shared ready queue. Pumps never compute.
+//! * **Compute pool** — `mux_workers` threads (default: CPU cores) that
+//!   pop ready lanes and drive each lane's per-client state machines
+//!   (Idle → Tasked → Training → Uploading). At most one message per
+//!   lane is in flight at a time, so per-lane FIFO order — the order the
+//!   stateful downlink protocol requires — is preserved while different
+//!   lanes train concurrently.
+//! * **Shared world** — ONE [`WorldSeed`](crate::fed::world::WorldSeed)
+//!   for the whole plane (the threads plane builds one per worker) and
+//!   one training [`Backend`]: either the shared
+//!   [`EngineCache`](engine_cache::EngineCache) session pool or the
+//!   artifact-free synthetic trainer.
+//!
+//! Per-client cost is O(active cohort): lane client state, downlink
+//! references, and sessions all materialize lazily on first task, so an
+//! inactive population of a million clients costs nothing but the
+//! coordinator's (also lazy) bookkeeping.
+//!
+//! Parity: a task result is a pure function of (world, client state,
+//! task) — the per-task RNG stream arrives inside the task — and the
+//! lane pipeline below mirrors `Participant::handle` statement for
+//! statement. Scheduling order across lanes only affects arrival order,
+//! which the aggregation plane already sorts out (shards order pending
+//! results by slot; `finish_round` walks slots in order).
+
+pub mod engine_cache;
+pub mod trainer;
+
+pub use engine_cache::{CacheStats, EngineCache};
+pub use trainer::Backend;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::compress::{wire, Compressed};
+use crate::fed::downlink;
+use crate::fed::world::{ClientState, WorldSeed};
+use crate::fed::{staleness, FedConfig};
+use crate::model::segment_ranges;
+use crate::util::lock_unpoisoned;
+use crate::util::rng::Rng;
+
+use super::protocol::{DownPayload, Message, TrainResult, TrainTask, UpPayload};
+use super::transport::{Conn, ConnRx, ConnTx};
+use super::FaultSpec;
+
+/// Tuning knobs for one mux plane.
+#[derive(Debug, Clone)]
+pub struct MuxOptions {
+    /// Compute-pool size (threads actually training). The CLI defaults
+    /// this to the host's core count.
+    pub workers: usize,
+    /// Deterministic straggler injection (same semantics as the threads
+    /// plane: the named client's uplink sleeps before sending).
+    pub fault: Option<FaultSpec>,
+}
+
+/// Lifecycle of one lane's current unit of work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum LaneState {
+    /// Nothing queued, nothing running.
+    Idle = 0,
+    /// Work is queued (the lane sits in the ready queue, unclaimed).
+    Tasked = 1,
+    /// A compute worker is running local training for this lane.
+    Training = 2,
+    /// The result is being serialized/sent (including any injected
+    /// straggler delay).
+    Uploading = 3,
+}
+
+impl LaneState {
+    fn from_u8(x: u8) -> LaneState {
+        match x {
+            0 => LaneState::Idle,
+            1 => LaneState::Tasked,
+            2 => LaneState::Training,
+            _ => LaneState::Uploading,
+        }
+    }
+}
+
+/// The legal lane transitions. Control messages (`BaseSync`, `Shutdown`)
+/// travel Tasked → Idle/Tasked without a Training phase; a finished
+/// upload re-arms straight to Tasked when more work is already queued.
+pub fn lane_step_ok(from: LaneState, to: LaneState) -> bool {
+    use LaneState::*;
+    matches!(
+        (from, to),
+        (Idle, Tasked)
+            | (Tasked, Training)
+            | (Tasked, Tasked)
+            | (Tasked, Idle)
+            | (Training, Uploading)
+            | (Uploading, Idle)
+            | (Uploading, Tasked)
+    )
+}
+
+/// Per-lane inbox: FIFO of decoded messages plus the claim flag that
+/// guarantees at most one in-flight message per lane.
+struct Inbox {
+    queue: VecDeque<Message>,
+    /// True while the lane is in the ready queue or being processed.
+    in_flight: bool,
+    /// False once the lane saw `Shutdown` (or failed); late messages are
+    /// dropped instead of queued.
+    live: bool,
+}
+
+/// Per-lane client state and codec scratch — the exact fields
+/// `cluster::participant::Participant` keeps, minus the world and session
+/// (shared plane-wide here). Locked only by the lane's single in-flight
+/// task, so the mutex is uncontended by construction.
+#[derive(Default)]
+struct LaneCore {
+    /// Hosted clients, materialized lazily on first task.
+    clients: HashMap<usize, ClientState>,
+    /// Per-client downlink reference (mirror of the server's channel).
+    refs: HashMap<usize, Vec<f32>>,
+    /// Per-client stateful-downlink count, checked against
+    /// `TrainTask::down_seq` (lost-delta detection).
+    applied_seq: HashMap<usize, u64>,
+    dec: wire::Decoder,
+    down_sv: wire::SparseVec,
+    update: Vec<f32>,
+    comp_out: Compressed,
+    up_watermark: usize,
+}
+
+struct Lane {
+    inbox: Mutex<Inbox>,
+    core: Mutex<LaneCore>,
+    tx: Mutex<Box<dyn ConnTx>>,
+    state: AtomicU8,
+}
+
+impl Lane {
+    fn advance(&self, to: LaneState) {
+        let from = LaneState::from_u8(self.state.swap(to as u8, Ordering::Relaxed));
+        debug_assert!(lane_step_ok(from, to), "illegal lane transition {from:?} -> {to:?}");
+    }
+}
+
+/// Ready queue + liveness shared by pumps and the compute pool. The lane
+/// count and the condvar share the ready mutex's critical section so a
+/// final `Shutdown` can never slip between a worker's emptiness check and
+/// its wait (lost-wakeup hazard).
+struct Scheduler {
+    ready: Mutex<VecDeque<usize>>,
+    cv: Condvar,
+    live_lanes: AtomicUsize,
+    failure: Mutex<Option<String>>,
+}
+
+struct Plane {
+    cfg: FedConfig,
+    seed: Arc<WorldSeed>,
+    backend: Backend,
+    lanes: Vec<Lane>,
+    sched: Scheduler,
+    fault: Option<FaultSpec>,
+    /// Straggler helper threads (joined before the plane returns).
+    helpers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// Run the whole client plane over the given worker connections. This is
+/// the mux-mode replacement for spawning one `participant::run_worker`
+/// thread per connection: ONE call, `conns.len()` lanes, `opts.workers`
+/// compute threads, one shared world.
+///
+/// Mirrors `run_worker`'s contract per lane: sends `Hello` for every lane
+/// before the (slow) world build, reports build failures as `Error`
+/// messages on every lane, serves tasks until each lane's `Shutdown`.
+pub fn run_plane(cfg: FedConfig, conns: Vec<Box<dyn Conn>>, opts: MuxOptions) -> Result<()> {
+    let n_lanes = conns.len();
+    ensure!(n_lanes > 0, "mux plane needs at least one lane");
+    // split + Hello first so the coordinator's install loop proceeds
+    // while the world builds
+    let mut txs = Vec::with_capacity(n_lanes);
+    let mut rxs = Vec::with_capacity(n_lanes);
+    for (w, conn) in conns.into_iter().enumerate() {
+        let (mut tx, rx) = conn.split()?;
+        tx.send(&Message::Hello { worker: w as u32 }.to_envelope())?;
+        txs.push(tx);
+        rxs.push(rx);
+    }
+
+    let built: Result<(Arc<WorldSeed>, Backend)> = (|| {
+        let seed = Arc::new(WorldSeed::build(&cfg).context("mux plane: world build")?);
+        let backend = Backend::new(&cfg, seed.clone())?;
+        Ok((seed, backend))
+    })();
+    let (seed, backend) = match built {
+        Ok(x) => x,
+        Err(e) => {
+            for tx in &mut txs {
+                let _ = tx.send(&Message::Error { text: format!("{e:#}") }.to_envelope());
+            }
+            return Err(e);
+        }
+    };
+
+    let lanes: Vec<Lane> = txs
+        .into_iter()
+        .map(|tx| Lane {
+            inbox: Mutex::new(Inbox { queue: VecDeque::new(), in_flight: false, live: true }),
+            core: Mutex::new(LaneCore::default()),
+            tx: Mutex::new(tx),
+            state: AtomicU8::new(LaneState::Idle as u8),
+        })
+        .collect();
+    let plane = Arc::new(Plane {
+        cfg,
+        seed,
+        backend,
+        lanes,
+        sched: Scheduler {
+            ready: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            live_lanes: AtomicUsize::new(n_lanes),
+            failure: Mutex::new(None),
+        },
+        fault: opts.fault,
+        helpers: Mutex::new(Vec::new()),
+    });
+
+    let mut pumps = Vec::with_capacity(n_lanes);
+    for (li, rx) in rxs.into_iter().enumerate() {
+        let plane = plane.clone();
+        pumps.push(
+            std::thread::Builder::new()
+                .name(format!("ecolora-mux-rx-{li}"))
+                .spawn(move || pump_lane(&plane, li, rx))?,
+        );
+    }
+    let n_workers = opts.workers.max(1);
+    let mut workers = Vec::with_capacity(n_workers);
+    for w in 0..n_workers {
+        let plane = plane.clone();
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("ecolora-mux-cpu-{w}"))
+                .spawn(move || compute_loop(&plane))?,
+        );
+    }
+
+    for h in pumps {
+        h.join().map_err(|_| anyhow!("mux plane: rx pump panicked"))?;
+    }
+    for h in workers {
+        h.join().map_err(|_| anyhow!("mux plane: compute worker panicked"))?;
+    }
+    let helpers = std::mem::take(&mut *lock_unpoisoned(&plane.helpers));
+    for h in helpers {
+        h.join().map_err(|_| anyhow!("mux plane: straggler helper panicked"))?;
+    }
+    match lock_unpoisoned(&plane.sched.failure).take() {
+        Some(text) => bail!("mux plane: {text}"),
+        None => Ok(()),
+    }
+}
+
+/// RX pump: decode one lane's envelopes into its inbox until `Shutdown`
+/// or peer loss. Decode failures fail the lane loudly (`Error` back to
+/// the coordinator) — same as the threads plane's serve loop.
+fn pump_lane(plane: &Plane, li: usize, mut rx: Box<dyn ConnRx>) {
+    loop {
+        let env = match rx.recv() {
+            Ok(env) => env,
+            // peer gone: the coordinator dropped us (or the run is over);
+            // retire the lane as if Shutdown arrived
+            Err(_) => {
+                enqueue(plane, li, Message::Shutdown);
+                return;
+            }
+        };
+        match Message::from_envelope(&env) {
+            Ok(msg) => {
+                let is_shutdown = matches!(msg, Message::Shutdown);
+                enqueue(plane, li, msg);
+                if is_shutdown {
+                    return;
+                }
+            }
+            Err(e) => {
+                lane_fail(plane, li, e);
+                enqueue(plane, li, Message::Shutdown);
+                return;
+            }
+        }
+    }
+}
+
+/// Queue a message on a lane; arm the lane in the ready queue unless it
+/// is already claimed (at most one in-flight message per lane).
+fn enqueue(plane: &Plane, li: usize, msg: Message) {
+    let lane = &plane.lanes[li];
+    let mut inbox = lock_unpoisoned(&lane.inbox);
+    if !inbox.live {
+        return;
+    }
+    inbox.queue.push_back(msg);
+    if !inbox.in_flight {
+        inbox.in_flight = true;
+        drop(inbox);
+        lane.advance(LaneState::Tasked);
+        push_ready(plane, li);
+    }
+}
+
+fn push_ready(plane: &Plane, li: usize) {
+    let mut ready = lock_unpoisoned(&plane.sched.ready);
+    ready.push_back(li);
+    plane.sched.cv.notify_one();
+}
+
+/// Mark a lane dead and wake the pool if it was the last one. The
+/// decrement shares the ready mutex with the workers' check-then-wait so
+/// the final wakeup cannot be lost.
+fn retire_lane(plane: &Plane, li: usize) {
+    let was_live = {
+        let mut inbox = lock_unpoisoned(&plane.lanes[li].inbox);
+        std::mem::replace(&mut inbox.live, false)
+    };
+    if was_live {
+        let _ready = lock_unpoisoned(&plane.sched.ready);
+        if plane.sched.live_lanes.fetch_sub(1, Ordering::AcqRel) == 1 {
+            plane.sched.cv.notify_all();
+        }
+    }
+}
+
+/// Report a lane failure to the coordinator and record it as the plane's
+/// exit error (first failure wins), then retire the lane.
+fn lane_fail(plane: &Plane, li: usize, e: anyhow::Error) {
+    let text = format!("{e:#}");
+    let _ = lock_unpoisoned(&plane.lanes[li].tx)
+        .send(&Message::Error { text: text.clone() }.to_envelope());
+    lock_unpoisoned(&plane.sched.failure).get_or_insert(text);
+    retire_lane(plane, li);
+}
+
+/// Release a lane after one message: re-arm it if more work is queued,
+/// otherwise return it to Idle.
+fn finish_lane(plane: &Plane, li: usize) {
+    let lane = &plane.lanes[li];
+    let mut inbox = lock_unpoisoned(&lane.inbox);
+    if inbox.live && !inbox.queue.is_empty() {
+        drop(inbox);
+        lane.advance(LaneState::Tasked);
+        push_ready(plane, li);
+    } else {
+        inbox.in_flight = false;
+        drop(inbox);
+        lane.advance(LaneState::Idle);
+    }
+}
+
+/// One compute worker: pop ready lanes and drive their state machines
+/// until every lane has retired.
+fn compute_loop(plane: &Arc<Plane>) {
+    loop {
+        let li = {
+            let mut ready = lock_unpoisoned(&plane.sched.ready);
+            loop {
+                if let Some(li) = ready.pop_front() {
+                    break li;
+                }
+                if plane.sched.live_lanes.load(Ordering::Acquire) == 0 {
+                    return;
+                }
+                ready = plane
+                    .sched
+                    .cv
+                    .wait(ready)
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        let msg = lock_unpoisoned(&plane.lanes[li].inbox).queue.pop_front();
+        let Some(msg) = msg else {
+            finish_lane(plane, li);
+            continue;
+        };
+        match msg {
+            Message::TrainTask(task) => run_task(plane, li, task),
+            Message::BaseSync { base } => {
+                if let Err(e) = plane.backend.sync_base(base) {
+                    lane_fail(plane, li, e);
+                }
+                finish_lane(plane, li);
+            }
+            Message::Shutdown => {
+                retire_lane(plane, li);
+                finish_lane(plane, li);
+            }
+            other => {
+                lane_fail(plane, li, anyhow!("mux lane: unexpected {:?} message", other.kind()));
+                finish_lane(plane, li);
+            }
+        }
+    }
+}
+
+/// Train one task on a lane: Tasked → Training → Uploading → (Idle |
+/// Tasked). An injected straggler delay rides a helper thread so the
+/// sleep occupies the lane (as it must — the coordinator is timing this
+/// client's uplink) but never a compute-pool slot.
+fn run_task(plane: &Arc<Plane>, li: usize, task: TrainTask) {
+    plane.lanes[li].advance(LaneState::Training);
+    let res = {
+        let mut core = lock_unpoisoned(&plane.lanes[li].core);
+        handle_task(plane, &mut core, &task)
+    };
+    plane.lanes[li].advance(LaneState::Uploading);
+    match res {
+        Ok(res) => {
+            let delay = plane
+                .fault
+                .and_then(|f| (f.client == task.client as usize).then_some(f.delay));
+            if let Some(delay) = delay {
+                let plane2 = plane.clone();
+                let helper = std::thread::spawn(move || {
+                    std::thread::sleep(delay);
+                    send_result(&plane2, li, res);
+                    finish_lane(&plane2, li);
+                });
+                lock_unpoisoned(&plane.helpers).push(helper);
+            } else {
+                send_result(plane, li, res);
+                finish_lane(plane, li);
+            }
+        }
+        Err(e) => {
+            lane_fail(plane, li, e);
+            finish_lane(plane, li);
+        }
+    }
+}
+
+fn send_result(plane: &Plane, li: usize, res: TrainResult) {
+    if let Err(e) =
+        lock_unpoisoned(&plane.lanes[li].tx).send(&Message::TrainResult(res).to_envelope())
+    {
+        lane_fail(plane, li, e);
+    }
+}
+
+/// Execute one task against a lane's client state. Mirrors
+/// `Participant::handle` statement for statement — keep the two in sync —
+/// with the world shared plane-wide and the training step behind
+/// [`Backend`].
+fn handle_task(plane: &Plane, core: &mut LaneCore, task: &TrainTask) -> Result<TrainResult> {
+    let cfg = &plane.cfg;
+    let seed = &plane.seed;
+    let ci = task.client as usize;
+    ensure!(ci < cfg.n_clients, "task for unknown client {ci}");
+    let lora_total = seed.schema.lora_total;
+
+    // ---- downlink reconstruction ---------------------------------------
+    let start_global: Option<Vec<f32>> = match &task.down {
+        DownPayload::FloraInit(_) => None,
+        DownPayload::DenseF32(g) => {
+            ensure!(g.len() == lora_total, "downlink dense f32 length");
+            Some(g.clone())
+        }
+        DownPayload::SparseWire(_) | DownPayload::DenseF16(_) => {
+            let applied = core.applied_seq.entry(ci).or_insert(0);
+            ensure!(
+                task.down_seq == *applied + 1,
+                "downlink reference desync for client {ci}: task carries stateful \
+                 downlink #{}, this lane has applied {} (a delta was lost in \
+                 transit — a restarted or disconnected worker cannot resume this \
+                 client's channel; restart the run)",
+                task.down_seq,
+                *applied
+            );
+            *applied += 1;
+            let reference = core.refs.entry(ci).or_insert_with(|| seed.lora_init.clone());
+            match &task.down {
+                DownPayload::SparseWire(b) => {
+                    downlink::apply_sparse_down(
+                        b,
+                        reference,
+                        &seed.kidx,
+                        &mut core.dec,
+                        &mut core.down_sv,
+                    )?;
+                }
+                DownPayload::DenseF16(b) => {
+                    downlink::apply_dense_f16(b, reference)?;
+                }
+                _ => unreachable!(),
+            }
+            Some(reference.clone())
+        }
+    };
+
+    if !core.clients.contains_key(&ci) {
+        let st = seed.client_state(cfg, ci);
+        core.clients.insert(ci, st);
+    }
+    let client = core.clients.get_mut(&ci).unwrap();
+
+    // ---- local init: FLoRA restart or Eq. 3 mixing ----------------------
+    let (base_point, local): (Vec<f32>, Vec<f32>) = match (&task.down, &start_global) {
+        (DownPayload::FloraInit(init), _) => {
+            ensure!(init.len() == lora_total, "flora init length");
+            (init.clone(), init.clone())
+        }
+        (_, Some(g)) => {
+            let local = if let Some(eco) = cfg.eco {
+                let staleness = (task.round.saturating_sub(client.tau)).max(1);
+                let mut mixed = client.lora.clone();
+                staleness::mix_into_local(eco.beta, staleness, g, &mut mixed);
+                mixed
+            } else {
+                g.clone()
+            };
+            (g.clone(), local)
+        }
+        _ => unreachable!("start_global is Some for every non-restart payload"),
+    };
+
+    // ---- local training (behind the plane's backend) --------------------
+    let mut brng = Rng::from_state(task.rng_state);
+    let (local, mean_loss, exec_s) = plane.backend.train(cfg, seed, client, local, &mut brng)?;
+
+    // ---- uplink ---------------------------------------------------------
+    let update = &mut core.update;
+    update.clear();
+    update.reserve(lora_total);
+    update.extend(local.iter().zip(&base_point).map(|(l, b)| l - b));
+    let (up, k) = match (&mut client.comp, cfg.eco) {
+        (Some(comp), Some(_eco)) => {
+            comp.compress_into(update, task.l0, task.l_prev, &mut core.comp_out);
+            let ranges = segment_ranges(lora_total, (task.n_s as usize).max(1));
+            let seg = task.segment as usize;
+            ensure!(seg < ranges.len(), "segment {seg} out of range");
+            let range = ranges[seg].clone();
+            let mut bytes = Vec::with_capacity(core.up_watermark);
+            comp.encode_range_into(&core.comp_out, &range, &mut bytes)?;
+            core.up_watermark = core.up_watermark.max(bytes.len());
+            (UpPayload::SparseWire(bytes), core.comp_out.k)
+        }
+        _ => {
+            if cfg.method.restarts_lora() {
+                (UpPayload::DenseModule(local.clone()), (0.0, 0.0))
+            } else {
+                (UpPayload::DenseUpdate(update.clone()), (0.0, 0.0))
+            }
+        }
+    };
+
+    // ---- persist client state ------------------------------------------
+    client.lora = local;
+    client.tau = task.round;
+
+    Ok(TrainResult {
+        round: task.round,
+        slot: task.slot,
+        client: task.client,
+        segment: task.segment,
+        n_samples: client.n_samples as u32,
+        mean_loss,
+        k_a: k.0,
+        k_b: k.1,
+        exec_s,
+        stale_from_round: task.round,
+        up,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_state_machine_allows_exactly_the_documented_transitions() {
+        use LaneState::*;
+        let all = [Idle, Tasked, Training, Uploading];
+        let legal = [
+            (Idle, Tasked),
+            (Tasked, Training),
+            (Tasked, Tasked),
+            (Tasked, Idle),
+            (Training, Uploading),
+            (Uploading, Idle),
+            (Uploading, Tasked),
+        ];
+        for &from in &all {
+            for &to in &all {
+                assert_eq!(
+                    lane_step_ok(from, to),
+                    legal.contains(&(from, to)),
+                    "transition {from:?} -> {to:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn lane_state_u8_roundtrip() {
+        use LaneState::*;
+        for s in [Idle, Tasked, Training, Uploading] {
+            assert_eq!(LaneState::from_u8(s as u8), s);
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Per-task training backends for the mux plane.
+//!
+//! A mux lane runs the SAME downlink/mixing/uplink pipeline as the
+//! thread-per-client participant; only the local-training step in the
+//! middle is pluggable:
+//!
+//! * [`Backend::Pjrt`] — real compiled compute through the shared
+//!   [`EngineCache`]: a session is leased per task, so steady state holds
+//!   `mux_workers` sessions no matter how many clients the host simulates.
+//! * [`Backend::Synthetic`] — deterministic host-side arithmetic for the
+//!   `--preset synthetic` scale path (10⁴–10⁶ clients, no PJRT, no
+//!   artifacts). It consumes the task's forked batch-RNG stream exactly
+//!   once per touch, so a result is a pure function of
+//!   (config, client state, task) just like the real trainer — the
+//!   property every parity and scheduling invariant rests on.
+
+use anyhow::Result;
+
+use crate::fed::world::{self, ClientState, WorldSeed};
+use crate::fed::FedConfig;
+use crate::util::rng::Rng;
+
+use super::engine_cache::EngineCache;
+
+/// Sparse touches per synthetic local step (keeps the cost of one task
+/// O(touches), independent of `lora_total`, so a 10⁶-client smoke run
+/// spends its time in scheduling and wire codecs — the paths under test —
+/// not in fake math).
+const SYNTH_TOUCHES: usize = 64;
+
+/// The training substrate behind a mux plane.
+pub enum Backend {
+    /// Compiled compute over the shared engine cache.
+    Pjrt(EngineCache),
+    /// Host-math trainer for artifact-free scale runs. Holds the method's
+    /// grad mask so frozen coordinates stay frozen, same as on device.
+    Synthetic {
+        /// `Method::grad_mask` over the synthetic schema.
+        mask: Vec<f32>,
+    },
+}
+
+impl Backend {
+    /// Pick the backend the config calls for: `--preset synthetic` never
+    /// touches PJRT; everything else shares one engine via the cache.
+    pub fn new(cfg: &FedConfig, seed: std::sync::Arc<WorldSeed>) -> Result<Backend> {
+        if cfg.preset == "synthetic" {
+            Ok(Backend::Synthetic { mask: cfg.method.grad_mask(&seed.schema) })
+        } else {
+            Ok(Backend::Pjrt(EngineCache::new(cfg, seed)?))
+        }
+    }
+
+    /// Run one client's local training. Returns (trained lora, mean local
+    /// loss, seconds spent in compiled execution — 0 for synthetic).
+    pub fn train(
+        &self,
+        cfg: &FedConfig,
+        seed: &WorldSeed,
+        client: &mut ClientState,
+        local: Vec<f32>,
+        rng: &mut Rng,
+    ) -> Result<(Vec<f32>, f64, f64)> {
+        match self {
+            Backend::Pjrt(cache) => {
+                let lease = cache.checkout()?;
+                let exec_before = lease.session.exec_seconds.get();
+                let (local, mean_loss) = world::local_train(
+                    &lease.session,
+                    cfg,
+                    &seed.ds,
+                    &seed.pairs,
+                    client,
+                    local,
+                    rng,
+                    &lease.mask,
+                )?;
+                let exec_s = lease.session.exec_seconds.get() - exec_before;
+                Ok((local, mean_loss, exec_s))
+            }
+            Backend::Synthetic { mask } => {
+                let (local, mean_loss) = synthetic_local_train(cfg, mask, local, rng);
+                Ok((local, mean_loss, 0.0))
+            }
+        }
+    }
+
+    /// Install a merged base (FLoRA `BaseSync`). The synthetic trainer has
+    /// no base model, so the message is a no-op there (the control plane
+    /// refuses FLoRA under `--preset synthetic` anyway).
+    pub fn sync_base(&self, base: Vec<f32>) -> Result<()> {
+        match self {
+            Backend::Pjrt(cache) => {
+                cache.sync_base(base);
+                Ok(())
+            }
+            Backend::Synthetic { .. } => Ok(()),
+        }
+    }
+}
+
+/// Deterministic stand-in for `world::local_train`: `local_steps` rounds
+/// of `SYNTH_TOUCHES` masked sparse perturbations drawn from the task's
+/// forked batch stream. Nonzero updates flow through the real compressor,
+/// wire codec, and aggregation planes; the pseudo-loss keeps the Eq. 4
+/// adaptive-sparsity signal live.
+pub fn synthetic_local_train(
+    cfg: &FedConfig,
+    mask: &[f32],
+    mut local: Vec<f32>,
+    rng: &mut Rng,
+) -> (Vec<f32>, f64) {
+    let steps = cfg.local_steps.max(1);
+    let scale = cfg.lr * 0.01;
+    let mut loss_sum = 0.0f64;
+    for _ in 0..steps {
+        let mut grad_sq = 0.0f64;
+        for _ in 0..SYNTH_TOUCHES {
+            let i = rng.below(local.len());
+            let g = rng.normal();
+            grad_sq += g * g;
+            if mask[i] != 0.0 {
+                local[i] -= scale * g as f32;
+            }
+        }
+        loss_sum += 1.0 + 0.1 * (grad_sq / SYNTH_TOUCHES as f64);
+    }
+    (local, loss_sum / steps as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> FedConfig {
+        FedConfig::test_profile("synthetic")
+    }
+
+    #[test]
+    fn synthetic_train_is_a_pure_function_of_rng_state() {
+        let cfg = cfg();
+        let n = 512;
+        let mask = vec![1.0f32; n];
+        let start: Vec<f32> = (0..n).map(|i| i as f32 * 0.25).collect();
+        let state = Rng::new(99).fork(7).state();
+        let mut r1 = Rng::from_state(state);
+        let mut r2 = Rng::from_state(state);
+        let (a, la) = synthetic_local_train(&cfg, &mask, start.clone(), &mut r1);
+        let (b, lb) = synthetic_local_train(&cfg, &mask, start, &mut r2);
+        assert_eq!(a, b, "identical rng state must give bitwise-identical lora");
+        assert_eq!(la.to_bits(), lb.to_bits());
+        assert_eq!(r1.state(), r2.state(), "both runs consume the same draws");
+    }
+
+    #[test]
+    fn synthetic_train_changes_only_unmasked_coordinates() {
+        let cfg = cfg();
+        let n = 256;
+        // freeze the upper half
+        let mask: Vec<f32> = (0..n).map(|i| if i < n / 2 { 1.0 } else { 0.0 }).collect();
+        let start = vec![1.0f32; n];
+        let mut rng = Rng::new(5).fork(3);
+        let (out, loss) = synthetic_local_train(&cfg, &mask, start.clone(), &mut rng);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(out[..n / 2] != start[..n / 2], "unmasked half must move");
+        assert_eq!(out[n / 2..], start[n / 2..], "masked half must stay frozen");
+    }
+
+    #[test]
+    fn synthetic_train_rng_consumption_is_mask_independent() {
+        // masking must not change the draw count, or two methods with
+        // different masks would desynchronize downstream streams
+        let cfg = cfg();
+        let n = 128;
+        let state = Rng::new(11).fork(2).state();
+        let mut open = Rng::from_state(state);
+        let mut frozen = Rng::from_state(state);
+        let all_open = vec![1.0; n];
+        let all_frozen = vec![0.0; n];
+        synthetic_local_train(&cfg, &all_open, vec![0.0; n], &mut open);
+        synthetic_local_train(&cfg, &all_frozen, vec![0.0; n], &mut frozen);
+        assert_eq!(open.state(), frozen.state());
+    }
+}

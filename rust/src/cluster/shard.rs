@@ -108,6 +108,10 @@ impl AggStats {
 #[derive(Default)]
 pub struct LateBuffer {
     entries: Vec<TrainResult>,
+    /// (origin round, slot) of every buffered entry — O(1) dedup, so
+    /// admission stays O(active cohort) when thousands of stragglers
+    /// from a 10⁵-client population land in one buffer.
+    seen: std::collections::HashSet<(u64, u32)>,
     bytes: usize,
     /// Results discarded instead of buffered/folded: duplicates of an
     /// already buffered (round, slot), FLoRA module uploads (their
@@ -151,20 +155,19 @@ impl LateBuffer {
             self.dropped += 1;
             return false;
         }
-        if self
-            .entries
-            .iter()
-            .any(|e| e.stale_from_round == res.stale_from_round && e.slot == res.slot)
-        {
+        if self.seen.contains(&(res.stale_from_round, res.slot)) {
             self.dropped += 1;
             return false;
         }
         let cost = late_payload_bytes(&res);
         if self.bytes + cost > LATE_BUFFER_MAX_BYTES {
+            // not recorded in `seen`: a cap-evicted identity that arrives
+            // again is evicted again (same count), not mislabeled a dup
             self.evicted += 1;
             return false;
         }
         self.bytes += cost;
+        self.seen.insert((res.stale_from_round, res.slot));
         self.entries.push(res);
         true
     }
@@ -190,6 +193,7 @@ impl LateBuffer {
         stats: &mut AggStats,
     ) -> Vec<(u64, u32)> {
         let mut entries = std::mem::take(&mut self.entries);
+        self.seen.clear();
         self.bytes = 0;
         entries.sort_by_key(|e| (e.stale_from_round, e.slot));
         let mut folded_ids = Vec::new();

@@ -35,6 +35,7 @@ USAGE: ecolora <subcommand> [flags]
   pretrain   --preset <p> [--steps N] [--samples N]
   train      --preset <p> [--method fedit|flora|ffa] [--eco] [--dpo]
              [--cluster mem|tcp|mono] [--workers N] [--shards N]
+             [--client-plane mux|threads] [--mux-workers N]
              [--sim-ul X --sim-dl X] [--sim-latency X] [--sim-agg-mbps X]
              [--sim-slow-frac X --sim-slow-factor X]
              [--round-policy sync|quorum] [--quorum Q] [--slot-timeout MS]
@@ -54,9 +55,19 @@ USAGE: ecolora <subcommand> [flags]
   version / help
 
 train runs on the message-passing cluster by default (--cluster mem:
-in-process channel transport, participant threads in parallel).
---cluster tcp moves the same protocol onto loopback TCP; --cluster mono
-uses the single-threaded monolithic reference loop. --shards N splits
+in-process channel transport, participants multiplexed over the event-
+driven client plane). --cluster tcp moves the same protocol onto
+loopback TCP; --cluster mono uses the single-threaded monolithic
+reference loop. --client-plane picks the in-process participant plane:
+mux (default) drives every simulated client as a state machine over a
+fixed compute pool sized by --mux-workers (default: CPU threads) and
+one shared world/engine, which is what makes --clients 100000 and
+beyond feasible on one host; threads is the legacy thread-per-worker
+plane kept as the parity reference. --preset synthetic swaps the
+compiled model for deterministic host math (no artifacts, no
+pretraining, evaluation off) so scale runs exercise the scheduler,
+wire codecs, and aggregation planes — it requires the mux plane.
+--shards N splits
 the server's aggregation plane into N segment-sharded aggregator
 threads behind a router (bitwise-identical to --shards 1; more shards
 only buy aggregation wall-clock). --sim-ul/--sim-dl (Mbps) attach the
@@ -118,6 +129,9 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
 /// Build a `FedConfig` from CLI flags (shared with `train`).
 pub fn fed_config_from_args(args: &Args) -> Result<crate::fed::FedConfig> {
     let preset = args.get_or("preset", "small");
+    if preset == "synthetic" {
+        return synthetic_config_from_args(args);
+    }
     let mut profile = Profile::full(preset);
     profile.rounds = args.get_usize("rounds", profile.rounds);
     profile.n_clients = args.get_usize("clients", profile.n_clients);
@@ -146,23 +160,62 @@ pub fn fed_config_from_args(args: &Args) -> Result<crate::fed::FedConfig> {
     };
 
     if args.has("eco") {
-        let spars = if args.has("no-spars") {
-            SparsMode::Off
-        } else if let Some(k) = args.get("fixed-k") {
-            SparsMode::Fixed(k.parse().map_err(|_| anyhow!("bad --fixed-k"))?)
-        } else {
-            SparsMode::Adaptive(AdaptiveSparsifier::with_k_mins(
-                args.get_f64("k-min-a", 0.6),
-                args.get_f64("k-min-b", 0.5),
-            ))
-        };
-        cfg.eco = Some(EcoConfig {
-            n_s: args.get_usize("ns", 5),
-            beta: args.get_f64("beta", 0.7),
-            spars,
-            encoding: if args.has("no-encoding") { Encoding::Fixed } else { Encoding::Golomb },
-            downlink_sparse: !args.has("dense-downlink"),
-        });
+        cfg.eco = Some(eco_config_from_args(args)?);
+    }
+    Ok(cfg)
+}
+
+/// Parse the `--eco` flag family into an `EcoConfig` (shared by the
+/// preset and synthetic config builders).
+fn eco_config_from_args(args: &Args) -> Result<EcoConfig> {
+    let spars = if args.has("no-spars") {
+        SparsMode::Off
+    } else if let Some(k) = args.get("fixed-k") {
+        SparsMode::Fixed(k.parse().map_err(|_| anyhow!("bad --fixed-k"))?)
+    } else {
+        SparsMode::Adaptive(AdaptiveSparsifier::with_k_mins(
+            args.get_f64("k-min-a", 0.6),
+            args.get_f64("k-min-b", 0.5),
+        ))
+    };
+    Ok(EcoConfig {
+        n_s: args.get_usize("ns", 5),
+        beta: args.get_f64("beta", 0.7),
+        spars,
+        encoding: if args.has("no-encoding") { Encoding::Fixed } else { Encoding::Golomb },
+        downlink_sparse: !args.has("dense-downlink"),
+    })
+}
+
+/// Build the artifact-free `--preset synthetic` configuration: no
+/// `Profile`, no pretraining checkpoint, evaluation off (the control
+/// plane enforces all three). EcoLoRA defaults ON so scale runs carry
+/// real sparse wire traffic; the `--eco` flag family still re-derives
+/// it when any knob is given.
+fn synthetic_config_from_args(args: &Args) -> Result<crate::fed::FedConfig> {
+    for flag in ["dpo", "target-acc"] {
+        if args.has(flag) || args.get(flag).is_some() {
+            return Err(anyhow!("--{flag} needs a compiled model (not --preset synthetic)"));
+        }
+    }
+    let mut cfg = FedConfig::synthetic_profile(args.get_usize("clients", 100_000));
+    cfg.clients_per_round = args.get_usize("per-round", cfg.clients_per_round);
+    cfg.rounds = args.get_usize("rounds", cfg.rounds);
+    cfg.local_steps = args.get_usize("local-steps", cfg.local_steps);
+    cfg.lr = args.get_f64("lr", cfg.lr as f64) as f32;
+    cfg.seed = args.get_u64("seed", cfg.seed);
+    cfg.n_samples = args.get_usize("samples", cfg.n_samples);
+    cfg.verbose = args.has("verbose");
+    if let Some(m) = args.get("method") {
+        cfg.method = Method::parse(m).ok_or_else(|| anyhow!("bad --method"))?;
+    }
+    cfg.partition = match args.get_or("partition", "iid") {
+        "dirichlet" => PartitionKind::DirichletLabels { alpha: args.get_f64("alpha", 0.5) },
+        "iid" => PartitionKind::Iid,
+        other => return Err(anyhow!("bad --partition {other} for --preset synthetic")),
+    };
+    if args.has("eco") {
+        cfg.eco = Some(eco_config_from_args(args)?);
     }
     Ok(cfg)
 }
@@ -204,6 +257,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             for flag in [
                 "workers",
                 "shards",
+                "client-plane",
+                "mux-workers",
                 "sim-ul",
                 "sim-dl",
                 "sim-latency",
@@ -220,6 +275,11 @@ fn cmd_train(args: &Args) -> Result<()> {
                     return Err(anyhow!("--{flag} needs a cluster deployment (--cluster mem|tcp)"));
                 }
             }
+            if cfg.preset == "synthetic" {
+                return Err(anyhow!(
+                    "--preset synthetic needs the mux client plane (--cluster mem|tcp)"
+                ));
+            }
             println!("deployment    : monolithic");
             FedRunner::new(cfg)?.run()?
         }
@@ -233,11 +293,27 @@ fn cmd_train(args: &Args) -> Result<()> {
             if shards == 0 {
                 return Err(anyhow!("--shards expects a positive shard count"));
             }
+            let client_plane = cluster::ClientPlane::parse(args.get_or("client-plane", "mux"))?;
+            let mux_workers = args
+                .get("mux-workers")
+                .map(|v| {
+                    v.parse::<usize>()
+                        .map_err(|_| anyhow!("--mux-workers expects an integer, got {v:?}"))
+                })
+                .transpose()?;
+            if mux_workers == Some(0) {
+                return Err(anyhow!("--mux-workers expects a positive thread count"));
+            }
+            if mux_workers.is_some() && client_plane != cluster::ClientPlane::Mux {
+                return Err(anyhow!("--mux-workers requires --client-plane mux"));
+            }
             let opts = ClusterOptions {
                 mode,
                 workers: args.get("workers").map(|v| {
                     v.parse().unwrap_or_else(|_| panic!("--workers expects an integer, got {v:?}"))
                 }),
+                client_plane,
+                mux_workers,
                 shards,
                 netsim,
                 policy,
@@ -395,6 +471,12 @@ fn fault_from_args(args: &Args) -> Result<Option<FaultSpec>> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = deploy_config_from_args(args)?;
+    if cfg.preset == "synthetic" {
+        return Err(anyhow!(
+            "--preset synthetic is an in-process scale path (`train --cluster mem|tcp`); \
+             remote workers need a compiled model"
+        ));
+    }
     let label = cfg.run_label();
     let token = AuthToken::from_cli(args.get("token"), args.get("token-file"))?;
     let expect_workers = args
@@ -422,6 +504,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cluster: ClusterOptions {
             mode: ClusterMode::Tcp,
             workers: Some(expect_workers),
+            // the client plane lives in the remote `worker` processes;
+            // no in-process mux pool on the serve side
+            client_plane: cluster::ClientPlane::Threads,
+            mux_workers: None,
             shards,
             netsim,
             policy,
@@ -435,6 +521,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn cmd_worker(args: &Args) -> Result<()> {
     let cfg = deploy_config_from_args(args)?;
+    if cfg.preset == "synthetic" {
+        return Err(anyhow!(
+            "--preset synthetic is an in-process scale path (`train --cluster mem|tcp`); \
+             remote workers need a compiled model"
+        ));
+    }
     let token = AuthToken::from_cli(args.get("token"), args.get("token-file"))?;
     let connect = args
         .get("connect")

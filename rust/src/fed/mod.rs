@@ -141,6 +141,28 @@ impl FedConfig {
         }
     }
 
+    /// Artifact-free scale profile for the `--preset synthetic` client
+    /// plane (10⁴–10⁶ simulated clients behind the mux). Evaluation is
+    /// off — the synthetic schema has no compiled model — and EcoLoRA is
+    /// on so the sparse compressor, wire codecs, and sharded aggregation
+    /// carry real traffic at population scale.
+    pub fn synthetic_profile(clients: usize) -> Self {
+        let clients = clients.max(1);
+        FedConfig {
+            n_clients: clients,
+            clients_per_round: clients.min(64),
+            rounds: 2,
+            local_steps: 1,
+            n_samples: 256,
+            eval_items: 0,
+            eval_every: 0,
+            target_acc: None,
+            dpo: false,
+            eco: Some(EcoConfig::default()),
+            ..Self::paper_default("synthetic")
+        }
+    }
+
     /// Run label shared by the monolithic and cluster paths.
     pub fn run_label(&self) -> String {
         format!(
@@ -560,6 +582,8 @@ impl FedRunner {
         rec.overhead_s = overhead;
         rec.cohort = n_t;
         rec.shards = 1; // the monolithic path is a one-shard plane
+        rec.population = self.cfg.n_clients;
+        rec.active_cohort = n_t; // no resampling plane: cohort == dispatched set
         rec.compute_s = (self.session.exec_seconds.get() - exec_before) / n_t.max(1) as f64;
         let snap = sparsity_snapshot(&self.global, &self.kinds);
         rec.gini_a = snap.gini_a;

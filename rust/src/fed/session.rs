@@ -18,8 +18,13 @@ use crate::model::Schema;
 use crate::runtime::{literal_f32, literal_scalar_f32, Engine, Exec};
 use crate::util::rng::Rng;
 
+use super::world::WorldSeed;
+
 pub struct Session {
-    pub engine: Engine,
+    /// Shared PJRT engine. `Arc` so many mux-plane sessions in one
+    /// process reuse one compiled-executable cache (startup cost
+    /// amortizes across same-config clients).
+    pub engine: Arc<Engine>,
     pub schema: Schema,
     train: Arc<Exec>,
     eval_: Arc<Exec>,
@@ -40,7 +45,21 @@ impl Session {
     /// pretrained checkpoint is supplied via `load_base`.
     pub fn new(artifacts_dir: &Path, preset: &str, rng: &mut Rng) -> Result<Session> {
         let schema = Schema::load(artifacts_dir, preset)?;
-        let engine = Engine::new(artifacts_dir)?;
+        let engine = Arc::new(Engine::new(artifacts_dir)?);
+        let base_host = schema.init_base(rng);
+        Session::assemble(engine, schema, base_host)
+    }
+
+    /// Layer a session over an already-built [`WorldSeed`], sharing
+    /// `engine` (and therefore its compiled-executable cache) with every
+    /// other session in the process. Consumes NO randomness — the seed
+    /// already drew the base init — so any number of sessions can be
+    /// materialized without perturbing the world's streams.
+    pub fn from_seed(engine: Arc<Engine>, seed: &WorldSeed) -> Result<Session> {
+        Session::assemble(engine, (*seed.schema).clone(), seed.base_host.clone())
+    }
+
+    fn assemble(engine: Arc<Engine>, schema: Schema, base_host: Vec<f32>) -> Result<Session> {
         let train = engine.load_tagged(&schema, "train")?;
         let eval_ = engine.load_tagged(&schema, "eval")?;
         let pretrain_ = schema
@@ -58,7 +77,6 @@ impl Session {
             .contains_key("dpo")
             .then(|| engine.load_tagged(&schema, "dpo"))
             .transpose()?;
-        let base_host = schema.init_base(rng);
         let base_buf = engine.upload_f32(&base_host, &[schema.base_total])?;
         Ok(Session {
             engine,

@@ -35,7 +35,7 @@ use anyhow::Result;
 
 use crate::compress::{Compressor, KindIndex};
 use crate::data::{self, corpus, preference, ClientData, Dataset};
-use crate::model::LoraKind;
+use crate::model::{LoraKind, Schema};
 use crate::util::rng::Rng;
 use crate::xla::PjRtBuffer;
 
@@ -81,16 +81,64 @@ pub struct World {
     pub rng: Rng,
 }
 
-impl World {
-    /// Build the world. The fork order here is load-bearing — see module
-    /// docs before touching it.
-    pub fn build(cfg: &FedConfig) -> Result<World> {
+/// The session-free kernel of a [`World`]: everything deterministically
+/// derivable from a `FedConfig` WITHOUT touching PJRT. The massive-scale
+/// mux plane builds exactly one of these per host and shares it (via
+/// `Arc`) across 10⁴–10⁶ lazily-materialized client states; paths that
+/// need compiled compute layer a [`Session`] on top with
+/// [`Session::from_seed`].
+///
+/// `WorldSeed::build` consumes the root RNG stream in EXACTLY the order
+/// `World::build` always has (fork 1 → base init, 2 → corpus, 3 →
+/// partition, 9 → pairs, 4 → LoRA init), so a seed-built world is
+/// bitwise-identical to a session-built one.
+pub struct WorldSeed {
+    /// Model parameter schema (manifest-loaded, or [`Schema::synthetic`]).
+    pub schema: Arc<Schema>,
+    /// Host copy of the frozen base weights (random init, or the
+    /// checkpoint overlay when `cfg.base_checkpoint` is set).
+    pub base_host: Vec<f32>,
+    /// Synthetic training corpus.
+    pub ds: Dataset,
+    /// Corpus shape parameters (vocab, sequence length, …).
+    pub ccfg: corpus::CorpusCfg,
+    /// Preference pairs (DPO only; empty otherwise).
+    pub pairs: Vec<preference::PrefPair>,
+    /// Per-client sample-index partition.
+    pub parts: Vec<Vec<usize>>,
+    /// Per-parameter LoRA matrix family (A or B).
+    pub kinds: Arc<Vec<LoraKind>>,
+    /// Kind-wise index over the flat LoRA vector (wire codec input).
+    pub kidx: Arc<KindIndex>,
+    /// Initial LoRA vector every client starts from.
+    pub lora_init: Vec<f32>,
+    /// Root RNG, positioned just after the setup forks (see module docs).
+    pub rng: Rng,
+}
+
+impl WorldSeed {
+    /// Build the session-free world kernel. The fork order here is
+    /// load-bearing — see module docs before touching it.
+    pub fn build(cfg: &FedConfig) -> Result<WorldSeed> {
         let mut rng = Rng::new(cfg.seed);
-        let mut session = Session::new(&cfg.artifacts_dir, &cfg.preset, &mut rng.fork(1))?;
+        // fork(1) historically fed `Session::new`, which drew the base
+        // init from it before the checkpoint overlay — replicated here
+        // byte-for-byte so the stream position is unchanged.
+        let schema = if cfg.preset == "synthetic" {
+            Schema::synthetic()
+        } else {
+            Schema::load(&cfg.artifacts_dir, &cfg.preset)?
+        };
+        let mut base_host = schema.init_base(&mut rng.fork(1));
         if let Some(ckpt) = &cfg.base_checkpoint {
-            session.load_base(ckpt)?;
+            let bytes = std::fs::read(ckpt)?;
+            anyhow::ensure!(bytes.len() == 4 * schema.base_total, "checkpoint size");
+            base_host = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+                .collect();
         }
-        let mcfg = &session.schema.config;
+        let mcfg = &schema.config;
         let ccfg = corpus::CorpusCfg::new(mcfg.vocab, mcfg.seq_len, 8);
         let ds = corpus::generate(&mut rng.fork(2), cfg.n_samples, ccfg);
         let parts = data::partition_dataset(&ds, cfg.partition, cfg.n_clients, &mut rng.fork(3));
@@ -101,33 +149,87 @@ impl World {
             vec![]
         };
 
-        let kinds = Arc::new(session.schema.kind_map());
+        let kinds = Arc::new(schema.kind_map());
         let kidx = Arc::new(KindIndex::new(&kinds));
-        let lora_init = session.schema.init_lora(&mut rng.fork(4));
+        let lora_init = schema.init_lora(&mut rng.fork(4));
 
+        Ok(WorldSeed {
+            schema: Arc::new(schema),
+            base_host,
+            ds,
+            ccfg,
+            pairs,
+            parts,
+            kinds,
+            kidx,
+            lora_init,
+            rng,
+        })
+    }
+
+    /// Fresh state for client `ci` — identical whether built eagerly (the
+    /// monolithic runner) or lazily on first task (cluster participants
+    /// and mux lanes). Pure: consumes no shared randomness, so the order
+    /// clients first appear in cannot perturb any stream.
+    pub fn client_state(&self, cfg: &FedConfig, ci: usize) -> ClientState {
+        client_state_from(&self.parts, self.pairs.len(), &self.lora_init,
+                          &self.kinds, &self.kidx, cfg, ci)
+    }
+
+    /// FedAvg weights n_i for every client (sampling + aggregation).
+    pub fn client_weights(&self) -> Vec<f64> {
+        self.parts.iter().map(|p| p.len().max(1) as f64).collect()
+    }
+}
+
+/// Shared body of `WorldSeed::client_state` / `World::client_state` — one
+/// implementation so the eager, lazy-thread, and mux-lane paths cannot
+/// drift.
+fn client_state_from(
+    parts: &[Vec<usize>],
+    n_pairs: usize,
+    lora_init: &[f32],
+    kinds: &Arc<Vec<LoraKind>>,
+    kidx: &Arc<KindIndex>,
+    cfg: &FedConfig,
+    ci: usize,
+) -> ClientState {
+    let indices = parts[ci].clone();
+    let n_samples = indices.len().max(1);
+    let pref_indices: Vec<usize> = if cfg.dpo {
+        (0..n_pairs).filter(|p| p % cfg.n_clients == ci).collect()
+    } else {
+        vec![]
+    };
+    ClientState {
+        lora: lora_init.to_vec(),
+        tau: 0,
+        comp: cfg
+            .eco
+            .map(|e| Compressor::new(e.spars, e.encoding, kinds.clone(), kidx.clone())),
+        data: ClientData::new(indices),
+        pref_indices,
+        n_samples,
+    }
+}
+
+impl World {
+    /// Build the world. The fork order is load-bearing — see module docs
+    /// (the stream consumption lives in [`WorldSeed::build`] now; this
+    /// merely layers the PJRT session on top).
+    pub fn build(cfg: &FedConfig) -> Result<World> {
+        let seed = WorldSeed::build(cfg)?;
+        let engine = Arc::new(crate::runtime::Engine::new(&cfg.artifacts_dir)?);
+        let session = Session::from_seed(engine, &seed)?;
+        let WorldSeed { ds, ccfg, pairs, parts, kinds, kidx, lora_init, rng, .. } = seed;
         Ok(World { session, ds, ccfg, pairs, parts, kinds, kidx, lora_init, rng })
     }
 
     /// Fresh state for client `ci` — identical whether built eagerly (the
     /// monolithic runner) or lazily on first task (cluster participants).
     pub fn client_state(&self, cfg: &FedConfig, ci: usize) -> ClientState {
-        let indices = self.parts[ci].clone();
-        let n_samples = indices.len().max(1);
-        let pref_indices: Vec<usize> = if cfg.dpo {
-            (0..self.pairs.len()).filter(|p| p % cfg.n_clients == ci).collect()
-        } else {
-            vec![]
-        };
-        ClientState {
-            lora: self.lora_init.clone(),
-            tau: 0,
-            comp: cfg
-                .eco
-                .map(|e| Compressor::new(e.spars, e.encoding, self.kinds.clone(), self.kidx.clone())),
-            data: ClientData::new(indices),
-            pref_indices,
-            n_samples,
-        }
+        client_state_from(&self.parts, self.pairs.len(), &self.lora_init,
+                          &self.kinds, &self.kidx, cfg, ci)
     }
 
     /// FedAvg weights n_i for every client (sampling + aggregation).

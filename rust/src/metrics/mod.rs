@@ -90,6 +90,19 @@ pub struct RoundRecord {
     /// Worker connections re-admitted into a previously-dropped slot
     /// during this round (multi-process rejoins; see `cluster::deploy`).
     pub worker_rejoins: usize,
+    /// Total simulated client population N (the mux plane decouples this
+    /// from per-round cost; the monolithic runner reports `n_clients`).
+    pub population: usize,
+    /// Tasks successfully dispatched this round (initial cohort plus
+    /// resample waves) — the denominator of the O(active cohort) claim.
+    pub active_cohort: usize,
+    /// Mux compute-pool threads (0 for the threads plane, the monolithic
+    /// runner, and multi-process serve coordinators).
+    pub mux_workers: usize,
+    /// Coordinator scheduling wall-milliseconds this round: sampling,
+    /// downlink build, dispatch, resample waves, and round close. Must
+    /// stay O(active cohort), not O(population).
+    pub sched_ms: f64,
 }
 
 /// Full training telemetry.
@@ -221,12 +234,12 @@ impl RunLog {
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins\n",
+            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins,population,active_cohort,mux_workers,sched_ms\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{}",
+                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{},{},{},{},{:.4}",
                 r.round,
                 r.global_loss,
                 r.eval_acc.map_or(String::from(""), |a| format!("{a:.4}")),
@@ -253,6 +266,10 @@ impl RunLog {
                 r.seg_uncovered,
                 r.worker_drops,
                 r.worker_rejoins,
+                r.population,
+                r.active_cohort,
+                r.mux_workers,
+                r.sched_ms,
             );
         }
         s
@@ -387,11 +404,31 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",4,12.5000,7,2,1,3,2"), "{row}");
+        assert!(row.ends_with(",4,12.5000,7,2,1,3,2,0,0,0,0.0000"), "{row}");
         assert_eq!(log.max_shard_agg_ms(), 12.5);
         assert_eq!(log.total_late_evicted(), 2);
         assert_eq!(log.total_worker_drops(), 3);
         assert_eq!(log.total_worker_rejoins(), 2);
+    }
+
+    #[test]
+    fn client_plane_columns_round_trip_through_csv() {
+        let mut log = RunLog::new("t");
+        log.push(RoundRecord {
+            round: 0,
+            population: 100_000,
+            active_cohort: 64,
+            mux_workers: 8,
+            sched_ms: 3.25,
+            ..Default::default()
+        });
+        let csv = log.to_csv();
+        let header = csv.lines().next().unwrap();
+        for col in ["population", "active_cohort", "mux_workers", "sched_ms"] {
+            assert!(header.contains(col), "missing column {col}");
+        }
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",100000,64,8,3.2500"), "{row}");
     }
 
     #[test]

@@ -183,6 +183,58 @@ impl Schema {
         Ok(schema)
     }
 
+    /// Manifest-free schema for the session-free scale path
+    /// (`--preset synthetic`): no artifact files on disk and no compiled
+    /// entry points, so a `WorldSeed` can be built without PJRT and a
+    /// single host can simulate 10⁴–10⁶ clients through the mux plane.
+    /// Shapes are transformer-plausible and `lora_total` = 4096 is large
+    /// enough to exercise segment round-robin, adaptive top-k, and the
+    /// Golomb wire codec realistically.
+    pub fn synthetic() -> Schema {
+        let (d, r) = (64usize, 8usize);
+        let mut lora_tensors = Vec::new();
+        let mut off = 0;
+        for layer in 0..2i64 {
+            for (proj, kind) in [("q", LoraKind::A), ("q", LoraKind::B),
+                                 ("v", LoraKind::A), ("v", LoraKind::B)] {
+                let (suffix, shape, init) = match kind {
+                    LoraKind::A => ("a", vec![d, r], "normal"),
+                    LoraKind::B => ("b", vec![r, d], "zeros"),
+                };
+                let size = shape.iter().product();
+                lora_tensors.push(TensorSpec {
+                    name: format!("layer{layer}.{proj}_{suffix}"),
+                    shape,
+                    offset: off,
+                    size,
+                    init: init.into(),
+                    kind: Some(kind),
+                    layer,
+                });
+                off += size;
+            }
+        }
+        let schema = Schema {
+            preset: "synthetic".into(),
+            init_std: 0.02,
+            config: ModelConfig {
+                vocab: 64, d_model: d, n_layers: 2, n_heads: 4, d_ff: 128,
+                seq_len: 16, rank: r, lora_alpha: 16.0, lora_scale: 2.0,
+                batch: 4, eval_batch: 8,
+            },
+            base_total: 256,
+            lora_total: off,
+            base_tensors: vec![TensorSpec {
+                name: "embed".into(), shape: vec![256], offset: 0, size: 256,
+                init: "normal".into(), kind: None, layer: -1,
+            }],
+            lora_tensors,
+            artifacts: Default::default(),
+        };
+        debug_assert!(schema.validate().is_ok());
+        schema
+    }
+
     /// Layout invariants: contiguity and totals.
     pub fn validate(&self) -> Result<()> {
         for (tensors, total, fam) in [
@@ -339,6 +391,23 @@ mod tests {
                              init: "zeros".into(), kind: Some(LoraKind::B), layer: 0 },
             ],
             artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn synthetic_schema_validates_with_mixed_kinds() {
+        let s = Schema::synthetic();
+        s.validate().unwrap();
+        assert_eq!(s.lora_total, 4096);
+        assert!(s.artifacts.is_empty(), "synthetic has no compiled entry points");
+        let km = s.kind_map();
+        assert!(km.iter().any(|&k| k == LoraKind::A));
+        assert!(km.iter().any(|&k| k == LoraKind::B));
+        // LoRA identity init: A ~ N(0, std), B = 0
+        let flat = s.init_lora(&mut Rng::new(0));
+        assert!(flat.iter().any(|&x| x != 0.0));
+        for (t, k) in s.lora_tensors.iter().zip([LoraKind::A, LoraKind::B].iter().cycle()) {
+            assert_eq!(t.kind, Some(*k));
         }
     }
 

@@ -140,15 +140,28 @@ impl Rng {
     }
 
     /// Sample `k` distinct indices from [0, n) (k <= n).
+    ///
+    /// Sparse Fisher–Yates: instead of materializing the full `0..n`
+    /// index array (O(n) — ruinous when n is a 10⁵–10⁶ client population
+    /// and k is a small cohort), only the displaced positions live in a
+    /// hash map. Draw count and draw arguments (`below(n - i)`) are
+    /// identical to the dense version, so the output sequence and the
+    /// post-call RNG state are bitwise-unchanged — cohort sampling parity
+    /// across releases depends on that.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n);
-        let mut idx: Vec<usize> = (0..n).collect();
+        let mut displaced: std::collections::HashMap<usize, usize> = Default::default();
+        let mut out = Vec::with_capacity(k);
         for i in 0..k {
             let j = i + self.below(n - i);
-            idx.swap(i, j);
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            out.push(vj);
+            // position i is never revisited (future draws start at i+1),
+            // so only slot j needs the swapped-in value recorded.
+            displaced.insert(j, vi);
         }
-        idx.truncate(k);
-        idx
+        out
     }
 }
 
@@ -224,6 +237,27 @@ mod tests {
             u.dedup();
             assert_eq!(u.len(), 10);
             assert!(s.iter().all(|&i| i < 100));
+        }
+    }
+
+    #[test]
+    fn sample_indices_matches_dense_fisher_yates() {
+        // Reference: the historical O(n) implementation. The sparse
+        // rewrite must reproduce both its output and its RNG consumption.
+        fn dense(r: &mut Rng, n: usize, k: usize) -> Vec<usize> {
+            let mut idx: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + r.below(n - i);
+                idx.swap(i, j);
+            }
+            idx.truncate(k);
+            idx
+        }
+        for (n, k) in [(1, 1), (5, 5), (10, 3), (100, 10), (1000, 32), (4096, 1)] {
+            let mut a = Rng::new(1234 + n as u64);
+            let mut b = a.clone();
+            assert_eq!(a.sample_indices(n, k), dense(&mut b, n, k), "n={n} k={k}");
+            assert_eq!(a.state(), b.state(), "RNG consumption must match at n={n} k={k}");
         }
     }
 

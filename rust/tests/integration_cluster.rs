@@ -17,12 +17,13 @@ use std::time::{Duration, Instant};
 use ecolora::cluster::router::RoutedAdd;
 use ecolora::cluster::shard::Payload;
 use ecolora::cluster::{
-    self, AggStats, ClusterMode, ClusterOptions, FaultSpec, FoldCtx, LateBuffer, RoundPolicy,
-    Router, SimProfile,
+    self, AggStats, ClientPlane, ClusterMode, ClusterOptions, ControlPlane, EngineCache,
+    FaultSpec, FoldCtx, LateBuffer, RoundPolicy, Router, SimProfile, LATE_BUFFER_MAX_BYTES,
 };
 use ecolora::cluster::protocol::{TrainResult, UpPayload};
 use ecolora::compress::{wire, Encoding, KindIndex, SparseVec};
 use ecolora::fed::server::SegmentAggregator;
+use ecolora::fed::world::{self, WorldSeed};
 use ecolora::fed::{round_robin, sampling, staleness, EcoConfig, FedConfig, FedOutcome, FedRunner};
 use ecolora::metrics::CommTotals;
 use ecolora::model::LoraKind;
@@ -54,6 +55,10 @@ fn assert_bitwise_equal(mono: &FedOutcome, clus: &FedOutcome, what: &str) {
         assert_eq!(mr.down, cr.down, "{what}: downlink accounting r{}", mr.round);
         assert_eq!(mr.eval_acc, cr.eval_acc, "{what}: eval r{}", mr.round);
         assert_eq!(mr.k_a, cr.k_a, "{what}: k_a r{}", mr.round);
+        // deterministic client-plane columns (mux_workers/sched_ms are
+        // host-local timing facts and deliberately excluded)
+        assert_eq!(mr.population, cr.population, "{what}: population r{}", mr.round);
+        assert_eq!(mr.active_cohort, cr.active_cohort, "{what}: active_cohort r{}", mr.round);
     }
 }
 
@@ -784,4 +789,276 @@ fn shard_parallel_aggregation_beats_single_shard_wall_clock() {
             wall_one * 1e3,
         );
     }
+}
+
+// ---- client plane: mux vs threads (PJRT-gated) -----------------------------
+
+fn plane_opts(workers: usize, plane: ClientPlane) -> ClusterOptions {
+    ClusterOptions { client_plane: plane, ..mem_opts(workers) }
+}
+
+#[test]
+fn mux_plane_matches_threads_plane_and_monolith_bitwise_under_sync() {
+    if !have_artifacts() {
+        return;
+    }
+    // the tentpole acceptance criterion: the event-driven mux plane is
+    // bitwise-invisible — mux == threads == the monolithic reference,
+    // with stateful sparse downlinks and error feedback across rounds
+    let mk = || {
+        let mut cfg = base_cfg();
+        cfg.rounds = 2;
+        cfg.eco = Some(EcoConfig { n_s: 3, ..Default::default() });
+        cfg
+    };
+    let mono = FedRunner::new(mk()).unwrap().run().unwrap();
+    let threads = cluster::run(mk(), &plane_opts(3, ClientPlane::Threads)).unwrap();
+    let mux = cluster::run(mk(), &plane_opts(3, ClientPlane::Mux)).unwrap();
+    assert_bitwise_equal(&mono, &threads.fed, "mono vs threads plane");
+    assert_bitwise_equal(&threads.fed, &mux.fed, "threads vs mux plane");
+    // the compute-pool width is a pure throughput knob: one compute
+    // thread must produce the same bits as the default pool
+    let narrow = cluster::run(
+        mk(),
+        &ClusterOptions { mux_workers: Some(1), ..plane_opts(3, ClientPlane::Mux) },
+    )
+    .unwrap();
+    assert_bitwise_equal(&mux.fed, &narrow.fed, "mux pool default vs 1");
+    for r in &mux.fed.log.rounds {
+        assert!(r.mux_workers >= 1, "mux rounds report the resolved pool width");
+    }
+    for r in &threads.fed.log.rounds {
+        assert_eq!(r.mux_workers, 0, "threads rounds report no mux pool");
+    }
+}
+
+#[test]
+fn mux_plane_matches_threads_plane_under_quorum_with_straggler() {
+    if !have_artifacts() {
+        return;
+    }
+    // same scenario as the shard-invariance quorum test: client 1's
+    // injected sleep makes client 3 (behind it on the same lane/worker)
+    // the straggler every round. Lane ownership is ci % n_workers on
+    // both planes and the mux keeps per-lane FIFO, so the straggler
+    // pattern — and every deterministic column — must agree bitwise.
+    let mk = || {
+        let mut cfg = base_cfg();
+        cfg.n_clients = 4;
+        cfg.clients_per_round = 4;
+        cfg.rounds = 3;
+        cfg.sampling = sampling::Sampling::RoundRobinCohorts;
+        cfg.eco = Some(EcoConfig::default());
+        cfg
+    };
+    let opts = |plane| ClusterOptions {
+        fault: Some(FaultSpec { client: 1, delay: Duration::from_millis(1_500) }),
+        client_plane: plane,
+        ..quorum_opts(2, 0.75, 600_000)
+    };
+    let threads = cluster::run(mk(), &opts(ClientPlane::Threads)).unwrap();
+    let mux = cluster::run(mk(), &opts(ClientPlane::Mux)).unwrap();
+    assert_bitwise_equal(&threads.fed, &mux.fed, "quorum threads vs mux");
+    for (ra, rb) in threads.fed.log.rounds.iter().zip(&mux.fed.log.rounds) {
+        assert_eq!(ra.stragglers, rb.stragglers, "straggler pattern invariant");
+        assert_eq!(ra.late_folds, rb.late_folds, "fold pattern invariant");
+    }
+    assert!(mux.fed.log.total_late_folds() > 0, "the scenario exercises late folds");
+}
+
+#[test]
+fn shared_engine_cache_matches_private_sessions_bitwise() {
+    if !have_artifacts() {
+        return;
+    }
+    // the session-pool property: two clients trained through ONE cached
+    // engine/session produce the same bits as two clients with fully
+    // private engines — the cache is a resource optimization, never a
+    // semantic one
+    let cfg = base_cfg();
+    let seed = Arc::new(WorldSeed::build(&cfg).unwrap());
+    let mask_host = cfg.method.grad_mask(&seed.schema);
+
+    let mut private = Vec::new();
+    for ci in [0usize, 1] {
+        let engine = Arc::new(ecolora::runtime::Engine::new(&cfg.artifacts_dir).unwrap());
+        let session = ecolora::fed::session::Session::from_seed(engine, &seed).unwrap();
+        let mask = session.upload_mask(&mask_host).unwrap();
+        let mut client = seed.client_state(&cfg, ci);
+        let mut rng = Rng::new(cfg.seed).fork(world::batch_salt(cfg.dpo, 0, ci));
+        let (lora, loss) = world::local_train(
+            &session, &cfg, &seed.ds, &seed.pairs, &mut client,
+            seed.lora_init.clone(), &mut rng, &mask,
+        )
+        .unwrap();
+        private.push((lora, loss));
+    }
+
+    let cache = EngineCache::new(&cfg, seed.clone()).unwrap();
+    for (ci, (want_lora, want_loss)) in private.iter().enumerate() {
+        let lease = cache.checkout().unwrap();
+        let mut client = seed.client_state(&cfg, ci);
+        let mut rng = Rng::new(cfg.seed).fork(world::batch_salt(cfg.dpo, 0, ci));
+        let (lora, loss) = world::local_train(
+            &lease.session, &cfg, &seed.ds, &seed.pairs, &mut client,
+            seed.lora_init.clone(), &mut rng, &lease.mask,
+        )
+        .unwrap();
+        assert_eq!(lora.len(), want_lora.len());
+        for (i, (a, b)) in want_lora.iter().zip(&lora).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "client {ci}: shared vs private lora[{i}]");
+        }
+        assert_eq!(want_loss.to_bits(), loss.to_bits(), "client {ci}: loss");
+    }
+    let stats = cache.stats();
+    assert_eq!(stats.misses, 1, "one session constructed");
+    assert_eq!(stats.hits, 1, "the second client reused it");
+    assert_eq!(cache.idle_sessions(), 1);
+}
+
+// ---- synthetic scale plane (no PJRT needed) --------------------------------
+
+#[test]
+fn synthetic_mux_plane_runs_end_to_end_and_is_worker_count_invariant() {
+    // the artifact-free scale path: a full cluster run over the mux
+    // plane with the synthetic trainer, deterministic across compute
+    // topologies (worker/lane count AND mux pool width)
+    let mk = || {
+        let mut cfg = FedConfig::synthetic_profile(200);
+        cfg.clients_per_round = 16;
+        cfg
+    };
+    let opts = |workers, pool| ClusterOptions {
+        workers: Some(workers),
+        mux_workers: pool,
+        ..Default::default()
+    };
+    let two = cluster::run(mk(), &opts(2, Some(1))).unwrap();
+    let five = cluster::run(mk(), &opts(5, Some(3))).unwrap();
+    assert_bitwise_equal(&two.fed, &five.fed, "synthetic 2 vs 5 lanes");
+    assert_eq!(two.fed.log.rounds.len(), 2);
+    for r in &two.fed.log.rounds {
+        assert_eq!(r.population, 200);
+        assert_eq!(r.active_cohort, 16);
+        assert_eq!(r.cohort, 16);
+        assert!(r.global_loss.is_finite() && r.global_loss > 0.0, "{r:?}");
+        assert!(r.up.bytes > 0, "sparse uplinks carry real wire traffic");
+        assert!(r.down.bytes > 0);
+        assert!(r.sched_ms >= 0.0);
+    }
+    assert!(two.fed.final_acc.is_nan(), "synthetic runs have no eval model");
+    assert!(two.fed.final_lora.iter().any(|&x| x != 0.0), "training moved the global");
+}
+
+#[test]
+fn synthetic_preset_refuses_the_threads_plane() {
+    let cfg = FedConfig::synthetic_profile(32);
+    let err = cluster::run(
+        cfg,
+        &ClusterOptions {
+            workers: Some(2),
+            client_plane: ClientPlane::Threads,
+            ..Default::default()
+        },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("mux"), "unexpected error: {err:#}");
+}
+
+#[test]
+fn late_admission_meter_evicts_deterministically_past_byte_cap() {
+    // satellite: the global straggler admission meter. Flood it past
+    // LATE_BUFFER_MAX_BYTES and every overflow arrival must be refused
+    // AND counted — a function of arrival order alone, so the eviction
+    // set is identical at any shard count or client-plane choice.
+    let cfg = FedConfig::synthetic_profile(8);
+    let mut control = ControlPlane::new(cfg, RoundPolicy::Sync).unwrap();
+    // dense payloads cost 4 bytes/param: four of these fill the cap
+    let params = LATE_BUFFER_MAX_BYTES / 4 / 4;
+    let mk = |slot: u32| TrainResult {
+        round: 0,
+        slot,
+        client: slot % 8,
+        segment: 0,
+        n_samples: 1,
+        mean_loss: 1.0,
+        k_a: 0.5,
+        k_b: 0.5,
+        exec_s: 0.0,
+        stale_from_round: 0,
+        up: UpPayload::DenseUpdate(vec![0.0; params]),
+    };
+    for slot in 0..4 {
+        assert!(control.accept_late(mk(slot)).is_some(), "slot {slot} fits under the cap");
+        assert_eq!(control.late_evicted(), 0);
+    }
+    for (i, slot) in (4..10).enumerate() {
+        assert!(control.accept_late(mk(slot)).is_none(), "slot {slot} must be evicted");
+        assert_eq!(control.late_evicted(), i + 1, "each overflow increments the meter");
+    }
+    // a tiny arrival still fails once the budget is exactly exhausted
+    let tiny = TrainResult { up: UpPayload::DenseUpdate(vec![0.0; 1]), ..mk(10) };
+    assert!(control.accept_late(tiny).is_none());
+    assert_eq!(control.late_evicted(), 7);
+}
+
+// ---- gated scale smoke (ECOLORA_SCALE_TESTS=1) -----------------------------
+
+fn scale_tests_enabled() -> bool {
+    std::env::var("ECOLORA_SCALE_TESTS").map_or(false, |v| v == "1")
+}
+
+#[test]
+fn scale_smoke_100k_clients_two_rounds() {
+    if !scale_tests_enabled() {
+        return;
+    }
+    let t0 = Instant::now();
+    let out = cluster::run(
+        FedConfig::synthetic_profile(100_000),
+        &ClusterOptions { workers: Some(8), ..Default::default() },
+    )
+    .unwrap();
+    let wall = t0.elapsed();
+    assert_eq!(out.fed.log.rounds.len(), 2);
+    for r in &out.fed.log.rounds {
+        assert_eq!(r.population, 100_000);
+        assert_eq!(r.active_cohort, 64);
+        assert!(r.global_loss.is_finite());
+    }
+    assert!(
+        wall < Duration::from_secs(300),
+        "100k-client smoke must stay inside the CI budget: took {wall:?}"
+    );
+}
+
+#[test]
+fn scale_sched_cost_is_o_active_cohort_not_o_population() {
+    if !scale_tests_enabled() {
+        return;
+    }
+    // the O(active cohort) acceptance criterion: doubling the INACTIVE
+    // population must not move per-round scheduling cost by more than
+    // 10%. Medians over several rounds damp scheduler noise.
+    let run = |population: usize| {
+        let mut cfg = FedConfig::synthetic_profile(population);
+        cfg.rounds = 7;
+        cluster::run(cfg, &ClusterOptions { workers: Some(8), ..Default::default() }).unwrap()
+    };
+    let median_sched = |out: &cluster::ClusterOutcome| {
+        // skip round 0 (lazy per-client state and wire scratch warm up)
+        let mut xs: Vec<f64> =
+            out.fed.log.rounds.iter().skip(1).map(|r| r.sched_ms).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        xs[xs.len() / 2]
+    };
+    let small = run(100_000);
+    let large = run(200_000);
+    let (s, l) = (median_sched(&small), median_sched(&large));
+    assert!(s > 0.0 && l > 0.0, "sched_ms must be measured ({s} vs {l})");
+    assert!(
+        l < s * 1.10 + 1.0,
+        "doubling the inactive population moved median sched_ms {s:.3} -> {l:.3} \
+         (>10% + 1ms slack): scheduling is not O(active cohort)"
+    );
 }

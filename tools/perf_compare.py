@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_hotpath.json against the committed baseline.
+
+Usage:
+    python3 tools/perf_compare.py BASELINE CURRENT [--threshold 0.15]
+
+Fails (exit 1) when any bench present in both files regresses its
+`ns_per_elem` by more than the threshold (default 15%). Benches without
+`ns_per_elem` (e.g. the PJRT steps, which carry no element count) and
+benches present in only one file are reported but never gate.
+
+The baseline may be a *pending marker* — schema-valid JSON with an empty
+`results` array and a `"pending"` key — committed when no trustworthy
+machine was available to measure on. A pending baseline passes with a
+notice; refresh it with:
+
+    cd rust && ECOLORA_BENCH_QUICK=1 cargo bench --bench hotpath \
+        && cp BENCH_hotpath.json ../BENCH_hotpath.json
+
+Stdlib only: no pip, no network.
+"""
+
+import argparse
+import json
+import sys
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("bench") != "hotpath" or doc.get("schema") != 1:
+        sys.exit(f"{path}: not a schema-1 hotpath bench report")
+    return doc
+
+
+def by_name(doc):
+    return {r["name"]: r for r in doc.get("results", [])}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="allowed fractional ns_per_elem growth (default 0.15)")
+    args = ap.parse_args()
+
+    base_doc = load(args.baseline)
+    cur_doc = load(args.current)
+
+    if not base_doc.get("results"):
+        note = base_doc.get("pending", "no results recorded")
+        print(f"perf_compare: baseline is pending ({note}); nothing to gate.")
+        print("perf_compare: refresh the baseline per the header of this script.")
+        return 0
+
+    base = by_name(base_doc)
+    cur = by_name(cur_doc)
+    if not cur:
+        sys.exit(f"{args.current}: empty results — the bench did not run")
+
+    regressions, compared = [], 0
+    for name in sorted(base.keys() | cur.keys()):
+        b, c = base.get(name), cur.get(name)
+        if b is None or c is None:
+            side = "baseline" if b is None else "current run"
+            print(f"  [skip] {name}: missing from {side}")
+            continue
+        if "ns_per_elem" not in b or "ns_per_elem" not in c:
+            print(f"  [skip] {name}: no ns_per_elem (not gated)")
+            continue
+        compared += 1
+        ratio = c["ns_per_elem"] / b["ns_per_elem"]
+        verdict = "FAIL" if ratio > 1.0 + args.threshold else "ok"
+        print(f"  [{verdict:>4}] {name}: {b['ns_per_elem']:.3f} -> "
+              f"{c['ns_per_elem']:.3f} ns/elem ({ratio - 1.0:+.1%} vs baseline)")
+        if verdict == "FAIL":
+            regressions.append(name)
+
+    if compared == 0:
+        sys.exit("perf_compare: no common ns_per_elem benches — baseline and "
+                 "current are incomparable")
+    if regressions:
+        print(f"perf_compare: {len(regressions)} bench(es) regressed "
+              f">{args.threshold:.0%}: {', '.join(regressions)}")
+        return 1
+    print(f"perf_compare: {compared} benches within {args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
