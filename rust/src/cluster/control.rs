@@ -57,6 +57,7 @@ use crate::fed::{round_robin, EcoConfig, FedConfig, FedOutcome};
 use crate::metrics::{sparsity_snapshot, RoundRecord, RunLog};
 use crate::runtime::Engine;
 
+use super::journal;
 use super::protocol::{DownPayload, TrainResult, TrainTask, UpPayload};
 use super::router::{GatheredAgg, RoutedAdd};
 use super::shard::{self, Payload};
@@ -347,6 +348,20 @@ impl ControlPlane {
     /// Current global LoRA vector.
     pub fn global_lora(&self) -> &[f32] {
         &self.global
+    }
+
+    /// Raw position of the root world RNG stream. Journaled at every
+    /// round open so `serve --resume` can prove replay re-advanced the
+    /// deterministic sampling/init/batch streams to the exact positions
+    /// the crashed coordinator had.
+    pub fn rng_state(&self) -> [u64; 4] {
+        self.seed.rng.state()
+    }
+
+    /// FNV-1a-64 digest of the global LoRA bit pattern (journal
+    /// round-close records; proves replay rebuilt the same model).
+    pub fn global_digest(&self) -> u64 {
+        journal::digest_f32(&self.global)
     }
 
     /// The round-close policy this control plane runs under.

@@ -38,6 +38,7 @@
 //! process holds the slot, and every result is a pure function of
 //! (world, client state, task) — see `fed::world`.
 
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -47,12 +48,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::fed::FedConfig;
-use crate::metrics::RunLog;
+use crate::metrics::{RoundRecord, RunLog};
 use crate::netsim::RoundTiming;
 use crate::util::lock_unpoisoned;
 
-use super::control::{ControlPlane, Phase};
+use super::control::{ControlPlane, Phase, RoundPolicy};
 use super::handshake::{self, Admission, AuthToken, HandshakeSpec, Rejected};
+use super::journal::{self, Record};
 use super::netshim::Meter;
 use super::participant::{self, Participant};
 use super::protocol::{Envelope, Message, MsgKind, RejectCode};
@@ -602,16 +604,55 @@ pub(crate) struct DriveOutcome {
     pub(crate) timings: Vec<RoundTiming>,
 }
 
+/// Durability controls for one [`drive_rounds`] invocation: the journal
+/// writer (if any), where the live loop starts, and the state a
+/// `--resume` replay already rebuilt. [`DriveCtl::fresh`] is the plain
+/// journal-less run every in-process caller wants.
+pub(crate) struct DriveCtl {
+    /// Append-only round journal; `None` disables journaling.
+    pub(crate) journal: Option<journal::JournalWriter>,
+    /// First round the live loop dispatches (0 for a fresh run; the
+    /// round after the last journaled close under `--resume`).
+    pub(crate) start_round: usize,
+    /// Round log rebuilt by journal replay (`None` for a fresh run).
+    pub(crate) resumed_log: Option<RunLog>,
+    /// Round at which `target_acc` was reached during replay, if it was
+    /// (the live loop then has nothing left to do).
+    pub(crate) reached: Option<usize>,
+    /// Crash-test hook (`--hold-after-dispatch N`): after round N's
+    /// initial dispatch is journaled and flushed, print a marker and
+    /// hang forever — a deterministic SIGKILL target for the recovery
+    /// integration tests.
+    pub(crate) hold_after_dispatch: Option<u64>,
+}
+
+impl DriveCtl {
+    /// A journal-less, non-resumed drive (in-process runs, plain serve).
+    pub(crate) fn fresh() -> DriveCtl {
+        DriveCtl {
+            journal: None,
+            start_round: 0,
+            resumed_log: None,
+            reached: None,
+            hold_after_dispatch: None,
+        }
+    }
+}
+
 /// Drive every round of a run over `pool` (see module docs): the one
 /// loop behind both the in-process cluster and the multi-process serve
 /// path. `resume_round`, when given, is kept at the round currently
-/// being dispatched so rejoin `Welcome`s can report it.
+/// being dispatched so rejoin `Welcome`s can report it. `ctl` carries
+/// the durability state: the journal writer appended at every round
+/// state transition, and — under `serve --resume` — the replayed log
+/// and the round the live loop picks up from.
 pub(crate) fn drive_rounds(
     control: &mut ControlPlane,
     router: &mut Router,
     pool: &mut WorkerPool,
     opts: &ClusterOptions,
     resume_round: Option<&AtomicU64>,
+    ctl: DriveCtl,
 ) -> Result<DriveOutcome> {
     let n_workers = pool.n();
     let n_shards = opts.shards.max(1);
@@ -620,11 +661,14 @@ pub(crate) fn drive_rounds(
     // whose client plane lives in other processes)
     let mux_workers = opts.mux_workers.unwrap_or(0);
     let label = control.cfg.run_label();
-    let mut log = RunLog::new(label.clone());
-    let mut reached: Option<usize> = None;
+    let mut jw = ctl.journal;
+    let mut log = ctl.resumed_log.unwrap_or_else(|| RunLog::new(label.clone()));
+    let mut reached: Option<usize> = ctl.reached;
     let mut timings = Vec::new();
+    // a replay that already hit target_acc leaves nothing to drive
+    let first = if reached.is_some() { control.cfg.rounds } else { ctl.start_round };
 
-    for t in 0..control.cfg.rounds {
+    for t in first..control.cfg.rounds {
         if let Some(r) = resume_round {
             r.store(t as u64, Ordering::Relaxed);
         }
@@ -650,6 +694,15 @@ pub(crate) fn drive_rounds(
         // successful task dispatches this round (initial + resample waves)
         let mut active_cohort = 0usize;
         let alive_now: Vec<bool> = (0..n_workers).map(|w| pool.is_alive(w)).collect();
+        // the RNG stream position is journaled BEFORE begin_round
+        // advances it, so replay can prove it re-enters the round from
+        // the exact same stream state
+        if let Some(j) = jw.as_mut() {
+            j.append(
+                t as u64,
+                &Record::RoundOpen { rng_state: control.rng_state(), alive: alive_now.clone() },
+            )?;
+        }
         let (mut rs, tasks) = control.begin_round(t as u64, n_workers, &alive_now)?;
         router.begin_round(t as u64, rs.n_s)?;
         // Which (worker, generation) each slot's task went to: a slot can
@@ -659,11 +712,18 @@ pub(crate) fn drive_rounds(
         for (w, task) in tasks {
             let slot = task.slot as usize;
             let client = task.client;
-            let stateful = task.down_seq > 0;
+            let down_seq = task.down_seq;
+            let stateful = down_seq > 0;
             let gen = pool.generation(w);
             if pool.send(w, &Message::TrainTask(task)) {
                 inflight[slot].push((w, gen));
                 active_cohort += 1;
+                if let Some(j) = jw.as_mut() {
+                    j.append(
+                        t as u64,
+                        &Record::Dispatch { slot: slot as u32, client, worker: w as u32, down_seq },
+                    )?;
+                }
             } else if sync {
                 bail!(
                     "cluster: worker {w} is down and RoundPolicy::Sync cannot resample \
@@ -679,11 +739,25 @@ pub(crate) fn drive_rounds(
                          worker died before the send; excluding the client for the \
                          rest of the run"
                     );
+                    if let Some(j) = jw.as_mut() {
+                        j.append(t as u64, &Record::DownlinkLost { client })?;
+                    }
                     control.downlink_lost(client);
                 }
             }
         }
         sched_ms += sched_t0.elapsed().as_secs_f64() * 1e3;
+        // crash-test hook: everything above is journaled and flushed;
+        // SIGKILL lands here with the round open but unclosed
+        if ctl.hold_after_dispatch == Some(t as u64) {
+            if let Some(j) = jw.as_mut() {
+                j.commit_round()?;
+            }
+            eprintln!("[serve] crash-hold: round {t} dispatched; holding for SIGKILL");
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
         // Collect: every result is routed — current round into the round
         // state (closing it at quorum) with its payload forwarded to the
         // owning aggregation shard, earlier rounds into that shard's late
@@ -707,13 +781,34 @@ pub(crate) fn drive_rounds(
                 PoolNotice::Msg(_w, env) => match Message::from_envelope(&env)? {
                     Message::TrainResult(res) => {
                         if res.round == rs.t {
+                            // journaled BEFORE accept so replay re-takes
+                            // the same accept/orphan/duplicate decision
+                            if let Some(j) = jw.as_mut() {
+                                j.append_uplink(rs.t, false, &env)?;
+                            }
                             if let Some(add) = control.accept(&mut rs, res)? {
                                 router.route(add)?;
                             }
                         } else if res.round < rs.t {
-                            // straggler from a closed quorum round
+                            // straggler from a closed quorum round.
+                            // Journaled only when it changes state —
+                            // admitted to a late buffer, or evicted by
+                            // the byte cap (a deterministic CSV column);
+                            // an arrival the `filled` dedup drops (e.g.
+                            // a resumed worker re-sending an
+                            // already-folded result) leaves no record,
+                            // keeping journal_bytes identical between
+                            // interrupted and uninterrupted runs.
+                            let evicted_before = control.late_evicted();
                             if let Some(fwd) = control.accept_late(res) {
+                                if let Some(j) = jw.as_mut() {
+                                    j.append_uplink(rs.t, true, &env)?;
+                                }
                                 router.route_late(fwd)?;
+                            } else if control.late_evicted() > evicted_before {
+                                if let Some(j) = jw.as_mut() {
+                                    j.append_uplink(rs.t, true, &env)?;
+                                }
                             }
                         } else {
                             bail!("cluster: result for future round {}", res.round);
@@ -737,7 +832,12 @@ pub(crate) fn drive_rounds(
                     // recovered capacity: grant the unfilled slots a
                     // fresh re-dispatch budget (waves already spent
                     // against dead connections must not starve the
-                    // rejoined worker) and reset the liveness clock
+                    // rejoined worker) and reset the liveness clock.
+                    // Journaled: the wave-attempt counters feed the
+                    // deterministic resample draws.
+                    if let Some(j) = jw.as_mut() {
+                        j.append(rs.t, &Record::ReopenWaves)?;
+                    }
                     rs.reopen_waves();
                     idle_waves = 0;
                 }
@@ -749,16 +849,37 @@ pub(crate) fn drive_rounds(
                         (0..n_workers).map(|w| pool.is_alive(w)).collect();
                     let mut dispatched = false;
                     for slot in rs.unfilled_slots() {
+                        // journaled even when the draw yields no task:
+                        // the attempt counter and assignee list advance
+                        // either way, and replay must follow
+                        if let Some(j) = jw.as_mut() {
+                            j.append(
+                                rs.t,
+                                &Record::Resample { slot: slot as u32, alive: alive_now.clone() },
+                            )?;
+                        }
                         if let Some((w, task)) =
                             control.resample_slot(&mut rs, slot, n_workers, &alive_now)?
                         {
                             let client = task.client;
-                            let stateful = task.down_seq > 0;
+                            let down_seq = task.down_seq;
+                            let stateful = down_seq > 0;
                             let gen = pool.generation(w);
                             if pool.send(w, &Message::TrainTask(task)) {
                                 inflight[slot].push((w, gen));
                                 dispatched = true;
                                 active_cohort += 1;
+                                if let Some(j) = jw.as_mut() {
+                                    j.append(
+                                        rs.t,
+                                        &Record::Dispatch {
+                                            slot: slot as u32,
+                                            client,
+                                            worker: w as u32,
+                                            down_seq,
+                                        },
+                                    )?;
+                                }
                             } else if stateful {
                                 // the owner died since the snapshot: the
                                 // wave is spent, and the built downlink
@@ -768,6 +889,9 @@ pub(crate) fn drive_rounds(
                                      built but its worker died before the send; \
                                      excluding the client for the rest of the run"
                                 );
+                                if let Some(j) = jw.as_mut() {
+                                    j.append(rs.t, &Record::DownlinkLost { client })?;
+                                }
                                 control.downlink_lost(client);
                             }
                         }
@@ -815,6 +939,7 @@ pub(crate) fn drive_rounds(
         // the control plane finish.
         let close_t0 = Instant::now();
         let gathered = router.close_round(t as u64)?;
+        let shard_digests = gathered.shard_digests.clone();
         let (mut rec, base_sync) = control.finish_round(rs, gathered)?;
         sched_ms += close_t0.elapsed().as_secs_f64() * 1e3;
         rec.population = control.cfg.n_clients;
@@ -834,6 +959,26 @@ pub(crate) fn drive_rounds(
         let (drops, rejoins) = pool.take_round_counters();
         rec.worker_drops = drops;
         rec.worker_rejoins = rejoins;
+        if let Some(j) = jw.as_mut() {
+            // round_bytes is captured BEFORE the close record so the
+            // value inside the record equals the value replay reports
+            let journal_bytes = j.round_bytes();
+            j.append(
+                t as u64,
+                &Record::RoundClose {
+                    active_cohort: active_cohort as u32,
+                    mux_workers: mux_workers as u32,
+                    worker_drops: drops as u32,
+                    worker_rejoins: rejoins as u32,
+                    journal_bytes,
+                    global_digest: control.global_digest(),
+                    shard_digests,
+                },
+            )?;
+            let fsync_s = j.commit_round()?;
+            rec.journal_bytes = journal_bytes;
+            rec.journal_fsync_ms = fsync_s * 1e3;
+        }
         if let (Some(m), Some(profile)) = (pool.meter(), &opts.netsim) {
             timings.push(
                 m.round_timing(t as u64, &compute_by_slot, profile, quorum, agg_parallelism)?,
@@ -868,7 +1013,255 @@ pub(crate) fn drive_rounds(
     Ok(DriveOutcome { log, reached, timings })
 }
 
+// ---- journal replay ---------------------------------------------------------
+
+/// What [`replay_journal`] rebuilt from a journal.
+pub(crate) struct ReplayOutcome {
+    /// Telemetry of every closed (replayed) round.
+    pub(crate) log: RunLog,
+    /// Round at which `target_acc` was reached during replay, if it was.
+    pub(crate) reached: Option<usize>,
+    /// First round the live loop must dispatch.
+    pub(crate) next_round: u64,
+}
+
+/// The `Genesis` record a run with these parameters writes — and the
+/// one `serve --resume` must find at the head of the journal (a resumed
+/// invocation with different flags would deterministically diverge, so
+/// it is refused up front).
+pub(crate) fn genesis_record(
+    config_digest: u64,
+    n_workers: usize,
+    n_shards: usize,
+    policy: RoundPolicy,
+) -> Record {
+    let (policy_tag, quorum_bits, timeout_ms) = match policy {
+        RoundPolicy::Sync => (0u8, 0u64, 0u64),
+        RoundPolicy::Quorum { q, timeout } => (1, q.to_bits(), timeout.as_millis() as u64),
+    };
+    Record::Genesis {
+        config_digest,
+        n_workers: n_workers as u32,
+        shards: n_shards as u32,
+        policy_tag,
+        quorum_bits,
+        timeout_ms,
+    }
+}
+
+/// Replay a round journal into a freshly-built control plane + router:
+/// re-run every CLOSED round's state transitions in journal order
+/// (replay IS re-execution — the control plane is deterministic, so
+/// feeding it the journaled inputs rebuilds bitwise-identical state),
+/// verifying the journaled RNG stream positions and aggregate digests
+/// along the way. A torn trailing record and an unclosed final round
+/// are NOT errors: both mean the coordinator died mid-round, and that
+/// round simply re-runs live after the workers rejoin.
+pub(crate) fn replay_journal(
+    path: &Path,
+    control: &mut ControlPlane,
+    router: &mut Router,
+    n_workers: usize,
+    expect_genesis: &Record,
+) -> Result<ReplayOutcome> {
+    let (records, torn) = journal::read_journal(path)?;
+    if torn > 0 {
+        eprintln!("[serve] journal has a torn {torn}-byte tail (crash mid-append); dropping it");
+    }
+    let mut it = records.into_iter();
+    match it.next() {
+        Some((_, genesis)) => ensure!(
+            &genesis == expect_genesis,
+            "serve --resume: the journal's genesis does not match this invocation \
+             (journal {genesis:?}, flags {expect_genesis:?}); a resumed run must use \
+             the same config, --expect-workers, --shards, and --round-policy it \
+             started with"
+        ),
+        None => {
+            bail!("serve --resume: journal {} is empty (no genesis record)", path.display())
+        }
+    }
+
+    let mut log = RunLog::new(control.cfg.run_label());
+    let mut reached = None;
+    let mut next_round = 0u64;
+    let mut pending: Vec<(u64, Record)> = Vec::new();
+    for (round, rec) in it {
+        if matches!(rec, Record::Genesis { .. }) {
+            bail!("journal {}: unexpected second genesis record", path.display());
+        }
+        let is_close = matches!(rec, Record::RoundClose { .. });
+        if matches!(rec, Record::RoundOpen { .. }) {
+            if let Some((t0, _)) = pending.first() {
+                eprintln!(
+                    "[serve] journal: round {t0} never closed ({} record(s) discarded); \
+                     the round re-runs live",
+                    pending.len()
+                );
+            }
+            pending.clear();
+        } else {
+            ensure!(
+                !pending.is_empty(),
+                "journal {}: record for round {round} outside an open round",
+                path.display()
+            );
+        }
+        pending.push((round, rec));
+        if is_close {
+            let out = apply_replayed_round(control, router, n_workers, &pending)
+                .with_context(|| format!("serve --resume: replaying journaled round {round}"))?;
+            pending.clear();
+            next_round = round + 1;
+            let acc = out.eval_acc;
+            log.push(out);
+            if let (Some(target), Some(a)) = (control.cfg.target_acc, acc) {
+                if a >= target {
+                    reached = Some(round as usize);
+                    break;
+                }
+            }
+        }
+    }
+    if let Some((t0, _)) = pending.first() {
+        eprintln!(
+            "[serve] journal: round {t0} was open at the crash ({} record(s) discarded); \
+             the round re-runs live",
+            pending.len()
+        );
+    }
+    Ok(ReplayOutcome { log, reached, next_round })
+}
+
+/// Re-execute one closed round from its journal slice (`RoundOpen ..=
+/// RoundClose`): the control plane and router go through the same call
+/// sequence as the live loop, so every deterministic CSV column comes
+/// out bitwise identical. The journaled digests turn silent divergence
+/// (config drift, a journal from another build) into a loud error.
+fn apply_replayed_round(
+    control: &mut ControlPlane,
+    router: &mut Router,
+    n_workers: usize,
+    records: &[(u64, Record)],
+) -> Result<RoundRecord> {
+    let (t, alive) = match &records[0] {
+        (t, Record::RoundOpen { rng_state, alive }) => {
+            ensure!(
+                alive.len() == n_workers,
+                "round {t}: journaled alive bitmap covers {} workers, this run has \
+                 {n_workers}",
+                alive.len()
+            );
+            let live = control.rng_state();
+            ensure!(
+                live == *rng_state,
+                "round {t}: RNG stream position diverged (journal {rng_state:016x?}, \
+                 replay {live:016x?}); the journal does not match this configuration"
+            );
+            (*t, alive.clone())
+        }
+        _ => bail!("replay batch must start with RoundOpen"),
+    };
+    let (mut rs, _tasks) = control.begin_round(t, n_workers, &alive)?;
+    router.begin_round(t, rs.n_s)?;
+    for (_r, rec) in &records[1..records.len() - 1] {
+        match rec {
+            // audit trail only: replay rebuilds every task through
+            // begin_round / resample_slot, and nothing is sent
+            Record::Dispatch { .. } => {}
+            Record::Uplink { envelope } => {
+                let env = Envelope::decode(envelope)?;
+                let Message::TrainResult(res) = Message::from_envelope(&env)? else {
+                    bail!("round {t}: journaled on-time uplink is not a TrainResult");
+                };
+                ensure!(
+                    res.round == t,
+                    "round {t}: journaled on-time uplink belongs to round {}",
+                    res.round
+                );
+                if let Some(add) = control.accept(&mut rs, res)? {
+                    router.route(add)?;
+                }
+            }
+            Record::LateUplink { envelope } => {
+                let env = Envelope::decode(envelope)?;
+                let Message::TrainResult(res) = Message::from_envelope(&env)? else {
+                    bail!("round {t}: journaled late uplink is not a TrainResult");
+                };
+                if let Some(fwd) = control.accept_late(res) {
+                    router.route_late(fwd)?;
+                }
+            }
+            Record::Resample { slot, alive } => {
+                // the draw and its side effects (attempt counters,
+                // assignee list, possibly a downlink-channel advance)
+                // replay; the task itself goes nowhere
+                let _ = control.resample_slot(&mut rs, *slot as usize, n_workers, alive)?;
+            }
+            Record::DownlinkLost { client } => control.downlink_lost(*client),
+            Record::ReopenWaves => rs.reopen_waves(),
+            other => bail!("round {t}: unexpected mid-round record {other:?}"),
+        }
+    }
+    control.ensure_collected(&rs)?;
+    let gathered = router.close_round(t)?;
+    let (
+        _t,
+        Record::RoundClose {
+            active_cohort,
+            mux_workers,
+            worker_drops,
+            worker_rejoins,
+            journal_bytes,
+            global_digest,
+            shard_digests,
+        },
+    ) = records.last().expect("non-empty batch")
+    else {
+        bail!("replay batch must end with RoundClose");
+    };
+    ensure!(
+        gathered.shard_digests == *shard_digests,
+        "round {t}: shard aggregate digests diverged on replay (journal \
+         {shard_digests:016x?}, replay {:016x?})",
+        gathered.shard_digests
+    );
+    // base_sync (FLoRA) is dropped: workers that survived the crash
+    // already applied it before the coordinator died, and replay has
+    // nobody to send to
+    let (mut rec, _base_sync) = control.finish_round(rs, gathered)?;
+    let live_digest = control.global_digest();
+    ensure!(
+        live_digest == *global_digest,
+        "round {t}: global model digest diverged on replay (journal \
+         {global_digest:016x}, replay {live_digest:016x})"
+    );
+    rec.population = control.cfg.n_clients;
+    rec.active_cohort = *active_cohort as usize;
+    rec.mux_workers = *mux_workers as usize;
+    rec.worker_drops = *worker_drops as usize;
+    rec.worker_rejoins = *worker_rejoins as usize;
+    rec.journal_bytes = *journal_bytes;
+    // wall-clock columns are declared nondeterministic; zeros keep the
+    // replayed rows honest
+    rec.sched_ms = 0.0;
+    rec.journal_fsync_ms = 0.0;
+    Ok(rec)
+}
+
 // ---- serve / worker entry points --------------------------------------------
+
+/// `--journal` configuration for [`serve`].
+pub struct JournalOptions {
+    /// Journal file path (created fresh, or replayed + appended under
+    /// `resume`).
+    pub path: PathBuf,
+    /// Replay the existing journal and resume the crashed run
+    /// (`--resume`).
+    pub resume: bool,
+    /// When journal appends reach the disk (`--journal-sync`).
+    pub sync: journal::SyncPolicy,
+}
 
 /// `ecolora serve` configuration.
 pub struct ServeOptions {
@@ -881,6 +1274,13 @@ pub struct ServeOptions {
     pub expect_workers: usize,
     /// How long to wait for the initial worker wave before giving up.
     pub join_timeout: Duration,
+    /// Durable round journal (`--journal`); `None` disables journaling.
+    pub journal: Option<JournalOptions>,
+    /// Crash-test hook (`--hold-after-dispatch N`): hang the
+    /// coordinator right after round N's dispatch records are journaled
+    /// and flushed — a deterministic SIGKILL target for the crash
+    /// recovery tests. Requires `--journal`.
+    pub hold_after_dispatch: Option<u64>,
     /// Round/shard/netsim options (the `mode` field is ignored — serve
     /// is TCP by construction; `workers` is superseded by
     /// `expect_workers`; `fault` belongs to the worker side).
@@ -902,26 +1302,16 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
         cfg.n_clients
     );
     let digest = cfg.digest();
-    let listener = Listener::bind(&opts.listen)?;
-    let addr = listener.local_addr()?;
-    eprintln!(
-        "[serve] listening on {addr} ({n_workers} worker slot{}, config digest {digest:016x})",
-        if n_workers == 1 { "" } else { "s" }
+    ensure!(
+        opts.hold_after_dispatch.is_none() || opts.journal.is_some(),
+        "serve: --hold-after-dispatch is a journal crash hook; it requires --journal"
     );
 
-    let ledger = Arc::new(Mutex::new(RegistryLedger::new(n_workers)));
-    let resume_round = Arc::new(AtomicU64::new(0));
-    let meter = opts.cluster.netsim.as_ref().map(|_| Meter::new());
-    let mut pool = WorkerPool::new(n_workers, meter, Some(ledger.clone()));
-    let spec = HandshakeSpec {
-        token: opts.token.clone(),
-        config_digest: digest,
-        n_workers,
-    };
-    let mut registry =
-        spawn_registry(listener, spec, ledger, pool.events_sender(), resume_round.clone())?;
-
-    // Build the server world while workers dial in and build theirs.
+    // Build the server world — and, under `--resume`, replay the
+    // journal into it — BEFORE the listener exists: a rejoining
+    // worker's Welcome must carry the resumed round, and replay must
+    // never race live traffic. Workers dialing early see
+    // connection-refused and retry within their dial window.
     let mut control = ControlPlane::new(cfg, opts.cluster.policy)?;
     let n_shards = opts.cluster.shards.max(1);
     let mut router = Router::new(
@@ -932,6 +1322,48 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
         control.fold_beta(),
         control.dense_upload_params(),
     )?;
+
+    let mut ctl = DriveCtl::fresh();
+    ctl.hold_after_dispatch = opts.hold_after_dispatch;
+    if let Some(jopts) = &opts.journal {
+        let genesis = genesis_record(digest, n_workers, n_shards, opts.cluster.policy);
+        if jopts.resume {
+            let rep =
+                replay_journal(&jopts.path, &mut control, &mut router, n_workers, &genesis)?;
+            eprintln!(
+                "[serve] resumed from journal {}: {} round(s) replayed, next round {}",
+                jopts.path.display(),
+                rep.log.rounds.len(),
+                rep.next_round
+            );
+            ctl.start_round = rep.next_round as usize;
+            ctl.resumed_log = Some(rep.log);
+            ctl.reached = rep.reached;
+            ctl.journal = Some(journal::JournalWriter::open_append(&jopts.path, jopts.sync)?);
+        } else {
+            ctl.journal = Some(journal::JournalWriter::create(&jopts.path, jopts.sync, &genesis)?);
+        }
+    }
+    let start_round = ctl.start_round;
+
+    let listener = Listener::bind(&opts.listen)?;
+    let addr = listener.local_addr()?;
+    eprintln!(
+        "[serve] listening on {addr} ({n_workers} worker slot{}, config digest {digest:016x})",
+        if n_workers == 1 { "" } else { "s" }
+    );
+
+    let ledger = Arc::new(Mutex::new(RegistryLedger::new(n_workers)));
+    let resume_round = Arc::new(AtomicU64::new(start_round as u64));
+    let meter = opts.cluster.netsim.as_ref().map(|_| Meter::new());
+    let mut pool = WorkerPool::new(n_workers, meter, Some(ledger.clone()));
+    let spec = HandshakeSpec {
+        token: opts.token.clone(),
+        config_digest: digest,
+        n_workers,
+    };
+    let mut registry =
+        spawn_registry(listener, spec, ledger, pool.events_sender(), resume_round.clone())?;
 
     // Wait for the full first wave.
     let deadline = Instant::now() + opts.join_timeout;
@@ -957,9 +1389,10 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
     }
     // pre-run churn is not round telemetry
     let _ = pool.take_round_counters();
-    eprintln!("[serve] all {n_workers} workers connected; starting round 0");
+    eprintln!("[serve] all {n_workers} workers connected; starting round {start_round}");
 
-    let out = drive_rounds(&mut control, &mut router, &mut pool, &opts.cluster, Some(&resume_round))?;
+    let out =
+        drive_rounds(&mut control, &mut router, &mut pool, &opts.cluster, Some(&resume_round), ctl)?;
     let outcome = control.outcome(out.log, out.reached)?;
     pool.shutdown(false);
     registry.stop();
@@ -1042,7 +1475,8 @@ pub fn run_remote_worker(cfg: FedConfig, opts: &WorkerOptions) -> Result<()> {
         );
         // keep the same identity (and therefore client shard) on rejoin
         requested = Some(joined.worker);
-        match participant::serve_conn(&mut participant, &mut conn, opts.fault) {
+        match participant::serve_conn(&mut participant, &mut conn, opts.fault, joined.resume_round)
+        {
             Ok(()) => {
                 eprintln!("[worker] run complete (coordinator sent Shutdown)");
                 return Ok(());

@@ -1,0 +1,1012 @@
+//! Append-only coordinator round journal (crash durability).
+//!
+//! The control plane appends one checksummed, length-framed record at
+//! every state transition — round open (cohort draw + RNG stream
+//! position), task dispatch, uplink accepted / late-buffered, resample,
+//! downlink loss, quorum reopen, round close — so that a coordinator
+//! killed mid-run can be restarted with `ecolora serve --journal <path>
+//! --resume` and replay itself back to the exact control-plane state of
+//! the crash, bit for bit (docs/PROTOCOL.md §8 is the normative on-disk
+//! spec).
+//!
+//! The framing deliberately mirrors the frozen envelope discipline of
+//! [`super::protocol`]: 2-byte magic, version byte, kind byte, FNV-1a-32
+//! checksum over everything except the checksum field itself, explicit
+//! little-endian payload length. Two properties fall out:
+//!
+//! * **A torn final record is dropped, not fatal.** A crash mid-append
+//!   leaves a record whose frame extends past end-of-file; replay stops
+//!   cleanly in front of it. Only a *complete* record with a bad
+//!   checksum/magic/version is a typed [`JournalError`] naming the byte
+//!   offset — that is disk corruption, not a crash artifact.
+//! * **The write path stays off the aggregation hot path.** Appends go
+//!   through one reusable scratch buffer into a [`std::io::BufWriter`]
+//!   (zero heap allocations in steady state — the gated
+//!   `alloc_discipline` suite proves it) and the fsync cadence is an
+//!   operator policy ([`SyncPolicy`]), never per-record by default.
+//!
+//! Durability model: the journal is flushed (write(2)) at every round
+//! close regardless of policy, so the OS page cache — which survives a
+//! SIGKILL of the coordinator *process* — always holds every committed
+//! round. fsync(2) only adds protection against whole-machine crashes;
+//! `SyncPolicy::Round` (the default) pays one fsync per round close,
+//! `Always` one per record, `Off` none.
+
+use std::fmt;
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::protocol::Envelope;
+
+/// Journal file magic (first two bytes of every record).
+pub const JOURNAL_MAGIC: [u8; 2] = [0xEC, 0x4A];
+
+/// On-disk journal format version (bumped on any layout change).
+pub const JOURNAL_VERSION: u8 = 1;
+
+/// Fixed record header length: magic(2) + version(1) + kind(1) +
+/// checksum(4) + round(8) + payload_len(4).
+pub const RECORD_HEADER_LEN: usize = 20;
+
+/// FNV-1a-32 over two byte ranges (header-before-checksum ++
+/// header-after ++ payload) — the same checksum discipline as the wire
+/// envelope, kept local so the journal layer stays self-contained.
+fn fnv1a_parts(a: &[u8], b: &[u8]) -> u32 {
+    let mut h = 0x811C_9DC5u32;
+    for &x in a.iter().chain(b) {
+        h ^= x as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// FNV-1a-64 over the bit patterns of an `f32` slice. Used for the
+/// global-model and shard-slice digests embedded in [`Record::RoundClose`]
+/// so replay can prove it rebuilt the exact aggregation state.
+pub fn digest_f32(xs: &[f32]) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for x in xs {
+        for b in x.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// fsync cadence for journal appends (`--journal-sync`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SyncPolicy {
+    /// fsync after every record — survives whole-machine crashes at the
+    /// cost of one disk round-trip per state transition.
+    Always,
+    /// fsync once per round close (the default): a machine crash can
+    /// lose at most the open round, which replay re-runs anyway.
+    Round,
+    /// never fsync — the write(2) flush at round close still survives a
+    /// coordinator SIGKILL (page cache), but not a machine crash.
+    Off,
+}
+
+impl SyncPolicy {
+    /// Parse the `--journal-sync` flag value.
+    pub fn parse(s: &str) -> Option<SyncPolicy> {
+        match s {
+            "always" => Some(SyncPolicy::Always),
+            "round" => Some(SyncPolicy::Round),
+            "off" => Some(SyncPolicy::Off),
+            _ => None,
+        }
+    }
+
+    /// Stable flag-value name (logs, diagnostics).
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncPolicy::Always => "always",
+            SyncPolicy::Round => "round",
+            SyncPolicy::Off => "off",
+        }
+    }
+}
+
+/// Journal record discriminant (the kind byte).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum RecordKind {
+    /// Run identity: config digest, fleet shape, round policy.
+    Genesis = 1,
+    /// Round open: root RNG stream position + cohort-draw alive set.
+    RoundOpen = 2,
+    /// One task dispatched (audit trail; replay regenerates tasks).
+    Dispatch = 3,
+    /// An on-time uplink arrived (raw envelope bytes, pre-accept).
+    Uplink = 4,
+    /// A late uplink was *admitted* to the late buffer (raw envelope).
+    LateUplink = 5,
+    /// A slot was resampled (the alive snapshot the draw used).
+    Resample = 6,
+    /// A client's downlink channel was declared lost.
+    DownlinkLost = 7,
+    /// A rejoin re-opened the re-dispatch wave budget.
+    ReopenWaves = 8,
+    /// Round committed: telemetry + state digests. The commit point.
+    RoundClose = 9,
+}
+
+impl RecordKind {
+    fn from_u8(x: u8) -> Option<RecordKind> {
+        Some(match x {
+            1 => RecordKind::Genesis,
+            2 => RecordKind::RoundOpen,
+            3 => RecordKind::Dispatch,
+            4 => RecordKind::Uplink,
+            5 => RecordKind::LateUplink,
+            6 => RecordKind::Resample,
+            7 => RecordKind::DownlinkLost,
+            8 => RecordKind::ReopenWaves,
+            9 => RecordKind::RoundClose,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded journal record (see docs/PROTOCOL.md §8 for the byte
+/// layout of each payload).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Record {
+    /// Run identity, written once when the journal is created. `--resume`
+    /// refuses a journal whose genesis does not match the relaunch flags.
+    Genesis {
+        /// `FedConfig::digest()` of the run.
+        config_digest: u64,
+        /// Worker slots (`--expect-workers`).
+        n_workers: u32,
+        /// Aggregation shards (`--shards`).
+        shards: u32,
+        /// Round policy tag: 0 = sync, 1 = quorum.
+        policy_tag: u8,
+        /// Quorum fraction as `f64::to_bits` (0 for sync).
+        quorum_bits: u64,
+        /// Slot timeout in milliseconds (0 for sync).
+        timeout_ms: u64,
+    },
+    /// Round `t` opened: the root RNG position *before* the cohort draw
+    /// and the worker-alive snapshot the draw saw.
+    RoundOpen {
+        /// `Rng::state()` of the root world stream at round open.
+        rng_state: [u64; 4],
+        /// Per-worker liveness at the draw (index = worker slot).
+        alive: Vec<bool>,
+    },
+    /// One task dispatched (audit only — replay regenerates tasks from
+    /// the deterministic state machine and ignores these).
+    Dispatch {
+        /// Cohort slot index.
+        slot: u32,
+        /// Client id the slot trains.
+        client: u32,
+        /// Worker slot the task was sent to.
+        worker: u32,
+        /// Per-client downlink sequence number carried by the task.
+        down_seq: u64,
+    },
+    /// An on-time uplink arrived: the `TrainResult` envelope verbatim,
+    /// journaled *before* the accept decision so duplicate/orphan
+    /// handling replays exactly.
+    Uplink {
+        /// Encoded wire envelope (`Envelope::encode` bytes).
+        envelope: Vec<u8>,
+    },
+    /// A late uplink was **admitted** to the late buffer (already-folded
+    /// duplicates are filtered before journaling, so replay never
+    /// double-folds a straggler that re-sent after a coordinator
+    /// restart).
+    LateUplink {
+        /// Encoded wire envelope (`Envelope::encode` bytes).
+        envelope: Vec<u8>,
+    },
+    /// Slot `slot` timed out and was re-dispatched; `alive` is the
+    /// worker-liveness snapshot the replacement draw used.
+    Resample {
+        /// Cohort slot index that timed out.
+        slot: u32,
+        /// Per-worker liveness at the resample draw.
+        alive: Vec<bool>,
+    },
+    /// Client `client`'s stateful downlink failed to send; the control
+    /// plane excluded it from future cohorts.
+    DownlinkLost {
+        /// Excluded client id.
+        client: u32,
+    },
+    /// A worker rejoin re-opened the re-dispatch wave budget.
+    ReopenWaves,
+    /// Round committed. Everything replay cannot recompute (wall-clock
+    /// telemetry) plus digests proving it recomputed the rest.
+    RoundClose {
+        /// Live slots this round (CSV `active_cohort`).
+        active_cohort: u32,
+        /// CSV `mux_workers` as recorded by the live run.
+        mux_workers: u32,
+        /// CSV `worker_drops` as recorded by the live run.
+        worker_drops: u32,
+        /// CSV `worker_rejoins` as recorded by the live run.
+        worker_rejoins: u32,
+        /// Journal bytes appended this round (open..close, exclusive).
+        journal_bytes: u64,
+        /// [`digest_f32`] of the post-advance global model.
+        global_digest: u64,
+        /// [`digest_f32`] of each shard's delta slice, in shard order.
+        shard_digests: Vec<u64>,
+    },
+}
+
+impl Record {
+    fn kind(&self) -> RecordKind {
+        match self {
+            Record::Genesis { .. } => RecordKind::Genesis,
+            Record::RoundOpen { .. } => RecordKind::RoundOpen,
+            Record::Dispatch { .. } => RecordKind::Dispatch,
+            Record::Uplink { .. } => RecordKind::Uplink,
+            Record::LateUplink { .. } => RecordKind::LateUplink,
+            Record::Resample { .. } => RecordKind::Resample,
+            Record::DownlinkLost { .. } => RecordKind::DownlinkLost,
+            Record::ReopenWaves => RecordKind::ReopenWaves,
+            Record::RoundClose { .. } => RecordKind::RoundClose,
+        }
+    }
+}
+
+/// A complete-but-invalid journal record: disk corruption (or a foreign
+/// file), never a crash artifact — crashes tear the *tail*, which the
+/// reader tolerates silently. Every variant names the byte offset of the
+/// offending record so the operator can inspect it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JournalError {
+    /// First two record bytes are not [`JOURNAL_MAGIC`].
+    BadMagic {
+        /// Byte offset of the record in the journal file.
+        offset: usize,
+    },
+    /// Version byte differs from [`JOURNAL_VERSION`].
+    BadVersion {
+        /// Byte offset of the record in the journal file.
+        offset: usize,
+        /// The version byte found.
+        got: u8,
+    },
+    /// Unknown record kind byte.
+    BadKind {
+        /// Byte offset of the record in the journal file.
+        offset: usize,
+        /// The kind byte found.
+        got: u8,
+    },
+    /// FNV-1a-32 checksum mismatch over a complete record frame.
+    ChecksumMismatch {
+        /// Byte offset of the record in the journal file.
+        offset: usize,
+    },
+    /// Checksum passed but the payload does not decode for its kind
+    /// (a writer bug or version skew, not wire corruption).
+    Malformed {
+        /// Byte offset of the record in the journal file.
+        offset: usize,
+        /// What failed to decode.
+        detail: String,
+    },
+}
+
+impl fmt::Display for JournalError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JournalError::BadMagic { offset } => {
+                write!(f, "journal record at byte offset {offset}: bad magic")
+            }
+            JournalError::BadVersion { offset, got } => write!(
+                f,
+                "journal record at byte offset {offset}: version {got} (want {JOURNAL_VERSION})"
+            ),
+            JournalError::BadKind { offset, got } => {
+                write!(f, "journal record at byte offset {offset}: unknown record kind {got}")
+            }
+            JournalError::ChecksumMismatch { offset } => write!(
+                f,
+                "journal record at byte offset {offset}: checksum mismatch (corrupt record)"
+            ),
+            JournalError::Malformed { offset, detail } => {
+                write!(f, "journal record at byte offset {offset}: malformed payload ({detail})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JournalError {}
+
+// ---- frame encoding ---------------------------------------------------------
+
+/// Append one framed record to `out`: reserve the header, let `build`
+/// append the payload, backfill length + checksum. The only writer of
+/// journal bytes — the writer methods and the in-memory tests both go
+/// through here.
+fn encode_frame(out: &mut Vec<u8>, round: u64, kind: RecordKind, build: impl FnOnce(&mut Vec<u8>)) {
+    let start = out.len();
+    out.extend_from_slice(&JOURNAL_MAGIC);
+    out.push(JOURNAL_VERSION);
+    out.push(kind as u8);
+    out.extend_from_slice(&[0u8; 4]); // checksum backfilled below
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&[0u8; 4]); // payload_len backfilled below
+    build(out);
+    let payload_len = (out.len() - start - RECORD_HEADER_LEN) as u32;
+    out[start + 16..start + 20].copy_from_slice(&payload_len.to_le_bytes());
+    let c = fnv1a_parts(&out[start..start + 4], &out[start + 8..]);
+    out[start + 4..start + 8].copy_from_slice(&c.to_le_bytes());
+}
+
+fn put_alive(out: &mut Vec<u8>, alive: &[bool]) {
+    out.extend_from_slice(&(alive.len() as u32).to_le_bytes());
+    for &a in alive {
+        out.push(a as u8);
+    }
+}
+
+/// Append one framed `Record` to `out` (the in-memory twin of
+/// [`JournalWriter::append`], shared with the property tests).
+pub fn encode_record(out: &mut Vec<u8>, round: u64, rec: &Record) {
+    encode_frame(out, round, rec.kind(), |buf| match rec {
+        Record::Genesis { config_digest, n_workers, shards, policy_tag, quorum_bits, timeout_ms } => {
+            buf.extend_from_slice(&config_digest.to_le_bytes());
+            buf.extend_from_slice(&n_workers.to_le_bytes());
+            buf.extend_from_slice(&shards.to_le_bytes());
+            buf.push(*policy_tag);
+            buf.extend_from_slice(&quorum_bits.to_le_bytes());
+            buf.extend_from_slice(&timeout_ms.to_le_bytes());
+        }
+        Record::RoundOpen { rng_state, alive } => {
+            for w in rng_state {
+                buf.extend_from_slice(&w.to_le_bytes());
+            }
+            put_alive(buf, alive);
+        }
+        Record::Dispatch { slot, client, worker, down_seq } => {
+            buf.extend_from_slice(&slot.to_le_bytes());
+            buf.extend_from_slice(&client.to_le_bytes());
+            buf.extend_from_slice(&worker.to_le_bytes());
+            buf.extend_from_slice(&down_seq.to_le_bytes());
+        }
+        Record::Uplink { envelope } | Record::LateUplink { envelope } => {
+            buf.extend_from_slice(envelope);
+        }
+        Record::Resample { slot, alive } => {
+            buf.extend_from_slice(&slot.to_le_bytes());
+            put_alive(buf, alive);
+        }
+        Record::DownlinkLost { client } => {
+            buf.extend_from_slice(&client.to_le_bytes());
+        }
+        Record::ReopenWaves => {}
+        Record::RoundClose {
+            active_cohort,
+            mux_workers,
+            worker_drops,
+            worker_rejoins,
+            journal_bytes,
+            global_digest,
+            shard_digests,
+        } => {
+            buf.extend_from_slice(&active_cohort.to_le_bytes());
+            buf.extend_from_slice(&mux_workers.to_le_bytes());
+            buf.extend_from_slice(&worker_drops.to_le_bytes());
+            buf.extend_from_slice(&worker_rejoins.to_le_bytes());
+            buf.extend_from_slice(&journal_bytes.to_le_bytes());
+            buf.extend_from_slice(&global_digest.to_le_bytes());
+            buf.extend_from_slice(&(shard_digests.len() as u32).to_le_bytes());
+            for d in shard_digests {
+                buf.extend_from_slice(&d.to_le_bytes());
+            }
+        }
+    });
+}
+
+// ---- payload decoding -------------------------------------------------------
+
+/// Little-endian payload cursor with static error strings.
+struct Cur<'a> {
+    b: &'a [u8],
+    p: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], &'static str> {
+        if self.p + n > self.b.len() {
+            return Err("payload truncated");
+        }
+        let s = &self.b[self.p..self.p + n];
+        self.p += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, &'static str> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, &'static str> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, &'static str> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn alive(&mut self) -> Result<Vec<bool>, &'static str> {
+        let n = self.u32()? as usize;
+        let raw = self.take(n)?;
+        Ok(raw.iter().map(|&b| b != 0).collect())
+    }
+
+    fn done(&self) -> Result<(), &'static str> {
+        if self.p == self.b.len() {
+            Ok(())
+        } else {
+            Err("trailing payload bytes")
+        }
+    }
+}
+
+fn decode_payload(kind: RecordKind, payload: &[u8]) -> Result<Record, &'static str> {
+    let mut c = Cur { b: payload, p: 0 };
+    let rec = match kind {
+        RecordKind::Genesis => Record::Genesis {
+            config_digest: c.u64()?,
+            n_workers: c.u32()?,
+            shards: c.u32()?,
+            policy_tag: c.u8()?,
+            quorum_bits: c.u64()?,
+            timeout_ms: c.u64()?,
+        },
+        RecordKind::RoundOpen => {
+            let mut rng_state = [0u64; 4];
+            for w in &mut rng_state {
+                *w = c.u64()?;
+            }
+            Record::RoundOpen { rng_state, alive: c.alive()? }
+        }
+        RecordKind::Dispatch => Record::Dispatch {
+            slot: c.u32()?,
+            client: c.u32()?,
+            worker: c.u32()?,
+            down_seq: c.u64()?,
+        },
+        RecordKind::Uplink => Record::Uplink { envelope: payload.to_vec() },
+        RecordKind::LateUplink => Record::LateUplink { envelope: payload.to_vec() },
+        RecordKind::Resample => Record::Resample { slot: c.u32()?, alive: c.alive()? },
+        RecordKind::DownlinkLost => Record::DownlinkLost { client: c.u32()? },
+        RecordKind::ReopenWaves => Record::ReopenWaves,
+        RecordKind::RoundClose => {
+            let active_cohort = c.u32()?;
+            let mux_workers = c.u32()?;
+            let worker_drops = c.u32()?;
+            let worker_rejoins = c.u32()?;
+            let journal_bytes = c.u64()?;
+            let global_digest = c.u64()?;
+            let n = c.u32()? as usize;
+            let mut shard_digests = Vec::with_capacity(n.min(4096));
+            for _ in 0..n {
+                shard_digests.push(c.u64()?);
+            }
+            Record::RoundClose {
+                active_cohort,
+                mux_workers,
+                worker_drops,
+                worker_rejoins,
+                journal_bytes,
+                global_digest,
+                shard_digests,
+            }
+        }
+    };
+    // the envelope kinds consume the payload wholesale; everything else
+    // must account for every byte
+    if !matches!(kind, RecordKind::Uplink | RecordKind::LateUplink) {
+        c.done()?;
+    }
+    Ok(rec)
+}
+
+// ---- reader -----------------------------------------------------------------
+
+/// Sequential journal decoder over an in-memory byte image of the file.
+///
+/// [`JournalReader::next_record`] yields `(round, record)` pairs until a
+/// clean end-of-file, a torn tail (tolerated: `Ok(None)` with
+/// [`JournalReader::torn_bytes`] > 0), or a corrupt complete record
+/// (a typed [`JournalError`]).
+pub struct JournalReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    torn: usize,
+}
+
+impl<'a> JournalReader<'a> {
+    /// Start decoding at byte 0 of `bytes`.
+    pub fn new(bytes: &'a [u8]) -> JournalReader<'a> {
+        JournalReader { bytes, pos: 0, torn: 0 }
+    }
+
+    /// Byte offset the next record would be read from.
+    pub fn offset(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes of torn (incomplete) final record dropped at the tail;
+    /// 0 until the reader has stopped, and on a clean end-of-file.
+    pub fn torn_bytes(&self) -> usize {
+        self.torn
+    }
+
+    /// Decode the next record, `Ok(None)` at end-of-file (clean or torn
+    /// tail), `Err` on a complete-but-corrupt record.
+    pub fn next_record(&mut self) -> Result<Option<(u64, Record)>, JournalError> {
+        let o = self.pos;
+        let rest = &self.bytes[o..];
+        if rest.len() < RECORD_HEADER_LEN {
+            // clean EOF (0 bytes) or a header torn by a crash
+            self.torn = rest.len();
+            return Ok(None);
+        }
+        if rest[0..2] != JOURNAL_MAGIC {
+            return Err(JournalError::BadMagic { offset: o });
+        }
+        if rest[2] != JOURNAL_VERSION {
+            return Err(JournalError::BadVersion { offset: o, got: rest[2] });
+        }
+        let kind = RecordKind::from_u8(rest[3])
+            .ok_or(JournalError::BadKind { offset: o, got: rest[3] })?;
+        let payload_len = u32::from_le_bytes(rest[16..20].try_into().unwrap()) as usize;
+        let frame_len = RECORD_HEADER_LEN + payload_len;
+        if rest.len() < frame_len {
+            // the crash tore this record mid-payload: drop it
+            self.torn = rest.len();
+            return Ok(None);
+        }
+        let frame = &rest[..frame_len];
+        let checksum = u32::from_le_bytes(frame[4..8].try_into().unwrap());
+        if fnv1a_parts(&frame[0..4], &frame[8..]) != checksum {
+            return Err(JournalError::ChecksumMismatch { offset: o });
+        }
+        let round = u64::from_le_bytes(frame[8..16].try_into().unwrap());
+        let rec = decode_payload(kind, &frame[RECORD_HEADER_LEN..])
+            .map_err(|detail| JournalError::Malformed { offset: o, detail: detail.into() })?;
+        self.pos += frame_len;
+        Ok(Some((round, rec)))
+    }
+}
+
+/// Read and decode a whole journal file, tolerating a torn tail.
+/// Returns the records and the count of torn tail bytes dropped.
+pub fn read_journal(path: &Path) -> Result<(Vec<(u64, Record)>, usize)> {
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading journal {}", path.display()))?;
+    let mut reader = JournalReader::new(&bytes);
+    let mut records = Vec::new();
+    loop {
+        match reader.next_record() {
+            Ok(Some(item)) => records.push(item),
+            Ok(None) => break,
+            Err(e) => {
+                return Err(anyhow::Error::new(e)
+                    .context(format!("journal {} is corrupt", path.display())))
+            }
+        }
+    }
+    Ok((records, reader.torn_bytes()))
+}
+
+// ---- writer -----------------------------------------------------------------
+
+/// Buffered append-only journal writer.
+///
+/// All appends encode into one reusable scratch buffer and go through a
+/// [`BufWriter`], so the steady-state uplink path performs zero heap
+/// allocations. [`JournalWriter::commit_round`] flushes unconditionally
+/// (SIGKILL durability via the page cache) and fsyncs per [`SyncPolicy`].
+pub struct JournalWriter {
+    out: BufWriter<File>,
+    scratch: Vec<u8>,
+    sync: SyncPolicy,
+    round_bytes: u64,
+    path: PathBuf,
+}
+
+impl JournalWriter {
+    /// Create (truncate) a journal and durably write its genesis record.
+    pub fn create(path: &Path, sync: SyncPolicy, genesis: &Record) -> Result<JournalWriter> {
+        let file = File::create(path)
+            .with_context(|| format!("creating journal {}", path.display()))?;
+        let mut w = JournalWriter {
+            out: BufWriter::new(file),
+            scratch: Vec::with_capacity(4096),
+            sync,
+            round_bytes: 0,
+            path: path.to_path_buf(),
+        };
+        w.append(0, genesis)?;
+        // genesis is durable regardless of policy: it is one record, once
+        w.flush_data(true)?;
+        Ok(w)
+    }
+
+    /// Open an existing journal for appending (the `--resume` path).
+    pub fn open_append(path: &Path, sync: SyncPolicy) -> Result<JournalWriter> {
+        let file = OpenOptions::new()
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {} for append", path.display()))?;
+        Ok(JournalWriter {
+            out: BufWriter::new(file),
+            scratch: Vec::with_capacity(4096),
+            sync,
+            round_bytes: 0,
+            path: path.to_path_buf(),
+        })
+    }
+
+    /// Journal bytes appended since the last [`Record::RoundOpen`]
+    /// (which resets the counter), including the open record itself.
+    pub fn round_bytes(&self) -> u64 {
+        self.round_bytes
+    }
+
+    fn write_scratch(&mut self) -> Result<()> {
+        self.out
+            .write_all(&self.scratch)
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        self.round_bytes += self.scratch.len() as u64;
+        if self.sync == SyncPolicy::Always {
+            self.flush_data(true)?;
+        }
+        Ok(())
+    }
+
+    /// Append one record. A [`Record::RoundOpen`] resets the per-round
+    /// byte counter before counting itself.
+    pub fn append(&mut self, round: u64, rec: &Record) -> Result<()> {
+        if matches!(rec, Record::RoundOpen { .. }) {
+            self.round_bytes = 0;
+        }
+        self.scratch.clear();
+        encode_record(&mut self.scratch, round, rec);
+        self.write_scratch()
+    }
+
+    /// Append an uplink record straight from the received envelope
+    /// (no intermediate payload `Vec` — the accept hot path).
+    pub fn append_uplink(&mut self, round: u64, late: bool, env: &Envelope) -> Result<()> {
+        let kind = if late { RecordKind::LateUplink } else { RecordKind::Uplink };
+        self.scratch.clear();
+        encode_frame(&mut self.scratch, round, kind, |buf| env.encode_into(buf));
+        self.write_scratch()
+    }
+
+    fn flush_data(&mut self, fsync: bool) -> Result<()> {
+        self.out
+            .flush()
+            .with_context(|| format!("flushing journal {}", self.path.display()))?;
+        if fsync {
+            self.out
+                .get_ref()
+                .sync_data()
+                .with_context(|| format!("fsyncing journal {}", self.path.display()))?;
+        }
+        Ok(())
+    }
+
+    /// Commit a round: flush unconditionally (a SIGKILLed coordinator
+    /// leaves the round in the page cache), fsync per policy. Returns
+    /// the seconds spent in fsync (0 when the policy skipped it).
+    pub fn commit_round(&mut self) -> Result<f64> {
+        match self.sync {
+            SyncPolicy::Off => {
+                self.flush_data(false)?;
+                Ok(0.0)
+            }
+            SyncPolicy::Round | SyncPolicy::Always => {
+                self.out
+                    .flush()
+                    .with_context(|| format!("flushing journal {}", self.path.display()))?;
+                let t0 = Instant::now();
+                self.out
+                    .get_ref()
+                    .sync_data()
+                    .with_context(|| format!("fsyncing journal {}", self.path.display()))?;
+                Ok(t0.elapsed().as_secs_f64())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample_records(rng: &mut Rng) -> Vec<(u64, Record)> {
+        let n = 1 + rng.below(10);
+        (0..n)
+            .map(|_| {
+                let round = rng.below(1 << 20) as u64;
+                let rec = match rng.below(9) {
+                    0 => Record::Genesis {
+                        config_digest: rng.next_u64(),
+                        n_workers: rng.below(64) as u32,
+                        shards: 1 + rng.below(8) as u32,
+                        policy_tag: rng.below(2) as u8,
+                        quorum_bits: rng.next_u64(),
+                        timeout_ms: rng.below(100_000) as u64,
+                    },
+                    1 => Record::RoundOpen {
+                        rng_state: [
+                            rng.next_u64(),
+                            rng.next_u64(),
+                            rng.next_u64(),
+                            rng.next_u64(),
+                        ],
+                        alive: (0..rng.below(9)).map(|_| rng.below(2) == 1).collect(),
+                    },
+                    2 => Record::Dispatch {
+                        slot: rng.below(64) as u32,
+                        client: rng.below(1 << 20) as u32,
+                        worker: rng.below(64) as u32,
+                        down_seq: rng.below(1 << 30) as u64,
+                    },
+                    3 => Record::Uplink {
+                        envelope: (0..rng.below(200)).map(|_| rng.below(256) as u8).collect(),
+                    },
+                    4 => Record::LateUplink {
+                        envelope: (0..rng.below(200)).map(|_| rng.below(256) as u8).collect(),
+                    },
+                    5 => Record::Resample {
+                        slot: rng.below(64) as u32,
+                        alive: (0..rng.below(9)).map(|_| rng.below(2) == 1).collect(),
+                    },
+                    6 => Record::DownlinkLost { client: rng.below(1 << 20) as u32 },
+                    7 => Record::ReopenWaves,
+                    _ => Record::RoundClose {
+                        active_cohort: rng.below(64) as u32,
+                        mux_workers: rng.below(64) as u32,
+                        worker_drops: rng.below(8) as u32,
+                        worker_rejoins: rng.below(8) as u32,
+                        journal_bytes: rng.below(1 << 40) as u64,
+                        global_digest: rng.next_u64(),
+                        shard_digests: (0..rng.below(5)).map(|_| rng.next_u64()).collect(),
+                    },
+                };
+                (round, rec)
+            })
+            .collect()
+    }
+
+    fn encode_all(records: &[(u64, Record)]) -> Vec<u8> {
+        let mut bytes = Vec::new();
+        for (round, rec) in records {
+            encode_record(&mut bytes, *round, rec);
+        }
+        bytes
+    }
+
+    fn decode_all(bytes: &[u8]) -> (Vec<(u64, Record)>, usize) {
+        let mut reader = JournalReader::new(bytes);
+        let mut out = Vec::new();
+        while let Some(item) = reader.next_record().unwrap() {
+            out.push(item);
+        }
+        (out, reader.torn_bytes())
+    }
+
+    #[test]
+    fn arbitrary_record_sequences_round_trip() {
+        let mut rng = Rng::new(0x70_51);
+        for _ in 0..300 {
+            let records = sample_records(&mut rng);
+            let bytes = encode_all(&records);
+            let (decoded, torn) = decode_all(&bytes);
+            assert_eq!(decoded, records);
+            assert_eq!(torn, 0, "a complete stream has no torn tail");
+        }
+    }
+
+    #[test]
+    fn torn_tail_at_every_cut_drops_only_the_final_record() {
+        let mut rng = Rng::new(0x70_52);
+        let records = sample_records(&mut rng);
+        let bytes = encode_all(&records);
+        // record start offsets, so each cut point maps to an expected
+        // count of fully-contained records
+        let mut starts = Vec::new();
+        {
+            let mut reader = JournalReader::new(&bytes);
+            loop {
+                starts.push(reader.offset());
+                if reader.next_record().unwrap().is_none() {
+                    break;
+                }
+            }
+        }
+        for cut in 0..=bytes.len() {
+            let want = starts.iter().filter(|&&s| s < cut).count().min(records.len());
+            // a cut strictly inside record i keeps records 0..i
+            let complete = starts.iter().take_while(|&&s| s <= cut).count() - 1;
+            let want = want.min(complete);
+            let (decoded, torn) = decode_all(&bytes[..cut]);
+            assert_eq!(decoded.len(), want, "cut at byte {cut}");
+            assert_eq!(decoded[..], records[..want], "cut at byte {cut}");
+            let expected_torn = cut - starts[want];
+            assert_eq!(torn, expected_torn, "cut at byte {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_complete_records_fail_typed_with_the_offset() {
+        let first = vec![(3, Record::DownlinkLost { client: 9 })];
+        let second = vec![(3, Record::ReopenWaves)];
+        let mut bytes = encode_all(&first);
+        let first_len = bytes.len();
+        bytes.extend_from_slice(&encode_all(&second));
+
+        let fail_at = |bytes: &[u8], want_offset: usize| -> JournalError {
+            let mut reader = JournalReader::new(bytes);
+            loop {
+                match reader.next_record() {
+                    Ok(Some(_)) => continue,
+                    Ok(None) => panic!("corruption was silently tolerated"),
+                    Err(e) => {
+                        let msg = e.to_string();
+                        assert!(
+                            msg.contains(&format!("offset {want_offset}")),
+                            "error must name the offset: {msg}"
+                        );
+                        return e;
+                    }
+                }
+            }
+        };
+
+        // payload byte of record 0
+        let mut b = bytes.clone();
+        b[RECORD_HEADER_LEN] ^= 0xFF;
+        assert!(matches!(fail_at(&b, 0), JournalError::ChecksumMismatch { offset: 0 }));
+
+        // checksum field of record 1
+        let mut b = bytes.clone();
+        b[first_len + 4] ^= 0x01;
+        assert!(matches!(
+            fail_at(&b, first_len),
+            JournalError::ChecksumMismatch { .. }
+        ));
+
+        // magic byte
+        let mut b = bytes.clone();
+        b[0] = 0x00;
+        assert!(matches!(fail_at(&b, 0), JournalError::BadMagic { offset: 0 }));
+
+        // version byte
+        let mut b = bytes.clone();
+        b[2] = JOURNAL_VERSION + 1;
+        assert!(matches!(fail_at(&b, 0), JournalError::BadVersion { offset: 0, .. }));
+
+        // kind byte (an out-of-range discriminant)
+        let mut b = bytes;
+        b[3] = 0xEE;
+        assert!(matches!(fail_at(&b, 0), JournalError::BadKind { offset: 0, got: 0xEE }));
+    }
+
+    #[test]
+    fn writer_appends_survive_reopen_and_report_round_bytes() {
+        let dir = std::env::temp_dir()
+            .join(format!("ecolora-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("unit.journal");
+
+        let genesis = Record::Genesis {
+            config_digest: 0xDEAD_BEEF,
+            n_workers: 2,
+            shards: 1,
+            policy_tag: 0,
+            quorum_bits: 0,
+            timeout_ms: 0,
+        };
+        let open = Record::RoundOpen { rng_state: [1, 2, 3, 4], alive: vec![true, false] };
+        let up = Record::Uplink { envelope: vec![7u8; 33] };
+        {
+            let mut w = JournalWriter::create(&path, SyncPolicy::Round, &genesis).unwrap();
+            w.append(0, &open).unwrap();
+            w.append(0, &up).unwrap();
+            let rb = w.round_bytes();
+            let mut expect = Vec::new();
+            encode_record(&mut expect, 0, &open);
+            encode_record(&mut expect, 0, &up);
+            assert_eq!(rb, expect.len() as u64, "round_bytes counts open..now");
+            w.append(
+                0,
+                &Record::RoundClose {
+                    active_cohort: 1,
+                    mux_workers: 0,
+                    worker_drops: 0,
+                    worker_rejoins: 0,
+                    journal_bytes: rb,
+                    global_digest: 5,
+                    shard_digests: vec![6],
+                },
+            )
+            .unwrap();
+            w.commit_round().unwrap();
+        }
+        {
+            // reopen in append mode, as --resume does
+            let mut w = JournalWriter::open_append(&path, SyncPolicy::Off).unwrap();
+            w.append(1, &Record::RoundOpen { rng_state: [9, 9, 9, 9], alive: vec![true] })
+                .unwrap();
+            w.commit_round().unwrap();
+        }
+        let (records, torn) = read_journal(&path).unwrap();
+        assert_eq!(torn, 0);
+        assert_eq!(records.len(), 5);
+        assert_eq!(records[0], (0, genesis));
+        assert_eq!(records[1], (0, open));
+        assert_eq!(records[2], (0, up));
+        assert!(matches!(records[3], (0, Record::RoundClose { .. })));
+        assert!(matches!(records[4], (1, Record::RoundOpen { .. })));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn append_uplink_frames_the_envelope_verbatim() {
+        use crate::cluster::protocol::{Envelope, MsgKind};
+        let dir = std::env::temp_dir()
+            .join(format!("ecolora-journal-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("uplink.journal");
+        let env = Envelope::new(MsgKind::TrainResult, 4, 2, 11, vec![1, 2, 3, 4, 5]);
+        let genesis = Record::Genesis {
+            config_digest: 1,
+            n_workers: 1,
+            shards: 1,
+            policy_tag: 0,
+            quorum_bits: 0,
+            timeout_ms: 0,
+        };
+        {
+            let mut w = JournalWriter::create(&path, SyncPolicy::Off, &genesis).unwrap();
+            w.append_uplink(4, false, &env).unwrap();
+            w.append_uplink(5, true, &env).unwrap();
+            w.commit_round().unwrap();
+        }
+        let (records, _) = read_journal(&path).unwrap();
+        match &records[1] {
+            (4, Record::Uplink { envelope }) => assert_eq!(*envelope, env.encode()),
+            other => panic!("expected the on-time uplink, got {other:?}"),
+        }
+        match &records[2] {
+            (5, Record::LateUplink { envelope }) => {
+                assert_eq!(Envelope::decode(envelope).unwrap(), env);
+            }
+            other => panic!("expected the late uplink, got {other:?}"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn digest_f32_is_order_and_bit_sensitive() {
+        let a = digest_f32(&[1.0, 2.0, 3.0]);
+        assert_eq!(a, digest_f32(&[1.0, 2.0, 3.0]), "deterministic");
+        assert_ne!(a, digest_f32(&[3.0, 2.0, 1.0]), "order-sensitive");
+        assert_ne!(a, digest_f32(&[1.0, 2.0, 3.0 + f32::EPSILON]), "bit-sensitive");
+        // -0.0 and 0.0 differ in bits, so they must differ in digest
+        assert_ne!(digest_f32(&[0.0]), digest_f32(&[-0.0]));
+    }
+}

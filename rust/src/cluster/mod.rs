@@ -38,6 +38,11 @@
 //!   a dynamic worker-registration state machine in which a dropped
 //!   worker process is just a straggler (absorbed by the quorum/resample
 //!   machinery) and may rejoin mid-run.
+//! * [`journal`] — the durable coordinator: an append-only, checksummed
+//!   round journal written at every control-plane state transition, and
+//!   replayed by `serve --journal <path> --resume` to rebuild the exact
+//!   pre-crash coordinator state (the on-disk format is normative in
+//!   docs/PROTOCOL.md §8).
 //! * [`netshim`] — optional transport-layer byte meter replaying real
 //!   protocol traffic through the `netsim` discrete-event simulator,
 //!   quorum- and shard-aware, optionally heterogeneous
@@ -58,6 +63,7 @@
 pub mod control;
 pub mod deploy;
 pub mod handshake;
+pub mod journal;
 pub mod mux;
 pub mod netshim;
 pub mod participant;
@@ -74,8 +80,11 @@ use crate::fed::{FedConfig, FedOutcome};
 use crate::netsim::RoundTiming;
 
 pub use control::{ControlPlane, Phase, RoundPolicy, RoundState};
-pub use deploy::{run_remote_worker, serve, ServeOptions, WorkerConnStats, WorkerOptions};
+pub use deploy::{
+    run_remote_worker, serve, JournalOptions, ServeOptions, WorkerConnStats, WorkerOptions,
+};
 pub use handshake::{AuthToken, Rejected};
+pub use journal::{JournalError, JournalReader, JournalWriter, Record, SyncPolicy};
 pub use mux::{EngineCache, MuxOptions};
 pub use netshim::SimProfile;
 pub use participant::Participant;
@@ -279,7 +288,14 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
     // hand drive_rounds the RESOLVED mux pool size so the CSV reports the
     // defaulted value, not the Option
     let opts_resolved = ClusterOptions { mux_workers: Some(mux_workers), ..opts.clone() };
-    let out = deploy::drive_rounds(&mut control, &mut router, &mut pool, &opts_resolved, None)?;
+    let out = deploy::drive_rounds(
+        &mut control,
+        &mut router,
+        &mut pool,
+        &opts_resolved,
+        None,
+        deploy::DriveCtl::fresh(),
+    )?;
     let outcome = control.outcome(out.log, out.reached)?;
 
     // Orderly shutdown: tell every worker, then join; same for shards.

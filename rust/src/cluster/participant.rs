@@ -28,6 +28,7 @@ use crate::model::segment_ranges;
 use crate::util::rng::Rng;
 use crate::xla::PjRtBuffer;
 
+use super::control::FILLED_HORIZON;
 use super::protocol::{DownPayload, Message, TrainResult, TrainTask, UpPayload};
 use super::transport::Conn;
 use super::FaultSpec;
@@ -56,6 +57,15 @@ pub struct Participant {
     update: Vec<f32>,
     comp_out: Compressed,
     up_watermark: usize,
+    /// Results already computed, keyed by task identity `(round, slot,
+    /// client, down_seq)`. A resumed coordinator re-dispatches its
+    /// crashed round bitwise-identically; answering from the cache keeps
+    /// the participant's client state exactly-once while the wire stays
+    /// at-least-once. Pruned past [`FILLED_HORIZON`] (the coordinator
+    /// can no longer fold anything older).
+    done: HashMap<(u64, u32, u32, u64), TrainResult>,
+    /// Highest round seen by the cache pruner.
+    done_round: u64,
 }
 
 impl Participant {
@@ -77,6 +87,8 @@ impl Participant {
             update: Vec::new(),
             comp_out: Compressed::default(),
             up_watermark: 0,
+            done: HashMap::new(),
+            done_round: 0,
         })
     }
 
@@ -91,6 +103,14 @@ impl Participant {
     pub fn handle(&mut self, task: &TrainTask) -> Result<TrainResult> {
         let ci = task.client as usize;
         ensure!(ci < self.cfg.n_clients, "task for unknown client {ci}");
+        // Exactly-once execution under at-least-once delivery: a task
+        // this participant already completed (a resumed coordinator
+        // re-dispatching its crashed round) is answered from the cache
+        // without touching any client state.
+        let key = (task.round, task.slot, task.client, task.down_seq);
+        if let Some(hit) = self.done.get(&key) {
+            return Ok(hit.clone());
+        }
         let lora_total = self.world.session.schema.lora_total;
         let exec_before = self.world.session.exec_seconds.get();
 
@@ -103,18 +123,26 @@ impl Participant {
             }
             DownPayload::SparseWire(_) | DownPayload::DenseF16(_) => {
                 // every stateful delta builds on the previous one —
-                // prove none was lost before mutating the reference
+                // prove none was lost before mutating the reference. A
+                // delta this participant ALREADY applied (a resumed
+                // coordinator redelivering its crashed round's task,
+                // bitwise-identical by construction) is tolerated: the
+                // reference is already at the task's state, so skip the
+                // apply and reuse it.
                 let applied = self.applied_seq.entry(ci).or_insert(0);
-                ensure!(
-                    task.down_seq == *applied + 1,
-                    "downlink reference desync for client {ci}: task carries stateful \
-                     downlink #{}, this participant has applied {} (a delta was lost in \
-                     transit — a restarted or disconnected worker cannot resume this \
-                     client's channel; restart the run)",
-                    task.down_seq,
-                    *applied
-                );
-                *applied += 1;
+                let duplicate = *applied > 0 && task.down_seq == *applied;
+                if !duplicate {
+                    ensure!(
+                        task.down_seq == *applied + 1,
+                        "downlink reference desync for client {ci}: task carries stateful \
+                         downlink #{}, this participant has applied {} (a delta was lost in \
+                         transit — a restarted or disconnected worker cannot resume this \
+                         client's channel; restart the run)",
+                        task.down_seq,
+                        *applied
+                    );
+                    *applied += 1;
+                }
                 let reference = self
                     .refs
                     .entry(ci)
@@ -122,20 +150,22 @@ impl Participant {
                 // apply straight off the task's payload bytes, reusing the
                 // worker's decoder scratch (no payload clone, no per-task
                 // SparseVec)
-                match &task.down {
-                    DownPayload::SparseWire(b) => {
-                        downlink::apply_sparse_down(
-                            b,
-                            reference,
-                            &self.world.kidx,
-                            &mut self.dec,
-                            &mut self.down_sv,
-                        )?;
+                if !duplicate {
+                    match &task.down {
+                        DownPayload::SparseWire(b) => {
+                            downlink::apply_sparse_down(
+                                b,
+                                reference,
+                                &self.world.kidx,
+                                &mut self.dec,
+                                &mut self.down_sv,
+                            )?;
+                        }
+                        DownPayload::DenseF16(b) => {
+                            downlink::apply_dense_f16(b, reference)?;
+                        }
+                        _ => unreachable!(),
                     }
-                    DownPayload::DenseF16(b) => {
-                        downlink::apply_dense_f16(b, reference)?;
-                    }
-                    _ => unreachable!(),
                 }
                 Some(reference.clone())
             }
@@ -214,7 +244,7 @@ impl Participant {
         client.lora = local;
         client.tau = task.round;
 
-        Ok(TrainResult {
+        let res = TrainResult {
             round: task.round,
             slot: task.slot,
             client: task.client,
@@ -229,7 +259,34 @@ impl Participant {
             // arrival from this field (protocol v2)
             stale_from_round: task.round,
             up,
-        })
+        };
+        if task.round > self.done_round {
+            self.done_round = task.round;
+            self.done.retain(|&(r, ..), _| r + FILLED_HORIZON >= task.round);
+        }
+        self.done.insert(key, res.clone());
+        Ok(res)
+    }
+
+    /// Re-send every cached result a resumed coordinator could still
+    /// fold: rounds before `resume_round` but within the coordinator's
+    /// [`FILLED_HORIZON`] dedup window, in (round, slot) order. Covers
+    /// the in-flight straggler whose uplink died with the crashed
+    /// coordinator's socket; anything the journal already folded is
+    /// dropped server-side by the `filled` dedup.
+    pub fn resend_cached(&self, conn: &mut dyn Conn, resume_round: u64) -> Result<()> {
+        let mut keys: Vec<_> = self
+            .done
+            .keys()
+            .copied()
+            .filter(|&(r, ..)| r < resume_round && r + FILLED_HORIZON >= resume_round)
+            .collect();
+        keys.sort_unstable();
+        for key in keys {
+            let res = self.done[&key].clone();
+            conn.send(&Message::TrainResult(res).to_envelope())?;
+        }
+        Ok(())
     }
 }
 
@@ -259,7 +316,7 @@ pub fn run_worker(
             return Err(e);
         }
     };
-    serve_conn(&mut participant, conn.as_mut(), fault)
+    serve_conn(&mut participant, conn.as_mut(), fault, 0)
 }
 
 /// Serve one already-identified connection until `Shutdown`: the task
@@ -267,23 +324,41 @@ pub fn run_worker(
 /// `ecolora worker` processes (after their protocol-v3 join handshake —
 /// see `cluster::deploy::run_remote_worker`, which calls this once per
 /// connection so a rejoining worker keeps its participant state).
+///
+/// `resume_round` is the round the coordinator reported in its
+/// `Welcome` (0 for in-process workers and fresh runs): when non-zero,
+/// the first `TrainTask` of the connection triggers a re-send of every
+/// still-foldable cached result (see [`Participant::resend_cached`]) —
+/// a coordinator that crashed and replayed its journal may have lost
+/// in-flight uplinks with its socket. Deferred to the first task so the
+/// coordinator is provably past its join-wave barrier (which treats
+/// early protocol messages as errors).
 pub fn serve_conn(
     participant: &mut Participant,
     conn: &mut dyn Conn,
     fault: Option<FaultSpec>,
+    resume_round: u64,
 ) -> Result<()> {
+    let mut resend_pending = resume_round > 0;
     loop {
         let env = conn.recv()?;
         let msg = Message::from_envelope(&env)?;
         let step: Result<()> = match msg {
-            Message::TrainTask(task) => participant.handle(&task).and_then(|res| {
-                if let Some(f) = fault {
-                    if f.client == task.client as usize {
-                        std::thread::sleep(f.delay);
+            Message::TrainTask(task) => {
+                let resent: Result<()> = if std::mem::take(&mut resend_pending) {
+                    participant.resend_cached(conn, resume_round)
+                } else {
+                    Ok(())
+                };
+                resent.and_then(|()| participant.handle(&task)).and_then(|res| {
+                    if let Some(f) = fault {
+                        if f.client == task.client as usize {
+                            std::thread::sleep(f.delay);
+                        }
                     }
-                }
-                conn.send(&Message::TrainResult(res).to_envelope())
-            }),
+                    conn.send(&Message::TrainResult(res).to_envelope())
+                })
+            }
             Message::BaseSync { base } => participant.sync_base(base),
             Message::Shutdown => return Ok(()),
             other => bail!("participant: unexpected {:?} message", other.kind()),

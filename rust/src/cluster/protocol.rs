@@ -192,6 +192,16 @@ impl Envelope {
     /// Serialize to the byte-exact wire form (header + payload).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.encoded_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Append the byte-exact wire form to `out` (same bytes as
+    /// [`Envelope::encode`], no intermediate allocation — the coordinator
+    /// journal frames received envelopes through a reusable scratch
+    /// buffer on its hot path).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        let start = out.len();
         out.extend_from_slice(&MAGIC);
         out.push(PROTO_VERSION);
         out.push(self.kind as u8);
@@ -203,9 +213,8 @@ impl Envelope {
         out.extend_from_slice(&self.stale_from_round.to_le_bytes());
         out.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.payload);
-        let c = fnv1a_parts(&out[0..4], &out[8..]);
-        out[4..8].copy_from_slice(&c.to_le_bytes());
-        out
+        let c = fnv1a_parts(&out[start..start + 4], &out[start + 8..]);
+        out[start + 4..start + 8].copy_from_slice(&c.to_le_bytes());
     }
 
     /// Parse and validate one encoded envelope (exact-length input).

@@ -113,6 +113,9 @@ pub struct GatheredAgg {
     pub late_evicted: usize,
     /// Shard count that produced this aggregate.
     pub shards: usize,
+    /// Per-shard delta digest in shard-id order (`ShardReport::digest`)
+    /// — journaled at round close, verified by `serve --resume` replay.
+    pub shard_digests: Vec<u64>,
 }
 
 /// Router + shard-thread pool. One per cluster run; geometry can change
@@ -260,6 +263,7 @@ impl Router {
             queue_max: self.queue_max,
             late_evicted: 0,
             shards: self.txs.len(),
+            shard_digests: Vec::with_capacity(self.txs.len()),
         };
         // gather in shard-id order: deltas scatter to disjoint spans and
         // the tallies are commutative, so this order is cosmetic
@@ -273,6 +277,7 @@ impl Router {
             out.covered.extend(rep.covered);
             out.shard_agg_s_max = out.shard_agg_s_max.max(rep.agg_s);
             out.late_evicted += rep.late_evicted;
+            out.shard_digests.push(rep.digest);
         }
         Ok(out)
     }

@@ -28,6 +28,7 @@ use crate::fed::server::SegmentAggregator;
 use crate::fed::staleness;
 use crate::metrics::CommTotals;
 
+use super::journal;
 use super::protocol::{TrainResult, UpPayload};
 
 /// Cap on buffered straggler payload bytes (sparse wire bytes, or
@@ -306,6 +307,10 @@ pub struct ShardReport {
     /// Late arrivals evicted by the byte-cap backstop this round
     /// (normally 0 — the control plane's global meter fires first).
     pub late_evicted: usize,
+    /// FNV-1a-64 digest of `delta`'s bit pattern — journaled at round
+    /// close so `serve --resume` replay can prove each rebuilt shard
+    /// slice matches the crashed run's, before the global advance.
+    pub digest: u64,
     /// Fatal shard error (a poisoned round: the run must fail loudly).
     pub error: Option<String>,
 }
@@ -418,6 +423,7 @@ impl ShardAggregator {
         let covered = agg.covered();
         let delta = agg.finish();
         self.agg_s += t0.elapsed().as_secs_f64();
+        let digest = journal::digest_f32(&delta);
         ShardReport {
             shard: self.id,
             base,
@@ -427,6 +433,7 @@ impl ShardAggregator {
             covered,
             agg_s: self.agg_s,
             late_evicted: self.late.evicted,
+            digest,
             error: self.error.take(),
         }
     }

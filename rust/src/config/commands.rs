@@ -9,14 +9,15 @@
 //!   netsim    --ul 1 --dl 5 [--bytes-up N --bytes-down N --compute S]
 //!   help
 
+use std::path::PathBuf;
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
 use crate::baselines::Method;
 use crate::cluster::{
-    self, AuthToken, ClusterMode, ClusterOptions, FaultSpec, RoundPolicy, ServeOptions,
-    SimProfile, WorkerOptions,
+    self, AuthToken, ClusterMode, ClusterOptions, FaultSpec, JournalOptions, RoundPolicy,
+    ServeOptions, SimProfile, SyncPolicy, WorkerOptions,
 };
 use crate::compress::{AdaptiveSparsifier, Encoding, SparsMode};
 use crate::data::PartitionKind;
@@ -46,7 +47,9 @@ USAGE: ecolora <subcommand> [flags]
              [--partition dirichlet|clusters|task|iid] [--target-acc X]
              [--csv out.csv] [--verbose]
   serve      --listen <addr:port> --token-file <path> --expect-workers N
-             [--join-timeout-s S] [same run flags as train, minus --cluster/--workers]
+             [--join-timeout-s S] [--journal <path> [--resume]]
+             [--journal-sync always|round|off]
+             [same run flags as train, minus --cluster/--workers]
   worker     --connect <addr:port> --token-file <path> [--worker-id N]
              [--reconnect N] [--dial-timeout-s S] [--inject-slow CLIENT]
              [--inject-delay-ms MS] [same run flags as the serve side]
@@ -496,11 +499,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return Err(anyhow!("--shards expects a positive shard count"));
     }
     let netsim = sim_profile_from_args(args);
+    let journal = match args.get("journal") {
+        Some(path) => {
+            let sync_name = args.get_or("journal-sync", "round");
+            let sync = SyncPolicy::parse(sync_name).ok_or_else(|| {
+                anyhow!("--journal-sync expects always|round|off, got '{sync_name}'")
+            })?;
+            Some(JournalOptions { path: PathBuf::from(path), resume: args.has("resume"), sync })
+        }
+        None => {
+            for flag in ["resume", "journal-sync"] {
+                if args.has(flag) || args.get(flag).is_some() {
+                    return Err(anyhow!("--{flag} requires --journal <path>"));
+                }
+            }
+            None
+        }
+    };
+    // crash-test hook for the recovery integration tests (undocumented
+    // on purpose: it hangs the coordinator)
+    let hold_after_dispatch = args.get("hold-after-dispatch").map(|v| {
+        v.parse::<u64>().map_err(|_| anyhow!("--hold-after-dispatch expects a round index"))
+    });
+    let hold_after_dispatch = hold_after_dispatch.transpose()?;
     let opts = ServeOptions {
         listen: args.get_or("listen", "127.0.0.1:7878").to_string(),
         token,
         expect_workers,
         join_timeout: Duration::from_secs(args.get_u64("join-timeout-s", 600)),
+        journal,
+        hold_after_dispatch,
         cluster: ClusterOptions {
             mode: ClusterMode::Tcp,
             workers: Some(expect_workers),

@@ -103,6 +103,14 @@ pub struct RoundRecord {
     /// downlink build, dispatch, resample waves, and round close. Must
     /// stay O(active cohort), not O(population).
     pub sched_ms: f64,
+    /// Bytes appended to the durable round journal this round (round
+    /// open through the last pre-close record; 0 when `--journal` is
+    /// off). Deterministic: a resumed run re-journals the identical
+    /// record stream.
+    pub journal_bytes: u64,
+    /// Wall milliseconds the round-close journal fsync took (0 under
+    /// `--journal-sync off` and for replayed rounds).
+    pub journal_fsync_ms: f64,
 }
 
 /// Full training telemetry.
@@ -234,12 +242,12 @@ impl RunLog {
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins,population,active_cohort,mux_workers,sched_ms\n",
+            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins,population,active_cohort,mux_workers,sched_ms,journal_bytes,journal_fsync_ms\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{},{},{},{},{:.4}",
+                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{},{},{},{},{:.4},{},{:.4}",
                 r.round,
                 r.global_loss,
                 r.eval_acc.map_or(String::from(""), |a| format!("{a:.4}")),
@@ -270,6 +278,8 @@ impl RunLog {
                 r.active_cohort,
                 r.mux_workers,
                 r.sched_ms,
+                r.journal_bytes,
+                r.journal_fsync_ms,
             );
         }
         s
@@ -404,7 +414,7 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",4,12.5000,7,2,1,3,2,0,0,0,0.0000"), "{row}");
+        assert!(row.ends_with(",4,12.5000,7,2,1,3,2,0,0,0,0.0000,0,0.0000"), "{row}");
         assert_eq!(log.max_shard_agg_ms(), 12.5);
         assert_eq!(log.total_late_evicted(), 2);
         assert_eq!(log.total_worker_drops(), 3);
@@ -428,7 +438,25 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",100000,64,8,3.2500"), "{row}");
+        assert!(row.ends_with(",100000,64,8,3.2500,0,0.0000"), "{row}");
+    }
+
+    #[test]
+    fn journal_columns_round_trip_through_csv() {
+        let mut log = RunLog::new("t");
+        log.push(RoundRecord {
+            round: 0,
+            journal_bytes: 4096,
+            journal_fsync_ms: 1.5,
+            ..Default::default()
+        });
+        let csv = log.to_csv();
+        let header = csv.lines().next().unwrap();
+        for col in ["journal_bytes", "journal_fsync_ms"] {
+            assert!(header.contains(col), "missing column {col}");
+        }
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",4096,1.5000"), "{row}");
     }
 
     #[test]

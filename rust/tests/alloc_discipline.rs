@@ -2,7 +2,9 @@
 //! warm-up, `Compressor::compress_into` + `encode_range_into` rounds and
 //! `Decoder::decode_into` rounds must perform ZERO heap allocations —
 //! every buffer in the sparsify→quantize→Golomb-encode pipeline is
-//! reusable scratch.
+//! reusable scratch. The coordinator's round-journal append path rides
+//! the same bar: journaling an uplink on the accept hot path must not
+//! allocate either.
 //!
 //! Gated behind `ECOLORA_ALLOC_TESTS=1` (the CI perf-smoke job sets it):
 //! a counting global allocator needs a quiet, dedicated test process —
@@ -13,6 +15,8 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use ecolora::cluster::journal::{JournalWriter, Record, SyncPolicy};
+use ecolora::cluster::protocol::Message;
 use ecolora::compress::{wire, Compressed, Compressor, Encoding, KindIndex, SparsMode, SparseVec};
 use ecolora::model::LoraKind;
 use ecolora::util::rng::Rng;
@@ -160,5 +164,79 @@ fn steady_state_decode_does_not_allocate() {
         (allocs, reallocs),
         (0, 0),
         "steady-state decode rounds allocated: {allocs} allocs, {reallocs} reallocs"
+    );
+}
+
+#[test]
+fn steady_state_journal_appends_do_not_allocate() {
+    let _serial = SERIAL.lock().unwrap();
+    if !gated() {
+        return;
+    }
+    let path =
+        std::env::temp_dir().join(format!("ecolora-alloc-journal-{}.bin", std::process::id()));
+    let genesis = Record::Genesis {
+        config_digest: 0xE7,
+        n_workers: 2,
+        shards: 1,
+        policy_tag: 0,
+        quorum_bits: 0,
+        timeout_ms: 0,
+    };
+    let mut jw = JournalWriter::create(&path, SyncPolicy::Round, &genesis).unwrap();
+
+    // the per-round record set the serve loop appends, pre-built so the
+    // armed window measures only the writer (records with heap-backed
+    // fields are reused by reference; Dispatch/DownlinkLost are inline)
+    let open = Record::RoundOpen { rng_state: [1, 2, 3, 4], alive: vec![true, true] };
+    let close = Record::RoundClose {
+        active_cohort: 4,
+        mux_workers: 2,
+        worker_drops: 0,
+        worker_rejoins: 0,
+        journal_bytes: 0,
+        global_digest: 0xD1_6E57,
+        shard_digests: vec![7, 11],
+    };
+    // a bulky envelope standing in for a compressed TrainResult uplink
+    let env = Message::Join {
+        token: vec![0xAB; 2048],
+        config_digest: 0xE7,
+        requested_worker: 0,
+        build: "alloc-probe".into(),
+    }
+    .to_envelope();
+
+    let round = |jw: &mut JournalWriter, t: u64| {
+        jw.append(t, &open).unwrap();
+        for slot in 0..4u32 {
+            jw.append(t, &Record::Dispatch { slot, client: slot, worker: slot % 2, down_seq: t })
+                .unwrap();
+        }
+        for _ in 0..4 {
+            jw.append_uplink(t, false, &env).unwrap();
+        }
+        jw.append(t, &Record::DownlinkLost { client: 3 }).unwrap();
+        jw.append(t, &close).unwrap();
+        jw.commit_round().unwrap();
+    };
+
+    // warm up: grow the scratch buffer to steady-state capacity
+    for t in 0..5 {
+        round(&mut jw, t);
+    }
+
+    arm();
+    for t in 5..8 {
+        round(&mut jw, t);
+    }
+    let (allocs, reallocs) = disarm();
+    assert!(jw.round_bytes() > 0, "the armed rounds must have appended bytes");
+    drop(jw);
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(
+        (allocs, reallocs),
+        (0, 0),
+        "steady-state journal append rounds allocated: {allocs} allocs, {reallocs} reallocs"
     );
 }

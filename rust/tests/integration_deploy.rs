@@ -366,8 +366,15 @@ fn wait_with_timeout(child: &mut Child, what: &str, log: &Path, timeout: Duratio
 }
 
 /// Wall-clock CSV columns that legitimately differ between runs.
-const NONDETERMINISTIC_COLS: &[&str] =
-    &["overhead_s", "compute_s", "quorum_wait_s", "shard_agg_ms_max", "router_queue_max"];
+const NONDETERMINISTIC_COLS: &[&str] = &[
+    "overhead_s",
+    "compute_s",
+    "quorum_wait_s",
+    "shard_agg_ms_max",
+    "router_queue_max",
+    "sched_ms",
+    "journal_fsync_ms",
+];
 
 /// Parse a round-log CSV into (header, rows).
 fn parse_csv(csv: &str) -> (Vec<String>, Vec<Vec<String>>) {

@@ -1,0 +1,408 @@
+//! Coordinator crash-recovery integration (journal + `serve --resume`).
+//!
+//! The headline durability claim of the round journal: a coordinator
+//! SIGKILLed mid-round and relaunched with `--resume` produces a round
+//! log **bitwise identical** on every deterministic CSV column to an
+//! uninterrupted run of the same configuration. The suite proves it
+//! end-to-end with real processes:
+//!
+//!  1. baseline: `serve --journal` + 2 `worker` processes, run to
+//!     completion (the baseline journals too — `journal_bytes` is a
+//!     deterministic column, so both runs must pay the same write path);
+//!  2. crashed: the same topology with the undocumented
+//!     `--hold-after-dispatch <t>` crash hook; once the serve log shows
+//!     round `t` dispatched, the coordinator is killed with SIGKILL —
+//!     no drop handlers, no flush-on-exit, exactly the crash the
+//!     journal exists for;
+//!  3. resumed: `serve --journal <same> --resume` on the same port
+//!     replays closed rounds, discards the torn round-`t` tail, and
+//!     re-runs it live against the workers (which redial under
+//!     `--reconnect` and re-send cached results through the rejoin
+//!     handshake's exactly-once machinery).
+//!
+//! Both round policies are covered: `sync`, and `quorum 0.75` with a
+//! deterministic injected straggler so late-fold accounting crosses the
+//! crash boundary. The kill-9 cases need the tiny artifacts and a
+//! `--features pjrt` build (same gating convention as the other e2e
+//! suites); the CLI-contract tests at the bottom run everywhere.
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use ecolora::runtime::pjrt_available;
+
+// ---- harness (mirrors tests/integration_deploy.rs) --------------------------
+
+fn have_artifacts() -> bool {
+    pjrt_available() && Path::new("artifacts/tiny.manifest.json").exists()
+}
+
+/// Scratch dir for one crash-test run.
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("ecolora-journal-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn free_port() -> u16 {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().port()
+}
+
+fn e2e_flags(rounds: usize) -> Vec<String> {
+    vec![
+        "--test-profile".into(),
+        "tiny".into(),
+        "--eco".into(),
+        "--rounds".into(),
+        rounds.to_string(),
+    ]
+}
+
+fn spawn_logged(bin: &str, args: &[String], log: &Path) -> Child {
+    let out = std::fs::File::create(log).unwrap();
+    let err = out.try_clone().unwrap();
+    Command::new(bin)
+        .args(args)
+        .stdin(Stdio::null())
+        .stdout(Stdio::from(out))
+        .stderr(Stdio::from(err))
+        .spawn()
+        .unwrap_or_else(|e| panic!("spawning {bin}: {e}"))
+}
+
+fn wait_with_timeout(child: &mut Child, what: &str, log: &Path, timeout: Duration) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        match child.try_wait().unwrap() {
+            Some(status) => {
+                if !status.success() {
+                    let tail = std::fs::read_to_string(log).unwrap_or_default();
+                    panic!("{what} exited with {status}; log:\n{tail}");
+                }
+                return true;
+            }
+            None if Instant::now() >= deadline => {
+                let _ = child.kill();
+                let _ = child.wait();
+                let tail = std::fs::read_to_string(log).unwrap_or_default();
+                panic!("{what} did not finish within {timeout:?}; log:\n{tail}");
+            }
+            None => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+}
+
+/// Poll a process log until `needle` shows up (the crash trigger).
+fn wait_for_log(log: &Path, needle: &str, what: &str, timeout: Duration) {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let text = std::fs::read_to_string(log).unwrap_or_default();
+        if text.contains(needle) {
+            return;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "{what}: never logged {needle:?} within {timeout:?}; log:\n{text}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Wall-clock CSV columns that legitimately differ between runs.
+const NONDETERMINISTIC_COLS: &[&str] = &[
+    "overhead_s",
+    "compute_s",
+    "quorum_wait_s",
+    "shard_agg_ms_max",
+    "router_queue_max",
+    "sched_ms",
+    "journal_fsync_ms",
+];
+
+/// Parse a round-log CSV into (header, rows).
+fn parse_csv(csv: &str) -> (Vec<String>, Vec<Vec<String>>) {
+    let mut lines = csv.lines();
+    let header: Vec<String> =
+        lines.next().expect("csv header").split(',').map(|s| s.to_string()).collect();
+    let rows = lines
+        .filter(|l| !l.is_empty())
+        .map(|l| l.split(',').map(|s| s.to_string()).collect())
+        .collect();
+    (header, rows)
+}
+
+fn assert_deterministic_columns_equal(want_csv: &str, got_csv: &str, what: &str) {
+    let (wh, wr) = parse_csv(want_csv);
+    let (gh, gr) = parse_csv(got_csv);
+    assert_eq!(wh, gh, "{what}: csv headers");
+    assert_eq!(wr.len(), gr.len(), "{what}: round count");
+    for (round, (w, g)) in wr.iter().zip(&gr).enumerate() {
+        for (ci, name) in wh.iter().enumerate() {
+            if NONDETERMINISTIC_COLS.contains(&name.as_str()) {
+                continue;
+            }
+            assert_eq!(
+                w[ci], g[ci],
+                "{what}: column {name} diverged at round {round} \
+                 (uninterrupted {:?} vs crash-resumed {:?})",
+                w[ci], g[ci]
+            );
+        }
+    }
+}
+
+// ---- the kill-9 crash-recovery scenario -------------------------------------
+
+struct Fleet {
+    serve: Child,
+    serve_log: PathBuf,
+    workers: Vec<(Child, PathBuf)>,
+}
+
+/// Launch `serve` + 2 `worker` processes for one run of the scenario.
+#[allow(clippy::too_many_arguments)]
+fn launch(
+    bin: &str,
+    dir: &Path,
+    run: &str,
+    addr: &str,
+    token: &str,
+    rounds: usize,
+    serve_extra: &[String],
+    worker_extra: &[String],
+) -> Fleet {
+    let mut serve_args = vec!["serve".to_string()];
+    serve_args.extend(e2e_flags(rounds));
+    serve_args.extend([
+        "--listen".into(),
+        addr.to_string(),
+        "--token-file".into(),
+        token.to_string(),
+        "--expect-workers".into(),
+        "2".into(),
+        "--join-timeout-s".into(),
+        "120".into(),
+    ]);
+    serve_args.extend(serve_extra.iter().cloned());
+    let serve_log = dir.join(format!("{run}-serve.log"));
+    let serve = spawn_logged(bin, &serve_args, &serve_log);
+
+    let mut workers = Vec::new();
+    for i in 0..2 {
+        let mut args = vec!["worker".to_string()];
+        args.extend(e2e_flags(rounds));
+        args.extend([
+            "--connect".into(),
+            addr.to_string(),
+            "--token-file".into(),
+            token.to_string(),
+            "--dial-timeout-s".into(),
+            "120".into(),
+        ]);
+        args.extend(worker_extra.iter().cloned());
+        let log = dir.join(format!("{run}-worker{i}.log"));
+        let child = spawn_logged(bin, &args, &log);
+        workers.push((child, log));
+    }
+    Fleet { serve, serve_log, workers }
+}
+
+fn strs(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+/// The full scenario: uninterrupted baseline, then crash + resume, then
+/// bitwise comparison of every deterministic round-log column.
+fn crash_recovery_case(tag: &str, policy_flags: &[&str], fault_flags: &[&str]) {
+    let bin = env!("CARGO_BIN_EXE_ecolora");
+    let dir = scratch(tag);
+    let token_path = dir.join("token");
+    std::fs::write(&token_path, format!("e2e-journal-{tag}-token\n")).unwrap();
+    let token = token_path.to_str().unwrap().to_string();
+    let rounds = 4;
+    let crash_round = 2; // rounds 0–1 closed in the journal, round 2 torn
+
+    // -- run 1: uninterrupted baseline (journaling enabled for parity) --------
+    let base_csv = dir.join("baseline.csv");
+    let base_addr = format!("127.0.0.1:{}", free_port());
+    let mut serve_extra = strs(policy_flags);
+    serve_extra.extend(strs(&[
+        "--journal",
+        dir.join("baseline.journal").to_str().unwrap(),
+        "--csv",
+        base_csv.to_str().unwrap(),
+    ]));
+    let mut base =
+        launch(bin, &dir, "base", &base_addr, &token, rounds, &serve_extra, &strs(fault_flags));
+    wait_with_timeout(&mut base.serve, "baseline serve", &base.serve_log, Duration::from_secs(300));
+    for (i, (mut w, log)) in base.workers.into_iter().enumerate() {
+        wait_with_timeout(&mut w, &format!("baseline worker {i}"), &log, Duration::from_secs(60));
+    }
+
+    // -- run 2: identical config, crash-hold at round 2, SIGKILL --------------
+    let journal = dir.join("crash.journal");
+    let addr = format!("127.0.0.1:{}", free_port());
+    let mut serve_extra = strs(policy_flags);
+    serve_extra.extend(strs(&[
+        "--journal",
+        journal.to_str().unwrap(),
+        "--csv",
+        dir.join("crash.csv").to_str().unwrap(),
+        "--hold-after-dispatch",
+        &crash_round.to_string(),
+    ]));
+    // workers must survive the coordinator outage and rejoin on their own
+    let mut worker_extra = strs(&["--reconnect", "8"]);
+    worker_extra.extend(strs(fault_flags));
+    let mut crash =
+        launch(bin, &dir, "crash", &addr, &token, rounds, &serve_extra, &worker_extra);
+    wait_for_log(
+        &crash.serve_log,
+        &format!("crash-hold: round {crash_round} dispatched"),
+        "crashed serve",
+        Duration::from_secs(240),
+    );
+    // give the dispatched tasks a moment to land in the worker sockets,
+    // then kill -9: no drop handlers, no flush, the real failure mode
+    std::thread::sleep(Duration::from_millis(300));
+    crash.serve.kill().expect("SIGKILL the held coordinator");
+    let _ = crash.serve.wait();
+
+    // -- run 3: resume from the journal on the same port ----------------------
+    let resumed_csv = dir.join("resumed.csv");
+    let mut serve_extra = strs(policy_flags);
+    serve_extra.extend(strs(&[
+        "--journal",
+        journal.to_str().unwrap(),
+        "--resume",
+        "--csv",
+        resumed_csv.to_str().unwrap(),
+    ]));
+    let mut resumed =
+        launch0(bin, &dir, "resumed", &addr, &token, rounds, &serve_extra);
+    wait_for_log(
+        &resumed.serve_log,
+        "resumed from journal",
+        "resumed serve",
+        Duration::from_secs(120),
+    );
+    wait_with_timeout(
+        &mut resumed.serve,
+        "resumed serve",
+        &resumed.serve_log,
+        Duration::from_secs(300),
+    );
+    // the original worker processes rejoin the resumed coordinator and
+    // must run to a clean shutdown
+    for (i, (mut w, log)) in crash.workers.into_iter().enumerate() {
+        wait_with_timeout(&mut w, &format!("worker {i}"), &log, Duration::from_secs(120));
+    }
+
+    // -- the durability claim --------------------------------------------------
+    let resumed_log = std::fs::read_to_string(&resumed.serve_log).unwrap();
+    assert!(
+        resumed_log.contains(&format!("{crash_round} round(s) replayed")),
+        "resume must replay exactly the closed rounds; log:\n{resumed_log}"
+    );
+    let want = std::fs::read_to_string(&base_csv).unwrap();
+    let got = std::fs::read_to_string(&resumed_csv).unwrap();
+    let (_, rows) = parse_csv(&got);
+    assert_eq!(rows.len(), rounds, "resumed log must span replayed + live rounds");
+    assert_deterministic_columns_equal(&want, &got, tag);
+}
+
+/// Launch a serve alone (the resume leg reuses the crashed run's workers).
+fn launch0(
+    bin: &str,
+    dir: &Path,
+    run: &str,
+    addr: &str,
+    token: &str,
+    rounds: usize,
+    serve_extra: &[String],
+) -> Fleet {
+    let mut serve_args = vec!["serve".to_string()];
+    serve_args.extend(e2e_flags(rounds));
+    serve_args.extend([
+        "--listen".into(),
+        addr.to_string(),
+        "--token-file".into(),
+        token.to_string(),
+        "--expect-workers".into(),
+        "2".into(),
+        "--join-timeout-s".into(),
+        "120".into(),
+    ]);
+    serve_args.extend(serve_extra.iter().cloned());
+    let serve_log = dir.join(format!("{run}-serve.log"));
+    let serve = spawn_logged(bin, &serve_args, &serve_log);
+    Fleet { serve, serve_log, workers: Vec::new() }
+}
+
+#[test]
+fn sigkill_mid_round_resume_is_bitwise_identical_under_sync() {
+    if !have_artifacts() {
+        return;
+    }
+    crash_recovery_case("sync", &[], &[]);
+}
+
+#[test]
+fn sigkill_mid_round_resume_is_bitwise_identical_under_quorum_with_straggler() {
+    if !have_artifacts() {
+        return;
+    }
+    // quorum 0.75 of a 4-slot cohort closes at 3 results; client 0's
+    // uplink is delayed 1s on whichever worker hosts it, so its result
+    // folds in late — the late-buffer accounting must replay across the
+    // crash boundary bit-for-bit. The slot timeout (20s) dwarfs the
+    // injected delay so no resample wave fires.
+    crash_recovery_case(
+        "quorum",
+        &["--round-policy", "quorum", "--quorum", "0.75", "--slot-timeout", "20000"],
+        &["--inject-slow", "0", "--inject-delay-ms", "1000"],
+    );
+}
+
+// ---- CLI contract (ungated) -------------------------------------------------
+
+/// Run `ecolora serve` with the given trailing flags and return
+/// (success, combined output) — for flag-validation assertions that
+/// must fail before any socket or artifact work.
+fn serve_cli(extra: &[&str]) -> (bool, String) {
+    let bin = env!("CARGO_BIN_EXE_ecolora");
+    let mut args: Vec<String> = vec!["serve".into()];
+    args.extend(e2e_flags(2));
+    args.extend(strs(&["--token", "cli-contract", "--expect-workers", "2"]));
+    args.extend(strs(extra));
+    let out = Command::new(bin).args(&args).output().unwrap();
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+#[test]
+fn resume_without_journal_is_refused() {
+    let (ok, text) = serve_cli(&["--resume"]);
+    assert!(!ok, "--resume without --journal must be an error");
+    assert!(text.contains("--resume requires --journal"), "got: {text}");
+}
+
+#[test]
+fn journal_sync_without_journal_is_refused() {
+    let (ok, text) = serve_cli(&["--journal-sync", "always"]);
+    assert!(!ok, "--journal-sync without --journal must be an error");
+    assert!(text.contains("--journal-sync requires --journal"), "got: {text}");
+}
+
+#[test]
+fn bad_journal_sync_policy_is_refused_by_name() {
+    let (ok, text) = serve_cli(&["--journal", "/tmp/never-created.journal", "--journal-sync", "sometimes"]);
+    assert!(!ok, "an unknown sync policy must be an error");
+    assert!(text.contains("always|round|off"), "got: {text}");
+}

@@ -50,6 +50,11 @@ def main():
 
     if not base_doc.get("results"):
         note = base_doc.get("pending", "no results recorded")
+        # surface the hole in the gate as a GitHub Actions annotation so
+        # a green perf-smoke run cannot be mistaken for a passed gate
+        print(f"::warning::{args.baseline} baseline is pending ({note}) — "
+              "perf regressions are NOT gated until a measured baseline "
+              "is committed")
         print(f"perf_compare: baseline is pending ({note}); nothing to gate.")
         print("perf_compare: refresh the baseline per the header of this script.")
         return 0
