@@ -18,6 +18,7 @@ use ecolora::fed::server::SegmentAggregator;
 use ecolora::model::LoraKind;
 use ecolora::util::linalg;
 use ecolora::util::rng::Rng;
+use ecolora::util::simd;
 
 fn main() {
     let b = Bencher::from_env();
@@ -128,6 +129,125 @@ fn main() {
         std::hint::black_box(&acc);
     });
     report.add(&r, Some(n), Some(8 * n));
+
+    // ---- SIMD kernels: scalar reference twin vs runtime dispatch --------------
+    // Pairs quantify what the dispatched path buys on THIS machine; the
+    // committed baseline ratchets only the dispatched names (the scalar
+    // twins are correctness oracles, not perf targets).
+    println!("simd dispatch level: {:?}", simd::level());
+    let thresh = 1.6f32; // keeps ~11% of a standard normal by |x|
+    let mut vf = Vec::new();
+    let mut vu = Vec::new();
+    let mut vb = Vec::new();
+    let mut f16b = Vec::new();
+    simd::f32_to_f16le_append(&values, &mut f16b);
+    let mut addacc = vec![0.0f32; n];
+    let mut ones = vec![0xFFu8; 65_536];
+    *ones.last_mut().unwrap() = 0; // terminated run: the scan's worst case
+
+    let r = b.bench_throughput("simd/abs (scalar)", n, || {
+        simd::scalar::abs_into(&values, &mut vf);
+        std::hint::black_box(&vf);
+    });
+    report.add(&r, Some(n), Some(4 * n));
+    let r = b.bench_throughput("simd/abs (dispatch)", n, || {
+        simd::abs_into(&values, &mut vf);
+        std::hint::black_box(&vf);
+    });
+    report.add(&r, Some(n), Some(4 * n));
+
+    let r = b.bench_throughput("simd/select_ge_abs (scalar)", n, || {
+        simd::scalar::select_ge_abs(&values, thresh, &mut vu);
+        std::hint::black_box(&vu);
+    });
+    report.add(&r, Some(n), Some(4 * n));
+    let r = b.bench_throughput("simd/select_ge_abs (dispatch)", n, || {
+        simd::select_ge_abs(&values, thresh, &mut vu);
+        std::hint::black_box(&vu);
+    });
+    report.add(&r, Some(n), Some(4 * n));
+
+    // value gather over the ~10%-density golomb index set
+    let r = b.bench_throughput("simd/gather_f32 (scalar)", idx.len(), || {
+        vf.clear();
+        simd::scalar::gather_f32(&values, &idx, &mut vf);
+        std::hint::black_box(&vf);
+    });
+    report.add(&r, Some(idx.len()), Some(4 * idx.len()));
+    let r = b.bench_throughput("simd/gather_f32 (dispatch)", idx.len(), || {
+        vf.clear();
+        simd::gather_f32(&values, &idx, &mut vf);
+        std::hint::black_box(&vf);
+    });
+    report.add(&r, Some(idx.len()), Some(4 * idx.len()));
+
+    let r = b.bench_throughput("simd/f32_to_f16le (scalar)", n, || {
+        vb.clear();
+        simd::scalar::f32_to_f16le_append(&values, &mut vb);
+        std::hint::black_box(&vb);
+    });
+    report.add(&r, Some(n), Some(2 * n));
+    let r = b.bench_throughput("simd/f32_to_f16le (dispatch)", n, || {
+        vb.clear();
+        simd::f32_to_f16le_append(&values, &mut vb);
+        std::hint::black_box(&vb);
+    });
+    report.add(&r, Some(n), Some(2 * n));
+
+    let r = b.bench_throughput("simd/f16le_to_f32 (scalar)", n, || {
+        vf.clear();
+        simd::scalar::f16le_to_f32_append(&f16b, &mut vf);
+        std::hint::black_box(&vf);
+    });
+    report.add(&r, Some(n), Some(2 * n));
+    let r = b.bench_throughput("simd/f16le_to_f32 (dispatch)", n, || {
+        vf.clear();
+        simd::f16le_to_f32_append(&f16b, &mut vf);
+        std::hint::black_box(&vf);
+    });
+    report.add(&r, Some(n), Some(2 * n));
+
+    let r = b.bench_throughput("simd/f16le_add (scalar)", n, || {
+        simd::scalar::f16le_add_to_f32(&f16b, &mut addacc);
+        std::hint::black_box(&addacc);
+    });
+    report.add(&r, Some(n), Some(2 * n));
+    let r = b.bench_throughput("simd/f16le_add (dispatch)", n, || {
+        simd::f16le_add_to_f32(&f16b, &mut addacc);
+        std::hint::black_box(&addacc);
+    });
+    report.add(&r, Some(n), Some(2 * n));
+
+    let r = b.bench_throughput("simd/quantize_f16 (scalar)", n, || {
+        vf.clear();
+        simd::scalar::quantize_f16_extend(&values, &mut vf);
+        std::hint::black_box(&vf);
+    });
+    report.add(&r, Some(n), Some(4 * n));
+    let r = b.bench_throughput("simd/quantize_f16 (dispatch)", n, || {
+        vf.clear();
+        simd::quantize_f16_extend(&values, &mut vf);
+        std::hint::black_box(&vf);
+    });
+    report.add(&r, Some(n), Some(4 * n));
+
+    let r = b.bench_throughput("simd/max_abs (scalar)", n, || {
+        std::hint::black_box(simd::scalar::max_abs(&values));
+    });
+    report.add(&r, Some(n), Some(4 * n));
+    let r = b.bench_throughput("simd/max_abs (dispatch)", n, || {
+        std::hint::black_box(simd::max_abs(&values));
+    });
+    report.add(&r, Some(n), Some(4 * n));
+
+    let r = b.bench_throughput("simd/ones_run (scalar)", ones.len(), || {
+        std::hint::black_box(simd::scalar::ones_run_bytes(&ones));
+    });
+    report.add(&r, Some(ones.len()), Some(ones.len()));
+    let r = b.bench_throughput("simd/ones_run (dispatch)", ones.len(), || {
+        std::hint::black_box(simd::ones_run_bytes(&ones));
+    });
+    report.add(&r, Some(ones.len()), Some(ones.len()));
 
     // ---- compiled train step (L2+L1 through PJRT), if artifacts exist --------
     if std::path::Path::new("artifacts/tiny.manifest.json").exists() {

@@ -50,7 +50,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, ensure, Context, Result};
 
-use crate::compress::{wire, Compressed};
+use crate::compress::{wire, Compressed, PayloadArena};
 use crate::fed::downlink;
 use crate::fed::world::{ClientState, WorldSeed};
 use crate::fed::{staleness, FedConfig};
@@ -144,7 +144,10 @@ struct LaneCore {
     down_sv: wire::SparseVec,
     update: Vec<f32>,
     comp_out: Compressed,
-    up_watermark: usize,
+    /// Pooled uplink payload buffers (take → encode → send → recycle);
+    /// per-lane, so pool traffic needs no extra synchronization beyond
+    /// the lane's own core mutex.
+    arena: PayloadArena,
 }
 
 struct Lane {
@@ -458,10 +461,18 @@ fn run_task(plane: &Arc<Plane>, li: usize, task: TrainTask) {
 }
 
 fn send_result(plane: &Plane, li: usize, res: TrainResult) {
-    if let Err(e) =
-        lock_unpoisoned(&plane.lanes[li].tx).send(&Message::TrainResult(res).to_envelope())
-    {
-        lane_fail(plane, li, e);
+    let msg = Message::TrainResult(res);
+    let sent = lock_unpoisoned(&plane.lanes[li].tx).send(&msg.to_envelope());
+    match sent {
+        Ok(()) => {
+            // sent: hand the payload buffer back to the lane's arena pool
+            if let Message::TrainResult(res) = msg {
+                if let UpPayload::SparseWire(b) = res.up {
+                    lock_unpoisoned(&plane.lanes[li].core).arena.recycle(b);
+                }
+            }
+        }
+        Err(e) => lane_fail(plane, li, e),
     }
 }
 
@@ -557,9 +568,7 @@ fn handle_task(plane: &Plane, core: &mut LaneCore, task: &TrainTask) -> Result<T
             let seg = task.segment as usize;
             ensure!(seg < ranges.len(), "segment {seg} out of range");
             let range = ranges[seg].clone();
-            let mut bytes = Vec::with_capacity(core.up_watermark);
-            comp.encode_range_into(&core.comp_out, &range, &mut bytes)?;
-            core.up_watermark = core.up_watermark.max(bytes.len());
+            let bytes = comp.encode_range_arena(&core.comp_out, &range, &mut core.arena)?;
             (UpPayload::SparseWire(bytes), core.comp_out.k)
         }
         _ => {

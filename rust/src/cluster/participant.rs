@@ -20,7 +20,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::compress::{wire, Compressed};
+use crate::compress::{wire, Compressed, PayloadArena};
 use crate::fed::downlink;
 use crate::fed::world::{self, ClientState, World};
 use crate::fed::{staleness, FedConfig};
@@ -50,13 +50,19 @@ pub struct Participant {
     applied_seq: HashMap<usize, u64>,
     /// Codec scratch reused across tasks (§Perf, codec hot path): the
     /// downlink wire decoder + decoded delta, the uplink update vector,
-    /// the compression output, and a running payload-size high-water mark
-    /// used to presize each round's uplink buffer in one allocation.
+    /// and the compression output.
     dec: wire::Decoder,
     down_sv: wire::SparseVec,
     update: Vec<f32>,
     comp_out: Compressed,
-    up_watermark: usize,
+    /// Pooled, high-water-marked uplink payload buffers: every payload a
+    /// task emits is taken from here and recycled once the message has
+    /// been sent (or evicted from the result cache), so the steady state
+    /// allocates nothing per task — including the payload itself (see
+    /// docs/ARCHITECTURE.md §Codec hot path).
+    arena: PayloadArena,
+    /// Scratch for cache eviction (keys pruned per round).
+    prune_keys: Vec<(u64, u32, u32, u64)>,
     /// Results already computed, keyed by task identity `(round, slot,
     /// client, down_seq)`. A resumed coordinator re-dispatches its
     /// crashed round bitwise-identically; answering from the cache keeps
@@ -86,7 +92,8 @@ impl Participant {
             down_sv: wire::SparseVec::default(),
             update: Vec::new(),
             comp_out: Compressed::default(),
-            up_watermark: 0,
+            arena: PayloadArena::default(),
+            prune_keys: Vec::new(),
             done: HashMap::new(),
             done_round: 0,
         })
@@ -109,7 +116,7 @@ impl Participant {
         // without touching any client state.
         let key = (task.round, task.slot, task.client, task.down_seq);
         if let Some(hit) = self.done.get(&key) {
-            return Ok(hit.clone());
+            return Ok(clone_result_arena(hit, &mut self.arena));
         }
         let lora_total = self.world.session.schema.lora_total;
         let exec_before = self.world.session.exec_seconds.get();
@@ -226,9 +233,7 @@ impl Participant {
                 let seg = task.segment as usize;
                 ensure!(seg < ranges.len(), "segment {seg} out of range");
                 let range = ranges[seg].clone();
-                let mut bytes = Vec::with_capacity(self.up_watermark);
-                comp.encode_range_into(&self.comp_out, &range, &mut bytes)?;
-                self.up_watermark = self.up_watermark.max(bytes.len());
+                let bytes = comp.encode_range_arena(&self.comp_out, &range, &mut self.arena)?;
                 (UpPayload::SparseWire(bytes), self.comp_out.k)
             }
             _ => {
@@ -262,10 +267,34 @@ impl Participant {
         };
         if task.round > self.done_round {
             self.done_round = task.round;
-            self.done.retain(|&(r, ..), _| r + FILLED_HORIZON >= task.round);
+            // evict-and-recycle: expired cache entries hand their payload
+            // buffers back to the arena instead of dropping them
+            let mut prune = std::mem::take(&mut self.prune_keys);
+            prune.clear();
+            prune.extend(
+                self.done.keys().copied().filter(|&(r, ..)| r + FILLED_HORIZON < task.round),
+            );
+            for k in prune.drain(..) {
+                if let Some(old) = self.done.remove(&k) {
+                    if let UpPayload::SparseWire(b) = old.up {
+                        self.arena.recycle(b);
+                    }
+                }
+            }
+            self.prune_keys = prune;
         }
-        self.done.insert(key, res.clone());
+        self.done.insert(key, clone_result_arena(&res, &mut self.arena));
         Ok(res)
+    }
+
+    /// Hand a sent (or otherwise finished) result's payload buffer back
+    /// to the participant's arena. The steady-state uplink cycle is
+    /// take → encode → send → recycle; callers that skip the recycle only
+    /// lose pooling, never correctness.
+    pub fn recycle_result(&mut self, res: TrainResult) {
+        if let UpPayload::SparseWire(b) = res.up {
+            self.arena.recycle(b);
+        }
     }
 
     /// Re-send every cached result a resumed coordinator could still
@@ -274,7 +303,7 @@ impl Participant {
     /// the in-flight straggler whose uplink died with the crashed
     /// coordinator's socket; anything the journal already folded is
     /// dropped server-side by the `filled` dedup.
-    pub fn resend_cached(&self, conn: &mut dyn Conn, resume_round: u64) -> Result<()> {
+    pub fn resend_cached(&mut self, conn: &mut dyn Conn, resume_round: u64) -> Result<()> {
         let mut keys: Vec<_> = self
             .done
             .keys()
@@ -283,10 +312,42 @@ impl Participant {
             .collect();
         keys.sort_unstable();
         for key in keys {
-            let res = self.done[&key].clone();
-            conn.send(&Message::TrainResult(res).to_envelope())?;
+            let res = clone_result_arena(&self.done[&key], &mut self.arena);
+            let msg = Message::TrainResult(res);
+            conn.send(&msg.to_envelope())?;
+            if let Message::TrainResult(res) = msg {
+                self.recycle_result(res);
+            }
         }
         Ok(())
+    }
+}
+
+/// Clone a cached result for the wire, drawing the payload copy from the
+/// arena pool instead of a fresh heap allocation (warm after the first
+/// few rounds; the explicit field list keeps this in sync with
+/// `TrainResult` by compile error).
+fn clone_result_arena(res: &TrainResult, arena: &mut PayloadArena) -> TrainResult {
+    let up = match &res.up {
+        UpPayload::SparseWire(b) => {
+            let mut copy = arena.take();
+            copy.extend_from_slice(b);
+            UpPayload::SparseWire(copy)
+        }
+        other => other.clone(),
+    };
+    TrainResult {
+        round: res.round,
+        slot: res.slot,
+        client: res.client,
+        segment: res.segment,
+        n_samples: res.n_samples,
+        mean_loss: res.mean_loss,
+        k_a: res.k_a,
+        k_b: res.k_b,
+        exec_s: res.exec_s,
+        stale_from_round: res.stale_from_round,
+        up,
     }
 }
 
@@ -356,7 +417,13 @@ pub fn serve_conn(
                             std::thread::sleep(f.delay);
                         }
                     }
-                    conn.send(&Message::TrainResult(res).to_envelope())
+                    let msg = Message::TrainResult(res);
+                    conn.send(&msg.to_envelope())?;
+                    // sent: the payload buffer goes back to the arena pool
+                    if let Message::TrainResult(res) = msg {
+                        participant.recycle_result(res);
+                    }
+                    Ok(())
                 })
             }
             Message::BaseSync { base } => participant.sync_base(base),

@@ -23,7 +23,7 @@ use std::sync::atomic::{AtomicIsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::compress::{dense_bytes, wire, KindIndex, SparseVec};
+use crate::compress::{dense_bytes, wire, KindIndex, SparsePool, SparseVec};
 use crate::fed::server::SegmentAggregator;
 use crate::fed::staleness;
 use crate::metrics::CommTotals;
@@ -281,7 +281,7 @@ pub struct ShardAggregator {
     /// Recycled `SparseVec`s: close() returns each decoded contribution
     /// here instead of dropping it, so steady-state rounds decode into
     /// warm buffers without heap allocation.
-    pool: Vec<SparseVec>,
+    pool: SparsePool,
 }
 
 /// Cap on recycled decode buffers a shard retains (bounds pool memory at
@@ -329,7 +329,7 @@ impl ShardAggregator {
             agg_s: 0.0,
             error: None,
             dec: wire::Decoder::new(),
-            pool: Vec::new(),
+            pool: SparsePool::new(DECODE_POOL_MAX),
         }
     }
 
@@ -361,14 +361,14 @@ impl ShardAggregator {
                     self.error = Some(format!("shard {}: segment {seg} not owned", self.id));
                     return;
                 }
-                let mut sv = self.pool.pop().unwrap_or_default();
+                let mut sv = self.pool.take();
                 match self.dec.decode_into(&bytes, self.agg.range(seg), kidx, &mut sv) {
                     Ok(()) => {
                         let params = sv.len();
                         Decoded::Sparse { sv, params, bytes: bytes.len() }
                     }
                     Err(e) => {
-                        self.pool.push(sv);
+                        self.pool.recycle(sv);
                         self.error = Some(format!("shard {}: slot {slot} decode: {e:#}", self.id));
                         return;
                     }
@@ -407,9 +407,7 @@ impl ShardAggregator {
                 Decoded::Sparse { sv, params, bytes } => {
                     self.agg.add_sparse(p.seg, &sv, p.w);
                     self.stats.up.add(params, bytes);
-                    if self.pool.len() < DECODE_POOL_MAX {
-                        self.pool.push(sv); // recycle the decode buffer
-                    }
+                    self.pool.recycle(sv); // cap enforced by the pool
                 }
                 Decoded::Dense(v) => {
                     self.agg.add_dense(p.seg, &v, p.w);

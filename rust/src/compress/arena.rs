@@ -1,0 +1,187 @@
+//! Pooled buffer arenas for the uplink hot path (§Perf,
+//! docs/ARCHITECTURE.md §Codec hot path).
+//!
+//! Uplink payloads have an awkward ownership shape for scratch reuse:
+//! the encoded `Vec<u8>` leaves the compressor, travels through a
+//! `TrainResult`, may be copied into the exactly-once result cache, and
+//! is finally consumed by a transport send — so a plain `&mut Vec<u8>`
+//! scratch cannot cover it. [`PayloadArena`] closes that gap with a
+//! recycle pool: every payload is *taken* from the arena (warm capacity,
+//! presized from a high-water mark), and every site that retires a
+//! payload (post-send, cache prune, error path) *recycles* it back.
+//! After warm-up the cycle is allocation-free, which the gated
+//! `alloc_discipline` suite proves with a counting global allocator.
+//!
+//! [`SparsePool`] is the same idea for the shard aggregators' decoded
+//! `SparseVec`s (one live per in-flight uplink, returned on merge).
+
+use super::SparseVec;
+
+/// Default maximum number of pooled payload buffers kept for reuse.
+pub const DEFAULT_POOL_CAP: usize = 32;
+
+/// Recycle pool of uplink payload buffers with a high-water mark.
+///
+/// `take()` hands out a cleared buffer presized to `watermark + 25% + 64`
+/// so steady-state encodes never grow it; `recycle()` returns a retired
+/// buffer (and teaches the arena its length). The pool is bounded so a
+/// burst of in-flight payloads cannot pin memory forever.
+#[derive(Debug)]
+pub struct PayloadArena {
+    pool: Vec<Vec<u8>>,
+    watermark: usize,
+    cap: usize,
+}
+
+impl Default for PayloadArena {
+    fn default() -> Self {
+        PayloadArena::new(DEFAULT_POOL_CAP)
+    }
+}
+
+impl PayloadArena {
+    /// Arena keeping at most `cap` retired buffers for reuse.
+    pub fn new(cap: usize) -> Self {
+        PayloadArena { pool: Vec::new(), watermark: 0, cap }
+    }
+
+    /// A cleared buffer ready for one payload: pooled when available,
+    /// fresh otherwise, presized to the high-water mark plus headroom
+    /// (the encoded length breathes a few bytes round-to-round as the
+    /// kept set rotates — 25% + 64 covers it without regrowth).
+    pub fn take(&mut self) -> Vec<u8> {
+        let mut b = self.pool.pop().unwrap_or_default();
+        b.clear();
+        let target = self.watermark + self.watermark / 4 + 64;
+        if b.capacity() < target {
+            b.reserve(target - b.len());
+        }
+        b
+    }
+
+    /// Teach the arena an observed payload length without returning a
+    /// buffer (used when the buffer itself must keep flowing downstream).
+    pub fn note(&mut self, len: usize) {
+        self.watermark = self.watermark.max(len);
+    }
+
+    /// Return a retired payload buffer to the pool (dropped if the pool
+    /// is full); its length feeds the high-water mark first.
+    pub fn recycle(&mut self, b: Vec<u8>) {
+        self.watermark = self.watermark.max(b.len());
+        if self.pool.len() < self.cap {
+            self.pool.push(b);
+        }
+    }
+
+    /// Largest payload length seen so far.
+    pub fn watermark(&self) -> usize {
+        self.watermark
+    }
+
+    /// Number of buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+/// Bounded recycle pool of decoded [`SparseVec`]s (shard aggregators:
+/// one live per in-flight uplink, recycled on merge or decode error).
+#[derive(Debug)]
+pub struct SparsePool {
+    pool: Vec<SparseVec>,
+    cap: usize,
+}
+
+impl SparsePool {
+    /// Pool keeping at most `cap` retired vectors for reuse.
+    pub fn new(cap: usize) -> Self {
+        SparsePool { pool: Vec::new(), cap }
+    }
+
+    /// A cleared `SparseVec`: pooled (warm capacity) when available.
+    pub fn take(&mut self) -> SparseVec {
+        self.pool.pop().unwrap_or_default()
+    }
+
+    /// Return a retired vector to the pool (cleared here, capacity kept;
+    /// dropped if the pool is full).
+    pub fn recycle(&mut self, mut sv: SparseVec) {
+        sv.clear();
+        if self.pool.len() < self.cap {
+            self.pool.push(sv);
+        }
+    }
+
+    /// Number of vectors currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.pool.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watermark_grows_and_presizes_take() {
+        let mut a = PayloadArena::new(4);
+        let mut b = a.take();
+        assert_eq!(b.len(), 0);
+        b.extend_from_slice(&[0u8; 1000]);
+        a.recycle(b);
+        assert_eq!(a.watermark(), 1000);
+        // a fresh take must be presized past the watermark + headroom
+        let b2 = a.take();
+        assert!(b2.is_empty());
+        assert!(b2.capacity() >= 1000 + 250 + 64, "cap={}", b2.capacity());
+        // note() teaches the watermark without a buffer
+        a.note(5000);
+        assert_eq!(a.watermark(), 5000);
+        assert!(a.take().capacity() >= 5000);
+    }
+
+    #[test]
+    fn pool_capacity_is_bounded() {
+        let mut a = PayloadArena::new(2);
+        for _ in 0..5 {
+            a.recycle(vec![0u8; 10]);
+        }
+        assert_eq!(a.pooled(), 2);
+        // takes drain the pool, then fall back to fresh buffers
+        let (x, y, z) = (a.take(), a.take(), a.take());
+        assert_eq!(a.pooled(), 0);
+        assert!(x.is_empty() && y.is_empty() && z.is_empty());
+    }
+
+    #[test]
+    fn recycled_buffers_are_reused_warm() {
+        let mut a = PayloadArena::new(4);
+        let mut b = a.take();
+        b.extend_from_slice(&[7u8; 512]);
+        let ptr = b.as_ptr();
+        a.recycle(b);
+        let b2 = a.take();
+        // same backing allocation, cleared for the next payload
+        assert_eq!(b2.as_ptr(), ptr);
+        assert!(b2.is_empty());
+    }
+
+    #[test]
+    fn sparse_pool_recycles_cleared_with_capacity() {
+        let mut p = SparsePool::new(2);
+        let mut sv = p.take();
+        sv.idx.extend(0..100u32);
+        sv.vals.extend((0..100).map(|i| i as f32));
+        p.recycle(sv);
+        assert_eq!(p.pooled(), 1);
+        let sv2 = p.take();
+        assert!(sv2.is_empty());
+        assert!(sv2.idx.capacity() >= 100 && sv2.vals.capacity() >= 100);
+        // bounded: extra recycles beyond cap are dropped
+        p.recycle(SparseVec::default());
+        p.recycle(SparseVec::default());
+        p.recycle(SparseVec::default());
+        assert_eq!(p.pooled(), 2);
+    }
+}

@@ -3,6 +3,7 @@
 //! Golomb-coded sparse wire messages.
 
 pub mod adaptive;
+pub mod arena;
 pub mod golomb;
 pub mod quant;
 pub mod residual;
@@ -12,11 +13,12 @@ pub mod wire;
 use std::sync::Arc;
 
 pub use adaptive::AdaptiveSparsifier;
+pub use arena::{PayloadArena, SparsePool};
 pub use residual::Residual;
 pub use wire::{Decoder, EncodeScratch, Encoding, KindIndex, SparseVec};
 
 use crate::model::LoraKind;
-use crate::util::half::quantize_f16;
+use crate::util::simd;
 
 /// How updates are sparsified (ablation axis for Tables 3 & 5).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -48,6 +50,8 @@ struct Scratch {
     fam_kept: Vec<u32>,
     /// Merged global kept indices, pre f16-zero filter.
     merged: Vec<u32>,
+    /// Gathered + f16-quantized kept values (batched kernel output).
+    qvals: Vec<f32>,
     /// Wire-encode buffers (compacted blocks + bit writer).
     enc: wire::EncodeScratch,
 }
@@ -121,8 +125,7 @@ impl Compressor {
         if matches!(self.mode, SparsMode::Off) {
             let dense = out.dense.get_or_insert_with(Vec::new);
             dense.clear();
-            dense.reserve(combined.len());
-            dense.extend(combined.iter().map(|&v| quantize_f16(v)));
+            simd::quantize_f16_extend(combined, dense);
             out.sv.idx.reserve(dense.len());
             out.sv.idx.extend(0..dense.len() as u32);
             out.sv.vals.extend_from_slice(dense);
@@ -138,8 +141,7 @@ impl Compressor {
             let (fam, _r0) = self.kidx.in_range(kind, &(0..combined.len()));
             let fam_vals = &mut self.scratch.fam_vals;
             fam_vals.clear();
-            fam_vals.reserve(fam.len());
-            fam_vals.extend(fam.iter().map(|&p| combined[p as usize]));
+            simd::gather_f32(combined, fam, fam_vals);
             let keep = ((fam_vals.len() as f64) * k).round() as usize;
             topk::topk_indices_into(
                 fam_vals,
@@ -147,15 +149,20 @@ impl Compressor {
                 &mut self.scratch.mags,
                 &mut self.scratch.fam_kept,
             );
-            merged.extend(self.scratch.fam_kept.iter().map(|&c| fam[c as usize]));
+            simd::gather_u32(fam, &self.scratch.fam_kept, merged);
         }
         merged.sort_unstable();
         // Drop entries whose f16 image is exactly zero — transmitting them
         // is pure waste (e.g. FFA-LoRA's frozen-A updates are all zero).
+        // NaN survives the filter (NaN != 0.0) and -0.0 is dropped, exactly
+        // like the old per-entry scalar quantize.
+        let qvals = &mut self.scratch.qvals;
+        qvals.clear();
+        simd::gather_f32(combined, merged, qvals);
+        simd::quantize_f16_inplace(qvals);
         out.sv.idx.reserve(merged.len());
         out.sv.vals.reserve(merged.len());
-        for &i in merged.iter() {
-            let q = quantize_f16(combined[i as usize]);
+        for (&i, &q) in merged.iter().zip(qvals.iter()) {
             if q != 0.0 {
                 out.sv.idx.push(i);
                 out.sv.vals.push(q);
@@ -195,6 +202,23 @@ impl Compressor {
         self.encode_range_into(c, range, &mut out)?;
         Ok(out)
     }
+
+    /// Wire-encode into a buffer taken from `arena` (warm, presized from
+    /// the arena's high-water mark). The returned payload is owned — it
+    /// flows through the `TrainResult` to the transport send — and every
+    /// retirement site recycles it back into the same arena, closing the
+    /// last per-task allocation (docs/ARCHITECTURE.md §Codec hot path).
+    pub fn encode_range_arena(
+        &mut self,
+        c: &Compressed,
+        range: &std::ops::Range<usize>,
+        arena: &mut PayloadArena,
+    ) -> anyhow::Result<Vec<u8>> {
+        let mut out = arena.take();
+        self.encode_range_into(c, range, &mut out)?;
+        arena.note(out.len());
+        Ok(out)
+    }
 }
 
 /// Bytes for a dense f16 transmission of `n` parameters (baselines and the
@@ -206,6 +230,7 @@ pub fn dense_bytes(n: usize) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::half::quantize_f16;
     use crate::util::rng::Rng;
 
     fn setup(n: usize) -> (Arc<Vec<LoraKind>>, Arc<KindIndex>) {

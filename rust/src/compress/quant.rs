@@ -57,7 +57,7 @@ pub struct TernaryCompressed {
 }
 
 pub fn ternary_compress(x: &[f32], threshold_frac: f32) -> TernaryCompressed {
-    let maxabs = x.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    let maxabs = crate::util::simd::max_abs(x);
     let thr = threshold_frac * maxabs;
     // scale = mean |x| over the kept entries (unbiased-ish reconstruction)
     let kept: Vec<f32> = x.iter().filter(|v| v.abs() > thr).map(|v| v.abs()).collect();
@@ -97,7 +97,7 @@ pub fn ternary_bytes(len: usize) -> usize {
 /// Uniform b-bit stochastic quantization in [-max|x|, max|x|].
 pub fn uniform_quantize(x: &[f32], bits: u32, rng: &mut Rng) -> (Vec<u32>, f32) {
     assert!(bits >= 1 && bits <= 16);
-    let maxabs = x.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-30);
+    let maxabs = crate::util::simd::max_abs(x).max(1e-30);
     let levels = (1u32 << bits) - 1;
     let q = x
         .iter()

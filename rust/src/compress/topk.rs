@@ -22,27 +22,33 @@ pub fn topk_indices_into(values: &[f32], keep: usize, mags: &mut Vec<f32>, out: 
     // Quickselect over magnitudes in the caller's scratch buffer; the
     // strictly-above count falls out of the partition bookkeeping, so no
     // second full scan is needed.
-    mags.clear();
-    mags.reserve(n);
-    mags.extend(values.iter().map(|v| v.abs()));
+    crate::util::simd::abs_into(values, mags);
     let (thresh, above) = quickselect_desc(mags, keep - 1);
 
-    // Collect indices >= threshold; ties broken by index order, trimmed to
-    // exactly `keep` so the wire size is deterministic.
-    out.reserve(keep);
+    // SIMD threshold scan collects every index with |v| >= thresh in
+    // ascending order; the scalar trim below then keeps all strict
+    // "aboves" plus the first (keep - above) ties by index — exactly the
+    // selection (and tie-break order) of the old fused scalar loop.
+    // `above <= keep - 1` always holds (quickselect's fused count starts
+    // at the k-th rank), so the subtraction cannot underflow even on
+    // NaN-containing input.
+    crate::util::simd::select_ge_abs(values, thresh, out);
     let mut ties_allowed = keep - above;
-    for (i, v) in values.iter().enumerate() {
-        let m = v.abs();
+    let (mut r, mut w) = (0usize, 0usize);
+    while r < out.len() && w < keep {
+        let i = out[r];
+        r += 1;
+        let m = values[i as usize].abs();
         if m > thresh {
-            out.push(i as u32);
-        } else if m == thresh && ties_allowed > 0 {
-            out.push(i as u32);
+            out[w] = i;
+            w += 1;
+        } else if ties_allowed > 0 {
+            out[w] = i;
+            w += 1;
             ties_allowed -= 1;
         }
-        if out.len() == keep {
-            break;
-        }
     }
+    out.truncate(w);
 }
 
 /// Indices (ascending) of the `keep` largest-magnitude entries.
@@ -210,6 +216,67 @@ mod tests {
             topk_indices_into(&values, keep, &mut mags, &mut out);
             assert_eq!(out, topk_indices(&values, keep), "n={n}");
         }
+    }
+
+    #[test]
+    fn degenerate_inputs_are_stable() {
+        let mut mags = vec![9.9f32; 8]; // dirty scratch must not leak through
+        let mut out = vec![77u32; 8];
+
+        // keep == 0 clears the output
+        topk_indices_into(&[1.0, -2.0, 3.0], 0, &mut mags, &mut out);
+        assert!(out.is_empty());
+
+        // empty input clears the output
+        out.extend([5, 6]);
+        topk_indices_into(&[], 4, &mut mags, &mut out);
+        assert!(out.is_empty());
+
+        // keep == len and keep > len both select everything, in order
+        topk_indices_into(&[4.0, -1.0, 0.0], 3, &mut mags, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+        topk_indices_into(&[4.0, -1.0, 0.0], 100, &mut mags, &mut out);
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn all_equal_magnitudes_tie_break_by_lowest_index() {
+        // every magnitude ties: selection must be the first `keep` indices,
+        // pinning the tie-break order the SIMD threshold scan must preserve
+        let values = vec![-2.5f32; 64];
+        for keep in [1usize, 7, 63, 64] {
+            let idx = topk_indices(&values, keep);
+            assert_eq!(idx, (0..keep as u32).collect::<Vec<_>>(), "keep={keep}");
+        }
+    }
+
+    #[test]
+    fn tie_break_order_is_pinned_across_interleaved_ties() {
+        // thresh = 1, above = 2 (5.0 and 9.0): two tie slots go to the
+        // lowest-index ties (0 and 2), NOT to the later tie at index 5,
+        // and the strict above at index 4 survives past skipped ties
+        let values = [1.0f32, 5.0, 1.0, -1.0, 9.0, 1.0];
+        assert_eq!(topk_indices(&values, 4), vec![0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn nan_values_are_never_selected() {
+        let mut values: Vec<f32> = (0..200).map(|i| ((i as f32) - 100.0) * 0.1).collect();
+        for i in (0..200).step_by(17) {
+            values[i] = f32::NAN;
+        }
+        let keep = 40;
+        let idx = topk_indices(&values, keep);
+        // NaN fails every ordered compare, so it can shrink the selection
+        // but must never enter it; order stays ascending unique
+        assert!(idx.len() <= keep);
+        assert!(idx.windows(2).all(|w| w[0] < w[1]));
+        assert!(idx.iter().all(|&i| !values[i as usize].is_nan()));
+        // warm-scratch rerun is deterministic
+        let mut mags = Vec::new();
+        let mut out = Vec::new();
+        topk_indices_into(&values, keep, &mut mags, &mut out);
+        assert_eq!(out, idx);
     }
 
     #[test]

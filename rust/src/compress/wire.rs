@@ -33,7 +33,7 @@ use anyhow::{anyhow, ensure, Result};
 use crate::compress::golomb;
 use crate::model::LoraKind;
 use crate::util::bitstream::{BitReader, BitWriter};
-use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::util::simd;
 
 const VERSION: u8 = 1;
 
@@ -142,6 +142,9 @@ fn read_u32(buf: &[u8], pos: &mut usize) -> Result<u32> {
 #[derive(Default)]
 pub struct EncodeScratch {
     compact: Vec<u32>,
+    /// Window positions of the kept entries of the current kind — the
+    /// gather map feeding the SIMD value pack.
+    wpos: Vec<u32>,
     vals: Vec<f32>,
     bw: BitWriter,
 }
@@ -182,25 +185,30 @@ pub fn encode_into(
     out.push(2);
     for (kind, k) in [(LoraKind::A, k_hint.0), (LoraKind::B, k_hint.1)] {
         let (fam, _rank0) = kidx.in_range(kind, range);
-        // Compact kept indices of this kind into family coordinates.
+        // Compact kept indices of this kind into family coordinates; the
+        // window positions of the matches become the gather map for the
+        // batched SIMD value pack below.
         let compact = &mut scratch.compact;
-        let vals = &mut scratch.vals;
+        let wpos = &mut scratch.wpos;
         compact.clear();
-        vals.clear();
+        wpos.clear();
         compact.reserve(win_idx.len());
-        vals.reserve(win_idx.len());
+        wpos.reserve(win_idx.len());
         let mut cursor = 0usize;
-        for (&i, &v) in win_idx.iter().zip(win_vals) {
+        for (w, &i) in win_idx.iter().enumerate() {
             // advance cursor in fam to find i (both ascending)
             while cursor < fam.len() && fam[cursor] < i {
                 cursor += 1;
             }
             if cursor < fam.len() && fam[cursor] == i {
                 compact.push(cursor as u32);
-                vals.push(v);
+                wpos.push(w as u32);
                 cursor += 1;
             }
         }
+        let vals = &mut scratch.vals;
+        vals.clear();
+        simd::gather_f32(win_vals, wpos, vals);
         let b = golomb::rice_param_for_density(k);
         out.push(match kind {
             LoraKind::A => 0,
@@ -225,9 +233,7 @@ pub fn encode_into(
         push_u32(out, bw.byte_len() as u32);
         out.reserve(bw.byte_len() + 2 * vals.len());
         bw.drain_into(out);
-        for &v in vals.iter() {
-            out.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
-        }
+        simd::f32_to_f16le_append(vals, out);
     }
     Ok(())
 }
@@ -254,6 +260,8 @@ pub fn encode(
 #[derive(Default)]
 pub struct Decoder {
     compact: Vec<u32>,
+    /// Batch-widened f16 values of the current block.
+    vals: Vec<f32>,
     blocks: Vec<Vec<(u32, f32)>>,
     cursors: Vec<usize>,
 }
@@ -333,14 +341,18 @@ impl Decoder {
                     return Err(anyhow!("wire: compact index out of family range"));
                 }
             }
+            // batch-widen the whole value block (count == compact.len(),
+            // guaranteed by the index decoders above)
+            let vb = bytes
+                .get(pos..pos + 2 * count)
+                .ok_or_else(|| anyhow!("wire: truncated values"))?;
+            pos += 2 * count;
+            let vals = &mut self.vals;
+            vals.clear();
+            simd::f16le_to_f32_append(vb, vals);
             let block = &mut self.blocks[bi];
             block.reserve(count);
-            for &c in compact.iter() {
-                let vb = bytes
-                    .get(pos..pos + 2)
-                    .ok_or_else(|| anyhow!("wire: truncated values"))?;
-                pos += 2;
-                let v = f16_bits_to_f32(u16::from_le_bytes(vb.try_into().unwrap()));
+            for (&c, &v) in compact.iter().zip(vals.iter()) {
                 block.push((fam[c as usize], v));
             }
         }

@@ -15,7 +15,7 @@ use anyhow::Result;
 
 use crate::compress::{wire, Compressed, Compressor, Encoding, KindIndex, SparsMode};
 use crate::model::LoraKind;
-use crate::util::half::{f16_bits_to_f32, f32_to_f16_bits};
+use crate::util::simd;
 
 /// Per-client downlink channel.
 struct Channel {
@@ -71,9 +71,7 @@ pub fn apply_dense_f16(bytes: &[u8], reference: &mut [f32]) -> Result<usize> {
         bytes.len(),
         reference.len()
     );
-    for (r, ch) in reference.iter_mut().zip(bytes.chunks_exact(2)) {
-        *r += f16_bits_to_f32(u16::from_le_bytes([ch[0], ch[1]]));
-    }
+    simd::f16le_add_to_f32(bytes, reference);
     Ok(reference.len())
 }
 
@@ -163,9 +161,7 @@ impl DownlinkState {
             Some(d) => {
                 let msg = want_wire.then(|| {
                     let mut w = Vec::with_capacity(2 * d.len());
-                    for &v in d {
-                        w.extend_from_slice(&f32_to_f16_bits(v).to_le_bytes());
-                    }
+                    simd::f32_to_f16le_append(d, &mut w);
                     DownWire::DenseF16(w)
                 });
                 (crate::compress::dense_bytes(d.len()), msg)

@@ -198,6 +198,17 @@ impl<'a> BitReader<'a> {
         loop {
             let byte = (self.pos / 8) as usize;
             let off = (self.pos % 8) as u32;
+            if off == 0 && byte < self.buf.len() {
+                // byte-aligned: bulk-skip whole 0xFF bytes with the blocked
+                // SIMD scan (long Golomb unary runs); the run always stops
+                // before the terminator byte, which the paths below decode
+                let run = crate::util::simd::ones_run_bytes(&self.buf[byte..]);
+                if run > 0 {
+                    self.pos += 8 * run as u64;
+                    q += 8 * run as u64;
+                    continue;
+                }
+            }
             if byte + 8 <= self.buf.len() {
                 // valid bits sit in the top 64-off after the shift; the
                 // zeros shifted in at the bottom cannot extend a run past

@@ -131,6 +131,57 @@ mod tests {
     }
 
     #[test]
+    fn nan_inputs_collapse_to_canonical_quiet_nan() {
+        // every f32 NaN (any payload, either sign) maps to sign | 0x7E00;
+        // the SIMD twin is held to the same canonicalization bit-for-bit
+        assert_eq!(f32_to_f16_bits(f32::NAN), 0x7E00);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x7FC0_1234)), 0x7E00);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x7F80_0001)), 0x7E00); // signaling
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0xFF80_0001)), 0xFE00);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0xFFFF_FFFF)), 0xFE00);
+        // and every f16 NaN pattern re-canonicalizes through f32
+        for h in [0x7C01u16, 0x7DFF, 0x7FFF, 0xFC01, 0xFFFF] {
+            let f = f16_bits_to_f32(h);
+            assert!(f.is_nan(), "pattern {h:#06x}");
+            assert_eq!(f32_to_f16_bits(f), (h & 0x8000) | 0x7E00, "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even_halfway_cases() {
+        // 1 + 0x1000/2^23 sits exactly between 0x3C00 and 0x3C01: ties to
+        // the even code 0x3C00; 1 + 0x3000/2^23 ties up to even 0x3C02
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3F80_1000)), 0x3C00);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3F80_3000)), 0x3C02);
+        // one ulp past / short of halfway breaks the tie normally
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3F80_1001)), 0x3C01);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3F80_2FFF)), 0x3C01);
+    }
+
+    #[test]
+    fn overflow_boundary_rounds_to_infinity() {
+        // 65520 is halfway between f16::MAX (65504) and 2^16: RNE ties up
+        // and out of range -> inf, both signs; just below stays at MAX
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00);
+        assert_eq!(f32_to_f16_bits(-65520.0), 0xFC00);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x477F_EFFF)), 0x7BFF);
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+    }
+
+    #[test]
+    fn subnormal_underflow_boundaries() {
+        // 2^-24 is the smallest f16 subnormal; 2^-25 ties between it and
+        // zero (even -> zero); anything past 2^-25 rounds up to one ulp;
+        // at/below 2^-26 the magnitude collapses to a signed zero
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3380_0000)), 0x0001); // 2^-24
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3300_0000)), 0x0000); // 2^-25
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3300_0001)), 0x0001);
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0x3280_0000)), 0x0000); // 2^-26
+        assert_eq!(f32_to_f16_bits(f32::from_bits(0xB280_0000)), 0x8000); // -2^-26
+    }
+
+    #[test]
     fn roundtrip_all_f16_bit_patterns() {
         // f16 -> f32 -> f16 must be the identity on non-NaN patterns.
         for h in 0u16..=0xFFFF {

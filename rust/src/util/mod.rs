@@ -9,6 +9,7 @@ pub mod json;
 pub mod linalg;
 pub mod propcheck;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 
 /// Poison-tolerant mutex lock: recover the guarded value even if another

@@ -1,0 +1,965 @@
+//! Runtime-dispatched SIMD kernels for the codec hot path (§Perf,
+//! docs/ARCHITECTURE.md §Codec hot path).
+//!
+//! Every kernel ships as a pair: a portable **scalar reference twin** in
+//! [`scalar`] (the semantic ground truth, used on non-x86_64 targets and
+//! under `ECOLORA_SIMD=scalar`) and, on x86_64, a vector implementation
+//! dispatched at runtime through [`level`]. The vector paths are required
+//! to be **bitwise identical** to their twins on every input — including
+//! NaN, infinities, subnormals and signed zeros — because the wire format
+//! is frozen by golden vectors; ungated propchecks in this module enforce
+//! the equivalence.
+//!
+//! Dispatch policy: the CPU feature level is detected once (cached in an
+//! atomic), SSE2 is the x86_64 baseline, AVX2 is used when detected, and
+//! `ECOLORA_SIMD=scalar|sse2` clamps the level downward for debugging and
+//! for benchmarking the scalar twins. All `unsafe` in the crate's SIMD
+//! story is confined to the private `x86` module here: each vector kernel
+//! is an `unsafe fn` with a `#[target_feature]` attribute, and the only
+//! callers are the dispatch wrappers in this file, which prove the
+//! feature via `level()` first.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Instruction-set level the dispatcher resolved to, ordered so that
+/// `>=` comparisons express "at least this wide".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Portable scalar reference kernels (always available).
+    Scalar = 0,
+    /// x86_64 SSE2 — the architectural baseline, always present.
+    Sse2 = 1,
+    /// x86_64 AVX2 — runtime-detected.
+    Avx2 = 2,
+}
+
+/// Cached dispatch level; `u8::MAX` means "not yet detected".
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+
+/// Resolved SIMD dispatch level (feature-detected once, then cached).
+///
+/// `ECOLORA_SIMD=scalar|sse2` clamps the hardware level downward; any
+/// other value (or unset) uses the best level the host supports.
+pub fn level() -> Level {
+    match LEVEL.load(Ordering::Relaxed) {
+        2 => Level::Avx2,
+        1 => Level::Sse2,
+        0 => Level::Scalar,
+        _ => {
+            let hw = hw_level();
+            let lv = match std::env::var("ECOLORA_SIMD").ok().as_deref() {
+                Some("scalar") => Level::Scalar,
+                Some("sse2") => hw.min(Level::Sse2),
+                _ => hw,
+            };
+            LEVEL.store(lv as u8, Ordering::Relaxed);
+            lv
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn hw_level() -> Level {
+    if is_x86_feature_detected!("avx2") {
+        Level::Avx2
+    } else {
+        Level::Sse2
+    }
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn hw_level() -> Level {
+    Level::Scalar
+}
+
+pub mod scalar {
+    //! Scalar reference twins: the semantic ground truth every vector
+    //! kernel must match bitwise. Kept callable so benches can measure
+    //! scalar-vs-SIMD and tests can compare against dispatch.
+
+    use crate::util::half;
+
+    /// Clear `dst` and fill it with `|src[i]|` (sign bit cleared, so NaN
+    /// payloads are preserved exactly like `f32::abs`).
+    pub fn abs_into(src: &[f32], dst: &mut Vec<f32>) {
+        dst.clear();
+        dst.reserve(src.len());
+        dst.extend(src.iter().map(|v| v.abs()));
+    }
+
+    /// Clear `out` and fill it with the ascending indices where
+    /// `|values[i]| >= thresh` (NaN never selects: ordered compare).
+    pub fn select_ge_abs(values: &[f32], thresh: f32, out: &mut Vec<u32>) {
+        out.clear();
+        for (i, v) in values.iter().enumerate() {
+            if v.abs() >= thresh {
+                out.push(i as u32);
+            }
+        }
+    }
+
+    /// Append `src[idx[j]]` for each index (panics on out-of-bounds).
+    pub fn gather_f32(src: &[f32], idx: &[u32], dst: &mut Vec<f32>) {
+        dst.reserve(idx.len());
+        dst.extend(idx.iter().map(|&i| src[i as usize]));
+    }
+
+    /// Append `src[idx[j]]` for each index (panics on out-of-bounds).
+    pub fn gather_u32(src: &[u32], idx: &[u32], dst: &mut Vec<u32>) {
+        dst.reserve(idx.len());
+        dst.extend(idx.iter().map(|&i| src[i as usize]));
+    }
+
+    /// Append each value as little-endian binary16 bytes (RNE rounding,
+    /// `util::half` semantics: NaN collapses to `sign|0x7E00`).
+    pub fn f32_to_f16le_append(src: &[f32], dst: &mut Vec<u8>) {
+        dst.reserve(2 * src.len());
+        for &v in src {
+            dst.extend_from_slice(&half::f32_to_f16_bits(v).to_le_bytes());
+        }
+    }
+
+    /// Append the exact f32 widening of each little-endian binary16 pair
+    /// (a trailing odd byte is ignored).
+    pub fn f16le_to_f32_append(bytes: &[u8], dst: &mut Vec<f32>) {
+        dst.reserve(bytes.len() / 2);
+        for c in bytes.chunks_exact(2) {
+            dst.push(half::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]])));
+        }
+    }
+
+    /// Add the f32 widening of each little-endian binary16 pair into
+    /// `dst` elementwise (stops at the shorter of the two lengths).
+    pub fn f16le_add_to_f32(bytes: &[u8], dst: &mut [f32]) {
+        for (c, d) in bytes.chunks_exact(2).zip(dst.iter_mut()) {
+            *d += half::f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+    }
+
+    /// Append `quantize_f16(src[i])` — the value the receiver of the
+    /// binary16 wire format reconstructs.
+    pub fn quantize_f16_extend(src: &[f32], dst: &mut Vec<f32>) {
+        dst.reserve(src.len());
+        dst.extend(src.iter().map(|&v| half::quantize_f16(v)));
+    }
+
+    /// Quantize each element through binary16 in place.
+    pub fn quantize_f16_inplace(v: &mut [f32]) {
+        for x in v.iter_mut() {
+            *x = half::quantize_f16(*x);
+        }
+    }
+
+    /// Maximum |x| over the slice; NaN entries are ignored (like the
+    /// `m.max(x.abs())` fold) and the empty slice yields `0.0`.
+    pub fn max_abs(v: &[f32]) -> f32 {
+        v.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Length of the leading run of `0xFF` bytes (the Golomb unary-run
+    /// fast path in `BitReader::read_unary`).
+    pub fn ones_run_bytes(buf: &[u8]) -> usize {
+        buf.iter().take_while(|&&b| b == 0xFF).count()
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! x86_64 vector kernels. Every fn is `unsafe` with a
+    //! `#[target_feature]` attribute; the only callers are the dispatch
+    //! wrappers in the parent module, which prove the feature through
+    //! `level()` first. Vector operations sit directly in the `unsafe fn`
+    //! bodies (no nested `unsafe` blocks), so the module compiles
+    //! warning-free both before and after std's intrinsics became
+    //! safe-callable under `target_feature`.
+    //!
+    //! Spare-capacity write pattern used throughout: `reserve`, write
+    //! through the raw spare pointer, then `set_len` — a panic before
+    //! `set_len` (only possible in scalar tails) leaves the Vec length
+    //! untouched, so the partial writes are simply discarded.
+
+    use std::arch::x86_64::*;
+
+    const ABS_MASK: i32 = 0x7FFF_FFFFu32 as i32;
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn abs_into_sse2(src: &[f32], dst: &mut Vec<f32>) {
+        dst.clear();
+        let n = src.len();
+        dst.reserve(n);
+        let mask = _mm_castsi128_ps(_mm_set1_epi32(ABS_MASK));
+        let out = dst.as_mut_ptr();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm_loadu_ps(src.as_ptr().add(i));
+            _mm_storeu_ps(out.add(i), _mm_and_ps(v, mask));
+            i += 4;
+        }
+        while i < n {
+            *out.add(i) = src[i].abs();
+            i += 1;
+        }
+        dst.set_len(n);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn select_ge_abs_sse2(values: &[f32], thresh: f32, out: &mut Vec<u32>) {
+        out.clear();
+        let mask = _mm_castsi128_ps(_mm_set1_epi32(ABS_MASK));
+        let t = _mm_set1_ps(thresh);
+        let n = values.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = _mm_and_ps(_mm_loadu_ps(values.as_ptr().add(i)), mask);
+            // cmpge is an ordered compare: NaN lanes yield false, exactly
+            // like the scalar `v.abs() >= thresh`
+            let mut m = _mm_movemask_ps(_mm_cmpge_ps(v, t)) as u32;
+            while m != 0 {
+                out.push(i as u32 + m.trailing_zeros());
+                m &= m - 1;
+            }
+            i += 4;
+        }
+        while i < n {
+            if values[i].abs() >= thresh {
+                out.push(i as u32);
+            }
+            i += 1;
+        }
+    }
+
+    /// Exact f16→f32 widening on 4 lanes; each 32-bit lane of `h` holds
+    /// one zero-extended binary16 pattern. Mirrors
+    /// `util::half::f16_bits_to_f32` bitwise: subnormals are rebuilt as
+    /// `mant * 2^-24` (an exact power-of-two float multiply, so the
+    /// result bits are identical to the scalar normalization loop).
+    #[target_feature(enable = "sse2")]
+    unsafe fn f16_to_f32_4(h: __m128i) -> __m128 {
+        let sign = _mm_slli_epi32::<16>(_mm_and_si128(h, _mm_set1_epi32(0x8000)));
+        let exp = _mm_and_si128(_mm_srli_epi32::<10>(h), _mm_set1_epi32(0x1F));
+        let mant = _mm_and_si128(h, _mm_set1_epi32(0x03FF));
+        let mant13 = _mm_slli_epi32::<13>(mant);
+        let normal =
+            _mm_or_si128(_mm_slli_epi32::<23>(_mm_add_epi32(exp, _mm_set1_epi32(112))), mant13);
+        let infnan = _mm_or_si128(_mm_set1_epi32(0x7F80_0000), mant13);
+        let scale = _mm_castsi128_ps(_mm_set1_epi32(0x3380_0000)); // 2^-24
+        let sub = _mm_castps_si128(_mm_mul_ps(_mm_cvtepi32_ps(mant), scale));
+        let is0 = _mm_cmpeq_epi32(exp, _mm_setzero_si128());
+        let is31 = _mm_cmpeq_epi32(exp, _mm_set1_epi32(0x1F));
+        // SSE2 blend: or(and(mask, b), andnot(mask, a))
+        let r = _mm_or_si128(_mm_and_si128(is0, sub), _mm_andnot_si128(is0, normal));
+        let r = _mm_or_si128(_mm_and_si128(is31, infnan), _mm_andnot_si128(is31, r));
+        _mm_castsi128_ps(_mm_or_si128(sign, r))
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn f16le_to_f32_append_sse2(bytes: &[u8], dst: &mut Vec<f32>) {
+        let n = bytes.len() / 2;
+        let old = dst.len();
+        dst.reserve(n);
+        let out = dst.as_mut_ptr().add(old);
+        let zero = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let h4 = _mm_loadl_epi64(bytes.as_ptr().add(2 * i) as *const __m128i);
+            _mm_storeu_ps(out.add(i), f16_to_f32_4(_mm_unpacklo_epi16(h4, zero)));
+            i += 4;
+        }
+        while i < n {
+            let h = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+            *out.add(i) = crate::util::half::f16_bits_to_f32(h);
+            i += 1;
+        }
+        dst.set_len(old + n);
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn f16le_add_to_f32_sse2(bytes: &[u8], dst: &mut [f32]) {
+        let n = (bytes.len() / 2).min(dst.len());
+        let zero = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let h4 = _mm_loadl_epi64(bytes.as_ptr().add(2 * i) as *const __m128i);
+            let v = f16_to_f32_4(_mm_unpacklo_epi16(h4, zero));
+            let d = _mm_loadu_ps(dst.as_ptr().add(i));
+            _mm_storeu_ps(dst.as_mut_ptr().add(i), _mm_add_ps(d, v));
+            i += 4;
+        }
+        while i < n {
+            let h = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+            dst[i] += crate::util::half::f16_bits_to_f32(h);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn max_abs_sse2(v: &[f32]) -> f32 {
+        let mask = _mm_castsi128_ps(_mm_set1_epi32(ABS_MASK));
+        let mut acc = _mm_setzero_ps();
+        let n = v.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let a = _mm_and_ps(_mm_loadu_ps(v.as_ptr().add(i)), mask);
+            // maxps returns its SECOND operand when either lane is NaN;
+            // keeping `acc` second makes NaN inputs transparent, matching
+            // the scalar `m.max(x.abs())` fold
+            acc = _mm_max_ps(a, acc);
+            i += 4;
+        }
+        let mut lanes = [0f32; 4];
+        _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+        let mut m = lanes[0].max(lanes[1]).max(lanes[2].max(lanes[3]));
+        while i < n {
+            m = m.max(v[i].abs());
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn ones_run_bytes_sse2(buf: &[u8]) -> usize {
+        let n = buf.len();
+        let ones = _mm_set1_epi8(-1);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let v = _mm_loadu_si128(buf.as_ptr().add(i) as *const __m128i);
+            let m = _mm_movemask_epi8(_mm_cmpeq_epi8(v, ones)) as u32;
+            if m != 0xFFFF {
+                return i + (!m).trailing_zeros() as usize;
+            }
+            i += 16;
+        }
+        while i < n && buf[i] == 0xFF {
+            i += 1;
+        }
+        i
+    }
+
+    /// Exact f16→f32 widening on 8 lanes (256-bit mirror of
+    /// [`f16_to_f32_4`], blends via `blendv_epi8` on full-lane masks).
+    #[target_feature(enable = "avx2")]
+    unsafe fn f16_to_f32_8(h: __m256i) -> __m256 {
+        let sign = _mm256_slli_epi32::<16>(_mm256_and_si256(h, _mm256_set1_epi32(0x8000)));
+        let exp = _mm256_and_si256(_mm256_srli_epi32::<10>(h), _mm256_set1_epi32(0x1F));
+        let mant = _mm256_and_si256(h, _mm256_set1_epi32(0x03FF));
+        let mant13 = _mm256_slli_epi32::<13>(mant);
+        let normal = _mm256_or_si256(
+            _mm256_slli_epi32::<23>(_mm256_add_epi32(exp, _mm256_set1_epi32(112))),
+            mant13,
+        );
+        let infnan = _mm256_or_si256(_mm256_set1_epi32(0x7F80_0000), mant13);
+        let scale = _mm256_castsi256_ps(_mm256_set1_epi32(0x3380_0000)); // 2^-24
+        let sub = _mm256_castps_si256(_mm256_mul_ps(_mm256_cvtepi32_ps(mant), scale));
+        let is0 = _mm256_cmpeq_epi32(exp, _mm256_setzero_si256());
+        let is31 = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(0x1F));
+        let r = _mm256_blendv_epi8(normal, sub, is0);
+        let r = _mm256_blendv_epi8(r, infnan, is31);
+        _mm256_castsi256_ps(_mm256_or_si256(sign, r))
+    }
+
+    /// f32→f16 (RNE) on 8 lanes, an integer transliteration of
+    /// `util::half::f32_to_f16_bits` (each result lane holds the u16
+    /// pattern zero-extended). F16C's `vcvtps2ph` is deliberately NOT
+    /// used: it preserves NaN payloads while the scalar twin collapses
+    /// every NaN to `sign|0x7E00`, and bitwise parity wins. Variable
+    /// shifts past 31 yield 0 in `sllv`/`srlv`, which collapses deep
+    /// subnormal underflow (e < -10) to the scalar path's signed zero.
+    #[target_feature(enable = "avx2")]
+    unsafe fn f32_to_f16_8(x: __m256) -> __m256i {
+        let bits = _mm256_castps_si256(x);
+        let sign = _mm256_and_si256(_mm256_srli_epi32::<16>(bits), _mm256_set1_epi32(0x8000));
+        let exp = _mm256_and_si256(_mm256_srli_epi32::<23>(bits), _mm256_set1_epi32(0xFF));
+        let mant = _mm256_and_si256(bits, _mm256_set1_epi32(0x007F_FFFF));
+        let one = _mm256_set1_epi32(1);
+        let e = _mm256_sub_epi32(exp, _mm256_set1_epi32(112));
+
+        // normal path: round 23→10 mantissa bits to nearest-even; a
+        // mantissa carry rides into the exponent by plain addition, and
+        // the clamp catches both e >= 31 and rounding overflow
+        let rn = _mm256_add_epi32(
+            _mm256_add_epi32(mant, _mm256_set1_epi32(0x0FFF)),
+            _mm256_and_si256(_mm256_srli_epi32::<13>(mant), one),
+        );
+        let outn = _mm256_add_epi32(_mm256_slli_epi32::<10>(e), _mm256_srli_epi32::<13>(rn));
+        let outn = _mm256_blendv_epi8(
+            outn,
+            _mm256_set1_epi32(0x7C00),
+            _mm256_cmpgt_epi32(outn, _mm256_set1_epi32(0x7BFF)),
+        );
+
+        // subnormal path: explicit leading 1, variable-shift RNE
+        let m = _mm256_or_si256(mant, _mm256_set1_epi32(0x0080_0000));
+        let shift = _mm256_sub_epi32(_mm256_set1_epi32(14), e);
+        let half = _mm256_sllv_epi32(one, _mm256_sub_epi32(shift, one));
+        let rs = _mm256_sub_epi32(
+            _mm256_add_epi32(
+                _mm256_add_epi32(m, half),
+                _mm256_and_si256(_mm256_srlv_epi32(m, shift), one),
+            ),
+            one,
+        );
+        let outs = _mm256_srlv_epi32(rs, shift);
+
+        // inf/NaN path: canonical quiet NaN bit when any mantissa bit set
+        let outi = _mm256_or_si256(
+            _mm256_set1_epi32(0x7C00),
+            _mm256_andnot_si256(
+                _mm256_cmpeq_epi32(mant, _mm256_setzero_si256()),
+                _mm256_set1_epi32(0x0200),
+            ),
+        );
+
+        let is_sub = _mm256_cmpgt_epi32(one, e); // e <= 0
+        let is_if = _mm256_cmpeq_epi32(exp, _mm256_set1_epi32(0xFF));
+        let out = _mm256_blendv_epi8(outn, outs, is_sub);
+        let out = _mm256_blendv_epi8(out, outi, is_if);
+        _mm256_or_si256(sign, out)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn f32_to_f16le_append_avx2(src: &[f32], dst: &mut Vec<u8>) {
+        let n = src.len();
+        let old = dst.len();
+        dst.reserve(2 * n);
+        let out = dst.as_mut_ptr().add(old);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h = f32_to_f16_8(_mm256_loadu_ps(src.as_ptr().add(i)));
+            // each lane value fits u16, so packus saturation is a no-op;
+            // pairing the 128-bit halves keeps element order
+            let packed =
+                _mm_packus_epi32(_mm256_castsi256_si128(h), _mm256_extracti128_si256::<1>(h));
+            _mm_storeu_si128(out.add(2 * i) as *mut __m128i, packed);
+            i += 8;
+        }
+        while i < n {
+            let b = crate::util::half::f32_to_f16_bits(src[i]).to_le_bytes();
+            *out.add(2 * i) = b[0];
+            *out.add(2 * i + 1) = b[1];
+            i += 1;
+        }
+        dst.set_len(old + 2 * n);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn f16le_to_f32_append_avx2(bytes: &[u8], dst: &mut Vec<f32>) {
+        let n = bytes.len() / 2;
+        let old = dst.len();
+        dst.reserve(n);
+        let out = dst.as_mut_ptr().add(old);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h8 = _mm_loadu_si128(bytes.as_ptr().add(2 * i) as *const __m128i);
+            _mm256_storeu_ps(out.add(i), f16_to_f32_8(_mm256_cvtepu16_epi32(h8)));
+            i += 8;
+        }
+        while i < n {
+            let h = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+            *out.add(i) = crate::util::half::f16_bits_to_f32(h);
+            i += 1;
+        }
+        dst.set_len(old + n);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn f16le_add_to_f32_avx2(bytes: &[u8], dst: &mut [f32]) {
+        let n = (bytes.len() / 2).min(dst.len());
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let h8 = _mm_loadu_si128(bytes.as_ptr().add(2 * i) as *const __m128i);
+            let v = f16_to_f32_8(_mm256_cvtepu16_epi32(h8));
+            let d = _mm256_loadu_ps(dst.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_add_ps(d, v));
+            i += 8;
+        }
+        while i < n {
+            let h = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+            dst[i] += crate::util::half::f16_bits_to_f32(h);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_f16_extend_avx2(src: &[f32], dst: &mut Vec<f32>) {
+        let n = src.len();
+        let old = dst.len();
+        dst.reserve(n);
+        let out = dst.as_mut_ptr().add(old);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let q = f16_to_f32_8(f32_to_f16_8(_mm256_loadu_ps(src.as_ptr().add(i))));
+            _mm256_storeu_ps(out.add(i), q);
+            i += 8;
+        }
+        while i < n {
+            *out.add(i) = crate::util::half::quantize_f16(src[i]);
+            i += 1;
+        }
+        dst.set_len(old + n);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_f16_inplace_avx2(v: &mut [f32]) {
+        let n = v.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let q = f16_to_f32_8(f32_to_f16_8(_mm256_loadu_ps(v.as_ptr().add(i))));
+            _mm256_storeu_ps(v.as_mut_ptr().add(i), q);
+            i += 8;
+        }
+        while i < n {
+            v[i] = crate::util::half::quantize_f16(v[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_f32_avx2(src: &[f32], idx: &[u32], dst: &mut Vec<f32>) {
+        let n = src.len();
+        let k = idx.len();
+        let old = dst.len();
+        dst.reserve(k);
+        let out = dst.as_mut_ptr().add(old);
+        let mut i = 0usize;
+        if n > 0 && n <= i32::MAX as usize {
+            let nm1 = _mm256_set1_epi32((n - 1) as i32);
+            while i + 8 <= k {
+                let v = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+                // every index in the block must be in-bounds before the
+                // hardware gather touches memory; a failing block drops
+                // to the scalar tail, which panics cleanly on the
+                // offending index (same observable as the scalar twin)
+                let inb = _mm256_cmpeq_epi32(_mm256_min_epu32(v, nm1), v);
+                if _mm256_movemask_epi8(inb) != -1 {
+                    break;
+                }
+                _mm256_storeu_ps(out.add(i), _mm256_i32gather_ps::<4>(src.as_ptr(), v));
+                i += 8;
+            }
+        }
+        let mut w = i;
+        while w < k {
+            *out.add(w) = src[idx[w] as usize];
+            w += 1;
+        }
+        dst.set_len(old + k);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn gather_u32_avx2(src: &[u32], idx: &[u32], dst: &mut Vec<u32>) {
+        let n = src.len();
+        let k = idx.len();
+        let old = dst.len();
+        dst.reserve(k);
+        let out = dst.as_mut_ptr().add(old);
+        let mut i = 0usize;
+        if n > 0 && n <= i32::MAX as usize {
+            let nm1 = _mm256_set1_epi32((n - 1) as i32);
+            while i + 8 <= k {
+                let v = _mm256_loadu_si256(idx.as_ptr().add(i) as *const __m256i);
+                let inb = _mm256_cmpeq_epi32(_mm256_min_epu32(v, nm1), v);
+                if _mm256_movemask_epi8(inb) != -1 {
+                    break;
+                }
+                let g = _mm256_i32gather_epi32::<4>(src.as_ptr() as *const i32, v);
+                _mm256_storeu_si256(out.add(i) as *mut __m256i, g);
+                i += 8;
+            }
+        }
+        let mut w = i;
+        while w < k {
+            *out.add(w) = src[idx[w] as usize];
+            w += 1;
+        }
+        dst.set_len(old + k);
+    }
+}
+
+/// Clear `dst` and fill it with `|src[i]|` (dispatched).
+pub fn abs_into(src: &[f32], dst: &mut Vec<f32>) {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Sse2 {
+        // SAFETY: `level()` proved SSE2 support on this host.
+        return unsafe { x86::abs_into_sse2(src, dst) };
+    }
+    scalar::abs_into(src, dst);
+}
+
+/// Clear `out` and fill it with indices where `|values[i]| >= thresh`
+/// (dispatched; NaN values never select).
+pub fn select_ge_abs(values: &[f32], thresh: f32, out: &mut Vec<u32>) {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Sse2 {
+        // SAFETY: `level()` proved SSE2 support on this host.
+        return unsafe { x86::select_ge_abs_sse2(values, thresh, out) };
+    }
+    scalar::select_ge_abs(values, thresh, out);
+}
+
+/// Append `src[idx[j]]` for each index (dispatched; panics on OOB).
+pub fn gather_f32(src: &[f32], idx: &[u32], dst: &mut Vec<f32>) {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Avx2 {
+        // SAFETY: `level()` proved AVX2 support on this host.
+        return unsafe { x86::gather_f32_avx2(src, idx, dst) };
+    }
+    scalar::gather_f32(src, idx, dst);
+}
+
+/// Append `src[idx[j]]` for each index (dispatched; panics on OOB).
+pub fn gather_u32(src: &[u32], idx: &[u32], dst: &mut Vec<u32>) {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Avx2 {
+        // SAFETY: `level()` proved AVX2 support on this host.
+        return unsafe { x86::gather_u32_avx2(src, idx, dst) };
+    }
+    scalar::gather_u32(src, idx, dst);
+}
+
+/// Append each value as little-endian binary16 bytes (dispatched).
+pub fn f32_to_f16le_append(src: &[f32], dst: &mut Vec<u8>) {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Avx2 {
+        // SAFETY: `level()` proved AVX2 support on this host.
+        return unsafe { x86::f32_to_f16le_append_avx2(src, dst) };
+    }
+    scalar::f32_to_f16le_append(src, dst);
+}
+
+/// Append the f32 widening of each LE binary16 pair (dispatched).
+pub fn f16le_to_f32_append(bytes: &[u8], dst: &mut Vec<f32>) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let lv = level();
+        if lv >= Level::Avx2 {
+            // SAFETY: `level()` proved AVX2 support on this host.
+            return unsafe { x86::f16le_to_f32_append_avx2(bytes, dst) };
+        }
+        if lv >= Level::Sse2 {
+            // SAFETY: `level()` proved SSE2 support on this host.
+            return unsafe { x86::f16le_to_f32_append_sse2(bytes, dst) };
+        }
+    }
+    scalar::f16le_to_f32_append(bytes, dst);
+}
+
+/// Add the f32 widening of each LE binary16 pair into `dst` elementwise
+/// (dispatched; stops at the shorter length).
+pub fn f16le_add_to_f32(bytes: &[u8], dst: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let lv = level();
+        if lv >= Level::Avx2 {
+            // SAFETY: `level()` proved AVX2 support on this host.
+            return unsafe { x86::f16le_add_to_f32_avx2(bytes, dst) };
+        }
+        if lv >= Level::Sse2 {
+            // SAFETY: `level()` proved SSE2 support on this host.
+            return unsafe { x86::f16le_add_to_f32_sse2(bytes, dst) };
+        }
+    }
+    scalar::f16le_add_to_f32(bytes, dst);
+}
+
+/// Append `quantize_f16(src[i])` — the receiver-visible value of each
+/// element after the binary16 wire round-trip (dispatched).
+pub fn quantize_f16_extend(src: &[f32], dst: &mut Vec<f32>) {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Avx2 {
+        // SAFETY: `level()` proved AVX2 support on this host.
+        return unsafe { x86::quantize_f16_extend_avx2(src, dst) };
+    }
+    scalar::quantize_f16_extend(src, dst);
+}
+
+/// Quantize each element through binary16 in place (dispatched).
+pub fn quantize_f16_inplace(v: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Avx2 {
+        // SAFETY: `level()` proved AVX2 support on this host.
+        return unsafe { x86::quantize_f16_inplace_avx2(v) };
+    }
+    scalar::quantize_f16_inplace(v);
+}
+
+/// Maximum |x| over the slice, ignoring NaN; `0.0` on empty (dispatched).
+pub fn max_abs(v: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Sse2 {
+        // SAFETY: `level()` proved SSE2 support on this host.
+        return unsafe { x86::max_abs_sse2(v) };
+    }
+    scalar::max_abs(v)
+}
+
+/// Length of the leading run of `0xFF` bytes (dispatched).
+pub fn ones_run_bytes(buf: &[u8]) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    if level() >= Level::Sse2 {
+        // SAFETY: `level()` proved SSE2 support on this host.
+        return unsafe { x86::ones_run_bytes_sse2(buf) };
+    }
+    scalar::ones_run_bytes(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::half;
+    use crate::util::propcheck::propcheck;
+    use crate::util::rng::Rng;
+
+    /// Values that exercise every branch of the float kernels: signed
+    /// zeros, infinities, NaN payloads, f16 overflow/underflow edges,
+    /// RNE halfway cases, and the smallest subnormals.
+    fn specials() -> Vec<f32> {
+        vec![
+            0.0,
+            -0.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+            f32::from_bits(0x7FC0_1234), // NaN with payload
+            f32::from_bits(0xFF80_0001), // negative signaling-style NaN
+            f32::MIN_POSITIVE,
+            f32::from_bits(1), // smallest f32 subnormal
+            65504.0,           // f16 max
+            65520.0,           // rounds to f16 inf
+            -65520.0,
+            6.1e-5, // near f16 min normal
+            5.9e-8, // f16 subnormal range
+            1e30,
+            -1e30,
+            f32::from_bits(0x3F80_1000), // RNE halfway (ties to even)
+            f32::from_bits(0x3380_0000), // 2^-24: smallest f16 subnormal
+            f32::from_bits(0x3300_0000), // 2^-25: rounds to zero
+        ]
+    }
+
+    fn mixed_input(rng: &mut Rng, n: usize) -> Vec<f32> {
+        let sp = specials();
+        (0..n)
+            .map(|_| {
+                if rng.below(8) == 0 {
+                    sp[rng.below(sp.len())]
+                } else {
+                    (rng.normal() as f32) * 10f32.powi(rng.below(9) as i32 - 4)
+                }
+            })
+            .collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn level_is_cached_and_consistent() {
+        let a = level();
+        assert_eq!(a, level());
+        #[cfg(not(target_arch = "x86_64"))]
+        assert_eq!(a, Level::Scalar);
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_twins_bitwise() {
+        propcheck(60, |rng| {
+            let n = rng.below(700) + 1;
+            let v = mixed_input(rng, n);
+
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            scalar::abs_into(&v, &mut a);
+            abs_into(&v, &mut b);
+            assert_bits_eq(&a, &b, "abs_into");
+
+            let thresh = v[rng.below(n)].abs();
+            let (mut sa, mut sb) = (Vec::new(), Vec::new());
+            scalar::select_ge_abs(&v, thresh, &mut sa);
+            select_ge_abs(&v, thresh, &mut sb);
+            assert_eq!(sa, sb, "select_ge_abs");
+
+            // gathers: valid indices, appended after a sentinel prefix to
+            // pin the append (not clear+fill) contract
+            let idx: Vec<u32> = (0..rng.below(300)).map(|_| rng.below(n) as u32).collect();
+            let (mut ga, mut gb) = (vec![7.5f32], vec![7.5f32]);
+            scalar::gather_f32(&v, &idx, &mut ga);
+            gather_f32(&v, &idx, &mut gb);
+            assert_bits_eq(&ga, &gb, "gather_f32");
+            let u: Vec<u32> = (0..n as u32).map(|i| i.wrapping_mul(2_654_435_761)).collect();
+            let (mut ua, mut ub) = (vec![42u32], vec![42u32]);
+            scalar::gather_u32(&u, &idx, &mut ua);
+            gather_u32(&u, &idx, &mut ub);
+            assert_eq!(ua, ub, "gather_u32");
+
+            let (mut ha, mut hb) = (vec![0xEEu8], vec![0xEEu8]);
+            scalar::f32_to_f16le_append(&v, &mut ha);
+            f32_to_f16le_append(&v, &mut hb);
+            assert_eq!(ha, hb, "f32_to_f16le_append");
+
+            // drop the sentinel byte: an odd tail byte must be ignored,
+            // so feed an even-length slice here
+            let bytes = &ha[1..];
+            let (mut fa, mut fb) = (vec![1.25f32], vec![1.25f32]);
+            scalar::f16le_to_f32_append(bytes, &mut fa);
+            f16le_to_f32_append(bytes, &mut fb);
+            assert_bits_eq(&fa, &fb, "f16le_to_f32_append");
+
+            let (mut da, mut db) = (v.clone(), v.clone());
+            scalar::f16le_add_to_f32(bytes, &mut da);
+            f16le_add_to_f32(bytes, &mut db);
+            assert_bits_eq(&da, &db, "f16le_add_to_f32");
+
+            let (mut qa, mut qb) = (vec![3.5f32], vec![3.5f32]);
+            scalar::quantize_f16_extend(&v, &mut qa);
+            quantize_f16_extend(&v, &mut qb);
+            assert_bits_eq(&qa, &qb, "quantize_f16_extend");
+            let (mut ia, mut ib) = (v.clone(), v.clone());
+            scalar::quantize_f16_inplace(&mut ia);
+            quantize_f16_inplace(&mut ib);
+            assert_bits_eq(&ia, &ib, "quantize_f16_inplace");
+
+            assert_eq!(scalar::max_abs(&v).to_bits(), max_abs(&v).to_bits(), "max_abs");
+        });
+    }
+
+    #[test]
+    fn f16_to_f32_exhaustive_all_bit_patterns() {
+        let mut bytes = Vec::with_capacity(2 * 65536);
+        for h in 0u16..=0xFFFF {
+            bytes.extend_from_slice(&h.to_le_bytes());
+        }
+        let mut out = Vec::new();
+        f16le_to_f32_append(&bytes, &mut out);
+        assert_eq!(out.len(), 65536);
+        for h in 0u16..=0xFFFF {
+            let want = half::f16_bits_to_f32(h);
+            assert_eq!(out[h as usize].to_bits(), want.to_bits(), "pattern {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn f32_to_f16_matches_scalar_on_f16_image_and_random_bits() {
+        // the full f16 image (incl. every NaN pattern), the specials,
+        // and a dense random sweep of raw f32 bit patterns
+        let mut vals: Vec<f32> = (0u16..=0xFFFF).map(half::f16_bits_to_f32).collect();
+        vals.extend(specials());
+        let mut rng = Rng::new(0x51D);
+        for _ in 0..200_000 {
+            vals.push(f32::from_bits(rng.below(1 << 32) as u32));
+        }
+        let mut got = Vec::new();
+        f32_to_f16le_append(&vals, &mut got);
+        for (i, &v) in vals.iter().enumerate() {
+            let want = half::f32_to_f16_bits(v);
+            let g = u16::from_le_bytes([got[2 * i], got[2 * i + 1]]);
+            assert_eq!(g, want, "elem {i}: input bits {:#010x}", v.to_bits());
+        }
+    }
+
+    #[test]
+    fn select_and_max_ignore_nan_like_scalar() {
+        let mut v: Vec<f32> = (0..97).map(|i| (i as f32) - 48.0).collect();
+        for i in (0..97).step_by(17) {
+            v[i] = f32::NAN;
+        }
+        let (mut sa, mut sb) = (Vec::new(), Vec::new());
+        scalar::select_ge_abs(&v, 10.0, &mut sa);
+        select_ge_abs(&v, 10.0, &mut sb);
+        assert_eq!(sa, sb);
+        assert!(sb.iter().all(|&i| !v[i as usize].is_nan()));
+        assert_eq!(max_abs(&v).to_bits(), scalar::max_abs(&v).to_bits());
+
+        // NaN threshold selects nothing; all-NaN and empty max to 0.0
+        select_ge_abs(&v, f32::NAN, &mut sb);
+        assert!(sb.is_empty());
+        let nans = vec![f32::NAN; 13];
+        assert_eq!(max_abs(&nans).to_bits(), 0.0f32.to_bits());
+        assert_eq!(max_abs(&[]).to_bits(), 0.0f32.to_bits());
+    }
+
+    #[test]
+    fn ones_run_scan_matches_scalar_across_block_boundaries() {
+        for run in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 100] {
+            for pad in [0usize, 1, 5, 40] {
+                let mut buf = vec![0xFFu8; run];
+                buf.push(0x7F);
+                buf.resize(buf.len() + pad, 0xA5);
+                assert_eq!(ones_run_bytes(&buf), run, "run={run} pad={pad}");
+                assert_eq!(scalar::ones_run_bytes(&buf), run);
+            }
+            // no terminator: the whole buffer is the run
+            let buf = vec![0xFFu8; run];
+            assert_eq!(ones_run_bytes(&buf), run, "unterminated run={run}");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn gather_f32_panics_on_out_of_bounds_index() {
+        let src = vec![1.0f32; 32];
+        let idx: Vec<u32> = (0..16).map(|i| if i == 11 { 99 } else { i }).collect();
+        let mut dst = Vec::new();
+        gather_f32(&src, &idx, &mut dst);
+    }
+
+    /// On an AVX2 host the dispatcher never exercises the SSE2 kernels,
+    /// so test them directly (SSE2 is the x86_64 baseline — always safe).
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn sse2_kernels_match_scalar_even_when_avx2_dispatches() {
+        propcheck(40, |rng| {
+            let n = rng.below(500) + 1;
+            let v = mixed_input(rng, n);
+            let mut bytes = Vec::new();
+            scalar::f32_to_f16le_append(&v, &mut bytes);
+
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            scalar::f16le_to_f32_append(&bytes, &mut a);
+            // SAFETY: SSE2 is the x86_64 baseline.
+            unsafe { x86::f16le_to_f32_append_sse2(&bytes, &mut b) };
+            assert_bits_eq(&a, &b, "f16le_to_f32 sse2");
+
+            let (mut da, mut db) = (v.clone(), v.clone());
+            scalar::f16le_add_to_f32(&bytes, &mut da);
+            // SAFETY: SSE2 is the x86_64 baseline.
+            unsafe { x86::f16le_add_to_f32_sse2(&bytes, &mut db) };
+            assert_bits_eq(&da, &db, "f16le_add sse2");
+
+            let t = v[rng.below(n)].abs();
+            let (mut sa, mut sb) = (Vec::new(), Vec::new());
+            scalar::select_ge_abs(&v, t, &mut sa);
+            // SAFETY: SSE2 is the x86_64 baseline.
+            unsafe { x86::select_ge_abs_sse2(&v, t, &mut sb) };
+            assert_eq!(sa, sb, "select_ge_abs sse2");
+
+            let (mut aa, mut ab) = (Vec::new(), Vec::new());
+            scalar::abs_into(&v, &mut aa);
+            // SAFETY: SSE2 is the x86_64 baseline.
+            unsafe { x86::abs_into_sse2(&v, &mut ab) };
+            assert_bits_eq(&aa, &ab, "abs sse2");
+
+            // SAFETY: SSE2 is the x86_64 baseline.
+            let m = unsafe { x86::max_abs_sse2(&v) };
+            assert_eq!(scalar::max_abs(&v).to_bits(), m.to_bits(), "max_abs sse2");
+        });
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn sse2_f16_widening_exhaustive() {
+        let mut bytes = Vec::with_capacity(2 * 65536);
+        for h in 0u16..=0xFFFF {
+            bytes.extend_from_slice(&h.to_le_bytes());
+        }
+        let mut out = Vec::new();
+        // SAFETY: SSE2 is the x86_64 baseline.
+        unsafe { x86::f16le_to_f32_append_sse2(&bytes, &mut out) };
+        for h in 0u16..=0xFFFF {
+            let want = half::f16_bits_to_f32(h);
+            assert_eq!(out[h as usize].to_bits(), want.to_bits(), "pattern {h:#06x}");
+        }
+    }
+}

@@ -2,9 +2,10 @@
 //! warm-up, `Compressor::compress_into` + `encode_range_into` rounds and
 //! `Decoder::decode_into` rounds must perform ZERO heap allocations —
 //! every buffer in the sparsify→quantize→Golomb-encode pipeline is
-//! reusable scratch. The coordinator's round-journal append path rides
-//! the same bar: journaling an uplink on the accept hot path must not
-//! allocate either.
+//! reusable scratch, and the OWNED payload `Vec<u8>` itself cycles
+//! through a [`PayloadArena`] (take → encode → send → recycle). The
+//! coordinator's round-journal append path rides the same bar:
+//! journaling an uplink on the accept hot path must not allocate either.
 //!
 //! Gated behind `ECOLORA_ALLOC_TESTS=1` (the CI perf-smoke job sets it):
 //! a counting global allocator needs a quiet, dedicated test process —
@@ -17,7 +18,9 @@ use std::sync::{Arc, Mutex};
 
 use ecolora::cluster::journal::{JournalWriter, Record, SyncPolicy};
 use ecolora::cluster::protocol::Message;
-use ecolora::compress::{wire, Compressed, Compressor, Encoding, KindIndex, SparsMode, SparseVec};
+use ecolora::compress::{
+    wire, Compressed, Compressor, Encoding, KindIndex, PayloadArena, SparsMode, SparseVec,
+};
 use ecolora::model::LoraKind;
 use ecolora::util::rng::Rng;
 
@@ -132,6 +135,44 @@ fn steady_state_compress_and_encode_do_not_allocate() {
         (allocs, reallocs),
         (0, 0),
         "steady-state compress+encode rounds allocated: {allocs} allocs, {reallocs} reallocs"
+    );
+}
+
+#[test]
+fn steady_state_arena_pooled_payload_cycle_does_not_allocate() {
+    let _serial = SERIAL.lock().unwrap();
+    if !gated() {
+        return;
+    }
+    let n = 8_192;
+    let (kinds, kidx, update) = setup(n);
+    let mut comp = Compressor::new(SparsMode::Fixed(0.1), Encoding::Golomb, kinds, kidx);
+    let mut out = Compressed::default();
+    // the participant's cycle: the payload Vec leaves the arena, would be
+    // sent over a transport, and comes back via recycle — with the pool
+    // warm, even the OWNED payload buffer stops allocating
+    let mut arena = PayloadArena::new(4);
+    let range = 0..n;
+
+    for _ in 0..5 {
+        comp.compress_into(&update, 3.0, 2.0, &mut out);
+        let bytes = comp.encode_range_arena(&out, &range, &mut arena).unwrap();
+        arena.recycle(bytes);
+    }
+
+    arm();
+    for _ in 0..3 {
+        comp.compress_into(&update, 3.0, 2.0, &mut out);
+        let bytes = comp.encode_range_arena(&out, &range, &mut arena).unwrap();
+        assert!(!bytes.is_empty());
+        arena.recycle(bytes);
+    }
+    let (allocs, reallocs) = disarm();
+    assert!(arena.watermark() > 0 && arena.pooled() > 0, "arena must be warm");
+    assert_eq!(
+        (allocs, reallocs),
+        (0, 0),
+        "steady-state arena payload cycle allocated: {allocs} allocs, {reallocs} reallocs"
     );
 }
 

@@ -3,18 +3,31 @@
 
 Usage:
     python3 tools/perf_compare.py BASELINE CURRENT [--threshold 0.15]
+                                  [--json DIFF.json]
 
-Fails (exit 1) when any bench present in both files regresses its
-`ns_per_elem` by more than the threshold (default 15%). Benches without
-`ns_per_elem` (e.g. the PJRT steps, which carry no element count) and
-benches present in only one file are reported but never gate.
+Exit codes:
+    0  every bench present in both files is within the threshold
+    1  at least one common bench regressed its `ns_per_elem` by more
+       than the threshold (default 15%)
+    2  the baseline is a pending marker (empty `results` / `"pending"`
+       key) — the ratchet has no teeth, which is itself a failure: the
+       repo policy is that a measured (or ceiling-valued) baseline is
+       always committed
 
-The baseline may be a *pending marker* — schema-valid JSON with an empty
-`results` array and a `"pending"` key — committed when no trustworthy
-machine was available to measure on. A pending baseline passes with a
-notice; refresh it with:
+Benches without `ns_per_elem` (e.g. the PJRT steps, which carry no
+element count) and benches present in only one file are reported as
+skips but never gate.
 
-    cd rust && ECOLORA_BENCH_QUICK=1 cargo bench --bench hotpath \
+`--json PATH` additionally writes a machine-readable diff:
+
+    {"threshold": 0.15,
+     "compared": [{"name", "base", "cur", "ratio", "verdict"}, ...],
+     "regressions": ["name", ...],
+     "skipped": [{"name", "reason"}, ...]}
+
+To refresh the committed baseline (see docs/EXPERIMENTS.md):
+
+    cd rust && cargo bench --bench hotpath \
         && cp BENCH_hotpath.json ../BENCH_hotpath.json
 
 Stdlib only: no pip, no network.
@@ -37,59 +50,73 @@ def by_name(doc):
     return {r["name"]: r for r in doc.get("results", [])}
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline")
     ap.add_argument("current")
     ap.add_argument("--threshold", type=float, default=0.15,
                     help="allowed fractional ns_per_elem growth (default 0.15)")
-    args = ap.parse_args()
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write a machine-readable diff to this path")
+    args = ap.parse_args(argv)
 
     base_doc = load(args.baseline)
     cur_doc = load(args.current)
 
     if not base_doc.get("results"):
         note = base_doc.get("pending", "no results recorded")
-        # surface the hole in the gate as a GitHub Actions annotation so
-        # a green perf-smoke run cannot be mistaken for a passed gate
-        print(f"::warning::{args.baseline} baseline is pending ({note}) — "
-              "perf regressions are NOT gated until a measured baseline "
-              "is committed")
-        print(f"perf_compare: baseline is pending ({note}); nothing to gate.")
+        # a toothless ratchet must fail loudly, not pass with a notice:
+        # the committed baseline is required to carry results (measured,
+        # or ceiling-valued with a provenance note)
+        print(f"::error::{args.baseline} baseline is pending ({note}) — "
+              "the perf ratchet cannot gate; commit a non-pending baseline")
+        print(f"perf_compare: baseline is pending ({note}); refusing to pass.")
         print("perf_compare: refresh the baseline per the header of this script.")
-        return 0
+        return 2
 
     base = by_name(base_doc)
     cur = by_name(cur_doc)
     if not cur:
         sys.exit(f"{args.current}: empty results — the bench did not run")
 
-    regressions, compared = [], 0
+    regressions, compared, skipped = [], [], []
     for name in sorted(base.keys() | cur.keys()):
         b, c = base.get(name), cur.get(name)
         if b is None or c is None:
             side = "baseline" if b is None else "current run"
             print(f"  [skip] {name}: missing from {side}")
+            skipped.append({"name": name, "reason": f"missing from {side}"})
             continue
         if "ns_per_elem" not in b or "ns_per_elem" not in c:
             print(f"  [skip] {name}: no ns_per_elem (not gated)")
+            skipped.append({"name": name, "reason": "no ns_per_elem"})
             continue
-        compared += 1
         ratio = c["ns_per_elem"] / b["ns_per_elem"]
         verdict = "FAIL" if ratio > 1.0 + args.threshold else "ok"
         print(f"  [{verdict:>4}] {name}: {b['ns_per_elem']:.3f} -> "
               f"{c['ns_per_elem']:.3f} ns/elem ({ratio - 1.0:+.1%} vs baseline)")
+        compared.append({"name": name, "base": b["ns_per_elem"],
+                         "cur": c["ns_per_elem"], "ratio": ratio,
+                         "verdict": verdict})
         if verdict == "FAIL":
             regressions.append(name)
 
-    if compared == 0:
+    if args.json_out:
+        diff = {"threshold": args.threshold, "compared": compared,
+                "regressions": regressions, "skipped": skipped}
+        with open(args.json_out, "w") as f:
+            json.dump(diff, f, indent=1)
+            f.write("\n")
+
+    if not compared:
         sys.exit("perf_compare: no common ns_per_elem benches — baseline and "
                  "current are incomparable")
     if regressions:
         print(f"perf_compare: {len(regressions)} bench(es) regressed "
               f">{args.threshold:.0%}: {', '.join(regressions)}")
         return 1
-    print(f"perf_compare: {compared} benches within {args.threshold:.0%} of baseline")
+    print(f"perf_compare: {len(compared)} benches within "
+          f"{args.threshold:.0%} of baseline")
     return 0
 
 

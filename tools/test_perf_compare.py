@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Unit tests for tools/perf_compare.py (stdlib only; run in CI).
+
+    python3 tools/test_perf_compare.py -v
+"""
+
+import json
+import os
+import sys
+import tempfile
+import unittest
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import perf_compare  # noqa: E402
+
+
+def report(results, **extra):
+    doc = {"bench": "hotpath", "schema": 1, "results": results}
+    doc.update(extra)
+    return doc
+
+
+def entry(name, nspe=None, **extra):
+    r = {"name": name, "iters": 1, "mean_ns": 1.0, "p50_ns": 1.0,
+         "p95_ns": 1.0, "min_ns": 1.0}
+    if nspe is not None:
+        r["elems"] = 1000
+        r["ns_per_elem"] = nspe
+    r.update(extra)
+    return r
+
+
+class PerfCompareTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.addCleanup(self.dir.cleanup)
+
+    def write(self, name, doc):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        return path
+
+    def run_main(self, base, cur, *extra_args):
+        argv = [self.write("base.json", base), self.write("cur.json", cur)]
+        argv.extend(extra_args)
+        return perf_compare.main(argv)
+
+    def test_within_threshold_passes(self):
+        base = report([entry("a", 10.0), entry("b", 20.0)])
+        cur = report([entry("a", 11.0), entry("b", 19.0)])  # +10%, -5%
+        self.assertEqual(self.run_main(base, cur), 0)
+
+    def test_regression_fails(self):
+        base = report([entry("a", 10.0)])
+        cur = report([entry("a", 11.6)])  # +16% > 15%
+        self.assertEqual(self.run_main(base, cur), 1)
+
+    def test_custom_threshold(self):
+        base = report([entry("a", 10.0)])
+        cur = report([entry("a", 11.6)])
+        self.assertEqual(self.run_main(base, cur, "--threshold", "0.20"), 0)
+
+    def test_pending_baseline_hard_fails(self):
+        base = report([], pending="no toolchain on the committing machine")
+        cur = report([entry("a", 10.0)])
+        self.assertEqual(self.run_main(base, cur), 2)
+
+    def test_empty_results_baseline_hard_fails_even_without_marker(self):
+        base = report([])
+        cur = report([entry("a", 10.0)])
+        self.assertEqual(self.run_main(base, cur), 2)
+
+    def test_missing_benches_skip_but_do_not_gate(self):
+        base = report([entry("a", 10.0), entry("only-base", 5.0)])
+        cur = report([entry("a", 10.0), entry("only-cur", 5.0)])
+        self.assertEqual(self.run_main(base, cur), 0)
+
+    def test_no_ns_per_elem_is_skipped(self):
+        base = report([entry("a", 10.0), entry("pjrt")])
+        cur = report([entry("a", 10.0), entry("pjrt")])
+        self.assertEqual(self.run_main(base, cur), 0)
+
+    def test_no_common_comparable_bench_errors(self):
+        base = report([entry("a", 10.0)])
+        cur = report([entry("b", 10.0)])
+        with self.assertRaises(SystemExit):
+            self.run_main(base, cur)
+
+    def test_empty_current_errors(self):
+        base = report([entry("a", 10.0)])
+        cur = report([])
+        with self.assertRaises(SystemExit):
+            self.run_main(base, cur)
+
+    def test_bad_schema_errors(self):
+        base = {"bench": "other", "schema": 1, "results": []}
+        cur = report([entry("a", 10.0)])
+        with self.assertRaises(SystemExit):
+            self.run_main(base, cur)
+
+    def test_json_diff_is_written_and_complete(self):
+        base = report([entry("a", 10.0), entry("gone", 1.0), entry("pjrt")])
+        cur = report([entry("a", 12.0), entry("pjrt")])  # +20% regression
+        diff_path = os.path.join(self.dir.name, "diff.json")
+        rc = self.run_main(base, cur, "--json", diff_path)
+        self.assertEqual(rc, 1)
+        with open(diff_path) as f:
+            diff = json.load(f)
+        self.assertEqual(diff["threshold"], 0.15)
+        self.assertEqual(diff["regressions"], ["a"])
+        self.assertEqual(len(diff["compared"]), 1)
+        cmp0 = diff["compared"][0]
+        self.assertEqual(cmp0["name"], "a")
+        self.assertEqual(cmp0["verdict"], "FAIL")
+        self.assertAlmostEqual(cmp0["ratio"], 1.2)
+        reasons = {s["name"]: s["reason"] for s in diff["skipped"]}
+        self.assertIn("gone", reasons)
+        self.assertIn("pjrt", reasons)
+
+    def test_committed_baseline_is_non_pending_and_parseable(self):
+        # the repo-root baseline must never regress to a pending marker
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(root, "BENCH_hotpath.json")
+        with open(path) as f:
+            doc = json.load(f)
+        self.assertEqual(doc.get("bench"), "hotpath")
+        self.assertEqual(doc.get("schema"), 1)
+        self.assertNotIn("pending", doc)
+        self.assertTrue(doc.get("results"), "baseline must carry results")
+        gated = [r for r in doc["results"] if "ns_per_elem" in r]
+        self.assertTrue(gated, "baseline must gate at least one bench")
+
+
+if __name__ == "__main__":
+    unittest.main()
