@@ -9,13 +9,17 @@
 //! `ECOLORA_BENCH_QUICK=1` for the short CI profile.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use ecolora::bench::{Bencher, Report};
+use ecolora::cluster::shard::Payload;
+use ecolora::cluster::transport::{dial, Listener};
+use ecolora::cluster::{serve_shard_conn, RoutedAdd, Router};
 use ecolora::compress::{
     golomb, topk, wire, AdaptiveSparsifier, Compressed, Compressor, Encoding, KindIndex, SparsMode,
 };
 use ecolora::fed::server::SegmentAggregator;
-use ecolora::model::LoraKind;
+use ecolora::model::{segment_ranges, LoraKind};
 use ecolora::util::linalg;
 use ecolora::util::rng::Rng;
 use ecolora::util::simd;
@@ -121,6 +125,90 @@ fn main() {
         std::hint::black_box(agg.finish());
     });
     report.add(&r, Some(10 * n), Some(10 * 4 * n));
+
+    // ---- router round: in-process vs remote-tcp shard links -------------------
+    // One full 2-shard round (begin → route 8 wire segment payloads →
+    // close/gather) against both link kinds. The pair prices moving the
+    // aggregation plane out of process: identical ShardAggregator math,
+    // with the remote variant pushing every payload through a framed
+    // loopback TCP hop to `serve_shard_conn` peers and waiting on their
+    // wire-encoded ShardReports at close.
+    {
+        let n_segs = 4;
+        let seg_msgs: Vec<Vec<u8>> = segment_ranges(n, n_segs)
+            .iter()
+            .map(|r| wire::encode(&out.sv, r, &kidx, out.k, Encoding::Golomb).unwrap())
+            .collect();
+        let round_bytes: usize = 2 * seg_msgs.iter().map(Vec::len).sum::<usize>();
+        let weights = Arc::new(vec![1.0f64; 4]);
+
+        let mut router =
+            Router::new(n, 2, weights.clone(), kidx.clone(), 0.7, n).expect("inproc router");
+        let mut t = 0u64;
+        let r = b.bench_throughput("router/round 2-shard (inproc)", 2 * n, || {
+            router.begin_round(t, n_segs).unwrap();
+            for slot in 0..2u32 {
+                for (seg, msg) in seg_msgs.iter().enumerate() {
+                    router
+                        .route(RoutedAdd {
+                            slot,
+                            segment: seg,
+                            weight: 40.0,
+                            payload: Payload::Wire(msg.clone()),
+                        })
+                        .unwrap();
+                }
+            }
+            std::hint::black_box(router.close_round(t).unwrap());
+            t += 1;
+        });
+        report.add(&r, Some(2 * n), Some(round_bytes));
+        router.shutdown().expect("inproc router shutdown");
+
+        let listener = Listener::bind("127.0.0.1:0").expect("bench listener");
+        let addr = listener.local_addr().expect("bench listener addr").to_string();
+        let mut router =
+            Router::new_remote(n, 2, weights.clone(), kidx.clone(), 0.7, n).expect("remote router");
+        let mut peers = Vec::new();
+        for id in 0..2usize {
+            let (a, w, k) = (addr.clone(), weights.clone(), kidx.clone());
+            peers.push(std::thread::spawn(move || {
+                let conn = dial(&a, Duration::from_secs(10)).expect("bench shard dial");
+                serve_shard_conn(id, n, &w, &k, conn).expect("bench shard serve");
+            }));
+            // one dial outstanding at a time, so this accept IS peer `id`
+            let conn = loop {
+                if let Some((conn, _)) = listener.try_accept().expect("bench accept") {
+                    break conn;
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            };
+            router.install_remote(id as u32, conn).expect("install remote shard");
+        }
+        let mut t = 0u64;
+        let r = b.bench_throughput("router/round 2-shard (remote-tcp)", 2 * n, || {
+            router.begin_round(t, n_segs).unwrap();
+            for slot in 0..2u32 {
+                for (seg, msg) in seg_msgs.iter().enumerate() {
+                    router
+                        .route(RoutedAdd {
+                            slot,
+                            segment: seg,
+                            weight: 40.0,
+                            payload: Payload::Wire(msg.clone()),
+                        })
+                        .unwrap();
+                }
+            }
+            std::hint::black_box(router.close_round(t).unwrap());
+            t += 1;
+        });
+        report.add(&r, Some(2 * n), Some(round_bytes));
+        router.shutdown().expect("remote router shutdown");
+        for p in peers {
+            p.join().expect("bench shard thread");
+        }
+    }
 
     // ---- axpy (aggregation inner loop) ---------------------------------------
     let mut acc = vec![0.0f32; n];

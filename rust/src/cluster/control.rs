@@ -874,6 +874,9 @@ impl ControlPlane {
         rec.shards = agg.shards;
         rec.shard_agg_ms_max = agg.shard_agg_s_max * 1e3;
         rec.router_queue_max = agg.queue_max;
+        rec.shard_tx_bytes = agg.shard_tx_bytes;
+        rec.shard_rx_bytes = agg.shard_rx_bytes;
+        rec.shard_rtt_ms_max = agg.shard_rtt_ms_max;
         // the shards just drained their buffers (fold_into takes every
         // entry), so the global admission meter starts the next round at 0
         rec.late_evicted = std::mem::take(&mut self.late_evicted) + agg.late_evicted;

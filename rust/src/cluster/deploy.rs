@@ -391,14 +391,23 @@ enum SlotPhase {
 
 /// Worker-slot assignment state shared between the registry thread
 /// (reserving slots for joiners) and the pool (releasing them on drops).
+/// The same machine tracks remote aggregation-shard slots (`role =
+/// "shard"`): ids are assigned the same way, only the reject wording
+/// changes.
 pub(crate) struct RegistryLedger {
     slots: Vec<SlotPhase>,
+    role: &'static str,
 }
 
 impl RegistryLedger {
-    /// All-free ledger with `n` slots.
+    /// All-free worker ledger with `n` slots.
     pub(crate) fn new(n: usize) -> RegistryLedger {
-        RegistryLedger { slots: vec![SlotPhase::Free; n] }
+        RegistryLedger::for_role(n, "worker")
+    }
+
+    /// All-free ledger with `n` slots for an arbitrary peer role.
+    pub(crate) fn for_role(n: usize, role: &'static str) -> RegistryLedger {
+        RegistryLedger { slots: vec![SlotPhase::Free; n], role }
     }
 
     /// Reserve a slot for a joiner (the handshake's id-assignment
@@ -410,19 +419,28 @@ impl RegistryLedger {
         requested: Option<u32>,
     ) -> std::result::Result<(u32, bool), (RejectCode, String)> {
         let n = self.slots.len();
+        let role = self.role;
+        if n == 0 {
+            // e.g. a ShardJoin against a coordinator whose aggregation
+            // plane runs in-process (serve without --expect-shards)
+            return Err((
+                RejectCode::ClusterFull,
+                format!("this coordinator has no {role} slots"),
+            ));
+        }
         match requested {
             Some(id) => {
                 let i = id as usize;
                 if i >= n {
                     return Err((
                         RejectCode::ClusterFull,
-                        format!("worker id {id} out of range (cluster has {n} slots)"),
+                        format!("{role} id {id} out of range (cluster has {n} {role} slots)"),
                     ));
                 }
                 match self.slots[i] {
                     SlotPhase::Connected => Err((
                         RejectCode::DuplicateWorker,
-                        format!("worker id {id} is already connected"),
+                        format!("{role} id {id} is already connected"),
                     )),
                     phase => {
                         self.slots[i] = SlotPhase::Connected;
@@ -442,7 +460,7 @@ impl RegistryLedger {
                 } else {
                     Err((
                         RejectCode::ClusterFull,
-                        format!("all {n} worker slots are connected"),
+                        format!("all {n} {role} slots are connected"),
                     ))
                 }
             }
@@ -507,7 +525,9 @@ pub(crate) fn spawn_registry(
     listener: Listener,
     spec: HandshakeSpec,
     ledger: Arc<Mutex<RegistryLedger>>,
+    shard_ledger: Arc<Mutex<RegistryLedger>>,
     events: mpsc::Sender<Event>,
+    shard_conns: mpsc::Sender<(u32, transport::TcpConn)>,
     resume_round: Arc<AtomicU64>,
 ) -> Result<Registry> {
     let stop = Arc::new(AtomicBool::new(false));
@@ -521,12 +541,23 @@ pub(crate) fn spawn_registry(
                     Ok(Some((conn, peer))) => {
                         let spec = spec.clone();
                         let ledger = ledger.clone();
+                        let shard_ledger = shard_ledger.clone();
                         let events = events.clone();
+                        let shard_conns = shard_conns.clone();
                         let resume_round = resume_round.clone();
                         let spawned = std::thread::Builder::new()
                             .name("ecolora-admit".into())
                             .spawn(move || {
-                                admit_one(conn, peer, &spec, &ledger, &events, &resume_round)
+                                admit_one(
+                                    conn,
+                                    peer,
+                                    &spec,
+                                    &ledger,
+                                    &shard_ledger,
+                                    &events,
+                                    &shard_conns,
+                                    &resume_round,
+                                )
                             });
                         if let Err(e) = spawned {
                             eprintln!("[serve] could not spawn admission thread: {e}");
@@ -550,7 +581,9 @@ fn admit_one(
     peer: std::net::SocketAddr,
     spec: &HandshakeSpec,
     ledger: &Arc<Mutex<RegistryLedger>>,
+    shard_ledger: &Arc<Mutex<RegistryLedger>>,
     events: &mpsc::Sender<Event>,
+    shard_conns: &mpsc::Sender<(u32, transport::TcpConn)>,
     resume_round: &AtomicU64,
 ) {
     let resume = resume_round.load(Ordering::Relaxed);
@@ -559,6 +592,8 @@ fn admit_one(
         spec,
         |requested| lock_unpoisoned(ledger).reserve(requested),
         |id| lock_unpoisoned(ledger).unreserve(id),
+        |requested| lock_unpoisoned(shard_ledger).reserve(requested),
+        |id| lock_unpoisoned(shard_ledger).unreserve(id),
         resume,
     );
     match outcome {
@@ -570,6 +605,14 @@ fn admit_one(
             let ev = Event::Joined { worker: worker as usize, rejoin, conn: Box::new(conn) };
             // a send failure means the pool is gone and the run is over
             let _ = events.send(ev);
+        }
+        Ok(Admission::AdmittedShard { shard, rejoin }) => {
+            eprintln!(
+                "[serve] shard {shard} {} from {peer}",
+                if rejoin { "rejoined" } else { "joined" }
+            );
+            // a send failure means the serve loop is gone; drop the conn
+            let _ = shard_conns.send((shard, conn));
         }
         Ok(Admission::Rejected(code)) => {
             eprintln!("[serve] rejected join from {peer}: {}", code.name());
@@ -1272,6 +1315,13 @@ pub struct ServeOptions {
     pub token: AuthToken,
     /// Worker slots; the run starts once this many workers have joined.
     pub expect_workers: usize,
+    /// Remote aggregation-shard slots (`--expect-shards`): the round
+    /// loop starts only after this many `ecolora shard` processes have
+    /// joined, and the router fans uplink payloads out to them over
+    /// framed TCP. 0 (the default) runs the aggregation plane
+    /// in-process. When nonzero it must equal the `--shards` plane size
+    /// — the remote tier replaces the in-process plane wholesale.
+    pub expect_shards: usize,
     /// How long to wait for the initial worker wave before giving up.
     pub join_timeout: Duration,
     /// Durable round journal (`--journal`); `None` disables journaling.
@@ -1306,6 +1356,19 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
         opts.hold_after_dispatch.is_none() || opts.journal.is_some(),
         "serve: --hold-after-dispatch is a journal crash hook; it requires --journal"
     );
+    let n_shards = opts.cluster.shards.max(1);
+    ensure!(
+        opts.expect_shards == 0 || opts.expect_shards == n_shards,
+        "serve: --expect-shards {} must equal --shards {n_shards} (the remote \
+         aggregation tier replaces the in-process plane wholesale)",
+        opts.expect_shards
+    );
+    ensure!(
+        opts.expect_shards == 0 || opts.journal.as_ref().is_none_or(|j| !j.resume),
+        "serve: --resume with a remote aggregation plane (--expect-shards) is not \
+         supported — journal replay needs the plane before any shard can join; \
+         resume with an in-process plane, then restart the distributed tier"
+    );
 
     // Build the server world — and, under `--resume`, replay the
     // journal into it — BEFORE the listener exists: a rejoining
@@ -1313,15 +1376,27 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
     // never race live traffic. Workers dialing early see
     // connection-refused and retry within their dial window.
     let mut control = ControlPlane::new(cfg, opts.cluster.policy)?;
-    let n_shards = opts.cluster.shards.max(1);
-    let mut router = Router::new(
-        control.lora_total(),
-        n_shards,
-        control.client_weights(),
-        control.kind_index(),
-        control.fold_beta(),
-        control.dense_upload_params(),
-    )?;
+    let mut router = match opts.expect_shards {
+        // in-process plane: shard worker threads, as before
+        0 => Router::new(
+            control.lora_total(),
+            n_shards,
+            control.client_weights(),
+            control.kind_index(),
+            control.fold_beta(),
+            control.dense_upload_params(),
+        )?,
+        // remote plane: every slot starts Pending and is armed once its
+        // `ecolora shard` process completes the join handshake
+        _ => Router::new_remote(
+            control.lora_total(),
+            n_shards,
+            control.client_weights(),
+            control.kind_index(),
+            control.fold_beta(),
+            control.dense_upload_params(),
+        )?,
+    };
 
     let mut ctl = DriveCtl::fresh();
     ctl.hold_after_dispatch = opts.hold_after_dispatch;
@@ -1354,6 +1429,8 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
     );
 
     let ledger = Arc::new(Mutex::new(RegistryLedger::new(n_workers)));
+    let shard_ledger =
+        Arc::new(Mutex::new(RegistryLedger::for_role(opts.expect_shards, "shard")));
     let resume_round = Arc::new(AtomicU64::new(start_round as u64));
     let meter = opts.cluster.netsim.as_ref().map(|_| Meter::new());
     let mut pool = WorkerPool::new(n_workers, meter, Some(ledger.clone()));
@@ -1361,12 +1438,53 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
         token: opts.token.clone(),
         config_digest: digest,
         n_workers,
+        n_shards: opts.expect_shards,
     };
-    let mut registry =
-        spawn_registry(listener, spec, ledger, pool.events_sender(), resume_round.clone())?;
+    let (shard_conns_tx, shard_conns) = mpsc::channel();
+    let mut registry = spawn_registry(
+        listener,
+        spec,
+        ledger,
+        shard_ledger,
+        pool.events_sender(),
+        shard_conns_tx,
+        resume_round.clone(),
+    )?;
 
-    // Wait for the full first wave.
+    // Wait for the remote aggregation plane first (worker joins simply
+    // queue in the pool meanwhile). A shard slot that never fills is a
+    // deployment error, reported like a missing worker; shard deaths
+    // AFTER this point are the router's fallback/abort policy.
     let deadline = Instant::now() + opts.join_timeout;
+    while router.pending_shards() > 0 {
+        let wait = deadline.saturating_duration_since(Instant::now());
+        match shard_conns.recv_timeout(wait) {
+            Ok((shard, conn)) => {
+                router.install_remote(shard, conn)?;
+                eprintln!(
+                    "[serve] {}/{} shard processes connected",
+                    opts.expect_shards - router.pending_shards(),
+                    opts.expect_shards
+                );
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => bail!(
+                "serve: only {} of {} shard processes joined within {:?}; start the \
+                 missing shards with `ecolora shard --connect {addr} --token-file …` \
+                 and matching run flags",
+                opts.expect_shards - router.pending_shards(),
+                opts.expect_shards,
+                opts.join_timeout,
+            ),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                bail!("serve: registry stopped before the shard wave completed")
+            }
+        }
+    }
+    if opts.expect_shards > 0 {
+        eprintln!("[serve] all {} shard processes connected", opts.expect_shards);
+    }
+
+    // Wait for the full first worker wave.
     while pool.alive_count() < n_workers {
         match pool.next(Some(deadline))? {
             PoolNotice::Joined(_w) => {
@@ -1495,6 +1613,56 @@ pub fn run_remote_worker(cfg: FedConfig, opts: &WorkerOptions) -> Result<()> {
             }
         }
     }
+}
+
+/// `ecolora shard` configuration.
+pub struct ShardOptions {
+    /// Coordinator address to dial (e.g. `coordinator.example:7878`).
+    pub connect: String,
+    /// The deployment's shared secret.
+    pub token: AuthToken,
+    /// Ask for a specific shard slot (`None` = let the coordinator
+    /// assign one).
+    pub requested_id: Option<u32>,
+    /// Per-dial window during which connection-refused is retried.
+    pub dial_timeout: Duration,
+}
+
+/// Run one shard of the coordinator's aggregation plane as its own
+/// process: derive the plane parameters from the local configuration,
+/// dial the coordinator, complete the `ShardJoin` handshake, and serve
+/// wire-encoded `ShardMsg` traffic until `Shutdown`
+/// ([`super::shard::serve_shard_conn`]).
+///
+/// Unlike a worker there is no rejoin loop: a shard that loses its link
+/// has lost its late-straggler buffer, so the coordinator immediately
+/// replaces the slice with an in-process shard (or fails the open
+/// round) and the slot never reopens for this run. A lost connection is
+/// therefore a fatal error here — restart the run to redistribute.
+pub fn run_remote_shard(cfg: FedConfig, opts: &ShardOptions) -> Result<()> {
+    let digest = cfg.digest();
+    eprintln!(
+        "[shard] deriving aggregation plane for {} (config digest {digest:016x})…",
+        cfg.run_label()
+    );
+    // Derive (vector length, client weights, kind index) exactly the
+    // way the coordinator does: the handshake's config-digest check
+    // guarantees both sides started from identical flags, so the
+    // derived plane parameters are identical too — which is what makes
+    // remote aggregation bitwise-equal to in-process `--shards N`.
+    let (total, weights, kidx) = {
+        let control = ControlPlane::new(cfg, RoundPolicy::Sync)?;
+        (control.lora_total(), control.client_weights(), control.kind_index())
+    };
+    let mut conn = transport::dial(&opts.connect, opts.dial_timeout)?;
+    let joined = handshake::join_shard(&mut conn, &opts.token, digest, opts.requested_id)?;
+    eprintln!(
+        "[shard] joined {} as shard {} of {} (coordinator at round {})",
+        opts.connect, joined.shard, joined.n_shards, joined.resume_round
+    );
+    super::shard::serve_shard_conn(joined.shard as usize, total, &weights, &kidx, conn)?;
+    eprintln!("[shard] run complete (coordinator sent Shutdown)");
+    Ok(())
 }
 
 #[cfg(test)]

@@ -1,18 +1,25 @@
-//! The protocol-v3 deployment handshake: how an externally-spawned
-//! `ecolora worker` process becomes a registered participant of an
-//! `ecolora serve` coordinator.
+//! The deployment handshake: how an externally-spawned `ecolora worker`
+//! (protocol v3) or `ecolora shard` (protocol v4) process becomes a
+//! registered peer of an `ecolora serve` coordinator.
 //!
 //! Sequence (normative wire spec: docs/PROTOCOL.md §Handshake):
 //!
 //! ```text
-//!   worker                         coordinator
+//!   worker / shard                 coordinator
 //!     │ ── Join {token, digest, ──►  validate, in order:
-//!     │          id?, build}          1. envelope version (framing layer)
-//!     │                               2. auth token (constant-time)
+//!     │    id?, build}                1. envelope version (framing layer)
+//!     │    (or ShardJoin)             2. auth token (constant-time)
 //!     │                               3. config digest
-//!     │                               4. worker-id reservation
+//!     │                               4. slot reservation (role-specific)
 //!     │ ◄── Welcome {id, n, round} ─  … or Reject {code, reason} + close
 //! ```
+//!
+//! Both roles share the token/digest validation and the `Welcome` /
+//! `Reject` answers; only the reservation policy differs — [`admit`]
+//! takes one reservation closure pair per role and dispatches on the
+//! first message's kind. For a shard peer the `Welcome.n_workers` field
+//! carries the SHARD count (each role only ever sees its own plane's
+//! slot total).
 //!
 //! Version skew never reaches this module: a peer speaking a different
 //! protocol version fails at `Envelope::decode` (the framing layer) with
@@ -33,7 +40,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::protocol::{Message, RejectCode, ANY_WORKER};
+use super::protocol::{Message, RejectCode, ANY_SHARD, ANY_WORKER};
 use super::transport::{Conn, TcpConn};
 
 /// Frame cap applied to a connection while its peer is unauthenticated:
@@ -123,8 +130,12 @@ pub struct HandshakeSpec {
     pub token: AuthToken,
     /// `FedConfig::digest()` of the coordinator's run configuration.
     pub config_digest: u64,
-    /// Total worker slots (echoed in `Welcome`).
+    /// Total worker slots (echoed in a worker's `Welcome`).
     pub n_workers: usize,
+    /// Remote aggregation-shard slots (echoed in a shard's `Welcome`);
+    /// 0 when the aggregation plane runs in-process and shard joins are
+    /// refused outright.
+    pub n_shards: usize,
 }
 
 /// A `Join` the coordinator refused (the worker-side error: carries the
@@ -149,7 +160,8 @@ impl std::error::Error for Rejected {}
 /// Outcome of one server-side admission attempt.
 #[derive(Debug)]
 pub enum Admission {
-    /// Peer authenticated and reserved a slot; install its connection.
+    /// Worker peer authenticated and reserved a slot; install its
+    /// connection into the worker pool.
     Admitted {
         /// Assigned worker id.
         worker: u32,
@@ -157,16 +169,39 @@ pub enum Admission {
         /// (this connection is a rejoin).
         rejoin: bool,
     },
+    /// Shard peer authenticated and reserved an aggregation slot;
+    /// install its connection into the router's remote fan-out.
+    AdmittedShard {
+        /// Assigned shard id.
+        shard: u32,
+        /// True when the slot belonged to a previously-dropped shard.
+        rejoin: bool,
+    },
     /// Peer was answered with a `Reject` and must be dropped.
     Rejected(RejectCode),
 }
 
+/// Deliver the `Welcome` and restore steady-state transport settings;
+/// any failure in between means this connection is unusable, so the
+/// caller must roll the reservation back either way (a peer that did
+/// receive the Welcome will find its slot Dropped and simply rejoin).
+fn deliver_welcome(conn: &mut TcpConn, id: u32, n_slots: u32, resume_round: u64) -> Result<()> {
+    conn.send(&Message::Welcome { worker: id, n_workers: n_slots, resume_round }.to_envelope())
+        .and_then(|()| {
+            conn.clear_frame_cap();
+            conn.set_read_timeout(None)
+        })
+}
+
 /// Server side: run the admission protocol on a freshly-accepted
-/// connection. `reserve` is the registry's id-assignment policy —
-/// called only after token and config checks pass, it either reserves a
-/// slot (`Ok((id, rejoin))`) or names the refusal; `unreserve` rolls the
-/// reservation back if the `Welcome` cannot be delivered (so a peer that
-/// dies mid-handshake never leaks a slot).
+/// connection. `reserve` / `reserve_shard` are the registry's
+/// id-assignment policies for the two peer roles — called only after
+/// token and config checks pass, each either reserves a slot
+/// (`Ok((id, rejoin))`) or names the refusal; `unreserve` /
+/// `unreserve_shard` roll the reservation back if the `Welcome` cannot
+/// be delivered (so a peer that dies mid-handshake never leaks a slot).
+/// A coordinator whose aggregation plane runs in-process passes a
+/// `reserve_shard` that refuses with [`RejectCode::ClusterFull`].
 ///
 /// Returns `Err` only for connection-level failures (silent peer, early
 /// disconnect, version skew, corrupt frame); the caller drops the
@@ -176,6 +211,8 @@ pub fn admit(
     spec: &HandshakeSpec,
     reserve: impl FnOnce(Option<u32>) -> std::result::Result<(u32, bool), (RejectCode, String)>,
     unreserve: impl FnOnce(u32),
+    reserve_shard: impl FnOnce(Option<u32>) -> std::result::Result<(u32, bool), (RejectCode, String)>,
+    unreserve_shard: impl FnOnce(u32),
     resume_round: u64,
 ) -> Result<Admission> {
     conn.set_frame_cap(JOIN_FRAME_CAP);
@@ -183,11 +220,19 @@ pub fn admit(
     let env = conn.recv().context("handshake: waiting for Join")?;
     let msg = Message::from_envelope(&env).context("handshake: parsing Join")?;
     let kind = msg.kind();
-    let Message::Join { token, config_digest, requested_worker, build } = msg else {
-        let code = RejectCode::Malformed;
-        let reason = format!("expected Join as the first message, got {kind:?}");
-        let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
-        return Ok(Admission::Rejected(code));
+    let (token, config_digest, requested_raw, build, is_shard) = match msg {
+        Message::Join { token, config_digest, requested_worker, build } => {
+            (token, config_digest, requested_worker, build, false)
+        }
+        Message::ShardJoin { token, config_digest, requested_shard, build } => {
+            (token, config_digest, requested_shard, build, true)
+        }
+        _ => {
+            let code = RejectCode::Malformed;
+            let reason = format!("expected Join or ShardJoin as the first message, got {kind:?}");
+            let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
+            return Ok(Admission::Rejected(code));
+        }
     };
     if !spec.token.matches(&token) {
         // never echo anything token-derived back to an unauthenticated peer
@@ -199,9 +244,10 @@ pub fn admit(
     }
     if config_digest != spec.config_digest {
         let code = RejectCode::ConfigMismatch;
+        let role = if is_shard { "shard" } else { "worker" };
         let reason = format!(
             "config digest {config_digest:016x} != coordinator's {:016x} \
-             (worker build {build:?}, coordinator build {:?}); launch both sides with \
+             ({role} build {build:?}, coordinator build {:?}); launch both sides with \
              identical run flags — see docs/DEPLOYMENT.md",
             spec.config_digest,
             crate::version(),
@@ -209,34 +255,36 @@ pub fn admit(
         let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
         return Ok(Admission::Rejected(code));
     }
-    let requested = (requested_worker != ANY_WORKER).then_some(requested_worker);
-    match reserve(requested) {
-        Ok((worker, rejoin)) => {
-            let welcome = Message::Welcome {
-                worker,
-                n_workers: spec.n_workers as u32,
-                resume_round,
-            };
-            // deliver the Welcome AND restore steady-state transport
-            // settings; any failure in between means this connection is
-            // unusable, so the reservation must roll back either way (a
-            // worker that did receive the Welcome will find its slot
-            // Dropped and simply rejoin)
-            let finish = conn
-                .send(&welcome.to_envelope())
-                .and_then(|()| {
-                    conn.clear_frame_cap();
-                    conn.set_read_timeout(None)
-                });
-            if let Err(e) = finish {
-                unreserve(worker);
-                return Err(e).context("handshake: completing admission");
+    // ANY_SHARD and ANY_WORKER share the wildcard bit pattern
+    let requested = (requested_raw != ANY_WORKER).then_some(requested_raw);
+    if is_shard {
+        match reserve_shard(requested) {
+            Ok((shard, rejoin)) => {
+                if let Err(e) = deliver_welcome(conn, shard, spec.n_shards as u32, resume_round) {
+                    unreserve_shard(shard);
+                    return Err(e).context("handshake: completing shard admission");
+                }
+                Ok(Admission::AdmittedShard { shard, rejoin })
             }
-            Ok(Admission::Admitted { worker, rejoin })
+            Err((code, reason)) => {
+                let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
+                Ok(Admission::Rejected(code))
+            }
         }
-        Err((code, reason)) => {
-            let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
-            Ok(Admission::Rejected(code))
+    } else {
+        match reserve(requested) {
+            Ok((worker, rejoin)) => {
+                if let Err(e) = deliver_welcome(conn, worker, spec.n_workers as u32, resume_round)
+                {
+                    unreserve(worker);
+                    return Err(e).context("handshake: completing admission");
+                }
+                Ok(Admission::Admitted { worker, rejoin })
+            }
+            Err((code, reason)) => {
+                let _ = conn.send(&Message::Reject { code, reason }.to_envelope());
+                Ok(Admission::Rejected(code))
+            }
         }
     }
 }
@@ -280,6 +328,51 @@ pub fn join(
             conn.clear_frame_cap();
             conn.set_read_timeout(None)?;
             Ok(Joined { worker, n_workers, resume_round })
+        }
+        Message::Reject { code, reason } => Err(Rejected { code, reason }.into()),
+        other => bail!("handshake: expected Welcome or Reject, got {:?}", other.kind()),
+    }
+}
+
+/// What a successful client-side shard join learns from the coordinator.
+#[derive(Debug, Clone, Copy)]
+pub struct JoinedShard {
+    /// Assigned shard id.
+    pub shard: u32,
+    /// Total remote aggregation-shard slots in the deployment.
+    pub n_shards: u32,
+    /// Round the coordinator dispatches next (0 on a fresh run).
+    pub resume_round: u64,
+}
+
+/// Client side: authenticate an `ecolora shard` process against a
+/// coordinator on a freshly-dialed connection. Mirrors [`join`] with a
+/// `ShardJoin` first message; the `Welcome.n_workers` field carries the
+/// shard count for this role.
+pub fn join_shard(
+    conn: &mut TcpConn,
+    token: &AuthToken,
+    config_digest: u64,
+    requested_shard: Option<u32>,
+) -> Result<JoinedShard> {
+    conn.set_frame_cap(JOIN_FRAME_CAP);
+    conn.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+    conn.send(
+        &Message::ShardJoin {
+            token: token.bytes().to_vec(),
+            config_digest,
+            requested_shard: requested_shard.unwrap_or(ANY_SHARD),
+            build: crate::version().to_string(),
+        }
+        .to_envelope(),
+    )
+    .context("handshake: sending ShardJoin")?;
+    let env = conn.recv().context("handshake: waiting for Welcome")?;
+    match Message::from_envelope(&env).context("handshake: parsing Welcome")? {
+        Message::Welcome { worker, n_workers, resume_round } => {
+            conn.clear_frame_cap();
+            conn.set_read_timeout(None)?;
+            Ok(JoinedShard { shard: worker, n_shards: n_workers, resume_round })
         }
         Message::Reject { code, reason } => Err(Rejected { code, reason }.into()),
         other => bail!("handshake: expected Welcome or Reject, got {:?}", other.kind()),

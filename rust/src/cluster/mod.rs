@@ -34,10 +34,13 @@
 //!   auth plus config-digest negotiation that an external `ecolora
 //!   worker` process completes before entering the task loop.
 //! * [`deploy`] — real multi-process deployment: the [`serve`] listener
-//!   coordinator and [`run_remote_worker`] dialing participant, built on
-//!   a dynamic worker-registration state machine in which a dropped
-//!   worker process is just a straggler (absorbed by the quorum/resample
-//!   machinery) and may rejoin mid-run.
+//!   coordinator, the [`run_remote_worker`] dialing participant, and the
+//!   [`run_remote_shard`] dialing aggregation shard, built on a dynamic
+//!   registration state machine in which a dropped worker process is
+//!   just a straggler (absorbed by the quorum/resample machinery) and
+//!   may rejoin mid-run. With `serve --expect-shards N` the aggregation
+//!   plane itself moves out of process: `ecolora shard` peers own the
+//!   segment slices and the router fans uplinks out over framed TCP.
 //! * [`journal`] — the durable coordinator: an append-only, checksummed
 //!   round journal written at every control-plane state transition, and
 //!   replayed by `serve --journal <path> --resume` to rebuild the exact
@@ -81,7 +84,8 @@ use crate::netsim::RoundTiming;
 
 pub use control::{ControlPlane, Phase, RoundPolicy, RoundState};
 pub use deploy::{
-    run_remote_worker, serve, JournalOptions, ServeOptions, WorkerConnStats, WorkerOptions,
+    run_remote_shard, run_remote_worker, serve, JournalOptions, ServeOptions, ShardOptions,
+    WorkerConnStats, WorkerOptions,
 };
 pub use handshake::{AuthToken, Rejected};
 pub use journal::{JournalError, JournalReader, JournalWriter, Record, SyncPolicy};
@@ -89,7 +93,9 @@ pub use mux::{EngineCache, MuxOptions};
 pub use netshim::SimProfile;
 pub use participant::Participant;
 pub use router::{GatheredAgg, RoutedAdd, Router, ShardMap};
-pub use shard::{AggStats, FoldCtx, LateBuffer, ShardAggregator, LATE_BUFFER_MAX_BYTES};
+pub use shard::{
+    serve_shard_conn, AggStats, FoldCtx, LateBuffer, ShardAggregator, LATE_BUFFER_MAX_BYTES,
+};
 pub use transport::ClusterMode;
 
 use deploy::WorkerPool;

@@ -29,6 +29,14 @@ use super::transport::{ConnRx, ConnTx};
 /// count — shards own disjoint segment slices, so their Eq. 2 work is
 /// embarrassingly parallel. 0 leaves aggregation out of the simulated
 /// round time (the pre-sharding behavior).
+///
+/// `shard_mbps` optionally models the coordinator→shard hop of a
+/// distributed aggregation tier (`serve --expect-shards`): the round's
+/// uplink bytes transit one more link before Eq. 2 runs, fanned out
+/// across the shards' parallel links. 0 leaves the hop unmodeled — the
+/// right default both for in-process shards (no extra wire) and when
+/// the real framed shard-link bytes in the `shard_tx_bytes` CSV column
+/// are what you're after.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SimProfile {
     /// Base access-link scenario (every non-slow slot).
@@ -40,13 +48,16 @@ pub struct SimProfile {
     /// Server aggregation processing rate over the round's uplink bytes,
     /// Mbps (0 = aggregation not modeled).
     pub agg_mbps: f64,
+    /// Coordinator→shard link rate for the remote aggregation tier, Mbps
+    /// (0 = hop not modeled).
+    pub shard_mbps: f64,
 }
 
 impl SimProfile {
     /// A homogeneous fleet on `scenario` (no slow tail, no modeled
     /// aggregation stage).
     pub fn uniform(scenario: Scenario) -> SimProfile {
-        SimProfile { scenario, slow_frac: 0.0, slow_factor: 1.0, agg_mbps: 0.0 }
+        SimProfile { scenario, slow_frac: 0.0, slow_factor: 1.0, agg_mbps: 0.0, shard_mbps: 0.0 }
     }
 
     /// Per-slot link specs for a round of `n` slots: the FIRST
@@ -173,7 +184,11 @@ impl Meter {
     /// over the replayed uplink bytes is appended to the round time,
     /// divided across `shards` parallel segment shards — pass the
     /// EFFECTIVE width `min(configured shards, n_s)`, since shards that
-    /// own no segment contribute no parallelism.
+    /// own no segment contribute no parallelism. When
+    /// `profile.shard_mbps > 0`, the coordinator→shard fan-out hop is
+    /// modeled the same way — the round's uplink bytes re-transit the
+    /// shard links (1/`shards` of the bytes on each, in parallel) before
+    /// aggregation — and counted as communication time.
     pub fn round_timing(
         &self,
         round: u64,
@@ -213,8 +228,14 @@ impl Meter {
         let mut sim = NetSim::heterogeneous(&specs);
         let clients: Vec<usize> = (0..plans.len()).collect();
         let mut timing = sim.run_round_quorum(&clients, &plans, quorum.clamp(1, plans.len()));
+        let ul_total: usize = plans.iter().map(|p| p.ul_bytes).sum();
+        if profile.shard_mbps > 0.0 {
+            let hop_s =
+                (ul_total as f64 * 8.0 / 1e6) / profile.shard_mbps / shards.max(1) as f64;
+            timing.comm_s += hop_s;
+            timing.round_s += hop_s;
+        }
         if profile.agg_mbps > 0.0 {
-            let ul_total: usize = plans.iter().map(|p| p.ul_bytes).sum();
             let agg_s =
                 (ul_total as f64 * 8.0 / 1e6) / profile.agg_mbps / shards.max(1) as f64;
             timing.agg_s = agg_s;
@@ -314,7 +335,9 @@ mod tests {
 
         // heterogeneous links: a 2-of-3 quorum closes on the fast slots
         // and must beat the synchronous round that waits for the slow one
-        let hetero = SimProfile { scenario, slow_frac: 0.3, slow_factor: 10.0, agg_mbps: 0.0 }; // ceil(0.9) = 1 slow slot
+        // ceil(0.9) = 1 slow slot
+        let hetero =
+            SimProfile { slow_frac: 0.3, slow_factor: 10.0, ..SimProfile::uniform(scenario) };
         let t_sync = meter.round_timing(7, &[0.5, 0.5, 0.5], &hetero, 3, 1).unwrap();
         let t_quorum = meter.round_timing(7, &[0.5, 0.5, 0.5], &hetero, 2, 1).unwrap();
         assert!(
@@ -357,19 +380,39 @@ mod tests {
         peer.join().unwrap();
 
         let scenario = Scenario { name: "test", ul_mbps: 1.0, dl_mbps: 5.0, latency_s: 0.05 };
-        let profile = SimProfile { scenario, slow_frac: 0.0, slow_factor: 1.0, agg_mbps: 0.001 };
+        let profile = SimProfile {
+            scenario,
+            slow_frac: 0.0,
+            slow_factor: 1.0,
+            agg_mbps: 0.001,
+            shard_mbps: 0.0,
+        };
         let one = meter.round_timing(3, &[0.1, 0.1], &profile, 2, 1).unwrap();
         let four = meter.round_timing(3, &[0.1, 0.1], &profile, 2, 4).unwrap();
         assert!(one.agg_s > 0.0, "{one:?}");
         assert!((four.agg_s - one.agg_s / 4.0).abs() < 1e-12, "4 shards quarter the agg share");
         assert!(four.round_s < one.round_s, "shard-parallel agg shortens the simulated round");
         assert_eq!(one.comm_s, four.comm_s, "link time is unaffected by server sharding");
+
+        // the coordinator→shard hop rides the same replayed uplink
+        // bytes: comm time grows by exactly the hop share, agg is
+        // untouched, and more shards split the hop in parallel
+        let hop = SimProfile { shard_mbps: 0.002, ..profile };
+        let base = meter.round_timing(3, &[0.1, 0.1], &profile, 2, 2).unwrap();
+        let hop2 = meter.round_timing(3, &[0.1, 0.1], &hop, 2, 2).unwrap();
+        let hop4 = meter.round_timing(3, &[0.1, 0.1], &hop, 2, 4).unwrap();
+        assert!(hop2.comm_s > base.comm_s, "hop adds communication time");
+        assert_eq!(hop2.agg_s, base.agg_s, "hop leaves the agg stage alone");
+        let share2 = hop2.comm_s - base.comm_s;
+        let share4 = hop4.comm_s - meter.round_timing(3, &[0.1, 0.1], &profile, 2, 4).unwrap().comm_s;
+        assert!((share4 - share2 / 2.0).abs() < 1e-12, "4 shard links halve the 2-link hop");
+        assert!((hop2.round_s - (base.round_s + share2)).abs() < 1e-12);
     }
 
     #[test]
     fn slot_links_put_the_slow_tail_first() {
         let scenario = Scenario { name: "test", ul_mbps: 2.0, dl_mbps: 10.0, latency_s: 0.05 };
-        let p = SimProfile { scenario, slow_frac: 0.25, slow_factor: 4.0, agg_mbps: 0.0 };
+        let p = SimProfile { slow_frac: 0.25, slow_factor: 4.0, ..SimProfile::uniform(scenario) };
         let links = p.slot_links(4);
         assert_eq!(links.len(), 4);
         assert!((links[0].ul_mbps - 0.5).abs() < 1e-12);

@@ -3,26 +3,51 @@
 //! Uplink results are dispatched to shards by the segment id the v2
 //! envelope header already carries (`protocol::Envelope::segment`):
 //! the segment space `[0, n_s)` is partitioned into `shards` contiguous,
-//! near-equal slices ([`ShardMap`]), one shard worker thread each. During
-//! the collect phase the router forwards payloads as they arrive —
-//! shards decode concurrently with the control plane's wait — and at
-//! round close it gathers every shard's delta slice back into one
-//! global-length delta plus merged tallies ([`GatheredAgg`]).
+//! near-equal slices ([`ShardMap`]), one shard each. During the collect
+//! phase the router forwards payloads as they arrive — shards decode
+//! concurrently with the control plane's wait — and at round close it
+//! gathers every shard's delta slice back into one global-length delta
+//! plus merged tallies ([`GatheredAgg`]).
+//!
+//! A shard is reachable over one of two link kinds, chosen per router:
+//!
+//! * **Local** — an in-process worker thread fed over `std::sync::mpsc`
+//!   (the PR 3 plane; [`Router::new`]).
+//! * **Remote** — an authenticated `ecolora shard` process fed over
+//!   length-prefix-framed TCP ([`Router::new_remote`] +
+//!   [`Router::install_remote`]). The `ShardMsg` contract travels as
+//!   protocol-v4 envelopes; payload buffers recycle through a
+//!   `PayloadArena` and a per-link frame scratch, so the steady-state
+//!   fan-out allocates nothing. A reader thread per link streams
+//!   `ShardReport`s back into the same channel local shards use — the
+//!   round-close gather cannot tell the difference, which is what keeps
+//!   remote aggregation bitwise-identical to in-process `--shards N`.
+//!
+//! Shard-death policy (a dead aggregator must never hang a round): a
+//! remote link that is dead at round OPEN is replaced by a freshly
+//! spawned in-process shard for the same slice — loudly, and losing any
+//! stragglers the dead process had buffered — while a link that dies
+//! MID-round fails the round immediately (contributions already sent to
+//! the dead shard are unrecoverable, so a silent fallback would corrupt
+//! the aggregate). Local thread death always fails loudly: threads
+//! don't die without panicking first.
 //!
 //! The router never touches the model math: order-sensitive aggregation
 //! lives entirely inside each shard (slot order within a segment), so
 //! gather order only affects commutative bookkeeping.
 
-use std::sync::atomic::{AtomicIsize, Ordering};
+use std::sync::atomic::{AtomicIsize, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::compress::KindIndex;
+use crate::compress::{KindIndex, PayloadArena};
 
-use super::protocol::TrainResult;
+use super::protocol::{Message, TrainResult};
 use super::shard::{run_shard, AggStats, Payload, ShardMsg, ShardReport};
+use super::transport::{ConnRx, TcpConn, TcpRx, TcpTx};
 
 /// Contiguous near-equal partition of the segment space `[0, n_s)` into
 /// `shards` slices (the remainder spread over the first slices, same rule
@@ -106,7 +131,8 @@ pub struct GatheredAgg {
     pub covered: Vec<bool>,
     /// Max wall seconds any one shard spent decoding + accumulating.
     pub shard_agg_s_max: f64,
-    /// Max router→shard queue backlog observed during the round.
+    /// Max router→shard queue backlog observed during the round (local
+    /// links only — a remote link's backlog lives in its socket buffer).
     pub queue_max: usize,
     /// Late arrivals evicted by the per-shard byte-cap backstop this
     /// round (the control plane's global meter adds its own count).
@@ -116,14 +142,130 @@ pub struct GatheredAgg {
     /// Per-shard delta digest in shard-id order (`ShardReport::digest`)
     /// — journaled at round close, verified by `serve --resume` replay.
     pub shard_digests: Vec<u64>,
+    /// Frame bytes the router sent to remote shard processes this round
+    /// (0 when the plane runs in-process).
+    pub shard_tx_bytes: u64,
+    /// Frame bytes received from remote shard processes this round
+    /// (reports and the close handshake; 0 in-process).
+    pub shard_rx_bytes: u64,
+    /// Max milliseconds from a remote shard's `ShardClose` send to its
+    /// report's arrival — the aggregation tier's network critical path
+    /// (0 in-process).
+    pub shard_rtt_ms_max: f64,
 }
 
-/// Router + shard-thread pool. One per cluster run; geometry can change
-/// per round (it never does in practice — `n_s` is fixed by the config —
+/// Coordinator side of one remote `ecolora shard` link.
+struct RemoteShard {
+    tx: TcpTx,
+    /// Reusable frame buffer for the scratch-send path (grows to the
+    /// largest frame once, then stays warm).
+    frame: Vec<u8>,
+    /// Recycles envelope payload buffers through encode→send→recycle
+    /// (the PR 8 arena discipline; the fan-out never allocates warm).
+    arena: PayloadArena,
+    /// Frame bytes sent this round (reset at round open).
+    tx_bytes: u64,
+    /// Frame bytes received over the link's lifetime (reader-counted).
+    rx_bytes: Arc<AtomicU64>,
+    /// `rx_bytes` reading at round open (per-round delta basis).
+    rx_mark: u64,
+    /// When this round's `ShardClose` was sent (RTT basis).
+    close_sent: Option<Instant>,
+}
+
+impl RemoteShard {
+    fn send(&mut self, msg: &Message) -> Result<()> {
+        let env = msg.to_envelope_in(self.arena.take());
+        let res = self.tx.send_scratch(&env, &mut self.frame);
+        self.tx_bytes += self.frame.len() as u64;
+        self.arena.recycle(env.payload);
+        res
+    }
+}
+
+/// How the router reaches one shard of the aggregation plane.
+enum ShardLink {
+    /// In-process worker thread over `std::sync::mpsc`.
+    Local(mpsc::Sender<ShardMsg>),
+    /// Remote `ecolora shard` process over framed TCP.
+    Remote(Box<RemoteShard>),
+    /// Remote slot reserved, but no process has joined yet.
+    Pending,
+}
+
+/// A stand-in report announcing a dead or misbehaving remote link; its
+/// `error` makes the round-close gather bail loudly instead of hanging
+/// on a report that will never arrive.
+fn death_report(shard: usize, error: String) -> ShardReport {
+    ShardReport {
+        shard,
+        base: 0,
+        delta: Vec::new(),
+        stats: AggStats::default(),
+        folded: Vec::new(),
+        covered: Vec::new(),
+        agg_s: 0.0,
+        late_evicted: 0,
+        digest: 0,
+        error: Some(error),
+    }
+}
+
+/// Frame length prefix bytes (matches the transport's `u32 le` framing).
+const FRAME_PREFIX: u64 = 4;
+
+/// Reader-thread loop for one remote link: stream the shard's envelopes
+/// into the shared reports channel. Exactly one terminal message (a
+/// death report) is emitted when the link fails or misbehaves, so the
+/// router aborts the round loudly rather than waiting forever.
+fn run_link_reader(
+    id: usize,
+    mut rx: TcpRx,
+    reports: mpsc::Sender<ShardReport>,
+    rx_bytes: Arc<AtomicU64>,
+) {
+    loop {
+        let env = match rx.recv() {
+            Ok(env) => env,
+            Err(e) => {
+                let _ = reports.send(death_report(id, format!("shard {id} connection lost: {e:#}")));
+                return;
+            }
+        };
+        rx_bytes.fetch_add(FRAME_PREFIX + env.encoded_len() as u64, Ordering::Relaxed);
+        match Message::from_envelope(&env) {
+            Ok(Message::ShardReport(rep)) => {
+                if reports.send(*rep).is_err() {
+                    return; // router is gone; nothing left to serve
+                }
+            }
+            Ok(Message::Error { text }) => {
+                let _ = reports.send(death_report(id, format!("shard {id} failed: {text}")));
+                return;
+            }
+            Ok(other) => {
+                let _ = reports.send(death_report(
+                    id,
+                    format!("shard {id} sent an unexpected {:?}", other.kind()),
+                ));
+                return;
+            }
+            Err(e) => {
+                let _ = reports
+                    .send(death_report(id, format!("shard {id} sent an undecodable report: {e:#}")));
+                return;
+            }
+        }
+    }
+}
+
+/// Router + shard links. One per cluster run; geometry can change per
+/// round (it never does in practice — `n_s` is fixed by the config —
 /// but the contract allows it).
 pub struct Router {
     map: ShardMap,
-    txs: Vec<mpsc::Sender<ShardMsg>>,
+    links: Vec<ShardLink>,
+    reports_tx: mpsc::Sender<ShardReport>,
     reports_rx: mpsc::Receiver<ShardReport>,
     handles: Vec<JoinHandle<()>>,
     depth: Arc<AtomicIsize>,
@@ -131,13 +273,15 @@ pub struct Router {
     total: usize,
     beta: f64,
     dense_params: usize,
+    weights: Arc<Vec<f64>>,
+    kidx: Arc<KindIndex>,
 }
 
 impl Router {
-    /// Spawn `shards` shard worker threads over a `total`-parameter
-    /// vector. `weights` are the per-client FedAvg weights (late-fold
-    /// input), `beta` the Eq. 3 staleness decay, `dense_params` the
-    /// dense-uplink parameter charge.
+    /// Spawn `shards` in-process shard worker threads over a
+    /// `total`-parameter vector. `weights` are the per-client FedAvg
+    /// weights (late-fold input), `beta` the Eq. 3 staleness decay,
+    /// `dense_params` the dense-uplink parameter charge.
     pub fn new(
         total: usize,
         shards: usize,
@@ -146,49 +290,152 @@ impl Router {
         beta: f64,
         dense_params: usize,
     ) -> Result<Router> {
-        ensure!(shards >= 1, "router needs at least one shard");
-        let depth = Arc::new(AtomicIsize::new(0));
-        let (reports_tx, reports_rx) = mpsc::channel();
-        let mut txs = Vec::with_capacity(shards);
-        let mut handles = Vec::with_capacity(shards);
+        let mut router = Router::new_remote(total, shards, weights, kidx, beta, dense_params)?;
         for id in 0..shards {
-            let (tx, rx) = mpsc::channel();
-            let (w, k, rep, d) =
-                (weights.clone(), kidx.clone(), reports_tx.clone(), depth.clone());
-            let handle = std::thread::Builder::new()
-                .name(format!("ecolora-shard-{id}"))
-                .spawn(move || run_shard(id, total, w, k, rx, rep, d))?;
-            txs.push(tx);
-            handles.push(handle);
+            router.links[id] = router.spawn_local_link(id)?;
         }
+        Ok(router)
+    }
+
+    /// Build a router whose `shards` slots expect REMOTE `ecolora shard`
+    /// processes: every link starts [pending](ShardLink::Pending) and is
+    /// armed by [`Router::install_remote`] as shard peers are admitted.
+    /// A slot still pending at round open falls back to an in-process
+    /// replacement (loudly) — the round never hangs on an absent peer.
+    pub fn new_remote(
+        total: usize,
+        shards: usize,
+        weights: Arc<Vec<f64>>,
+        kidx: Arc<KindIndex>,
+        beta: f64,
+        dense_params: usize,
+    ) -> Result<Router> {
+        ensure!(shards >= 1, "router needs at least one shard");
+        let (reports_tx, reports_rx) = mpsc::channel();
         Ok(Router {
             map: ShardMap::new(1, shards),
-            txs,
+            links: (0..shards).map(|_| ShardLink::Pending).collect(),
+            reports_tx,
             reports_rx,
-            handles,
-            depth,
+            handles: Vec::with_capacity(shards),
+            depth: Arc::new(AtomicIsize::new(0)),
             queue_max: 0,
             total,
             beta,
             dense_params,
+            weights,
+            kidx,
         })
+    }
+
+    /// Spawn one in-process shard worker thread and hand back its link.
+    fn spawn_local_link(&mut self, id: usize) -> Result<ShardLink> {
+        let (tx, rx) = mpsc::channel();
+        let (w, k, rep, d) =
+            (self.weights.clone(), self.kidx.clone(), self.reports_tx.clone(), self.depth.clone());
+        let total = self.total;
+        let handle = std::thread::Builder::new()
+            .name(format!("ecolora-shard-{id}"))
+            .spawn(move || run_shard(id, total, w, k, rx, rep, d))?;
+        self.handles.push(handle);
+        Ok(ShardLink::Local(tx))
+    }
+
+    /// Arm remote slot `shard` with an admitted, authenticated
+    /// connection: split it, spawn the link's reader thread, and start
+    /// fanning this slice out over TCP. Fails if the id is out of range
+    /// or the slot already has a live link (the registry's ledger
+    /// normally guarantees neither happens).
+    pub fn install_remote(&mut self, shard: u32, conn: TcpConn) -> Result<()> {
+        let id = shard as usize;
+        ensure!(id < self.links.len(), "shard id {id} out of range ({} slots)", self.links.len());
+        ensure!(
+            matches!(self.links[id], ShardLink::Pending),
+            "shard {id} already has a live link"
+        );
+        let (tx, rx) = conn.split_tcp()?;
+        let rx_bytes = Arc::new(AtomicU64::new(0));
+        let (rep, rxb) = (self.reports_tx.clone(), rx_bytes.clone());
+        // deliberately detached: the reader parks in recv() until the
+        // peer closes, which may outlive an aborted run's shutdown
+        std::thread::Builder::new()
+            .name(format!("ecolora-shardlink-{id}"))
+            .spawn(move || run_link_reader(id, rx, rep, rxb))?;
+        self.links[id] = ShardLink::Remote(Box::new(RemoteShard {
+            tx,
+            frame: Vec::new(),
+            arena: PayloadArena::new(4),
+            tx_bytes: 0,
+            rx_bytes,
+            rx_mark: 0,
+            close_sent: None,
+        }));
+        Ok(())
     }
 
     /// Shard count this router fans out to.
     pub fn shards(&self) -> usize {
-        self.txs.len()
+        self.links.len()
+    }
+
+    /// Remote slots still waiting for an `ecolora shard` process to
+    /// join (0 once the plane is fully armed; always 0 for
+    /// [`Router::new`] routers).
+    pub fn pending_shards(&self) -> usize {
+        self.links.iter().filter(|l| matches!(l, ShardLink::Pending)).count()
     }
 
     /// Open round `t` with `n_s` round-robin segments: rebuild the shard
-    /// map and tell every shard which slice it owns.
+    /// map and tell every shard which slice it owns. A remote link that
+    /// is dead (or was never armed) is replaced here by an in-process
+    /// shard for the same slice — the only point in the round where a
+    /// fallback is sound, because no contribution has been routed yet.
     pub fn begin_round(&mut self, t: u64, n_s: usize) -> Result<()> {
-        self.map = ShardMap::new(n_s.max(1), self.txs.len());
+        self.map = ShardMap::new(n_s.max(1), self.links.len());
         self.queue_max = 0;
-        for (shard, tx) in self.txs.iter().enumerate() {
+        // anything queued between rounds is a stale death notice from a
+        // link being replaced below (a completed close consumed every
+        // live report); drop it so it cannot poison this round's gather
+        while self.reports_rx.try_recv().is_ok() {}
+        for shard in 0..self.links.len() {
             let (seg_lo, seg_hi) = self.map.range(shard);
-            if tx.send(ShardMsg::Begin { round: t, n_s: self.map.n_segments(), seg_lo, seg_hi }).is_err()
-            {
-                bail!("shard {shard} died before round {t}");
+            let n_seg = self.map.n_segments();
+            let remote_dead = match &mut self.links[shard] {
+                ShardLink::Local(tx) => {
+                    let msg = ShardMsg::Begin { round: t, n_s: n_seg, seg_lo, seg_hi };
+                    if tx.send(msg).is_err() {
+                        bail!("shard {shard} died before round {t}");
+                    }
+                    false
+                }
+                ShardLink::Remote(link) => {
+                    link.tx_bytes = 0;
+                    link.rx_mark = link.rx_bytes.load(Ordering::Relaxed);
+                    link.close_sent = None;
+                    let msg = Message::ShardBegin {
+                        round: t,
+                        n_s: n_seg as u32,
+                        seg_lo: seg_lo as u32,
+                        seg_hi: seg_hi as u32,
+                    };
+                    link.send(&msg).is_err()
+                }
+                ShardLink::Pending => true,
+            };
+            if remote_dead {
+                eprintln!(
+                    "[router] shard {shard} unreachable at round {t} open; replacing it with an \
+                     in-process shard for segments [{seg_lo}, {seg_hi}) (any stragglers the \
+                     remote had buffered are lost)"
+                );
+                let link = self.spawn_local_link(shard)?;
+                if let ShardLink::Local(tx) = &link {
+                    let msg = ShardMsg::Begin { round: t, n_s: n_seg, seg_lo, seg_hi };
+                    if tx.send(msg).is_err() {
+                        bail!("shard {shard} died before round {t}");
+                    }
+                }
+                self.links[shard] = link;
             }
         }
         Ok(())
@@ -202,16 +449,29 @@ impl Router {
     /// Forward one accepted on-time contribution to its owning shard.
     pub fn route(&mut self, add: RoutedAdd) -> Result<()> {
         let shard = self.map.shard_of(add.segment);
-        self.bump_depth();
-        if self.txs[shard]
-            .send(ShardMsg::Add {
-                slot: add.slot,
-                seg: add.segment,
-                w: add.weight,
-                payload: add.payload,
-            })
-            .is_err()
-        {
+        if matches!(self.links[shard], ShardLink::Local(_)) {
+            self.bump_depth();
+        }
+        let ok = match &mut self.links[shard] {
+            ShardLink::Local(tx) => tx
+                .send(ShardMsg::Add {
+                    slot: add.slot,
+                    seg: add.segment,
+                    w: add.weight,
+                    payload: add.payload,
+                })
+                .is_ok(),
+            ShardLink::Remote(link) => link
+                .send(&Message::ShardAdd {
+                    slot: add.slot,
+                    seg: add.segment as u32,
+                    w: add.weight,
+                    payload: add.payload,
+                })
+                .is_ok(),
+            ShardLink::Pending => false,
+        };
+        if !ok {
             bail!("shard {shard} died mid-round");
         }
         Ok(())
@@ -221,8 +481,15 @@ impl Router {
     /// its segment (under the CURRENT map; `n_s` is fixed in practice).
     pub fn route_late(&mut self, res: TrainResult) -> Result<()> {
         let shard = self.map.shard_of(res.segment as usize);
-        self.bump_depth();
-        if self.txs[shard].send(ShardMsg::Late(Box::new(res))).is_err() {
+        if matches!(self.links[shard], ShardLink::Local(_)) {
+            self.bump_depth();
+        }
+        let ok = match &mut self.links[shard] {
+            ShardLink::Local(tx) => tx.send(ShardMsg::Late(Box::new(res))).is_ok(),
+            ShardLink::Remote(link) => link.send(&Message::TrainResult(res)).is_ok(),
+            ShardLink::Pending => false,
+        };
+        if !ok {
             bail!("shard {shard} died mid-round");
         }
         Ok(())
@@ -231,27 +498,56 @@ impl Router {
     /// Close round `t`: every shard folds in slot order, late-folds its
     /// straggler slice, and reports; the router scatters the shard deltas
     /// into one global vector and merges the tallies. Fails loudly if any
-    /// shard poisoned the round (decode error, geometry mismatch).
+    /// shard poisoned the round (decode error, geometry mismatch, a dead
+    /// remote link — its reader injects an error report, so the gather
+    /// never hangs on a report that cannot arrive).
     pub fn close_round(&mut self, t: u64) -> Result<GatheredAgg> {
-        for (shard, tx) in self.txs.iter().enumerate() {
-            let msg = ShardMsg::Close {
-                beta: self.beta,
-                now_round: t,
-                dense_params: self.dense_params,
+        for shard in 0..self.links.len() {
+            let ok = match &mut self.links[shard] {
+                ShardLink::Local(tx) => tx
+                    .send(ShardMsg::Close {
+                        beta: self.beta,
+                        now_round: t,
+                        dense_params: self.dense_params,
+                    })
+                    .is_ok(),
+                ShardLink::Remote(link) => {
+                    link.close_sent = Some(Instant::now());
+                    link.send(&Message::ShardClose {
+                        now_round: t,
+                        beta: self.beta,
+                        dense_params: self.dense_params as u64,
+                    })
+                    .is_ok()
+                }
+                ShardLink::Pending => false,
             };
-            if tx.send(msg).is_err() {
+            if !ok {
                 bail!("shard {shard} died before close of round {t}");
             }
         }
-        let mut reports: Vec<Option<ShardReport>> = (0..self.txs.len()).map(|_| None).collect();
-        for _ in 0..self.txs.len() {
+        let mut reports: Vec<Option<ShardReport>> = (0..self.links.len()).map(|_| None).collect();
+        let mut rtt_ms_max = 0.0f64;
+        for _ in 0..self.links.len() {
             let rep = self
                 .reports_rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("aggregation plane died during round {t} close"))?;
             let id = rep.shard;
             ensure!(id < reports.len() && reports[id].is_none(), "duplicate report from shard {id}");
+            if let ShardLink::Remote(link) = &self.links[id] {
+                if let Some(sent_at) = link.close_sent {
+                    rtt_ms_max = rtt_ms_max.max(sent_at.elapsed().as_secs_f64() * 1e3);
+                }
+            }
             reports[id] = Some(rep);
+        }
+        let (mut tx_bytes, mut rx_bytes) = (0u64, 0u64);
+        for link in &self.links {
+            if let ShardLink::Remote(l) = link {
+                tx_bytes += l.tx_bytes;
+                rx_bytes += l.rx_bytes.load(Ordering::Relaxed).saturating_sub(l.rx_mark);
+            }
         }
 
         let mut out = GatheredAgg {
@@ -262,8 +558,11 @@ impl Router {
             shard_agg_s_max: 0.0,
             queue_max: self.queue_max,
             late_evicted: 0,
-            shards: self.txs.len(),
-            shard_digests: Vec::with_capacity(self.txs.len()),
+            shards: self.links.len(),
+            shard_digests: Vec::with_capacity(self.links.len()),
+            shard_tx_bytes: tx_bytes,
+            shard_rx_bytes: rx_bytes,
+            shard_rtt_ms_max: rtt_ms_max,
         };
         // gather in shard-id order: deltas scatter to disjoint spans and
         // the tallies are commutative, so this order is cosmetic
@@ -282,13 +581,23 @@ impl Router {
         Ok(out)
     }
 
-    /// Orderly end of run: stop every shard thread and join it.
+    /// Orderly end of run: tell every shard (thread or process) to stop,
+    /// then join the local threads. Remote reader threads are detached —
+    /// they exit when their peer closes the connection.
     pub fn shutdown(self) -> Result<()> {
-        for tx in &self.txs {
-            let _ = tx.send(ShardMsg::Shutdown);
+        let Router { links, handles, .. } = self;
+        for link in links {
+            match link {
+                ShardLink::Local(tx) => {
+                    let _ = tx.send(ShardMsg::Shutdown);
+                }
+                ShardLink::Remote(mut l) => {
+                    let _ = l.send(&Message::Shutdown);
+                }
+                ShardLink::Pending => {}
+            }
         }
-        drop(self.txs);
-        for (id, h) in self.handles.into_iter().enumerate() {
+        for (id, h) in handles.into_iter().enumerate() {
             if h.join().is_err() {
                 bail!("shard thread {id} panicked");
             }
@@ -300,6 +609,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::LoraKind;
     use crate::util::propcheck::propcheck;
 
     #[test]
@@ -363,5 +673,146 @@ mod tests {
         for seg in 0..7 {
             assert_eq!(map.shard_of(seg), 0);
         }
+    }
+
+    // ---- death-path and backpressure coverage -----------------------------
+
+    const TOTAL: usize = 16;
+
+    fn mk_router(shards: usize) -> Router {
+        let kinds = vec![LoraKind::A; TOTAL];
+        Router::new(
+            TOTAL,
+            shards,
+            Arc::new(vec![1.0; 4]),
+            Arc::new(KindIndex::new(&kinds)),
+            0.7,
+            TOTAL,
+        )
+        .unwrap()
+    }
+
+    /// Stop shard `id`'s worker thread and wait until its channel is
+    /// provably hung up (the next send must fail deterministically).
+    fn kill_local_shard(r: &mut Router, id: usize) {
+        match &r.links[id] {
+            ShardLink::Local(tx) => tx.send(ShardMsg::Shutdown).unwrap(),
+            _ => panic!("expected a local link"),
+        }
+        r.handles.remove(id).join().unwrap();
+    }
+
+    #[test]
+    fn shard_death_before_begin_fails_loudly() {
+        let mut r = mk_router(2);
+        kill_local_shard(&mut r, 1);
+        let err = r.begin_round(3, 4).unwrap_err();
+        assert!(format!("{err:#}").contains("shard 1 died before round 3"), "{err:#}");
+    }
+
+    #[test]
+    fn shard_death_mid_round_fails_route_loudly() {
+        let mut r = mk_router(2);
+        r.begin_round(0, 4).unwrap();
+        kill_local_shard(&mut r, 1);
+        // n_s=4 over 2 shards → segment 3 lives on shard 1
+        let add = RoutedAdd {
+            slot: 0,
+            segment: 3,
+            weight: 1.0,
+            payload: Payload::Dense(vec![0.0; 4]),
+        };
+        let err = r.route(add).unwrap_err();
+        assert!(format!("{err:#}").contains("shard 1 died mid-round"), "{err:#}");
+    }
+
+    #[test]
+    fn shard_death_mid_round_fails_route_late_loudly() {
+        let mut r = mk_router(2);
+        r.begin_round(0, 4).unwrap();
+        kill_local_shard(&mut r, 0);
+        let res = TrainResult {
+            round: 0,
+            slot: 1,
+            client: 0,
+            segment: 0,
+            n_samples: 1,
+            mean_loss: 0.0,
+            k_a: 0.0,
+            k_b: 0.0,
+            exec_s: 0.0,
+            stale_from_round: 0,
+            up: super::super::protocol::UpPayload::DenseUpdate(vec![0.0; 4]),
+        };
+        let err = r.route_late(res).unwrap_err();
+        assert!(format!("{err:#}").contains("shard 0 died mid-round"), "{err:#}");
+    }
+
+    #[test]
+    fn shard_death_before_close_fails_loudly() {
+        let mut r = mk_router(2);
+        r.begin_round(7, 4).unwrap();
+        kill_local_shard(&mut r, 0);
+        let err = r.close_round(7).unwrap_err();
+        assert!(format!("{err:#}").contains("shard 0 died before close of round 7"), "{err:#}");
+    }
+
+    #[test]
+    fn queue_max_tracks_unconsumed_backlog() {
+        let mut r = mk_router(1);
+        // swap in a test-held channel: nothing ever decrements depth, so
+        // every route stays "queued" from the gauge's point of view (the
+        // real thread exits on hangup when its sender drops)
+        let (tx, _hold) = mpsc::channel();
+        let old = std::mem::replace(&mut r.links[0], ShardLink::Local(tx));
+        drop(old);
+        r.begin_round(0, 1).unwrap();
+        for slot in 0..5 {
+            r.route(RoutedAdd {
+                slot,
+                segment: 0,
+                weight: 1.0,
+                payload: Payload::Dense(vec![0.0; TOTAL]),
+            })
+            .unwrap();
+        }
+        assert_eq!(r.queue_max, 5, "5 routed, 0 consumed");
+        // a fresh round resets the gauge
+        r.begin_round(1, 1).unwrap();
+        assert_eq!(r.queue_max, 0);
+        r.shutdown().unwrap();
+    }
+
+    #[test]
+    fn never_joined_remote_slots_fall_back_in_process() {
+        let kinds = vec![LoraKind::A; TOTAL];
+        let mut r = Router::new_remote(
+            TOTAL,
+            2,
+            Arc::new(vec![1.0; 4]),
+            Arc::new(KindIndex::new(&kinds)),
+            0.7,
+            TOTAL,
+        )
+        .unwrap();
+        assert_eq!(r.pending_shards(), 2);
+        // round open replaces both absent remotes with local shards
+        r.begin_round(0, 4).unwrap();
+        assert_eq!(r.pending_shards(), 0);
+        r.route(RoutedAdd {
+            slot: 0,
+            segment: 0,
+            weight: 1.0,
+            // n_s=4 over 16 params → segment 0 spans 4 params
+            payload: Payload::Dense(vec![2.0; 4]),
+        })
+        .unwrap();
+        let g = r.close_round(0).unwrap();
+        assert_eq!(g.shards, 2);
+        assert_eq!(g.covered, vec![true, false, false, false]);
+        assert_eq!(g.delta[..4], [2.0; 4]);
+        assert_eq!((g.shard_tx_bytes, g.shard_rx_bytes), (0, 0), "no remote traffic");
+        assert_eq!(g.shard_rtt_ms_max, 0.0);
+        r.shutdown().unwrap();
     }
 }

@@ -23,13 +23,16 @@ use std::sync::atomic::{AtomicIsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use crate::compress::{dense_bytes, wire, KindIndex, SparsePool, SparseVec};
+use anyhow::{bail, Context, Result};
+
+use crate::compress::{dense_bytes, wire, KindIndex, PayloadArena, SparsePool, SparseVec};
 use crate::fed::server::SegmentAggregator;
 use crate::fed::staleness;
 use crate::metrics::CommTotals;
 
 use super::journal;
-use super::protocol::{TrainResult, UpPayload};
+use super::protocol::{Message, TrainResult, UpPayload};
+use super::transport::{ConnRx, TcpConn};
 
 /// Cap on buffered straggler payload bytes (sparse wire bytes, or
 /// 4 bytes/param for dense). 64 MiB comfortably buffers thousands of
@@ -75,7 +78,7 @@ pub struct FoldCtx<'a> {
 
 /// Aggregation-side tallies a shard accumulates over one round (merged
 /// across shards by the router at round close).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct AggStats {
     /// Uplink comm accounting for everything folded into the aggregate
     /// (on-time wire/dense uploads plus late folds).
@@ -242,7 +245,7 @@ impl LateBuffer {
 
 /// One on-time uplink payload routed to a shard (the envelope's typed
 /// body; the segment id that picked the shard came from the v2 header).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     /// Compressed round-robin segment update (`compress::wire` bytes).
     Wire(Vec<u8>),
@@ -288,7 +291,11 @@ pub struct ShardAggregator {
 /// roughly one round's worth of contributions).
 const DECODE_POOL_MAX: usize = 64;
 
-/// What one shard hands back at round close.
+/// What one shard hands back at round close. Crosses process boundaries
+/// as a protocol-v4 `ShardReport` envelope when the aggregation plane
+/// runs remotely (`ecolora shard`), so it derives the comparison traits
+/// the wire codec's roundtrip property needs.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ShardReport {
     /// Shard index (router-side gather key).
     pub shard: usize,
@@ -509,6 +516,57 @@ pub fn run_shard(
                 }
             }
             ShardMsg::Shutdown => return,
+        }
+    }
+}
+
+/// Remote-process counterpart of [`run_shard`]: serve one shard of the
+/// aggregation plane over an already-joined coordinator connection
+/// (`ecolora shard`). The loop speaks the protocol-v4 wire encoding of
+/// the [`ShardMsg`] contract — `ShardBegin`/`ShardAdd`/`TrainResult`
+/// (stragglers)/`ShardClose` in, `ShardReport` out — and runs the exact
+/// same [`ShardAggregator`] code path as an in-process shard thread, so
+/// the aggregate a remote plane produces is bitwise-identical to
+/// `--shards N`. Report sends recycle their payload buffer through a
+/// [`PayloadArena`] and a reused frame scratch: steady-state rounds
+/// allocate nothing on the uplink side of the link.
+///
+/// Returns `Ok(())` on an orderly `Shutdown`; a dropped connection or a
+/// malformed frame is an error (the coordinator decides whether to fall
+/// back or abort — this process just exits loudly).
+pub fn serve_shard_conn(
+    id: usize,
+    total: usize,
+    weights: &[f64],
+    kidx: &KindIndex,
+    conn: TcpConn,
+) -> Result<()> {
+    let (mut tx, mut rx) = conn.split_tcp()?;
+    let mut shard = ShardAggregator::new(id, total);
+    let mut arena = PayloadArena::new(4);
+    let mut frame = Vec::new();
+    loop {
+        let env = rx.recv().context("shard: receiving from coordinator")?;
+        match Message::from_envelope(&env).context("shard: parsing coordinator frame")? {
+            Message::ShardBegin { n_s, seg_lo, seg_hi, .. } => {
+                shard.begin(n_s as usize, seg_lo as usize, seg_hi as usize);
+            }
+            Message::ShardAdd { slot, seg, w, payload } => {
+                shard.add(slot, seg as usize, w, payload, kidx);
+            }
+            Message::TrainResult(res) => shard.add_late(res),
+            Message::ShardClose { now_round, beta, dense_params } => {
+                let ctx =
+                    FoldCtx { weights, beta, now_round, dense_params: dense_params as usize };
+                let report = shard.close(ctx, kidx);
+                let env = Message::ShardReport(Box::new(report)).to_envelope_in(arena.take());
+                tx.send_scratch(&env, &mut frame).context("shard: sending round report")?;
+                arena.recycle(env.payload);
+            }
+            Message::Shutdown => return Ok(()),
+            other => {
+                bail!("shard {id}: unexpected {:?} from coordinator", other.kind())
+            }
         }
     }
 }

@@ -5,6 +5,7 @@
 //!   train     --preset small --method fedit [--eco] [...]   one federated run
 //!   serve     --listen 0.0.0.0:7878 --token-file t --expect-workers N [...]
 //!   worker    --connect host:7878 --token-file t [...]
+//!   shard     --connect host:7878 --token-file t [--shard-id N]
 //!   repro     --table 1..6 | --fig 2|3 [--preset p] [--scaled]
 //!   netsim    --ul 1 --dl 5 [--bytes-up N --bytes-down N --compute S]
 //!   help
@@ -17,7 +18,7 @@ use anyhow::{anyhow, Result};
 use crate::baselines::Method;
 use crate::cluster::{
     self, AuthToken, ClusterMode, ClusterOptions, FaultSpec, JournalOptions, RoundPolicy,
-    ServeOptions, SimProfile, SyncPolicy, WorkerOptions,
+    ServeOptions, ShardOptions, SimProfile, SyncPolicy, WorkerOptions,
 };
 use crate::compress::{AdaptiveSparsifier, Encoding, SparsMode};
 use crate::data::PartitionKind;
@@ -47,12 +48,15 @@ USAGE: ecolora <subcommand> [flags]
              [--partition dirichlet|clusters|task|iid] [--target-acc X]
              [--csv out.csv] [--verbose]
   serve      --listen <addr:port> --token-file <path> --expect-workers N
-             [--join-timeout-s S] [--journal <path> [--resume]]
+             [--expect-shards N] [--join-timeout-s S]
+             [--journal <path> [--resume]]
              [--journal-sync always|round|off]
              [same run flags as train, minus --cluster/--workers]
   worker     --connect <addr:port> --token-file <path> [--worker-id N]
              [--reconnect N] [--dial-timeout-s S] [--inject-slow CLIENT]
              [--inject-delay-ms MS] [same run flags as the serve side]
+  shard      --connect <addr:port> --token-file <path> [--shard-id N]
+             [--dial-timeout-s S] [same run flags as the serve side]
   repro      --table 1|2|3|4|5|6  or  --fig 2|3   [--preset p] [--scaled]
   netsim     --ul <mbps> --dl <mbps> --bytes-up N --bytes-down N --compute S
   version / help
@@ -96,6 +100,18 @@ must be launched with identical run flags, and each host needs the
 pretrain checkpoint). Workers that drop mid-run are stragglers (absorbed
 under --round-policy quorum, fatal under sync) and may rejoin
 (--reconnect N). See docs/DEPLOYMENT.md for the operator guide.
+
+serve --expect-shards N additionally moves the aggregation plane out of
+process: N `ecolora shard` peers join through the same handshake, each
+owns a contiguous slice of the round-robin segment space, and the
+router fans uplink payloads to them over framed TCP (--expect-shards
+must equal --shards, and every shard must join before round 0; the
+per-round shard link bytes/latency land in the shard_tx_bytes /
+shard_rx_bytes / shard_rtt_ms_max CSV columns). A shard that dies
+between rounds is replaced by an in-process aggregator; one that dies
+mid-round aborts the run — shard slots never reopen, so a shard
+process, unlike a worker, cannot rejoin. --sim-shard-mbps models the
+coordinator-to-shard hop when the netsim shim is on.
 ";
 
 pub fn dispatch() -> Result<()> {
@@ -105,6 +121,7 @@ pub fn dispatch() -> Result<()> {
         "train" => cmd_train(&args),
         "serve" => cmd_serve(&args),
         "worker" => cmd_worker(&args),
+        "shard" => cmd_shard(&args),
         "repro" => cmd_repro(&args),
         "netsim" => cmd_netsim(&args),
         "version" => {
@@ -438,6 +455,7 @@ fn sim_profile_from_args(args: &Args) -> Option<SimProfile> {
         "sim-dl",
         "sim-latency",
         "sim-agg-mbps",
+        "sim-shard-mbps",
         "sim-slow-frac",
         "sim-slow-factor",
     ]
@@ -453,6 +471,7 @@ fn sim_profile_from_args(args: &Args) -> Option<SimProfile> {
         slow_frac: args.get_f64("sim-slow-frac", 0.0),
         slow_factor: args.get_f64("sim-slow-factor", 1.0),
         agg_mbps: args.get_f64("sim-agg-mbps", 0.0),
+        shard_mbps: args.get_f64("sim-shard-mbps", 0.0),
     })
 }
 
@@ -498,6 +517,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if shards == 0 {
         return Err(anyhow!("--shards expects a positive shard count"));
     }
+    // 0 (default) keeps the aggregation plane in-process; serve() itself
+    // enforces expect_shards == shards so the remote tier replaces the
+    // plane wholesale rather than hybridizing with local threads.
+    let expect_shards = args.get_usize("expect-shards", 0);
     let netsim = sim_profile_from_args(args);
     let journal = match args.get("journal") {
         Some(path) => {
@@ -526,6 +549,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         listen: args.get_or("listen", "127.0.0.1:7878").to_string(),
         token,
         expect_workers,
+        expect_shards,
         join_timeout: Duration::from_secs(args.get_u64("join-timeout-s", 600)),
         journal,
         hold_after_dispatch,
@@ -573,6 +597,47 @@ fn cmd_worker(args: &Args) -> Result<()> {
         fault: fault_from_args(args)?,
     };
     cluster::run_remote_worker(cfg, &opts)
+}
+
+fn cmd_shard(args: &Args) -> Result<()> {
+    let cfg = deploy_config_from_args(args)?;
+    if cfg.preset == "synthetic" {
+        return Err(anyhow!(
+            "--preset synthetic is an in-process scale path (`train --cluster mem|tcp`); \
+             a remote shard derives its plane geometry from a compiled model"
+        ));
+    }
+    // the straggler injection hook lives in the worker process
+    for flag in ["inject-slow", "inject-delay-ms"] {
+        if args.get(flag).is_some() {
+            return Err(anyhow!("--{flag} belongs to the `worker` subcommand"));
+        }
+    }
+    // no --reconnect: a shard slot never reopens within a run (the
+    // coordinator replaces a dead shard in-process or aborts), so a
+    // retry loop could only ever collect duplicate_shard rejects
+    if args.get("reconnect").is_some() {
+        return Err(anyhow!(
+            "--reconnect belongs to the `worker` subcommand (shard slots never reopen; \
+             see docs/DEPLOYMENT.md)"
+        ));
+    }
+    let token = AuthToken::from_cli(args.get("token"), args.get("token-file"))?;
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("shard requires --connect <addr:port> (the serve listener)"))?
+        .to_string();
+    let requested_id = args
+        .get("shard-id")
+        .map(|v| v.parse::<u32>().map_err(|_| anyhow!("--shard-id expects an integer")))
+        .transpose()?;
+    let opts = ShardOptions {
+        connect,
+        token,
+        requested_id,
+        dial_timeout: Duration::from_secs(args.get_u64("dial-timeout-s", 60)),
+    };
+    cluster::run_remote_shard(cfg, &opts)
 }
 
 fn print_train_outcome(label: &str, out: &FedOutcome, args: &Args) -> Result<()> {

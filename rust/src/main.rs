@@ -2,13 +2,14 @@
 //! `config::commands`; see `ecolora help`.
 //!
 //! Exit codes: 0 success, 1 generic failure, 3 the coordinator refused
-//! this process's join handshake (`ecolora worker` against a `serve`
-//! peer). A 3 for a bad token, config mismatch, full cluster or
-//! malformed join is deterministic — deployment scripts must not
-//! blindly retry it; a 3 naming `duplicate_worker` means the rejoin
+//! this process's join handshake (`ecolora worker` or `ecolora shard`
+//! against a `serve` peer). A 3 for a bad token, config mismatch, full
+//! cluster or malformed join is deterministic — deployment scripts must
+//! not blindly retry it; a 3 naming `duplicate_worker` means the rejoin
 //! race outlived the worker's own `--reconnect` budget and is worth one
 //! supervised restart after the coordinator logs the drop (see
-//! docs/PROTOCOL.md §5a).
+//! docs/PROTOCOL.md §5a). `ecolora shard` processes never retry a 3:
+//! a shard slot never reopens within a run (docs/PROTOCOL.md §9).
 
 fn main() {
     if let Err(e) = ecolora::config::commands::dispatch() {

@@ -111,6 +111,16 @@ pub struct RoundRecord {
     /// Wall milliseconds the round-close journal fsync took (0 under
     /// `--journal-sync off` and for replayed rounds).
     pub journal_fsync_ms: f64,
+    /// Frame bytes the coordinator sent to remote `ecolora shard`
+    /// processes this round (0 when the aggregation plane is in-process).
+    pub shard_tx_bytes: u64,
+    /// Frame bytes received from remote shard processes this round
+    /// (0 when the aggregation plane is in-process).
+    pub shard_rx_bytes: u64,
+    /// Max milliseconds from a remote shard's round-close send to its
+    /// report's arrival (the aggregation tier's network critical path;
+    /// 0 in-process).
+    pub shard_rtt_ms_max: f64,
 }
 
 /// Full training telemetry.
@@ -242,12 +252,12 @@ impl RunLog {
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
         let mut s = String::from(
-            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins,population,active_cohort,mux_workers,sched_ms,journal_bytes,journal_fsync_ms\n",
+            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins,population,active_cohort,mux_workers,sched_ms,journal_bytes,journal_fsync_ms,shard_tx_bytes,shard_rx_bytes,shard_rtt_ms_max\n",
         );
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{},{},{},{},{:.4},{},{:.4}",
+                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{},{},{},{},{:.4},{},{:.4},{},{},{:.4}",
                 r.round,
                 r.global_loss,
                 r.eval_acc.map_or(String::from(""), |a| format!("{a:.4}")),
@@ -280,6 +290,9 @@ impl RunLog {
                 r.sched_ms,
                 r.journal_bytes,
                 r.journal_fsync_ms,
+                r.shard_tx_bytes,
+                r.shard_rx_bytes,
+                r.shard_rtt_ms_max,
             );
         }
         s
@@ -414,7 +427,7 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",4,12.5000,7,2,1,3,2,0,0,0,0.0000,0,0.0000"), "{row}");
+        assert!(row.ends_with(",4,12.5000,7,2,1,3,2,0,0,0,0.0000,0,0.0000,0,0,0.0000"), "{row}");
         assert_eq!(log.max_shard_agg_ms(), 12.5);
         assert_eq!(log.total_late_evicted(), 2);
         assert_eq!(log.total_worker_drops(), 3);
@@ -438,7 +451,7 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",100000,64,8,3.2500,0,0.0000"), "{row}");
+        assert!(row.ends_with(",100000,64,8,3.2500,0,0.0000,0,0,0.0000"), "{row}");
     }
 
     #[test]
@@ -456,7 +469,26 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",4096,1.5000"), "{row}");
+        assert!(row.ends_with(",4096,1.5000,0,0,0.0000"), "{row}");
+    }
+
+    #[test]
+    fn shard_link_columns_round_trip_through_csv() {
+        let mut log = RunLog::new("t");
+        log.push(RoundRecord {
+            round: 0,
+            shard_tx_bytes: 8192,
+            shard_rx_bytes: 2048,
+            shard_rtt_ms_max: 0.75,
+            ..Default::default()
+        });
+        let csv = log.to_csv();
+        let header = csv.lines().next().unwrap();
+        for col in ["shard_tx_bytes", "shard_rx_bytes", "shard_rtt_ms_max"] {
+            assert!(header.contains(col), "missing column {col}");
+        }
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",8192,2048,0.7500"), "{row}");
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! Multi-process deployment integration.
 //!
 //! The handshake reject-path suite runs everywhere (no PJRT needed): it
-//! drives `cluster::handshake::{admit, join}` over real loopback TCP
-//! sockets and proves that a bad token, a config-digest mismatch, a
-//! duplicate worker id, a protocol-version skew and a mid-handshake
-//! disconnect each close that one socket — with the right `Reject` where
-//! one is owed — while the acceptor keeps admitting well-behaved peers
-//! (no poisoned state).
+//! drives `cluster::handshake::{admit, join, join_shard}` over real
+//! loopback TCP sockets and proves that a bad token, a config-digest
+//! mismatch, a duplicate worker id, a protocol-version skew and a
+//! mid-handshake disconnect each close that one socket — with the right
+//! `Reject` where one is owed — while the acceptor keeps admitting
+//! well-behaved peers (no poisoned state). The `ecolora shard` join path
+//! gets the mirrored suite: bad token, config mismatch, duplicate shard
+//! id, and a shard knocking on a worker-only coordinator.
 //!
 //! The end-to-end suite — `ecolora serve` + spawned `ecolora worker`
 //! processes over loopback, proving bitwise parity of the deterministic
@@ -23,7 +25,9 @@ use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
-use ecolora::cluster::handshake::{admit, join, Admission, AuthToken, HandshakeSpec, Rejected};
+use ecolora::cluster::handshake::{
+    admit, join, join_shard, Admission, AuthToken, HandshakeSpec, Rejected,
+};
 use ecolora::cluster::protocol::{Message, RejectCode, PROTO_VERSION};
 use ecolora::cluster::transport::{dial, Listener, TcpConn};
 use ecolora::cluster::{self, ClusterOptions};
@@ -39,7 +43,18 @@ fn spec(n_workers: usize) -> HandshakeSpec {
         token: AuthToken::new("the-right-token").unwrap(),
         config_digest: DIGEST,
         n_workers,
+        n_shards: 0,
     }
+}
+
+fn spec_with_shards(n_workers: usize, n_shards: usize) -> HandshakeSpec {
+    HandshakeSpec { n_shards, ..spec(n_workers) }
+}
+
+/// The worker-only coordinator's shard reservation policy: no shard
+/// slots exist (mirrors `serve` without `--expect-shards`).
+fn no_shard_slots(_req: Option<u32>) -> Result<(u32, bool), (RejectCode, String)> {
+    Err((RejectCode::ClusterFull, "this coordinator has no shard slots".into()))
 }
 
 /// Loopback listener + a poll-accept helper.
@@ -54,9 +69,24 @@ fn accept_one(listener: &Listener) -> TcpConn {
     }
 }
 
-/// Admit with a permissive single-slot reservation (id 0).
+/// Admit with a permissive single-slot worker reservation (id 0) and no
+/// shard slots.
 fn admit_simple(conn: &mut TcpConn, sp: &HandshakeSpec) -> anyhow::Result<Admission> {
-    admit(conn, sp, |req| Ok((req.unwrap_or(0), false)), |_| {}, 7)
+    admit(conn, sp, |req| Ok((req.unwrap_or(0), false)), |_| {}, no_shard_slots, |_| {}, 7)
+}
+
+/// The shard mirror of `admit_simple`: permissive shard reservation, no
+/// worker slots.
+fn admit_shard_simple(conn: &mut TcpConn, sp: &HandshakeSpec) -> anyhow::Result<Admission> {
+    admit(
+        conn,
+        sp,
+        |_| Err((RejectCode::ClusterFull, "no worker slots in this test".into())),
+        |_| {},
+        |req| Ok((req.unwrap_or(0), false)),
+        |_| {},
+        7,
+    )
 }
 
 #[test]
@@ -173,7 +203,7 @@ fn duplicate_worker_id_is_rejected_while_the_first_stays() {
 
     let first = joiner(addr.clone(), true);
     let mut c1 = accept_one(&listener);
-    match admit(&mut c1, &sp, reserve, |_| {}, 0).unwrap() {
+    match admit(&mut c1, &sp, reserve, |_| {}, no_shard_slots, |_| {}, 0).unwrap() {
         Admission::Admitted { worker: 1, .. } => {}
         other => panic!("first join for slot 1 must land: {other:?}"),
     }
@@ -181,7 +211,7 @@ fn duplicate_worker_id_is_rejected_while_the_first_stays() {
 
     let second = joiner(addr, false);
     let mut c2 = accept_one(&listener);
-    match admit(&mut c2, &sp, reserve, |_| {}, 0).unwrap() {
+    match admit(&mut c2, &sp, reserve, |_| {}, no_shard_slots, |_| {}, 0).unwrap() {
         Admission::Rejected(code) => assert_eq!(code, RejectCode::DuplicateWorker),
         other => panic!("second join for slot 1 must be refused: {other:?}"),
     }
@@ -294,6 +324,178 @@ fn non_join_first_message_is_rejected_as_malformed() {
     }
 }
 
+// ---- shard-join handshake paths (ungated) -----------------------------------
+//
+// `ecolora shard` peers ride the same admission machinery as workers, so
+// the mirrored reject suite proves the shard closure pair is actually
+// consulted (and ONLY for ShardJoin first messages). Segment-slice
+// overlap needs no dedicated reject: slices are derived from the shard
+// id by `ShardMap`, so the duplicate-id reservation check IS the overlap
+// guard.
+
+#[test]
+fn good_shard_join_is_welcomed_with_slot_and_shard_count() {
+    let listener = Listener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client = std::thread::spawn(move || {
+        let mut conn = dial(&addr, Duration::from_secs(5)).unwrap();
+        let token = AuthToken::new("the-right-token").unwrap();
+        join_shard(&mut conn, &token, DIGEST, Some(1)).unwrap()
+    });
+    let mut server_conn = accept_one(&listener);
+    let sp = spec_with_shards(8, 2);
+    match admit_shard_simple(&mut server_conn, &sp).unwrap() {
+        Admission::AdmittedShard { shard, rejoin } => {
+            assert_eq!(shard, 1);
+            assert!(!rejoin);
+        }
+        other => panic!("expected shard admission, got {other:?}"),
+    }
+    let joined = client.join().unwrap();
+    assert_eq!(joined.shard, 1);
+    assert_eq!(
+        joined.n_shards, 2,
+        "a shard's Welcome must carry the SHARD count, not the worker count"
+    );
+    assert_eq!(joined.resume_round, 7);
+}
+
+#[test]
+fn shard_join_on_a_worker_only_coordinator_is_refused_as_full() {
+    // `serve` without --expect-shards keeps the aggregation plane
+    // in-process; a shard knocking anyway gets a deterministic refusal
+    let listener = Listener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client = std::thread::spawn(move || {
+        let mut conn = dial(&addr, Duration::from_secs(5)).unwrap();
+        let token = AuthToken::new("the-right-token").unwrap();
+        join_shard(&mut conn, &token, DIGEST, None).unwrap_err()
+    });
+    let mut server_conn = accept_one(&listener);
+    match admit_simple(&mut server_conn, &spec(2)).unwrap() {
+        Admission::Rejected(code) => assert_eq!(code, RejectCode::ClusterFull),
+        other => panic!("expected rejection, got {other:?}"),
+    }
+    let err = client.join().unwrap();
+    let rejected = err.downcast_ref::<Rejected>().expect("typed Rejected error");
+    assert_eq!(rejected.code, RejectCode::ClusterFull);
+    assert!(rejected.reason.contains("no shard slots"), "{}", rejected.reason);
+}
+
+#[test]
+fn shard_join_with_bad_token_never_reaches_a_reservation() {
+    let listener = Listener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client = std::thread::spawn(move || {
+        let mut conn = dial(&addr, Duration::from_secs(5)).unwrap();
+        let token = AuthToken::new("the-wrong-token").unwrap();
+        join_shard(&mut conn, &token, DIGEST, Some(0)).unwrap_err()
+    });
+    let mut server_conn = accept_one(&listener);
+    let sp = spec_with_shards(2, 2);
+    // both reservation closures must stay untouched for an
+    // unauthenticated peer, shard or worker
+    let res = admit(
+        &mut server_conn,
+        &sp,
+        |_| -> Result<(u32, bool), (RejectCode, String)> {
+            panic!("worker reservation ran for an unauthenticated shard")
+        },
+        |_| {},
+        |_| -> Result<(u32, bool), (RejectCode, String)> {
+            panic!("shard reservation ran for an unauthenticated shard")
+        },
+        |_| {},
+        0,
+    );
+    match res.unwrap() {
+        Admission::Rejected(code) => assert_eq!(code, RejectCode::BadToken),
+        other => panic!("expected rejection, got {other:?}"),
+    }
+    drop(server_conn);
+    let err = client.join().unwrap();
+    assert_eq!(err.downcast_ref::<Rejected>().unwrap().code, RejectCode::BadToken);
+    assert!(
+        !format!("{err:#}").contains("the-right-token"),
+        "a reject must never echo the expected secret"
+    );
+}
+
+#[test]
+fn shard_config_digest_mismatch_names_the_shard_role() {
+    let listener = Listener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let client = std::thread::spawn(move || {
+        let mut conn = dial(&addr, Duration::from_secs(5)).unwrap();
+        let token = AuthToken::new("the-right-token").unwrap();
+        join_shard(&mut conn, &token, DIGEST ^ 1, None).unwrap_err()
+    });
+    let mut server_conn = accept_one(&listener);
+    match admit_shard_simple(&mut server_conn, &spec_with_shards(2, 2)).unwrap() {
+        Admission::Rejected(code) => assert_eq!(code, RejectCode::ConfigMismatch),
+        other => panic!("expected rejection, got {other:?}"),
+    }
+    let err = client.join().unwrap();
+    let rejected = err.downcast_ref::<Rejected>().unwrap();
+    assert_eq!(rejected.code, RejectCode::ConfigMismatch);
+    // both digests for flag-diffing, plus the role so the operator knows
+    // WHICH process of the three tiers diverged
+    assert!(rejected.reason.contains(&format!("{:016x}", DIGEST)), "{}", rejected.reason);
+    assert!(rejected.reason.contains(&format!("{:016x}", DIGEST ^ 1)), "{}", rejected.reason);
+    assert!(rejected.reason.contains("shard"), "{}", rejected.reason);
+}
+
+#[test]
+fn duplicate_shard_id_is_rejected_while_the_first_stays() {
+    let listener = Listener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let connected: RefCell<HashSet<u32>> = RefCell::new(HashSet::new());
+    // the serve-side ledger's policy, in miniature: shard slots are
+    // reserved once and NEVER reopen within a run
+    let reserve_shard = |req: Option<u32>| {
+        let id = req.expect("test joins request explicit ids");
+        if connected.borrow().contains(&id) {
+            Err((RejectCode::DuplicateWorker, format!("shard id {id} is already connected")))
+        } else {
+            connected.borrow_mut().insert(id);
+            Ok((id, false))
+        }
+    };
+    let sp = spec_with_shards(4, 2);
+    let joiner = |addr: String, expect_ok: bool| {
+        std::thread::spawn(move || {
+            let mut conn = dial(&addr, Duration::from_secs(5)).unwrap();
+            let token = AuthToken::new("the-right-token").unwrap();
+            let res = join_shard(&mut conn, &token, DIGEST, Some(1));
+            assert_eq!(res.is_ok(), expect_ok, "{res:?}");
+            res.err()
+        })
+    };
+
+    let no_workers =
+        |_: Option<u32>| Err((RejectCode::ClusterFull, "no worker slots in this test".into()));
+
+    let first = joiner(addr.clone(), true);
+    let mut c1 = accept_one(&listener);
+    match admit(&mut c1, &sp, no_workers, |_| {}, reserve_shard, |_| {}, 0).unwrap() {
+        Admission::AdmittedShard { shard: 1, .. } => {}
+        other => panic!("first join for shard slot 1 must land: {other:?}"),
+    }
+    first.join().unwrap();
+
+    let second = joiner(addr, false);
+    let mut c2 = accept_one(&listener);
+    match admit(&mut c2, &sp, no_workers, |_| {}, reserve_shard, |_| {}, 0).unwrap() {
+        Admission::Rejected(code) => assert_eq!(code, RejectCode::DuplicateWorker),
+        other => panic!("second join for shard slot 1 must be refused: {other:?}"),
+    }
+    let err = second.join().unwrap().unwrap();
+    assert_eq!(err.downcast_ref::<Rejected>().unwrap().code, RejectCode::DuplicateWorker);
+    // the first shard's slot is untouched by the duplicate attempt
+    assert!(connected.borrow().contains(&1));
+    assert_eq!(connected.borrow().len(), 1);
+}
+
 // ---- multi-process end-to-end (gated on artifacts + pjrt) -------------------
 
 fn have_artifacts() -> bool {
@@ -365,7 +567,11 @@ fn wait_with_timeout(child: &mut Child, what: &str, log: &Path, timeout: Duratio
     }
 }
 
-/// Wall-clock CSV columns that legitimately differ between runs.
+/// CSV columns excluded from bitwise parity: wall-clock measurements,
+/// plus the shard-link byte/latency columns — those are deterministic
+/// facts about ONE deployment shape (0 for in-process shards, >0 for a
+/// remote tier), so a remote-vs-in-process compare asserts them
+/// separately instead.
 const NONDETERMINISTIC_COLS: &[&str] = &[
     "overhead_s",
     "compute_s",
@@ -374,6 +580,9 @@ const NONDETERMINISTIC_COLS: &[&str] = &[
     "router_queue_max",
     "sched_ms",
     "journal_fsync_ms",
+    "shard_tx_bytes",
+    "shard_rx_bytes",
+    "shard_rtt_ms_max",
 ];
 
 /// Parse a round-log CSV into (header, rows).
@@ -570,4 +779,250 @@ fn worker_killed_mid_round_is_absorbed_by_quorum_resampling() {
         let loss: f64 = r[col("loss")].parse().unwrap();
         assert!(loss.is_finite(), "round loss stays finite after the kill");
     }
+}
+
+// ---- distributed aggregation tier e2e (gated on artifacts + pjrt) -----------
+
+fn shard_proc_args(extra: &[String], addr: &str, token: &str) -> Vec<String> {
+    let mut args = vec!["shard".to_string()];
+    args.extend(extra.iter().cloned());
+    args.extend([
+        "--connect".into(),
+        addr.to_string(),
+        "--token-file".into(),
+        token.to_string(),
+        "--dial-timeout-s".into(),
+        "120".into(),
+    ]);
+    args
+}
+
+/// Column lookup + per-round assertions that the remote shard links
+/// actually carried the round's aggregation traffic.
+fn assert_shard_links_populated(csv: &str, rounds: usize) {
+    let (header, rows) = parse_csv(csv);
+    let col = |name: &str| {
+        header.iter().position(|h| h == name).unwrap_or_else(|| panic!("missing column {name}"))
+    };
+    assert_eq!(rows.len(), rounds);
+    for r in &rows {
+        assert!(r[col("shard_tx_bytes")].parse::<u64>().unwrap() > 0, "no shard tx: {r:?}");
+        assert!(r[col("shard_rx_bytes")].parse::<u64>().unwrap() > 0, "no shard rx: {r:?}");
+        assert!(r[col("shard_rtt_ms_max")].parse::<f64>().unwrap() > 0.0, "no shard rtt: {r:?}");
+    }
+}
+
+#[test]
+fn serve_with_remote_shard_processes_matches_in_process_sharding_bitwise() {
+    if !have_artifacts() {
+        return;
+    }
+    // the tentpole acceptance case: `serve --expect-shards 2` + 2 spawned
+    // `ecolora shard` processes + 2 `ecolora worker` processes over
+    // loopback TCP == the in-process mem cluster with `--shards 2`, on
+    // every deterministic round metric — the aggregation tier moving out
+    // of process must be invisible to the math
+    let bin = env!("CARGO_BIN_EXE_ecolora");
+    let dir = scratch("shardtier");
+    let token_path = dir.join("token");
+    std::fs::write(&token_path, "e2e-shard-token\n").unwrap();
+    let token = token_path.to_str().unwrap().to_string();
+    let csv_path = dir.join("serve.csv");
+    let addr = format!("127.0.0.1:{}", free_port());
+    let rounds = 3;
+
+    let mut serve_args = vec!["serve".to_string()];
+    serve_args.extend(e2e_flags(rounds));
+    serve_args.extend([
+        "--listen".into(),
+        addr.clone(),
+        "--token-file".into(),
+        token.clone(),
+        "--expect-workers".into(),
+        "2".into(),
+        "--expect-shards".into(),
+        "2".into(),
+        "--shards".into(),
+        "2".into(),
+        "--join-timeout-s".into(),
+        "120".into(),
+        "--csv".into(),
+        csv_path.to_str().unwrap().into(),
+    ]);
+    let serve_log = dir.join("serve.log");
+    let mut serve = spawn_logged(bin, &serve_args, &serve_log);
+
+    let mut shards = Vec::new();
+    for i in 0..2 {
+        let args = shard_proc_args(&e2e_flags(rounds), &addr, &token);
+        shards.push(spawn_logged(bin, &args, &dir.join(format!("shard{i}.log"))));
+    }
+    let mut workers = Vec::new();
+    for i in 0..2 {
+        let mut args = vec!["worker".to_string()];
+        args.extend(e2e_flags(rounds));
+        args.extend([
+            "--connect".into(),
+            addr.clone(),
+            "--token-file".into(),
+            token.clone(),
+            "--dial-timeout-s".into(),
+            "120".into(),
+        ]);
+        workers.push(spawn_logged(bin, &args, &dir.join(format!("worker{i}.log"))));
+    }
+
+    wait_with_timeout(&mut serve, "serve", &serve_log, Duration::from_secs(300));
+    for (i, mut w) in workers.into_iter().enumerate() {
+        wait_with_timeout(
+            &mut w,
+            &format!("worker {i}"),
+            &dir.join(format!("worker{i}.log")),
+            Duration::from_secs(60),
+        );
+    }
+    for (i, mut s) in shards.into_iter().enumerate() {
+        wait_with_timeout(
+            &mut s,
+            &format!("shard {i}"),
+            &dir.join(format!("shard{i}.log")),
+            Duration::from_secs(60),
+        );
+    }
+    let log = std::fs::read_to_string(&serve_log).unwrap_or_default();
+    assert!(log.contains("all 2 shard processes connected"), "serve log:\n{log}");
+
+    // in-process reference: same config, mem transport, same shard count
+    let mem = cluster::run(
+        e2e_cfg(rounds),
+        &ClusterOptions { workers: Some(2), shards: 2, ..Default::default() },
+    )
+    .unwrap();
+    let got = std::fs::read_to_string(&csv_path).unwrap();
+    assert_deterministic_columns_equal(&mem.fed.log.to_csv(), &got, "remote shard tier vs mem");
+    assert_shard_links_populated(&got, rounds);
+}
+
+#[test]
+fn quorum_straggler_parity_between_remote_and_in_process_shard_tiers() {
+    if !have_artifacts() {
+        return;
+    }
+    // Quorum{0.75} with 4 single-client worker processes and one client
+    // whose injected uplink delay exceeds the whole run: every round
+    // closes at 3-of-4 with the same deterministic straggler and no late
+    // fold ever lands, so the deterministic columns must match bitwise
+    // between a remote shard tier and in-process shards under the SAME
+    // quorum machinery. (A delay short enough to land mid-run would make
+    // the fold round timing-dependent — that regime is covered for
+    // robustness, not parity, by the worker-kill test above.)
+    let bin = env!("CARGO_BIN_EXE_ecolora");
+    let dir = scratch("shardquorum");
+    let token_path = dir.join("token");
+    std::fs::write(&token_path, "e2e-shard-quorum-token\n").unwrap();
+    let token = token_path.to_str().unwrap().to_string();
+    let rounds = 3;
+    let mut cfg_flags = e2e_flags(rounds);
+    cfg_flags.extend(["--clients".into(), "4".into(), "--per-round".into(), "4".into()]);
+
+    // reap a worker that may be asleep in the injected delay: reward the
+    // prompt, kill the rest (the coordinator CSV is the assertion)
+    let reap = |mut child: Child| {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            match child.try_wait().unwrap() {
+                Some(_) => return,
+                None if Instant::now() >= deadline => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    return;
+                }
+                None => std::thread::sleep(Duration::from_millis(100)),
+            }
+        }
+    };
+
+    let run_one = |tag: &str, remote: bool| -> String {
+        let csv_path = dir.join(format!("serve-{tag}.csv"));
+        let addr = format!("127.0.0.1:{}", free_port());
+        let mut serve_args = vec!["serve".to_string()];
+        serve_args.extend(cfg_flags.iter().cloned());
+        serve_args.extend([
+            "--listen".into(),
+            addr.clone(),
+            "--token-file".into(),
+            token.clone(),
+            "--expect-workers".into(),
+            "4".into(),
+            "--shards".into(),
+            "2".into(),
+            "--join-timeout-s".into(),
+            "120".into(),
+            "--round-policy".into(),
+            "quorum".into(),
+            "--quorum".into(),
+            "0.75".into(),
+            "--slot-timeout".into(),
+            "120000".into(),
+            "--csv".into(),
+            csv_path.to_str().unwrap().into(),
+        ]);
+        if remote {
+            serve_args.extend(["--expect-shards".into(), "2".into()]);
+        }
+        let serve_log = dir.join(format!("serve-{tag}.log"));
+        let mut serve = spawn_logged(bin, &serve_args, &serve_log);
+
+        let mut shards = Vec::new();
+        if remote {
+            for i in 0..2 {
+                let args = shard_proc_args(&cfg_flags, &addr, &token);
+                shards.push(spawn_logged(bin, &args, &dir.join(format!("shard-{tag}{i}.log"))));
+            }
+        }
+        let mut workers = Vec::new();
+        for i in 0..4 {
+            let mut args = vec!["worker".to_string()];
+            args.extend(cfg_flags.iter().cloned());
+            args.extend([
+                "--connect".into(),
+                addr.clone(),
+                "--token-file".into(),
+                token.clone(),
+                "--dial-timeout-s".into(),
+                "120".into(),
+                "--inject-slow".into(),
+                "0".into(),
+                "--inject-delay-ms".into(),
+                "300000".into(),
+            ]);
+            workers.push(spawn_logged(bin, &args, &dir.join(format!("worker-{tag}{i}.log"))));
+        }
+
+        wait_with_timeout(&mut serve, "serve", &serve_log, Duration::from_secs(300));
+        for w in workers {
+            reap(w);
+        }
+        for (i, mut s) in shards.into_iter().enumerate() {
+            wait_with_timeout(
+                &mut s,
+                &format!("shard {i} ({tag})"),
+                &dir.join(format!("shard-{tag}{i}.log")),
+                Duration::from_secs(60),
+            );
+        }
+        std::fs::read_to_string(&csv_path).unwrap()
+    };
+
+    let inproc = run_one("inproc", false);
+    let remote = run_one("remote", true);
+    assert_deterministic_columns_equal(&inproc, &remote, "quorum: remote vs in-process shards");
+    assert_shard_links_populated(&remote, rounds);
+
+    // the straggler machinery must actually have engaged, identically
+    let (header, rows) = parse_csv(&remote);
+    let col = |name: &str| header.iter().position(|h| h == name).unwrap();
+    let stragglers: usize =
+        rows.iter().map(|r| r[col("stragglers")].parse::<usize>().unwrap()).sum();
+    assert!(stragglers >= 1, "the slow client must strand at least once: {rows:?}");
 }
