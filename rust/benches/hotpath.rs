@@ -18,6 +18,7 @@ use ecolora::cluster::{serve_shard_conn, RoutedAdd, Router};
 use ecolora::compress::{
     golomb, topk, wire, AdaptiveSparsifier, Compressed, Compressor, Encoding, KindIndex, SparsMode,
 };
+use ecolora::fed::robust::Aggregator;
 use ecolora::fed::server::SegmentAggregator;
 use ecolora::model::{segment_ranges, LoraKind};
 use ecolora::util::linalg;
@@ -143,7 +144,8 @@ fn main() {
         let weights = Arc::new(vec![1.0f64; 4]);
 
         let mut router =
-            Router::new(n, 2, weights.clone(), kidx.clone(), 0.7, n).expect("inproc router");
+            Router::new(n, 2, weights.clone(), kidx.clone(), 0.7, n, Aggregator::Mean)
+                .expect("inproc router");
         let mut t = 0u64;
         let r = b.bench_throughput("router/round 2-shard (inproc)", 2 * n, || {
             router.begin_round(t, n_segs).unwrap();
@@ -168,13 +170,14 @@ fn main() {
         let listener = Listener::bind("127.0.0.1:0").expect("bench listener");
         let addr = listener.local_addr().expect("bench listener addr").to_string();
         let mut router =
-            Router::new_remote(n, 2, weights.clone(), kidx.clone(), 0.7, n).expect("remote router");
+            Router::new_remote(n, 2, weights.clone(), kidx.clone(), 0.7, n, Aggregator::Mean)
+                .expect("remote router");
         let mut peers = Vec::new();
         for id in 0..2usize {
             let (a, w, k) = (addr.clone(), weights.clone(), kidx.clone());
             peers.push(std::thread::spawn(move || {
                 let conn = dial(&a, Duration::from_secs(10)).expect("bench shard dial");
-                serve_shard_conn(id, n, &w, &k, conn).expect("bench shard serve");
+                serve_shard_conn(id, n, Aggregator::Mean, &w, &k, conn).expect("bench shard serve");
             }));
             // one dial outstanding at a time, so this accept IS peer `id`
             let conn = loop {

@@ -288,6 +288,15 @@ impl ControlPlane {
                 cfg.method.name()
             );
         }
+        if cfg.aggregator != crate::fed::robust::Aggregator::Mean {
+            ensure!(
+                !cfg.method.restarts_lora(),
+                "--aggregator {} is incompatible with restart-based method {} \
+                 (a robust statistic over restart modules is not the Eq. 2 path)",
+                cfg.aggregator.name(),
+                cfg.method.name()
+            );
+        }
         let synthetic = cfg.preset == "synthetic";
         if synthetic {
             // the session-free scale path has no compiled compute: every
@@ -395,6 +404,12 @@ impl ControlPlane {
     /// (`Method::dense_upload_params`).
     pub fn dense_upload_params(&self) -> usize {
         self.cfg.method.dense_upload_params(&self.seed.schema)
+    }
+
+    /// The robust statistic every shard of this plane runs
+    /// (`FedConfig::aggregator`; router/shard construction input).
+    pub fn aggregator(&self) -> crate::fed::robust::Aggregator {
+        self.cfg.aggregator
     }
 
     /// Compress (or materialize) the downlink payload for `ci` and charge
@@ -822,6 +837,9 @@ impl ControlPlane {
         // ---- aggregation-plane tallies --------------------------------------
         rec.up.merge(&agg.stats.up);
         rec.late_folds = agg.stats.late_folds;
+        rec.aggregator = self.cfg.aggregator.name();
+        rec.clients_trimmed = agg.stats.robust.trimmed;
+        rec.clip_applied = agg.stats.robust.clipped;
         self.filled.extend(agg.folded.iter().copied());
         // forget aggregates old enough that any racer would fold with a
         // numerically-nil discount anyway

@@ -1385,6 +1385,7 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
             control.kind_index(),
             control.fold_beta(),
             control.dense_upload_params(),
+            control.aggregator(),
         )?,
         // remote plane: every slot starts Pending and is armed once its
         // `ecolora shard` process completes the join handshake
@@ -1395,6 +1396,7 @@ pub fn serve(cfg: FedConfig, opts: &ServeOptions) -> Result<ClusterOutcome> {
             control.kind_index(),
             control.fold_beta(),
             control.dense_upload_params(),
+            control.aggregator(),
         )?,
     };
 
@@ -1555,6 +1557,7 @@ pub fn run_remote_worker(cfg: FedConfig, opts: &WorkerOptions) -> Result<()> {
         cfg.run_label()
     );
     let mut participant = Participant::new(cfg).context("worker: building world")?;
+    participant.set_fault(opts.fault);
     let mut requested = opts.requested_id;
     let mut rejoins_left = opts.reconnect;
     loop {
@@ -1650,9 +1653,14 @@ pub fn run_remote_shard(cfg: FedConfig, opts: &ShardOptions) -> Result<()> {
     // guarantees both sides started from identical flags, so the
     // derived plane parameters are identical too — which is what makes
     // remote aggregation bitwise-equal to in-process `--shards N`.
-    let (total, weights, kidx) = {
+    let (total, weights, kidx, aggregator) = {
         let control = ControlPlane::new(cfg, RoundPolicy::Sync)?;
-        (control.lora_total(), control.client_weights(), control.kind_index())
+        (
+            control.lora_total(),
+            control.client_weights(),
+            control.kind_index(),
+            control.aggregator(),
+        )
     };
     let mut conn = transport::dial(&opts.connect, opts.dial_timeout)?;
     let joined = handshake::join_shard(&mut conn, &opts.token, digest, opts.requested_id)?;
@@ -1660,7 +1668,7 @@ pub fn run_remote_shard(cfg: FedConfig, opts: &ShardOptions) -> Result<()> {
         "[shard] joined {} as shard {} of {} (coordinator at round {})",
         opts.connect, joined.shard, joined.n_shards, joined.resume_round
     );
-    super::shard::serve_shard_conn(joined.shard as usize, total, &weights, &kidx, conn)?;
+    super::shard::serve_shard_conn(joined.shard as usize, total, aggregator, &weights, &kidx, conn)?;
     eprintln!("[shard] run complete (coordinator sent Shutdown)");
     Ok(())
 }

@@ -102,16 +102,147 @@ use deploy::WorkerPool;
 use protocol::Message;
 use transport::Conn as _;
 
-/// Deterministic fault injection for straggler / dropout testing: every
-/// task for `client` is delayed by `delay` on the participant AFTER local
-/// training, BEFORE the result is sent — a slow uplink, from the
+/// Deterministic slow-uplink injection for straggler / dropout testing:
+/// every task for `client` is delayed by `delay` on the participant AFTER
+/// local training, BEFORE the result is sent — a slow uplink, from the
 /// coordinator's point of view.
 #[derive(Debug, Clone, Copy)]
-pub struct FaultSpec {
+pub struct SlowSpec {
     /// Logical client whose uplinks are slowed.
     pub client: usize,
     /// Injected delay per task.
     pub delay: Duration,
+}
+
+/// How a malicious client corrupts its update delta before upload.
+///
+/// Applied AFTER local training and BEFORE sparsification/encoding, so
+/// the attack rides the normal wire path: the coordinator cannot tell a
+/// poisoned uplink from an honest one except through the robust
+/// aggregation statistics ([`crate::fed::robust`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Attack {
+    /// Negate every coordinate (gradient-ascent attack).
+    SignFlip,
+    /// Multiply every coordinate by a constant (model-boosting attack).
+    Scale(f32),
+    /// Add i.i.d. Gaussian noise with the given sigma, drawn from a
+    /// dedicated per-(round, client) stream so the attack is fully
+    /// deterministic and independent of scheduling order.
+    Noise(f32),
+}
+
+/// Salt separating the malicious-cohort draw from every honest RNG
+/// stream: honest client sampling, batch streams, and all parity tests
+/// are bitwise-unaffected by attacker injection.
+const MALICIOUS_COHORT_SALT: u64 = 0x4D41_4C49_4349_4F55; // "MALICIOU"
+/// Salt for the per-(round, client) Gaussian noise streams.
+const ATTACK_NOISE_SALT: u64 = 0x4E4F_4953_4541_5454; // "NOISEATT"
+
+impl Attack {
+    /// Parse a `--attack` CLI value: `sign-flip`, `scale:K`, `noise:SIGMA`.
+    pub fn parse(s: &str) -> Result<Attack> {
+        if s == "sign-flip" {
+            return Ok(Attack::SignFlip);
+        }
+        if let Some(k) = s.strip_prefix("scale:") {
+            let k: f32 = k.parse().with_context(|| format!("bad scale factor '{k}'"))?;
+            ensure!(k.is_finite(), "--attack scale factor must be finite");
+            return Ok(Attack::Scale(k));
+        }
+        if let Some(sig) = s.strip_prefix("noise:") {
+            let sig: f32 = sig.parse().with_context(|| format!("bad noise sigma '{sig}'"))?;
+            ensure!(sig.is_finite() && sig >= 0.0, "--attack noise sigma must be finite and >= 0");
+            return Ok(Attack::Noise(sig));
+        }
+        bail!("unknown attack '{s}' (expected sign-flip|scale:K|noise:SIGMA)")
+    }
+
+    /// Stable label for logs.
+    pub fn name(self) -> String {
+        match self {
+            Attack::SignFlip => "sign-flip".to_string(),
+            Attack::Scale(k) => format!("scale:{k}"),
+            Attack::Noise(sig) => format!("noise:{sig}"),
+        }
+    }
+
+    /// Corrupt `update` in place. Deterministic: depends only on the
+    /// attack parameters, the experiment seed, and (round, client).
+    pub fn apply(self, update: &mut [f32], seed: u64, round: u64, client: usize) {
+        match self {
+            Attack::SignFlip => {
+                for v in update.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            Attack::Scale(k) => {
+                for v in update.iter_mut() {
+                    *v *= k;
+                }
+            }
+            Attack::Noise(sig) => {
+                let mut rng = crate::util::rng::Rng::new(
+                    seed ^ ATTACK_NOISE_SALT
+                        ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ (client as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+                );
+                for v in update.iter_mut() {
+                    *v += (rng.normal() as f32) * sig;
+                }
+            }
+        }
+    }
+}
+
+/// Deterministic malicious-client injection: `n` clients, drawn once per
+/// run from a dedicated RNG stream, corrupt every update they upload.
+#[derive(Debug, Clone, Copy)]
+pub struct MaliciousSpec {
+    /// How many clients are malicious (clamped to the population).
+    pub n: usize,
+    /// The corruption they apply.
+    pub attack: Attack,
+}
+
+impl MaliciousSpec {
+    /// Membership mask over the client population. The draw uses its own
+    /// salted stream, so honest-client sampling is bitwise-unchanged
+    /// whether or not attackers are injected.
+    pub fn mask(&self, seed: u64, n_clients: usize) -> Vec<bool> {
+        let mut mask = vec![false; n_clients];
+        let mut rng = crate::util::rng::Rng::new(seed ^ MALICIOUS_COHORT_SALT);
+        for c in rng.sample_indices(n_clients, self.n.min(n_clients)) {
+            mask[c] = true;
+        }
+        mask
+    }
+}
+
+/// Deterministic fault injection for straggler / adversary testing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultSpec {
+    /// Delay one client's uplinks (straggler / dropout testing).
+    pub slow: Option<SlowSpec>,
+    /// Corrupt some clients' updates (Byzantine-robustness testing).
+    pub malicious: Option<MaliciousSpec>,
+}
+
+impl FaultSpec {
+    /// A fault spec that only slows one client (the pre-adversary shape).
+    pub fn slow(client: usize, delay: Duration) -> FaultSpec {
+        FaultSpec { slow: Some(SlowSpec { client, delay }), ..Default::default() }
+    }
+
+    /// A fault spec that only injects malicious clients.
+    pub fn malicious(n: usize, attack: Attack) -> FaultSpec {
+        FaultSpec { malicious: Some(MaliciousSpec { n, attack }), ..Default::default() }
+    }
+
+    /// The injected uplink delay for `client`, if any.
+    pub fn slow_delay(&self, client: usize) -> Option<Duration> {
+        self.slow.and_then(|s| (s.client == client).then_some(s.delay))
+    }
 }
 
 /// Which in-process client plane hosts the simulated participants.
@@ -165,7 +296,8 @@ pub struct ClusterOptions {
     pub netsim: Option<SimProfile>,
     /// When a round may close (sync barrier vs K-of-N quorum).
     pub policy: RoundPolicy,
-    /// Inject a deterministic slow client (tests, demos).
+    /// Inject deterministic faults — a slow client and/or a malicious
+    /// cohort poisoning its uplinks (tests, demos).
     pub fault: Option<FaultSpec>,
 }
 
@@ -289,6 +421,7 @@ pub fn run(cfg: FedConfig, opts: &ClusterOptions) -> Result<ClusterOutcome> {
         control.kind_index(),
         control.fold_beta(),
         control.dense_upload_params(),
+        control.aggregator(),
     )?;
 
     // hand drive_rounds the RESOLVED mux pool size so the CSV reports the

@@ -60,7 +60,7 @@ use crate::util::rng::Rng;
 
 use super::protocol::{DownPayload, Message, TrainResult, TrainTask, UpPayload};
 use super::transport::{Conn, ConnRx, ConnTx};
-use super::FaultSpec;
+use super::{Attack, FaultSpec};
 
 /// Tuning knobs for one mux plane.
 #[derive(Debug, Clone)]
@@ -68,8 +68,9 @@ pub struct MuxOptions {
     /// Compute-pool size (threads actually training). The CLI defaults
     /// this to the host's core count.
     pub workers: usize,
-    /// Deterministic straggler injection (same semantics as the threads
-    /// plane: the named client's uplink sleeps before sending).
+    /// Deterministic fault injection (same semantics as the threads
+    /// plane: a slow client's uplink sleeps before sending; malicious
+    /// clients corrupt their update deltas inside `handle_task`).
     pub fault: Option<FaultSpec>,
 }
 
@@ -182,6 +183,12 @@ struct Plane {
     lanes: Vec<Lane>,
     sched: Scheduler,
     fault: Option<FaultSpec>,
+    /// Malicious-client membership mask (empty without attacker
+    /// injection) and the corruption those clients apply, precomputed
+    /// once from the fault spec's dedicated RNG stream (honest sampling
+    /// is bitwise-unaffected) and shared read-only by every lane.
+    malicious: Vec<bool>,
+    attack: Option<Attack>,
     /// Straggler helper threads (joined before the plane returns).
     helpers: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
@@ -232,6 +239,10 @@ pub fn run_plane(cfg: FedConfig, conns: Vec<Box<dyn Conn>>, opts: MuxOptions) ->
             state: AtomicU8::new(LaneState::Idle as u8),
         })
         .collect();
+    let (malicious, attack) = match opts.fault.and_then(|f| f.malicious) {
+        Some(m) => (m.mask(cfg.seed, cfg.n_clients), Some(m.attack)),
+        None => (Vec::new(), None),
+    };
     let plane = Arc::new(Plane {
         cfg,
         seed,
@@ -244,6 +255,8 @@ pub fn run_plane(cfg: FedConfig, conns: Vec<Box<dyn Conn>>, opts: MuxOptions) ->
             failure: Mutex::new(None),
         },
         fault: opts.fault,
+        malicious,
+        attack,
         helpers: Mutex::new(Vec::new()),
     });
 
@@ -437,9 +450,7 @@ fn run_task(plane: &Arc<Plane>, li: usize, task: TrainTask) {
     plane.lanes[li].advance(LaneState::Uploading);
     match res {
         Ok(res) => {
-            let delay = plane
-                .fault
-                .and_then(|f| (f.client == task.client as usize).then_some(f.delay));
+            let delay = plane.fault.and_then(|f| f.slow_delay(task.client as usize));
             if let Some(delay) = delay {
                 let plane2 = plane.clone();
                 let helper = std::thread::spawn(move || {
@@ -561,6 +572,13 @@ fn handle_task(plane: &Plane, core: &mut LaneCore, task: &TrainTask) -> Result<T
     update.clear();
     update.reserve(lora_total);
     update.extend(local.iter().zip(&base_point).map(|(l, b)| l - b));
+    // malicious clients corrupt the delta HERE — before sparsification and
+    // encoding — mirroring `Participant::handle`
+    if let Some(attack) = plane.attack {
+        if plane.malicious.get(ci).copied().unwrap_or(false) {
+            attack.apply(update, cfg.seed, task.round, ci);
+        }
+    }
     let (up, k) = match (&mut client.comp, cfg.eco) {
         (Some(comp), Some(_eco)) => {
             comp.compress_into(update, task.l0, task.l_prev, &mut core.comp_out);

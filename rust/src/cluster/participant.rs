@@ -31,11 +31,16 @@ use crate::xla::PjRtBuffer;
 use super::control::FILLED_HORIZON;
 use super::protocol::{DownPayload, Message, TrainResult, TrainTask, UpPayload};
 use super::transport::Conn;
-use super::FaultSpec;
+use super::{Attack, FaultSpec};
 
 /// One worker process's state.
 pub struct Participant {
     cfg: FedConfig,
+    /// Malicious-client membership mask (empty without attacker
+    /// injection) and the corruption those clients apply — see
+    /// [`Participant::set_fault`].
+    malicious: Vec<bool>,
+    attack: Option<Attack>,
     /// The worker's deterministic world (own session, corpus, partition).
     pub world: World,
     mask: PjRtBuffer,
@@ -85,6 +90,8 @@ impl Participant {
             cfg,
             world,
             mask,
+            malicious: Vec::new(),
+            attack: None,
             clients: HashMap::new(),
             refs: HashMap::new(),
             applied_seq: HashMap::new(),
@@ -102,6 +109,16 @@ impl Participant {
     /// Replace the frozen base (FLoRA merge sync from the coordinator).
     pub fn sync_base(&mut self, base: Vec<f32>) -> Result<()> {
         self.world.session.set_base(base)
+    }
+
+    /// Arm attacker injection: the malicious cohort is drawn from its
+    /// dedicated salted stream (so honest-client sampling is untouched)
+    /// and every update those clients upload is corrupted in `handle`.
+    pub fn set_fault(&mut self, fault: Option<FaultSpec>) {
+        if let Some(m) = fault.and_then(|f| f.malicious) {
+            self.malicious = m.mask(self.cfg.seed, self.cfg.n_clients);
+            self.attack = Some(m.attack);
+        }
     }
 
     /// Execute one task: reconstruct the downlink, mix/restart, train
@@ -222,6 +239,15 @@ impl Participant {
         update.clear();
         update.reserve(lora_total);
         update.extend(local.iter().zip(&base_point).map(|(l, b)| l - b));
+        // malicious clients corrupt the delta HERE — before sparsification
+        // and encoding — so the poisoned uplink is indistinguishable from
+        // an honest one on the wire, and the exactly-once result cache
+        // below stores the attacked payload
+        if let Some(attack) = self.attack {
+            if self.malicious.get(ci).copied().unwrap_or(false) {
+                attack.apply(update, self.cfg.seed, task.round, ci);
+            }
+        }
         let (up, k) = match (&mut client.comp, self.cfg.eco) {
             (Some(comp), Some(_eco)) => {
                 // compress + encode through the worker's reusable scratch;
@@ -355,11 +381,14 @@ fn clone_result_arena(res: &TrainResult, arena: &mut PayloadArena) -> TrainResul
 /// Fatal errors are reported to the coordinator as `Error` messages before
 /// the thread exits, so the run fails loudly instead of hanging.
 ///
-/// `fault` injects a deterministic straggler: every task for the named
-/// client sleeps for the configured delay AFTER local training and BEFORE
-/// the result is sent (a slow uplink, from the coordinator's point of
-/// view) — the hook behind the dropout/quorum integration tests and the
-/// `--inject-slow` CLI flag. The participant itself never looks at
+/// `fault` injects deterministic misbehaviour: a slow client (every task
+/// for the named client sleeps for the configured delay AFTER local
+/// training and BEFORE the result is sent — a slow uplink, from the
+/// coordinator's point of view) and/or malicious clients (updates
+/// corrupted inside `handle`, see [`Participant::set_fault`]) — the hooks
+/// behind the dropout/quorum/robustness integration tests and the
+/// `--inject-slow` / `--inject-malicious` CLI flags. The participant
+/// itself never looks at
 /// `TrainTask::deadline_ms`: a worker has no clock reference for the
 /// coordinator's dispatch instant, so deadline enforcement (and slot
 /// resampling) is entirely server-side.
@@ -377,6 +406,7 @@ pub fn run_worker(
             return Err(e);
         }
     };
+    participant.set_fault(fault);
     serve_conn(&mut participant, conn.as_mut(), fault, 0)
 }
 
@@ -412,10 +442,10 @@ pub fn serve_conn(
                     Ok(())
                 };
                 resent.and_then(|()| participant.handle(&task)).and_then(|res| {
-                    if let Some(f) = fault {
-                        if f.client == task.client as usize {
-                            std::thread::sleep(f.delay);
-                        }
+                    if let Some(d) =
+                        fault.as_ref().and_then(|f| f.slow_delay(task.client as usize))
+                    {
+                        std::thread::sleep(d);
                     }
                     let msg = Message::TrainResult(res);
                     conn.send(&msg.to_envelope())?;

@@ -33,6 +33,8 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::metrics::CommTotals;
 
+use crate::fed::robust::RobustStats;
+
 use super::shard::{AggStats, Payload, ShardReport};
 
 /// Protocol magic ("EcoLoRA cluster").
@@ -43,9 +45,10 @@ pub const MAGIC: [u8; 2] = [0xEC, 0x57];
 /// kinds were added for authenticated multi-process deployment, and to
 /// 4 when the aggregation plane's `ShardJoin`/`ShardBegin`/`ShardAdd`/
 /// `ShardClose`/`ShardReport` kinds were added for remote `ecolora
-/// shard` processes. Peers speaking different versions reject each
-/// other's envelopes.
-pub const PROTO_VERSION: u8 = 4;
+/// shard` processes, and to 5 when `ShardReport` grew the robust-
+/// aggregation counters (`clients_trimmed`/`clip_applied`). Peers
+/// speaking different versions reject each other's envelopes.
+pub const PROTO_VERSION: u8 = 5;
 /// `Join::requested_worker` wildcard: "assign me any free worker id".
 pub const ANY_WORKER: u32 = u32::MAX;
 /// `ShardJoin::requested_shard` wildcard: "assign me any free shard id".
@@ -700,6 +703,8 @@ fn shard_report_encode(w: &mut Writer, rep: &ShardReport) {
     w.u64(rep.stats.up.bytes);
     w.u32(rep.stats.late_folds as u32);
     w.u32(rep.stats.orphaned as u32);
+    w.u64(rep.stats.robust.trimmed);
+    w.u64(rep.stats.robust.clipped);
     w.u32(rep.folded.len() as u32);
     for &(round, slot) in &rep.folded {
         w.u64(round);
@@ -729,6 +734,7 @@ fn shard_report_decode(r: &mut Reader) -> Result<ShardReport> {
         up: CommTotals { params: r.u64()?, bytes: r.u64()? },
         late_folds: r.u32()? as usize,
         orphaned: r.u32()? as usize,
+        robust: RobustStats { trimmed: r.u64()?, clipped: r.u64()? },
     };
     let n_folded = r.u32()? as usize;
     ensure!(n_folded <= MAX_PAYLOAD / 12, "payload: folded list of {n_folded} over cap");
@@ -1134,6 +1140,10 @@ mod tests {
                     },
                     late_folds: rng.below(10),
                     orphaned: rng.below(10),
+                    robust: RobustStats {
+                        trimmed: rng.below(20) as u64,
+                        clipped: rng.below(20) as u64,
+                    },
                 },
                 folded: (0..rng.below(6))
                     .map(|_| (rng.below(100) as u64, rng.below(16) as u32))
@@ -1252,7 +1262,8 @@ mod tests {
 
     #[test]
     fn shard_messages_roundtrip_exactly() {
-        // the v4 shard-plane messages must survive the codec, with the
+        // the shard-plane messages (v4, report extended in v5) must
+        // survive the codec, with the
         // round/segment ids riding the HEADER (the router picks a
         // result's shard without decoding the body; replay tooling reads
         // rounds the same way)
@@ -1264,6 +1275,7 @@ mod tests {
                 up: CommTotals { params: 4096, bytes: 1024 },
                 late_folds: 2,
                 orphaned: 1,
+                robust: RobustStats { trimmed: 4, clipped: 2 },
             },
             folded: vec![(3, 7), (4, 0)],
             covered: vec![true, false, true],

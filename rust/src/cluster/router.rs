@@ -44,6 +44,7 @@ use std::time::Instant;
 use anyhow::{bail, ensure, Result};
 
 use crate::compress::{KindIndex, PayloadArena};
+use crate::fed::robust::Aggregator;
 
 use super::protocol::{Message, TrainResult};
 use super::shard::{run_shard, AggStats, Payload, ShardMsg, ShardReport};
@@ -273,6 +274,7 @@ pub struct Router {
     total: usize,
     beta: f64,
     dense_params: usize,
+    aggregator: Aggregator,
     weights: Arc<Vec<f64>>,
     kidx: Arc<KindIndex>,
 }
@@ -281,7 +283,8 @@ impl Router {
     /// Spawn `shards` in-process shard worker threads over a
     /// `total`-parameter vector. `weights` are the per-client FedAvg
     /// weights (late-fold input), `beta` the Eq. 3 staleness decay,
-    /// `dense_params` the dense-uplink parameter charge.
+    /// `dense_params` the dense-uplink parameter charge, `aggregator`
+    /// the robust statistic every shard runs.
     pub fn new(
         total: usize,
         shards: usize,
@@ -289,8 +292,10 @@ impl Router {
         kidx: Arc<KindIndex>,
         beta: f64,
         dense_params: usize,
+        aggregator: Aggregator,
     ) -> Result<Router> {
-        let mut router = Router::new_remote(total, shards, weights, kidx, beta, dense_params)?;
+        let mut router =
+            Router::new_remote(total, shards, weights, kidx, beta, dense_params, aggregator)?;
         for id in 0..shards {
             router.links[id] = router.spawn_local_link(id)?;
         }
@@ -309,6 +314,7 @@ impl Router {
         kidx: Arc<KindIndex>,
         beta: f64,
         dense_params: usize,
+        aggregator: Aggregator,
     ) -> Result<Router> {
         ensure!(shards >= 1, "router needs at least one shard");
         let (reports_tx, reports_rx) = mpsc::channel();
@@ -323,6 +329,7 @@ impl Router {
             total,
             beta,
             dense_params,
+            aggregator,
             weights,
             kidx,
         })
@@ -334,9 +341,10 @@ impl Router {
         let (w, k, rep, d) =
             (self.weights.clone(), self.kidx.clone(), self.reports_tx.clone(), self.depth.clone());
         let total = self.total;
+        let kind = self.aggregator;
         let handle = std::thread::Builder::new()
             .name(format!("ecolora-shard-{id}"))
-            .spawn(move || run_shard(id, total, w, k, rx, rep, d))?;
+            .spawn(move || run_shard(id, total, kind, w, k, rx, rep, d))?;
         self.handles.push(handle);
         Ok(ShardLink::Local(tx))
     }
@@ -688,6 +696,7 @@ mod tests {
             Arc::new(KindIndex::new(&kinds)),
             0.7,
             TOTAL,
+            Aggregator::Mean,
         )
         .unwrap()
     }
@@ -793,6 +802,7 @@ mod tests {
             Arc::new(KindIndex::new(&kinds)),
             0.7,
             TOTAL,
+            Aggregator::Mean,
         )
         .unwrap();
         assert_eq!(r.pending_shards(), 2);

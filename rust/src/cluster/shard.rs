@@ -26,7 +26,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use crate::compress::{dense_bytes, wire, KindIndex, PayloadArena, SparsePool, SparseVec};
-use crate::fed::server::SegmentAggregator;
+use crate::fed::robust::{Aggregator, RobustAggregator, RobustStats};
 use crate::fed::staleness;
 use crate::metrics::CommTotals;
 
@@ -88,6 +88,9 @@ pub struct AggStats {
     /// Late entries discarded instead of folded (geometry mismatch,
     /// non-positive weight).
     pub orphaned: usize,
+    /// Robust-aggregation counters (`clients_trimmed` / `clip_applied`
+    /// CSV columns; always zero under `--aggregator mean`).
+    pub robust: RobustStats,
 }
 
 impl AggStats {
@@ -96,6 +99,7 @@ impl AggStats {
         self.up.merge(&other.up);
         self.late_folds += other.late_folds;
         self.orphaned += other.orphaned;
+        self.robust.merge(&other.robust);
     }
 }
 
@@ -191,7 +195,7 @@ impl LateBuffer {
     /// aggregated and reject any future racer for the same slot.
     pub fn fold_into(
         &mut self,
-        agg: &mut SegmentAggregator,
+        agg: &mut RobustAggregator,
         kidx: &KindIndex,
         ctx: FoldCtx<'_>,
         stats: &mut AggStats,
@@ -272,7 +276,11 @@ struct Pending {
 pub struct ShardAggregator {
     id: usize,
     total: usize,
-    agg: SegmentAggregator,
+    /// Robust statistic this plane runs (`FedConfig::aggregator`; every
+    /// shard of a plane uses the same one — config-digest enforced for
+    /// remote shards).
+    kind: Aggregator,
+    agg: RobustAggregator,
     late: LateBuffer,
     pending: Vec<Pending>,
     stats: AggStats,
@@ -323,13 +331,15 @@ pub struct ShardReport {
 }
 
 impl ShardAggregator {
-    /// Fresh shard `id` over a `total`-parameter vector; geometry is set
-    /// per round by [`ShardAggregator::begin`].
-    pub fn new(id: usize, total: usize) -> ShardAggregator {
+    /// Fresh shard `id` over a `total`-parameter vector running the
+    /// `kind` statistic; geometry is set per round by
+    /// [`ShardAggregator::begin`].
+    pub fn new(id: usize, total: usize, kind: Aggregator) -> ShardAggregator {
         ShardAggregator {
             id,
             total,
-            agg: SegmentAggregator::for_segments(total, 1, 0, 0),
+            kind,
+            agg: RobustAggregator::for_segments(kind, total, 1, 0, 0),
             late: LateBuffer::new(),
             pending: Vec::new(),
             stats: AggStats::default(),
@@ -344,7 +354,7 @@ impl ShardAggregator {
     /// `n_s`-segment space and reset the per-round state. The late buffer
     /// persists across rounds — it holds OTHER rounds' stragglers.
     pub fn begin(&mut self, n_s: usize, seg_lo: usize, seg_hi: usize) {
-        self.agg = SegmentAggregator::for_segments(self.total, n_s, seg_lo, seg_hi);
+        self.agg = RobustAggregator::for_segments(self.kind, self.total, n_s, seg_lo, seg_hi);
         self.pending.clear();
         self.stats = AggStats::default();
         self.agg_s = 0.0;
@@ -423,10 +433,12 @@ impl ShardAggregator {
             }
         }
         let folded = self.late.fold_into(&mut self.agg, kidx, ctx, &mut self.stats);
-        let agg = std::mem::replace(&mut self.agg, SegmentAggregator::for_segments(0, 1, 0, 0));
+        let agg =
+            std::mem::replace(&mut self.agg, RobustAggregator::for_segments(self.kind, 0, 1, 0, 0));
         let base = agg.base();
         let covered = agg.covered();
-        let delta = agg.finish();
+        let (delta, robust) = agg.finish();
+        self.stats.robust.merge(&robust);
         self.agg_s += t0.elapsed().as_secs_f64();
         let digest = journal::digest_f32(&delta);
         ShardReport {
@@ -490,13 +502,14 @@ pub enum ShardMsg {
 pub fn run_shard(
     id: usize,
     total: usize,
+    kind: Aggregator,
     weights: Arc<Vec<f64>>,
     kidx: Arc<KindIndex>,
     rx: mpsc::Receiver<ShardMsg>,
     reports: mpsc::Sender<ShardReport>,
     depth: Arc<AtomicIsize>,
 ) {
-    let mut shard = ShardAggregator::new(id, total);
+    let mut shard = ShardAggregator::new(id, total, kind);
     while let Ok(msg) = rx.recv() {
         match msg {
             ShardMsg::Begin { n_s, seg_lo, seg_hi, .. } => shard.begin(n_s, seg_lo, seg_hi),
@@ -537,12 +550,13 @@ pub fn run_shard(
 pub fn serve_shard_conn(
     id: usize,
     total: usize,
+    kind: Aggregator,
     weights: &[f64],
     kidx: &KindIndex,
     conn: TcpConn,
 ) -> Result<()> {
     let (mut tx, mut rx) = conn.split_tcp()?;
-    let mut shard = ShardAggregator::new(id, total);
+    let mut shard = ShardAggregator::new(id, total, kind);
     let mut arena = PayloadArena::new(4);
     let mut frame = Vec::new();
     loop {
@@ -622,7 +636,7 @@ mod tests {
         let mut buf = LateBuffer::new();
         assert!(buf.push(dense_result(2, 0, 0, 8)));
         assert_eq!(buf.buffered_bytes(), 32);
-        let mut agg = SegmentAggregator::new(8, 1);
+        let mut agg = RobustAggregator::new(Aggregator::Mean, 8, 1);
         let mut stats = AggStats::default();
         let ctx = FoldCtx { weights: &[1.0], beta: 0.7, now_round: 3, dense_params: 8 };
         let folded = buf.fold_into(&mut agg, &kidx(8), ctx, &mut stats);
@@ -636,7 +650,7 @@ mod tests {
     fn shard_decodes_eagerly_but_accumulates_in_slot_order() {
         let n = 32;
         let kidx = kidx(n);
-        let mut shard = ShardAggregator::new(0, n);
+        let mut shard = ShardAggregator::new(0, n, Aggregator::Mean);
         shard.begin(1, 0, 1);
         // arrival order 1, 0 — close must fold 0 first (slot order)
         shard.add(1, 0, 1.0, Payload::Dense(vec![3.0; n]), &kidx);
@@ -656,7 +670,7 @@ mod tests {
     fn shard_reports_decode_errors_at_close() {
         let n = 32;
         let kidx = kidx(n);
-        let mut shard = ShardAggregator::new(2, n);
+        let mut shard = ShardAggregator::new(2, n, Aggregator::Mean);
         shard.begin(2, 1, 2);
         shard.add(0, 0, 1.0, Payload::Wire(vec![0xFF; 10]), &kidx); // foreign segment
         let ctx = FoldCtx { weights: &[1.0], beta: 0.7, now_round: 0, dense_params: 0 };

@@ -17,11 +17,13 @@ use anyhow::{anyhow, Result};
 
 use crate::baselines::Method;
 use crate::cluster::{
-    self, AuthToken, ClusterMode, ClusterOptions, FaultSpec, JournalOptions, RoundPolicy,
-    ServeOptions, ShardOptions, SimProfile, SyncPolicy, WorkerOptions,
+    self, Attack, AuthToken, ClusterMode, ClusterOptions, FaultSpec, JournalOptions,
+    MaliciousSpec, RoundPolicy, ServeOptions, ShardOptions, SimProfile, SlowSpec, SyncPolicy,
+    WorkerOptions,
 };
 use crate::compress::{AdaptiveSparsifier, Encoding, SparsMode};
 use crate::data::PartitionKind;
+use crate::fed::robust::Aggregator;
 use crate::fed::{EcoConfig, FedConfig, FedOutcome, FedRunner};
 use crate::netsim::{NetSim, RoundPlan, Scenario};
 use crate::util::cli::Args;
@@ -42,6 +44,8 @@ USAGE: ecolora <subcommand> [flags]
              [--sim-slow-frac X --sim-slow-factor X]
              [--round-policy sync|quorum] [--quorum Q] [--slot-timeout MS]
              [--inject-slow CLIENT] [--inject-delay-ms MS]
+             [--inject-malicious N] [--attack sign-flip|scale:K|noise:S]
+             [--aggregator mean|median|trimmed-mean[:B]|norm-clip[:C]]
              [--rounds N] [--clients N] [--per-round N] [--local-steps N]
              [--lr X] [--seed N] [--ns N] [--k-min-a X] [--k-min-b X]
              [--fixed-k X] [--no-spars] [--no-encoding] [--dense-downlink]
@@ -54,7 +58,8 @@ USAGE: ecolora <subcommand> [flags]
              [same run flags as train, minus --cluster/--workers]
   worker     --connect <addr:port> --token-file <path> [--worker-id N]
              [--reconnect N] [--dial-timeout-s S] [--inject-slow CLIENT]
-             [--inject-delay-ms MS] [same run flags as the serve side]
+             [--inject-delay-ms MS] [--inject-malicious N] [--attack SPEC]
+             [same run flags as the serve side]
   shard      --connect <addr:port> --token-file <path> [--shard-id N]
              [--dial-timeout-s S] [same run flags as the serve side]
   repro      --table 1|2|3|4|5|6  or  --fig 2|3   [--preset p] [--scaled]
@@ -91,6 +96,18 @@ into the next round with the Eq. 3 staleness discount, and slots
 outliving --slot-timeout (ms, default 30000) are re-dispatched to a
 deterministic replacement client. --inject-slow/--inject-delay-ms delay
 one client's uplinks to exercise the policy.
+
+--aggregator picks the server-side robust aggregation statistic: mean
+(default; the paper's Eq. 2 path, bitwise-unchanged), coordinate-wise
+trimmed-mean:BETA (trim fraction, default 0.2), the unweighted
+coordinate-wise median, or norm-clip:C (per-contribution L2 clipping,
+default 1.0). --inject-malicious N makes N deterministically-drawn
+clients corrupt every update they upload with --attack sign-flip
+(default), scale:K, or noise:SIGMA — the adversary the robust
+aggregators are measured against (clients_trimmed / clip_applied CSV
+columns). The malicious cohort rides its own RNG stream, so honest
+sampling is unchanged. Restart-based methods (flora) require
+--aggregator mean.
 
 serve/worker run the SAME protocol as separate processes on real links:
 serve binds a coordinator listener and admits --expect-workers `worker`
@@ -182,6 +199,9 @@ pub fn fed_config_from_args(args: &Args) -> Result<crate::fed::FedConfig> {
     if args.has("eco") {
         cfg.eco = Some(eco_config_from_args(args)?);
     }
+    if let Some(spec) = args.get("aggregator") {
+        cfg.aggregator = Aggregator::parse(spec)?;
+    }
     Ok(cfg)
 }
 
@@ -237,6 +257,9 @@ fn synthetic_config_from_args(args: &Args) -> Result<crate::fed::FedConfig> {
     if args.has("eco") {
         cfg.eco = Some(eco_config_from_args(args)?);
     }
+    if let Some(spec) = args.get("aggregator") {
+        cfg.aggregator = Aggregator::parse(spec)?;
+    }
     Ok(cfg)
 }
 
@@ -290,6 +313,8 @@ fn cmd_train(args: &Args) -> Result<()> {
                 "slot-timeout",
                 "inject-slow",
                 "inject-delay-ms",
+                "inject-malicious",
+                "attack",
             ] {
                 if args.get(flag).is_some() {
                     return Err(anyhow!("--{flag} needs a cluster deployment (--cluster mem|tcp)"));
@@ -442,6 +467,9 @@ fn deploy_config_from_args(args: &Args) -> Result<FedConfig> {
                     ..EcoConfig::default()
                 });
             }
+            if let Some(spec) = args.get("aggregator") {
+                cfg.aggregator = Aggregator::parse(spec)?;
+            }
             Ok(cfg)
         }
     }
@@ -475,20 +503,42 @@ fn sim_profile_from_args(args: &Args) -> Option<SimProfile> {
     })
 }
 
-/// Deterministic straggler injection flags (worker-side).
+/// Deterministic fault-injection flags (worker-side): a slow client
+/// (`--inject-slow`/`--inject-delay-ms`) and/or malicious clients
+/// (`--inject-malicious`/`--attack`).
 fn fault_from_args(args: &Args) -> Result<Option<FaultSpec>> {
     if args.get("inject-delay-ms").is_some() && args.get("inject-slow").is_none() {
         return Err(anyhow!("--inject-delay-ms requires --inject-slow <client>"));
     }
-    Ok(args.get("inject-slow").map(|v| {
-        let client: usize = v
-            .parse()
-            .unwrap_or_else(|_| panic!("--inject-slow expects a client id, got {v:?}"));
-        FaultSpec {
-            client,
-            delay: Duration::from_millis(args.get_u64("inject-delay-ms", 1_000)),
-        }
-    }))
+    if args.get("attack").is_some() && args.get("inject-malicious").is_none() {
+        return Err(anyhow!("--attack requires --inject-malicious <n>"));
+    }
+    let slow = args
+        .get("inject-slow")
+        .map(|v| -> Result<SlowSpec> {
+            let client: usize = v
+                .parse()
+                .map_err(|_| anyhow!("--inject-slow expects a client id, got {v:?}"))?;
+            Ok(SlowSpec {
+                client,
+                delay: Duration::from_millis(args.get_u64("inject-delay-ms", 1_000)),
+            })
+        })
+        .transpose()?;
+    let malicious = args
+        .get("inject-malicious")
+        .map(|v| -> Result<MaliciousSpec> {
+            let n: usize = v
+                .parse()
+                .map_err(|_| anyhow!("--inject-malicious expects a client count, got {v:?}"))?;
+            if n == 0 {
+                return Err(anyhow!("--inject-malicious expects a positive client count"));
+            }
+            let attack = Attack::parse(args.get_or("attack", "sign-flip"))?;
+            Ok(MaliciousSpec { n, attack })
+        })
+        .transpose()?;
+    Ok((slow.is_some() || malicious.is_some()).then_some(FaultSpec { slow, malicious }))
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -506,8 +556,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("serve requires --expect-workers <n> (worker slots to admit)"))?
         .parse::<usize>()
         .map_err(|_| anyhow!("--expect-workers expects a positive integer"))?;
-    // the straggler injection hook lives in the worker process
-    for flag in ["inject-slow", "inject-delay-ms"] {
+    // the fault injection hooks live in the worker processes
+    for flag in ["inject-slow", "inject-delay-ms", "inject-malicious", "attack"] {
         if args.get(flag).is_some() {
             return Err(anyhow!("--{flag} belongs to the `worker` subcommand"));
         }
@@ -607,8 +657,8 @@ fn cmd_shard(args: &Args) -> Result<()> {
              a remote shard derives its plane geometry from a compiled model"
         ));
     }
-    // the straggler injection hook lives in the worker process
-    for flag in ["inject-slow", "inject-delay-ms"] {
+    // the fault injection hooks live in the worker processes
+    for flag in ["inject-slow", "inject-delay-ms", "inject-malicious", "attack"] {
         if args.get(flag).is_some() {
             return Err(anyhow!("--{flag} belongs to the `worker` subcommand"));
         }

@@ -15,6 +15,7 @@
 //! bitwise.
 
 pub mod downlink;
+pub mod robust;
 pub mod round_robin;
 pub mod sampling;
 pub mod server;
@@ -94,6 +95,10 @@ pub struct FedConfig {
     pub dpo_beta: f32,
     /// Client sampling strategy (paper: uniform).
     pub sampling: sampling::Sampling,
+    /// Robust aggregation statistic (default: the Eq. 2 mean). Non-mean
+    /// aggregators run only on the cluster plane; the monolithic
+    /// [`FedRunner`] rejects them (see [`FedRunner::new`]).
+    pub aggregator: robust::Aggregator,
     /// Pretrained base checkpoint (created by `ecolora pretrain`).
     pub base_checkpoint: Option<PathBuf>,
     pub verbose: bool,
@@ -122,6 +127,7 @@ impl FedConfig {
             dpo: false,
             dpo_beta: 0.5,
             sampling: sampling::Sampling::Uniform,
+            aggregator: robust::Aggregator::Mean,
             base_checkpoint: None,
             verbose: false,
         }
@@ -254,6 +260,9 @@ impl FedConfig {
             sampling::Sampling::WeightedBySamples => 1,
             sampling::Sampling::RoundRobinCohorts => 2,
         });
+        let (agg_tag, agg_bits) = self.aggregator.digest_parts();
+        h.u8(agg_tag);
+        h.u64(agg_bits);
         h.finish()
     }
 }
@@ -332,6 +341,11 @@ pub struct FedRunner {
 
 impl FedRunner {
     pub fn new(cfg: FedConfig) -> Result<FedRunner> {
+        anyhow::ensure!(
+            cfg.aggregator == robust::Aggregator::Mean,
+            "the monolithic runner only supports --aggregator mean; \
+             robust aggregation runs on the cluster plane (cluster::run / ecolora serve)"
+        );
         let mut world = World::build(&cfg)?;
         let clients: Vec<ClientState> =
             (0..cfg.n_clients).map(|i| world.client_state(&cfg, i)).collect();
@@ -582,6 +596,7 @@ impl FedRunner {
         rec.overhead_s = overhead;
         rec.cohort = n_t;
         rec.shards = 1; // the monolithic path is a one-shard plane
+        rec.aggregator = self.cfg.aggregator.name(); // always "mean" here (see new())
         rec.population = self.cfg.n_clients;
         rec.active_cohort = n_t; // no resampling plane: cohort == dispatched set
         rec.compute_s = (self.session.exec_seconds.get() - exec_before) / n_t.max(1) as f64;
@@ -651,6 +666,12 @@ mod tests {
         let mut c = base.clone();
         c.target_acc = Some(0.9);
         variants.push(("target_acc", c));
+        let mut c = base.clone();
+        c.aggregator = robust::Aggregator::TrimmedMean { beta: 0.2 };
+        variants.push(("aggregator kind", c));
+        let mut c = base.clone();
+        c.aggregator = robust::Aggregator::TrimmedMean { beta: 0.25 };
+        variants.push(("aggregator param", c));
 
         for (what, v) in variants {
             assert_ne!(v.digest(), d, "digest must change when {what} changes");

@@ -1,0 +1,672 @@
+//! Byzantine-robust aggregation (ROADMAP "Adversarial & private
+//! scenarios"). [`RobustAggregator`] wraps [`SegmentAggregator`] with a
+//! pluggable per-round statistic selected by [`Aggregator`]:
+//!
+//! - `mean` — today's Eq. 2 sample-weighted average. Every call
+//!   delegates straight to the inner [`SegmentAggregator`], so the
+//!   floating-point op sequence (and therefore the bits) is identical
+//!   to the pre-robust path.
+//! - `norm-clip {c}` — each contribution's explicit values are L2-norm
+//!   clipped to `c` before entering the mean. A contribution whose norm
+//!   is ≤ `c` (always, when `c = inf`) is delegated UNTOUCHED, which is
+//!   what keeps `norm-clip:inf` bitwise-identical to `mean`.
+//! - `trimmed-mean {beta}` — coordinate-wise: of the `m` contributions
+//!   covering a segment, drop the `t = min(floor(beta·m), (m-1)/2)`
+//!   lowest and highest values at every coordinate and take the
+//!   sample-weighted mean of the rest. When `t = 0` the held
+//!   contributions are replayed through the inner aggregator in arrival
+//!   order, reproducing the mean bit-for-bit.
+//! - `median` — coordinate-wise unweighted median. Weights are client
+//!   sample counts, which a Byzantine client can inflate at will, so a
+//!   robust order statistic must not honor them.
+//!
+//! ## Sparse-coordinate semantics: absent = 0
+//!
+//! Top-k uplinks omit coordinates the client deemed ≈ 0, and Eq. 2
+//! already averages those implicit zeros (standard sparse-FedAvg
+//! semantics, see [`SegmentAggregator::add_sparse`]). The robust
+//! statistics keep that convention: a coordinate absent from a
+//! contribution VOTES ZERO rather than abstaining. Abstention would (a)
+//! break `trimmed-mean{beta=0} ≡ mean`, and (b) let a single attacker
+//! own any coordinate no honest top-k selected. The cost is that
+//! top-k sparsification drags the trimmed statistics toward zero — the
+//! compression×robustness interaction this plane exists to measure.
+//!
+//! ## Determinism
+//!
+//! Trimmed-mean and median are order statistics: per coordinate the
+//! `(value, weight)` pairs are sorted by `f32::total_cmp` (then weight,
+//! so equal values tie-break identically), making the result invariant
+//! to slot arrival order — pinned by the permutation propcheck below.
+//! The retained-contribution modes copy each decoded contribution onto
+//! the heap, deliberately opting out of the zero-allocation discipline
+//! of the mean hot path (documented in ARCHITECTURE.md).
+
+use std::ops::Range;
+
+use crate::compress::{wire, KindIndex, SparseVec};
+use crate::fed::server::SegmentAggregator;
+
+/// Robust-statistic selector, part of the run-defining config (covered
+/// by `FedConfig::digest`, so a resumed journal or a joining
+/// worker/shard with a different `--aggregator` is rejected at
+/// handshake).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Aggregator {
+    /// Eq. 2 sample-weighted mean — the existing path, bitwise-preserved.
+    Mean,
+    /// Coordinate-wise trimmed mean dropping a `beta` fraction of the
+    /// contributions at each extreme. `0 ≤ beta < 0.5`.
+    TrimmedMean { beta: f64 },
+    /// Coordinate-wise unweighted median.
+    Median,
+    /// Per-contribution L2 norm clip to `c` (`c = inf` disables, `c > 0`).
+    NormClip { c: f64 },
+}
+
+impl Aggregator {
+    pub const DEFAULT_TRIM_BETA: f64 = 0.2;
+    pub const DEFAULT_CLIP_C: f64 = 1.0;
+
+    /// Parse a CLI spec: `mean`, `median`, `trimmed-mean[:BETA]`,
+    /// `norm-clip[:C]` (`C` accepts `inf`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let (head, param) = match s.split_once(':') {
+            Some((h, p)) => (h, Some(p)),
+            None => (s, None),
+        };
+        let agg = match head {
+            "mean" => {
+                anyhow::ensure!(param.is_none(), "mean takes no parameter");
+                Aggregator::Mean
+            }
+            "median" => {
+                anyhow::ensure!(param.is_none(), "median takes no parameter");
+                Aggregator::Median
+            }
+            "trimmed-mean" => {
+                let beta = match param {
+                    Some(p) => p.parse::<f64>().map_err(|e| anyhow::anyhow!("bad beta {p:?}: {e}"))?,
+                    None => Self::DEFAULT_TRIM_BETA,
+                };
+                anyhow::ensure!((0.0..0.5).contains(&beta), "trim beta must be in [0, 0.5), got {beta}");
+                Aggregator::TrimmedMean { beta }
+            }
+            "norm-clip" => {
+                let c = match param {
+                    Some("inf") => f64::INFINITY,
+                    Some(p) => p.parse::<f64>().map_err(|e| anyhow::anyhow!("bad clip {p:?}: {e}"))?,
+                    None => Self::DEFAULT_CLIP_C,
+                };
+                anyhow::ensure!(c > 0.0, "clip threshold must be > 0, got {c}");
+                Aggregator::NormClip { c }
+            }
+            other => anyhow::bail!("unknown aggregator {other:?} (mean|trimmed-mean[:beta]|median|norm-clip[:c])"),
+        };
+        Ok(agg)
+    }
+
+    /// Stable label for CSV/logs (round-trips through [`Aggregator::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            Aggregator::Mean => "mean".into(),
+            Aggregator::TrimmedMean { beta } => format!("trimmed-mean:{beta}"),
+            Aggregator::Median => "median".into(),
+            Aggregator::NormClip { c } => {
+                if c.is_infinite() {
+                    "norm-clip:inf".into()
+                } else {
+                    format!("norm-clip:{c}")
+                }
+            }
+        }
+    }
+
+    /// `(tag, param_bits)` for config digesting.
+    pub fn digest_parts(&self) -> (u8, u64) {
+        match self {
+            Aggregator::Mean => (0, 0),
+            Aggregator::TrimmedMean { beta } => (1, beta.to_bits()),
+            Aggregator::Median => (2, 0),
+            Aggregator::NormClip { c } => (3, c.to_bits()),
+        }
+    }
+}
+
+impl Default for Aggregator {
+    fn default() -> Self {
+        Aggregator::Mean
+    }
+}
+
+/// Per-round robustness counters surfaced in the CSV
+/// (`clients_trimmed`, `clip_applied` columns) and summed across shards
+/// through `ShardReport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RobustStats {
+    /// Contributions dropped by trimming, summed over segments (2·t per
+    /// segment with a non-zero trim budget).
+    pub trimmed: u64,
+    /// Contributions whose values were rescaled by the norm clip.
+    pub clipped: u64,
+}
+
+impl RobustStats {
+    pub fn merge(&mut self, o: &RobustStats) {
+        self.trimmed += o.trimmed;
+        self.clipped += o.clipped;
+    }
+}
+
+/// One retained contribution (trimmed-mean/median only; mean and
+/// norm-clip stream straight into the inner accumulator).
+struct Held {
+    seg: usize,
+    w: f64,
+    vals: HeldVals,
+}
+
+enum HeldVals {
+    /// Sorted global sparse indices + values (the wire decoder emits
+    /// ascending indices; [`RobustAggregator::add_sparse`] asserts it).
+    Sparse { idx: Vec<u32>, vals: Vec<f32> },
+    /// Dense values spanning the segment range (baseline uploads).
+    Dense(Vec<f32>),
+}
+
+/// [`SegmentAggregator`] wrapper applying the configured robust
+/// statistic. Mirrors the inner API (`add_sparse` / `add_dense` /
+/// `add_wire` / `owns` / `range` / `finish` / `covered`) so
+/// `cluster/shard.rs` swaps it in unchanged; `finish` additionally
+/// returns the round's [`RobustStats`].
+pub struct RobustAggregator {
+    inner: SegmentAggregator,
+    kind: Aggregator,
+    held: Vec<Held>,
+    /// Per owned segment: retained-contribution count (coverage for the
+    /// retained modes, where the inner accumulator stays empty).
+    held_per_seg: Vec<u32>,
+    clipped: u64,
+    /// Scratch for norm-clip rescaling.
+    clip_scratch: Vec<f32>,
+}
+
+impl RobustAggregator {
+    pub fn new(kind: Aggregator, total: usize, n_s: usize) -> Self {
+        Self::for_segments(kind, total, n_s, 0, n_s)
+    }
+
+    pub fn for_segments(kind: Aggregator, total: usize, n_s: usize, seg_lo: usize, seg_hi: usize) -> Self {
+        RobustAggregator {
+            inner: SegmentAggregator::for_segments(total, n_s, seg_lo, seg_hi),
+            kind,
+            held: Vec::new(),
+            held_per_seg: vec![0; seg_hi - seg_lo],
+            clipped: 0,
+            clip_scratch: Vec::new(),
+        }
+    }
+
+    pub fn kind(&self) -> Aggregator {
+        self.kind
+    }
+
+    fn retains(&self) -> bool {
+        matches!(self.kind, Aggregator::TrimmedMean { .. } | Aggregator::Median)
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.inner.n_segments()
+    }
+
+    pub fn seg0(&self) -> usize {
+        self.inner.seg0()
+    }
+
+    pub fn base(&self) -> usize {
+        self.inner.base()
+    }
+
+    pub fn owns(&self, seg: usize) -> bool {
+        self.inner.owns(seg)
+    }
+
+    pub fn range(&self, seg: usize) -> &Range<usize> {
+        self.inner.range(seg)
+    }
+
+    pub fn add_sparse(&mut self, seg: usize, sv: &SparseVec, n_i: f64) {
+        match self.kind {
+            Aggregator::Mean => self.inner.add_sparse(seg, sv, n_i),
+            Aggregator::NormClip { c } => {
+                let norm = l2_norm(&sv.vals);
+                if norm > c {
+                    let scale = c / norm;
+                    self.clip_scratch.clear();
+                    self.clip_scratch.extend(sv.vals.iter().map(|&v| (v as f64 * scale) as f32));
+                    let clipped = SparseVec { idx: sv.idx.clone(), vals: std::mem::take(&mut self.clip_scratch) };
+                    self.inner.add_sparse(seg, &clipped, n_i);
+                    self.clip_scratch = clipped.vals;
+                    self.clipped += 1;
+                } else {
+                    self.inner.add_sparse(seg, sv, n_i);
+                }
+            }
+            Aggregator::TrimmedMean { .. } | Aggregator::Median => {
+                let r = self.inner.range(seg);
+                let (start, end) = (r.start, r.end);
+                let mut prev = None;
+                for &i in &sv.idx {
+                    let i = i as usize;
+                    assert!(i >= start && i < end, "index {i} outside segment {seg}");
+                    assert!(prev.map_or(true, |p| p < i), "sparse indices must ascend");
+                    prev = Some(i);
+                }
+                self.held_per_seg[seg - self.inner.seg0()] += 1;
+                self.held.push(Held {
+                    seg,
+                    w: n_i,
+                    vals: HeldVals::Sparse { idx: sv.idx.clone(), vals: sv.vals.clone() },
+                });
+            }
+        }
+    }
+
+    pub fn add_dense(&mut self, seg: usize, values: &[f32], n_i: f64) {
+        match self.kind {
+            Aggregator::Mean => self.inner.add_dense(seg, values, n_i),
+            Aggregator::NormClip { c } => {
+                let norm = l2_norm(values);
+                if norm > c {
+                    let scale = c / norm;
+                    self.clip_scratch.clear();
+                    self.clip_scratch.extend(values.iter().map(|&v| (v as f64 * scale) as f32));
+                    let scratch = std::mem::take(&mut self.clip_scratch);
+                    self.inner.add_dense(seg, &scratch, n_i);
+                    self.clip_scratch = scratch;
+                    self.clipped += 1;
+                } else {
+                    self.inner.add_dense(seg, values, n_i);
+                }
+            }
+            Aggregator::TrimmedMean { .. } | Aggregator::Median => {
+                assert_eq!(values.len(), self.inner.range(seg).len());
+                self.held_per_seg[seg - self.inner.seg0()] += 1;
+                self.held.push(Held { seg, w: n_i, vals: HeldVals::Dense(values.to_vec()) });
+            }
+        }
+    }
+
+    /// Decode one uplink wire message and fold it in — the robust twin
+    /// of [`SegmentAggregator::add_wire`]. Returns the transmitted
+    /// parameter count.
+    pub fn add_wire(&mut self, seg: usize, bytes: &[u8], kidx: &KindIndex, n_i: f64) -> anyhow::Result<usize> {
+        anyhow::ensure!(self.inner.owns(seg), "segment {seg} not owned by this aggregator");
+        if let Aggregator::Mean = self.kind {
+            return self.inner.add_wire(seg, bytes, kidx, n_i);
+        }
+        let range = self.inner.range(seg).clone();
+        let decoded = wire::decode(bytes, &range, kidx)?;
+        let params = decoded.len();
+        self.add_sparse(seg, &decoded, n_i);
+        Ok(params)
+    }
+
+    pub fn covered(&self) -> Vec<bool> {
+        if self.retains() {
+            self.held_per_seg.iter().map(|&n| n > 0).collect()
+        } else {
+            self.inner.covered()
+        }
+    }
+
+    /// Weighted/robust delta over the owned span plus the round's
+    /// robustness counters. Mean and norm-clip delegate to the inner
+    /// accumulator; trimmed-mean/median compute order statistics per
+    /// coordinate, except that a segment with a zero trim budget
+    /// replays its held contributions through the inner accumulator so
+    /// `trimmed-mean{beta=0}` stays bitwise-identical to `mean`.
+    pub fn finish(self) -> (Vec<f32>, RobustStats) {
+        let mut stats = RobustStats { trimmed: 0, clipped: self.clipped };
+        if !self.retains() {
+            return (self.inner.finish(), stats);
+        }
+
+        let (seg0, base) = (self.inner.seg0(), self.inner.base());
+        let n_owned = self.inner.n_segments();
+        // Group held contributions by segment, preserving arrival order.
+        let mut by_seg: Vec<Vec<usize>> = vec![Vec::new(); n_owned];
+        for (h, held) in self.held.iter().enumerate() {
+            by_seg[held.seg - seg0].push(h);
+        }
+
+        let mut inner = self.inner;
+        // (flat global index, robust value) computed manually, patched
+        // over the replay output below.
+        let mut patches: Vec<(usize, f32)> = Vec::new();
+        let mut col: Vec<(f32, f64)> = Vec::new();
+
+        for (s, members) in by_seg.iter().enumerate() {
+            let m = members.len();
+            if m == 0 {
+                continue;
+            }
+            let seg = seg0 + s;
+            let t = match self.kind {
+                Aggregator::TrimmedMean { beta } => {
+                    ((beta * m as f64).floor() as usize).min((m - 1) / 2)
+                }
+                Aggregator::Median => 0,
+                _ => unreachable!(),
+            };
+            let replay = matches!(self.kind, Aggregator::TrimmedMean { .. }) && t == 0;
+            if replay {
+                for &h in members {
+                    let held = &self.held[h];
+                    match &held.vals {
+                        HeldVals::Sparse { idx, vals } => {
+                            let sv = SparseVec { idx: idx.clone(), vals: vals.clone() };
+                            inner.add_sparse(seg, &sv, held.w);
+                        }
+                        HeldVals::Dense(v) => inner.add_dense(seg, v, held.w),
+                    }
+                }
+                continue;
+            }
+            if t > 0 {
+                stats.trimmed += 2 * t as u64;
+            }
+            let r = inner.range(seg).clone();
+            let mut cursors = vec![0usize; m];
+            for i in r.clone() {
+                col.clear();
+                for (k, &h) in members.iter().enumerate() {
+                    let held = &self.held[h];
+                    let v = match &held.vals {
+                        HeldVals::Dense(d) => d[i - r.start],
+                        HeldVals::Sparse { idx, vals } => {
+                            let cur = &mut cursors[k];
+                            while *cur < idx.len() && (idx[*cur] as usize) < i {
+                                *cur += 1;
+                            }
+                            if *cur < idx.len() && idx[*cur] as usize == i {
+                                vals[*cur]
+                            } else {
+                                0.0
+                            }
+                        }
+                    };
+                    col.push((v, held.w));
+                }
+                // total_cmp then weight: deterministic regardless of
+                // arrival order even with tied values.
+                col.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.total_cmp(&b.1)));
+                let out = match self.kind {
+                    Aggregator::TrimmedMean { .. } => {
+                        let kept = &col[t..m - t];
+                        let (mut num, mut den) = (0.0f64, 0.0f64);
+                        for &(v, w) in kept {
+                            num += w * v as f64;
+                            den += w;
+                        }
+                        if den > 0.0 { (num / den) as f32 } else { 0.0 }
+                    }
+                    Aggregator::Median => {
+                        let mid = m / 2;
+                        if m % 2 == 1 {
+                            col[mid].0
+                        } else {
+                            ((col[mid - 1].0 as f64 + col[mid].0 as f64) / 2.0) as f32
+                        }
+                    }
+                    _ => unreachable!(),
+                };
+                patches.push((i, out));
+            }
+        }
+
+        let mut delta = inner.finish();
+        for (i, v) in patches {
+            delta[i - base] = v;
+        }
+        (delta, stats)
+    }
+}
+
+fn l2_norm(vals: &[f32]) -> f64 {
+    vals.iter().map(|&v| v as f64 * v as f64).sum::<f64>().sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(idx: Vec<u32>, vals: Vec<f32>) -> SparseVec {
+        SparseVec { idx, vals }
+    }
+
+    /// Deterministic pseudo-random sparse contributions over `total`
+    /// params in `n_s` segments (plain LCG — no external deps).
+    fn gen_contributions(total: usize, n_s: usize, n_clients: usize, seed: u64) -> Vec<(usize, SparseVec, f64)> {
+        let mut state = seed;
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            state >> 33
+        };
+        let ranges = crate::model::segment_ranges(total, n_s);
+        let mut out = Vec::new();
+        for c in 0..n_clients {
+            let seg = c % n_s;
+            let r = ranges[seg].clone();
+            let mut idx: Vec<u32> = Vec::new();
+            for i in r.clone() {
+                if next() % 3 == 0 {
+                    idx.push(i as u32);
+                }
+            }
+            if idx.is_empty() {
+                idx.push(r.start as u32);
+            }
+            let vals: Vec<f32> = idx.iter().map(|_| (next() % 2000) as f32 / 500.0 - 2.0).collect();
+            let w = 1.0 + (next() % 7) as f64;
+            out.push((seg, sv(idx, vals), w));
+        }
+        out
+    }
+
+    #[test]
+    fn parse_roundtrip_and_validation() {
+        assert_eq!(Aggregator::parse("mean").unwrap(), Aggregator::Mean);
+        assert_eq!(Aggregator::parse("median").unwrap(), Aggregator::Median);
+        assert_eq!(
+            Aggregator::parse("trimmed-mean:0.25").unwrap(),
+            Aggregator::TrimmedMean { beta: 0.25 }
+        );
+        assert_eq!(
+            Aggregator::parse("trimmed-mean").unwrap(),
+            Aggregator::TrimmedMean { beta: Aggregator::DEFAULT_TRIM_BETA }
+        );
+        assert_eq!(Aggregator::parse("norm-clip:2.5").unwrap(), Aggregator::NormClip { c: 2.5 });
+        assert_eq!(
+            Aggregator::parse("norm-clip:inf").unwrap(),
+            Aggregator::NormClip { c: f64::INFINITY }
+        );
+        assert!(Aggregator::parse("trimmed-mean:0.5").is_err());
+        assert!(Aggregator::parse("trimmed-mean:-0.1").is_err());
+        assert!(Aggregator::parse("norm-clip:0").is_err());
+        assert!(Aggregator::parse("mean:1").is_err());
+        assert!(Aggregator::parse("krum").is_err());
+        for spec in ["mean", "median", "trimmed-mean:0.25", "norm-clip:2.5", "norm-clip:inf"] {
+            assert_eq!(Aggregator::parse(spec).unwrap().name(), spec);
+        }
+    }
+
+    #[test]
+    fn digest_parts_distinguish_kinds_and_params() {
+        let a = Aggregator::TrimmedMean { beta: 0.1 }.digest_parts();
+        let b = Aggregator::TrimmedMean { beta: 0.2 }.digest_parts();
+        let c = Aggregator::Median.digest_parts();
+        assert_ne!(a, b);
+        assert_ne!(a.0, c.0);
+    }
+
+    fn run_kind(kind: Aggregator, contributions: &[(usize, SparseVec, f64)], total: usize, n_s: usize) -> (Vec<f32>, RobustStats) {
+        let mut agg = RobustAggregator::new(kind, total, n_s);
+        for (seg, v, w) in contributions {
+            agg.add_sparse(*seg, v, *w);
+        }
+        agg.finish()
+    }
+
+    #[test]
+    fn mean_is_bitwise_identical_to_segment_aggregator() {
+        let (total, n_s) = (37, 4);
+        let contributions = gen_contributions(total, n_s, 16, 11);
+        let mut plain = SegmentAggregator::new(total, n_s);
+        for (seg, v, w) in &contributions {
+            plain.add_sparse(*seg, v, *w);
+        }
+        let want = plain.finish();
+        let (got, stats) = run_kind(Aggregator::Mean, &contributions, total, n_s);
+        assert_eq!(stats, RobustStats::default());
+        for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "diverged at {i}");
+        }
+    }
+
+    #[test]
+    fn mean_matches_segment_aggregator_under_shard_splits() {
+        // the robust mean through 1, 2 and 4 shard slices must equal
+        // the whole-space SegmentAggregator bit-for-bit
+        let (total, n_s) = (53, 4);
+        let contributions = gen_contributions(total, n_s, 20, 7);
+        let mut plain = SegmentAggregator::new(total, n_s);
+        for (seg, v, w) in &contributions {
+            plain.add_sparse(*seg, v, *w);
+        }
+        let want = plain.finish();
+        for shards in [1usize, 2, 4] {
+            let per = n_s / shards;
+            let mut got = vec![0.0f32; total];
+            for s in 0..shards {
+                let (lo, hi) = (s * per, (s + 1) * per);
+                let mut agg = RobustAggregator::for_segments(Aggregator::Mean, total, n_s, lo, hi);
+                for (seg, v, w) in &contributions {
+                    if agg.owns(*seg) {
+                        agg.add_sparse(*seg, v, *w);
+                    }
+                }
+                let base = agg.base();
+                let (part, _) = agg.finish();
+                got[base..base + part.len()].copy_from_slice(&part);
+            }
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "shards={shards} diverged at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn trim_beta_zero_and_clip_inf_are_bitwise_mean() {
+        let (total, n_s) = (41, 3);
+        let contributions = gen_contributions(total, n_s, 15, 3);
+        let (want, _) = run_kind(Aggregator::Mean, &contributions, total, n_s);
+        for kind in [Aggregator::TrimmedMean { beta: 0.0 }, Aggregator::NormClip { c: f64::INFINITY }] {
+            let (got, stats) = run_kind(kind, &contributions, total, n_s);
+            assert_eq!(stats, RobustStats::default(), "{kind:?} touched data");
+            for (i, (a, b)) in want.iter().zip(&got).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} diverged at {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_and_median_are_permutation_invariant() {
+        let (total, n_s) = (29, 2);
+        let contributions = gen_contributions(total, n_s, 12, 19);
+        // a handful of deterministic permutations of arrival order
+        let perms: Vec<Vec<usize>> = vec![
+            (0..contributions.len()).collect(),
+            (0..contributions.len()).rev().collect(),
+            (0..contributions.len()).map(|i| (i * 5) % contributions.len()).collect(),
+        ];
+        for kind in [Aggregator::TrimmedMean { beta: 0.3 }, Aggregator::Median] {
+            let mut outs: Vec<Vec<f32>> = Vec::new();
+            for p in &perms {
+                let reordered: Vec<_> = p.iter().map(|&i| contributions[i].clone()).collect();
+                outs.push(run_kind(kind, &reordered, total, n_s).0);
+            }
+            for o in &outs[1..] {
+                for (i, (a, b)) in outs[0].iter().zip(o).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} order-dependent at {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_drops_an_outlier() {
+        // 5 honest clients say ~1.0, one attacker says 1000; beta=0.2
+        // trims one from each end → attacker gone
+        let mut agg = RobustAggregator::new(Aggregator::TrimmedMean { beta: 0.2 }, 4, 1);
+        for _ in 0..5 {
+            agg.add_sparse(0, &sv(vec![0, 1, 2, 3], vec![1.0; 4]), 1.0);
+        }
+        agg.add_sparse(0, &sv(vec![0, 1, 2, 3], vec![1000.0; 4]), 1.0);
+        let (out, stats) = agg.finish();
+        assert_eq!(stats.trimmed, 2);
+        assert!(out.iter().all(|&v| v == 1.0), "attacker survived: {out:?}");
+    }
+
+    #[test]
+    fn median_ignores_weights_and_outliers() {
+        let mut agg = RobustAggregator::new(Aggregator::Median, 2, 1);
+        agg.add_sparse(0, &sv(vec![0, 1], vec![1.0, 1.0]), 1.0);
+        agg.add_sparse(0, &sv(vec![0, 1], vec![1.0, 1.0]), 1.0);
+        // attacker with a huge claimed sample count
+        agg.add_sparse(0, &sv(vec![0, 1], vec![-50.0, -50.0]), 1e9);
+        let (out, _) = agg.finish();
+        assert_eq!(out, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn absent_coordinates_vote_zero() {
+        // 3 contributions, only one mentions coordinate 1 → its median
+        // column is [0, 0, 9] → 0
+        let mut agg = RobustAggregator::new(Aggregator::Median, 2, 1);
+        agg.add_sparse(0, &sv(vec![0], vec![4.0]), 1.0);
+        agg.add_sparse(0, &sv(vec![0], vec![5.0]), 1.0);
+        agg.add_sparse(0, &sv(vec![0, 1], vec![6.0, 9.0]), 1.0);
+        let (out, _) = agg.finish();
+        assert_eq!(out, vec![5.0, 0.0]);
+    }
+
+    #[test]
+    fn norm_clip_scales_hot_contributions_and_counts_them() {
+        let mut agg = RobustAggregator::new(Aggregator::NormClip { c: 1.0 }, 2, 1);
+        agg.add_sparse(0, &sv(vec![0, 1], vec![3.0, 4.0]), 1.0); // norm 5 → scaled by 0.2
+        agg.add_sparse(0, &sv(vec![0, 1], vec![0.3, 0.4]), 1.0); // norm 0.5 → untouched
+        let (out, stats) = agg.finish();
+        assert_eq!(stats.clipped, 1);
+        assert!((out[0] - 0.45).abs() < 1e-6 && (out[1] - 0.6).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn dense_and_sparse_mix_in_retained_modes() {
+        let mut agg = RobustAggregator::new(Aggregator::Median, 3, 1);
+        agg.add_dense(0, &[1.0, 2.0, 3.0], 2.0);
+        agg.add_sparse(0, &sv(vec![1], vec![8.0]), 1.0);
+        agg.add_dense(0, &[1.0, 4.0, 3.0], 1.0);
+        let (out, _) = agg.finish();
+        assert_eq!(out, vec![1.0, 4.0, 3.0]);
+    }
+
+    #[test]
+    fn covered_tracks_retained_contributions() {
+        let mut agg = RobustAggregator::new(Aggregator::Median, 8, 2);
+        agg.add_sparse(1, &sv(vec![4], vec![1.0]), 1.0);
+        assert_eq!(agg.covered(), vec![false, true]);
+        let (out, _) = agg.finish();
+        assert_eq!(&out[..4], &[0.0; 4]);
+    }
+}

@@ -121,7 +121,21 @@ pub struct RoundRecord {
     /// report's arrival (the aggregation tier's network critical path;
     /// 0 in-process).
     pub shard_rtt_ms_max: f64,
+    /// Robust-aggregation statistic label (`fed::robust::Aggregator::name`,
+    /// e.g. `mean`, `trimmed-mean:0.2`). Both runner paths stamp it every
+    /// round; empty only on hand-built test records.
+    pub aggregator: String,
+    /// Contributions dropped by coordinate-wise trimming this round,
+    /// summed over segments (0 under `mean`).
+    pub clients_trimmed: u64,
+    /// Contributions rescaled by the L2 norm clip this round.
+    pub clip_applied: u64,
 }
+
+/// The CSV header row `RunLog::to_csv` emits — shared with the e2e
+/// suites' `NONDETERMINISTIC_COLS` allowlists so a new column cannot
+/// silently join (or silently skip) the bitwise-compared set.
+pub const CSV_HEADER: &str = "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins,population,active_cohort,mux_workers,sched_ms,journal_bytes,journal_fsync_ms,shard_tx_bytes,shard_rx_bytes,shard_rtt_ms_max,aggregator,clients_trimmed,clip_applied";
 
 /// Full training telemetry.
 #[derive(Debug, Clone, Default)]
@@ -251,13 +265,12 @@ impl RunLog {
 
     /// CSV export (one row per round).
     pub fn to_csv(&self) -> String {
-        let mut s = String::from(
-            "round,loss,acc,up_params,up_bytes,down_params,down_bytes,k_a,k_b,gini_a,gini_b,overhead_s,compute_s,cohort,stragglers,late_folds,resampled,orphaned,quorum_wait_s,shards,shard_agg_ms_max,router_queue_max,late_evicted,seg_uncovered,worker_drops,worker_rejoins,population,active_cohort,mux_workers,sched_ms,journal_bytes,journal_fsync_ms,shard_tx_bytes,shard_rx_bytes,shard_rtt_ms_max\n",
-        );
+        let mut s = String::from(CSV_HEADER);
+        s.push('\n');
         for r in &self.rounds {
             let _ = writeln!(
                 s,
-                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{},{},{},{},{:.4},{},{:.4},{},{},{:.4}",
+                "{},{:.6},{},{},{},{},{},{:.4},{:.4},{:.4},{:.4},{:.6},{:.4},{},{},{},{},{},{:.4},{},{:.4},{},{},{},{},{},{},{},{},{:.4},{},{:.4},{},{},{:.4},{},{},{}",
                 r.round,
                 r.global_loss,
                 r.eval_acc.map_or(String::from(""), |a| format!("{a:.4}")),
@@ -293,6 +306,9 @@ impl RunLog {
                 r.shard_tx_bytes,
                 r.shard_rx_bytes,
                 r.shard_rtt_ms_max,
+                r.aggregator,
+                r.clients_trimmed,
+                r.clip_applied,
             );
         }
         s
@@ -427,7 +443,7 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",4,12.5000,7,2,1,3,2,0,0,0,0.0000,0,0.0000,0,0,0.0000"), "{row}");
+        assert!(row.ends_with(",4,12.5000,7,2,1,3,2,0,0,0,0.0000,0,0.0000,0,0,0.0000,,0,0"), "{row}");
         assert_eq!(log.max_shard_agg_ms(), 12.5);
         assert_eq!(log.total_late_evicted(), 2);
         assert_eq!(log.total_worker_drops(), 3);
@@ -451,7 +467,7 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",100000,64,8,3.2500,0,0.0000,0,0,0.0000"), "{row}");
+        assert!(row.ends_with(",100000,64,8,3.2500,0,0.0000,0,0,0.0000,,0,0"), "{row}");
     }
 
     #[test]
@@ -469,7 +485,7 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",4096,1.5000,0,0,0.0000"), "{row}");
+        assert!(row.ends_with(",4096,1.5000,0,0,0.0000,,0,0"), "{row}");
     }
 
     #[test]
@@ -488,7 +504,36 @@ mod tests {
             assert!(header.contains(col), "missing column {col}");
         }
         let row = csv.lines().nth(1).unwrap();
-        assert!(row.ends_with(",8192,2048,0.7500"), "{row}");
+        assert!(row.ends_with(",8192,2048,0.7500,,0,0"), "{row}");
+    }
+
+    #[test]
+    fn robust_columns_round_trip_through_csv() {
+        let mut log = RunLog::new("t");
+        log.push(RoundRecord {
+            round: 0,
+            aggregator: "trimmed-mean:0.2".into(),
+            clients_trimmed: 4,
+            clip_applied: 2,
+            ..Default::default()
+        });
+        let csv = log.to_csv();
+        let header = csv.lines().next().unwrap();
+        for col in ["aggregator", "clients_trimmed", "clip_applied"] {
+            assert!(header.contains(col), "missing column {col}");
+        }
+        let row = csv.lines().nth(1).unwrap();
+        assert!(row.ends_with(",trimmed-mean:0.2,4,2"), "{row}");
+    }
+
+    #[test]
+    fn csv_header_constant_matches_emitted_header() {
+        let log = RunLog::new("t");
+        assert_eq!(log.to_csv().lines().next().unwrap(), CSV_HEADER);
+        // the struct and the header must agree on column count: a field
+        // added to RoundRecord without a column (or vice versa) should
+        // fail here, not silently diverge in the e2e bitwise compare
+        assert_eq!(CSV_HEADER.split(',').count(), 38);
     }
 
     #[test]

@@ -22,6 +22,7 @@ use ecolora::cluster::{
 };
 use ecolora::cluster::protocol::{TrainResult, UpPayload};
 use ecolora::compress::{wire, Encoding, KindIndex, SparseVec};
+use ecolora::fed::robust::{Aggregator, RobustAggregator};
 use ecolora::fed::server::SegmentAggregator;
 use ecolora::fed::world::{self, WorldSeed};
 use ecolora::fed::{round_robin, sampling, staleness, EcoConfig, FedConfig, FedOutcome, FedRunner};
@@ -185,7 +186,7 @@ fn shard_count_does_not_change_results_under_quorum() {
         cfg
     };
     let opts = |shards| ClusterOptions {
-        fault: Some(FaultSpec { client: 1, delay: Duration::from_millis(1_500) }),
+        fault: Some(FaultSpec::slow(1, Duration::from_millis(1_500))),
         shards,
         ..quorum_opts(2, 0.75, 600_000)
     };
@@ -325,7 +326,7 @@ fn quorum_round_closes_past_straggler_and_discounts_its_uplink() {
         cfg
     };
     let opts = |fault_delay_ms| ClusterOptions {
-        fault: Some(FaultSpec { client: 1, delay: Duration::from_millis(fault_delay_ms) }),
+        fault: Some(FaultSpec::slow(1, Duration::from_millis(fault_delay_ms))),
         ..quorum_opts(2, 0.75, 600_000)
     };
     let a = cluster::run(mk(), &opts(1_500)).unwrap();
@@ -378,7 +379,7 @@ fn timed_out_slot_is_resampled_and_originals_still_win() {
     let quorum = cluster::run(
         mk(),
         &ClusterOptions {
-            fault: Some(FaultSpec { client: 2, delay: Duration::from_millis(1_500) }),
+            fault: Some(FaultSpec::slow(2, Duration::from_millis(1_500))),
             ..quorum_opts(1, 1.0, 200)
         },
     )
@@ -414,7 +415,7 @@ fn timed_out_slot_is_resampled_and_originals_still_win() {
     let two = cluster::run(
         mk2(),
         &ClusterOptions {
-            fault: Some(FaultSpec { client: 2, delay: Duration::from_millis(1_500) }),
+            fault: Some(FaultSpec::slow(2, Duration::from_millis(1_500))),
             ..quorum_opts(1, 1.0, 200)
         },
     )
@@ -521,7 +522,7 @@ fn late_fold_is_arrival_order_invariant_and_matches_slot_ordered_fold() {
         for e in shuffled {
             assert!(buf.push(e), "unique (round, slot) entries are always kept");
         }
-        let mut agg = SegmentAggregator::new(total, n_s);
+        let mut agg = RobustAggregator::new(Aggregator::Mean, total, n_s);
         let mut stats = AggStats::default();
         let ctx = FoldCtx { weights: &weights, beta, now_round: now, dense_params: 0 };
         let folded = buf.fold_into(&mut agg, &kidx, ctx, &mut stats);
@@ -530,7 +531,7 @@ fn late_fold_is_arrival_order_invariant_and_matches_slot_ordered_fold() {
         assert_eq!(buf.dropped, 0);
         assert_eq!(buf.evicted, 0);
         assert!(buf.is_empty(), "fold drains the buffer");
-        let got = agg.finish();
+        let (got, _) = agg.finish();
 
         assert_eq!(want.len(), got.len());
         for (i, (a, b)) in want.iter().zip(&got).enumerate() {
@@ -565,7 +566,7 @@ fn late_buffer_dedupes_and_rejects_unfoldable_entries() {
     // a segment id beyond the folding round's geometry is dropped, not fatal
     let misfit = TrainResult { segment: 9, ..late_result(&mut rng, &kidx, total, 1, 6, 2, 3) };
     assert!(buf.push(misfit));
-    let mut agg = SegmentAggregator::new(total, 1);
+    let mut agg = RobustAggregator::new(Aggregator::Mean, total, 1);
     let mut stats = AggStats::default();
     let ctx = FoldCtx { weights: &weights, beta: 0.7, now_round: 8, dense_params: 0 };
     let folded = buf.fold_into(&mut agg, &kidx, ctx, &mut stats);
@@ -580,7 +581,7 @@ fn late_buffer_dedupes_and_rejects_unfoldable_entries() {
     let mut plain = SegmentAggregator::new(total, 1);
     plain.add_wire(0, bytes, &kidx, 10.0).unwrap();
     let plain = plain.finish();
-    let discounted = agg.finish();
+    let (discounted, _) = agg.finish();
     // weighted average over a single contribution is scale-invariant in
     // the weight — so compare against a mixed fold to see the discount
     assert_eq!(plain.len(), discounted.len());
@@ -624,7 +625,8 @@ fn route_round(
     lates: &[TrainResult],
 ) -> cluster::GatheredAgg {
     let mut router =
-        Router::new(total, shards, weights.clone(), kidx.clone(), 0.7, 0).unwrap();
+        Router::new(total, shards, weights.clone(), kidx.clone(), 0.7, 0, Aggregator::Mean)
+            .unwrap();
     router.begin_round(round, n_s).unwrap();
     for (slot, seg, w, bytes) in adds {
         router
@@ -678,7 +680,7 @@ fn router_shard_count_is_bitwise_invariant() {
 
         // reference: slot order through one whole-space aggregator, then
         // the buffered fold — tracking the expected comm accounting
-        let mut reference = SegmentAggregator::new(total, n_s);
+        let mut reference = RobustAggregator::new(Aggregator::Mean, total, n_s);
         let mut expect_up = CommTotals::default();
         let mut sorted = adds.clone();
         sorted.sort_by_key(|a| a.0);
@@ -694,7 +696,7 @@ fn router_shard_count_is_bitwise_invariant() {
         let ctx = FoldCtx { weights: &weights, beta: 0.7, now_round: round, dense_params: 0 };
         buf.fold_into(&mut reference, &kidx, ctx, &mut stats);
         expect_up.merge(&stats.up);
-        let want = reference.finish();
+        let (want, _) = reference.finish();
 
         for shards in [1usize, 2, 4] {
             let got = route_round(shards, total, n_s, round, &weights, &kidx, &adds, &lates);
@@ -852,7 +854,7 @@ fn mux_plane_matches_threads_plane_under_quorum_with_straggler() {
         cfg
     };
     let opts = |plane| ClusterOptions {
-        fault: Some(FaultSpec { client: 1, delay: Duration::from_millis(1_500) }),
+        fault: Some(FaultSpec::slow(1, Duration::from_millis(1_500))),
         client_plane: plane,
         ..quorum_opts(2, 0.75, 600_000)
     };

@@ -585,6 +585,25 @@ const NONDETERMINISTIC_COLS: &[&str] = &[
     "shard_rtt_ms_max",
 ];
 
+#[test]
+fn nondeterministic_cols_allowlist_stays_in_sync_with_csv_header() {
+    // a renamed CSV column must not silently fall out of the parity
+    // check: every allowlisted name has to exist in the emitted header
+    let header: Vec<&str> = ecolora::metrics::CSV_HEADER.split(',').collect();
+    for col in NONDETERMINISTIC_COLS {
+        assert!(header.contains(col), "allowlisted column {col:?} is not in the CSV header");
+    }
+    // the robust-aggregation columns are deterministic by design and
+    // must stay subject to bitwise parity
+    for col in ["aggregator", "clients_trimmed", "clip_applied"] {
+        assert!(header.contains(&col), "column {col:?} missing from the CSV header");
+        assert!(
+            !NONDETERMINISTIC_COLS.contains(&col),
+            "column {col:?} is deterministic and must not be allowlisted"
+        );
+    }
+}
+
 /// Parse a round-log CSV into (header, rows).
 fn parse_csv(csv: &str) -> (Vec<String>, Vec<Vec<String>>) {
     let mut lines = csv.lines();

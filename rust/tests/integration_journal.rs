@@ -121,6 +121,25 @@ const NONDETERMINISTIC_COLS: &[&str] = &[
     "journal_fsync_ms",
 ];
 
+#[test]
+fn nondeterministic_cols_allowlist_stays_in_sync_with_csv_header() {
+    // a renamed CSV column must not silently fall out of the crash-
+    // recovery parity check: every allowlisted name has to exist in the
+    // emitted header, and the deterministic robust-aggregation columns
+    // (whose replay parity `--resume` guarantees) must not be listed
+    let header: Vec<&str> = ecolora::metrics::CSV_HEADER.split(',').collect();
+    for col in NONDETERMINISTIC_COLS {
+        assert!(header.contains(col), "allowlisted column {col:?} is not in the CSV header");
+    }
+    for col in ["aggregator", "clients_trimmed", "clip_applied"] {
+        assert!(header.contains(&col), "column {col:?} missing from the CSV header");
+        assert!(
+            !NONDETERMINISTIC_COLS.contains(&col),
+            "column {col:?} is deterministic and must not be allowlisted"
+        );
+    }
+}
+
 /// Parse a round-log CSV into (header, rows).
 fn parse_csv(csv: &str) -> (Vec<String>, Vec<Vec<String>>) {
     let mut lines = csv.lines();
@@ -366,6 +385,25 @@ fn sigkill_mid_round_resume_is_bitwise_identical_under_quorum_with_straggler() {
     );
 }
 
+#[test]
+fn sigkill_mid_round_resume_is_bitwise_identical_under_robust_aggregation() {
+    if !have_artifacts() {
+        return;
+    }
+    // the robust plane across the crash boundary: the coordinator runs
+    // trimmed-mean against a deterministic sign-flip client, so the
+    // journal's closed rounds carry the aggregator label and robustness
+    // counter columns — replay must reproduce them bit-for-bit. The
+    // worker leg repeats --aggregator because the statistic is part of
+    // the config digest (a resumed coordinator or joining worker with a
+    // different --aggregator is refused at handshake).
+    crash_recovery_case(
+        "robust",
+        &["--aggregator", "trimmed-mean:0.3"],
+        &["--aggregator", "trimmed-mean:0.3", "--inject-malicious", "1", "--attack", "sign-flip"],
+    );
+}
+
 // ---- CLI contract (ungated) -------------------------------------------------
 
 /// Run `ecolora serve` with the given trailing flags and return
@@ -384,6 +422,20 @@ fn serve_cli(extra: &[&str]) -> (bool, String) {
         String::from_utf8_lossy(&out.stderr)
     );
     (out.status.success(), text)
+}
+
+#[test]
+fn worker_side_attack_flags_are_refused_by_serve() {
+    let (ok, text) = serve_cli(&["--inject-malicious", "2", "--attack", "sign-flip"]);
+    assert!(!ok, "attack injection lives in the worker processes");
+    assert!(text.contains("belongs to the `worker` subcommand"), "got: {text}");
+}
+
+#[test]
+fn bad_aggregator_spec_is_refused_by_name() {
+    let (ok, text) = serve_cli(&["--aggregator", "krum"]);
+    assert!(!ok, "an unknown robust statistic must be an error");
+    assert!(text.contains("unknown aggregator"), "got: {text}");
 }
 
 #[test]
